@@ -1,0 +1,129 @@
+//! Fig 12: continue tuning vs restarting when new algorithms are
+//! added mid-run (pc4 case study): the trend of active algorithms in
+//! the conditioning block, plus an elimination on/off ablation.
+
+use volcanoml::bench::{bench_scale, save_results, try_runtime, Table};
+use volcanoml::blocks::{Arm, BuildingBlock, ConditioningBlock, Env};
+use volcanoml::blocks::Objective;
+use volcanoml::coordinator::evaluator::PipelineEvaluator;
+use volcanoml::coordinator::{joint_space, pipeline_for, roster_for,
+                             SpaceScale};
+use volcanoml::data::metrics::Metric;
+use volcanoml::data::registry;
+use volcanoml::data::synthetic::generate;
+use volcanoml::data::Split;
+use volcanoml::plan::{EngineKind, PlanBuilder, PlanKind};
+use volcanoml::util::json::Json;
+use volcanoml::util::rng::Rng;
+
+fn main() {
+    let scale = bench_scale();
+    let runtime = try_runtime();
+    let mut p = registry::by_name("pc4").unwrap();
+    p.n = p.n.min(scale.n_cap);
+    let ds = generate(&p);
+
+    let pipeline = pipeline_for(SpaceScale::Large, false, false);
+    let algos = roster_for(SpaceScale::Large, ds.task,
+                           runtime.is_some());
+    let space = joint_space(&pipeline, &algos);
+    let names: Vec<String> =
+        algos.iter().map(|a| a.name().to_string()).collect();
+    let split_at = names.len().saturating_sub(3);
+    let (initial, added) = names.split_at(split_at);
+
+    let phase1 = 3;
+    let phase2 = 6;
+    let mut results = Vec::new();
+    let mut table = Table::new(
+        "Fig 12: continue tuning vs restarting on pc4",
+        &["strategy", "final best (valid)", "evals",
+          "arms after add"]);
+
+    for (label, continue_tuning) in [("continue", true),
+                                     ("restart", false)] {
+        let mut rng = Rng::new(42);
+        let split = Split::stratified(&ds, &mut rng);
+        let mut ev = PipelineEvaluator::new(
+            &ds, split, Metric::BalancedAccuracy, &pipeline, &algos,
+            runtime.as_ref(), 42)
+            .with_budget(scale.evals * 3, f64::INFINITY);
+        let mut builder = PlanBuilder::new(&space, EngineKind::Bo, 42);
+        builder.arm_filter = Some(initial.to_vec());
+        let mut root = builder.build(PlanKind::CA);
+        let mut trend: Vec<(usize, usize)> = Vec::new();
+
+        for _ in 0..phase1 {
+            let mut env = Env { obj: &mut ev, rng: &mut rng };
+            root.do_next(&mut env).unwrap();
+            drop(env);
+            trend.push((ev.n_evals(), root.active_children()));
+        }
+
+        if continue_tuning {
+            // extend surviving candidate set (§3.3.6)
+            let mut ab = PlanBuilder::new(&space, EngineKind::Bo, 43);
+            ab.arm_filter = Some(added.to_vec());
+            let new_arms: Vec<Arm> = ab.ca_arms();
+            let cond = root.as_any_mut()
+                .downcast_mut::<ConditioningBlock>().unwrap();
+            cond.add_arms(new_arms);
+        } else {
+            // restart over the full roster (loses pruning progress)
+            let b2 = PlanBuilder::new(&space, EngineKind::Bo, 44);
+            root = b2.build(PlanKind::CA);
+        }
+        let arms_after_add = root.active_children();
+
+        for _ in 0..phase2 {
+            if ev.exhausted() {
+                break;
+            }
+            let mut env = Env { obj: &mut ev, rng: &mut rng };
+            root.do_next(&mut env).unwrap();
+            drop(env);
+            trend.push((ev.n_evals(), root.active_children()));
+        }
+        let best = ev.best.as_ref().map(|(_, u)| *u).unwrap_or(0.0);
+        println!("\n{label}: active-arm trend (evals, arms): {trend:?}");
+        table.row(vec![
+            label.to_string(),
+            format!("{best:.4}"),
+            ev.n_evals().to_string(),
+            arms_after_add.to_string(),
+        ]);
+        results.push(Json::obj(vec![
+            ("strategy", Json::Str(label.into())),
+            ("best", Json::Num(best)),
+            ("trend_evals", Json::arr_f64(&trend.iter()
+                .map(|t| t.0 as f64).collect::<Vec<_>>())),
+            ("trend_arms", Json::arr_f64(&trend.iter()
+                .map(|t| t.1 as f64).collect::<Vec<_>>())),
+        ]));
+    }
+    table.print();
+    println!("(paper Fig 12: continue tuning re-converges to 1 arm \
+              ~2.5x faster than restarting and ends more accurate — \
+              86.44%% vs 84.74%%)");
+
+    // ---- ablation: elimination off ---------------------------------
+    let mut rng = Rng::new(45);
+    let split = Split::stratified(&ds, &mut rng);
+    let mut ev = PipelineEvaluator::new(
+        &ds, split, Metric::BalancedAccuracy, &pipeline, &algos,
+        runtime.as_ref(), 45)
+        .with_budget(scale.evals, f64::INFINITY);
+    let builder = PlanBuilder::new(&space, EngineKind::Bo, 45);
+    let mut root = builder.build(PlanKind::CA);
+    root.as_any_mut().downcast_mut::<ConditioningBlock>()
+        .unwrap().eliminate = false;
+    while !ev.exhausted() {
+        let mut env = Env { obj: &mut ev, rng: &mut rng };
+        root.do_next(&mut env).unwrap();
+    }
+    println!("\nablation (elimination off): best valid = {:.4}, arms \
+              stay at {}",
+             ev.best.map(|(_, u)| u).unwrap_or(0.0),
+             root.active_children());
+    save_results("fig12_continue_tuning", &Json::Arr(results));
+}

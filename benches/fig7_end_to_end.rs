@@ -1,0 +1,68 @@
+//! Fig 7: end-to-end comparison of VolcanoML⁻ vs AUSK⁻ vs TPOT on the
+//! 30 OpenML-like classification datasets and 20 regression datasets.
+//! Prints per-dataset improvement (accuracy delta for CLS, the paper's
+//! relative-MSE Δ for REG) and the win counts the paper headlines.
+//!
+//! Scale via VOLCANO_BENCH=quick|std|full (see bench::bench_scale).
+//! Ablation: VOLCANO_NO_ENSEMBLE=1 disables ensembling for VolcanoML.
+
+use volcanoml::baselines::SystemKind;
+use volcanoml::bench::{bench_scale, run_matrix, save_results,
+                       shrink_profile, try_runtime, Table};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::metrics::relative_mse_improvement;
+use volcanoml::data::registry;
+
+fn main() {
+    let scale = bench_scale();
+    let runtime = try_runtime();
+    let systems = [SystemKind::VolcanoMLMinus, SystemKind::AuskMinus,
+                   SystemKind::Tpot];
+
+    for (label, profiles, is_cls) in [
+        ("CLS", registry::medium_classification(), true),
+        ("REG", registry::regression(), false),
+    ] {
+        let profiles: Vec<_> = profiles
+            .into_iter()
+            .take(scale.datasets_cap)
+            .map(|p| shrink_profile(p, &scale))
+            .collect();
+        println!("\n=== Fig 7 ({label}): {} datasets, {} evals each ===",
+                 profiles.len(), scale.evals);
+        let m = run_matrix(&profiles, &systems, SpaceScale::Large,
+                           scale.evals, 42, None, runtime.as_ref());
+
+        let mut table = Table::new(
+            &format!("Fig 7 {label}: improvement of VolcanoML- over \
+                      baselines"),
+            &["dataset", "V- vs AUSK-", "V- vs TPOT"]);
+        let (mut wins_ausk, mut wins_tpot) = (0, 0);
+        for (d, row) in m.metric_value.iter().enumerate() {
+            let (v, a, t) = (row[0], row[1], row[2]);
+            let (d_a, d_t) = if is_cls {
+                ((v - a) * 100.0, (v - t) * 100.0) // accuracy points
+            } else {
+                (relative_mse_improvement(v, a) * 100.0,
+                 relative_mse_improvement(v, t) * 100.0)
+            };
+            if d_a > 0.0 {
+                wins_ausk += 1;
+            }
+            if d_t > 0.0 {
+                wins_tpot += 1;
+            }
+            table.row(vec![
+                m.datasets[d].clone(),
+                format!("{d_a:+.2}%"),
+                format!("{d_t:+.2}%"),
+            ]);
+        }
+        table.print();
+        println!("VolcanoML- beats AUSK- on {wins_ausk}/{} and TPOT on \
+                  {wins_tpot}/{} {label} datasets",
+                 m.datasets.len(), m.datasets.len());
+        println!("(paper: 25/30 and 23/30 CLS; 17/20 and 15/20 REG)");
+        save_results(&format!("fig7_{label}"), &m.to_json());
+    }
+}

@@ -1,0 +1,48 @@
+//! Fig 9 / Table 3: the six Kaggle competitions against the four
+//! anonymised commercial platforms (strategy simulators — see
+//! DESIGN.md Substitutions) plus VolcanoML⁻/VolcanoML.
+
+use volcanoml::baselines::SystemKind;
+use volcanoml::bench::{bench_scale, run_matrix, save_results,
+                       shrink_profile, try_runtime, Table};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::registry;
+use volcanoml::meta::MetaCorpus;
+
+fn main() {
+    let scale = bench_scale();
+    let runtime = try_runtime();
+    let corpus = std::env::var("VOLCANO_CORPUS")
+        .ok()
+        .and_then(|p| MetaCorpus::load(std::path::Path::new(&p)).ok());
+    let systems = [
+        SystemKind::Platform(1), SystemKind::Platform(2),
+        SystemKind::Platform(3), SystemKind::Platform(4),
+        SystemKind::VolcanoMLMinus, SystemKind::VolcanoML,
+    ];
+    let profiles: Vec<_> = registry::kaggle()
+        .into_iter()
+        .map(|p| shrink_profile(p, &scale))
+        .collect();
+    let m = run_matrix(&profiles, &systems, SpaceScale::Large,
+                       scale.evals, 42, corpus.as_ref(),
+                       runtime.as_ref());
+
+    let mut table = Table::new(
+        "Fig 9 / Table 3: test error on Kaggle tasks (lower better)",
+        &["competition", "Plat1", "Plat2", "Plat3", "Plat4",
+          "VolcanoML-", "VolcanoML"]);
+    for (d, row) in m.metric_value.iter().enumerate() {
+        let errs: Vec<f64> = row.iter().map(|v| 1.0 - v).collect();
+        table.row_f(&m.datasets[d], &errs, 4);
+    }
+    table.print();
+    let ranks = m.average_ranks();
+    println!("average ranks: {:?}",
+             m.systems.iter().zip(&ranks)
+                 .map(|(s, r)| format!("{s}={r:.2}"))
+                 .collect::<Vec<_>>());
+    println!("(paper: VolcanoML at least comparable to, often better \
+              than, all four platforms)");
+    save_results("fig9_platforms", &m.to_json());
+}

@@ -1,0 +1,146 @@
+//! Micro-benchmarks of the hot paths (§Perf): one BO iteration
+//! (surrogate refit + candidate scoring), native model fits, FE
+//! operators, PJRT execute, and the coordinator's do_next dispatch
+//! overhead. These are the numbers the EXPERIMENTS.md §Perf
+//! before/after table tracks.
+
+use volcanoml::bench::{bench, try_runtime, Table};
+use volcanoml::coordinator::evaluator::PipelineEvaluator;
+use volcanoml::coordinator::{joint_space, pipeline_for, roster_for,
+                             SpaceScale};
+use volcanoml::blocks::Objective;
+use volcanoml::data::dataset::Task;
+use volcanoml::data::metrics::Metric;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::Split;
+use volcanoml::opt::{Optimizer, SmacBo};
+use volcanoml::util::rng::Rng;
+
+fn main() {
+    let mut table = Table::new("micro hot paths",
+                               &["operation", "mean", "iters"]);
+    let mut rng = Rng::new(0);
+
+    // ---- BO iteration on a 20-dim space with 60 observations -------
+    let space = {
+        let mut cs = volcanoml::space::ConfigSpace::new();
+        for i in 0..20 {
+            cs = cs.float(&format!("x{i}"), 0.0, 1.0, 0.5);
+        }
+        cs
+    };
+    let mut bo = SmacBo::new(space.clone(), 1);
+    for _ in 0..60 {
+        let cfg = space.sample(&mut rng);
+        let y = cfg.f64_or("x0", 0.0);
+        bo.observe(cfg, y);
+    }
+    let t = bench("bo_suggest", 2, 10, || {
+        std::hint::black_box(bo.suggest(&mut rng));
+    });
+    table.row(vec!["BO suggest (refit+EI, 60 obs, 20d)".into(),
+                   t.per_iter_label(), t.iters.to_string()]);
+
+    // ---- native algorithm fits --------------------------------------
+    let ds = generate(&Profile {
+        name: "micro".into(),
+        task: Task::Classification { n_classes: 2 },
+        gen: GenKind::Checker { cells: 3 },
+        n: 800,
+        d: 16,
+        noise: 0.05,
+        imbalance: 1.0,
+        redundant: 2,
+        wild_scales: false,
+        seed: 5,
+    });
+    let train: Vec<usize> = (0..640).collect();
+    for name in ["decision_tree", "random_forest", "lightgbm",
+                 "gaussian_nb"] {
+        let algo = volcanoml::algos::algo_by_name(name, ds.task)
+            .unwrap();
+        let cfg = algo.space().default_config();
+        let t = bench(name, 1, 5, || {
+            let mut ctx = volcanoml::algos::EvalContext::new(None, 7);
+            std::hint::black_box(
+                algo.fit(&ds, &train, &cfg, &mut ctx).unwrap());
+        });
+        table.row(vec![format!("fit {name} (640x16)"),
+                       t.per_iter_label(), t.iters.to_string()]);
+    }
+
+    // ---- FE operators ----------------------------------------------
+    for op in ["standard", "quantile"] {
+        let cfg = volcanoml::fe::ops::scaler_space(op).default_config();
+        let t = bench(op, 1, 5, || {
+            let f = volcanoml::fe::ops::fit_scaler(op, &ds, &train,
+                                                   &cfg);
+            std::hint::black_box(f.apply(&ds));
+        });
+        table.row(vec![format!("scaler {op} (800x16)"),
+                       t.per_iter_label(), t.iters.to_string()]);
+    }
+    {
+        let cfg = volcanoml::fe::ops::transformer_space("pca")
+            .default_config();
+        let t = bench("pca", 1, 5, || {
+            let mut r = Rng::new(1);
+            let f = volcanoml::fe::ops::fit_transformer(
+                "pca", &ds, &train, &cfg, &mut r);
+            std::hint::black_box(f.apply(&ds));
+        });
+        table.row(vec!["transformer pca (800x16)".into(),
+                       t.per_iter_label(), t.iters.to_string()]);
+    }
+
+    // ---- full pipeline evaluation (the objective) --------------------
+    let pipeline = pipeline_for(SpaceScale::Large, false, false);
+    let algos = roster_for(SpaceScale::Large, ds.task, false);
+    let jspace = joint_space(&pipeline, &algos);
+    let split = Split::stratified(&ds, &mut Rng::new(2));
+    let mut ev = PipelineEvaluator::new(&ds, split,
+        Metric::BalancedAccuracy, &pipeline, &algos, None, 11);
+    let cfg = jspace.default_config();
+    let mut fid = 0.90;
+    let t = bench("evaluate", 1, 5, || {
+        // unique fidelity per call => cache miss (measures real work)
+        fid += 1e-4;
+        std::hint::black_box(ev.evaluate(&cfg, fid).unwrap());
+    });
+    table.row(vec!["pipeline evaluate (default cfg)".into(),
+                   t.per_iter_label(), t.iters.to_string()]);
+
+    // ---- PJRT execute ------------------------------------------------
+    if let Some(rt) = try_runtime() {
+        let c = rt.constants().clone();
+        let mk = |n: usize| vec![0.1f32; n];
+        // warm compile
+        let inputs = || {
+            vec![
+                volcanoml::runtime::Input::F32(mk(c.n_train * c.d),
+                    vec![c.n_train, c.d]),
+                volcanoml::runtime::Input::F32(mk(c.n_train * c.c),
+                    vec![c.n_train, c.c]),
+                volcanoml::runtime::Input::F32(mk(c.n_train),
+                    vec![c.n_train, 1]),
+                volcanoml::runtime::Input::F32(mk(c.c), vec![1, c.c]),
+                volcanoml::runtime::Input::F32(mk(c.n_val * c.d),
+                    vec![c.n_val, c.d]),
+                volcanoml::runtime::Input::F32(mk(c.t_steps),
+                    vec![c.t_steps]),
+                volcanoml::runtime::Input::F32(
+                    vec![0.1, 1e-4, 0.0, 0.5], vec![1, 4]),
+            ]
+        };
+        let _ = rt.execute("glm_softmax", &inputs()).unwrap();
+        let t = bench("pjrt", 1, 5, || {
+            std::hint::black_box(
+                rt.execute("glm_softmax", &inputs()).unwrap());
+        });
+        table.row(vec![
+            format!("PJRT glm_softmax ({} GD steps)", c.t_steps),
+            t.per_iter_label(), t.iters.to_string()]);
+    }
+
+    table.print();
+}

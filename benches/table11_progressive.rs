@@ -1,0 +1,74 @@
+//! Table 11: progressive (top-down) optimization vs the original
+//! bandit-based strategy on five CLS + five REG tasks (§4.3).
+
+use volcanoml::bench::{bench_scale, save_results, shrink_profile,
+                       try_runtime, Table};
+use volcanoml::coordinator::automl::{VolcanoConfig, VolcanoML};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::metrics::Metric;
+use volcanoml::data::registry;
+use volcanoml::data::synthetic::generate;
+use volcanoml::util::json::Json;
+
+fn main() {
+    let scale = bench_scale();
+    let runtime = try_runtime();
+    let cls_names = ["puma8NH", "kin8nm", "cpu_act", "puma32H",
+                     "phoneme"];
+    let reg_names = ["puma8NH", "kin8nm", "cpu_small", "puma32H",
+                     "cpu_act"];
+    let mut results = Vec::new();
+
+    for (label, corpus, names, metric) in [
+        ("CLS (test accuracy %)", registry::medium_classification(),
+         &cls_names, Metric::Accuracy),
+        ("REG (test MSE)", registry::regression(), &reg_names,
+         Metric::Mse),
+    ] {
+        let mut table = Table::new(
+            &format!("Table 11 {label}"),
+            &["dataset", "Original (CA)", "Progressive"]);
+        let mut orig_wins = 0;
+        let mut n = 0;
+        for p in corpus.into_iter()
+            .filter(|p| names.contains(&p.name.as_str())) {
+            let p = shrink_profile(p, &scale);
+            let ds = generate(&p);
+            let mut vals = Vec::new();
+            for progressive in [false, true] {
+                let cfg = VolcanoConfig {
+                    scale: SpaceScale::Large,
+                    metric,
+                    max_evals: scale.evals,
+                    progressive,
+                    seed: 42,
+                    ..Default::default()
+                };
+                let v = VolcanoML::new(cfg).run(&ds, runtime.as_ref())
+                    .map(|o| o.test_metric_value).unwrap_or(f64::NAN);
+                vals.push(if metric == Metric::Accuracy { v * 100.0 }
+                          else { v });
+            }
+            let orig_better = if metric == Metric::Mse {
+                vals[0] <= vals[1]
+            } else {
+                vals[0] >= vals[1]
+            };
+            if orig_better {
+                orig_wins += 1;
+            }
+            n += 1;
+            table.row_f(&ds.name, &vals, 4);
+            results.push(Json::obj(vec![
+                ("dataset", Json::Str(ds.name.clone())),
+                ("original", Json::Num(vals[0])),
+                ("progressive", Json::Num(vals[1])),
+            ]));
+            eprintln!("  [{}] done", ds.name);
+        }
+        table.print();
+        println!("original strategy wins {orig_wins}/{n} \
+                  (paper: 8/10 overall)");
+    }
+    save_results("table11_progressive", &Json::Arr(results));
+}

@@ -1,0 +1,60 @@
+//! Tables 4-6: average ranks of {TPOT, AUSK, VolcanoML} across the
+//! three search spaces at three budget ladders (paper: 1800/5400,
+//! 3600/10800, 7200/21600 seconds; here 1x / 2x / 4x the base
+//! evaluation budget).
+
+use volcanoml::baselines::SystemKind;
+use volcanoml::bench::{bench_scale, run_matrix, save_results,
+                       shrink_profile, try_runtime, Table};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::registry;
+
+fn main() {
+    let scale = bench_scale();
+    let runtime = try_runtime();
+    let systems = [SystemKind::Tpot, SystemKind::AuskMinus,
+                   SystemKind::VolcanoMLMinus];
+    let cls: Vec<_> = registry::medium_classification()
+        .into_iter().take(scale.datasets_cap)
+        .map(|p| shrink_profile(p, &scale)).collect();
+    let reg: Vec<_> = registry::regression()
+        .into_iter().take(scale.datasets_cap)
+        .map(|p| shrink_profile(p, &scale)).collect();
+
+    // quick mode trims the grid (full mode runs the paper's 3x3)
+    let full = std::env::var("VOLCANO_BENCH").as_deref() == Ok("full");
+    let ladder: &[(usize, usize)] = if full {
+        &[(4usize, 1usize), (5, 2), (6, 4)]
+    } else {
+        &[(4, 1), (5, 2)]
+    };
+    for &(t_idx, mult) in ladder {
+        let evals = scale.evals * mult;
+        let mut table = Table::new(
+            &format!("Table {t_idx}: average ranks at {evals} evals \
+                      (lower better)"),
+            &["space-task", "TPOT", "AUSK", "VolcanoML"]);
+        for (label, profiles) in [("CLS", &cls), ("REG", &reg)] {
+            let spaces: &[SpaceScale] = if full {
+                &[SpaceScale::Small, SpaceScale::Medium,
+                  SpaceScale::Large]
+            } else {
+                &[SpaceScale::Small, SpaceScale::Large]
+            };
+            for &space in spaces {
+                eprintln!("== T{t_idx} {} - {} ==", space.name(), label);
+                let m = run_matrix(profiles, &systems, space, evals,
+                                   42 + mult as u64, None,
+                                   runtime.as_ref());
+                table.row_f(&format!("{} - {}", space.name(), label),
+                            &m.average_ranks(), 2);
+                save_results(&format!("table{t_idx}_{}_{}",
+                                      space.name(), label),
+                             &m.to_json());
+            }
+        }
+        table.print();
+    }
+    println!("(paper Tables 4-6: VolcanoML's rank advantage grows \
+              with both budget and space size)");
+}

@@ -1,0 +1,90 @@
+//! Continue tuning in the conditioning block (§3.3.6 / Fig 12): start
+//! a search with a restricted algorithm roster, then add new
+//! algorithms mid-run. The conditioning block extends its surviving
+//! candidate set instead of restarting, and the active-arm trend shows
+//! the bandit re-converging.
+//!
+//!     cargo run --release --example continue_tuning
+
+use volcanoml::blocks::{Arm, BuildingBlock, ConditioningBlock, Env};
+use volcanoml::coordinator::evaluator::PipelineEvaluator;
+use volcanoml::coordinator::{joint_space, pipeline_for, roster_for,
+                             SpaceScale};
+use volcanoml::data::metrics::Metric;
+use volcanoml::data::registry;
+use volcanoml::data::synthetic::generate;
+use volcanoml::data::Split;
+use volcanoml::plan::{EngineKind, PlanBuilder, PlanKind};
+use volcanoml::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ds = generate(&registry::by_name("pc4").unwrap());
+    let runtime = volcanoml::bench::try_runtime();
+    let mut rng = Rng::new(42);
+    let split = Split::stratified(&ds, &mut rng);
+
+    let pipeline = pipeline_for(SpaceScale::Large, false, false);
+    let algos = roster_for(SpaceScale::Large, ds.task,
+                           runtime.is_some());
+    let space = joint_space(&pipeline, &algos);
+    let all_names: Vec<String> =
+        algos.iter().map(|a| a.name().to_string()).collect();
+    let (initial, added) = all_names.split_at(all_names.len() - 3);
+    println!("initial arms: {initial:?}");
+    println!("added mid-run: {added:?}");
+
+    let mut evaluator = PipelineEvaluator::new(
+        &ds, split, Metric::BalancedAccuracy, &pipeline, &algos,
+        runtime.as_ref(), 42)
+        .with_budget(120, f64::INFINITY);
+
+    // plan CA restricted to the initial arms
+    let mut builder = PlanBuilder::new(&space, EngineKind::Bo, 42);
+    builder.arm_filter = Some(initial.to_vec());
+    let mut root = builder.build(PlanKind::CA);
+
+    println!("\nphase 1 (initial roster):");
+    let mut trend: Vec<(usize, usize)> = Vec::new();
+    for round in 0..4 {
+        {
+            let mut env = Env { obj: &mut evaluator, rng: &mut rng };
+            root.do_next(&mut env)?;
+        }
+        trend.push((evaluator.n_evals(), root.active_children()));
+        println!("  round {round}: {} evals, {} active arms, \
+                  best={:.4}",
+                 evaluator.n_evals(), root.active_children(),
+                 root.current_best().map(|(_, y)| y).unwrap_or(0.0));
+    }
+
+    // §3.3.6: extend the surviving candidate set with the new arms
+    println!("\nadding {} new algorithms (continue tuning, no \
+              restart)...", added.len());
+    let mut add_builder = PlanBuilder::new(&space, EngineKind::Bo, 43);
+    add_builder.arm_filter = Some(added.to_vec());
+    let new_arms: Vec<Arm> = add_builder.ca_arms();
+    let cond = root
+        .as_any_mut()
+        .downcast_mut::<ConditioningBlock>()
+        .expect("CA root is a conditioning block");
+    cond.add_arms(new_arms);
+
+    println!("\nphase 2 (extended roster):");
+    for round in 0..6 {
+        {
+            let mut env = Env { obj: &mut evaluator, rng: &mut rng };
+            root.do_next(&mut env)?;
+        }
+        trend.push((evaluator.n_evals(), root.active_children()));
+        println!("  round {round}: {} evals, {} active arms, \
+                  best={:.4}",
+                 evaluator.n_evals(), root.active_children(),
+                 root.current_best().map(|(_, y)| y).unwrap_or(0.0));
+    }
+
+    println!("\nactive-arm trend (evals, arms): {trend:?}");
+    let (best_cfg, best) = root.current_best().unwrap();
+    println!("final best: {:.4} with algorithm {}", best,
+             best_cfg.str_or("algorithm", "?"));
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Embedding-selection stage (§6.3 / Fig 5): extend the FE pipeline
+//! with a stage choosing among frozen "pre-trained" embeddings (the
+//! TF-Hub substitution, see DESIGN.md) and search it jointly — on the
+//! image-like dogs-vs-cats analogue raw pixels defeat tabular models
+//! while spectral embeddings crack the task.
+//!
+//!     cargo run --release --example embedding_selection
+
+use volcanoml::coordinator::automl::{VolcanoConfig, VolcanoML};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::registry;
+use volcanoml::data::synthetic::generate;
+
+fn main() -> anyhow::Result<()> {
+    let ds = generate(&registry::dogs_vs_cats());
+    let runtime = volcanoml::bench::try_runtime();
+    println!("dogs-vs-cats analogue: n={}, d={} raw texture samples",
+             ds.n, ds.d);
+
+    for (label, with_embedding) in
+        [("raw pixels only", false), ("with embedding stage", true)] {
+        let cfg = VolcanoConfig {
+            scale: SpaceScale::Large,
+            with_embedding,
+            max_evals: 35,
+            seed: 11,
+            ..Default::default()
+        };
+        let out = VolcanoML::new(cfg).run(&ds, runtime.as_ref())?;
+        let chosen = out.best_config.as_ref()
+            .map(|c| c.str_or("fe:embedding", "raw").to_string())
+            .unwrap_or_default();
+        println!("{label:>22}: test accuracy = {:.4}  \
+                  (embedding = {chosen})",
+                 out.test_metric_value);
+    }
+    println!("\npaper's shape: 96.5% with embeddings vs 70.4% without \
+              — expect a similar gap here.");
+    Ok(())
+}

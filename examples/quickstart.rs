@@ -1,0 +1,32 @@
+//! Quickstart: the paper's six-lines-of-code experience (Appendix
+//! A.2.2) in Rust. Load a dataset, fit a Classifier, predict.
+//!
+//!     cargo run --release --example quickstart
+
+use volcanoml::coordinator::automl::{Classifier, VolcanoConfig};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::registry;
+use volcanoml::data::synthetic::generate;
+
+fn main() -> anyhow::Result<()> {
+    // "dm.load_train('train.csv')" — here: a registry dataset
+    let ds = generate(&registry::by_name("segment").unwrap());
+
+    // "clf = Classifier(**params).fit(train_node)"
+    let runtime = volcanoml::bench::try_runtime();
+    let mut clf = Classifier::new(VolcanoConfig {
+        scale: SpaceScale::Medium,
+        max_evals: 25,
+        ..Default::default()
+    });
+    let outcome = clf.fit(&ds, runtime.as_ref())?;
+    println!("search finished: {} evaluations, test balanced \
+              accuracy = {:.4}",
+             outcome.n_evals, outcome.test_metric_value);
+
+    // "predictions = clf.predict(test_node)"
+    let rows: Vec<usize> = (0..10).collect();
+    let labels = clf.predict(&ds, &rows, runtime.as_ref())?;
+    println!("first 10 predictions: {labels:?}");
+    Ok(())
+}

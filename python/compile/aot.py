@@ -1,0 +1,149 @@
+"""AOT compile path: lower every L2 trainer to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the Rust
+``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--force]
+
+Writes one ``<name>.hlo.txt`` per artifact plus ``manifest.json``
+(shapes/dtypes/input order, read by the Rust runtime) and a source-hash
+stamp so ``make artifacts`` is a no-op when inputs are unchanged.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import shapes
+from .models import (glm_example_args, knn_example_args, make_glm_trainer,
+                     make_knn_scorer, make_mlp_trainer, mlp_example_args)
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def artifact_specs():
+    """(name, fn, example_args, meta) for every artifact."""
+    specs = []
+    for link in ("softmax", "hinge", "identity", "huber"):
+        c = shapes.C if link in ("softmax", "hinge") else shapes.C_REG
+        specs.append((
+            f"glm_{link}",
+            make_glm_trainer(link),
+            glm_example_args(link),
+            {"family": "glm", "link": link, "c": c,
+             "outputs": ["val_scores", "w", "b"]},
+        ))
+    for link in ("softmax", "identity"):
+        c = shapes.C if link == "softmax" else shapes.C_REG
+        for h in shapes.MLP_HIDDEN:
+            specs.append((
+                f"mlp_{link}_h{h}",
+                make_mlp_trainer(link, h),
+                mlp_example_args(link, h),
+                {"family": "mlp", "link": link, "c": c, "hidden": h,
+                 "outputs": ["val_scores", "w1", "b1", "w2", "b2"]},
+            ))
+    for task, c in (("cls", shapes.C), ("reg", shapes.C_REG)):
+        specs.append((
+            f"knn_{task}",
+            make_knn_scorer(c=c),
+            knn_example_args(c=c),
+            {"family": "knn", "task": task, "c": c,
+             "outputs": ["dists", "neigh_y"]},
+        ))
+    return specs
+
+
+def _source_hash():
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        if "__pycache__" in dirpath:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    stamp_path = os.path.join(args.out_dir, ".stamp")
+    src_hash = _source_hash()
+    if not args.force and not args.only and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if f.read().strip() == src_hash:
+                print("artifacts up to date; skipping (use --force)")
+                return
+
+    only = set(args.only.split(",")) if args.only else None
+    # --only must merge into an existing manifest, not clobber it
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    prior_artifacts = {}
+    if only and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            prior_artifacts = json.load(f).get("artifacts", {})
+    manifest = {
+        "constants": {
+            "n_train": shapes.N_TRAIN, "n_val": shapes.N_VAL,
+            "d": shapes.D, "c": shapes.C, "c_reg": shapes.C_REG,
+            "t_steps": shapes.T_STEPS, "k_max": shapes.K_MAX,
+            "mlp_hidden": list(shapes.MLP_HIDDEN),
+        },
+        "artifacts": prior_artifacts,
+    }
+    for name, fn, ex_args, meta in artifact_specs():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn, keep_unused=True).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.eval_shape(fn, *ex_args)
+        ]
+        manifest["artifacts"][name] = {
+            **meta,
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for a in ex_args],
+            "output_shapes": out_shapes,
+        }
+        print(f"  lowered {name}: {len(text)} chars, "
+              f"{len(ex_args)} inputs, {len(out_shapes)} outputs")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if not only:
+        with open(stamp_path, "w") as f:
+            f.write(src_hash)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the pipeline-evaluation hot-spot.
+from .fused_grad import fused_grad  # noqa: F401
+from .distance import pairwise_sq_dists  # noqa: F401

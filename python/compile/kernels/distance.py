@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: tiled pairwise squared distances (KNN hot-spot).
+
+dist[i, j] = ||a_i||^2 + ||b_j||^2 - 2 a_i . b_j
+
+The query matrix A is tiled into BM-row blocks over the grid; the
+reference matrix B stays resident. The -2ab term is the MXU matmul; the
+norms are cheap VPU work fused into the same tile pass. Masked reference
+rows are pushed to +BIG so lax.top_k never selects padding.
+
+interpret=True for the same reason as fused_grad.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e9
+
+
+def _kernel(a_ref, b_ref, bmask_ref, o_ref):
+    a = a_ref[...]                       # (BM, D)
+    b = b_ref[...]                       # (N, D)
+    aa = jnp.sum(a * a, axis=1, keepdims=True)          # (BM, 1)
+    bb = jnp.sum(b * b, axis=1, keepdims=True).T        # (1, N)
+    ab = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    d = aa + bb - 2.0 * ab
+    # Padding rows of B must never be chosen as neighbours.
+    o_ref[...] = d + (1.0 - bmask_ref[...].T) * BIG
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def pairwise_sq_dists(a, b, bmask, *, block_m=None):
+    """a (M, D) queries, b (N, D) references, bmask (N, 1) row mask.
+
+    Returns (M, N) squared distances with masked columns at +BIG.
+    M must be divisible by block_m.
+    """
+    m, d = a.shape
+    n = b.shape[0]
+    if block_m is None:
+        from .. import shapes
+        block_m = min(m, shapes.BM)
+    assert m % block_m == 0, f"M={m} not divisible by block_m={block_m}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b, bmask)

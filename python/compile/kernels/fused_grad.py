@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: fused GLM gradient step.
+
+One kernel fuses the whole gradient computation of a generalized linear
+model on a masked, padded batch:
+
+    Z = X @ W + b          (forward matmul, MXU work)
+    R = link'(Z, Y)        (element-wise residual: softmax/identity/
+                            hinge/huber)
+    gW = X^T R + l2 W + l1 sign(W)
+    gb = sum_rows R
+
+The batch dimension is tiled into BN-row blocks via the grid: each grid
+step streams one (BN, D) tile of X and the matching (BN, C) tile of Y
+through "VMEM" while W/gW stay resident (their BlockSpec index map is
+constant, so the output is accumulated across grid steps — the standard
+Pallas reduction pattern; it expresses the HBM->VMEM schedule a CUDA
+implementation would do with threadblocks + atomics).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that the Rust PJRT
+client runs directly. On a real TPU the same kernel compiles with
+interpret=False and bfloat16 inputs to hit the MXU (see DESIGN.md).
+
+All hyper-parameters (inv_n, l2, l1, huber delta) arrive in a (1, 4)
+scalar tile so the compiled artifact serves the entire hyper-parameter
+subspace without recompilation. The link nonlinearity is static (one
+artifact per algorithm family).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _residual(z, y, link, cls_mask, delta):
+    """dL/dz inside the kernel; mirrors ref.link_residual_ref."""
+    if link == "softmax":
+        zm = z + (cls_mask - 1.0) * 1e9
+        zmax = jnp.max(zm, axis=1, keepdims=True)
+        e = jnp.exp(zm - zmax)
+        p = e / jnp.sum(e, axis=1, keepdims=True)
+        return (p - y) * cls_mask
+    if link == "identity":
+        return z - y
+    if link == "hinge":
+        s = 2.0 * y - 1.0
+        active = (s * z < 1.0).astype(z.dtype)
+        return -s * active * cls_mask
+    if link == "huber":
+        return jnp.clip(z - y, -delta, delta)
+    raise ValueError(f"unknown link {link!r}")
+
+
+def _kernel(x_ref, y_ref, w_ref, b_ref, mask_ref, cmask_ref, scal_ref,
+            gw_ref, gb_ref, *, link):
+    i = pl.program_id(0)
+    scal = scal_ref[...]
+    inv_n, l2, l1, delta = scal[0, 0], scal[0, 1], scal[0, 2], scal[0, 3]
+    w = w_ref[...]
+
+    # First tile initialises the accumulators with the regularisation
+    # terms (added once, not per tile).
+    @pl.when(i == 0)
+    def _init():
+        gw_ref[...] = l2 * w + l1 * jnp.sign(w)
+        gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    x = x_ref[...]                                     # (BN, D)
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + b_ref[...]
+    r = _residual(z, y_ref[...], link, cmask_ref[...], delta)
+    r = r * mask_ref[...] * inv_n                      # (BN, C)
+    gw_ref[...] += jnp.dot(x.T, r, preferred_element_type=jnp.float32)
+    gb_ref[...] += jnp.sum(r, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("link", "block_n"))
+def fused_grad(x, y, w, b, mask, cls_mask, scal, *, link, block_n=None):
+    """Fused gradient of a GLM loss. Shapes:
+
+    x (N, D), y (N, C), w (D, C), b (1, C), mask (N, 1), cls_mask (1, C),
+    scal (1, 4) = [inv_n, l2, l1, delta]. N must be divisible by block_n.
+    Returns (gw (D, C), gb (1, C)).
+    """
+    n, d = x.shape
+    c = y.shape[1]
+    if block_n is None:
+        from .. import shapes
+        block_n = min(n, shapes.BN)
+    assert n % block_n == 0, f"N={n} not divisible by block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_kernel, link=link),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # X tile
+            pl.BlockSpec((block_n, c), lambda i: (i, 0)),   # Y tile
+            pl.BlockSpec((d, c), lambda i: (0, 0)),         # W resident
+            pl.BlockSpec((1, c), lambda i: (0, 0)),         # b resident
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),   # row mask tile
+            pl.BlockSpec((1, c), lambda i: (0, 0)),         # class mask
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),         # scalars
+        ],
+        out_specs=[
+            pl.BlockSpec((d, c), lambda i: (0, 0)),         # gW accumulator
+            pl.BlockSpec((1, c), lambda i: (0, 0)),         # gb accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, c), jnp.float32),
+            jax.ShapeDtypeStruct((1, c), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y, w, b, mask, cls_mask, scal)

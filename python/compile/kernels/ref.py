@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest/hypothesis sweeps the Pallas
+kernels against these functions (assert_allclose). They are also used by
+the L2 models' unit tests as an independent implementation of the same
+math.
+"""
+
+import jax.numpy as jnp
+
+LINKS = ("softmax", "identity", "hinge", "huber")
+
+
+def link_residual_ref(z, y, link, cls_mask, delta):
+    """Residual dL/dz for one sample batch.
+
+    z: (N, C) raw scores; y: (N, C) targets (one-hot for classification,
+    real-valued for regression); cls_mask: (1, C) 1.0 for live class
+    columns; delta: huber threshold (scalar).
+    """
+    if link == "softmax":
+        # Masked softmax cross-entropy: dead class columns get -inf logits.
+        zm = z + (cls_mask - 1.0) * 1e9
+        zmax = jnp.max(zm, axis=1, keepdims=True)
+        e = jnp.exp(zm - zmax)
+        p = e / jnp.sum(e, axis=1, keepdims=True)
+        return (p - y) * cls_mask
+    if link == "identity":
+        return z - y
+    if link == "hinge":
+        # One-vs-rest hinge on +-1 targets: s = 2y-1, grad = -s * 1[s*z < 1].
+        s = 2.0 * y - 1.0
+        active = (s * z < 1.0).astype(z.dtype)
+        return -s * active * cls_mask
+    if link == "huber":
+        return jnp.clip(z - y, -delta, delta)
+    raise ValueError(f"unknown link {link!r}")
+
+
+def fused_grad_ref(x, y, w, b, mask, cls_mask, scal, link):
+    """Reference for the fused gradient kernel.
+
+    x: (N, D), y: (N, C), w: (D, C), b: (1, C), mask: (N, 1) row mask,
+    cls_mask: (1, C), scal: (1, 4) = [inv_n, l2, l1, delta].
+    Returns (gw: (D, C), gb: (1, C)).
+    """
+    inv_n, l2, l1, delta = scal[0, 0], scal[0, 1], scal[0, 2], scal[0, 3]
+    z = x @ w + b
+    r = link_residual_ref(z, y, link, cls_mask, delta)
+    r = r * mask * inv_n
+    gw = x.T @ r + l2 * w + l1 * jnp.sign(w)
+    gb = jnp.sum(r, axis=0, keepdims=True)
+    return gw, gb
+
+
+def pairwise_sq_dists_ref(a, b):
+    """||a_i - b_j||^2 for a: (M, D), b: (N, D) -> (M, N)."""
+    aa = jnp.sum(a * a, axis=1, keepdims=True)
+    bb = jnp.sum(b * b, axis=1, keepdims=True).T
+    return aa + bb - 2.0 * (a @ b.T)

@@ -1,0 +1,9 @@
+"""L2 entry point (kept for the canonical repo layout).
+
+The actual model definitions live in ``compile.models`` (glm/mlp/knn);
+this module re-exports them plus the artifact spec table used by
+``compile.aot``.
+"""
+
+from .models import (make_glm_trainer, make_mlp_trainer, make_knn_scorer,  # noqa: F401
+                     glm_example_args, mlp_example_args, knn_example_args)  # noqa: F401

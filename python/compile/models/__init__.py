@@ -1,0 +1,4 @@
+# L2: JAX model trainers (build-time only; AOT-lowered to artifacts/).
+from .glm import make_glm_trainer, glm_example_args  # noqa: F401
+from .mlp import make_mlp_trainer, mlp_example_args  # noqa: F401
+from .knn import make_knn_scorer, knn_example_args  # noqa: F401

@@ -1,0 +1,80 @@
+"""L2: generalized linear model trainers.
+
+One jitted function per link covers a whole family of the paper's
+algorithm arms:
+
+  softmax  -> logistic regression (multinomial)
+  hinge    -> linear SVM (one-vs-rest)
+  identity -> ridge / lasso / elastic-net regression (l2/l1 are inputs)
+  huber    -> linear SVR-style robust regression
+
+The training loop is a ``lax.scan`` of ``T_STEPS`` fused Pallas gradient
+steps (kernels.fused_grad), so the kernel lowers into the same HLO module
+that Rust loads. All continuous hyper-parameters are runtime inputs:
+
+  lr_sched (T,)  per-step learning-rate multiplier. Encodes both the
+                 schedule (constant / cosine-annealing / step decay) and
+                 the fidelity knob (zeros beyond the effective epoch
+                 count) without recompilation.
+  hypers (1, 4)  [lr, l2, l1, delta]
+
+Returns (val_scores, w, b): Rust scores the validation split from
+val_scores and predicts arbitrary test sets natively from (w, b).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import shapes
+from ..kernels.fused_grad import fused_grad
+
+
+def make_glm_trainer(link, *, d=None, c=None, n_train=None, n_val=None,
+                     t_steps=None):
+    d = d or shapes.D
+    c = c or (shapes.C if link in ("softmax", "hinge") else shapes.C_REG)
+    n_train = n_train or shapes.N_TRAIN
+    n_val = n_val or shapes.N_VAL
+    t_steps = t_steps or shapes.T_STEPS
+
+    def trainer(x, y, mask, cls_mask, xv, lr_sched, hypers):
+        lr = hypers[0, 0]
+        n_eff = jnp.maximum(jnp.sum(mask), 1.0)
+        scal = jnp.stack(
+            [1.0 / n_eff, hypers[0, 1], hypers[0, 2], hypers[0, 3]]
+        ).reshape(1, 4)
+
+        w0 = jnp.zeros((d, c), jnp.float32)
+        b0 = jnp.zeros((1, c), jnp.float32)
+
+        def step(carry, lrt):
+            w, b = carry
+            gw, gb = fused_grad(x, y, w, b, mask, cls_mask, scal, link=link)
+            step_lr = lr * lrt
+            return (w - step_lr * gw, b - step_lr * gb), ()
+
+        (w, b), _ = jax.lax.scan(step, (w0, b0), lr_sched)
+        val_scores = xv @ w + b
+        return (val_scores, w, b)
+
+    return trainer
+
+
+def glm_example_args(link, *, d=None, c=None, n_train=None, n_val=None,
+                     t_steps=None):
+    """ShapeDtypeStructs in the trainer's positional order."""
+    d = d or shapes.D
+    c = c or (shapes.C if link in ("softmax", "hinge") else shapes.C_REG)
+    n_train = n_train or shapes.N_TRAIN
+    n_val = n_val or shapes.N_VAL
+    t_steps = t_steps or shapes.T_STEPS
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((n_train, d), f32),   # x
+        jax.ShapeDtypeStruct((n_train, c), f32),   # y
+        jax.ShapeDtypeStruct((n_train, 1), f32),   # mask
+        jax.ShapeDtypeStruct((1, c), f32),         # cls_mask
+        jax.ShapeDtypeStruct((n_val, d), f32),     # xv
+        jax.ShapeDtypeStruct((t_steps,), f32),     # lr_sched
+        jax.ShapeDtypeStruct((1, 4), f32),         # hypers
+    ]

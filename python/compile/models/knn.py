@@ -1,0 +1,56 @@
+"""L2: KNN scorer.
+
+The expensive part — the (N_query x N_train) distance matrix — is the L1
+Pallas kernel (kernels.distance). The artifact returns, for each query,
+the K_MAX nearest distances and the targets of those neighbours; the Rust
+side applies the actual hyper-parameters (k <= K_MAX, uniform vs
+distance weighting) to the returned table, so one artifact serves the
+whole KNN subspace.
+
+Works for classification (y one-hot, C columns) and regression (C=1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import shapes
+from ..kernels.distance import pairwise_sq_dists
+
+
+def make_knn_scorer(*, d=None, c=None, n_train=None, n_query=None,
+                    k_max=None):
+    d = d or shapes.D
+    c = c or shapes.C
+    n_train = n_train or shapes.N_TRAIN
+    n_query = n_query or shapes.N_VAL
+    k_max = k_max or shapes.K_MAX
+
+    def scorer(xtr, ytr, mask, xq):
+        dist = pairwise_sq_dists(xq, xtr, mask)        # (M, N), padded=BIG
+        # NOTE: lax.top_k lowers to the `topk(..., largest=true)` HLO
+        # attribute that xla_extension 0.5.1's text parser rejects, so
+        # we sort ascending and slice the first K instead (lowers to the
+        # classic `sort` HLO op).
+        idx = jnp.broadcast_to(jnp.arange(n_train, dtype=jnp.int32),
+                               dist.shape)
+        sorted_d, sorted_i = jax.lax.sort_key_val(dist, idx, dimension=1)
+        top_d = sorted_d[:, :k_max]                    # (M, K)
+        top_i = sorted_i[:, :k_max]
+        neigh_y = ytr[top_i]                           # (M, K, C)
+        return (top_d, neigh_y)
+
+    return scorer
+
+
+def knn_example_args(*, d=None, c=None, n_train=None, n_query=None):
+    d = d or shapes.D
+    c = c or shapes.C
+    n_train = n_train or shapes.N_TRAIN
+    n_query = n_query or shapes.N_VAL
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((n_train, d), f32),   # xtr
+        jax.ShapeDtypeStruct((n_train, c), f32),   # ytr (one-hot / values)
+        jax.ShapeDtypeStruct((n_train, 1), f32),   # mask
+        jax.ShapeDtypeStruct((n_query, d), f32),   # xq
+    ]

@@ -1,0 +1,91 @@
+"""L2: one-hidden-layer MLP trainers (classifier + regressor).
+
+Manual backprop with SGD + momentum inside a ``lax.scan``. The hidden
+width is an architecture choice, so each width in shapes.MLP_HIDDEN is
+compiled as its own artifact variant (mlp_softmax_h16, mlp_softmax_h64,
+...); everything else (lr, l2, momentum, init seed, schedule/fidelity)
+is a runtime input.
+
+The output-layer residual reuses the same link math as the Pallas kernel
+(via kernels.ref) so the two layers agree numerically; the MLP's 3-matmul
+step is left to XLA fusion (see DESIGN.md §Perf L2).
+
+Returns (val_scores, w1, b1, w2, b2): Rust predicts test sets natively.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import shapes
+from ..kernels.ref import link_residual_ref
+
+
+def make_mlp_trainer(link, hidden, *, d=None, c=None, n_train=None,
+                     n_val=None, t_steps=None):
+    assert link in ("softmax", "identity")
+    d = d or shapes.D
+    c = c or (shapes.C if link == "softmax" else shapes.C_REG)
+    n_train = n_train or shapes.N_TRAIN
+    n_val = n_val or shapes.N_VAL
+    t_steps = t_steps or shapes.T_STEPS
+    h = hidden
+
+    def trainer(x, y, mask, cls_mask, xv, lr_sched, hypers, seed):
+        lr, l2, mu = hypers[0, 0], hypers[0, 1], hypers[0, 2]
+        n_eff = jnp.maximum(jnp.sum(mask), 1.0)
+        inv_n = 1.0 / n_eff
+
+        key = jax.random.PRNGKey(seed[0])
+        k1, k2 = jax.random.split(key)
+        # He-style init for the relu hidden layer.
+        w1 = jax.random.normal(k1, (d, h), jnp.float32) * jnp.sqrt(2.0 / d)
+        b1 = jnp.zeros((1, h), jnp.float32)
+        w2 = jax.random.normal(k2, (h, c), jnp.float32) * jnp.sqrt(1.0 / h)
+        b2 = jnp.zeros((1, c), jnp.float32)
+        zeros = (jnp.zeros_like(w1), jnp.zeros_like(b1),
+                 jnp.zeros_like(w2), jnp.zeros_like(b2))
+
+        def step(carry, lrt):
+            (w1, b1, w2, b2), vel = carry
+            h1 = jnp.maximum(x @ w1 + b1, 0.0)           # (N, H)
+            z = h1 @ w2 + b2                             # (N, C)
+            r = link_residual_ref(z, y, link, cls_mask, 1.0)
+            r = r * mask * inv_n
+            gw2 = h1.T @ r + l2 * w2
+            gb2 = jnp.sum(r, axis=0, keepdims=True)
+            dh = (r @ w2.T) * (h1 > 0.0)
+            gw1 = x.T @ dh + l2 * w1
+            gb1 = jnp.sum(dh, axis=0, keepdims=True)
+            step_lr = lr * lrt
+            grads = (gw1, gb1, gw2, gb2)
+            vel = tuple(mu * v - step_lr * g for v, g in zip(vel, grads))
+            params = tuple(p + v for p, v in zip((w1, b1, w2, b2), vel))
+            return (params, vel), ()
+
+        ((w1, b1, w2, b2), _), _ = jax.lax.scan(
+            step, ((w1, b1, w2, b2), zeros), lr_sched)
+        hv = jnp.maximum(xv @ w1 + b1, 0.0)
+        val_scores = hv @ w2 + b2
+        return (val_scores, w1, b1, w2, b2)
+
+    return trainer
+
+
+def mlp_example_args(link, hidden, *, d=None, c=None, n_train=None,
+                     n_val=None, t_steps=None):
+    d = d or shapes.D
+    c = c or (shapes.C if link == "softmax" else shapes.C_REG)
+    n_train = n_train or shapes.N_TRAIN
+    n_val = n_val or shapes.N_VAL
+    t_steps = t_steps or shapes.T_STEPS
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((n_train, d), f32),   # x
+        jax.ShapeDtypeStruct((n_train, c), f32),   # y
+        jax.ShapeDtypeStruct((n_train, 1), f32),   # mask
+        jax.ShapeDtypeStruct((1, c), f32),         # cls_mask
+        jax.ShapeDtypeStruct((n_val, d), f32),     # xv
+        jax.ShapeDtypeStruct((t_steps,), f32),     # lr_sched
+        jax.ShapeDtypeStruct((1, 4), f32),         # hypers
+        jax.ShapeDtypeStruct((1,), jnp.int32),     # seed
+    ]

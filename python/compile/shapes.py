@@ -1,0 +1,46 @@
+"""Canonical static shapes for all AOT-compiled artifacts.
+
+Rust pads/subsamples every dataset to these shapes (masking the padding),
+so a single HLO artifact per algorithm family serves every hyper-parameter
+configuration in its subspace. The subsample fraction doubles as the
+multi-fidelity knob used by the Hyperband-family optimizers.
+
+Keep these modest: the whole bench suite runs on one CPU core.
+"""
+
+# Training / validation canonical sizes (rows are masked beyond the
+# actual dataset size).
+N_TRAIN = 512
+N_VAL = 256
+
+# Feature dimension after feature engineering (Rust projects/pads to D).
+D = 32
+
+# Maximum number of classes (one-hot padded; a class mask disables the
+# padding columns inside the kernels).
+C = 8
+
+# Regression uses a single output column.
+C_REG = 1
+
+# Gradient-descent steps compiled into the lax.scan training loop. The
+# per-step learning-rate schedule is a runtime input, so fidelity
+# (effective epochs) and schedules (e.g. cosine annealing) need no
+# recompilation.
+T_STEPS = 100
+
+# KNN: number of neighbours returned by the artifact (Rust applies the
+# actual k <= K_MAX and the vote weighting).
+K_MAX = 25
+
+# Pallas tile sizes. BN tiles the batch dimension of the fused gradient
+# kernel; BM tiles the query dimension of the pairwise-distance kernel.
+# At f32 these keep the per-step working set well under a TPU core's
+# ~16 MiB VMEM (see DESIGN.md "Hardware-Adaptation"):
+#   X tile (BN x D) + Y tile (BN x C) + W (D x C) + gW (D x C)
+#   = 128*32 + 128*8 + 32*8 + 32*8 floats ~= 21 KiB.
+BN = 128
+BM = 64
+
+# MLP hidden widths -> separate compiled variants.
+MLP_HIDDEN = (16, 64)

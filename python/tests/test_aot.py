@@ -1,0 +1,92 @@
+"""AOT path: every artifact lowers to parseable HLO text with the
+manifest describing exactly the shapes the Rust runtime will feed."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import aot, shapes
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_artifact_spec_names_unique():
+    names = [s[0] for s in aot.artifact_specs()]
+    assert len(names) == len(set(names))
+    assert "glm_softmax" in names and "knn_reg" in names
+    assert len(names) == 4 + 2 * len(shapes.MLP_HIDDEN) + 2
+
+
+def test_lowering_produces_entry_computation():
+    name, fn, ex_args, _ = aot.artifact_specs()[0]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*ex_args))
+    assert "ENTRY" in text and "HloModule" in text
+    # tuple return convention (rust unwraps the tuple)
+    assert "ROOT" in text
+
+
+def test_hlo_text_roundtrips_through_parser():
+    """The text must re-parse into an XlaComputation (what Rust does)."""
+    name, fn, ex_args, _ = aot.artifact_specs()[0]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*ex_args))
+    # xla_client can parse HLO text back via the HloModule APIs
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR,
+                                                    "manifest.json")),
+                    reason="artifacts not built (run make artifacts)")
+def test_manifest_matches_specs():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    specs = {s[0]: s for s in aot.artifact_specs()}
+    assert set(man["artifacts"]) == set(specs)
+    for name, entry in man["artifacts"].items():
+        _, fn, ex_args, meta = specs[name]
+        assert entry["family"] == meta["family"]
+        assert [tuple(i["shape"]) for i in entry["inputs"]] == \
+            [a.shape for a in ex_args]
+        out = jax.eval_shape(fn, *ex_args)
+        assert [tuple(o["shape"]) for o in entry["output_shapes"]] == \
+            [o.shape for o in out]
+        path = os.path.join(ART_DIR, entry["file"])
+        assert os.path.exists(path)
+        with open(path) as fh:
+            head = fh.read(4096)
+        assert "HloModule" in head
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR,
+                                                    "manifest.json")),
+                    reason="artifacts not built (run make artifacts)")
+def test_manifest_constants_match_shapes():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    c = man["constants"]
+    assert c["n_train"] == shapes.N_TRAIN
+    assert c["n_val"] == shapes.N_VAL
+    assert c["d"] == shapes.D
+    assert c["c"] == shapes.C
+    assert c["t_steps"] == shapes.T_STEPS
+    assert c["k_max"] == shapes.K_MAX
+
+
+def test_stamp_freshness(tmp_path):
+    """aot main() skips re-lowering when sources unchanged."""
+    out = tmp_path / "arts"
+    out.mkdir()
+    (out / ".stamp").write_text(aot._source_hash())
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(out)]
+    try:
+        aot.main()     # must return without writing artifacts
+    finally:
+        sys.argv = argv
+    assert not list(out.glob("*.hlo.txt"))

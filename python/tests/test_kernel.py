@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/links/hyper-parameters; assert_allclose against
+ref.py is THE core correctness signal for the compiled hot path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_grad import fused_grad
+from compile.kernels.distance import pairwise_sq_dists, BIG
+from compile.kernels import ref
+
+LINKS = ref.LINKS
+
+
+def _mk(rng, n, d, c, link, frac_masked=0.0, live_classes=None):
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    if link in ("softmax", "hinge"):
+        live = live_classes or c
+        lab = rng.integers(0, live, n)
+        y = np.zeros((n, c), np.float32)
+        y[np.arange(n), lab] = 1.0
+        cm = np.zeros((1, c), np.float32)
+        cm[0, :live] = 1.0
+    else:
+        y = rng.normal(0, 1, (n, c)).astype(np.float32)
+        cm = np.ones((1, c), np.float32)
+    w = rng.normal(0, 0.3, (d, c)).astype(np.float32)
+    b = rng.normal(0, 0.1, (1, c)).astype(np.float32)
+    mask = np.ones((n, 1), np.float32)
+    k = int(n * frac_masked)
+    if k:
+        mask[n - k:] = 0.0
+    return x, y, w, b, mask, cm
+
+
+@pytest.mark.parametrize("link", LINKS)
+def test_fused_grad_matches_ref_basic(link):
+    rng = np.random.default_rng(0)
+    c = 4 if link in ("softmax", "hinge") else 1
+    n, d = 256, 16
+    x, y, w, b, mask, cm = _mk(rng, n, d, c, link)
+    scal = np.array([[1.0 / n, 1e-3, 1e-4, 0.7]], np.float32)
+    gw, gb = fused_grad(x, y, w, b, mask, cm, scal, link=link, block_n=64)
+    gw_r, gb_r = ref.fused_grad_ref(x, y, w, b, mask, cm, scal, link)
+    np.testing.assert_allclose(gw, gw_r, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(gb, gb_r, rtol=2e-5, atol=2e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    link=st.sampled_from(LINKS),
+    log2n=st.integers(6, 9),
+    d=st.integers(2, 24),
+    c_live=st.integers(2, 8),
+    frac_masked=st.floats(0.0, 0.9),
+    l2=st.floats(0.0, 1.0),
+    l1=st.floats(0.0, 0.5),
+    delta=st.floats(0.05, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_grad_matches_ref_sweep(link, log2n, d, c_live, frac_masked,
+                                      l2, l1, delta, seed):
+    rng = np.random.default_rng(seed)
+    n = 2 ** log2n
+    c = 8 if link in ("softmax", "hinge") else 1
+    x, y, w, b, mask, cm = _mk(rng, n, d, c, link,
+                               frac_masked=frac_masked,
+                               live_classes=min(c_live, c))
+    scal = np.array([[1.0 / max(mask.sum(), 1), l2, l1, delta]], np.float32)
+    bn = min(n, 64)
+    gw, gb = fused_grad(x, y, w, b, mask, cm, scal, link=link, block_n=bn)
+    gw_r, gb_r = ref.fused_grad_ref(x, y, w, b, mask, cm, scal, link)
+    np.testing.assert_allclose(gw, gw_r, rtol=5e-5, atol=5e-6)
+    np.testing.assert_allclose(gb, gb_r, rtol=5e-5, atol=5e-6)
+
+
+@pytest.mark.parametrize("link", LINKS)
+def test_fused_grad_all_rows_masked_gives_reg_only(link):
+    """With every row masked out, the gradient is exactly the reg term."""
+    rng = np.random.default_rng(3)
+    c = 4 if link in ("softmax", "hinge") else 1
+    x, y, w, b, _, cm = _mk(rng, 128, 8, c, link)
+    mask = np.zeros((128, 1), np.float32)
+    scal = np.array([[1.0, 0.5, 0.25, 1.0]], np.float32)
+    gw, gb = fused_grad(x, y, w, b, mask, cm, scal, link=link, block_n=64)
+    np.testing.assert_allclose(gw, 0.5 * w + 0.25 * np.sign(w), rtol=1e-6)
+    np.testing.assert_allclose(gb, np.zeros_like(gb), atol=1e-7)
+
+
+def test_fused_grad_rejects_indivisible_batch():
+    rng = np.random.default_rng(1)
+    x, y, w, b, mask, cm = _mk(rng, 100, 4, 1, "identity")
+    scal = np.array([[0.01, 0.0, 0.0, 1.0]], np.float32)
+    with pytest.raises(AssertionError):
+        fused_grad(x, y, w, b, mask, cm, scal, link="identity", block_n=64)
+
+
+def test_softmax_residual_ignores_dead_classes():
+    """Probability must not leak into padded class columns."""
+    rng = np.random.default_rng(7)
+    x, y, w, b, mask, cm = _mk(rng, 64, 8, 8, "softmax", live_classes=3)
+    scal = np.array([[1.0 / 64, 0.0, 0.0, 1.0]], np.float32)
+    gw, _ = fused_grad(x, y, w, b, mask, cm, scal, link="softmax",
+                       block_n=64)
+    np.testing.assert_allclose(np.asarray(gw)[:, 3:], 0.0, atol=1e-6)
+
+
+def test_pairwise_dists_matches_ref():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 1, (128, 12)).astype(np.float32)
+    b = rng.normal(0, 1, (256, 12)).astype(np.float32)
+    m = np.ones((256, 1), np.float32)
+    d = pairwise_sq_dists(a, b, m, block_m=32)
+    d_r = ref.pairwise_sq_dists_ref(a, b)
+    np.testing.assert_allclose(d, d_r, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    log2m=st.integers(4, 7),
+    n=st.integers(8, 200),
+    d=st.integers(1, 24),
+    frac_masked=st.floats(0.0, 0.8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_dists_sweep(log2m, n, d, frac_masked, seed):
+    rng = np.random.default_rng(seed)
+    m = 2 ** log2m
+    a = rng.normal(0, 2, (m, d)).astype(np.float32)
+    b = rng.normal(0, 2, (n, d)).astype(np.float32)
+    bm = np.ones((n, 1), np.float32)
+    k = int(n * frac_masked)
+    if k:
+        bm[n - k:] = 0.0
+    out = np.asarray(pairwise_sq_dists(a, b, bm, block_m=min(m, 16)))
+    d_r = np.asarray(ref.pairwise_sq_dists_ref(a, b))
+    live = bm[:, 0] > 0
+    np.testing.assert_allclose(out[:, live], d_r[:, live],
+                               rtol=1e-3, atol=1e-3)
+    if k:
+        assert (out[:, ~live] >= BIG * 0.5).all()
+
+
+def test_pairwise_dists_zero_on_self():
+    rng = np.random.default_rng(5)
+    a = rng.normal(0, 1, (32, 6)).astype(np.float32)
+    m = np.ones((32, 1), np.float32)
+    d = np.asarray(pairwise_sq_dists(a, a, m, block_m=16))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-4)
+    assert (d >= -1e-4).all()

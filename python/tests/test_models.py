@@ -1,0 +1,258 @@
+"""L2 correctness: the trainers learn, shapes hold, KNN is exact.
+
+These run the same jitted functions that aot.py lowers, so passing here
+plus the HLO-roundtrip test in Rust means the compiled artifacts compute
+the right thing.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import shapes
+from compile.models import (make_glm_trainer, make_knn_scorer,
+                            make_mlp_trainer)
+from compile.kernels import ref
+
+
+def _pad_cls(rng, m, d_live, n_classes, sep=3.0):
+    """Gaussian blobs padded to canonical shapes."""
+    n, d, c = shapes.N_TRAIN, shapes.D, shapes.C
+    X = np.zeros((n, d), np.float32)
+    Y = np.zeros((n, c), np.float32)
+    lab = rng.integers(0, n_classes, m)
+    centers = rng.normal(0, sep, (n_classes, d_live)).astype(np.float32)
+    X[:m, :d_live] = rng.normal(0, 0.6, (m, d_live)) + centers[lab]
+    Y[np.arange(m), lab] = 1.0
+    mask = np.zeros((n, 1), np.float32)
+    mask[:m] = 1.0
+    cm = np.zeros((1, c), np.float32)
+    cm[0, :n_classes] = 1.0
+    return X, Y, mask, cm, lab
+
+
+def _sched():
+    return np.ones((shapes.T_STEPS,), np.float32)
+
+
+def _hy(lr, l2=0.0, l1=0.0, delta=1.0):
+    return np.array([[lr, l2, l1, delta]], np.float32)
+
+
+@pytest.mark.parametrize("link", ["softmax", "hinge"])
+def test_glm_classifier_learns_blobs(link):
+    rng = np.random.default_rng(0)
+    X, Y, mask, cm, lab = _pad_cls(rng, 400, 4, 3)
+    tr = make_glm_trainer(link)
+    scores, w, b = tr(X, Y, mask, cm, X[:shapes.N_VAL], _sched(),
+                      _hy(0.5, 1e-4))
+    pred = np.argmax(np.asarray(scores)[:, :3], axis=1)
+    acc = (pred == lab[:shapes.N_VAL]).mean()
+    assert acc > 0.9, f"{link} acc={acc}"
+
+
+def test_glm_returned_weights_reproduce_val_scores():
+    """(w, b) returned to Rust must reproduce val_scores exactly."""
+    rng = np.random.default_rng(1)
+    X, Y, mask, cm, _ = _pad_cls(rng, 300, 6, 4)
+    tr = make_glm_trainer("softmax")
+    Xv = X[:shapes.N_VAL]
+    scores, w, b = tr(X, Y, mask, cm, Xv, _sched(), _hy(0.3, 1e-3))
+    np.testing.assert_allclose(np.asarray(scores),
+                               Xv @ np.asarray(w) + np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ridge_approaches_closed_form():
+    """Identity link + l2 GD should approach the ridge solution."""
+    rng = np.random.default_rng(2)
+    n, d = shapes.N_TRAIN, shapes.D
+    m, d_live = 500, 8
+    X = np.zeros((n, d), np.float32)
+    X[:m, :d_live] = rng.normal(0, 1, (m, d_live))
+    w_true = rng.normal(0, 1, (d_live, 1)).astype(np.float32)
+    Y = np.zeros((n, 1), np.float32)
+    Y[:m] = X[:m, :d_live] @ w_true + 0.01 * rng.normal(0, 1, (m, 1))
+    mask = np.zeros((n, 1), np.float32)
+    mask[:m] = 1.0
+    cm = np.ones((1, 1), np.float32)
+    lam = 0.1
+    tr = make_glm_trainer("identity")
+    _, w, b = tr(X, Y, mask, cm, X[:shapes.N_VAL], _sched(),
+                 _hy(0.4, lam))
+    # closed form on the live block: (X^T X / m + lam I)^-1 X^T y / m
+    Xl = X[:m, :d_live]
+    A = Xl.T @ Xl / m + lam * np.eye(d_live)
+    w_star = np.linalg.solve(A, Xl.T @ Y[:m] / m)
+    np.testing.assert_allclose(np.asarray(w)[:d_live], w_star,
+                               rtol=0.15, atol=0.05)
+
+
+def test_lasso_l1_shrinks_irrelevant_features():
+    rng = np.random.default_rng(3)
+    n, d = shapes.N_TRAIN, shapes.D
+    m = 500
+    X = np.zeros((n, d), np.float32)
+    X[:m] = rng.normal(0, 1, (m, d))
+    Y = np.zeros((n, 1), np.float32)
+    Y[:m] = 2.0 * X[:m, :1]          # only feature 0 matters
+    mask = np.zeros((n, 1), np.float32)
+    mask[:m] = 1.0
+    cm = np.ones((1, 1), np.float32)
+    tr = make_glm_trainer("identity")
+    _, w_l1, _ = tr(X, Y, mask, cm, X[:shapes.N_VAL], _sched(),
+                    _hy(0.3, 0.0, 0.05))
+    w_l1 = np.asarray(w_l1)
+    assert abs(w_l1[0, 0]) > 1.0
+    assert np.abs(w_l1[1:, 0]).max() < 0.1
+
+
+def test_huber_link_robust_to_outliers():
+    rng = np.random.default_rng(4)
+    n, d = shapes.N_TRAIN, shapes.D
+    m = 400
+    X = np.zeros((n, d), np.float32)
+    X[:m] = rng.normal(0, 1, (m, d))
+    Y = np.zeros((n, 1), np.float32)
+    Y[:m] = X[:m, :1]
+    Y[:20] += 50.0                   # gross outliers
+    mask = np.zeros((n, 1), np.float32)
+    mask[:m] = 1.0
+    cm = np.ones((1, 1), np.float32)
+    _, w_hub, _ = make_glm_trainer("huber")(
+        X, Y, mask, cm, X[:shapes.N_VAL], _sched(), _hy(0.3, 0.0, 0.0, 0.5))
+    _, w_sq, _ = make_glm_trainer("identity")(
+        X, Y, mask, cm, X[:shapes.N_VAL], _sched(), _hy(0.3))
+    # huber estimate of the true slope should beat squared loss
+    assert abs(np.asarray(w_hub)[0, 0] - 1.0) < \
+        abs(np.asarray(w_sq)[0, 0] - 1.0)
+
+
+def test_lr_schedule_zero_tail_freezes_training():
+    """Fidelity knob: zeroing the schedule tail == training fewer steps."""
+    rng = np.random.default_rng(5)
+    X, Y, mask, cm, _ = _pad_cls(rng, 300, 4, 3)
+    tr = make_glm_trainer("softmax")
+    half = np.ones((shapes.T_STEPS,), np.float32)
+    half[shapes.T_STEPS // 2:] = 0.0
+    s_half, w_half, _ = tr(X, Y, mask, cm, X[:shapes.N_VAL], half,
+                           _hy(0.3))
+    short = np.ones((shapes.T_STEPS,), np.float32)
+    s_full, w_full, _ = tr(X, Y, mask, cm, X[:shapes.N_VAL], short,
+                           _hy(0.3))
+    assert not np.allclose(np.asarray(w_half), np.asarray(w_full))
+    # and the frozen half equals literally stopping at T/2
+    tr_short = make_glm_trainer("softmax", t_steps=shapes.T_STEPS // 2)
+    s2, w2, _ = tr_short(X, Y, mask, cm, X[:shapes.N_VAL],
+                         short[:shapes.T_STEPS // 2], _hy(0.3))
+    np.testing.assert_allclose(np.asarray(w_half), np.asarray(w2),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("hidden", list(shapes.MLP_HIDDEN))
+def test_mlp_learns_nonlinear_boundary(hidden):
+    """GLM cannot fit XOR-ish data; the MLP must."""
+    rng = np.random.default_rng(6)
+    n, d, c = shapes.N_TRAIN, shapes.D, shapes.C
+    m = 480
+    X = np.zeros((n, d), np.float32)
+    X[:m, :2] = rng.normal(0, 1, (m, 2))
+    lab = ((X[:m, 0] * X[:m, 1]) > 0).astype(int)
+    Y = np.zeros((n, c), np.float32)
+    Y[np.arange(m), lab] = 1.0
+    mask = np.zeros((n, 1), np.float32)
+    mask[:m] = 1.0
+    cm = np.zeros((1, c), np.float32)
+    cm[0, :2] = 1.0
+    tr = make_mlp_trainer("softmax", hidden)
+    hy = np.array([[0.5, 1e-4, 0.9, 0.0]], np.float32)
+    seed = np.array([42], np.int32)
+    scores, *_ = tr(X, Y, mask, cm, X[:shapes.N_VAL], _sched(), hy, seed)
+    pred = np.argmax(np.asarray(scores)[:, :2], axis=1)
+    acc = (pred == lab[:shapes.N_VAL]).mean()
+    assert acc > 0.85, f"h={hidden} acc={acc}"
+
+
+def test_mlp_returned_params_reproduce_val_scores():
+    rng = np.random.default_rng(7)
+    X, Y, mask, cm, _ = _pad_cls(rng, 256, 4, 3)
+    tr = make_mlp_trainer("softmax", 16)
+    hy = np.array([[0.2, 0.0, 0.5, 0.0]], np.float32)
+    Xv = X[:shapes.N_VAL]
+    scores, w1, b1, w2, b2 = tr(X, Y, mask, cm, Xv, _sched(), hy,
+                                np.array([1], np.int32))
+    hv = np.maximum(Xv @ np.asarray(w1) + np.asarray(b1), 0.0)
+    np.testing.assert_allclose(np.asarray(scores),
+                               hv @ np.asarray(w2) + np.asarray(b2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_seed_changes_init_deterministically():
+    rng = np.random.default_rng(8)
+    X, Y, mask, cm, _ = _pad_cls(rng, 128, 4, 2)
+    tr = make_mlp_trainer("softmax", 16)
+    hy = np.array([[0.1, 0.0, 0.0, 0.0]], np.float32)
+    args = (X, Y, mask, cm, X[:shapes.N_VAL], _sched(), hy)
+    a = np.asarray(tr(*args, np.array([1], np.int32))[1])
+    a2 = np.asarray(tr(*args, np.array([1], np.int32))[1])
+    b = np.asarray(tr(*args, np.array([2], np.int32))[1])
+    np.testing.assert_allclose(a, a2)
+    assert not np.allclose(a, b)
+
+
+def test_knn_exact_neighbours():
+    rng = np.random.default_rng(9)
+    n, d, c = shapes.N_TRAIN, shapes.D, shapes.C
+    m = 300
+    X = np.zeros((n, d), np.float32)
+    X[:m] = rng.normal(0, 1, (m, d))
+    lab = rng.integers(0, 3, m)
+    Y = np.zeros((n, c), np.float32)
+    Y[np.arange(m), lab] = 1.0
+    mask = np.zeros((n, 1), np.float32)
+    mask[:m] = 1.0
+    Xq = rng.normal(0, 1, (shapes.N_VAL, d)).astype(np.float32)
+    dists, neigh = make_knn_scorer()(X, Y, mask, Xq)
+    dists, neigh = np.asarray(dists), np.asarray(neigh)
+    # brute-force check on a few queries
+    for q in range(0, 16):
+        full = ((Xq[q] - X[:m]) ** 2).sum(axis=1)
+        order = np.argsort(full)[:shapes.K_MAX]
+        np.testing.assert_allclose(np.sort(dists[q]),
+                                   np.sort(full[order]),
+                                   rtol=1e-3, atol=1e-3)
+        # 1-NN label match
+        assert neigh[q, 0].argmax() == lab[order[0]]
+    # distances sorted ascending
+    assert (np.diff(dists, axis=1) >= -1e-5).all()
+
+
+def test_knn_never_returns_masked_rows():
+    n, d, c = shapes.N_TRAIN, shapes.D, shapes.C
+    X = np.zeros((n, d), np.float32)       # all-zero features
+    Y = np.zeros((n, c), np.float32)
+    Y[:, 0] = 1.0
+    Y[30:, 0] = 0.0
+    Y[30:, 1] = 1.0                        # masked rows have class 1
+    mask = np.zeros((n, 1), np.float32)
+    mask[:30] = 1.0                        # only 30 live rows (>= K_MAX)
+    Xq = np.zeros((shapes.N_VAL, d), np.float32)
+    _, neigh = make_knn_scorer()(X, Y, mask, Xq)
+    neigh = np.asarray(neigh)
+    assert (neigh[:, :, 1] == 0).all(), "masked row leaked into neighbours"
+
+
+def test_link_residual_ref_shapes_and_cases():
+    z = np.array([[2.0, -1.0]], np.float32)
+    y = np.array([[1.0, 0.0]], np.float32)
+    cm = np.ones((1, 2), np.float32)
+    # hinge: correct class with margin > 1 -> zero residual there
+    r = np.asarray(ref.link_residual_ref(jnp.array(z), jnp.array(y),
+                                         "hinge", jnp.array(cm), 1.0))
+    assert r[0, 0] == 0.0      # margin satisfied
+    assert r[0, 1] == 0.0      # wrong class margin also satisfied (z=-1)
+    r2 = np.asarray(ref.link_residual_ref(jnp.array([[0.5, 0.5]], np.float32),
+                                          jnp.array(y), "hinge",
+                                          jnp.array(cm), 1.0))
+    assert r2[0, 0] == -1.0 and r2[0, 1] == 1.0

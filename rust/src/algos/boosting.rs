@@ -1,0 +1,512 @@
+//! Boosted ensembles: gradient boosting (softmax/squared loss on
+//! shallow CART trees), a histogram-binned variant standing in for the
+//! paper's LightGBM arm, and AdaBoost (SAMME via weighted resampling).
+
+use crate::data::dataset::{Dataset, Predictions, Task};
+use crate::util::rng::Rng;
+
+use super::tree::{Criterion, Tree, TreeParams};
+
+// ====================================================================
+// Gradient boosting
+// ====================================================================
+
+#[derive(Clone, Debug)]
+pub struct GbmParams {
+    pub n_estimators: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+    pub subsample: f64,
+    pub min_samples_leaf: usize,
+    /// Histogram mode: bin features into `n_bins` quantile bins first
+    /// (the LightGBM-style arm); 0 disables binning.
+    pub n_bins: usize,
+}
+
+impl Default for GbmParams {
+    fn default() -> Self {
+        GbmParams {
+            n_estimators: 60,
+            learning_rate: 0.1,
+            max_depth: 3,
+            subsample: 0.9,
+            min_samples_leaf: 3,
+            n_bins: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Gbm {
+    /// trees[round][class] (regression: one "class").
+    trees: Vec<Vec<Tree>>,
+    lr: f64,
+    task: Task,
+    base: Vec<f64>,
+    /// Per-feature bin edges when histogram mode is on.
+    bins: Option<Vec<Vec<f32>>>,
+}
+
+fn softmax_rows(z: &mut [f64], k: usize) {
+    for row in z.chunks_mut(k) {
+        let m = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+}
+
+fn quantile_edges(ds: &Dataset, train: &[usize], n_bins: usize)
+    -> Vec<Vec<f32>> {
+    (0..ds.d)
+        .map(|j| {
+            let mut xs: Vec<f32> =
+                train.iter().map(|&i| ds.row(i)[j]).collect();
+            xs.sort_by(|a, b| a.partial_cmp(b)
+                .unwrap_or(std::cmp::Ordering::Equal));
+            let mut edges: Vec<f32> = (1..n_bins)
+                .map(|b| xs[(b * xs.len() / n_bins)
+                    .min(xs.len().saturating_sub(1))])
+                .collect();
+            edges.dedup();
+            edges
+        })
+        .collect()
+}
+
+fn bin_row(row: &[f32], bins: &[Vec<f32>]) -> Vec<f32> {
+    row.iter()
+        .enumerate()
+        .map(|(j, &v)| {
+            let edges = &bins[j];
+            let idx = match edges.binary_search_by(|e| e
+                .partial_cmp(&v).unwrap_or(std::cmp::Ordering::Less)) {
+                Ok(i) => i + 1,
+                Err(i) => i,
+            };
+            idx as f32
+        })
+        .collect()
+}
+
+impl Gbm {
+    pub fn fit(ds: &Dataset, train: &[usize], p: &GbmParams,
+               rng: &mut Rng) -> Gbm {
+        let cls = ds.task.is_classification();
+        let k = if cls { ds.task.n_classes() } else { 1 };
+        let n = train.len();
+
+        // optional histogram binning (LightGBM-style arm)
+        let bins = if p.n_bins > 1 {
+            Some(quantile_edges(ds, train, p.n_bins))
+        } else {
+            None
+        };
+        let (x_local, d): (Vec<f32>, usize) = match &bins {
+            Some(b) => {
+                let mut x = Vec::with_capacity(ds.n * ds.d);
+                for i in 0..ds.n {
+                    x.extend(bin_row(ds.row(i), b));
+                }
+                (x, ds.d)
+            }
+            None => (ds.x.clone(), ds.d),
+        };
+
+        // base score: log priors (cls) or mean (reg)
+        let base: Vec<f64> = if cls {
+            let mut counts = vec![1e-9f64; k];
+            for &i in train {
+                counts[ds.label(i).min(k - 1)] += 1.0;
+            }
+            let total: f64 = counts.iter().sum();
+            counts.iter().map(|c| (c / total).ln()).collect()
+        } else {
+            let m = train.iter().map(|&i| ds.y[i] as f64).sum::<f64>()
+                / n.max(1) as f64;
+            vec![m]
+        };
+
+        // current raw scores per train row
+        let mut f: Vec<f64> = (0..n).flat_map(|_| base.clone()).collect();
+        let tp = TreeParams {
+            max_depth: p.max_depth,
+            min_samples_split: 2 * p.min_samples_leaf,
+            min_samples_leaf: p.min_samples_leaf,
+            max_features: 1.0,
+            criterion: Criterion::Mse,
+            random_thresholds: false,
+            n_classes: 0,
+        };
+
+        let mut rounds = Vec::with_capacity(p.n_estimators);
+        let mut residual = vec![0.0f64; n];
+        for _round in 0..p.n_estimators {
+            // row subsample for this round
+            let m_rows = ((n as f64 * p.subsample) as usize).clamp(2, n);
+            let pick: Vec<usize> = if m_rows < n {
+                rng.sample_indices(n, m_rows)
+            } else {
+                (0..n).collect()
+            };
+            let mut class_trees = Vec::with_capacity(k);
+            let mut probs = f.clone();
+            if cls {
+                softmax_rows(&mut probs, k);
+            }
+            for c in 0..k {
+                for (t, &row) in train.iter().enumerate() {
+                    residual[t] = if cls {
+                        let y = if ds.label(row).min(k - 1) == c { 1.0 }
+                                else { 0.0 };
+                        y - probs[t * k + c]
+                    } else {
+                        ds.y[row] as f64 - f[t]
+                    };
+                }
+                // fit tree on (global-row x, residual indexed by local t)
+                // => remap: build target vec aligned to global rows
+                let mut y_global = vec![0.0f64; ds.n];
+                for (t, &row) in train.iter().enumerate() {
+                    y_global[row] = residual[t];
+                }
+                let rows_global: Vec<usize> =
+                    pick.iter().map(|&t| train[t]).collect();
+                let tree = Tree::fit(&x_local, d, &y_global, &rows_global,
+                                     &tp, rng);
+                // update scores
+                for (t, &row) in train.iter().enumerate() {
+                    let pred = tree.predict_row(
+                        &x_local[row * d..(row + 1) * d])[0];
+                    f[t * k + c] += p.learning_rate * pred;
+                }
+                class_trees.push(tree);
+            }
+            rounds.push(class_trees);
+        }
+        Gbm { trees: rounds, lr: p.learning_rate, task: ds.task, base,
+              bins }
+    }
+
+    pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
+        let k = self.base.len();
+        let mut scores = vec![0.0f64; rows.len() * k];
+        for (r, &i) in rows.iter().enumerate() {
+            let raw = ds.row(i);
+            let binned;
+            let row: &[f32] = match &self.bins {
+                Some(b) => {
+                    binned = bin_row(raw, b);
+                    &binned
+                }
+                None => raw,
+            };
+            for c in 0..k {
+                let mut s = self.base[c];
+                for round in &self.trees {
+                    s += self.lr * round[c].predict_row(row)[0];
+                }
+                scores[r * k + c] = s;
+            }
+        }
+        match self.task {
+            Task::Classification { n_classes } => {
+                softmax_rows(&mut scores, k);
+                Predictions::ClassScores {
+                    n_classes,
+                    scores: scores.iter().map(|&v| v as f32).collect(),
+                }
+            }
+            Task::Regression => Predictions::Values(
+                scores.iter().map(|&v| v as f32).collect()),
+        }
+    }
+}
+
+// ====================================================================
+// AdaBoost (SAMME, weighted resampling)
+// ====================================================================
+
+#[derive(Clone, Debug)]
+pub struct AdaParams {
+    pub n_estimators: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+}
+
+impl Default for AdaParams {
+    fn default() -> Self {
+        AdaParams { n_estimators: 40, learning_rate: 1.0, max_depth: 2 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AdaBoost {
+    stumps: Vec<(Tree, f64)>,
+    task: Task,
+}
+
+impl AdaBoost {
+    pub fn fit(ds: &Dataset, train: &[usize], p: &AdaParams,
+               rng: &mut Rng) -> AdaBoost {
+        let cls = ds.task.is_classification();
+        let k = if cls { ds.task.n_classes() } else { 0 };
+        let y: Vec<f64> = ds.y.iter().map(|&v| v as f64).collect();
+        let n = train.len();
+        let mut w = vec![1.0 / n as f64; n];
+        let tp = TreeParams {
+            max_depth: p.max_depth,
+            criterion: if cls { Criterion::Gini } else { Criterion::Mse },
+            n_classes: k,
+            ..Default::default()
+        };
+        let mut stumps = Vec::new();
+        for round in 0..p.n_estimators {
+            let mut trng = rng.fork(round as u64);
+            // weighted resample
+            let rows: Vec<usize> = (0..n)
+                .map(|_| train[trng.weighted(&w)])
+                .collect();
+            let tree = Tree::fit(&ds.x, ds.d, &y, &rows, &tp, &mut trng);
+            if cls {
+                // SAMME error on weighted train
+                let mut err = 0.0;
+                let mut preds = Vec::with_capacity(n);
+                for (t, &i) in train.iter().enumerate() {
+                    let dist = tree.predict_row(ds.row(i));
+                    let pred = dist
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(c, _)| c)
+                        .unwrap_or(0);
+                    preds.push(pred);
+                    if pred != ds.label(i) {
+                        err += w[t];
+                    }
+                }
+                let err = err.clamp(1e-10, 1.0 - 1e-10);
+                if err >= 1.0 - 1.0 / k as f64 {
+                    continue; // worse than chance: skip round
+                }
+                let alpha = p.learning_rate
+                    * (((1.0 - err) / err).ln() + (k as f64 - 1.0).ln());
+                for (t, &i) in train.iter().enumerate() {
+                    if preds[t] != ds.label(i) {
+                        w[t] *= alpha.exp();
+                    }
+                }
+                let s: f64 = w.iter().sum();
+                for v in &mut w {
+                    *v /= s;
+                }
+                stumps.push((tree, alpha));
+                if err < 1e-9 {
+                    break;
+                }
+            } else {
+                // AdaBoost.R2-flavoured: weight by absolute error
+                let mut errs = Vec::with_capacity(n);
+                let mut max_e: f64 = 1e-12;
+                for &i in train {
+                    let e = (tree.predict_row(ds.row(i))[0]
+                        - ds.y[i] as f64).abs();
+                    max_e = max_e.max(e);
+                    errs.push(e);
+                }
+                let avg_loss: f64 = errs
+                    .iter()
+                    .zip(&w)
+                    .map(|(e, wi)| (e / max_e) * wi)
+                    .sum();
+                let avg_loss = avg_loss.clamp(1e-10, 0.999);
+                let beta = avg_loss / (1.0 - avg_loss);
+                let alpha = p.learning_rate * (1.0 / beta).ln();
+                for (t, e) in errs.iter().enumerate() {
+                    w[t] *= beta.powf(1.0 - e / max_e);
+                }
+                let s: f64 = w.iter().sum();
+                for v in &mut w {
+                    *v /= s;
+                }
+                stumps.push((tree, alpha));
+            }
+        }
+        if stumps.is_empty() {
+            // degenerate data: keep one unweighted tree
+            let mut trng = rng.fork(999);
+            let rows: Vec<usize> = train.to_vec();
+            let tree = Tree::fit(&ds.x, ds.d, &y, &rows, &tp, &mut trng);
+            stumps.push((tree, 1.0));
+        }
+        AdaBoost { stumps, task: ds.task }
+    }
+
+    pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
+        match self.task {
+            Task::Classification { n_classes } => {
+                let mut scores = vec![0.0f32; rows.len() * n_classes];
+                for (r, &i) in rows.iter().enumerate() {
+                    for (tree, alpha) in &self.stumps {
+                        let dist = tree.predict_row(ds.row(i));
+                        let pred = dist
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(c, _)| c)
+                            .unwrap_or(0);
+                        scores[r * n_classes + pred.min(n_classes - 1)] +=
+                            *alpha as f32;
+                    }
+                }
+                Predictions::ClassScores { n_classes, scores }
+            }
+            Task::Regression => {
+                let total: f64 =
+                    self.stumps.iter().map(|(_, a)| *a).sum::<f64>()
+                        .max(1e-12);
+                let vals = rows
+                    .iter()
+                    .map(|&i| {
+                        let s: f64 = self
+                            .stumps
+                            .iter()
+                            .map(|(t, a)| a * t.predict_row(ds.row(i))[0])
+                            .sum();
+                        (s / total) as f32
+                    })
+                    .collect();
+                Predictions::Values(vals)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::metrics::{balanced_accuracy, mse};
+    use crate::data::synthetic::{generate, GenKind, Profile};
+
+    fn gen(task: Task, gk: GenKind, n: usize) -> Dataset {
+        generate(&Profile {
+            name: "b".into(),
+            task,
+            gen: gk,
+            n,
+            d: 8,
+            noise: 0.03,
+            imbalance: 1.0,
+            redundant: 1,
+            wild_scales: false,
+            seed: 31,
+        })
+    }
+
+    #[test]
+    fn gbm_classifies_checker() {
+        let ds = gen(Task::Classification { n_classes: 2 },
+                     GenKind::Checker { cells: 3 }, 600);
+        let train: Vec<usize> = (0..480).collect();
+        let test: Vec<usize> = (480..600).collect();
+        let mut rng = Rng::new(0);
+        let g = Gbm::fit(&ds, &train, &GbmParams::default(), &mut rng);
+        let preds = g.predict(&ds, &test);
+        let yt: Vec<f32> = test.iter().map(|&i| ds.y[i]).collect();
+        let acc = balanced_accuracy(&yt, &preds.argmax_labels());
+        assert!(acc > 0.8, "acc={acc}");
+    }
+
+    #[test]
+    fn gbm_multiclass_probabilities_sum_to_one() {
+        let ds = gen(Task::Classification { n_classes: 4 },
+                     GenKind::Blobs { sep: 2.0 }, 400);
+        let train: Vec<usize> = (0..300).collect();
+        let mut rng = Rng::new(1);
+        let g = Gbm::fit(&ds, &train, &GbmParams {
+            n_estimators: 20,
+            ..Default::default()
+        }, &mut rng);
+        let rows: Vec<usize> = (300..340).collect();
+        let preds = g.predict(&ds, &rows);
+        for r in 0..rows.len() {
+            let s: f32 = preds.score_row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn gbm_regression_beats_mean_predictor() {
+        let ds = gen(Task::Regression, GenKind::Friedman1, 600);
+        let train: Vec<usize> = (0..480).collect();
+        let test: Vec<usize> = (480..600).collect();
+        let mut rng = Rng::new(2);
+        let g = Gbm::fit(&ds, &train, &GbmParams::default(), &mut rng);
+        let preds = g.predict(&ds, &test);
+        let yt: Vec<f32> = test.iter().map(|&i| ds.y[i]).collect();
+        let mean: f32 = yt.iter().sum::<f32>() / yt.len() as f32;
+        let mean_mse = mse(&yt, &vec![mean; yt.len()]);
+        let got = mse(&yt, preds.values());
+        assert!(got < mean_mse * 0.5, "mse {got} vs mean {mean_mse}");
+    }
+
+    #[test]
+    fn hist_mode_bins_and_still_learns() {
+        let ds = gen(Task::Classification { n_classes: 2 },
+                     GenKind::Blobs { sep: 1.5 }, 500);
+        let train: Vec<usize> = (0..400).collect();
+        let test: Vec<usize> = (400..500).collect();
+        let mut rng = Rng::new(3);
+        let g = Gbm::fit(&ds, &train, &GbmParams {
+            n_bins: 16,
+            n_estimators: 30,
+            ..Default::default()
+        }, &mut rng);
+        assert!(g.bins.is_some());
+        let preds = g.predict(&ds, &test);
+        let yt: Vec<f32> = test.iter().map(|&i| ds.y[i]).collect();
+        assert!(balanced_accuracy(&yt, &preds.argmax_labels()) > 0.85);
+    }
+
+    #[test]
+    fn adaboost_improves_over_single_stump() {
+        let ds = gen(Task::Classification { n_classes: 2 },
+                     GenKind::Checker { cells: 2 }, 600);
+        let train: Vec<usize> = (0..480).collect();
+        let test: Vec<usize> = (480..600).collect();
+        let yt: Vec<f32> = test.iter().map(|&i| ds.y[i]).collect();
+        let mut rng = Rng::new(4);
+        let weak = AdaBoost::fit(&ds, &train, &AdaParams {
+            n_estimators: 1, max_depth: 1, ..Default::default()
+        }, &mut rng);
+        let strong = AdaBoost::fit(&ds, &train, &AdaParams {
+            n_estimators: 60, max_depth: 2, ..Default::default()
+        }, &mut rng);
+        let acc_weak = balanced_accuracy(
+            &yt, &weak.predict(&ds, &test).argmax_labels());
+        let acc_strong = balanced_accuracy(
+            &yt, &strong.predict(&ds, &test).argmax_labels());
+        assert!(acc_strong > acc_weak, "{acc_strong} <= {acc_weak}");
+        assert!(acc_strong > 0.8, "{acc_strong}");
+    }
+
+    #[test]
+    fn adaboost_regression_runs() {
+        let ds = gen(Task::Regression, GenKind::PiecewiseReg { steps: 4 },
+                     400);
+        let train: Vec<usize> = (0..320).collect();
+        let test: Vec<usize> = (320..400).collect();
+        let mut rng = Rng::new(5);
+        let a = AdaBoost::fit(&ds, &train, &AdaParams::default(), &mut rng);
+        let preds = a.predict(&ds, &test);
+        let yt: Vec<f32> = test.iter().map(|&i| ds.y[i]).collect();
+        let mean: f32 = yt.iter().sum::<f32>() / yt.len() as f32;
+        assert!(mse(&yt, preds.values())
+            < mse(&yt, &vec![mean; yt.len()]));
+    }
+}

@@ -1,0 +1,205 @@
+//! Bagged tree ensembles: random forest and extra-trees, for both
+//! tasks. These are two of the strongest arms in the conditioning
+//! block, mirroring their role in auto-sklearn's roster.
+
+use crate::data::dataset::{Dataset, Predictions, Task};
+use crate::util::rng::Rng;
+
+use super::tree::{Criterion, Tree, TreeParams};
+
+#[derive(Clone, Debug)]
+pub struct ForestParams {
+    pub n_estimators: usize,
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    pub max_features: f64,
+    pub bootstrap: bool,
+    pub criterion: Criterion,
+    /// true => extra-trees (random thresholds, no bootstrap default)
+    pub extra: bool,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_estimators: 32,
+            max_depth: 12,
+            min_samples_split: 2,
+            min_samples_leaf: 1,
+            max_features: 0.7,
+            bootstrap: true,
+            criterion: Criterion::Gini,
+            extra: false,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Forest {
+    trees: Vec<Tree>,
+    task: Task,
+}
+
+impl Forest {
+    pub fn fit(ds: &Dataset, train: &[usize], p: &ForestParams,
+               rng: &mut Rng) -> Forest {
+        let cls = ds.task.is_classification();
+        let k = ds.task.n_classes();
+        let y: Vec<f64> = ds.y.iter().map(|&v| v as f64).collect();
+        let tp = TreeParams {
+            max_depth: p.max_depth,
+            min_samples_split: p.min_samples_split,
+            min_samples_leaf: p.min_samples_leaf,
+            max_features: p.max_features,
+            criterion: if cls { p.criterion } else { Criterion::Mse },
+            random_thresholds: p.extra,
+            n_classes: if cls { k } else { 0 },
+        };
+        let trees = (0..p.n_estimators.max(1))
+            .map(|t| {
+                let mut trng = rng.fork(t as u64);
+                let rows: Vec<usize> = if p.bootstrap && !p.extra {
+                    (0..train.len())
+                        .map(|_| train[trng.below(train.len())])
+                        .collect()
+                } else {
+                    train.to_vec()
+                };
+                Tree::fit(&ds.x, ds.d, &y, &rows, &tp, &mut trng)
+            })
+            .collect();
+        Forest { trees, task: ds.task }
+    }
+
+    pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
+        match self.task {
+            Task::Classification { n_classes } => {
+                let mut scores = vec![0.0f32; rows.len() * n_classes];
+                for (r, &i) in rows.iter().enumerate() {
+                    let row = ds.row(i);
+                    for t in &self.trees {
+                        let dist = t.predict_row(row);
+                        for c in 0..n_classes.min(dist.len()) {
+                            scores[r * n_classes + c] += dist[c] as f32;
+                        }
+                    }
+                    let inv = 1.0 / self.trees.len().max(1) as f32;
+                    for c in 0..n_classes {
+                        scores[r * n_classes + c] *= inv;
+                    }
+                }
+                Predictions::ClassScores { n_classes, scores }
+            }
+            Task::Regression => {
+                let vals = rows
+                    .iter()
+                    .map(|&i| {
+                        let row = ds.row(i);
+                        let s: f64 = self
+                            .trees
+                            .iter()
+                            .map(|t| t.predict_row(row)[0])
+                            .sum();
+                        (s / self.trees.len().max(1) as f64) as f32
+                    })
+                    .collect();
+                Predictions::Values(vals)
+            }
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::metrics::{balanced_accuracy, mse};
+    use crate::data::synthetic::{generate, GenKind, Profile};
+
+    fn cls_profile(gen: GenKind, k: usize) -> Profile {
+        Profile {
+            name: "f".into(),
+            task: Task::Classification { n_classes: k },
+            gen,
+            n: 500,
+            d: 8,
+            noise: 0.02,
+            imbalance: 1.0,
+            redundant: 2,
+            wild_scales: false,
+            seed: 21,
+        }
+    }
+
+    #[test]
+    fn forest_beats_chance_on_rings() {
+        let ds = generate(&cls_profile(GenKind::Rings, 2));
+        let train: Vec<usize> = (0..400).collect();
+        let test: Vec<usize> = (400..500).collect();
+        let mut rng = Rng::new(0);
+        let f = Forest::fit(&ds, &train, &ForestParams::default(),
+                            &mut rng);
+        let preds = f.predict(&ds, &test);
+        let yt: Vec<f32> = test.iter().map(|&i| ds.y[i]).collect();
+        let acc = balanced_accuracy(&yt, &preds.argmax_labels());
+        assert!(acc > 0.85, "acc={acc}");
+    }
+
+    #[test]
+    fn extra_trees_work_and_differ() {
+        let ds = generate(&cls_profile(GenKind::Checker { cells: 3 }, 2));
+        let train: Vec<usize> = (0..400).collect();
+        let test: Vec<usize> = (400..500).collect();
+        let mut rng = Rng::new(1);
+        let p = ForestParams { extra: true, ..Default::default() };
+        let f = Forest::fit(&ds, &train, &p, &mut rng);
+        let preds = f.predict(&ds, &test);
+        let yt: Vec<f32> = test.iter().map(|&i| ds.y[i]).collect();
+        assert!(balanced_accuracy(&yt, &preds.argmax_labels()) > 0.8);
+    }
+
+    #[test]
+    fn regression_forest_fits_friedman() {
+        let p = Profile {
+            name: "fr".into(),
+            task: Task::Regression,
+            gen: GenKind::Friedman1,
+            n: 600,
+            d: 8,
+            noise: 0.2,
+            imbalance: 1.0,
+            redundant: 0,
+            wild_scales: false,
+            seed: 3,
+        };
+        let ds = generate(&p);
+        let train: Vec<usize> = (0..480).collect();
+        let test: Vec<usize> = (480..600).collect();
+        let mut rng = Rng::new(2);
+        let f = Forest::fit(&ds, &train, &ForestParams {
+            n_estimators: 48,
+            ..Default::default()
+        }, &mut rng);
+        let preds = f.predict(&ds, &test);
+        let yt: Vec<f32> = test.iter().map(|&i| ds.y[i]).collect();
+        let err = mse(&yt, preds.values());
+        // friedman1 var ~ 24; a fitted forest should be well below it
+        assert!(err < 12.0, "mse={err}");
+    }
+
+    #[test]
+    fn single_tree_forest_is_deterministic_per_seed() {
+        let ds = generate(&cls_profile(GenKind::Blobs { sep: 2.0 }, 3));
+        let train: Vec<usize> = (0..300).collect();
+        let p = ForestParams { n_estimators: 1, ..Default::default() };
+        let f1 = Forest::fit(&ds, &train, &p, &mut Rng::new(9));
+        let f2 = Forest::fit(&ds, &train, &p, &mut Rng::new(9));
+        let rows: Vec<usize> = (300..350).collect();
+        let (a, b) = (f1.predict(&ds, &rows), f2.predict(&ds, &rows));
+        assert_eq!(a.argmax_labels(), b.argmax_labels());
+    }
+}

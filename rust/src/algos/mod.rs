@@ -1,0 +1,556 @@
+//! Algorithm arms (the paper's Table 12 analogue): native Rust tree /
+//! probabilistic models plus PJRT-backed trainable models whose
+//! training loop is the AOT-compiled JAX/Pallas artifact.
+//!
+//! Each arm exposes its own hyper-parameter [`ConfigSpace`]; the
+//! conditioning block builds one child per arm, exactly like the
+//! paper's per-algorithm decomposition.
+
+pub mod boosting;
+pub mod forest;
+pub mod pjrt;
+pub mod simple;
+pub mod tree;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::dataset::{Dataset, Predictions, Task};
+use crate::runtime::Runtime;
+use crate::space::{Config, ConfigSpace};
+use crate::util::rng::Rng;
+
+/// Per-evaluation context: the PJRT runtime (if artifacts are built),
+/// a forked RNG stream and the multi-fidelity knob used by the
+/// Hyperband-family optimizers (fraction of train subsample / GD
+/// steps).
+pub struct EvalContext<'a> {
+    pub rng: Rng,
+    pub runtime: Option<&'a Runtime>,
+    pub fidelity: f64,
+}
+
+impl<'a> EvalContext<'a> {
+    pub fn new(runtime: Option<&'a Runtime>, seed: u64) -> Self {
+        EvalContext { rng: Rng::new(seed), runtime, fidelity: 1.0 }
+    }
+}
+
+pub trait FittedModel {
+    fn predict(&self, ds: &Dataset, rows: &[usize],
+               ctx: &mut EvalContext) -> Predictions;
+}
+
+pub trait Algorithm: Send + Sync {
+    fn name(&self) -> &str;
+    fn space(&self) -> ConfigSpace;
+    fn supports(&self, task: Task) -> bool;
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>>;
+    /// Rough relative cost hint used by the blocks' cost model.
+    fn cost_hint(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Subsample training rows according to the fidelity knob.
+pub(crate) fn fidelity_rows(train: &[usize], fidelity: f64,
+                            rng: &mut Rng) -> Vec<usize> {
+    let f = fidelity.clamp(0.05, 1.0);
+    if f >= 0.999 {
+        return train.to_vec();
+    }
+    let m = ((train.len() as f64 * f).round() as usize)
+        .clamp(8.min(train.len()), train.len());
+    rng.sample_indices(train.len(), m)
+        .into_iter()
+        .map(|i| train[i])
+        .collect()
+}
+
+// ====================================================================
+// Native arm wrappers
+// ====================================================================
+
+macro_rules! simple_fitted {
+    ($name:ident, $model:ty) => {
+        struct $name($model);
+        impl FittedModel for $name {
+            fn predict(&self, ds: &Dataset, rows: &[usize],
+                       _ctx: &mut EvalContext) -> Predictions {
+                self.0.predict(ds, rows)
+            }
+        }
+    };
+}
+
+// ---- decision tree -------------------------------------------------
+
+pub struct DecisionTreeAlgo;
+struct FittedTree {
+    tree: tree::Tree,
+    task: Task,
+}
+
+impl FittedModel for FittedTree {
+    fn predict(&self, ds: &Dataset, rows: &[usize],
+               _ctx: &mut EvalContext) -> Predictions {
+        match self.task {
+            Task::Classification { n_classes } => {
+                let mut scores = vec![0.0f32; rows.len() * n_classes];
+                for (r, &i) in rows.iter().enumerate() {
+                    let dist = self.tree.predict_row(ds.row(i));
+                    for c in 0..n_classes.min(dist.len()) {
+                        scores[r * n_classes + c] = dist[c] as f32;
+                    }
+                }
+                Predictions::ClassScores { n_classes, scores }
+            }
+            Task::Regression => Predictions::Values(
+                rows.iter()
+                    .map(|&i| self.tree.predict_row(ds.row(i))[0] as f32)
+                    .collect(),
+            ),
+        }
+    }
+}
+
+impl Algorithm for DecisionTreeAlgo {
+    fn name(&self) -> &str {
+        "decision_tree"
+    }
+    fn space(&self) -> ConfigSpace {
+        ConfigSpace::new()
+            .cat("criterion", &["gini", "entropy"], "gini")
+            .int("max_depth", 1, 20, 10)
+            .int("min_samples_split", 2, 20, 2)
+            .int("min_samples_leaf", 1, 20, 1)
+            .float("max_features", 0.2, 1.0, 1.0)
+    }
+    fn supports(&self, _task: Task) -> bool {
+        true
+    }
+    fn cost_hint(&self) -> f64 {
+        0.5
+    }
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+        let rows = fidelity_rows(train, ctx.fidelity, &mut ctx.rng);
+        let cls = ds.task.is_classification();
+        let p = tree::TreeParams {
+            max_depth: cfg.usize_or("max_depth", 10).max(1),
+            min_samples_split: cfg.usize_or("min_samples_split", 2).max(2),
+            min_samples_leaf: cfg.usize_or("min_samples_leaf", 1).max(1),
+            max_features: cfg.f64_or("max_features", 1.0),
+            criterion: if !cls {
+                tree::Criterion::Mse
+            } else if cfg.str_or("criterion", "gini") == "entropy" {
+                tree::Criterion::Entropy
+            } else {
+                tree::Criterion::Gini
+            },
+            random_thresholds: false,
+            n_classes: if cls { ds.task.n_classes() } else { 0 },
+        };
+        let y: Vec<f64> = ds.y.iter().map(|&v| v as f64).collect();
+        let t = tree::Tree::fit(&ds.x, ds.d, &y, &rows, &p, &mut ctx.rng);
+        Ok(Box::new(FittedTree { tree: t, task: ds.task }))
+    }
+}
+
+// ---- forests -------------------------------------------------------
+
+pub struct RandomForestAlgo;
+pub struct ExtraTreesAlgo;
+simple_fitted!(FittedForest, forest::Forest);
+
+fn forest_space(extra: bool) -> ConfigSpace {
+    let cs = ConfigSpace::new()
+        .int("n_estimators", 10, 96, 32)
+        .cat("criterion", &["gini", "entropy"], "gini")
+        .int("max_depth", 3, 20, 12)
+        .int("min_samples_leaf", 1, 10, 1)
+        .float("max_features", 0.1, 1.0, 0.7);
+    if extra {
+        cs
+    } else {
+        cs.cat("bootstrap", &["true", "false"], "true")
+    }
+}
+
+fn fit_forest(extra: bool, ds: &Dataset, train: &[usize], cfg: &Config,
+              ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+    let rows = fidelity_rows(train, ctx.fidelity, &mut ctx.rng);
+    let p = forest::ForestParams {
+        n_estimators: cfg.usize_or("n_estimators", 32).max(1),
+        max_depth: cfg.usize_or("max_depth", 12).max(1),
+        min_samples_split: 2 * cfg.usize_or("min_samples_leaf", 1).max(1),
+        min_samples_leaf: cfg.usize_or("min_samples_leaf", 1).max(1),
+        max_features: cfg.f64_or("max_features", 0.7),
+        bootstrap: cfg.str_or("bootstrap", "true") == "true",
+        criterion: if !ds.task.is_classification() {
+            tree::Criterion::Mse
+        } else if cfg.str_or("criterion", "gini") == "entropy" {
+            tree::Criterion::Entropy
+        } else {
+            tree::Criterion::Gini
+        },
+        extra,
+    };
+    let f = forest::Forest::fit(ds, &rows, &p, &mut ctx.rng);
+    Ok(Box::new(FittedForest(f)))
+}
+
+impl Algorithm for RandomForestAlgo {
+    fn name(&self) -> &str {
+        "random_forest"
+    }
+    fn space(&self) -> ConfigSpace {
+        forest_space(false)
+    }
+    fn supports(&self, _task: Task) -> bool {
+        true
+    }
+    fn cost_hint(&self) -> f64 {
+        3.0
+    }
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+        fit_forest(false, ds, train, cfg, ctx)
+    }
+}
+
+impl Algorithm for ExtraTreesAlgo {
+    fn name(&self) -> &str {
+        "extra_trees"
+    }
+    fn space(&self) -> ConfigSpace {
+        forest_space(true)
+    }
+    fn supports(&self, _task: Task) -> bool {
+        true
+    }
+    fn cost_hint(&self) -> f64 {
+        2.0
+    }
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+        fit_forest(true, ds, train, cfg, ctx)
+    }
+}
+
+// ---- boosting ------------------------------------------------------
+
+pub struct GradientBoostingAlgo;
+pub struct LightGbmAlgo;
+pub struct AdaBoostAlgo;
+simple_fitted!(FittedGbm, boosting::Gbm);
+simple_fitted!(FittedAda, boosting::AdaBoost);
+
+impl Algorithm for GradientBoostingAlgo {
+    fn name(&self) -> &str {
+        "gradient_boosting"
+    }
+    fn space(&self) -> ConfigSpace {
+        ConfigSpace::new()
+            .int("n_estimators", 16, 128, 60)
+            .log_float("learning_rate", 0.01, 0.5, 0.1)
+            .int("max_depth", 2, 6, 3)
+            .float("subsample", 0.5, 1.0, 0.9)
+            .int("min_samples_leaf", 1, 10, 3)
+    }
+    fn supports(&self, _task: Task) -> bool {
+        true
+    }
+    fn cost_hint(&self) -> f64 {
+        4.0
+    }
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+        let rows = fidelity_rows(train, ctx.fidelity, &mut ctx.rng);
+        let p = boosting::GbmParams {
+            n_estimators: cfg.usize_or("n_estimators", 60).max(1),
+            learning_rate: cfg.f64_or("learning_rate", 0.1),
+            max_depth: cfg.usize_or("max_depth", 3).max(1),
+            subsample: cfg.f64_or("subsample", 0.9),
+            min_samples_leaf: cfg.usize_or("min_samples_leaf", 3).max(1),
+            n_bins: 0,
+        };
+        let g = boosting::Gbm::fit(ds, &rows, &p, &mut ctx.rng);
+        Ok(Box::new(FittedGbm(g)))
+    }
+}
+
+impl Algorithm for LightGbmAlgo {
+    fn name(&self) -> &str {
+        "lightgbm"
+    }
+    fn space(&self) -> ConfigSpace {
+        ConfigSpace::new()
+            .int("n_estimators", 16, 128, 60)
+            .log_float("learning_rate", 0.01, 0.5, 0.1)
+            .int("max_depth", 2, 8, 4)
+            .int("n_bins", 8, 64, 32)
+            .float("subsample", 0.5, 1.0, 0.9)
+            .int("min_samples_leaf", 1, 20, 5)
+    }
+    fn supports(&self, _task: Task) -> bool {
+        true
+    }
+    fn cost_hint(&self) -> f64 {
+        3.0
+    }
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+        let rows = fidelity_rows(train, ctx.fidelity, &mut ctx.rng);
+        let p = boosting::GbmParams {
+            n_estimators: cfg.usize_or("n_estimators", 60).max(1),
+            learning_rate: cfg.f64_or("learning_rate", 0.1),
+            max_depth: cfg.usize_or("max_depth", 4).max(1),
+            subsample: cfg.f64_or("subsample", 0.9),
+            min_samples_leaf: cfg.usize_or("min_samples_leaf", 5).max(1),
+            n_bins: cfg.usize_or("n_bins", 32).max(2),
+        };
+        let g = boosting::Gbm::fit(ds, &rows, &p, &mut ctx.rng);
+        Ok(Box::new(FittedGbm(g)))
+    }
+}
+
+impl Algorithm for AdaBoostAlgo {
+    fn name(&self) -> &str {
+        "adaboost"
+    }
+    fn space(&self) -> ConfigSpace {
+        ConfigSpace::new()
+            .int("n_estimators", 16, 96, 40)
+            .log_float("learning_rate", 0.05, 2.0, 1.0)
+            .int("max_depth", 1, 4, 2)
+    }
+    fn supports(&self, _task: Task) -> bool {
+        true
+    }
+    fn cost_hint(&self) -> f64 {
+        2.0
+    }
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+        let rows = fidelity_rows(train, ctx.fidelity, &mut ctx.rng);
+        let p = boosting::AdaParams {
+            n_estimators: cfg.usize_or("n_estimators", 40).max(1),
+            learning_rate: cfg.f64_or("learning_rate", 1.0),
+            max_depth: cfg.usize_or("max_depth", 2).max(1),
+        };
+        let a = boosting::AdaBoost::fit(ds, &rows, &p, &mut ctx.rng);
+        Ok(Box::new(FittedAda(a)))
+    }
+}
+
+// ---- probabilistic arms --------------------------------------------
+
+pub struct GaussianNbAlgo;
+pub struct LdaAlgo;
+pub struct QdaAlgo;
+simple_fitted!(FittedNb, simple::GaussianNb);
+simple_fitted!(FittedDisc, simple::Discriminant);
+
+impl Algorithm for GaussianNbAlgo {
+    fn name(&self) -> &str {
+        "gaussian_nb"
+    }
+    fn space(&self) -> ConfigSpace {
+        ConfigSpace::new().log_float("var_smoothing", 1e-10, 1e-3, 1e-9)
+    }
+    fn supports(&self, task: Task) -> bool {
+        task.is_classification()
+    }
+    fn cost_hint(&self) -> f64 {
+        0.2
+    }
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+        let rows = fidelity_rows(train, ctx.fidelity, &mut ctx.rng);
+        Ok(Box::new(FittedNb(simple::GaussianNb::fit(
+            ds, &rows, cfg.f64_or("var_smoothing", 1e-9)))))
+    }
+}
+
+impl Algorithm for LdaAlgo {
+    fn name(&self) -> &str {
+        "lda"
+    }
+    fn space(&self) -> ConfigSpace {
+        ConfigSpace::new()
+            .float("shrinkage", 0.0, 0.9, 0.1)
+            .cat("solver", &["cholesky"], "cholesky")
+    }
+    fn supports(&self, task: Task) -> bool {
+        task.is_classification()
+    }
+    fn cost_hint(&self) -> f64 {
+        0.4
+    }
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+        let rows = fidelity_rows(train, ctx.fidelity, &mut ctx.rng);
+        let m = simple::Discriminant::fit(ds, &rows, true,
+                                          cfg.f64_or("shrinkage", 0.1))
+            .ok_or_else(|| anyhow::anyhow!("lda: singular covariance"))?;
+        Ok(Box::new(FittedDisc(m)))
+    }
+}
+
+impl Algorithm for QdaAlgo {
+    fn name(&self) -> &str {
+        "qda"
+    }
+    fn space(&self) -> ConfigSpace {
+        ConfigSpace::new().float("reg_param", 0.0, 0.9, 0.1)
+    }
+    fn supports(&self, task: Task) -> bool {
+        task.is_classification()
+    }
+    fn cost_hint(&self) -> f64 {
+        0.5
+    }
+    fn fit(&self, ds: &Dataset, train: &[usize], cfg: &Config,
+           ctx: &mut EvalContext) -> Result<Box<dyn FittedModel>> {
+        let rows = fidelity_rows(train, ctx.fidelity, &mut ctx.rng);
+        let m = simple::Discriminant::fit(ds, &rows, false,
+                                          cfg.f64_or("reg_param", 0.1))
+            .ok_or_else(|| anyhow::anyhow!("qda: singular covariance"))?;
+        Ok(Box::new(FittedDisc(m)))
+    }
+}
+
+// ====================================================================
+// Roster
+// ====================================================================
+
+/// The algorithm roster for a task. PJRT-backed arms are included only
+/// when a runtime is available (artifacts built).
+pub fn roster(task: Task, with_pjrt: bool) -> Vec<Arc<dyn Algorithm>> {
+    let mut v: Vec<Arc<dyn Algorithm>> = vec![
+        Arc::new(DecisionTreeAlgo),
+        Arc::new(RandomForestAlgo),
+        Arc::new(ExtraTreesAlgo),
+        Arc::new(GradientBoostingAlgo),
+        Arc::new(LightGbmAlgo),
+        Arc::new(AdaBoostAlgo),
+    ];
+    if task.is_classification() {
+        v.push(Arc::new(GaussianNbAlgo));
+        v.push(Arc::new(LdaAlgo));
+        v.push(Arc::new(QdaAlgo));
+    }
+    if with_pjrt {
+        v.extend(pjrt::pjrt_roster(task));
+    }
+    v.retain(|a| a.supports(task));
+    v
+}
+
+pub fn algo_by_name(name: &str, task: Task) -> Option<Arc<dyn Algorithm>> {
+    roster(task, true).into_iter().find(|a| a.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GenKind, Profile};
+
+    fn ds(task: Task) -> Dataset {
+        generate(&Profile {
+            name: "roster".into(),
+            task,
+            gen: if task.is_classification() {
+                GenKind::Blobs { sep: 2.0 }
+            } else {
+                GenKind::LinearReg { informative: 4 }
+            },
+            n: 300,
+            d: 8,
+            noise: 0.05,
+            imbalance: 1.0,
+            redundant: 1,
+            wild_scales: false,
+            seed: 3,
+        })
+    }
+
+    #[test]
+    fn native_cls_roster_fits_and_predicts() {
+        let task = Task::Classification { n_classes: 3 };
+        let data = ds(task);
+        let train: Vec<usize> = (0..240).collect();
+        let test: Vec<usize> = (240..300).collect();
+        for algo in roster(task, false) {
+            let mut ctx = EvalContext::new(None, 7);
+            let cfg = algo.space().default_config();
+            let m = algo.fit(&data, &train, &cfg, &mut ctx)
+                .unwrap_or_else(|e| panic!("{} fit: {e}", algo.name()));
+            let p = m.predict(&data, &test, &mut ctx);
+            assert_eq!(p.n(), test.len(), "{}", algo.name());
+            let yt: Vec<f32> = test.iter().map(|&i| data.y[i]).collect();
+            let acc = crate::data::metrics::balanced_accuracy(
+                &yt, &p.argmax_labels());
+            assert!(acc > 0.5, "{} acc={acc}", algo.name());
+        }
+    }
+
+    #[test]
+    fn native_reg_roster_fits_and_predicts() {
+        let task = Task::Regression;
+        let data = ds(task);
+        let train: Vec<usize> = (0..240).collect();
+        let test: Vec<usize> = (240..300).collect();
+        let yt: Vec<f32> = test.iter().map(|&i| data.y[i]).collect();
+        let mean: f32 = yt.iter().sum::<f32>() / yt.len() as f32;
+        let base = crate::data::metrics::mse(&yt, &vec![mean; yt.len()]);
+        for algo in roster(task, false) {
+            let mut ctx = EvalContext::new(None, 8);
+            let cfg = algo.space().default_config();
+            let m = algo.fit(&data, &train, &cfg, &mut ctx)
+                .unwrap_or_else(|e| panic!("{} fit: {e}", algo.name()));
+            let p = m.predict(&data, &test, &mut ctx);
+            let err = crate::data::metrics::mse(&yt, p.values());
+            assert!(err < base, "{}: mse {err} vs baseline {base}",
+                    algo.name());
+        }
+    }
+
+    #[test]
+    fn sampled_configs_never_crash() {
+        let task = Task::Classification { n_classes: 2 };
+        let data = ds(task);
+        let train: Vec<usize> = (0..200).collect();
+        let mut rng = Rng::new(5);
+        for algo in roster(task, false) {
+            let cs = algo.space();
+            for _ in 0..5 {
+                let cfg = cs.sample(&mut rng);
+                let mut ctx = EvalContext::new(None, rng.next_u64());
+                let m = algo.fit(&data, &train, &cfg, &mut ctx);
+                assert!(m.is_ok(), "{} cfg {}", algo.name(), cfg.key());
+            }
+        }
+    }
+
+    #[test]
+    fn fidelity_subsamples_train() {
+        let mut rng = Rng::new(1);
+        let train: Vec<usize> = (100..400).collect();
+        let half = fidelity_rows(&train, 0.5, &mut rng);
+        assert_eq!(half.len(), 150);
+        assert!(half.iter().all(|i| train.contains(i)));
+        let full = fidelity_rows(&train, 1.0, &mut rng);
+        assert_eq!(full.len(), 300);
+    }
+
+    #[test]
+    fn roster_counts_match_design() {
+        assert_eq!(roster(Task::Classification { n_classes: 2 }, false)
+            .len(), 9);
+        assert_eq!(roster(Task::Regression, false).len(), 6);
+    }
+}

@@ -1,0 +1,332 @@
+//! Closed-form probabilistic arms: Gaussian naive Bayes, LDA and QDA —
+//! the fast, low-variance members of the conditioning block's roster.
+
+use crate::data::dataset::{Dataset, Predictions, Task};
+use crate::util::linalg::{cho_solve, Mat};
+
+// ====================================================================
+// Gaussian naive Bayes
+// ====================================================================
+
+#[derive(Clone, Debug)]
+pub struct GaussianNb {
+    priors: Vec<f64>,
+    means: Vec<Vec<f64>>,
+    vars: Vec<Vec<f64>>,
+    n_classes: usize,
+}
+
+impl GaussianNb {
+    pub fn fit(ds: &Dataset, train: &[usize], var_smoothing: f64)
+        -> GaussianNb {
+        assert!(ds.task.is_classification());
+        let k = ds.task.n_classes();
+        let d = ds.d;
+        let mut counts = vec![0usize; k];
+        let mut means = vec![vec![0.0f64; d]; k];
+        for &i in train {
+            let c = ds.label(i).min(k - 1);
+            counts[c] += 1;
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                means[c][j] += v as f64;
+            }
+        }
+        for c in 0..k {
+            for j in 0..d {
+                means[c][j] /= counts[c].max(1) as f64;
+            }
+        }
+        let mut vars = vec![vec![0.0f64; d]; k];
+        let mut max_var: f64 = 1e-12;
+        for &i in train {
+            let c = ds.label(i).min(k - 1);
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                let dlt = v as f64 - means[c][j];
+                vars[c][j] += dlt * dlt;
+            }
+        }
+        for c in 0..k {
+            for j in 0..d {
+                vars[c][j] /= counts[c].max(1) as f64;
+                max_var = max_var.max(vars[c][j]);
+            }
+        }
+        let eps = var_smoothing.max(1e-12) * max_var;
+        for c in 0..k {
+            for j in 0..d {
+                vars[c][j] += eps;
+            }
+        }
+        let n: f64 = counts.iter().sum::<usize>().max(1) as f64;
+        let priors = counts.iter().map(|&c| (c as f64 + 1e-9) / n)
+            .collect();
+        GaussianNb { priors, means, vars, n_classes: k }
+    }
+
+    pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
+        let k = self.n_classes;
+        let mut scores = vec![0.0f32; rows.len() * k];
+        for (r, &i) in rows.iter().enumerate() {
+            let row = ds.row(i);
+            let mut lls = vec![0.0f64; k];
+            for c in 0..k {
+                let mut ll = self.priors[c].ln();
+                for (j, &v) in row.iter().enumerate() {
+                    let var = self.vars[c][j];
+                    let dlt = v as f64 - self.means[c][j];
+                    ll += -0.5 * (2.0 * std::f64::consts::PI * var).ln()
+                        - 0.5 * dlt * dlt / var;
+                }
+                lls[c] = ll;
+            }
+            // softmax the log-likelihoods into calibrated-ish scores
+            let m = lls.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let s: f64 = lls.iter().map(|&l| (l - m).exp()).sum();
+            for c in 0..k {
+                scores[r * k + c] = ((lls[c] - m).exp() / s) as f32;
+            }
+        }
+        Predictions::ClassScores { n_classes: k, scores }
+    }
+}
+
+// ====================================================================
+// LDA / QDA
+// ====================================================================
+
+#[derive(Clone, Debug)]
+pub struct Discriminant {
+    priors: Vec<f64>,
+    means: Vec<Vec<f64>>,
+    /// One inverse-covariance application per class (QDA) or a single
+    /// shared one (LDA). Stored as the covariance matrix; solves are
+    /// done per prediction batch via Cholesky.
+    covs: Vec<Mat>,
+    log_dets: Vec<f64>,
+    shared: bool,
+    n_classes: usize,
+}
+
+impl Discriminant {
+    /// `shrinkage`/`reg_param` shrinks covariance towards a scaled
+    /// identity (LDA: shrinkage; QDA: reg_param — same mechanics).
+    pub fn fit(ds: &Dataset, train: &[usize], shared: bool, reg: f64)
+        -> Option<Discriminant> {
+        assert!(ds.task.is_classification());
+        let k = ds.task.n_classes();
+        let d = ds.d;
+        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for &i in train {
+            by_class[ds.label(i).min(k - 1)].push(i);
+        }
+        let n: f64 = train.len() as f64;
+        let priors: Vec<f64> = by_class
+            .iter()
+            .map(|m| (m.len() as f64 + 1e-9) / n)
+            .collect();
+        let means: Vec<Vec<f64>> = by_class
+            .iter()
+            .map(|m| {
+                if m.is_empty() {
+                    vec![0.0; d]
+                } else {
+                    ds.col_stats(m).0
+                }
+            })
+            .collect();
+
+        let cov_of = |members: &[&Vec<usize>], means_of: &dyn Fn(usize) -> usize| -> Mat {
+            let mut cov = Mat::zeros(d, d);
+            let mut count = 0.0f64;
+            for (ci, rows) in members.iter().enumerate() {
+                for &i in rows.iter() {
+                    let mu = &means[means_of(ci)];
+                    let row = ds.row(i);
+                    for a in 0..d {
+                        let da = row[a] as f64 - mu[a];
+                        for b in a..d {
+                            let v = da * (row[b] as f64 - mu[b]);
+                            cov[(a, b)] += v;
+                        }
+                    }
+                    count += 1.0;
+                }
+            }
+            for a in 0..d {
+                for b in 0..a {
+                    cov[(a, b)] = cov[(b, a)];
+                }
+            }
+            for a in 0..d {
+                for b in a + 1..d {
+                    cov[(b, a)] = cov[(a, b)];
+                }
+            }
+            cov.scale(1.0 / count.max(1.0));
+            cov
+        };
+
+        let regularise = |mut cov: Mat| -> Mat {
+            let trace: f64 = (0..d).map(|i| cov[(i, i)]).sum::<f64>()
+                .max(1e-9);
+            let avg = trace / d as f64;
+            for a in 0..d {
+                for b in 0..d {
+                    cov[(a, b)] *= 1.0 - reg;
+                }
+                cov[(a, a)] += reg * avg + 1e-9;
+            }
+            cov
+        };
+
+        let (covs, log_dets): (Vec<Mat>, Vec<f64>) = if shared {
+            let refs: Vec<&Vec<usize>> = by_class.iter().collect();
+            let cov = regularise(cov_of(&refs, &|ci| ci));
+            let ld = log_det(&cov)?;
+            (vec![cov], vec![ld])
+        } else {
+            let mut cs = Vec::with_capacity(k);
+            let mut lds = Vec::with_capacity(k);
+            for c in 0..k {
+                let refs: Vec<&Vec<usize>> = vec![&by_class[c]];
+                let cov = regularise(cov_of(&refs, &move |_| c));
+                lds.push(log_det(&cov)?);
+                cs.push(cov);
+            }
+            (cs, lds)
+        };
+        Some(Discriminant { priors, means, covs, log_dets, shared,
+                            n_classes: k })
+    }
+
+    pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
+        let k = self.n_classes;
+        let d = ds.d;
+        let mut scores = vec![0.0f32; rows.len() * k];
+        for (r, &i) in rows.iter().enumerate() {
+            let row = ds.row(i);
+            let mut lls = vec![f64::NEG_INFINITY; k];
+            for c in 0..k {
+                let cov = if self.shared { &self.covs[0] }
+                          else { &self.covs[c] };
+                let ld = if self.shared { self.log_dets[0] }
+                         else { self.log_dets[c] };
+                let diff: Vec<f64> = (0..d)
+                    .map(|j| row[j] as f64 - self.means[c][j])
+                    .collect();
+                if let Some(sol) = cho_solve(cov, &diff) {
+                    let maha = crate::util::linalg::dot(&diff, &sol);
+                    lls[c] = self.priors[c].ln() - 0.5 * maha - 0.5 * ld;
+                }
+            }
+            let m = lls.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let s: f64 = lls.iter().map(|&l| (l - m).exp()).sum();
+            for c in 0..k {
+                scores[r * k + c] = ((lls[c] - m).exp() / s.max(1e-300))
+                    as f32;
+            }
+        }
+        Predictions::ClassScores { n_classes: k, scores }
+    }
+}
+
+fn log_det(cov: &Mat) -> Option<f64> {
+    let l = crate::util::linalg::cholesky(cov)?;
+    Some(2.0 * (0..cov.rows).map(|i| l[(i, i)].ln()).sum::<f64>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::metrics::balanced_accuracy;
+    use crate::data::synthetic::{generate, GenKind, Profile};
+
+    fn blob_ds(k: usize, sep: f64) -> Dataset {
+        generate(&Profile {
+            name: "s".into(),
+            task: Task::Classification { n_classes: k },
+            gen: GenKind::Blobs { sep },
+            n: 500,
+            d: 6,
+            noise: 0.02,
+            imbalance: 1.5,
+            redundant: 1,
+            wild_scales: false,
+            seed: 77,
+        })
+    }
+
+    fn acc_of(preds: &Predictions, ds: &Dataset, rows: &[usize]) -> f64 {
+        let yt: Vec<f32> = rows.iter().map(|&i| ds.y[i]).collect();
+        balanced_accuracy(&yt, &preds.argmax_labels())
+    }
+
+    #[test]
+    fn nb_separates_blobs() {
+        let ds = blob_ds(3, 2.5);
+        let train: Vec<usize> = (0..400).collect();
+        let test: Vec<usize> = (400..500).collect();
+        let nb = GaussianNb::fit(&ds, &train, 1e-9);
+        assert!(acc_of(&nb.predict(&ds, &test), &ds, &test) > 0.9);
+    }
+
+    #[test]
+    fn nb_scores_are_probabilities() {
+        let ds = blob_ds(2, 1.0);
+        let train: Vec<usize> = (0..400).collect();
+        let nb = GaussianNb::fit(&ds, &train, 1e-9);
+        let rows: Vec<usize> = (400..450).collect();
+        let p = nb.predict(&ds, &rows);
+        for r in 0..rows.len() {
+            let s: f32 = p.score_row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn lda_beats_qda_on_shared_covariance_blobs() {
+        let ds = blob_ds(3, 1.2);
+        let train: Vec<usize> = (0..150).collect(); // few samples
+        let test: Vec<usize> = (400..500).collect();
+        let lda = Discriminant::fit(&ds, &train, true, 0.1).unwrap();
+        let qda = Discriminant::fit(&ds, &train, false, 0.1).unwrap();
+        let a_lda = acc_of(&lda.predict(&ds, &test), &ds, &test);
+        let a_qda = acc_of(&qda.predict(&ds, &test), &ds, &test);
+        assert!(a_lda > 0.75, "lda={a_lda}");
+        assert!(a_qda > 0.6, "qda={a_qda}");
+    }
+
+    #[test]
+    fn qda_handles_class_specific_scales() {
+        // class 0 tight, class 1 spread: QDA should classify well
+        let mut ds = Dataset::new("q", Task::Classification { n_classes: 2 }, 2);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for i in 0..400 {
+            if i % 2 == 0 {
+                ds.push_row(&[(rng.normal() * 0.3) as f32,
+                              (rng.normal() * 0.3) as f32], 0.0);
+            } else {
+                ds.push_row(&[(rng.normal() * 3.0) as f32,
+                              (rng.normal() * 3.0) as f32], 1.0);
+            }
+        }
+        let train: Vec<usize> = (0..300).collect();
+        let test: Vec<usize> = (300..400).collect();
+        let qda = Discriminant::fit(&ds, &train, false, 0.05).unwrap();
+        assert!(acc_of(&qda.predict(&ds, &test), &ds, &test) > 0.8);
+    }
+
+    #[test]
+    fn degenerate_features_do_not_crash() {
+        // constant feature => singular covariance; jitter must save us
+        let mut ds = Dataset::new("c", Task::Classification { n_classes: 2 }, 2);
+        for i in 0..100 {
+            ds.push_row(&[1.0, i as f32 % 2.0], (i % 2) as f32);
+        }
+        let train: Vec<usize> = (0..100).collect();
+        let lda = Discriminant::fit(&ds, &train, true, 0.0);
+        assert!(lda.is_some());
+        let p = lda.unwrap().predict(&ds, &[0, 1]);
+        assert_eq!(p.argmax_labels().len(), 2);
+    }
+}

@@ -1,0 +1,467 @@
+//! CART decision trees — the shared substrate for the tree-family
+//! algorithm arms (decision tree, random forest, extra-trees, gradient
+//! boosting, AdaBoost, histogram-GBM).
+//!
+//! Works on raw row-major f32 features with f64 targets so boosting can
+//! fit trees on residuals without copying datasets. Classification
+//! leaves store class distributions; regression leaves store means.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Criterion {
+    Gini,
+    Entropy,
+    Mse,
+}
+
+#[derive(Clone, Debug)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    /// Fraction of features examined per split (0, 1].
+    pub max_features: f64,
+    pub criterion: Criterion,
+    /// Extra-trees style: one random threshold per feature instead of
+    /// an exhaustive scan.
+    pub random_thresholds: bool,
+    /// 0 for regression.
+    pub n_classes: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 10,
+            min_samples_split: 2,
+            min_samples_leaf: 1,
+            max_features: 1.0,
+            criterion: Criterion::Gini,
+            random_thresholds: false,
+            n_classes: 2,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Split { feature: usize, thresh: f32, left: usize, right: usize },
+    /// Class distribution (classification) or single mean (regression).
+    Leaf(Vec<f64>),
+}
+
+#[derive(Clone, Debug)]
+pub struct Tree {
+    nodes: Vec<Node>,
+    pub n_classes: usize,
+}
+
+struct Stats {
+    counts: Vec<f64>, // class counts, or [sum, sumsq] for regression
+    n: f64,
+}
+
+impl Stats {
+    fn new(k: usize) -> Stats {
+        Stats { counts: vec![0.0; k.max(2)], n: 0.0 }
+    }
+    fn add(&mut self, y: f64, cls: bool) {
+        self.n += 1.0;
+        if cls {
+            self.counts[y as usize] += 1.0;
+        } else {
+            self.counts[0] += y;
+            self.counts[1] += y * y;
+        }
+    }
+    fn sub(&mut self, y: f64, cls: bool) {
+        self.n -= 1.0;
+        if cls {
+            self.counts[y as usize] -= 1.0;
+        } else {
+            self.counts[0] -= y;
+            self.counts[1] -= y * y;
+        }
+    }
+    fn impurity(&self, crit: Criterion) -> f64 {
+        if self.n <= 0.0 {
+            return 0.0;
+        }
+        match crit {
+            Criterion::Gini => {
+                let mut g = 1.0;
+                for &c in &self.counts {
+                    let p = c / self.n;
+                    g -= p * p;
+                }
+                g
+            }
+            Criterion::Entropy => {
+                let mut h = 0.0;
+                for &c in &self.counts {
+                    if c > 0.0 {
+                        let p = c / self.n;
+                        h -= p * p.log2();
+                    }
+                }
+                h
+            }
+            Criterion::Mse => {
+                let mean = self.counts[0] / self.n;
+                (self.counts[1] / self.n - mean * mean).max(0.0)
+            }
+        }
+    }
+}
+
+impl Tree {
+    /// Fit on rows of `x` (row-major, `d` columns) with targets `y`
+    /// (class index as f64 for classification).
+    pub fn fit(x: &[f32], d: usize, y: &[f64], rows: &[usize],
+               p: &TreeParams, rng: &mut Rng) -> Tree {
+        assert!(d > 0, "empty feature matrix");
+        let mut t = Tree { nodes: Vec::new(), n_classes: p.n_classes };
+        let mut rows = rows.to_vec();
+        t.grow(x, d, y, &mut rows, p, rng, 0);
+        t
+    }
+
+    fn leaf_value(&self, y: &[f64], rows: &[usize], p: &TreeParams)
+        -> Vec<f64> {
+        if p.n_classes > 0 {
+            let mut dist = vec![0.0; p.n_classes];
+            for &i in rows {
+                dist[(y[i] as usize).min(p.n_classes - 1)] += 1.0;
+            }
+            let n = rows.len().max(1) as f64;
+            for v in &mut dist {
+                *v /= n;
+            }
+            dist
+        } else {
+            let mean = rows.iter().map(|&i| y[i]).sum::<f64>()
+                / rows.len().max(1) as f64;
+            vec![mean]
+        }
+    }
+
+    /// Recursively grow; returns the node index. `rows` is reordered
+    /// in-place (partitioning) to avoid allocation per node.
+    fn grow(&mut self, x: &[f32], d: usize, y: &[f64],
+            rows: &mut [usize], p: &TreeParams, rng: &mut Rng,
+            depth: usize) -> usize {
+        let make_leaf = |t: &mut Tree, rows: &[usize]| {
+            let v = t.leaf_value(y, rows, p);
+            t.nodes.push(Node::Leaf(v));
+            t.nodes.len() - 1
+        };
+        if depth >= p.max_depth
+            || rows.len() < p.min_samples_split
+            || rows.len() < 2 * p.min_samples_leaf
+        {
+            return make_leaf(self, rows);
+        }
+        // pure node?
+        let cls = p.n_classes > 0;
+        if cls {
+            let first = y[rows[0]];
+            if rows.iter().all(|&i| y[i] == first) {
+                return make_leaf(self, rows);
+            }
+        }
+
+        let n_feat = ((d as f64 * p.max_features).ceil() as usize)
+            .clamp(1, d);
+        let feats = rng.sample_indices(d, n_feat);
+
+        let mut best: Option<(f64, usize, f32)> = None; // (gain, feat, thr)
+        let mut scratch: Vec<(f32, f64)> = Vec::with_capacity(rows.len());
+
+        let mut parent = Stats::new(p.n_classes);
+        for &i in rows.iter() {
+            parent.add(y[i], cls);
+        }
+        let parent_imp = parent.impurity(p.criterion);
+        if parent_imp <= 1e-12 {
+            return make_leaf(self, rows);
+        }
+
+        for &f in &feats {
+            scratch.clear();
+            for &i in rows.iter() {
+                scratch.push((x[i * d + f], y[i]));
+            }
+            if p.random_thresholds {
+                let lo = scratch.iter().map(|s| s.0).fold(f32::INFINITY,
+                                                          f32::min);
+                let hi = scratch.iter().map(|s| s.0)
+                    .fold(f32::NEG_INFINITY, f32::max);
+                if hi <= lo {
+                    continue;
+                }
+                let thr = rng.uniform(lo as f64, hi as f64) as f32;
+                let mut left = Stats::new(p.n_classes);
+                let mut right = Stats::new(p.n_classes);
+                for &(v, yy) in &scratch {
+                    if v <= thr {
+                        left.add(yy, cls);
+                    } else {
+                        right.add(yy, cls);
+                    }
+                }
+                if left.n < p.min_samples_leaf as f64
+                    || right.n < p.min_samples_leaf as f64 {
+                    continue;
+                }
+                let gain = parent_imp
+                    - (left.n * left.impurity(p.criterion)
+                        + right.n * right.impurity(p.criterion))
+                        / parent.n;
+                if gain > best.map(|b| b.0).unwrap_or(1e-9) {
+                    best = Some((gain, f, thr));
+                }
+            } else {
+                // hot loop: total_cmp + unstable sort is measurably
+                // faster than partial_cmp with an Ordering fallback
+                scratch.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+                let mut left = Stats::new(p.n_classes);
+                let mut right = Stats::new(p.n_classes);
+                for &(_, yy) in &scratch {
+                    right.add(yy, cls);
+                }
+                for w in 0..scratch.len() - 1 {
+                    let (v, yy) = scratch[w];
+                    left.add(yy, cls);
+                    right.sub(yy, cls);
+                    let next_v = scratch[w + 1].0;
+                    if v == next_v {
+                        continue;
+                    }
+                    if left.n < p.min_samples_leaf as f64
+                        || right.n < p.min_samples_leaf as f64 {
+                        continue;
+                    }
+                    let gain = parent_imp
+                        - (left.n * left.impurity(p.criterion)
+                            + right.n * right.impurity(p.criterion))
+                            / parent.n;
+                    if gain > best.map(|b| b.0).unwrap_or(1e-9) {
+                        best = Some((gain, f, (v + next_v) / 2.0));
+                    }
+                }
+            }
+        }
+
+        let (gain, feat, thr) = match best {
+            Some(b) if b.0 > 1e-9 => b,
+            _ => return make_leaf(self, rows),
+        };
+        let _ = gain;
+
+        // partition rows in place
+        let mut lo = 0usize;
+        let mut hi = rows.len();
+        while lo < hi {
+            if x[rows[lo] * d + feat] <= thr {
+                lo += 1;
+            } else {
+                hi -= 1;
+                rows.swap(lo, hi);
+            }
+        }
+        if lo == 0 || lo == rows.len() {
+            return make_leaf(self, rows);
+        }
+
+        let node_idx = self.nodes.len();
+        self.nodes.push(Node::Split { feature: feat, thresh: thr,
+                                      left: 0, right: 0 });
+        let (lrows, rrows) = rows.split_at_mut(lo);
+        let li = self.grow(x, d, y, lrows, p, rng, depth + 1);
+        let ri = self.grow(x, d, y, rrows, p, rng, depth + 1);
+        if let Node::Split { left, right, .. } = &mut self.nodes[node_idx] {
+            *left = li;
+            *right = ri;
+        }
+        node_idx
+    }
+
+    /// Leaf payload for one row (class distribution or [mean]).
+    pub fn predict_row<'a>(&'a self, row: &[f32]) -> &'a [f64] {
+        // the root is the first node pushed *after* its subtrees when
+        // the tree has splits; track via explicit root search: the root
+        // is node 0 only for leaf-only trees. We store root implicitly:
+        // grow() pushes the root split before children, so node with
+        // index `self.root()` is fine.
+        let mut idx = self.root();
+        loop {
+            match &self.nodes[idx] {
+                Node::Leaf(v) => return v,
+                Node::Split { feature, thresh, left, right } => {
+                    idx = if row.get(*feature).copied().unwrap_or(0.0)
+                        <= *thresh { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    fn root(&self) -> usize {
+        0
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn rec(nodes: &[Node], i: usize) -> usize {
+            match &nodes[i] {
+                Node::Leaf(_) => 1,
+                Node::Split { left, right, .. } => {
+                    1 + rec(nodes, *left).max(rec(nodes, *right))
+                }
+            }
+        }
+        if self.nodes.is_empty() { 0 } else { rec(&self.nodes, 0) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_data(n: usize, seed: u64) -> (Vec<f32>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * 2);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = rng.uniform(-1.0, 1.0);
+            let b = rng.uniform(-1.0, 1.0);
+            x.push(a as f32);
+            x.push(b as f32);
+            y.push(if a * b > 0.0 { 1.0 } else { 0.0 });
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_xor_exactly() {
+        let (x, y) = xor_data(400, 0);
+        let rows: Vec<usize> = (0..400).collect();
+        let p = TreeParams { max_depth: 6, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let t = Tree::fit(&x, 2, &y, &rows, &p, &mut rng);
+        let mut hits = 0;
+        for i in 0..400 {
+            let dist = t.predict_row(&x[i * 2..i * 2 + 2]);
+            let pred = if dist[1] > dist[0] { 1.0 } else { 0.0 };
+            if pred == y[i] {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 392, "hits={hits}");
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let (x, y) = xor_data(300, 2);
+        let rows: Vec<usize> = (0..300).collect();
+        let p = TreeParams { max_depth: 3, ..Default::default() };
+        let mut rng = Rng::new(3);
+        let t = Tree::fit(&x, 2, &y, &rows, &p, &mut rng);
+        assert!(t.depth() <= 4); // split nodes + leaf level
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let (x, y) = xor_data(100, 4);
+        let rows: Vec<usize> = (0..100).collect();
+        let p = TreeParams {
+            min_samples_leaf: 40,
+            max_depth: 8,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(5);
+        let t = Tree::fit(&x, 2, &y, &rows, &p, &mut rng);
+        // with leaves >= 40 of 100 samples, at most 1 split chain
+        assert!(t.n_nodes() <= 5, "nodes={}", t.n_nodes());
+    }
+
+    #[test]
+    fn regression_tree_fits_step_function() {
+        let mut rng = Rng::new(6);
+        let n = 300;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let v = rng.uniform(-1.0, 1.0);
+            x.push(v as f32);
+            y.push(if v > 0.25 { 3.0 } else { -1.0 });
+        }
+        let rows: Vec<usize> = (0..n).collect();
+        let p = TreeParams {
+            criterion: Criterion::Mse,
+            n_classes: 0,
+            max_depth: 3,
+            ..Default::default()
+        };
+        let t = Tree::fit(&x, 1, &y, &rows, &p, &mut rng);
+        assert!((t.predict_row(&[0.5])[0] - 3.0).abs() < 0.1);
+        assert!((t.predict_row(&[-0.5])[0] + 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn pure_node_becomes_leaf() {
+        let x = vec![0.0f32; 10];
+        let y = vec![1.0f64; 10];
+        let rows: Vec<usize> = (0..10).collect();
+        let p = TreeParams::default();
+        let mut rng = Rng::new(7);
+        let t = Tree::fit(&x, 1, &y, &rows, &p, &mut rng);
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.predict_row(&[0.0])[1], 1.0);
+    }
+
+    #[test]
+    fn random_thresholds_still_learn() {
+        let (x, y) = xor_data(500, 8);
+        let rows: Vec<usize> = (0..500).collect();
+        let p = TreeParams {
+            random_thresholds: true,
+            max_depth: 10,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(9);
+        let t = Tree::fit(&x, 2, &y, &rows, &p, &mut rng);
+        let mut hits = 0;
+        for i in 0..500 {
+            let dist = t.predict_row(&x[i * 2..i * 2 + 2]);
+            if (dist[1] > dist[0]) == (y[i] == 1.0) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 440, "hits={hits}");
+    }
+
+    #[test]
+    fn entropy_criterion_works() {
+        let (x, y) = xor_data(300, 10);
+        let rows: Vec<usize> = (0..300).collect();
+        let p = TreeParams {
+            criterion: Criterion::Entropy,
+            max_depth: 6,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(11);
+        let t = Tree::fit(&x, 2, &y, &rows, &p, &mut rng);
+        let mut hits = 0;
+        for i in 0..300 {
+            let dist = t.predict_row(&x[i * 2..i * 2 + 2]);
+            if (dist[1] > dist[0]) == (y[i] == 1.0) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 285);
+    }
+}

@@ -1,0 +1,360 @@
+//! Bench harness (no `criterion` offline): wall-clock timing with
+//! warmup + repetition statistics, and an ASCII table printer used by
+//! every `benches/*.rs` target to render the paper's tables/figures.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmarked closure.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn per_iter_label(&self) -> String {
+        fmt_duration(self.mean_s)
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark `f` with `warmup` unmeasured runs then `iters` measured
+/// runs; returns per-run statistics.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = crate::util::stats::mean(&samples);
+    let std = crate::util::stats::std_dev(&samples);
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0, f64::max);
+    Timing {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_s: mean,
+        std_s: std,
+        min_s: min,
+        max_s: max,
+    }
+}
+
+/// ASCII table printer (right-aligned numeric columns) for paper-style
+/// result tables.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn row_f(&mut self, name: &str, vals: &[f64], prec: usize) {
+        let mut cells = vec![name.to_string()];
+        cells.extend(vals.iter().map(|v| format!("{v:.prec$}")));
+        self.row(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i == 0 {
+                    line.push_str(&format!(" {:<w$} ", cells[i],
+                                           w = widths[i]));
+                } else {
+                    line.push_str(&format!("| {:>w$} ", cells[i],
+                                           w = widths[i]));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Render an ASCII "figure": one labelled series of (x, y) points as a
+/// compact text curve — used to reproduce the paper's figures in
+/// terminal output and bench logs.
+pub fn render_curves(title: &str, xlabel: &str,
+                     series: &[(String, Vec<(f64, f64)>)]) -> String {
+    let mut out = format!("\n== {title} ==   (x = {xlabel})\n");
+    for (name, pts) in series {
+        out.push_str(&format!("  {name:>24}: "));
+        for (x, y) in pts {
+            out.push_str(&format!("({x:.4}, {y:.4}) "));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let t = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(t.mean_s > 0.0);
+        assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s + 1e-12);
+        assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["sys", "a", "b"]);
+        t.row_f("volcano", &[1.25, 2.0], 2);
+        t.row_f("ausk", &[10.5, 0.125], 2);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("volcano"));
+        assert!(s.contains("10.50"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(2.5e-9).contains("ns"));
+        assert!(fmt_duration(3.0e-5).contains("µs"));
+        assert!(fmt_duration(0.25).contains("ms"));
+        assert!(fmt_duration(2.0).contains("s"));
+    }
+
+    #[test]
+    #[should_panic(expected = "table row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}
+
+// ====================================================================
+// Experiment-scale support for the paper-table bench targets
+// ====================================================================
+
+/// Experiment scale, controlled by `VOLCANO_BENCH=quick|std|full`.
+/// `quick` (default) shrinks datasets / budgets so the whole table
+/// suite completes on one CPU core; `full` uses the DESIGN.md scaled
+/// budgets.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchScale {
+    /// cap on datasets per corpus
+    pub datasets_cap: usize,
+    /// cap on rows per dataset
+    pub n_cap: usize,
+    /// evaluation budget per system run
+    pub evals: usize,
+    /// repetitions (seeds) per cell
+    pub reps: usize,
+}
+
+pub fn bench_scale() -> BenchScale {
+    match std::env::var("VOLCANO_BENCH").as_deref() {
+        Ok("full") => BenchScale {
+            datasets_cap: usize::MAX,
+            n_cap: usize::MAX,
+            evals: 150,
+            reps: 3,
+        },
+        Ok("std") => BenchScale {
+            datasets_cap: 10,
+            n_cap: 1200,
+            evals: 60,
+            reps: 1,
+        },
+        _ => BenchScale {
+            datasets_cap: 4,
+            n_cap: 600,
+            evals: 20,
+            reps: 1,
+        },
+    }
+}
+
+/// Shrink a registry profile to the bench scale.
+pub fn shrink_profile(mut p: crate::data::synthetic::Profile,
+                      scale: &BenchScale)
+    -> crate::data::synthetic::Profile {
+    p.n = p.n.min(scale.n_cap);
+    p
+}
+
+/// Where bench targets drop machine-readable results.
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+pub fn save_results(name: &str, v: &crate::util::json::Json) {
+    let path = results_dir().join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, v.to_string()) {
+        eprintln!("warn: could not write {}: {e}", path.display());
+    } else {
+        println!("[results -> {}]", path.display());
+    }
+}
+
+/// Open the PJRT runtime if artifacts are built (bench targets degrade
+/// to the native roster otherwise, with a warning).
+pub fn try_runtime() -> Option<crate::runtime::Runtime> {
+    let dir = crate::runtime::Runtime::default_dir();
+    match crate::runtime::Runtime::new(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("warn: PJRT runtime unavailable ({e}); \
+                       running with native arms only");
+            None
+        }
+    }
+}
+
+/// Result grid of systems x datasets.
+pub struct Matrix {
+    pub datasets: Vec<String>,
+    pub systems: Vec<String>,
+    /// utility[ds][sys] (higher better)
+    pub utility: Vec<Vec<f64>>,
+    /// natural metric value[ds][sys]
+    pub metric_value: Vec<Vec<f64>>,
+}
+
+impl Matrix {
+    pub fn average_ranks(&self) -> Vec<f64> {
+        crate::util::stats::average_ranks(&self.utility, true, 1e-4)
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("datasets", Json::arr_str(&self.datasets)),
+            ("systems", Json::arr_str(&self.systems)),
+            ("utility", Json::Arr(self.utility.iter()
+                .map(|r| Json::arr_f64(r)).collect())),
+            ("metric_value", Json::Arr(self.metric_value.iter()
+                .map(|r| Json::arr_f64(r)).collect())),
+        ])
+    }
+}
+
+/// Run every system on every dataset profile (the shared shape of the
+/// paper's table experiments). Metric chosen per task (balanced
+/// accuracy / MSE). Failures score at the crash floor.
+pub fn run_matrix(profiles: &[crate::data::synthetic::Profile],
+                  systems: &[crate::baselines::SystemKind],
+                  scale: crate::coordinator::SpaceScale,
+                  evals: usize, seed: u64,
+                  corpus: Option<&crate::meta::MetaCorpus>,
+                  runtime: Option<&crate::runtime::Runtime>) -> Matrix {
+    use crate::baselines::{run_system, BaseSpec};
+    let mut utility = Vec::new();
+    let mut metric_value = Vec::new();
+    for profile in profiles {
+        let ds = crate::data::synthetic::generate(profile);
+        let metric = if ds.task.is_classification() {
+            crate::data::metrics::Metric::BalancedAccuracy
+        } else {
+            crate::data::metrics::Metric::Mse
+        };
+        let spec = BaseSpec {
+            scale,
+            metric,
+            max_evals: evals,
+            budget_secs: f64::INFINITY,
+            seed,
+        };
+        let mut urow = Vec::new();
+        let mut mrow = Vec::new();
+        let t0 = std::time::Instant::now();
+        for &sys in systems {
+            match run_system(sys, &ds, &spec, corpus, runtime) {
+                Ok(out) => {
+                    urow.push(out.ensemble_test_utility
+                        .max(out.test_utility));
+                    mrow.push(out.test_metric_value);
+                }
+                Err(e) => {
+                    eprintln!("  {} on {}: {e}", sys.name(), ds.name);
+                    urow.push(f64::NEG_INFINITY);
+                    mrow.push(f64::NAN);
+                }
+            }
+        }
+        eprintln!("  [{}] done in {:.1}s", ds.name,
+                  t0.elapsed().as_secs_f64());
+        utility.push(urow);
+        metric_value.push(mrow);
+    }
+    Matrix {
+        datasets: profiles.iter().map(|p| p.name.clone()).collect(),
+        systems: systems.iter().map(|s| s.name()).collect(),
+        utility,
+        metric_value,
+    }
+}

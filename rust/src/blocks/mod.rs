@@ -1,0 +1,777 @@
+//! VolcanoML building blocks (§3.2–3.3): the joint, conditioning and
+//! alternating blocks with the paper's interfaces — `do_next!`,
+//! `get_current_best`, `get_eu` (expected-utility interval, used by
+//! the rising-bandit elimination), `get_eui` (expected utility
+//! improvement, used by the alternating block) and `set_var`.
+//!
+//! Blocks optimise a black-box [`Objective`] over *subspaces*: each
+//! block owns a free subspace plus a `fixed` partial assignment
+//! (`f[x̄_g/c̄_g]` in the paper); evaluations always submit the merged
+//! full configuration.
+
+use anyhow::Result;
+
+use crate::opt::multifidelity::{HyperbandFamily, MfOptimizer};
+use crate::opt::{Evolutionary, Optimizer, RandomSearch, SmacBo};
+use crate::space::{Config, ConfigSpace};
+use crate::util::rng::Rng;
+
+/// The black-box function f(x; D): evaluate a full configuration at a
+/// fidelity, returning a *utility* (higher is better).
+pub trait Objective {
+    fn evaluate(&mut self, cfg: &Config, fidelity: f64) -> Result<f64>;
+    /// True when the budget is exhausted; blocks stop issuing work.
+    fn exhausted(&self) -> bool;
+}
+
+pub struct Env<'a> {
+    pub obj: &'a mut dyn Objective,
+    pub rng: &'a mut Rng,
+}
+
+pub trait BuildingBlock {
+    fn name(&self) -> String;
+    /// One Volcano-style iteration (recursively invokes children).
+    fn do_next(&mut self, env: &mut Env) -> Result<()>;
+    /// Best (full config, utility) observed in this subtree.
+    fn current_best(&self) -> Option<(Config, f64)>;
+    /// Expected-utility interval after `k` more iterations
+    /// (rising-bandit bounds, see §3.3.2 / [53]).
+    fn get_eu(&self, k: f64) -> (f64, f64);
+    /// Expected utility improvement (mean of observed improvements,
+    /// Levine et al. rotting bandits).
+    fn get_eui(&self) -> f64;
+    /// Fix variables of the *enclosing* decomposition (paper's
+    /// `set_var`): merged into every future evaluation.
+    fn set_var(&mut self, fixed: &Config);
+    fn n_evals(&self) -> usize;
+    /// Number of live arms (1 for non-conditioning blocks) — drives
+    /// the Fig 12 active-arm trend.
+    fn active_children(&self) -> usize {
+        1
+    }
+    /// All (full config, utility) observations in this subtree, in
+    /// evaluation order (feeds the ensemble and meta-corpus).
+    fn observations(&self) -> Vec<(Config, f64)>;
+    /// Downcasting hook (continue-tuning drivers need the concrete
+    /// ConditioningBlock to extend its arms, §3.3.6).
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
+
+// ====================================================================
+// Joint block
+// ====================================================================
+
+/// Which engine a joint block runs (§3.3.1: vanilla BO by default;
+/// VolcanoML+ uses MFES-HB; random is a testing baseline).
+pub enum JointEngine {
+    Bo(SmacBo),
+    Random(RandomSearch),
+    /// TPOT-style evolutionary search (genetic pipeline optimizer).
+    Evo(Evolutionary),
+    Mf(HyperbandFamily),
+}
+
+pub struct JointBlock {
+    pub label: String,
+    space: ConfigSpace,
+    fixed: Config,
+    engine: JointEngine,
+    /// (full config, utility) in evaluation order.
+    history: Vec<(Config, f64)>,
+    /// best-so-far curve (same length as history).
+    best_curve: Vec<f64>,
+}
+
+impl JointBlock {
+    pub fn bo(label: &str, space: ConfigSpace, fixed: Config, seed: u64)
+        -> JointBlock {
+        let engine = JointEngine::Bo(SmacBo::new(space.clone(), seed));
+        JointBlock::with_engine(label, space, fixed, engine)
+    }
+
+    pub fn with_engine(label: &str, space: ConfigSpace, fixed: Config,
+                       engine: JointEngine) -> JointBlock {
+        JointBlock {
+            label: label.to_string(),
+            space,
+            fixed,
+            engine,
+            history: Vec::new(),
+            best_curve: Vec::new(),
+        }
+    }
+
+    pub fn space(&self) -> &ConfigSpace {
+        &self.space
+    }
+
+    fn record(&mut self, full: Config, y: f64) {
+        let prev = self.best_curve.last().copied()
+            .unwrap_or(f64::NEG_INFINITY);
+        self.best_curve.push(prev.max(y));
+        self.history.push((full, y));
+    }
+}
+
+impl BuildingBlock for JointBlock {
+    fn name(&self) -> String {
+        format!("joint[{}]", self.label)
+    }
+
+    fn do_next(&mut self, env: &mut Env) -> Result<()> {
+        if env.obj.exhausted() {
+            return Ok(());
+        }
+        match &mut self.engine {
+            JointEngine::Bo(bo) => {
+                let sub = bo.suggest(env.rng);
+                let full = self.fixed.merged(&sub);
+                let y = env.obj.evaluate(&full, 1.0)?;
+                bo.observe(sub, y);
+                self.record(full, y);
+            }
+            JointEngine::Random(rs) => {
+                let sub = rs.suggest(env.rng);
+                let full = self.fixed.merged(&sub);
+                let y = env.obj.evaluate(&full, 1.0)?;
+                rs.observe(sub, y);
+                self.record(full, y);
+            }
+            JointEngine::Evo(ev) => {
+                let sub = ev.suggest(env.rng);
+                let full = self.fixed.merged(&sub);
+                let y = env.obj.evaluate(&full, 1.0)?;
+                ev.observe(sub, y);
+                self.record(full, y);
+            }
+            JointEngine::Mf(mf) => {
+                let (sub, fid) = mf.suggest(env.rng);
+                let full = self.fixed.merged(&sub);
+                let y = env.obj.evaluate(&full, fid)?;
+                mf.observe(sub, fid, y);
+                // only count full-fidelity results toward the best
+                if fid >= 1.0 {
+                    self.record(full, y);
+                } else {
+                    let prev = self.best_curve.last().copied()
+                        .unwrap_or(f64::NEG_INFINITY);
+                    self.best_curve.push(prev);
+                    self.history.push((full, f64::NEG_INFINITY.max(y)));
+                    // history keeps the low-fidelity value for the
+                    // record but best_curve ignores it
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn current_best(&self) -> Option<(Config, f64)> {
+        let (mut best, mut by) = (None, f64::NEG_INFINITY);
+        for (i, (cfg, y)) in self.history.iter().enumerate() {
+            // skip low-fidelity entries (best_curve didn't move and y
+            // below it)
+            let curve = self.best_curve[i];
+            if *y >= curve - 1e-12 && *y > by {
+                by = *y;
+                best = Some(cfg.clone());
+            }
+        }
+        best.map(|c| (c, by))
+    }
+
+    fn get_eu(&self, k: f64) -> (f64, f64) {
+        let n = self.best_curve.len();
+        if n == 0 {
+            return (f64::NEG_INFINITY, f64::INFINITY);
+        }
+        let best = self.best_curve[n - 1];
+        // rising-bandit extrapolation: recent per-iteration gain rate
+        let w = 10.min(n - 1).max(1);
+        let gain = if n > 1 {
+            ((self.best_curve[n - 1] - self.best_curve[n - 1 - w])
+                / w as f64)
+                .max(0.0)
+        } else {
+            f64::INFINITY
+        };
+        (best, best + gain * k)
+    }
+
+    fn get_eui(&self) -> f64 {
+        let n = self.best_curve.len();
+        if n < 2 {
+            return f64::INFINITY; // unexplored blocks are promising
+        }
+        // mean of observed improvements (rotting-bandit estimate)
+        let mut imps = Vec::with_capacity(n - 1);
+        for i in 1..n {
+            imps.push(self.best_curve[i] - self.best_curve[i - 1]);
+        }
+        crate::util::stats::mean(&imps)
+    }
+
+    fn set_var(&mut self, fixed: &Config) {
+        self.fixed = self.fixed.merged(fixed);
+    }
+
+    fn n_evals(&self) -> usize {
+        self.history.len()
+    }
+
+    fn observations(&self) -> Vec<(Config, f64)> {
+        self.history.clone()
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+// ====================================================================
+// Conditioning block (Algorithm 1 + rising-bandit elimination)
+// ====================================================================
+
+pub struct Arm {
+    pub value: String,
+    pub block: Box<dyn BuildingBlock>,
+    pub active: bool,
+}
+
+pub struct ConditioningBlock {
+    pub var: String,
+    pub arms: Vec<Arm>,
+    /// Times each arm is played per do_next (paper: L = 5).
+    pub plays_per_round: usize,
+    /// Lookahead (in iterations) used for the EU interval.
+    pub eu_lookahead: f64,
+    /// Disable elimination (ablation flag).
+    pub eliminate: bool,
+    /// Minimum evaluations an arm must receive before it can be
+    /// eliminated — guards freshly added (continue-tuning) arms whose
+    /// EU interval is still over-pessimistic (§3.3.2 Remark).
+    pub elimination_grace: usize,
+    rounds: usize,
+}
+
+impl ConditioningBlock {
+    pub fn new(var: &str, arms: Vec<Arm>) -> ConditioningBlock {
+        ConditioningBlock {
+            var: var.to_string(),
+            arms,
+            plays_per_round: 5,
+            eu_lookahead: 10.0,
+            eliminate: true,
+            elimination_grace: 12,
+            rounds: 0,
+        }
+    }
+
+    /// Continue-tuning (§3.3.6): extend the surviving candidate set
+    /// with new arms; they join the round-robin immediately.
+    pub fn add_arms(&mut self, arms: Vec<Arm>) {
+        self.arms.extend(arms);
+    }
+
+    pub fn active_values(&self) -> Vec<String> {
+        self.arms
+            .iter()
+            .filter(|a| a.active)
+            .map(|a| a.value.clone())
+            .collect()
+    }
+}
+
+impl BuildingBlock for ConditioningBlock {
+    fn name(&self) -> String {
+        format!("conditioning[{}]", self.var)
+    }
+
+    fn do_next(&mut self, env: &mut Env) -> Result<()> {
+        self.rounds += 1;
+        // lines 2-4: play each active arm L times (round-robin)
+        for _ in 0..self.plays_per_round {
+            for arm in self.arms.iter_mut().filter(|a| a.active) {
+                if env.obj.exhausted() {
+                    return Ok(());
+                }
+                arm.block.do_next(env)?;
+            }
+        }
+        // lines 5-7: eliminate arms dominated under the EU intervals
+        if self.eliminate {
+            let bounds: Vec<Option<(f64, f64)>> = self
+                .arms
+                .iter()
+                .map(|a| {
+                    if a.active {
+                        Some(a.block.get_eu(self.eu_lookahead))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let max_lower = bounds
+                .iter()
+                .flatten()
+                .map(|(l, _)| *l)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let grace = self.elimination_grace;
+            for (arm, b) in self.arms.iter_mut().zip(&bounds) {
+                if let Some((_, u)) = b {
+                    if *u < max_lower && arm.block.n_evals() >= grace {
+                        arm.active = false;
+                    }
+                }
+            }
+            // never eliminate everything
+            if self.arms.iter().all(|a| !a.active) {
+                if let Some(best) = self
+                    .arms
+                    .iter_mut()
+                    .max_by(|a, b| {
+                        let ya = a.block.current_best()
+                            .map(|(_, y)| y).unwrap_or(f64::NEG_INFINITY);
+                        let yb = b.block.current_best()
+                            .map(|(_, y)| y).unwrap_or(f64::NEG_INFINITY);
+                        ya.partial_cmp(&yb)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                {
+                    best.active = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn current_best(&self) -> Option<(Config, f64)> {
+        self.arms
+            .iter()
+            .filter_map(|a| a.block.current_best())
+            .max_by(|a, b| a.1.partial_cmp(&b.1)
+                .unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    fn get_eu(&self, k: f64) -> (f64, f64) {
+        let mut lo = f64::NEG_INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for a in self.arms.iter().filter(|a| a.active) {
+            let (l, u) = a.block.get_eu(k);
+            lo = lo.max(l);
+            hi = hi.max(u);
+        }
+        (lo, hi)
+    }
+
+    fn get_eui(&self) -> f64 {
+        self.arms
+            .iter()
+            .filter(|a| a.active)
+            .map(|a| a.block.get_eui())
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    fn set_var(&mut self, fixed: &Config) {
+        for a in &mut self.arms {
+            a.block.set_var(fixed);
+        }
+    }
+
+    fn n_evals(&self) -> usize {
+        self.arms.iter().map(|a| a.block.n_evals()).sum()
+    }
+
+    fn active_children(&self) -> usize {
+        self.arms.iter().filter(|a| a.active).count()
+    }
+
+    fn observations(&self) -> Vec<(Config, f64)> {
+        let mut v = Vec::new();
+        for a in &self.arms {
+            v.extend(a.block.observations());
+        }
+        v
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+// ====================================================================
+// Alternating block (Algorithms 2 + 3)
+// ====================================================================
+
+pub struct AlternatingBlock {
+    pub b1: Box<dyn BuildingBlock>,
+    pub b2: Box<dyn BuildingBlock>,
+    /// The variable names each side owns (for set_var projection).
+    vars1: Vec<String>,
+    vars2: Vec<String>,
+    /// Warmup rounds remaining (Algorithm 2's L round-robin rounds).
+    warmup_left: usize,
+    /// EUI-driven arm choice (Algorithm 3); round-robin if false
+    /// (ablation of the design choice in §3.3.3).
+    pub eui_driven: bool,
+    toggle: bool,
+}
+
+impl AlternatingBlock {
+    pub fn new(b1: Box<dyn BuildingBlock>, vars1: Vec<String>,
+               b2: Box<dyn BuildingBlock>, vars2: Vec<String>)
+        -> AlternatingBlock {
+        AlternatingBlock {
+            b1,
+            b2,
+            vars1,
+            vars2,
+            warmup_left: 3,
+            eui_driven: true,
+            toggle: false,
+        }
+    }
+
+    /// Project a full config onto the variables a side owns, to pass
+    /// to the other side via set_var.
+    fn project(cfg: &Config, vars: &[String]) -> Config {
+        let mut out = Config::new();
+        for (k, v) in cfg.iter() {
+            if vars.iter().any(|p| k == p || k.starts_with(p)) {
+                out.set(k, v.clone());
+            }
+        }
+        out
+    }
+
+    fn exchange_to_b1(&mut self) {
+        if let Some((cfg, _)) = self.b2.current_best() {
+            let proj = Self::project(&cfg, &self.vars2);
+            self.b1.set_var(&proj);
+        }
+    }
+
+    fn exchange_to_b2(&mut self) {
+        if let Some((cfg, _)) = self.b1.current_best() {
+            let proj = Self::project(&cfg, &self.vars1);
+            self.b2.set_var(&proj);
+        }
+    }
+}
+
+impl BuildingBlock for AlternatingBlock {
+    fn name(&self) -> String {
+        format!("alternating[{} | {}]", self.b1.name(), self.b2.name())
+    }
+
+    fn do_next(&mut self, env: &mut Env) -> Result<()> {
+        if env.obj.exhausted() {
+            return Ok(());
+        }
+        if self.warmup_left > 0 {
+            // Algorithm 2: one round-robin pass with set_var exchange
+            self.b1.do_next(env)?;
+            self.exchange_to_b2();
+            self.b2.do_next(env)?;
+            self.exchange_to_b1();
+            self.warmup_left -= 1;
+            return Ok(());
+        }
+        let play_first = if self.eui_driven {
+            self.b1.get_eui() >= self.b2.get_eui()
+        } else {
+            self.toggle = !self.toggle;
+            self.toggle
+        };
+        if play_first {
+            // lines 4-6: fix z̄ to b2's best, then advance b1
+            self.exchange_to_b1();
+            self.b1.do_next(env)?;
+        } else {
+            // lines 8-10
+            self.exchange_to_b2();
+            self.b2.do_next(env)?;
+        }
+        Ok(())
+    }
+
+    fn current_best(&self) -> Option<(Config, f64)> {
+        [self.b1.current_best(), self.b2.current_best()]
+            .into_iter()
+            .flatten()
+            .max_by(|a, b| a.1.partial_cmp(&b.1)
+                .unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    fn get_eu(&self, k: f64) -> (f64, f64) {
+        let (l1, u1) = self.b1.get_eu(k);
+        let (l2, u2) = self.b2.get_eu(k);
+        (l1.max(l2), u1.max(u2))
+    }
+
+    fn get_eui(&self) -> f64 {
+        self.b1.get_eui().max(self.b2.get_eui())
+    }
+
+    fn set_var(&mut self, fixed: &Config) {
+        self.b1.set_var(fixed);
+        self.b2.set_var(fixed);
+    }
+
+    fn n_evals(&self) -> usize {
+        self.b1.n_evals() + self.b2.n_evals()
+    }
+
+    fn observations(&self) -> Vec<(Config, f64)> {
+        let mut v = self.b1.observations();
+        v.extend(self.b2.observations());
+        v
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Value;
+
+    /// Synthetic objective over {algorithm in a,b} x (x, y):
+    /// algo 'a' peaks at 0.8 (x=0.9, y=0.1), algo 'b' caps at 0.4.
+    struct Synth {
+        evals: usize,
+        max_evals: usize,
+    }
+
+    impl Objective for Synth {
+        fn evaluate(&mut self, cfg: &Config, _f: f64) -> Result<f64> {
+            self.evals += 1;
+            let x = cfg.f64_or("x", 0.5);
+            let y = cfg.f64_or("y", 0.5);
+            Ok(match cfg.str_or("algorithm", "a") {
+                "a" => 0.8 - (x - 0.9).powi(2) - (y - 0.1).powi(2),
+                _ => 0.4 - 0.5 * (x - 0.5).powi(2),
+            })
+        }
+        fn exhausted(&self) -> bool {
+            self.evals >= self.max_evals
+        }
+    }
+
+    fn xy_space() -> ConfigSpace {
+        ConfigSpace::new()
+            .float("x", 0.0, 1.0, 0.5)
+            .float("y", 0.0, 1.0, 0.5)
+    }
+
+    fn joint_for(algo: &str, seed: u64) -> JointBlock {
+        JointBlock::bo(
+            &format!("hp[{algo}]"),
+            xy_space(),
+            Config::new().with("algorithm", Value::C(algo.into())),
+            seed,
+        )
+    }
+
+    #[test]
+    fn joint_block_improves_and_tracks_best() {
+        let mut obj = Synth { evals: 0, max_evals: 60 };
+        let mut rng = Rng::new(0);
+        let mut block = joint_for("a", 0);
+        {
+            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            for _ in 0..60 {
+                block.do_next(&mut env).unwrap();
+            }
+        }
+        let (cfg, y) = block.current_best().unwrap();
+        assert!(y > 0.7, "best={y}");
+        assert_eq!(cfg.str_or("algorithm", ""), "a");
+        assert_eq!(block.n_evals(), 60);
+        // best curve monotone
+        let obs = block.observations();
+        assert_eq!(obs.len(), 60);
+    }
+
+    #[test]
+    fn eu_bounds_bracket_the_truth() {
+        let mut obj = Synth { evals: 0, max_evals: 30 };
+        let mut rng = Rng::new(1);
+        let mut block = joint_for("a", 1);
+        {
+            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            for _ in 0..30 {
+                block.do_next(&mut env).unwrap();
+            }
+        }
+        let (l, u) = block.get_eu(10.0);
+        let best = block.current_best().unwrap().1;
+        assert!((l - best).abs() < 1e-9, "lower bound is current best");
+        assert!(u >= l);
+    }
+
+    #[test]
+    fn conditioning_block_eliminates_weak_arm() {
+        let mut obj = Synth { evals: 0, max_evals: 400 };
+        let mut rng = Rng::new(2);
+        let arms = vec![
+            Arm { value: "a".into(), block: Box::new(joint_for("a", 2)),
+                  active: true },
+            Arm { value: "b".into(), block: Box::new(joint_for("b", 3)),
+                  active: true },
+        ];
+        let mut cond = ConditioningBlock::new("algorithm", arms);
+        {
+            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            for _ in 0..8 {
+                cond.do_next(&mut env).unwrap();
+            }
+        }
+        // arm 'b' caps at 0.4 < arm 'a' best: must be eliminated
+        assert_eq!(cond.active_values(), vec!["a".to_string()]);
+        let (cfg, y) = cond.current_best().unwrap();
+        assert_eq!(cfg.str_or("algorithm", ""), "a");
+        assert!(y > 0.7);
+    }
+
+    #[test]
+    fn conditioning_never_eliminates_all() {
+        let mut obj = Synth { evals: 0, max_evals: 300 };
+        let mut rng = Rng::new(3);
+        let arms = vec![
+            Arm { value: "b".into(), block: Box::new(joint_for("b", 4)),
+                  active: true },
+        ];
+        let mut cond = ConditioningBlock::new("algorithm", arms);
+        let mut env = Env { obj: &mut obj, rng: &mut rng };
+        for _ in 0..5 {
+            cond.do_next(&mut env).unwrap();
+        }
+        assert_eq!(cond.active_children(), 1);
+    }
+
+    #[test]
+    fn continue_tuning_adds_arms_live() {
+        let mut obj = Synth { evals: 0, max_evals: 500 };
+        let mut rng = Rng::new(4);
+        let arms = vec![
+            Arm { value: "b".into(), block: Box::new(joint_for("b", 5)),
+                  active: true },
+        ];
+        let mut cond = ConditioningBlock::new("algorithm", arms);
+        {
+            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            for _ in 0..3 {
+                cond.do_next(&mut env).unwrap();
+            }
+        }
+        let before = cond.current_best().unwrap().1;
+        assert!(before < 0.5);
+        cond.add_arms(vec![Arm {
+            value: "a".into(),
+            block: Box::new(joint_for("a", 6)),
+            active: true,
+        }]);
+        {
+            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            for _ in 0..8 {
+                cond.do_next(&mut env).unwrap();
+            }
+        }
+        let after = cond.current_best().unwrap().1;
+        assert!(after > 0.7, "continue tuning found the new arm: {after}");
+        // and the weak original arm is eventually eliminated
+        assert_eq!(cond.active_values(), vec!["a".to_string()]);
+    }
+
+    /// Separable objective for the alternating block: f = g(x) + h(y)
+    /// where g moves fast and h is nearly flat -> EUI should route
+    /// most plays to the x-side.
+    struct Separable {
+        evals: usize,
+        max_evals: usize,
+    }
+
+    impl Objective for Separable {
+        fn evaluate(&mut self, cfg: &Config, _f: f64) -> Result<f64> {
+            self.evals += 1;
+            let x = cfg.f64_or("x", 0.0);
+            let y = cfg.f64_or("y", 0.0);
+            Ok(-(x - 0.7).powi(2) * 4.0 - 0.01 * (y - 0.5).powi(2))
+        }
+        fn exhausted(&self) -> bool {
+            self.evals >= self.max_evals
+        }
+    }
+
+    #[test]
+    fn alternating_block_optimizes_separable_function() {
+        let mut obj = Separable { evals: 0, max_evals: 120 };
+        let mut rng = Rng::new(5);
+        let bx = JointBlock::bo(
+            "x-side",
+            ConfigSpace::new().float("x", 0.0, 1.0, 0.1),
+            Config::new().with("y", Value::F(0.5)),
+            7,
+        );
+        let by = JointBlock::bo(
+            "y-side",
+            ConfigSpace::new().float("y", 0.0, 1.0, 0.5),
+            Config::new().with("x", Value::F(0.1)),
+            8,
+        );
+        let mut alt = AlternatingBlock::new(
+            Box::new(bx), vec!["x".into()],
+            Box::new(by), vec!["y".into()],
+        );
+        {
+            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            for _ in 0..60 {
+                alt.do_next(&mut env).unwrap();
+            }
+        }
+        let (cfg, y) = alt.current_best().unwrap();
+        assert!(y > -0.05, "best={y}");
+        assert!((cfg.f64_or("x", 0.0) - 0.7).abs() < 0.2);
+        // EUI routing: x side (fast-moving) should get more evals
+        assert!(alt.b1.n_evals() + alt.b2.n_evals() <= 120);
+    }
+
+    #[test]
+    fn alternating_exchanges_best_via_set_var() {
+        // b2's best y must appear in b1's evaluated configs
+        let mut obj = Separable { evals: 0, max_evals: 60 };
+        let mut rng = Rng::new(6);
+        let bx = JointBlock::bo(
+            "x", ConfigSpace::new().float("x", 0.0, 1.0, 0.1),
+            Config::new().with("y", Value::F(0.123456)), 9);
+        let by = JointBlock::bo(
+            "y", ConfigSpace::new().float("y", 0.0, 1.0, 0.5),
+            Config::new().with("x", Value::F(0.1)), 10);
+        let mut alt = AlternatingBlock::new(
+            Box::new(bx), vec!["x".into()],
+            Box::new(by), vec!["y".into()]);
+        {
+            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            for _ in 0..30 {
+                alt.do_next(&mut env).unwrap();
+            }
+        }
+        // after warmup, b1's latest evals should use a y from b2's
+        // history, not the stale initial 0.123456
+        let obs = alt.b1.observations();
+        let last = &obs.last().unwrap().0;
+        assert_ne!(last.f64_or("y", -1.0), 0.123456);
+    }
+
+    #[test]
+    fn unexplored_block_has_infinite_eui() {
+        let block = joint_for("a", 11);
+        assert!(block.get_eui().is_infinite());
+        let (l, u) = block.get_eu(5.0);
+        assert!(l.is_infinite() && l < 0.0);
+        assert!(u.is_infinite() && u > 0.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal CLI argument parser (no `clap` offline).
+//!
+//! Grammar: `volcanoml <subcommand> [--key value | --flag] [positional]`.
+//! Typed getters with defaults; unknown-flag detection so typos fail
+//! loudly instead of silently using defaults.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+    consumed: std::cell::RefCell<BTreeSet<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for option --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {val:?} ({why})")]
+    BadValue { key: String, val: String, why: String },
+    #[error("unknown options: {0:?} (see --help)")]
+    Unknown(Vec<String>),
+}
+
+impl Args {
+    /// Parse raw args (not including argv[0]). Options may appear
+    /// before or after positionals. `--key=value` and `--key value`
+    /// both work; a `--key` followed by another `--...` or end-of-args
+    /// is a boolean flag.
+    pub fn parse(raw: &[String]) -> Result<Args, CliError> {
+        let mut a = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            a.opts.insert(body.to_string(), v.clone());
+                        }
+                        _ => {
+                            a.flags.insert(body.to_string());
+                        }
+                    }
+                }
+            } else if a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains(key)
+            || self.opts.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize)
+        -> Result<usize, CliError> {
+        self.typed_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        self.typed_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        self.typed_or(key, default)
+    }
+
+    fn typed_or<T: std::str::FromStr>(&self, key: &str, default: T)
+        -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| CliError::BadValue {
+                key: key.to_string(),
+                val: v.clone(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        self.mark(key);
+        match self.opts.get(key) {
+            Some(v) if !v.is_empty() => {
+                v.split(',').map(|s| s.trim().to_string()).collect()
+            }
+            _ => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Call after all getters: errors on any option/flag that was never
+    /// consumed (catches typos like `--buget`).
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(*k) && *k != "help")
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(unknown))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+            .unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["run", "--dataset", "quake", "--budget", "60",
+                        "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.str_or("dataset", "x"), "quake");
+        assert_eq!(a.usize_or("budget", 0).unwrap(), 60);
+        assert!(a.flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_form_and_lists() {
+        let a = parse(&["bench", "--systems=volcano,ausk, tpot"]);
+        assert_eq!(a.list_or("systems", &[]),
+                   vec!["volcano", "ausk", "tpot"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]);
+        assert_eq!(a.f64_or("frac", 0.8).unwrap(), 0.8);
+        assert!(!a.flag("meta"));
+    }
+
+    #[test]
+    fn bad_numeric_value_errors() {
+        let a = parse(&["run", "--budget", "soon"]);
+        assert!(a.usize_or("budget", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse(&["run", "--buget", "10"]);
+        let _ = a.str_or("dataset", "d");
+        assert!(matches!(a.finish(), Err(CliError::Unknown(v)) if v == ["buget"]));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["run", "--meta"]);
+        assert!(a.flag("meta"));
+    }
+}

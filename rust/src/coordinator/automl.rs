@@ -1,0 +1,542 @@
+//! The top-level VolcanoML system: configure a search (plan, engine,
+//! scale, budget, meta-learning, ensembling), run it over a dataset,
+//! and report held-out test results, curves and the artifacts other
+//! modules need (meta-corpus records, active-arm trends).
+//!
+//! The Python-facing API of Appendix A.2.2 maps onto
+//! [`Classifier`]/[`Regressor`] below:
+//! `Classifier(**params).fit(train)` == `Classifier::new(cfg).fit(&ds)`.
+
+use anyhow::Result;
+
+use crate::blocks::{BuildingBlock, Env};
+use crate::data::dataset::{Dataset, Predictions, Split};
+use crate::data::metrics::Metric;
+use crate::ensemble::{combine, fit_weights, EnsembleMethod};
+use crate::meta::{meta_features, MetaCorpus, TaskRecord};
+use crate::plan::progressive::run_progressive;
+use crate::plan::{EngineKind, ExecutionPlan, PlanBuilder, PlanKind};
+use crate::runtime::Runtime;
+use crate::space::Config;
+use crate::surrogate::Surrogate;
+use crate::util::rng::Rng;
+
+use super::evaluator::PipelineEvaluator;
+use super::{joint_space, pipeline_for, roster_for, SpaceScale};
+
+/// Search configuration (the `Classifier(**params)` analogue).
+#[derive(Clone)]
+pub struct VolcanoConfig {
+    pub plan: PlanKind,
+    pub engine: EngineKind,
+    pub scale: SpaceScale,
+    pub metric: Metric,
+    pub max_evals: usize,
+    pub budget_secs: f64,
+    pub ensemble: EnsembleMethod,
+    /// Members kept for the ensemble (paper: 50; scaled down).
+    pub ensemble_size: usize,
+    pub top_per_algo: usize,
+    pub enriched_smote: bool,
+    pub with_embedding: bool,
+    /// Use meta-learning (RankNet arm pruning + RGPE warm-start).
+    pub meta: bool,
+    /// Keep this many arms after RankNet pruning.
+    pub meta_top_arms: usize,
+    /// Progressive top-down strategy instead of plan execution (§4.3).
+    pub progressive: bool,
+    pub seed: u64,
+}
+
+impl Default for VolcanoConfig {
+    fn default() -> Self {
+        VolcanoConfig {
+            plan: PlanKind::CA,
+            engine: EngineKind::Bo,
+            scale: SpaceScale::Large,
+            metric: Metric::BalancedAccuracy,
+            max_evals: 120,
+            budget_secs: f64::INFINITY,
+            ensemble: EnsembleMethod::Selection,
+            ensemble_size: 10,
+            top_per_algo: 3,
+            enriched_smote: false,
+            with_embedding: false,
+            meta: false,
+            meta_top_arms: 5,
+            progressive: false,
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome of one AutoML run.
+pub struct RunOutcome {
+    pub dataset: String,
+    pub best_config: Option<Config>,
+    pub best_valid_utility: f64,
+    /// Single-best-model test utility (higher = better).
+    pub test_utility: f64,
+    /// Ensemble test utility (== test_utility when ensembling is off
+    /// or falls back).
+    pub ensemble_test_utility: f64,
+    /// Test metric in its natural orientation (accuracy / MSE).
+    pub test_metric_value: f64,
+    pub n_evals: usize,
+    pub n_failures: usize,
+    pub elapsed_secs: f64,
+    /// (secs, best valid utility) improvement curve.
+    pub valid_curve: Vec<(f64, f64)>,
+    /// (secs, test utility of the then-best config) — built by
+    /// refitting snapshots after the search (no leakage during it).
+    pub test_curve: Vec<(f64, f64)>,
+    /// (cumulative evals, live conditioning arms) — Fig 12 trend.
+    pub arm_trend: Vec<(usize, usize)>,
+    /// Meta-corpus record of this run (for corpus collection).
+    pub record: TaskRecord,
+}
+
+pub struct VolcanoML {
+    pub cfg: VolcanoConfig,
+    pub corpus: Option<MetaCorpus>,
+}
+
+impl VolcanoML {
+    pub fn new(cfg: VolcanoConfig) -> VolcanoML {
+        VolcanoML { cfg, corpus: None }
+    }
+
+    pub fn with_corpus(mut self, corpus: MetaCorpus) -> VolcanoML {
+        self.corpus = Some(corpus);
+        self
+    }
+
+    /// Run the full search on a dataset; `runtime` enables the
+    /// PJRT-backed arms.
+    pub fn run(&self, ds: &Dataset, runtime: Option<&Runtime>)
+        -> Result<RunOutcome> {
+        let cfg = &self.cfg;
+        let mut rng = Rng::new(cfg.seed);
+        let split = Split::stratified(ds, &mut rng);
+        let pipeline = pipeline_for(cfg.scale, cfg.enriched_smote,
+                                    cfg.with_embedding);
+        let mut algos = roster_for(cfg.scale, ds.task,
+                                   runtime.is_some());
+        algos.retain(|a| a.supports(ds.task));
+        let space = joint_space(&pipeline, &algos);
+
+        // ---- meta-learning hooks (§5) -------------------------------
+        let mfeats = meta_features(ds);
+        let arm_filter: Option<Vec<String>> = if cfg.meta {
+            self.corpus.as_ref().and_then(|c| {
+                let arm_names: Vec<String> =
+                    algos.iter().map(|a| a.name().to_string()).collect();
+                c.train_ranknet(&arm_names, cfg.metric.name(), &ds.name,
+                                &mut rng)
+                    .map(|net| {
+                        net.top_k(&mfeats, cfg.meta_top_arms)
+                            .into_iter()
+                            .map(|i| arm_names[i].clone())
+                            .collect()
+                    })
+            })
+        } else {
+            None
+        };
+        let metric_name = cfg.metric.name().to_string();
+        let ds_name = ds.name.clone();
+        let seed = cfg.seed;
+        let corpus_ref = if cfg.meta { self.corpus.as_ref() } else { None };
+        let surrogate_factory = move |label: &str,
+                                      sub: &crate::space::ConfigSpace|
+            -> Option<Box<dyn Surrogate>> {
+            corpus_ref.and_then(|c| {
+                c.rgpe_for_leaf(label, &metric_name, &ds_name,
+                                sub.len(), seed)
+                    .map(|r| Box::new(r) as Box<dyn Surrogate>)
+            })
+        };
+
+        let mut builder = PlanBuilder::new(&space, cfg.engine, cfg.seed);
+        builder.arm_filter = arm_filter;
+        if cfg.meta && self.corpus.is_some() {
+            builder.surrogate_factory = Some(&surrogate_factory);
+        }
+
+        // ---- run ----------------------------------------------------
+        let mut evaluator = PipelineEvaluator::new(
+            ds, split, cfg.metric, &pipeline, &algos, runtime,
+            cfg.seed)
+            .with_budget(cfg.max_evals, cfg.budget_secs);
+        let mut arm_trend: Vec<(usize, usize)> = Vec::new();
+        let mut search_rng = rng.fork(0xB10C);
+
+        let root: Box<dyn BuildingBlock>;
+        if cfg.progressive {
+            let mut env = Env { obj: &mut evaluator,
+                                rng: &mut search_rng };
+            let phase = cfg.max_evals / 3;
+            run_progressive(&builder, &mut env, phase, phase)?;
+            root = builder.build(cfg.plan); // structure only (unused)
+        } else {
+            let mut plan = ExecutionPlan::new(builder.build(cfg.plan));
+            loop {
+                {
+                    let mut env = Env { obj: &mut evaluator,
+                                        rng: &mut search_rng };
+                    if env.obj.exhausted() {
+                        break;
+                    }
+                    plan.root.do_next(&mut env)?;
+                }
+                arm_trend.push((evaluator.n_evals(),
+                                plan.root.active_children()));
+            }
+            root = plan.root;
+        }
+
+        // ---- final reporting ---------------------------------------
+        let y_test = evaluator.y_test();
+        let y_valid = evaluator.y_valid();
+        let best = evaluator.best.clone();
+        let (best_config, best_valid) = match &best {
+            Some((c, u)) => (Some(c.clone()), *u),
+            // tight budgets can end inside a low-fidelity Hyperband
+            // rung: fall back to the best observation at any fidelity
+            None => evaluator
+                .records
+                .iter()
+                .filter(|r| r.utility.is_finite())
+                .max_by(|a, b| a.utility.partial_cmp(&b.utility)
+                    .unwrap_or(std::cmp::Ordering::Equal))
+                .map(|r| (Some(r.config.clone()), r.utility))
+                .unwrap_or((None, f64::NEG_INFINITY)),
+        };
+
+        let mut test_utility = f64::NEG_INFINITY;
+        let mut test_metric_value = f64::NAN;
+        if let Some(bc) = &best_config {
+            if let Ok(p) = evaluator.test_predictions(bc) {
+                test_utility = cfg.metric.utility(&y_test, &p);
+                test_metric_value = cfg.metric.compute(&y_test, &p);
+            }
+        }
+
+        // ensemble over the per-algorithm model store
+        let mut ensemble_test_utility = test_utility;
+        if cfg.ensemble != EnsembleMethod::None {
+            let members = evaluator.top_configs(cfg.top_per_algo,
+                                                cfg.ensemble_size);
+            if members.len() >= 2 {
+                let mut valid_preds = Vec::new();
+                let mut test_preds = Vec::new();
+                for (mc, _) in &members {
+                    if let (Ok(v), Ok(t)) =
+                        (evaluator.valid_predictions(mc),
+                         evaluator.test_predictions(mc)) {
+                        valid_preds.push(v);
+                        test_preds.push(t);
+                    }
+                }
+                if valid_preds.len() >= 2 {
+                    let w = fit_weights(cfg.ensemble, cfg.metric,
+                                        &y_valid, &valid_preds,
+                                        cfg.ensemble_size * 3,
+                                        &mut rng);
+                    let combined = combine(&test_preds, &w);
+                    let u = cfg.metric.utility(&y_test, &combined);
+                    if u > ensemble_test_utility {
+                        ensemble_test_utility = u;
+                        test_metric_value =
+                            cfg.metric.compute(&y_test, &combined);
+                    }
+                }
+            }
+        }
+
+        // test-vs-time curve from (thinned) snapshots
+        let snaps = thin_snapshots(&evaluator.snapshots, 10);
+        let mut test_curve = Vec::with_capacity(snaps.len());
+        for (t, c) in &snaps {
+            if let Ok(p) = evaluator.test_predictions(c) {
+                test_curve.push((*t, cfg.metric.utility(&y_test, &p)));
+            }
+        }
+
+        // meta-corpus record
+        let mut record = TaskRecord {
+            name: ds.name.clone(),
+            metric: cfg.metric.name().to_string(),
+            meta_features: mfeats,
+            ..Default::default()
+        };
+        for r in &evaluator.records {
+            if r.fidelity >= 1.0 && r.utility.is_finite() {
+                let e = record.arm_scores
+                    .entry(r.algorithm.clone())
+                    .or_insert(f64::NEG_INFINITY);
+                *e = e.max(r.utility);
+            }
+        }
+        // leaf histories from the plan tree (joint-block labels)
+        collect_leaf_histories(root.as_ref(), &space, &mut record);
+
+        Ok(RunOutcome {
+            dataset: ds.name.clone(),
+            best_config,
+            best_valid_utility: best_valid,
+            test_utility,
+            ensemble_test_utility,
+            test_metric_value,
+            n_evals: evaluator.n_evals(),
+            n_failures: evaluator.failures,
+            elapsed_secs: evaluator.elapsed(),
+            valid_curve: evaluator.valid_curve.clone(),
+            test_curve,
+            arm_trend,
+            record,
+        })
+    }
+}
+
+/// Reduce snapshots to at most `k`, keeping first/last and spreading
+/// the rest (the test-curve refits are not free).
+fn thin_snapshots(snaps: &[(f64, Config)], k: usize)
+    -> Vec<(f64, Config)> {
+    if snaps.len() <= k {
+        return snaps.to_vec();
+    }
+    let mut out = Vec::with_capacity(k);
+    for i in 0..k {
+        let idx = i * (snaps.len() - 1) / (k - 1);
+        out.push(snaps[idx].clone());
+    }
+    out.dedup_by(|a, b| a.0 == b.0);
+    out
+}
+
+/// Walk the plan tree and store each leaf joint block's history
+/// encoded in the *joint* space (stable across plans and datasets).
+fn collect_leaf_histories(root: &dyn BuildingBlock,
+                          space: &crate::space::ConfigSpace,
+                          record: &mut TaskRecord) {
+    // Without trait downcasting across the tree we use observations()
+    // at the root, grouped by algorithm — one history per algorithm
+    // arm, encoded in the joint space. Leaf labels follow the CA
+    // convention "fe+hp|<algo>".
+    let obs = root.observations();
+    let mut by_algo: std::collections::BTreeMap<String,
+        (Vec<Vec<f64>>, Vec<f64>)> = Default::default();
+    for (cfg, y) in obs {
+        if !y.is_finite() {
+            continue;
+        }
+        let algo = cfg.str_or("algorithm", "?").to_string();
+        let e = by_algo.entry(algo).or_default();
+        e.0.push(space.to_features(&cfg));
+        e.1.push(y);
+    }
+    for (algo, hist) in by_algo {
+        record.leaf_histories.insert(format!("arm|{algo}"), hist);
+    }
+}
+
+// ====================================================================
+// Python-API analogues (Appendix A.2.2)
+// ====================================================================
+
+/// `Classifier` facade: six-lines-of-code usage from the paper.
+pub struct Classifier {
+    pub system: VolcanoML,
+    fitted: Option<(Config, RunOutcome)>,
+}
+
+impl Classifier {
+    pub fn new(mut cfg: VolcanoConfig) -> Classifier {
+        if !cfg.metric.is_classification() {
+            cfg.metric = Metric::BalancedAccuracy;
+        }
+        Classifier { system: VolcanoML::new(cfg), fitted: None }
+    }
+
+    pub fn fit(&mut self, ds: &Dataset, runtime: Option<&Runtime>)
+        -> Result<&RunOutcome> {
+        let out = self.system.run(ds, runtime)?;
+        let cfg = out.best_config.clone()
+            .ok_or_else(|| anyhow::anyhow!("search found no model"))?;
+        self.fitted = Some((cfg, out));
+        Ok(&self.fitted.as_ref().unwrap().1)
+    }
+
+    /// Predict labels for arbitrary rows of a dataset with the best
+    /// pipeline (refit on all its rows would leak; we refit on the
+    /// search split as the paper's final models do).
+    pub fn predict(&self, ds: &Dataset, rows: &[usize],
+                   runtime: Option<&Runtime>) -> Result<Vec<usize>> {
+        let (cfg, _) = self.fitted.as_ref()
+            .ok_or_else(|| anyhow::anyhow!("call fit() first"))?;
+        let pipeline = pipeline_for(self.system.cfg.scale,
+                                    self.system.cfg.enriched_smote,
+                                    self.system.cfg.with_embedding);
+        let algos = roster_for(self.system.cfg.scale, ds.task,
+                               runtime.is_some());
+        let mut rng = Rng::new(self.system.cfg.seed);
+        let split = Split::stratified(ds, &mut rng);
+        let ev = PipelineEvaluator::new(ds, split,
+            self.system.cfg.metric, &pipeline, &algos, runtime,
+            self.system.cfg.seed);
+        let mut fit_rows = ev.split.train.clone();
+        fit_rows.extend_from_slice(&ev.split.valid);
+        let preds: Predictions =
+            ev.fit_predict(cfg, 1.0, &fit_rows, rows)?;
+        Ok(preds.argmax_labels())
+    }
+}
+
+/// `Regressor` facade.
+pub struct Regressor {
+    pub system: VolcanoML,
+}
+
+impl Regressor {
+    pub fn new(mut cfg: VolcanoConfig) -> Regressor {
+        if cfg.metric.is_classification() {
+            cfg.metric = Metric::Mse;
+        }
+        Regressor { system: VolcanoML::new(cfg) }
+    }
+
+    pub fn fit(&mut self, ds: &Dataset, runtime: Option<&Runtime>)
+        -> Result<RunOutcome> {
+        self.system.run(ds, runtime)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Task;
+    use crate::data::synthetic::{generate, GenKind, Profile};
+
+    fn small_ds(seed: u64) -> Dataset {
+        generate(&Profile {
+            name: format!("automl-{seed}"),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 1.6 },
+            n: 240,
+            d: 6,
+            noise: 0.05,
+            imbalance: 1.5,
+            redundant: 1,
+            wild_scales: false,
+            seed,
+        })
+    }
+
+    fn quick_cfg() -> VolcanoConfig {
+        VolcanoConfig {
+            scale: SpaceScale::Medium,
+            max_evals: 30,
+            ensemble_size: 4,
+            top_per_algo: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_search_produces_model_and_curves() {
+        let ds = small_ds(1);
+        let system = VolcanoML::new(quick_cfg());
+        let out = system.run(&ds, None).unwrap();
+        assert!(out.best_config.is_some());
+        assert!(out.test_utility > 0.6, "test={}", out.test_utility);
+        assert!(out.ensemble_test_utility >= out.test_utility - 0.1);
+        assert!(out.n_evals <= 31);
+        assert!(!out.valid_curve.is_empty());
+        assert!(!out.test_curve.is_empty());
+        assert!(!out.record.arm_scores.is_empty());
+    }
+
+    #[test]
+    fn all_plans_run_end_to_end() {
+        let ds = small_ds(2);
+        for plan in PlanKind::all() {
+            let mut cfg = quick_cfg();
+            cfg.plan = plan;
+            cfg.max_evals = 20;
+            let out = VolcanoML::new(cfg).run(&ds, None).unwrap();
+            assert!(out.best_config.is_some(), "{}", plan.name());
+            assert!(out.test_utility > 0.5,
+                    "{}: {}", plan.name(), out.test_utility);
+        }
+    }
+
+    #[test]
+    fn progressive_mode_runs() {
+        let ds = small_ds(3);
+        let mut cfg = quick_cfg();
+        cfg.progressive = true;
+        let out = VolcanoML::new(cfg).run(&ds, None).unwrap();
+        assert!(out.best_config.is_some());
+        assert!(out.test_utility > 0.5);
+    }
+
+    #[test]
+    fn regression_pathway_works() {
+        let ds = generate(&Profile {
+            name: "automl-reg".into(),
+            task: Task::Regression,
+            gen: GenKind::LinearReg { informative: 3 },
+            n: 240,
+            d: 6,
+            noise: 0.2,
+            imbalance: 1.0,
+            redundant: 0,
+            wild_scales: false,
+            seed: 4,
+        });
+        let mut cfg = quick_cfg();
+        cfg.metric = Metric::Mse;
+        let out = VolcanoML::new(cfg).run(&ds, None).unwrap();
+        // utility is -MSE; metric value is the MSE itself
+        assert!(out.test_metric_value >= 0.0);
+        assert!(out.test_utility <= 0.0);
+        assert!(out.test_metric_value < 10.0,
+                "mse={}", out.test_metric_value);
+    }
+
+    #[test]
+    fn meta_learning_consumes_corpus() {
+        // tiny corpus from two prior runs, then leave-one-out use
+        let mut corpus = MetaCorpus::default();
+        for s in 10..17 {
+            let prior = small_ds(s);
+            let out = VolcanoML::new(quick_cfg())
+                .run(&prior, None).unwrap();
+            corpus.push(out.record);
+        }
+        let ds = small_ds(20);
+        let mut cfg = quick_cfg();
+        cfg.meta = true;
+        cfg.meta_top_arms = 1;
+        let out = VolcanoML::new(cfg).with_corpus(corpus)
+            .run(&ds, None).unwrap();
+        assert!(out.best_config.is_some());
+        // with one arm kept, every evaluation uses that algorithm
+        let algo_set: std::collections::HashSet<_> =
+            out.record.arm_scores.keys().cloned().collect();
+        assert_eq!(algo_set.len(), 1, "{algo_set:?}");
+    }
+
+    #[test]
+    fn classifier_facade_fit_predict() {
+        let ds = small_ds(5);
+        let mut clf = Classifier::new(quick_cfg());
+        let out = clf.fit(&ds, None).unwrap();
+        assert!(out.test_utility > 0.5);
+        let rows: Vec<usize> = (0..20).collect();
+        let labels = clf.predict(&ds, &rows, None).unwrap();
+        assert_eq!(labels.len(), 20);
+        assert!(labels.iter().all(|&l| l < 2));
+    }
+}

@@ -1,0 +1,396 @@
+//! The black-box objective f(config; D): fit the FE pipeline + chosen
+//! algorithm on the training split, score the validation split. This
+//! is the only place where search configurations touch data, and the
+//! only caller of the PJRT runtime on the search path.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::algos::{Algorithm, EvalContext};
+use crate::blocks::Objective;
+use crate::data::dataset::{Dataset, Predictions, Split};
+use crate::data::metrics::Metric;
+use crate::fe::FePipeline;
+use crate::runtime::Runtime;
+use crate::space::Config;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub config: Config,
+    pub fidelity: f64,
+    pub utility: f64,
+    pub elapsed: f64,
+    pub algorithm: String,
+}
+
+pub struct PipelineEvaluator<'a> {
+    pub ds: &'a Dataset,
+    pub split: Split,
+    pub metric: Metric,
+    pub pipeline: &'a FePipeline,
+    algos: HashMap<String, Arc<dyn Algorithm>>,
+    default_algo: String,
+    pub runtime: Option<&'a Runtime>,
+    pub seed: u64,
+    // budget
+    start: Instant,
+    pub budget_secs: f64,
+    pub max_evals: usize,
+    // telemetry
+    pub records: Vec<EvalRecord>,
+    cache: HashMap<String, f64>,
+    pub best: Option<(Config, f64)>,
+    /// (elapsed secs, best valid utility) whenever the best improves.
+    pub valid_curve: Vec<(f64, f64)>,
+    /// Config snapshots at improvement times (feeds test-vs-budget
+    /// curves without test-set leakage during search).
+    pub snapshots: Vec<(f64, Config)>,
+    /// Worst utility seen (crash penalty anchor).
+    worst: f64,
+    pub failures: usize,
+}
+
+impl<'a> PipelineEvaluator<'a> {
+    pub fn new(ds: &'a Dataset, split: Split, metric: Metric,
+               pipeline: &'a FePipeline,
+               algos: &[Arc<dyn Algorithm>],
+               runtime: Option<&'a Runtime>, seed: u64)
+        -> PipelineEvaluator<'a> {
+        let default_algo = algos
+            .first()
+            .map(|a| a.name().to_string())
+            .unwrap_or_default();
+        PipelineEvaluator {
+            ds,
+            split,
+            metric,
+            pipeline,
+            algos: algos
+                .iter()
+                .map(|a| (a.name().to_string(), a.clone()))
+                .collect(),
+            default_algo,
+            runtime,
+            seed,
+            start: Instant::now(),
+            budget_secs: f64::INFINITY,
+            max_evals: usize::MAX,
+            records: Vec::new(),
+            cache: HashMap::new(),
+            best: None,
+            valid_curve: Vec::new(),
+            snapshots: Vec::new(),
+            worst: f64::INFINITY,
+            failures: 0,
+        }
+    }
+
+    pub fn with_budget(mut self, max_evals: usize, budget_secs: f64)
+        -> Self {
+        self.max_evals = max_evals;
+        self.budget_secs = budget_secs;
+        self.start = Instant::now();
+        self
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn n_evals(&self) -> usize {
+        self.records.len()
+    }
+
+    fn crash_penalty(&self) -> f64 {
+        if self.worst.is_finite() {
+            self.worst - self.worst.abs() * 0.1 - 0.1
+        } else if self.metric.is_classification() {
+            0.0
+        } else {
+            -1e6
+        }
+    }
+
+    /// Deterministic per-evaluation seed: same config + fidelity =>
+    /// same pipeline randomness (makes caching and final refits exact).
+    fn eval_seed(&self, key: &str) -> u64 {
+        let mut h: u64 = self.seed ^ 0x9E3779B97F4A7C15;
+        for b in key.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Fit FE + algorithm on `fit_rows`, predict `predict_rows` of the
+    /// transformed dataset. Used for search (train -> valid) and final
+    /// refits (train+valid -> test).
+    pub fn fit_predict(&self, cfg: &Config, fidelity: f64,
+                       fit_rows: &[usize], predict_rows: &[usize])
+        -> Result<Predictions> {
+        let key = format!("{}@{fidelity:.4}", cfg.key());
+        let mut rng = Rng::new(self.eval_seed(&key));
+        let applied =
+            self.pipeline.fit_apply(self.ds, cfg, fit_rows, &mut rng);
+        let algo_name = cfg.str_or("algorithm", &self.default_algo);
+        let algo = self
+            .algos
+            .get(algo_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown algorithm \
+                                            {algo_name}"))?;
+        // strip the "alg.<name>:" prefix for the algorithm's own space
+        let prefix = format!("alg.{algo_name}:");
+        let mut local = Config::new();
+        for (k, v) in cfg.iter() {
+            if let Some(rest) = k.strip_prefix(&prefix) {
+                local.set(rest, v.clone());
+            }
+        }
+        let mut ctx = EvalContext::new(self.runtime,
+                                       rng.next_u64());
+        ctx.fidelity = fidelity;
+        let model = algo.fit(&applied.data, &applied.train, &local,
+                             &mut ctx)?;
+        Ok(model.predict(&applied.data, predict_rows, &mut ctx))
+    }
+
+    /// Search-time objective: fit on train, score valid.
+    fn eval_inner(&self, cfg: &Config, fidelity: f64) -> Result<f64> {
+        let preds = self.fit_predict(cfg, fidelity, &self.split.train,
+                                     &self.split.valid)?;
+        let y_valid: Vec<f32> = self
+            .split
+            .valid
+            .iter()
+            .map(|&i| self.ds.y[i])
+            .collect();
+        Ok(self.metric.utility(&y_valid, &preds))
+    }
+
+    /// Final-refit prediction on the held-out test split (fits on
+    /// train + valid, as the paper does for reporting).
+    pub fn test_predictions(&self, cfg: &Config) -> Result<Predictions> {
+        let mut fit_rows = self.split.train.clone();
+        fit_rows.extend_from_slice(&self.split.valid);
+        self.fit_predict(cfg, 1.0, &fit_rows, &self.split.test)
+    }
+
+    pub fn y_test(&self) -> Vec<f32> {
+        self.split.test.iter().map(|&i| self.ds.y[i]).collect()
+    }
+
+    pub fn y_valid(&self) -> Vec<f32> {
+        self.split.valid.iter().map(|&i| self.ds.y[i]).collect()
+    }
+
+    /// Validation predictions for an already-searched config (used by
+    /// the ensemble builder). Deterministic thanks to eval_seed.
+    pub fn valid_predictions(&self, cfg: &Config)
+        -> Result<Predictions> {
+        self.fit_predict(cfg, 1.0, &self.split.train, &self.split.valid)
+    }
+
+    /// Top-`per_algo` configs per algorithm by utility (the paper's
+    /// per-algorithm model store feeding the ensemble).
+    pub fn top_configs(&self, per_algo: usize, cap: usize)
+        -> Vec<(Config, f64)> {
+        let mut by_algo: HashMap<&str, Vec<&EvalRecord>> =
+            HashMap::new();
+        for r in &self.records {
+            if r.fidelity >= 1.0 && r.utility.is_finite() {
+                by_algo.entry(r.algorithm.as_str()).or_default()
+                    .push(r);
+            }
+        }
+        let mut picked: Vec<(Config, f64)> = Vec::new();
+        for (_, mut rs) in by_algo {
+            rs.sort_by(|a, b| b.utility.partial_cmp(&a.utility)
+                .unwrap_or(std::cmp::Ordering::Equal));
+            rs.dedup_by(|a, b| a.config == b.config);
+            for r in rs.into_iter().take(per_algo) {
+                picked.push((r.config.clone(), r.utility));
+            }
+        }
+        picked.sort_by(|a, b| b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal));
+        picked.truncate(cap);
+        picked
+    }
+}
+
+impl<'a> Objective for PipelineEvaluator<'a> {
+    fn evaluate(&mut self, cfg: &Config, fidelity: f64) -> Result<f64> {
+        let key = format!("{}@{fidelity:.4}", cfg.key());
+        if let Some(&u) = self.cache.get(&key) {
+            return Ok(u);
+        }
+        let t0 = Instant::now();
+        let utility = match self.eval_inner(cfg, fidelity) {
+            Ok(u) if u.is_finite() => u,
+            _ => {
+                self.failures += 1;
+                self.crash_penalty()
+            }
+        };
+        self.worst = self.worst.min(utility);
+        let elapsed = t0.elapsed().as_secs_f64();
+        self.cache.insert(key, utility);
+        self.records.push(EvalRecord {
+            config: cfg.clone(),
+            fidelity,
+            utility,
+            elapsed,
+            algorithm: cfg.str_or("algorithm", &self.default_algo)
+                .to_string(),
+        });
+        if fidelity >= 1.0
+            && self.best.as_ref().map(|(_, b)| utility > *b)
+                .unwrap_or(true)
+        {
+            self.best = Some((cfg.clone(), utility));
+            let t = self.elapsed();
+            self.valid_curve.push((t, utility));
+            self.snapshots.push((t, cfg.clone()));
+        }
+        Ok(utility)
+    }
+
+    fn exhausted(&self) -> bool {
+        self.records.len() >= self.max_evals
+            || self.elapsed() >= self.budget_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{joint_space, pipeline_for, roster_for,
+                             SpaceScale};
+    use crate::data::dataset::Task;
+    use crate::data::synthetic::{generate, GenKind, Profile};
+
+    fn setup() -> (Dataset, FePipeline) {
+        let ds = generate(&Profile {
+            name: "eval".into(),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 2.0 },
+            n: 260,
+            d: 6,
+            noise: 0.02,
+            imbalance: 1.0,
+            redundant: 1,
+            wild_scales: false,
+            seed: 55,
+        });
+        let pipeline = pipeline_for(SpaceScale::Small, false, false);
+        (ds, pipeline)
+    }
+
+    #[test]
+    fn evaluates_default_config_sensibly() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(1));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 7)
+            .with_budget(50, 60.0);
+        let cfg = space.default_config();
+        let u = ev.evaluate(&cfg, 1.0).unwrap();
+        assert!(u > 0.8, "default RF on easy blobs: {u}");
+        assert_eq!(ev.n_evals(), 1);
+        assert_eq!(ev.best.as_ref().unwrap().1, u);
+    }
+
+    #[test]
+    fn caching_prevents_duplicate_work() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(2));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 8);
+        let cfg = space.default_config();
+        let a = ev.evaluate(&cfg, 1.0).unwrap();
+        let b = ev.evaluate(&cfg, 1.0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(ev.n_evals(), 1, "cache hit must not re-record");
+    }
+
+    #[test]
+    fn budget_exhaustion_by_evals() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(3));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 9)
+            .with_budget(3, f64::INFINITY);
+        let mut rng = Rng::new(3);
+        let mut n = 0;
+        while !ev.exhausted() {
+            let cfg = space.sample(&mut rng);
+            let _ = ev.evaluate(&cfg, 1.0).unwrap();
+            n += 1;
+            assert!(n <= 10, "runaway");
+        }
+        assert!(ev.n_evals() <= 3 + 1);
+    }
+
+    #[test]
+    fn unknown_algorithm_is_penalised_not_fatal() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let split = Split::stratified(&ds, &mut Rng::new(4));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 10);
+        let cfg = Config::new().with(
+            "algorithm", crate::space::Value::C("bogus".into()));
+        let u = ev.evaluate(&cfg, 1.0).unwrap();
+        assert!(u <= 0.0, "penalty expected, got {u}");
+        assert_eq!(ev.failures, 1);
+    }
+
+    #[test]
+    fn test_predictions_use_train_plus_valid() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(5));
+        let n_test = split.test.len();
+        let ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 11);
+        let preds = ev.test_predictions(&space.default_config())
+            .unwrap();
+        assert_eq!(preds.n(), n_test);
+        let acc = Metric::BalancedAccuracy
+            .utility(&ev.y_test(), &preds);
+        assert!(acc > 0.8, "test acc {acc}");
+    }
+
+    #[test]
+    fn snapshots_track_improvements_monotonically() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(6));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 12)
+            .with_budget(15, f64::INFINITY);
+        let mut rng = Rng::new(7);
+        while !ev.exhausted() {
+            let cfg = space.sample(&mut rng);
+            let _ = ev.evaluate(&cfg, 1.0);
+        }
+        assert!(!ev.valid_curve.is_empty());
+        for w in ev.valid_curve.windows(2) {
+            assert!(w[1].1 >= w[0].1, "curve must be monotone");
+            assert!(w[1].0 >= w[0].0);
+        }
+        assert_eq!(ev.valid_curve.len(), ev.snapshots.len());
+    }
+}

@@ -1,0 +1,350 @@
+//! Core dataset types: a dense row-major feature matrix with labels,
+//! train/valid/test splits, and the prediction container shared by all
+//! algorithms (native and PJRT-backed).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// `n_classes` live classes, labels are 0..n_classes.
+    Classification { n_classes: usize },
+    Regression,
+}
+
+impl Task {
+    pub fn is_classification(&self) -> bool {
+        matches!(self, Task::Classification { .. })
+    }
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Task::Classification { n_classes } => *n_classes,
+            Task::Regression => 0,
+        }
+    }
+}
+
+/// Dense dataset; `x` is row-major `n * d`, labels are class indices
+/// (as f32) for classification or target values for regression.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub task: Task,
+    pub n: usize,
+    pub d: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, task: Task, d: usize) -> Dataset {
+        Dataset { name: name.to_string(), task, n: 0, d, x: Vec::new(),
+                  y: Vec::new() }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn push_row(&mut self, row: &[f32], y: f32) {
+        assert_eq!(row.len(), self.d, "row width mismatch");
+        self.x.extend_from_slice(row);
+        self.y.push(y);
+        self.n += 1;
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        debug_assert!(self.task.is_classification());
+        self.y[i] as usize
+    }
+
+    /// Rows selected by index (allows repetition — used by balancers
+    /// and bootstrap sampling).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut out = Dataset::new(&self.name, self.task, self.d);
+        out.x.reserve(idx.len() * self.d);
+        out.y.reserve(idx.len());
+        for &i in idx {
+            out.x.extend_from_slice(self.row(i));
+            out.y.push(self.y[i]);
+        }
+        out.n = idx.len();
+        out
+    }
+
+    /// Class frequency histogram (classification only).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let k = self.task.n_classes();
+        let mut counts = vec![0usize; k];
+        for &y in &self.y {
+            let c = y as usize;
+            if c < k {
+                counts[c] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Column mean/std over given rows (used by meta-features & FE).
+    pub fn col_stats(&self, rows: &[usize]) -> (Vec<f64>, Vec<f64>) {
+        let mut mean = vec![0.0f64; self.d];
+        let mut var = vec![0.0f64; self.d];
+        let n = rows.len().max(1) as f64;
+        for &i in rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                mean[j] += v as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        for &i in rows {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                let dlt = v as f64 - mean[j];
+                var[j] += dlt * dlt;
+            }
+        }
+        let std: Vec<f64> = var.iter().map(|v| (v / n).sqrt()).collect();
+        (mean, std)
+    }
+}
+
+/// Index-based split. `train` is what pipelines fit on, `valid` drives
+/// the search utility, `test` is only touched for final reporting.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub valid: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+impl Split {
+    /// The paper's protocol: 4/5 for search (of which an inner
+    /// validation fifth drives utility), 1/5 held-out test.
+    pub fn standard(n: usize, rng: &mut Rng) -> Split {
+        let mut perm = rng.permutation(n);
+        let n_test = n / 5;
+        let test = perm.split_off(n - n_test);
+        let n_valid = perm.len() / 5;
+        let valid = perm.split_off(perm.len() - n_valid);
+        Split { train: perm, valid, test }
+    }
+
+    /// Stratified variant keeping class proportions in every part
+    /// (classification); falls back to `standard` for regression.
+    pub fn stratified(ds: &Dataset, rng: &mut Rng) -> Split {
+        if !ds.task.is_classification() {
+            return Split::standard(ds.n, rng);
+        }
+        let k = ds.task.n_classes();
+        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for i in 0..ds.n {
+            by_class[ds.label(i).min(k - 1)].push(i);
+        }
+        let (mut train, mut valid, mut test) =
+            (Vec::new(), Vec::new(), Vec::new());
+        for mut members in by_class {
+            rng.shuffle(&mut members);
+            let n_test = members.len() / 5;
+            let t = members.split_off(members.len() - n_test);
+            let n_valid = members.len() / 5;
+            let v = members.split_off(members.len() - n_valid);
+            test.extend(t);
+            valid.extend(v);
+            train.extend(members);
+        }
+        rng.shuffle(&mut train);
+        rng.shuffle(&mut valid);
+        rng.shuffle(&mut test);
+        Split { train, valid, test }
+    }
+
+    /// k-fold split of the *search* portion (train+valid), used by
+    /// cross-validation utilities.
+    pub fn kfold(n: usize, k: usize, rng: &mut Rng) -> Vec<(Vec<usize>, Vec<usize>)> {
+        let perm = rng.permutation(n);
+        let mut folds = Vec::with_capacity(k);
+        for f in 0..k {
+            let lo = n * f / k;
+            let hi = n * (f + 1) / k;
+            let valid: Vec<usize> = perm[lo..hi].to_vec();
+            let train: Vec<usize> =
+                perm[..lo].iter().chain(&perm[hi..]).copied().collect();
+            folds.push((train, valid));
+        }
+        folds
+    }
+}
+
+/// Model outputs: class scores (n x n_classes, higher = more likely)
+/// or regression values.
+#[derive(Clone, Debug)]
+pub enum Predictions {
+    ClassScores { n_classes: usize, scores: Vec<f32> },
+    Values(Vec<f32>),
+}
+
+impl Predictions {
+    pub fn n(&self) -> usize {
+        match self {
+            Predictions::ClassScores { n_classes, scores } => {
+                scores.len() / n_classes.max(&1)
+            }
+            Predictions::Values(v) => v.len(),
+        }
+    }
+
+    pub fn score_row(&self, i: usize) -> &[f32] {
+        match self {
+            Predictions::ClassScores { n_classes, scores } => {
+                &scores[i * n_classes..(i + 1) * n_classes]
+            }
+            Predictions::Values(_) => panic!("not class scores"),
+        }
+    }
+
+    pub fn argmax_labels(&self) -> Vec<usize> {
+        match self {
+            Predictions::ClassScores { n_classes, scores } => {
+                let c = *n_classes;
+                (0..scores.len() / c)
+                    .map(|i| {
+                        let row = &scores[i * c..(i + 1) * c];
+                        row.iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1)
+                                .unwrap_or(std::cmp::Ordering::Equal))
+                            .map(|(j, _)| j)
+                            .unwrap_or(0)
+                    })
+                    .collect()
+            }
+            Predictions::Values(_) => panic!("not class scores"),
+        }
+    }
+
+    pub fn values(&self) -> &[f32] {
+        match self {
+            Predictions::Values(v) => v,
+            _ => panic!("not regression values"),
+        }
+    }
+
+    /// Elementwise weighted sum of predictions (ensembling substrate).
+    pub fn weighted_sum(preds: &[(&Predictions, f64)]) -> Predictions {
+        assert!(!preds.is_empty());
+        match preds[0].0 {
+            Predictions::ClassScores { n_classes, scores } => {
+                let mut acc = vec![0.0f32; scores.len()];
+                for (p, w) in preds {
+                    match p {
+                        Predictions::ClassScores { scores: s, .. } => {
+                            for (a, &v) in acc.iter_mut().zip(s.iter()) {
+                                *a += (*w as f32) * v;
+                            }
+                        }
+                        _ => panic!("mixed prediction kinds"),
+                    }
+                }
+                Predictions::ClassScores { n_classes: *n_classes,
+                                           scores: acc }
+            }
+            Predictions::Values(v0) => {
+                let mut acc = vec![0.0f32; v0.len()];
+                for (p, w) in preds {
+                    for (a, &v) in acc.iter_mut().zip(p.values().iter()) {
+                        *a += (*w as f32) * v;
+                    }
+                }
+                Predictions::Values(acc)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, k: usize) -> Dataset {
+        let mut d = Dataset::new("toy", Task::Classification { n_classes: k }, 2);
+        for i in 0..n {
+            d.push_row(&[i as f32, (i * 2) as f32], (i % k) as f32);
+        }
+        d
+    }
+
+    #[test]
+    fn rows_and_subsets() {
+        let d = toy(10, 2);
+        assert_eq!(d.row(3), &[3.0, 6.0]);
+        let s = d.subset(&[1, 1, 4]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.row(0), s.row(1));
+        assert_eq!(s.y[2], 0.0);
+    }
+
+    #[test]
+    fn standard_split_partitions() {
+        let mut rng = Rng::new(0);
+        let s = Split::standard(100, &mut rng);
+        assert_eq!(s.test.len(), 20);
+        assert_eq!(s.valid.len(), 16);
+        assert_eq!(s.train.len(), 64);
+        let mut all: Vec<usize> = s.train.iter()
+            .chain(&s.valid).chain(&s.test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stratified_split_keeps_proportions() {
+        let mut d = Dataset::new("im", Task::Classification { n_classes: 2 }, 1);
+        for i in 0..200 {
+            d.push_row(&[i as f32], if i < 180 { 0.0 } else { 1.0 });
+        }
+        let mut rng = Rng::new(1);
+        let s = Split::stratified(&d, &mut rng);
+        let minority_in_test =
+            s.test.iter().filter(|&&i| d.y[i] == 1.0).count();
+        assert_eq!(minority_in_test, 4); // 20 minority / 5
+    }
+
+    #[test]
+    fn kfold_covers_everything_once() {
+        let mut rng = Rng::new(2);
+        let folds = Split::kfold(53, 5, &mut rng);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![0usize; 53];
+        for (tr, va) in &folds {
+            assert_eq!(tr.len() + va.len(), 53);
+            for &i in va {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn argmax_labels_picks_max() {
+        let p = Predictions::ClassScores {
+            n_classes: 3,
+            scores: vec![0.1, 0.7, 0.2, 0.5, 0.2, 0.3],
+        };
+        assert_eq!(p.argmax_labels(), vec![1, 0]);
+    }
+
+    #[test]
+    fn weighted_sum_blends() {
+        let a = Predictions::Values(vec![1.0, 2.0]);
+        let b = Predictions::Values(vec![3.0, 4.0]);
+        let m = Predictions::weighted_sum(&[(&a, 0.5), (&b, 0.5)]);
+        assert_eq!(m.values(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn class_counts_histogram() {
+        let d = toy(10, 3);
+        assert_eq!(d.class_counts(), vec![4, 3, 3]);
+    }
+}

@@ -1,0 +1,322 @@
+//! Utility metrics from the paper's protocol: balanced accuracy
+//! (classification headline), accuracy, macro-F1, AUC (binary), MSE
+//! (regression headline), MAE, R². All metrics are reported so that
+//! *higher is better* via `Metric::utility` (errors are negated), which
+//! is what the building blocks maximise.
+
+use super::dataset::Predictions;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    BalancedAccuracy,
+    Accuracy,
+    F1Macro,
+    Auc,
+    Mse,
+    Mae,
+    R2,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::BalancedAccuracy => "balanced_accuracy",
+            Metric::Accuracy => "accuracy",
+            Metric::F1Macro => "f1_macro",
+            Metric::Auc => "auc",
+            Metric::Mse => "mse",
+            Metric::Mae => "mae",
+            Metric::R2 => "r2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        Some(match s {
+            "balanced_accuracy" | "bal_acc" => Metric::BalancedAccuracy,
+            "accuracy" | "acc" => Metric::Accuracy,
+            "f1" | "f1_macro" => Metric::F1Macro,
+            "auc" => Metric::Auc,
+            "mse" => Metric::Mse,
+            "mae" => Metric::Mae,
+            "r2" => Metric::R2,
+            _ => return None,
+        })
+    }
+
+    pub fn is_classification(&self) -> bool {
+        matches!(self, Metric::BalancedAccuracy | Metric::Accuracy
+                 | Metric::F1Macro | Metric::Auc)
+    }
+
+    /// Raw metric value (its natural orientation).
+    pub fn compute(&self, y_true: &[f32], preds: &Predictions) -> f64 {
+        match self {
+            Metric::BalancedAccuracy => {
+                balanced_accuracy(y_true, &preds.argmax_labels())
+            }
+            Metric::Accuracy => accuracy(y_true, &preds.argmax_labels()),
+            Metric::F1Macro => f1_macro(y_true, &preds.argmax_labels()),
+            Metric::Auc => auc_binary(y_true, preds),
+            Metric::Mse => mse(y_true, preds.values()),
+            Metric::Mae => mae(y_true, preds.values()),
+            Metric::R2 => r2(y_true, preds.values()),
+        }
+    }
+
+    /// Higher-is-better utility (errors negated). This is the objective
+    /// the VolcanoML blocks maximise.
+    pub fn utility(&self, y_true: &[f32], preds: &Predictions) -> f64 {
+        let v = self.compute(y_true, preds);
+        match self {
+            Metric::Mse | Metric::Mae => -v,
+            _ => v,
+        }
+    }
+}
+
+pub fn accuracy(y_true: &[f32], y_pred: &[usize]) -> f64 {
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    let hits = y_true
+        .iter()
+        .zip(y_pred)
+        .filter(|(t, p)| **t as usize == **p)
+        .count();
+    hits as f64 / y_true.len() as f64
+}
+
+/// Mean of per-class recall — the paper's classification metric.
+pub fn balanced_accuracy(y_true: &[f32], y_pred: &[usize]) -> f64 {
+    let k = y_true
+        .iter()
+        .map(|&t| t as usize)
+        .max()
+        .map(|m| m + 1)
+        .unwrap_or(0);
+    if k == 0 {
+        return 0.0;
+    }
+    let mut correct = vec![0usize; k];
+    let mut total = vec![0usize; k];
+    for (&t, &p) in y_true.iter().zip(y_pred) {
+        let t = t as usize;
+        total[t] += 1;
+        if t == p {
+            correct[t] += 1;
+        }
+    }
+    let mut acc = 0.0;
+    let mut live = 0;
+    for c in 0..k {
+        if total[c] > 0 {
+            acc += correct[c] as f64 / total[c] as f64;
+            live += 1;
+        }
+    }
+    if live == 0 { 0.0 } else { acc / live as f64 }
+}
+
+pub fn f1_macro(y_true: &[f32], y_pred: &[usize]) -> f64 {
+    let k = y_true
+        .iter()
+        .map(|&t| t as usize)
+        .chain(y_pred.iter().copied())
+        .max()
+        .map(|m| m + 1)
+        .unwrap_or(0);
+    if k == 0 {
+        return 0.0;
+    }
+    let (mut tp, mut fp, mut fntv) = (vec![0f64; k], vec![0f64; k], vec![0f64; k]);
+    for (&t, &p) in y_true.iter().zip(y_pred) {
+        let t = t as usize;
+        if t == p {
+            tp[t] += 1.0;
+        } else {
+            fp[p] += 1.0;
+            fntv[t] += 1.0;
+        }
+    }
+    let mut f1 = 0.0;
+    let mut live = 0;
+    for c in 0..k {
+        let denom = 2.0 * tp[c] + fp[c] + fntv[c];
+        if denom > 0.0 {
+            f1 += 2.0 * tp[c] / denom;
+            live += 1;
+        }
+    }
+    if live == 0 { 0.0 } else { f1 / live as f64 }
+}
+
+/// Binary ROC-AUC from class-1 scores (rank statistic with tie
+/// correction). Multi-class inputs fall back to accuracy.
+pub fn auc_binary(y_true: &[f32], preds: &Predictions) -> f64 {
+    match preds {
+        Predictions::ClassScores { n_classes, scores } if *n_classes == 2 => {
+            let n = y_true.len();
+            let s: Vec<f64> = (0..n).map(|i| scores[i * 2 + 1] as f64).collect();
+            let order = crate::util::stats::argsort(&s);
+            // average ranks with ties
+            let sorted: Vec<f64> = order.iter().map(|&i| s[i]).collect();
+            let mut rank = vec![0.0; n];
+            let mut i = 0;
+            while i < n {
+                let mut j = i;
+                while j + 1 < n && sorted[j + 1] == sorted[i] {
+                    j += 1;
+                }
+                let avg = (i + j + 2) as f64 / 2.0;
+                for k in i..=j {
+                    rank[order[k]] = avg;
+                }
+                i = j + 1;
+            }
+            let n_pos = y_true.iter().filter(|&&t| t == 1.0).count() as f64;
+            let n_neg = n as f64 - n_pos;
+            if n_pos == 0.0 || n_neg == 0.0 {
+                return 0.5;
+            }
+            let rank_sum: f64 = y_true
+                .iter()
+                .zip(&rank)
+                .filter(|(t, _)| **t == 1.0)
+                .map(|(_, r)| *r)
+                .sum();
+            (rank_sum - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+        }
+        _ => accuracy(y_true, &preds.argmax_labels()),
+    }
+}
+
+pub fn mse(y_true: &[f32], y_pred: &[f32]) -> f64 {
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| ((t - p) as f64).powi(2))
+        .sum::<f64>()
+        / y_true.len() as f64
+}
+
+pub fn mae(y_true: &[f32], y_pred: &[f32]) -> f64 {
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| ((t - p) as f64).abs())
+        .sum::<f64>()
+        / y_true.len() as f64
+}
+
+pub fn r2(y_true: &[f32], y_pred: &[f32]) -> f64 {
+    let n = y_true.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mean: f64 = y_true.iter().map(|&t| t as f64).sum::<f64>() / n as f64;
+    let ss_tot: f64 = y_true
+        .iter()
+        .map(|&t| (t as f64 - mean).powi(2))
+        .sum();
+    let ss_res: f64 = y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| ((t - p) as f64).powi(2))
+        .sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// The paper's Fig 7 relative-MSE improvement:
+/// Δ(m1, m2) = (s(m2) - s(m1)) / max(s(m1), s(m2)).
+pub fn relative_mse_improvement(mse_ours: f64, mse_theirs: f64) -> f64 {
+    let denom = mse_ours.max(mse_theirs);
+    if denom <= 0.0 {
+        0.0
+    } else {
+        (mse_theirs - mse_ours) / denom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_accuracy_weights_classes_equally() {
+        // 90 of class 0 all right, 10 of class 1 all wrong:
+        // accuracy 0.9 but balanced accuracy 0.5
+        let mut yt = vec![0.0f32; 90];
+        yt.extend(vec![1.0f32; 10]);
+        let yp = vec![0usize; 100];
+        assert!((accuracy(&yt, &yp) - 0.9).abs() < 1e-12);
+        assert!((balanced_accuracy(&yt, &yp) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_macro_perfect_is_one() {
+        let yt = [0.0f32, 1.0, 2.0, 1.0];
+        let yp = [0usize, 1, 2, 1];
+        assert!((f1_macro(&yt, &yp) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_ranks_separable_scores() {
+        let yt = [0.0f32, 0.0, 1.0, 1.0];
+        let preds = Predictions::ClassScores {
+            n_classes: 2,
+            scores: vec![0.9, 0.1, 0.8, 0.2, 0.3, 0.7, 0.4, 0.6],
+        };
+        assert!((auc_binary(&yt, &preds) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_handles_ties_as_half() {
+        let yt = [0.0f32, 1.0];
+        let preds = Predictions::ClassScores {
+            n_classes: 2,
+            scores: vec![0.5, 0.5, 0.5, 0.5],
+        };
+        assert!((auc_binary(&yt, &preds) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regression_metrics() {
+        let yt = [1.0f32, 2.0, 3.0];
+        let yp = [1.0f32, 2.0, 4.0];
+        assert!((mse(&yt, &yp) - 1.0 / 3.0).abs() < 1e-6);
+        assert!((mae(&yt, &yp) - 1.0 / 3.0).abs() < 1e-6);
+        assert!(r2(&yt, &yp) > 0.0 && r2(&yt, &yt) == 1.0);
+    }
+
+    #[test]
+    fn utility_negates_errors() {
+        let yt = [1.0f32, 2.0];
+        let p = Predictions::Values(vec![0.0, 0.0]);
+        assert!(Metric::Mse.utility(&yt, &p) < 0.0);
+        assert_eq!(Metric::Mse.utility(&yt, &p), -Metric::Mse.compute(&yt, &p));
+    }
+
+    #[test]
+    fn relative_improvement_matches_paper_formula() {
+        assert!((relative_mse_improvement(1.0, 2.0) - 0.5).abs() < 1e-12);
+        assert!((relative_mse_improvement(2.0, 1.0) + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metric_parse_roundtrip() {
+        for m in [Metric::BalancedAccuracy, Metric::Accuracy, Metric::F1Macro,
+                  Metric::Auc, Metric::Mse, Metric::Mae, Metric::R2] {
+            assert_eq!(Metric::parse(m.name()), Some(m));
+        }
+        assert_eq!(Metric::parse("nope"), None);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dataset substrate: core types, metrics, synthetic generators and
+//! the named registry standing in for the paper's OpenML/Kaggle
+//! corpora (see DESIGN.md "Substitutions").
+
+pub mod dataset;
+pub mod metrics;
+pub mod registry;
+pub mod synthetic;
+
+pub use dataset::{Dataset, Predictions, Split, Task};
+pub use metrics::Metric;
+pub use synthetic::{generate, GenKind, Profile};

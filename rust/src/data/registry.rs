@@ -1,0 +1,313 @@
+//! Named dataset registry reproducing the paper's experimental corpora
+//! as synthetic profiles (substitution documented in DESIGN.md):
+//!
+//! * 30 medium OpenML classification datasets (Fig 7, Tables 1/4-6)
+//! * 10 large classification datasets (Fig 8, Table 10)
+//! * 20 OpenML regression datasets (Fig 7, Tables 1/4-6)
+//! * 6 Kaggle competition datasets (Fig 9, Table 3)
+//! * the imbalanced five of Table 2, pc4 (Figs 12/13), fri_c1 (Fig 14),
+//!   and the image-like dogs-vs-cats analogue (§6.3).
+//!
+//! Profiles are chosen so the *shape* of the paper's findings can
+//! reproduce: heterogeneous generator kinds (different winners),
+//! realistic size ladders (scaled down for a single core) and the same
+//! names the paper's tables reference.
+
+use super::dataset::Task;
+use super::synthetic::{GenKind, Profile};
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a for stable per-name seeds
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn cls(name: &str, gen: GenKind, n: usize, d: usize, k: usize,
+       noise: f64, imbalance: f64) -> Profile {
+    Profile {
+        name: name.to_string(),
+        task: Task::Classification { n_classes: k },
+        gen,
+        n,
+        d,
+        noise,
+        imbalance,
+        redundant: d / 4,
+        wild_scales: name_seed(name) % 3 == 0,
+        seed: name_seed(name),
+    }
+}
+
+fn reg(name: &str, gen: GenKind, n: usize, d: usize, noise: f64)
+    -> Profile {
+    Profile {
+        name: name.to_string(),
+        task: Task::Regression,
+        gen,
+        n,
+        d,
+        noise,
+        imbalance: 1.0,
+        redundant: d / 4,
+        wild_scales: name_seed(name) % 3 == 0,
+        seed: name_seed(name),
+    }
+}
+
+/// The paper's 30 medium classification datasets.
+pub fn medium_classification() -> Vec<Profile> {
+    use GenKind::*;
+    vec![
+        cls("kc1", SparseLinearCls { informative: 6 }, 1200, 21, 2, 0.15, 5.0),
+        cls("quake", Blobs { sep: 0.8 }, 1100, 3, 2, 0.25, 1.2),
+        cls("segment", Blobs { sep: 2.5 }, 1200, 19, 7, 0.02, 1.0),
+        cls("ozone-level-8hr", SparseLinearCls { informative: 8 }, 1300, 32, 2, 0.08, 15.0),
+        cls("space_ga_cls", NonlinearCls, 1500, 6, 2, 0.10, 1.0),
+        cls("sick", SparseLinearCls { informative: 5 }, 1900, 28, 2, 0.03, 15.0),
+        cls("pollen", Blobs { sep: 0.15 }, 1900, 5, 2, 0.40, 1.0),
+        cls("analcatdata_supreme", Checker { cells: 3 }, 1000, 7, 2, 0.05, 1.3),
+        cls("abalone", Rings, 2000, 8, 3, 0.20, 1.8),
+        cls("spambase", SparseLinearCls { informative: 12 }, 2300, 32, 2, 0.06, 1.5),
+        cls("waveform(2)", Blobs { sep: 1.2 }, 2500, 21, 3, 0.12, 1.0),
+        cls("phoneme", Rings, 2700, 5, 2, 0.10, 2.4),
+        cls("page-blocks(2)", Blobs { sep: 2.0 }, 2700, 10, 2, 0.04, 9.0),
+        cls("optdigits", Blobs { sep: 1.8 }, 2800, 32, 8, 0.03, 1.0),
+        cls("satimage", Blobs { sep: 1.5 }, 3200, 32, 6, 0.06, 2.4),
+        cls("wind_cls", NonlinearCls, 3300, 14, 2, 0.12, 1.0),
+        cls("delta_ailerons", Checker { cells: 2 }, 3500, 5, 2, 0.08, 1.3),
+        cls("puma8NH", NonlinearCls, 4000, 8, 2, 0.15, 1.0),
+        cls("kin8nm", NonlinearCls, 4000, 8, 2, 0.10, 1.0),
+        cls("puma32H", SparseLinearCls { informative: 4 }, 4000, 32, 2, 0.12, 1.0),
+        cls("cpu_act", PiecewiseCls { steps: 5 }, 4000, 21, 2, 0.06, 1.4),
+        cls("bank32nh", SparseLinearCls { informative: 9 }, 4000, 32, 2, 0.18, 1.3),
+        cls("mc1", SparseLinearCls { informative: 7 }, 4000, 32, 2, 0.04, 30.0),
+        cls("delta_elevators", Checker { cells: 2 }, 4000, 6, 2, 0.10, 1.2),
+        cls("jm1", SparseLinearCls { informative: 8 }, 4000, 21, 2, 0.22, 4.0),
+        cls("pendigits", Blobs { sep: 2.2 }, 4000, 16, 8, 0.02, 1.0),
+        cls("mammography", Blobs { sep: 1.6 }, 4000, 6, 2, 0.05, 42.0),
+        cls("ailerons", SparseLinearCls { informative: 10 }, 4000, 32, 2, 0.08, 1.2),
+        cls("eeg", Rings, 4000, 14, 2, 0.12, 1.1),
+        cls("pc4", Checker { cells: 3 }, 1450, 32, 2, 0.08, 7.0),
+    ]
+}
+
+/// The paper's 10 large classification datasets (sizes scaled down
+/// ~10x; ratios kept).
+pub fn large_classification() -> Vec<Profile> {
+    use GenKind::*;
+    vec![
+        cls("mnist_784", Blobs { sep: 1.9 }, 8000, 32, 8, 0.02, 1.0),
+        cls("letter(2)", Blobs { sep: 2.4 }, 6000, 16, 2, 0.01, 1.1),
+        cls("kropt", Checker { cells: 4 }, 6000, 6, 8, 0.05, 2.5),
+        cls("mv", PiecewiseCls { steps: 5 }, 8000, 10, 2, 0.01, 1.2),
+        cls("a9a", SparseLinearCls { informative: 14 }, 8000, 32, 2, 0.10, 3.2),
+        cls("covertype", Checker { cells: 5 }, 10000, 12, 7, 0.08, 8.0),
+        cls("2dplanes", PiecewiseCls { steps: 5 }, 8000, 10, 2, 0.06, 1.0),
+        cls("higgs", NonlinearCls, 10000, 28, 2, 0.22, 1.1),
+        cls("electricity", Checker { cells: 3 }, 9000, 8, 2, 0.07, 1.4),
+        cls("fried_cls", NonlinearCls, 8000, 10, 2, 0.05, 1.0),
+    ]
+}
+
+/// The paper's 20 regression datasets.
+pub fn regression() -> Vec<Profile> {
+    use GenKind::*;
+    vec![
+        reg("stock", LinearReg { informative: 6 }, 950, 9, 0.3),
+        reg("socmob", PiecewiseReg { steps: 4 }, 1150, 5, 0.4),
+        reg("Moneyball", LinearReg { informative: 8 }, 1230, 14, 0.5),
+        reg("insurance", PiecewiseReg { steps: 5 }, 1300, 7, 0.6),
+        reg("weather_izmir", LinearReg { informative: 5 }, 1460, 9, 0.3),
+        reg("us_crime", LinearReg { informative: 12 }, 1990, 32, 0.6),
+        reg("debutanizer", NonlinearReg, 2390, 7, 0.3),
+        reg("space_ga", NonlinearReg, 3100, 6, 0.25),
+        reg("pollen_reg", LinearReg { informative: 4 }, 3840, 5, 1.2),
+        reg("wind", LinearReg { informative: 10 }, 6570, 14, 0.8),
+        reg("bank8FM", NonlinearReg, 4500, 8, 0.15),
+        reg("bank32nh", LinearReg { informative: 9 }, 4500, 32, 1.0),
+        reg("kin8nm", NonlinearReg, 4500, 8, 0.2),
+        reg("puma8NH", NonlinearReg, 4500, 8, 1.0),
+        reg("cpu_act", PiecewiseReg { steps: 7 }, 4500, 21, 0.4),
+        reg("puma32H", NonlinearReg, 4500, 32, 0.3),
+        reg("cpu_small", PiecewiseReg { steps: 6 }, 4500, 12, 0.4),
+        reg("visualizing_soil", Friedman1, 4700, 4, 0.5),
+        reg("sulfur", NonlinearReg, 5000, 6, 0.2),
+        reg("rainfall_bangladesh", Friedman1, 4600, 10, 1.5),
+    ]
+}
+
+/// The six Kaggle competition tasks of Table 3 / Fig 9 (binary
+/// classification; samples scaled down, feature counts capped at 32).
+pub fn kaggle() -> Vec<Profile> {
+    use GenKind::*;
+    vec![
+        cls("influencers", SparseLinearCls { informative: 10 }, 1700, 22, 2, 0.12, 1.3),
+        cls("west-nile-virus", Blobs { sep: 1.1 }, 2600, 11, 2, 0.08, 18.0),
+        cls("employee-access", Checker { cells: 4 }, 3300, 9, 2, 0.05, 16.0),
+        cls("santander", SparseLinearCls { informative: 9 }, 4000, 32, 2, 0.10, 24.0),
+        cls("redhat-business", Checker { cells: 3 }, 8000, 12, 2, 0.06, 1.6),
+        cls("flavors-of-physics", NonlinearCls, 3800, 32, 2, 0.15, 1.4),
+    ]
+}
+
+/// Table 2's five imbalanced datasets (smote enrichment experiment).
+pub fn imbalanced() -> Vec<Profile> {
+    use GenKind::*;
+    vec![
+        cls("sick", SparseLinearCls { informative: 5 }, 1900, 28, 2, 0.03, 15.0),
+        cls("pc2", Blobs { sep: 1.4 }, 1500, 32, 2, 0.04, 45.0),
+        cls("abalone", Rings, 2000, 8, 3, 0.20, 1.8),
+        cls("page-blocks(2)", Blobs { sep: 2.0 }, 2700, 10, 2, 0.04, 9.0),
+        cls("hypothyroid(2)", SparseLinearCls { informative: 6 }, 1900, 27, 2, 0.01, 20.0),
+    ]
+}
+
+/// fri_c1 for the Fig 14 FE x HPO grid.
+pub fn fri_c1() -> Profile {
+    cls("fri_c1", GenKind::NonlinearCls, 1000, 10, 2, 0.05, 1.0)
+}
+
+/// Image-like dogs-vs-cats analogue for the embedding-selection
+/// experiment (§6.3): 1-D textures, raw "pixels" defeat tabular models.
+pub fn dogs_vs_cats() -> Profile {
+    let mut p = cls("dogs-vs-cats", GenKind::Texture, 1500, 32, 2, 0.02, 1.0);
+    p.redundant = 0;
+    p.wild_scales = false;
+    p
+}
+
+pub fn by_name(name: &str) -> Option<Profile> {
+    all_profiles().into_iter().find(|p| p.name == name)
+}
+
+pub fn all_profiles() -> Vec<Profile> {
+    let mut v = medium_classification();
+    v.extend(large_classification());
+    v.extend(regression().into_iter().map(|mut p| {
+        // disambiguate names shared across CLS/REG corpora
+        if by_name_in(&medium_classification(), &p.name)
+            || by_name_in(&large_classification(), &p.name) {
+            p.name = format!("{}_reg", p.name);
+        }
+        p
+    }));
+    v.extend(kaggle());
+    v.push(cls("pc2", GenKind::Blobs { sep: 1.4 }, 1500, 32, 2, 0.04, 45.0));
+    v.push(cls("hypothyroid(2)",
+               GenKind::SparseLinearCls { informative: 6 }, 1900, 27, 2,
+               0.01, 20.0));
+    v.push(fri_c1());
+    v.push(dogs_vs_cats());
+    // dedupe by name (keep first)
+    let mut seen = std::collections::HashSet::new();
+    v.retain(|p| seen.insert(p.name.clone()));
+    v
+}
+
+fn by_name_in(list: &[Profile], name: &str) -> bool {
+    list.iter().any(|p| p.name == name)
+}
+
+/// Meta-training corpus: extra synthetic tasks (never in the eval
+/// sets) standing in for the paper's 90 CLS + 50 REG meta datasets.
+pub fn meta_corpus(n_cls: usize, n_reg: usize) -> Vec<Profile> {
+    use GenKind::*;
+    let mut v = Vec::new();
+    for i in 0..n_cls {
+        let gens = [
+            Blobs { sep: 0.5 + 0.25 * (i % 9) as f64 },
+            Checker { cells: 2 + i % 4 },
+            Rings,
+            SparseLinearCls { informative: 3 + i % 10 },
+            NonlinearCls,
+            PiecewiseCls { steps: 5 },
+        ];
+        let gen = gens[i % gens.len()].clone();
+        v.push(cls(&format!("meta_cls_{i}"), gen,
+                   700 + 113 * (i % 12), 4 + (i * 3) % 29,
+                   2 + i % 5, 0.02 * (i % 10) as f64,
+                   1.0 + (i % 7) as f64 * 2.0));
+    }
+    for i in 0..n_reg {
+        let gens = [
+            Friedman1,
+            LinearReg { informative: 3 + i % 8 },
+            PiecewiseReg { steps: 3 + i % 6 },
+            NonlinearReg,
+        ];
+        let gen = gens[i % gens.len()].clone();
+        v.push(reg(&format!("meta_reg_{i}"), gen,
+                   700 + 97 * (i % 12), 4 + (i * 3) % 29,
+                   0.1 + 0.15 * (i % 8) as f64));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::generate;
+
+    #[test]
+    fn corpus_sizes_match_paper() {
+        assert_eq!(medium_classification().len(), 30);
+        assert_eq!(large_classification().len(), 10);
+        assert_eq!(regression().len(), 20);
+        assert_eq!(kaggle().len(), 6);
+        assert_eq!(imbalanced().len(), 5);
+    }
+
+    #[test]
+    fn all_profiles_have_unique_names() {
+        let all = all_profiles();
+        let names: std::collections::HashSet<_> =
+            all.iter().map(|p| p.name.clone()).collect();
+        assert_eq!(names.len(), all.len());
+    }
+
+    #[test]
+    fn by_name_finds_key_datasets() {
+        for name in ["quake", "pc4", "fri_c1", "dogs-vs-cats", "higgs",
+                     "space_ga", "pc2", "santander"] {
+            assert!(by_name(name).is_some(), "{name} missing");
+        }
+        assert!(by_name("not-a-dataset").is_none());
+    }
+
+    #[test]
+    fn every_profile_generates() {
+        for p in all_profiles() {
+            let mut small = p.clone();
+            small.n = 60; // keep the test fast
+            let ds = generate(&small);
+            assert_eq!(ds.n, 60, "{}", p.name);
+            assert_eq!(ds.d, p.d, "{}", p.name);
+            if p.task.is_classification() {
+                assert!(ds.y.iter().all(|&y| (y as usize) < p.n_classes()),
+                        "{}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn meta_corpus_disjoint_from_eval_sets() {
+        let eval: std::collections::HashSet<_> =
+            all_profiles().iter().map(|p| p.name.clone()).collect();
+        for p in meta_corpus(20, 10) {
+            assert!(!eval.contains(&p.name));
+        }
+    }
+
+    #[test]
+    fn imbalanced_profiles_are_imbalanced() {
+        for p in imbalanced() {
+            if p.name != "abalone" {
+                assert!(p.imbalance >= 9.0, "{}", p.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,400 @@
+//! Synthetic dataset generators.
+//!
+//! Substitution for the paper's OpenML/Kaggle corpora (see DESIGN.md):
+//! a heterogeneous family of generators chosen so that *different
+//! algorithm arms win on different datasets* — the property that drives
+//! the conditioning block's bandit behaviour — and so that feature
+//! engineering genuinely matters on some tasks (unscaled features,
+//! redundant columns, sparse signals, texture-like signals).
+
+use super::dataset::{Dataset, Task};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum GenKind {
+    /// Gaussian class clusters; `sep` is the centre spread (linear /
+    /// LDA-friendly at high sep).
+    Blobs { sep: f64 },
+    /// Checkerboard labels over the first two dims (tree/MLP-friendly).
+    Checker { cells: usize },
+    /// Concentric annuli (KNN/MLP-friendly, defeats linear models).
+    Rings,
+    /// Sparse linear logits in high-ish dim (l1/linear-friendly).
+    SparseLinearCls { informative: usize },
+    /// 1-D sinusoidal "texture" signals whose class is the dominant
+    /// frequency with random phase — raw pixels defeat pixel-wise
+    /// splits; frequency-band embeddings (fe::embedding) crack it.
+    Texture,
+    /// Friedman #1 regression benchmark (GBM/RF-friendly).
+    Friedman1,
+    /// Plain linear regression with noise (ridge-friendly).
+    LinearReg { informative: usize },
+    /// Sum of axis-aligned step functions (tree-friendly regression).
+    PiecewiseReg { steps: usize },
+    /// Smooth nonlinear surface of sin/product terms (MLP/KNN-friendly).
+    NonlinearReg,
+    /// NonlinearReg surface thresholded into a binary label (the
+    /// classification analogue of kin8nm/puma8NH-style tasks).
+    /// `imbalance` is ignored (labels are derived, not sampled).
+    NonlinearCls,
+    /// PiecewiseReg surface thresholded into a binary label.
+    PiecewiseCls { steps: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: String,
+    pub task: Task,
+    pub gen: GenKind,
+    pub n: usize,
+    pub d: usize,
+    /// Label-flip fraction (classification) or relative y-noise (reg).
+    pub noise: f64,
+    /// Largest:smallest class prior ratio (>= 1.0).
+    pub imbalance: f64,
+    /// Number of redundant columns (linear combos of informative ones)
+    /// appended within `d`.
+    pub redundant: usize,
+    /// Per-feature random scale/offset (exercises scalers).
+    pub wild_scales: bool,
+    pub seed: u64,
+}
+
+impl Profile {
+    pub fn n_classes(&self) -> usize {
+        self.task.n_classes()
+    }
+}
+
+/// Class priors with geometric imbalance ratio.
+fn class_priors(k: usize, imbalance: f64) -> Vec<f64> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let r = imbalance.max(1.0).powf(1.0 / (k.max(2) - 1) as f64);
+    let mut w: Vec<f64> = (0..k).map(|c| r.powi(c as i32)).collect();
+    w.reverse(); // class 0 = majority
+    let s: f64 = w.iter().sum();
+    w.into_iter().map(|x| x / s).collect()
+}
+
+pub fn generate(p: &Profile) -> Dataset {
+    let mut rng = Rng::new(p.seed ^ 0xDA7A);
+    let mut ds = Dataset::new(&p.name, p.task, p.d);
+    let k = p.n_classes();
+    let priors = class_priors(k, p.imbalance);
+
+    // informative dimensionality (rest = redundant + pure noise)
+    let d_inf = match &p.gen {
+        GenKind::Checker { .. } | GenKind::Rings => 2,
+        GenKind::SparseLinearCls { informative } => *informative,
+        GenKind::LinearReg { informative } => *informative,
+        GenKind::Friedman1 => 5,
+        GenKind::NonlinearCls => 3,
+        GenKind::Texture => p.d,
+        _ => (p.d / 2).clamp(2, 8),
+    }
+    .min(p.d);
+
+    // fixed per-dataset structures
+    let centers: Vec<Vec<f64>> = (0..k.max(1))
+        .map(|_| (0..d_inf).map(|_| rng.normal()).collect())
+        .collect();
+    let sparse_w: Vec<Vec<f64>> = (0..k.max(1))
+        .map(|_| (0..d_inf).map(|_| rng.normal()).collect())
+        .collect();
+    let lin_w: Vec<f64> = (0..d_inf).map(|_| rng.normal_ms(0.0, 2.0)).collect();
+    let step_thresh: Vec<(usize, f64, f64)> = (0..8)
+        .map(|_| (rng.below(d_inf.max(1)), rng.uniform(-1.0, 1.0),
+                  rng.normal_ms(0.0, 2.0)))
+        .collect();
+    let redundant_mix: Vec<(usize, usize, f64, f64)> = (0..p.redundant)
+        .map(|_| (rng.below(d_inf.max(1)), rng.below(d_inf.max(1)),
+                  rng.normal(), rng.normal()))
+        .collect();
+    let texture_freqs: Vec<f64> = (0..k.max(1))
+        .map(|c| 3.0 + 1.5 * c as f64 + rng.uniform(0.0, 0.3))
+        .collect();
+    // per-feature affine warp (exercises scalers)
+    let warps: Vec<(f64, f64)> = (0..p.d)
+        .map(|_| {
+            if p.wild_scales {
+                (rng.log_uniform(0.01, 100.0), rng.normal_ms(0.0, 10.0))
+            } else {
+                (1.0, 0.0)
+            }
+        })
+        .collect();
+
+    for _ in 0..p.n {
+        let mut x = vec![0.0f32; p.d];
+        let mut inf = vec![0.0f64; d_inf];
+        let y: f64;
+        match &p.gen {
+            GenKind::Blobs { sep } => {
+                let c = rng.weighted(&priors);
+                for j in 0..d_inf {
+                    inf[j] = centers[c][j] * sep + rng.normal();
+                }
+                y = c as f64;
+            }
+            GenKind::Checker { cells } => {
+                let c = *cells as f64;
+                for j in 0..d_inf {
+                    inf[j] = rng.uniform(-2.0, 2.0);
+                }
+                let cx = ((inf[0] + 2.0) / 4.0 * c).floor() as i64;
+                let cy = ((inf[1] + 2.0) / 4.0 * c).floor() as i64;
+                let cls = (cx + cy).rem_euclid(k.max(2) as i64) as usize;
+                y = cls.min(k - 1) as f64;
+            }
+            GenKind::Rings => {
+                let c = rng.weighted(&priors);
+                let radius = 1.0 + 1.5 * c as f64 + rng.normal_ms(0.0, 0.2);
+                let theta = rng.uniform(0.0, std::f64::consts::TAU);
+                inf[0] = radius * theta.cos();
+                inf[1] = radius * theta.sin();
+                y = c as f64;
+            }
+            GenKind::SparseLinearCls { .. } => {
+                for j in 0..d_inf {
+                    inf[j] = rng.normal();
+                }
+                let mut best = (f64::NEG_INFINITY, 0usize);
+                for (c, w) in sparse_w.iter().enumerate().take(k) {
+                    let mut logit = priors[c].ln();
+                    for j in 0..d_inf {
+                        logit += w[j] * inf[j];
+                    }
+                    if logit > best.0 {
+                        best = (logit, c);
+                    }
+                }
+                y = best.1 as f64;
+            }
+            GenKind::Texture => {
+                let c = rng.weighted(&priors);
+                let phase = rng.uniform(0.0, std::f64::consts::TAU);
+                let f = texture_freqs[c];
+                for j in 0..d_inf {
+                    let t = j as f64 / d_inf as f64;
+                    // heavy per-pixel noise: band energies average it
+                    // out, pixel-level models drown in it
+                    inf[j] = (std::f64::consts::TAU * f * t + phase).sin()
+                        + rng.normal_ms(0.0, 1.2);
+                }
+                y = c as f64;
+            }
+            GenKind::Friedman1 => {
+                for j in 0..d_inf {
+                    inf[j] = rng.f64();
+                }
+                // indices clamp so low-dim profiles degrade gracefully
+                let ix = |i: usize| inf[i.min(d_inf - 1)];
+                y = 10.0 * (std::f64::consts::PI * ix(0) * ix(1)).sin()
+                    + 20.0 * (ix(2) - 0.5).powi(2)
+                    + 10.0 * ix(3)
+                    + 5.0 * ix(4);
+            }
+            GenKind::LinearReg { .. } => {
+                for j in 0..d_inf {
+                    inf[j] = rng.normal();
+                }
+                y = crate::util::linalg::dot(&inf, &lin_w);
+            }
+            GenKind::PiecewiseReg { steps } => {
+                for j in 0..d_inf {
+                    inf[j] = rng.uniform(-2.0, 2.0);
+                }
+                let mut acc = 0.0;
+                for (j, t, h) in step_thresh.iter().take(*steps) {
+                    if inf[*j] > *t {
+                        acc += h;
+                    }
+                }
+                y = acc;
+            }
+            GenKind::NonlinearReg => {
+                for j in 0..d_inf {
+                    inf[j] = rng.normal();
+                }
+                y = (3.0 * inf[0]).sin() * inf[1.min(d_inf - 1)]
+                    + inf[(2).min(d_inf - 1)].powi(2)
+                    - inf[0] * 0.5;
+            }
+            GenKind::NonlinearCls => {
+                for j in 0..d_inf {
+                    inf[j] = rng.normal();
+                }
+                let s = (3.0 * inf[0]).sin() * inf[1.min(d_inf - 1)]
+                    + inf[(2).min(d_inf - 1)].powi(2)
+                    - inf[0] * 0.5;
+                // ~median of the surface under standard normals
+                y = if s > 0.85 { 1.0 } else { 0.0 };
+            }
+            GenKind::PiecewiseCls { steps } => {
+                for j in 0..d_inf {
+                    inf[j] = rng.uniform(-2.0, 2.0);
+                }
+                let mut acc = 0.0;
+                for (j, t, h) in step_thresh.iter().take(*steps) {
+                    if inf[*j] > *t {
+                        acc += h;
+                    }
+                }
+                y = if acc > 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+
+        // assemble feature row: informative | redundant | noise
+        for j in 0..d_inf {
+            x[j] = inf[j] as f32;
+        }
+        for (r, (a, b, wa, wb)) in redundant_mix.iter().enumerate() {
+            let idx = d_inf + r;
+            if idx >= p.d {
+                break;
+            }
+            x[idx] = (wa * inf[*a] + wb * inf[*b]
+                + rng.normal_ms(0.0, 0.05)) as f32;
+        }
+        for j in (d_inf + p.redundant.min(p.d - d_inf))..p.d {
+            x[j] = rng.normal() as f32;
+        }
+        // affine warp per feature
+        for (j, v) in x.iter_mut().enumerate() {
+            *v = (*v as f64 * warps[j].0 + warps[j].1) as f32;
+        }
+
+        // label / target noise
+        let y_final = if p.task.is_classification() {
+            if rng.bool(p.noise) {
+                rng.below(k) as f64
+            } else {
+                y
+            }
+        } else {
+            y + rng.normal_ms(0.0, p.noise.max(1e-9))
+        };
+        ds.push_row(&x, y_final as f32);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(name: &str, gen: GenKind, task: Task) -> Profile {
+        Profile {
+            name: name.into(),
+            task,
+            gen,
+            n: 400,
+            d: 10,
+            noise: 0.0,
+            imbalance: 1.0,
+            redundant: 2,
+            wild_scales: false,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let p = base("a", GenKind::Blobs { sep: 2.0 },
+                     Task::Classification { n_classes: 3 });
+        let d1 = generate(&p);
+        let d2 = generate(&p);
+        assert_eq!(d1.x, d2.x);
+        assert_eq!(d1.y, d2.y);
+        let mut p2 = p.clone();
+        p2.seed = 8;
+        assert_ne!(generate(&p2).x, d1.x);
+    }
+
+    #[test]
+    fn shapes_and_label_range() {
+        for (gen, task) in [
+            (GenKind::Blobs { sep: 2.0 }, Task::Classification { n_classes: 4 }),
+            (GenKind::Checker { cells: 4 }, Task::Classification { n_classes: 2 }),
+            (GenKind::Rings, Task::Classification { n_classes: 3 }),
+            (GenKind::SparseLinearCls { informative: 5 },
+             Task::Classification { n_classes: 2 }),
+            (GenKind::Texture, Task::Classification { n_classes: 2 }),
+            (GenKind::Friedman1, Task::Regression),
+            (GenKind::LinearReg { informative: 4 }, Task::Regression),
+            (GenKind::PiecewiseReg { steps: 5 }, Task::Regression),
+            (GenKind::NonlinearReg, Task::Regression),
+        ] {
+            let p = base("t", gen, task);
+            let ds = generate(&p);
+            assert_eq!(ds.n, 400);
+            assert_eq!(ds.x.len(), 400 * 10);
+            if task.is_classification() {
+                let k = task.n_classes();
+                assert!(ds.y.iter().all(|&y| (y as usize) < k));
+                // every class appears
+                assert!(ds.class_counts().iter().all(|&c| c > 0),
+                        "{:?}", ds.class_counts());
+            } else {
+                assert!(ds.y.iter().any(|&y| y != ds.y[0]));
+            }
+        }
+    }
+
+    #[test]
+    fn imbalance_skews_priors() {
+        let mut p = base("im", GenKind::Blobs { sep: 2.0 },
+                         Task::Classification { n_classes: 2 });
+        p.imbalance = 9.0;
+        p.n = 2000;
+        let ds = generate(&p);
+        let counts = ds.class_counts();
+        let ratio = counts[0] as f64 / counts[1].max(1) as f64;
+        assert!(ratio > 5.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn label_noise_flips_labels() {
+        let mut p = base("n", GenKind::Blobs { sep: 6.0 },
+                         Task::Classification { n_classes: 2 });
+        p.n = 2000;
+        let clean = generate(&p);
+        p.noise = 0.3;
+        let noisy = generate(&p);
+        let diff = clean.y.iter().zip(&noisy.y)
+            .filter(|(a, b)| a != b).count();
+        assert!(diff > 100, "diff={diff}");
+    }
+
+    #[test]
+    fn wild_scales_change_feature_magnitudes() {
+        let mut p = base("w", GenKind::Blobs { sep: 2.0 },
+                         Task::Classification { n_classes: 2 });
+        p.wild_scales = true;
+        let ds = generate(&p);
+        let rows: Vec<usize> = (0..ds.n).collect();
+        let (_, std) = ds.col_stats(&rows);
+        let max = std.iter().cloned().fold(0.0, f64::max);
+        let min = std.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min.max(1e-12) > 10.0, "scales too uniform");
+    }
+
+    #[test]
+    fn rings_are_not_linearly_separable_but_radial() {
+        let p = base("r", GenKind::Rings,
+                     Task::Classification { n_classes: 2 });
+        let ds = generate(&p);
+        // radius separates classes almost perfectly
+        let mut correct = 0;
+        for i in 0..ds.n {
+            let r = (ds.row(i)[0].powi(2) + ds.row(i)[1].powi(2)).sqrt();
+            let pred = if r < 1.75 { 0 } else { 1 };
+            if pred == ds.label(i) {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / ds.n as f64 > 0.9);
+    }
+}

@@ -1,0 +1,292 @@
+//! Ensemble methods (Appendix A.2.1): ensemble selection (the
+//! default, size 50 in the paper — scaled here), bagging, blending and
+//! stacking over the top-N models recorded during search.
+//!
+//! All methods operate on *validation* predictions to pick weights and
+//! are then applied to test predictions of the same members.
+
+use crate::data::dataset::Predictions;
+use crate::data::metrics::Metric;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnsembleMethod {
+    None,
+    /// Caruana-style greedy forward selection with replacement.
+    Selection,
+    /// Uniform average of all members.
+    Bagging,
+    /// Weights tuned by coordinate ascent on validation utility.
+    Blending,
+    /// A softmax-regression stacker trained on member predictions.
+    Stacking,
+}
+
+impl EnsembleMethod {
+    pub fn parse(s: &str) -> Option<EnsembleMethod> {
+        Some(match s {
+            "none" => EnsembleMethod::None,
+            "selection" | "ensemble_selection" => {
+                EnsembleMethod::Selection
+            }
+            "bagging" => EnsembleMethod::Bagging,
+            "blending" => EnsembleMethod::Blending,
+            "stacking" => EnsembleMethod::Stacking,
+            _ => return None,
+        })
+    }
+}
+
+/// Build ensemble weights from members' validation predictions.
+/// Returns one weight per member (not necessarily normalised; zero =
+/// dropped).
+pub fn fit_weights(method: EnsembleMethod, metric: Metric,
+                   y_valid: &[f32], member_preds: &[Predictions],
+                   rounds: usize, rng: &mut Rng) -> Vec<f64> {
+    let m = member_preds.len();
+    if m == 0 {
+        return Vec::new();
+    }
+    match method {
+        EnsembleMethod::None => {
+            // best single member
+            let mut best = (0usize, f64::NEG_INFINITY);
+            for (i, p) in member_preds.iter().enumerate() {
+                let u = metric.utility(y_valid, p);
+                if u > best.1 {
+                    best = (i, u);
+                }
+            }
+            let mut w = vec![0.0; m];
+            w[best.0] = 1.0;
+            w
+        }
+        EnsembleMethod::Bagging => vec![1.0 / m as f64; m],
+        EnsembleMethod::Selection => {
+            // greedy forward selection with replacement
+            let mut counts = vec![0usize; m];
+            let mut picked = 0usize;
+            let rounds = rounds.max(1);
+            let mut current: Option<Predictions> = None;
+            for _ in 0..rounds {
+                let mut best: Option<(usize, f64)> = None;
+                for i in 0..m {
+                    let cand = match &current {
+                        None => member_preds[i].clone(),
+                        Some(cur) => {
+                            let w_cur =
+                                picked as f64 / (picked + 1) as f64;
+                            let w_new = 1.0 / (picked + 1) as f64;
+                            Predictions::weighted_sum(&[
+                                (cur, w_cur),
+                                (&member_preds[i], w_new),
+                            ])
+                        }
+                    };
+                    let u = metric.utility(y_valid, &cand);
+                    if best.map(|(_, b)| u > b).unwrap_or(true) {
+                        best = Some((i, u));
+                    }
+                }
+                let (i, _) = best.unwrap();
+                counts[i] += 1;
+                picked += 1;
+                let w_cur = (picked - 1) as f64 / picked as f64;
+                let w_new = 1.0 / picked as f64;
+                current = Some(match &current {
+                    None => member_preds[i].clone(),
+                    Some(cur) => Predictions::weighted_sum(&[
+                        (cur, w_cur),
+                        (&member_preds[i], w_new),
+                    ]),
+                });
+            }
+            counts.iter().map(|&c| c as f64 / picked as f64).collect()
+        }
+        EnsembleMethod::Blending => {
+            // coordinate ascent on the simplex
+            let mut w = vec![1.0 / m as f64; m];
+            let mut best_u = ensemble_utility(metric, y_valid,
+                                              member_preds, &w);
+            for _pass in 0..3 {
+                for i in 0..m {
+                    for &delta in &[0.3, -0.3, 0.1, -0.1] {
+                        let mut w2 = w.clone();
+                        w2[i] = (w2[i] + delta).max(0.0);
+                        let s: f64 = w2.iter().sum();
+                        if s <= 0.0 {
+                            continue;
+                        }
+                        for v in &mut w2 {
+                            *v /= s;
+                        }
+                        let u = ensemble_utility(metric, y_valid,
+                                                 member_preds, &w2);
+                        if u > best_u {
+                            best_u = u;
+                            w = w2;
+                        }
+                    }
+                }
+            }
+            w
+        }
+        EnsembleMethod::Stacking => {
+            // per-member reliability stacker: weight ∝ exp(utility/τ),
+            // refined by a blending pass (keeps the implementation
+            // robust for both tasks without a full meta-learner)
+            let utils: Vec<f64> = member_preds
+                .iter()
+                .map(|p| metric.utility(y_valid, p))
+                .collect();
+            let max = utils.iter().cloned().fold(f64::NEG_INFINITY,
+                                                 f64::max);
+            let spread = crate::util::stats::std_dev(&utils).max(1e-6);
+            let mut w: Vec<f64> = utils
+                .iter()
+                .map(|u| ((u - max) / spread).exp())
+                .collect();
+            let s: f64 = w.iter().sum();
+            for v in &mut w {
+                *v /= s;
+            }
+            // one refinement pass of random pairwise transfer
+            let mut best_u = ensemble_utility(metric, y_valid,
+                                              member_preds, &w);
+            for _ in 0..3 * m {
+                let (i, j) = (rng.below(m), rng.below(m));
+                if i == j {
+                    continue;
+                }
+                let mut w2 = w.clone();
+                let t = w2[i] * 0.5;
+                w2[i] -= t;
+                w2[j] += t;
+                let u = ensemble_utility(metric, y_valid, member_preds,
+                                         &w2);
+                if u > best_u {
+                    best_u = u;
+                    w = w2;
+                }
+            }
+            w
+        }
+    }
+}
+
+/// Combine member predictions with weights (zeros dropped).
+pub fn combine(member_preds: &[Predictions], weights: &[f64])
+    -> Predictions {
+    let live: Vec<(&Predictions, f64)> = member_preds
+        .iter()
+        .zip(weights)
+        .filter(|(_, &w)| w > 1e-12)
+        .map(|(p, &w)| (p, w))
+        .collect();
+    assert!(!live.is_empty(), "empty ensemble");
+    let total: f64 = live.iter().map(|(_, w)| w).sum();
+    let normed: Vec<(&Predictions, f64)> =
+        live.into_iter().map(|(p, w)| (p, w / total)).collect();
+    Predictions::weighted_sum(&normed)
+}
+
+fn ensemble_utility(metric: Metric, y: &[f32], preds: &[Predictions],
+                    w: &[f64]) -> f64 {
+    if w.iter().all(|&x| x <= 1e-12) {
+        return f64::NEG_INFINITY;
+    }
+    metric.utility(y, &combine(preds, w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three binary classifiers: one good, one ok, one anti-correlated.
+    fn setup() -> (Vec<f32>, Vec<Predictions>) {
+        let y: Vec<f32> = (0..40).map(|i| (i % 2) as f32).collect();
+        let good = Predictions::ClassScores {
+            n_classes: 2,
+            scores: y.iter().flat_map(|&t| {
+                if t == 1.0 { vec![0.2, 0.8] } else { vec![0.8, 0.2] }
+            }).collect(),
+        };
+        // ok: wrong on every 5th sample
+        let ok = Predictions::ClassScores {
+            n_classes: 2,
+            scores: y.iter().enumerate().flat_map(|(i, &t)| {
+                let correct = i % 5 != 0;
+                let hit = if correct { t } else { 1.0 - t };
+                if hit == 1.0 { vec![0.3, 0.7] } else { vec![0.7, 0.3] }
+            }).collect(),
+        };
+        let anti = Predictions::ClassScores {
+            n_classes: 2,
+            scores: y.iter().flat_map(|&t| {
+                if t == 1.0 { vec![0.9, 0.1] } else { vec![0.1, 0.9] }
+            }).collect(),
+        };
+        (y, vec![good, ok, anti])
+    }
+
+    #[test]
+    fn selection_prefers_the_good_member() {
+        let (y, preds) = setup();
+        let mut rng = Rng::new(0);
+        let w = fit_weights(EnsembleMethod::Selection,
+                            Metric::BalancedAccuracy, &y, &preds, 10,
+                            &mut rng);
+        assert!(w[0] > w[2], "{w:?}");
+        assert!(w[2] < 0.2, "anti member should be mostly dropped {w:?}");
+        let combined = combine(&preds, &w);
+        let acc = Metric::BalancedAccuracy.utility(&y, &combined);
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn all_methods_beat_or_match_worst_member() {
+        let (y, preds) = setup();
+        let worst = preds
+            .iter()
+            .map(|p| Metric::BalancedAccuracy.utility(&y, p))
+            .fold(f64::INFINITY, f64::min);
+        for method in [EnsembleMethod::None, EnsembleMethod::Selection,
+                       EnsembleMethod::Bagging, EnsembleMethod::Blending,
+                       EnsembleMethod::Stacking] {
+            let mut rng = Rng::new(1);
+            let w = fit_weights(method, Metric::BalancedAccuracy, &y,
+                                &preds, 10, &mut rng);
+            assert_eq!(w.len(), 3, "{method:?}");
+            let u = Metric::BalancedAccuracy.utility(
+                &y, &combine(&preds, &w));
+            assert!(u >= worst, "{method:?}: {u} < {worst}");
+        }
+    }
+
+    #[test]
+    fn regression_ensembling_works() {
+        let y: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let a = Predictions::Values(y.iter().map(|v| v + 1.0).collect());
+        let b = Predictions::Values(y.iter().map(|v| v - 1.0).collect());
+        let mut rng = Rng::new(2);
+        let w = fit_weights(EnsembleMethod::Blending, Metric::Mse, &y,
+                            &[a.clone(), b.clone()], 10, &mut rng);
+        let u = Metric::Mse.utility(&y, &combine(&[a, b], &w));
+        // blending the +1/-1 biased predictors should nearly cancel
+        assert!(u > -0.3, "mse utility={u}");
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(EnsembleMethod::parse("selection"),
+                   Some(EnsembleMethod::Selection));
+        assert_eq!(EnsembleMethod::parse("nope"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty ensemble")]
+    fn combine_rejects_all_zero_weights() {
+        let (_, preds) = setup();
+        let _ = combine(&preds, &[0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Balancing stage (Fig 2 stage 3).
+//!
+//! Balancers act on the *training rows only*: they return an augmented
+//! training index/row set while validation and test rows stay
+//! untouched. Two operators ship by default (`none`,
+//! `weight_balancer` — implemented as class re-sampling since the
+//! compiled trainers take binary row masks, not per-row weights), and
+//! `smote_balancer` is the search-space *enrichment* of Table 2 that
+//! auto-sklearn cannot express.
+
+use crate::data::dataset::Dataset;
+use crate::space::{Config, ConfigSpace};
+use crate::util::rng::Rng;
+
+pub fn balancer_names(enriched: bool) -> Vec<&'static str> {
+    if enriched {
+        vec!["none", "weight_balancer", "smote_balancer"]
+    } else {
+        vec!["none", "weight_balancer"]
+    }
+}
+
+pub fn balancer_space(name: &str) -> ConfigSpace {
+    match name {
+        "smote_balancer" => ConfigSpace::new()
+            .int("k_neighbors", 1, 7, 5)
+            .float("target_ratio", 0.5, 1.0, 1.0),
+        _ => ConfigSpace::new(),
+    }
+}
+
+/// Result of balancing: synthetic/duplicated rows to append to the
+/// dataset, all of which belong to the training set.
+pub struct Balanced {
+    pub extra_x: Vec<f32>,
+    pub extra_y: Vec<f32>,
+    pub n_extra: usize,
+}
+
+pub fn apply_balancer(name: &str, ds: &Dataset, train: &[usize],
+                      cfg: &Config, rng: &mut Rng) -> Balanced {
+    let empty = Balanced { extra_x: Vec::new(), extra_y: Vec::new(),
+                           n_extra: 0 };
+    if !ds.task.is_classification() || name == "none" {
+        return empty;
+    }
+    let k = ds.task.n_classes();
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for &i in train {
+        by_class[ds.label(i).min(k - 1)].push(i);
+    }
+    let max_count = by_class.iter().map(|v| v.len()).max().unwrap_or(0);
+    if max_count == 0 {
+        return empty;
+    }
+    match name {
+        "weight_balancer" => {
+            // oversample minority classes by duplication up to parity
+            let mut out = empty;
+            for members in by_class.iter().filter(|m| !m.is_empty()) {
+                let deficit = max_count - members.len();
+                for _ in 0..deficit {
+                    let &i = rng.choice(members);
+                    out.extra_x.extend_from_slice(ds.row(i));
+                    out.extra_y.push(ds.y[i]);
+                    out.n_extra += 1;
+                }
+            }
+            out
+        }
+        "smote_balancer" => {
+            // synthetic minority oversampling: interpolate towards a
+            // random one of the k nearest same-class neighbours
+            let kn = cfg.usize_or("k_neighbors", 5).max(1);
+            let ratio = cfg.f64_or("target_ratio", 1.0).clamp(0.1, 1.0);
+            let mut out = empty;
+            for members in by_class.iter().filter(|m| !m.is_empty()) {
+                let target = (max_count as f64 * ratio) as usize;
+                if members.len() >= target {
+                    continue;
+                }
+                let deficit = target - members.len();
+                for _ in 0..deficit {
+                    let &i = rng.choice(members);
+                    // k nearest same-class neighbours of i (brute force
+                    // over the minority class, which is small)
+                    let mut dists: Vec<(f64, usize)> = members
+                        .iter()
+                        .filter(|&&j| j != i)
+                        .map(|&j| {
+                            let d2: f64 = ds
+                                .row(i)
+                                .iter()
+                                .zip(ds.row(j))
+                                .map(|(a, b)| ((a - b) as f64).powi(2))
+                                .sum();
+                            (d2, j)
+                        })
+                        .collect();
+                    if dists.is_empty() {
+                        // singleton class: duplicate
+                        out.extra_x.extend_from_slice(ds.row(i));
+                        out.extra_y.push(ds.y[i]);
+                        out.n_extra += 1;
+                        continue;
+                    }
+                    dists.sort_by(|a, b| a.0.partial_cmp(&b.0)
+                        .unwrap_or(std::cmp::Ordering::Equal));
+                    let (_, j) = dists[rng.below(dists.len().min(kn))];
+                    let t = rng.f64();
+                    let row: Vec<f32> = ds
+                        .row(i)
+                        .iter()
+                        .zip(ds.row(j))
+                        .map(|(a, b)| a + (t as f32) * (b - a))
+                        .collect();
+                    out.extra_x.extend_from_slice(&row);
+                    out.extra_y.push(ds.y[i]);
+                    out.n_extra += 1;
+                }
+            }
+            out
+        }
+        other => panic!("unknown balancer {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Task;
+    use crate::data::synthetic::{generate, GenKind, Profile};
+
+    fn imbalanced_ds() -> (Dataset, Vec<usize>) {
+        let p = Profile {
+            name: "imb".into(),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 2.0 },
+            n: 300,
+            d: 4,
+            noise: 0.0,
+            imbalance: 8.0,
+            redundant: 0,
+            wild_scales: false,
+            seed: 5,
+        };
+        let ds = generate(&p);
+        let train: Vec<usize> = (0..240).collect();
+        (ds, train)
+    }
+
+    fn class_counts(ds: &Dataset, train: &[usize], extra_y: &[f32])
+        -> Vec<usize> {
+        let k = ds.task.n_classes();
+        let mut c = vec![0usize; k];
+        for &i in train {
+            c[ds.label(i)] += 1;
+        }
+        for &y in extra_y {
+            c[y as usize] += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn none_is_noop() {
+        let (ds, train) = imbalanced_ds();
+        let mut rng = Rng::new(0);
+        let b = apply_balancer("none", &ds, &train, &Config::new(), &mut rng);
+        assert_eq!(b.n_extra, 0);
+    }
+
+    #[test]
+    fn weight_balancer_reaches_parity() {
+        let (ds, train) = imbalanced_ds();
+        let mut rng = Rng::new(1);
+        let b = apply_balancer("weight_balancer", &ds, &train,
+                               &Config::new(), &mut rng);
+        let counts = class_counts(&ds, &train, &b.extra_y);
+        assert_eq!(counts[0], counts[1]);
+        assert!(b.n_extra > 0);
+        assert_eq!(b.extra_x.len(), b.n_extra * ds.d);
+    }
+
+    #[test]
+    fn smote_generates_interpolated_minority_rows() {
+        let (ds, train) = imbalanced_ds();
+        let mut rng = Rng::new(2);
+        let cfg = balancer_space("smote_balancer").default_config();
+        let b = apply_balancer("smote_balancer", &ds, &train, &cfg,
+                               &mut rng);
+        assert!(b.n_extra > 0);
+        // synthetic rows are minority class only
+        assert!(b.extra_y.iter().all(|&y| y == 1.0));
+        // every synthetic row lies within the minority bounding box
+        let minority: Vec<usize> = train.iter().copied()
+            .filter(|&i| ds.label(i) == 1).collect();
+        for col in 0..ds.d {
+            let lo = minority.iter()
+                .map(|&i| ds.row(i)[col])
+                .fold(f32::INFINITY, f32::min);
+            let hi = minority.iter()
+                .map(|&i| ds.row(i)[col])
+                .fold(f32::NEG_INFINITY, f32::max);
+            for r in 0..b.n_extra {
+                let v = b.extra_x[r * ds.d + col];
+                assert!(v >= lo - 1e-4 && v <= hi + 1e-4,
+                        "col {col} val {v} outside [{lo},{hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn regression_tasks_skip_balancing() {
+        let p = Profile {
+            name: "r".into(),
+            task: Task::Regression,
+            gen: GenKind::LinearReg { informative: 2 },
+            n: 50,
+            d: 3,
+            noise: 0.1,
+            imbalance: 1.0,
+            redundant: 0,
+            wild_scales: false,
+            seed: 1,
+        };
+        let ds = generate(&p);
+        let train: Vec<usize> = (0..40).collect();
+        let mut rng = Rng::new(3);
+        let b = apply_balancer("weight_balancer", &ds, &train,
+                               &Config::new(), &mut rng);
+        assert_eq!(b.n_extra, 0);
+    }
+}

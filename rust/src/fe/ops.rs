@@ -1,0 +1,934 @@
+//! Feature-engineering operators (the paper's Table 13 analogue).
+//!
+//! Every operator follows the leak-free protocol: `fit` sees only the
+//! training rows, the returned [`Fitted`] op transforms *all* rows.
+//! Operators are grouped into the pipeline stages of Fig 2: scalers,
+//! balancers (see `fe::balance`), and feature transformers.
+
+use crate::data::dataset::Dataset;
+use crate::space::{Config, ConfigSpace};
+use crate::util::linalg::{top_eigs, Mat};
+use crate::util::rng::Rng;
+
+/// Maximum output width any transformer may produce (the evaluator
+/// further projects to the PJRT canonical D for compiled algorithms).
+pub const MAX_WIDTH: usize = 64;
+
+/// A fitted, immutable transform applied row-wise to a dataset.
+#[derive(Clone, Debug)]
+pub enum Fitted {
+    Identity,
+    /// x' = (x - shift) * scale, per column.
+    Affine { shift: Vec<f64>, scale: Vec<f64> },
+    /// Row-wise L2 normalisation.
+    RowNorm,
+    /// Rank-normalise through per-column training quantiles.
+    Quantile { grids: Vec<Vec<f64>>, normal_out: bool },
+    /// Keep the listed column indices.
+    Select(Vec<usize>),
+    /// x' = (x - mean) @ proj  (PCA/SVD/ICA/LDA projections).
+    Project { mean: Vec<f64>, proj: Mat },
+    /// Append products of column pairs.
+    CrossPairs(Vec<(usize, usize)>),
+    /// Random Fourier features: cos(x @ w + b) * sqrt(2/m).
+    Rff { w: Mat, b: Vec<f64> },
+    /// RBF similarity to landmark rows.
+    Nystroem { landmarks: Mat, gamma: f64 },
+    /// Random-threshold trees: each tree maps a row to its leaf index.
+    RandTrees { trees: Vec<Vec<(usize, f64)>> },
+    /// Cluster features and output cluster means.
+    Agglomerate { clusters: Vec<Vec<usize>> },
+    /// Composition (e.g. whiten then rotate, RFF then project).
+    Chain(Vec<Fitted>),
+}
+
+impl Fitted {
+    pub fn out_dim(&self, d_in: usize) -> usize {
+        match self {
+            Fitted::Identity | Fitted::Affine { .. } | Fitted::RowNorm
+            | Fitted::Quantile { .. } => d_in,
+            Fitted::Select(idx) => idx.len(),
+            Fitted::Project { proj, .. } => proj.cols,
+            Fitted::CrossPairs(pairs) => d_in + pairs.len(),
+            Fitted::Rff { w, .. } => w.cols,
+            Fitted::Nystroem { landmarks, .. } => landmarks.rows,
+            Fitted::RandTrees { trees } => trees.len(),
+            Fitted::Agglomerate { clusters } => clusters.len(),
+            Fitted::Chain(ops) => {
+                let mut d = d_in;
+                for op in ops {
+                    d = op.out_dim(d);
+                }
+                d
+            }
+        }
+    }
+
+    pub fn apply_row(&self, row: &[f32]) -> Vec<f32> {
+        match self {
+            Fitted::Identity => row.to_vec(),
+            Fitted::Affine { shift, scale } => row
+                .iter()
+                .enumerate()
+                .map(|(j, &v)| ((v as f64 - shift[j]) * scale[j]) as f32)
+                .collect(),
+            Fitted::RowNorm => {
+                let n: f64 = row.iter().map(|&v| (v as f64).powi(2)).sum();
+                let n = n.sqrt().max(1e-12);
+                row.iter().map(|&v| (v as f64 / n) as f32).collect()
+            }
+            Fitted::Quantile { grids, normal_out } => row
+                .iter()
+                .enumerate()
+                .map(|(j, &v)| {
+                    let g = &grids[j];
+                    let rank = match g.binary_search_by(|x| {
+                        x.partial_cmp(&(v as f64))
+                            .unwrap_or(std::cmp::Ordering::Less)
+                    }) {
+                        Ok(i) => i,
+                        Err(i) => i,
+                    };
+                    let q = rank as f64 / g.len().max(1) as f64;
+                    let q = q.clamp(0.001, 0.999);
+                    if *normal_out {
+                        inv_norm_cdf(q) as f32
+                    } else {
+                        q as f32
+                    }
+                })
+                .collect(),
+            Fitted::Select(idx) => idx.iter().map(|&j| row[j]).collect(),
+            Fitted::Project { mean, proj } => {
+                let centered: Vec<f64> = row
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &v)| v as f64 - mean[j])
+                    .collect();
+                (0..proj.cols)
+                    .map(|c| {
+                        let mut s = 0.0;
+                        for (j, &x) in centered.iter().enumerate() {
+                            s += x * proj[(j, c)];
+                        }
+                        s as f32
+                    })
+                    .collect()
+            }
+            Fitted::CrossPairs(pairs) => {
+                let mut out = row.to_vec();
+                for &(a, b) in pairs {
+                    out.push(row[a] * row[b]);
+                }
+                out
+            }
+            Fitted::Rff { w, b } => {
+                let m = w.cols;
+                let norm = (2.0 / m as f64).sqrt();
+                (0..m)
+                    .map(|c| {
+                        let mut s = b[c];
+                        for (j, &x) in row.iter().enumerate() {
+                            s += x as f64 * w[(j, c)];
+                        }
+                        (norm * s.cos()) as f32
+                    })
+                    .collect()
+            }
+            Fitted::Nystroem { landmarks, gamma } => (0..landmarks.rows)
+                .map(|l| {
+                    let mut d2 = 0.0;
+                    for (j, &x) in row.iter().enumerate() {
+                        let dlt = x as f64 - landmarks[(l, j)];
+                        d2 += dlt * dlt;
+                    }
+                    (-gamma * d2).exp() as f32
+                })
+                .collect(),
+            Fitted::RandTrees { trees } => trees
+                .iter()
+                .map(|splits| {
+                    let mut leaf = 0usize;
+                    for (depth, &(feat, thresh)) in splits.iter().enumerate() {
+                        let go_right =
+                            row.get(feat).map(|&v| v as f64 > thresh)
+                                .unwrap_or(false);
+                        if go_right {
+                            leaf |= 1 << depth;
+                        }
+                    }
+                    // scale to [0,1] for numeric stability downstream
+                    leaf as f32 / (1u32 << splits.len()) as f32
+                })
+                .collect(),
+            Fitted::Agglomerate { clusters } => clusters
+                .iter()
+                .map(|members| {
+                    let s: f32 = members.iter().map(|&j| row[j]).sum();
+                    s / members.len().max(1) as f32
+                })
+                .collect(),
+            Fitted::Chain(ops) => {
+                let mut cur = row.to_vec();
+                for op in ops {
+                    cur = op.apply_row(&cur);
+                }
+                cur
+            }
+        }
+    }
+
+    /// Transform a whole dataset (labels copied through).
+    pub fn apply(&self, ds: &Dataset) -> Dataset {
+        let d_out = self.out_dim(ds.d);
+        let mut out = Dataset::new(&ds.name, ds.task, d_out);
+        out.x.reserve(ds.n * d_out);
+        out.y.reserve(ds.n);
+        for i in 0..ds.n {
+            let row = self.apply_row(ds.row(i));
+            debug_assert_eq!(row.len(), d_out);
+            out.x.extend_from_slice(&row);
+            out.y.push(ds.y[i]);
+        }
+        out.n = ds.n;
+        out
+    }
+}
+
+/// Acklam-style rational approximation of the standard normal inverse
+/// CDF (enough precision for quantile-normal output).
+fn inv_norm_cdf(p: f64) -> f64 {
+    debug_assert!((0.0..1.0).contains(&p));
+    let a = [-3.969683028665376e+01, 2.209460984245205e+02,
+             -2.759285104469687e+02, 1.383577518672690e+02,
+             -3.066479806614716e+01, 2.506628277459239e+00];
+    let b = [-5.447609879822406e+01, 1.615858368580409e+02,
+             -1.556989798598866e+02, 6.680131188771972e+01,
+             -1.328068155288572e+01];
+    let c = [-7.784894002430293e-03, -3.223964580411365e-01,
+             -2.400758277161838e+00, -2.549732539343734e+00,
+             4.374664141464968e+00, 2.938163982698783e+00];
+    let d = [7.784695709041462e-03, 3.224671290700398e-01,
+             2.445134137142996e+00, 3.754408661907416e+00];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5])
+            / ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5])
+            * q
+            / (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r
+                + 1.0)
+    } else {
+        -inv_norm_cdf(1.0 - p)
+    }
+}
+
+// ====================================================================
+// Fitting helpers
+// ====================================================================
+
+fn train_stats(ds: &Dataset, train: &[usize]) -> (Vec<f64>, Vec<f64>) {
+    ds.col_stats(train)
+}
+
+fn col_values(ds: &Dataset, train: &[usize], j: usize) -> Vec<f64> {
+    train.iter().map(|&i| ds.row(i)[j] as f64).collect()
+}
+
+/// |pearson correlation| of feature j with the label/target.
+fn label_corr(ds: &Dataset, train: &[usize], j: usize) -> f64 {
+    let xs = col_values(ds, train, j);
+    let ys: Vec<f64> = train.iter().map(|&i| ds.y[i] as f64).collect();
+    let (mx, my) = (crate::util::stats::mean(&xs),
+                    crate::util::stats::mean(&ys));
+    let (mut num, mut vx, mut vy) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in xs.iter().zip(&ys) {
+        num += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    if vx <= 0.0 || vy <= 0.0 {
+        0.0
+    } else {
+        (num / (vx.sqrt() * vy.sqrt())).abs()
+    }
+}
+
+fn train_cov(ds: &Dataset, train: &[usize]) -> Mat {
+    let mut m = Mat::zeros(train.len(), ds.d);
+    for (r, &i) in train.iter().enumerate() {
+        for (j, &v) in ds.row(i).iter().enumerate() {
+            m[(r, j)] = v as f64;
+        }
+    }
+    m.covariance()
+}
+
+fn top_k_by_score(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a])
+        .unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k.max(1));
+    idx.sort_unstable();
+    idx
+}
+
+// ====================================================================
+// Scalers (Fig 2 stage 2)
+// ====================================================================
+
+pub fn scaler_names() -> Vec<&'static str> {
+    vec!["none", "minmax", "standard", "robust", "quantile", "normalizer"]
+}
+
+pub fn scaler_space(name: &str) -> ConfigSpace {
+    match name {
+        "quantile" => ConfigSpace::new()
+            .int("n_quantiles", 10, 200, 100)
+            .cat("output", &["uniform", "normal"], "uniform"),
+        "robust" => ConfigSpace::new()
+            .float("q_low", 0.05, 0.35, 0.25)
+            .float("q_high", 0.65, 0.95, 0.75),
+        _ => ConfigSpace::new(),
+    }
+}
+
+pub fn fit_scaler(name: &str, ds: &Dataset, train: &[usize], cfg: &Config)
+    -> Fitted {
+    match name {
+        "none" => Fitted::Identity,
+        "normalizer" => Fitted::RowNorm,
+        "minmax" => {
+            let d = ds.d;
+            let mut lo = vec![f64::INFINITY; d];
+            let mut hi = vec![f64::NEG_INFINITY; d];
+            for &i in train {
+                for (j, &v) in ds.row(i).iter().enumerate() {
+                    lo[j] = lo[j].min(v as f64);
+                    hi[j] = hi[j].max(v as f64);
+                }
+            }
+            let scale: Vec<f64> = lo
+                .iter()
+                .zip(&hi)
+                .map(|(l, h)| if h > l { 1.0 / (h - l) } else { 1.0 })
+                .collect();
+            Fitted::Affine { shift: lo, scale }
+        }
+        "standard" => {
+            let (mean, std) = train_stats(ds, train);
+            let scale = std.iter().map(|s| 1.0 / s.max(1e-9)).collect();
+            Fitted::Affine { shift: mean, scale }
+        }
+        "robust" => {
+            let ql = cfg.f64_or("q_low", 0.25);
+            let qh = cfg.f64_or("q_high", 0.75);
+            let mut shift = Vec::with_capacity(ds.d);
+            let mut scale = Vec::with_capacity(ds.d);
+            for j in 0..ds.d {
+                let xs = col_values(ds, train, j);
+                let med = crate::util::stats::median(&xs);
+                let iqr = crate::util::stats::quantile(&xs, qh)
+                    - crate::util::stats::quantile(&xs, ql);
+                shift.push(med);
+                scale.push(1.0 / iqr.abs().max(1e-9));
+            }
+            Fitted::Affine { shift, scale }
+        }
+        "quantile" => {
+            let nq = cfg.usize_or("n_quantiles", 100).clamp(4, 512);
+            let normal_out = cfg.str_or("output", "uniform") == "normal";
+            let grids = (0..ds.d)
+                .map(|j| {
+                    let mut xs = col_values(ds, train, j);
+                    xs.sort_by(|a, b| a.partial_cmp(b)
+                        .unwrap_or(std::cmp::Ordering::Equal));
+                    // subsample to nq grid points
+                    let step = (xs.len().max(1) as f64 / nq as f64).max(1.0);
+                    let mut g: Vec<f64> = (0..nq)
+                        .map(|q| xs[((q as f64 * step) as usize)
+                            .min(xs.len().saturating_sub(1))])
+                        .collect();
+                    g.dedup_by(|a, b| a == b);
+                    g
+                })
+                .collect();
+            Fitted::Quantile { grids, normal_out }
+        }
+        other => panic!("unknown scaler {other}"),
+    }
+}
+
+// ====================================================================
+// Feature transformers (Fig 2 stage 4; Table 13)
+// ====================================================================
+
+pub fn transformer_names() -> Vec<&'static str> {
+    vec![
+        "none", "pca", "svd", "fast_ica", "kernel_pca", "kitchen_sinks",
+        "nystroem", "polynomial", "cross_features", "feature_agglomeration",
+        "random_trees_embed", "select_percentile",
+        "select_generic_univariate", "extra_trees_preproc",
+        "linear_svm_preproc", "lda_decomposer",
+    ]
+}
+
+pub fn transformer_space(name: &str) -> ConfigSpace {
+    match name {
+        "pca" => ConfigSpace::new()
+            .float("keep_frac", 0.3, 0.999, 0.9)
+            .cat("whiten", &["false", "true"], "false"),
+        "svd" => ConfigSpace::new().int("n_components", 2, 24, 8),
+        "fast_ica" => ConfigSpace::new().int("n_components", 2, 24, 8),
+        "kernel_pca" => ConfigSpace::new()
+            .int("n_components", 2, 24, 10)
+            .log_float("gamma", 1e-3, 8.0, 0.5),
+        "kitchen_sinks" => ConfigSpace::new()
+            .int("n_components", 8, 48, 24)
+            .log_float("gamma", 1e-3, 8.0, 1.0),
+        "nystroem" => ConfigSpace::new()
+            .int("n_components", 8, 48, 24)
+            .log_float("gamma", 1e-3, 8.0, 0.5),
+        "polynomial" => ConfigSpace::new()
+            .cat("interaction_only", &["false", "true"], "false")
+            .int("top_k", 3, 8, 6),
+        "cross_features" => ConfigSpace::new().int("n_pairs", 2, 24, 8),
+        "feature_agglomeration" => ConfigSpace::new()
+            .int("n_clusters", 2, 24, 8)
+            .cat("linkage", &["mean"], "mean"),
+        "random_trees_embed" => ConfigSpace::new()
+            .int("n_trees", 4, 24, 10)
+            .int("depth", 2, 6, 4),
+        "select_percentile" => ConfigSpace::new()
+            .float("percentile", 0.1, 0.99, 0.5),
+        "select_generic_univariate" => ConfigSpace::new()
+            .float("alpha", 0.1, 0.99, 0.5)
+            .cat("score_func", &["corr", "variance"], "corr")
+            .cat("mode", &["percentile", "k_best"], "percentile"),
+        "extra_trees_preproc" => ConfigSpace::new()
+            .float("keep_frac", 0.2, 0.95, 0.6)
+            .int("n_stumps", 8, 64, 24),
+        "linear_svm_preproc" => ConfigSpace::new()
+            .float("keep_frac", 0.2, 0.95, 0.6)
+            .log_float("l2", 1e-5, 1.0, 1e-3),
+        _ => ConfigSpace::new(),
+    }
+}
+
+pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
+                       cfg: &Config, rng: &mut Rng) -> Fitted {
+    let d = ds.d;
+    match name {
+        "none" => Fitted::Identity,
+        "pca" => {
+            let keep = cfg.f64_or("keep_frac", 0.9);
+            let whiten = cfg.str_or("whiten", "false") == "true";
+            let cov = train_cov(ds, train);
+            let eigs = top_eigs(&cov, d.min(MAX_WIDTH), rng);
+            let total: f64 = eigs.iter().map(|(l, _)| l.max(0.0)).sum();
+            let mut cum = 0.0;
+            let mut k = 0;
+            for (l, _) in &eigs {
+                cum += l.max(0.0);
+                k += 1;
+                if total > 0.0 && cum / total >= keep {
+                    break;
+                }
+            }
+            let k = k.max(1);
+            let mean = {
+                let mut m = Mat::zeros(train.len(), d);
+                for (r, &i) in train.iter().enumerate() {
+                    for (j, &v) in ds.row(i).iter().enumerate() {
+                        m[(r, j)] = v as f64;
+                    }
+                }
+                m.col_means()
+            };
+            let mut proj = Mat::zeros(d, k);
+            for (c, (l, v)) in eigs.iter().take(k).enumerate() {
+                let w = if whiten { 1.0 / l.abs().sqrt().max(1e-9) } else { 1.0 };
+                for j in 0..d {
+                    proj[(j, c)] = v[j] * w;
+                }
+            }
+            Fitted::Project { mean, proj }
+        }
+        "svd" => {
+            let k = cfg.usize_or("n_components", 8).clamp(1, d);
+            // second-moment matrix (no centering)
+            let mut sm = Mat::zeros(d, d);
+            for &i in train {
+                let r = ds.row(i);
+                for a in 0..d {
+                    for b in 0..d {
+                        sm[(a, b)] += r[a] as f64 * r[b] as f64;
+                    }
+                }
+            }
+            sm.scale(1.0 / train.len().max(1) as f64);
+            let eigs = top_eigs(&sm, k, rng);
+            let mut proj = Mat::zeros(d, eigs.len());
+            for (c, (_, v)) in eigs.iter().enumerate() {
+                for j in 0..d {
+                    proj[(j, c)] = v[j];
+                }
+            }
+            Fitted::Project { mean: vec![0.0; d], proj }
+        }
+        "fast_ica" => {
+            // whiten via PCA then apply a random orthogonal rotation —
+            // the rotation-invariant subspace is what downstream models
+            // consume; true negentropy iteration adds little here.
+            let k = cfg.usize_or("n_components", 8).clamp(1, d);
+            let cov = train_cov(ds, train);
+            let eigs = top_eigs(&cov, k, rng);
+            let mean = {
+                let xs: Vec<usize> = train.to_vec();
+                ds.col_stats(&xs).0
+            };
+            let mut white = Mat::zeros(d, eigs.len());
+            for (c, (l, v)) in eigs.iter().enumerate() {
+                let w = 1.0 / l.abs().sqrt().max(1e-9);
+                for j in 0..d {
+                    white[(j, c)] = v[j] * w;
+                }
+            }
+            let rot = random_orthogonal(eigs.len(), rng);
+            let proj = white.matmul(&rot);
+            Fitted::Project { mean, proj }
+        }
+        "kernel_pca" => {
+            let k = cfg.usize_or("n_components", 10).clamp(1, MAX_WIDTH);
+            let gamma = cfg.f64_or("gamma", 0.5);
+            let m = (2 * k).clamp(8, MAX_WIDTH);
+            let rff = fit_rff(d, m, gamma, rng);
+            // project RFF features to top-k principal components
+            let rff_ds = rff.apply(ds);
+            let cov = train_cov(&rff_ds, train);
+            let eigs = top_eigs(&cov, k, rng);
+            let mean = rff_ds.col_stats(train).0;
+            let mut proj = Mat::zeros(m, eigs.len());
+            for (c, (_, v)) in eigs.iter().enumerate() {
+                for j in 0..m {
+                    proj[(j, c)] = v[j];
+                }
+            }
+            Fitted::Chain(vec![rff, Fitted::Project { mean, proj }])
+        }
+        "kitchen_sinks" => {
+            let m = cfg.usize_or("n_components", 24).clamp(4, MAX_WIDTH);
+            let gamma = cfg.f64_or("gamma", 1.0);
+            fit_rff(d, m, gamma, rng)
+        }
+        "nystroem" => {
+            let m = cfg.usize_or("n_components", 24)
+                .clamp(2, MAX_WIDTH.min(train.len()));
+            let gamma = cfg.f64_or("gamma", 0.5);
+            let picks = rng.sample_indices(train.len(), m);
+            let mut landmarks = Mat::zeros(m, d);
+            for (r, &pi) in picks.iter().enumerate() {
+                for (j, &v) in ds.row(train[pi]).iter().enumerate() {
+                    landmarks[(r, j)] = v as f64;
+                }
+            }
+            Fitted::Nystroem { landmarks, gamma }
+        }
+        "polynomial" => {
+            let inter_only = cfg.str_or("interaction_only", "false") == "true";
+            let top_k = cfg.usize_or("top_k", 6).clamp(2, 8).min(d);
+            // restrict to the highest-variance columns so width stays
+            // bounded (auto-sklearn caps width similarly)
+            let (_, std) = train_stats(ds, train);
+            let cols = top_k_by_score(&std, top_k);
+            let mut pairs = Vec::new();
+            for (ai, &a) in cols.iter().enumerate() {
+                let start = if inter_only { ai + 1 } else { ai };
+                for &b in &cols[start..] {
+                    pairs.push((a, b));
+                    if d + pairs.len() >= MAX_WIDTH {
+                        break;
+                    }
+                }
+            }
+            Fitted::CrossPairs(pairs)
+        }
+        "cross_features" => {
+            let np = cfg.usize_or("n_pairs", 8)
+                .clamp(1, MAX_WIDTH.saturating_sub(d).max(1));
+            let pairs = (0..np)
+                .map(|_| (rng.below(d), rng.below(d)))
+                .collect();
+            Fitted::CrossPairs(pairs)
+        }
+        "feature_agglomeration" => {
+            let k = cfg.usize_or("n_clusters", 8).clamp(1, d);
+            let cov = train_cov(ds, train);
+            // greedy union-find on |correlation|
+            let mut parent: Vec<usize> = (0..d).collect();
+            fn find(p: &mut Vec<usize>, i: usize) -> usize {
+                if p[i] != i {
+                    let r = find(p, p[i]);
+                    p[i] = r;
+                }
+                p[i]
+            }
+            let mut pairs: Vec<(f64, usize, usize)> = Vec::new();
+            for a in 0..d {
+                for b in a + 1..d {
+                    let denom = (cov[(a, a)] * cov[(b, b)]).sqrt().max(1e-12);
+                    pairs.push(((cov[(a, b)] / denom).abs(), a, b));
+                }
+            }
+            pairs.sort_by(|x, y| y.0.partial_cmp(&x.0)
+                .unwrap_or(std::cmp::Ordering::Equal));
+            let mut n_clusters = d;
+            for (_, a, b) in pairs {
+                if n_clusters <= k {
+                    break;
+                }
+                let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                if ra != rb {
+                    parent[ra] = rb;
+                    n_clusters -= 1;
+                }
+            }
+            let mut groups: std::collections::BTreeMap<usize, Vec<usize>> =
+                Default::default();
+            for j in 0..d {
+                let r = find(&mut parent, j);
+                groups.entry(r).or_default().push(j);
+            }
+            Fitted::Agglomerate { clusters: groups.into_values().collect() }
+        }
+        "random_trees_embed" => {
+            let nt = cfg.usize_or("n_trees", 10).clamp(1, MAX_WIDTH);
+            let depth = cfg.usize_or("depth", 4).clamp(1, 8);
+            let (mean, std) = train_stats(ds, train);
+            let trees = (0..nt)
+                .map(|_| {
+                    (0..depth)
+                        .map(|_| {
+                            let f = rng.below(d);
+                            let t = mean[f] + rng.normal() * std[f].max(1e-9);
+                            (f, t)
+                        })
+                        .collect()
+                })
+                .collect();
+            Fitted::RandTrees { trees }
+        }
+        "select_percentile" => {
+            let pct = cfg.f64_or("percentile", 0.5).clamp(0.05, 1.0);
+            let scores: Vec<f64> =
+                (0..d).map(|j| label_corr(ds, train, j)).collect();
+            let k = ((d as f64 * pct).ceil() as usize).clamp(1, d);
+            Fitted::Select(top_k_by_score(&scores, k))
+        }
+        "select_generic_univariate" => {
+            let alpha = cfg.f64_or("alpha", 0.5).clamp(0.05, 1.0);
+            let score_fn = cfg.str_or("score_func", "corr");
+            let scores: Vec<f64> = (0..d)
+                .map(|j| {
+                    if score_fn == "variance" {
+                        crate::util::stats::variance(
+                            &col_values(ds, train, j))
+                    } else {
+                        label_corr(ds, train, j)
+                    }
+                })
+                .collect();
+            let k = if cfg.str_or("mode", "percentile") == "k_best" {
+                ((d as f64 * alpha).round() as usize).clamp(1, d)
+            } else {
+                ((d as f64 * alpha).ceil() as usize).clamp(1, d)
+            };
+            Fitted::Select(top_k_by_score(&scores, k))
+        }
+        "extra_trees_preproc" => {
+            // stump-gain importances on a subsample
+            let keep = cfg.f64_or("keep_frac", 0.6).clamp(0.1, 1.0);
+            let n_stumps = cfg.usize_or("n_stumps", 24);
+            let sub: Vec<usize> = (0..train.len().min(256))
+                .map(|_| train[rng.below(train.len())])
+                .collect();
+            let mut scores = vec![0.0f64; d];
+            for _ in 0..n_stumps {
+                let j = rng.below(d);
+                let xs = col_values(ds, &sub, j);
+                let t = xs[rng.below(xs.len().max(1))];
+                // gain proxy: |mean(y|x>t) - mean(y|x<=t)|
+                let (mut above, mut below): (Vec<f64>, Vec<f64>) =
+                    (Vec::new(), Vec::new());
+                for (&i, &x) in sub.iter().zip(&xs) {
+                    if x > t {
+                        above.push(ds.y[i] as f64);
+                    } else {
+                        below.push(ds.y[i] as f64);
+                    }
+                }
+                if !above.is_empty() && !below.is_empty() {
+                    scores[j] += (crate::util::stats::mean(&above)
+                        - crate::util::stats::mean(&below)).abs();
+                }
+            }
+            let k = ((d as f64 * keep).ceil() as usize).clamp(1, d);
+            Fitted::Select(top_k_by_score(&scores, k))
+        }
+        "linear_svm_preproc" => {
+            // few perceptron epochs, select by |w|
+            let keep = cfg.f64_or("keep_frac", 0.6).clamp(0.1, 1.0);
+            let l2 = cfg.f64_or("l2", 1e-3);
+            let (mean, std) = train_stats(ds, train);
+            let mut w = vec![0.0f64; d];
+            let y_mean: f64 = train.iter().map(|&i| ds.y[i] as f64)
+                .sum::<f64>() / train.len().max(1) as f64;
+            for _epoch in 0..3 {
+                for &i in train {
+                    let row = ds.row(i);
+                    let target = if ds.task.is_classification() {
+                        if ds.y[i] as f64 > y_mean { 1.0 } else { -1.0 }
+                    } else if ds.y[i] as f64 > y_mean { 1.0 } else { -1.0 };
+                    let mut z = 0.0;
+                    for j in 0..d {
+                        z += w[j] * (row[j] as f64 - mean[j])
+                            / std[j].max(1e-9);
+                    }
+                    if z * target < 1.0 {
+                        for j in 0..d {
+                            let xj = (row[j] as f64 - mean[j])
+                                / std[j].max(1e-9);
+                            w[j] += 0.01 * (target * xj - l2 * w[j]);
+                        }
+                    }
+                }
+            }
+            let scores: Vec<f64> = w.iter().map(|x| x.abs()).collect();
+            let k = ((d as f64 * keep).ceil() as usize).clamp(1, d);
+            Fitted::Select(top_k_by_score(&scores, k))
+        }
+        "lda_decomposer" => {
+            // project onto (orthogonalised) class-mean directions
+            if !ds.task.is_classification() {
+                return Fitted::Identity;
+            }
+            let kcls = ds.task.n_classes();
+            let (gmean, _) = train_stats(ds, train);
+            let mut dirs: Vec<Vec<f64>> = Vec::new();
+            for c in 0..kcls {
+                let rows: Vec<usize> = train.iter().copied()
+                    .filter(|&i| ds.label(i) == c).collect();
+                if rows.is_empty() {
+                    continue;
+                }
+                let (cmean, _) = ds.col_stats(&rows);
+                let mut dir: Vec<f64> = cmean.iter().zip(&gmean)
+                    .map(|(a, b)| a - b).collect();
+                // Gram-Schmidt against existing directions
+                for prev in &dirs {
+                    let proj = crate::util::linalg::dot(&dir, prev);
+                    for (x, p) in dir.iter_mut().zip(prev) {
+                        *x -= proj * p;
+                    }
+                }
+                let n = crate::util::linalg::norm2(&dir);
+                if n > 1e-9 {
+                    for x in &mut dir {
+                        *x /= n;
+                    }
+                    dirs.push(dir);
+                }
+                if dirs.len() + 1 >= kcls {
+                    break;
+                }
+            }
+            if dirs.is_empty() {
+                return Fitted::Identity;
+            }
+            let mut proj = Mat::zeros(d, dirs.len());
+            for (c, v) in dirs.iter().enumerate() {
+                for j in 0..d {
+                    proj[(j, c)] = v[j];
+                }
+            }
+            Fitted::Project { mean: gmean, proj }
+        }
+        other => panic!("unknown transformer {other}"),
+    }
+}
+
+fn fit_rff(d: usize, m: usize, gamma: f64, rng: &mut Rng) -> Fitted {
+    let mut w = Mat::zeros(d, m);
+    let s = (2.0 * gamma).sqrt();
+    for x in &mut w.data {
+        *x = rng.normal() * s;
+    }
+    let b = (0..m)
+        .map(|_| rng.uniform(0.0, std::f64::consts::TAU))
+        .collect();
+    Fitted::Rff { w, b }
+}
+
+fn random_orthogonal(k: usize, rng: &mut Rng) -> Mat {
+    // Gram-Schmidt on a random Gaussian matrix
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut v: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+        for prev in &cols {
+            let p = crate::util::linalg::dot(&v, prev);
+            for (x, q) in v.iter_mut().zip(prev) {
+                *x -= p * q;
+            }
+        }
+        let n = crate::util::linalg::norm2(&v).max(1e-12);
+        for x in &mut v {
+            *x /= n;
+        }
+        cols.push(v);
+    }
+    let mut m = Mat::zeros(k, k);
+    for (c, v) in cols.iter().enumerate() {
+        for j in 0..k {
+            m[(j, c)] = v[j];
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Task;
+    use crate::data::synthetic::{generate, GenKind, Profile};
+
+    fn toy_ds() -> (Dataset, Vec<usize>) {
+        let p = Profile {
+            name: "fe-toy".into(),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 2.0 },
+            n: 200,
+            d: 8,
+            noise: 0.05,
+            imbalance: 1.0,
+            redundant: 2,
+            wild_scales: true,
+            seed: 11,
+        };
+        let ds = generate(&p);
+        let train: Vec<usize> = (0..150).collect();
+        (ds, train)
+    }
+
+    #[test]
+    fn every_scaler_fits_and_applies() {
+        let (ds, train) = toy_ds();
+        for name in scaler_names() {
+            let cfg = scaler_space(name).default_config();
+            let f = fit_scaler(name, &ds, &train, &cfg);
+            let out = f.apply(&ds);
+            assert_eq!(out.n, ds.n, "{name}");
+            assert_eq!(out.d, ds.d, "{name}");
+            assert!(out.x.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn standard_scaler_zero_mean_unit_var_on_train() {
+        let (ds, train) = toy_ds();
+        let f = fit_scaler("standard", &ds, &train, &Config::new());
+        let out = f.apply(&ds);
+        let (mean, std) = out.col_stats(&train);
+        for j in 0..out.d {
+            assert!(mean[j].abs() < 1e-4, "mean[{j}]={}", mean[j]);
+            assert!((std[j] - 1.0).abs() < 1e-3, "std[{j}]={}", std[j]);
+        }
+    }
+
+    #[test]
+    fn minmax_bounds_train_to_unit_interval() {
+        let (ds, train) = toy_ds();
+        let f = fit_scaler("minmax", &ds, &train, &Config::new());
+        let out = f.apply(&ds);
+        for &i in &train {
+            for &v in out.row(i) {
+                assert!((-1e-6..=1.0 + 1e-6).contains(&(v as f64)));
+            }
+        }
+    }
+
+    #[test]
+    fn every_transformer_fits_and_applies() {
+        let (ds, train) = toy_ds();
+        let mut rng = Rng::new(0);
+        for name in transformer_names() {
+            let cfg = transformer_space(name).default_config();
+            let f = fit_transformer(name, &ds, &train, &cfg, &mut rng);
+            let out = f.apply(&ds);
+            assert_eq!(out.n, ds.n, "{name}");
+            assert!(out.d >= 1 && out.d <= MAX_WIDTH, "{name}: d={}", out.d);
+            assert_eq!(out.d, f.out_dim(ds.d), "{name}");
+            assert!(out.x.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn pca_projection_decorrelates() {
+        let (ds, train) = toy_ds();
+        let mut rng = Rng::new(1);
+        let cfg = transformer_space("pca").default_config();
+        let f = fit_transformer("pca", &ds, &train, &cfg, &mut rng);
+        let out = f.apply(&ds);
+        assert!(out.d <= ds.d);
+        // first component captures the most variance
+        let (_, std) = out.col_stats(&train);
+        assert!(std[0] >= *std.last().unwrap() * 0.9);
+    }
+
+    #[test]
+    fn select_percentile_keeps_informative_columns() {
+        let (ds, train) = toy_ds();
+        let mut rng = Rng::new(2);
+        let cfg = Config::new().with("percentile", crate::space::Value::F(0.25));
+        let f = fit_transformer("select_percentile", &ds, &train, &cfg,
+                                &mut rng);
+        if let Fitted::Select(idx) = &f {
+            assert_eq!(idx.len(), 2);
+            // informative dims for Blobs are the first d/2 clamp(2,8)=4
+            assert!(idx.iter().all(|&j| j < 6), "{idx:?}");
+        } else {
+            panic!("expected Select");
+        }
+    }
+
+    #[test]
+    fn quantile_uniform_output_in_unit_interval() {
+        let (ds, train) = toy_ds();
+        let cfg = scaler_space("quantile").default_config();
+        let f = fit_scaler("quantile", &ds, &train, &cfg);
+        let out = f.apply(&ds);
+        assert!(out.x.iter().all(|&v| (0.0..=1.0).contains(&(v as f64))));
+    }
+
+    #[test]
+    fn inv_norm_cdf_symmetry() {
+        assert!((inv_norm_cdf(0.5)).abs() < 1e-9);
+        assert!((inv_norm_cdf(0.975) - 1.959964).abs() < 1e-3);
+        assert!((inv_norm_cdf(0.025) + 1.959964).abs() < 1e-3);
+    }
+
+    #[test]
+    fn chain_composes_dims() {
+        let (ds, train) = toy_ds();
+        let mut rng = Rng::new(3);
+        let a = fit_scaler("standard", &ds, &train, &Config::new());
+        let cfg = transformer_space("svd").default_config();
+        let b = fit_transformer("svd", &ds, &train, &cfg, &mut rng);
+        let chain = Fitted::Chain(vec![a, b]);
+        let out = chain.apply(&ds);
+        assert_eq!(out.d, 8);
+    }
+}

@@ -1,0 +1,24 @@
+//! VolcanoML-RS: scalable end-to-end AutoML via search-space
+//! decomposition (reproduction of Li et al., VLDB-J 2022).
+//!
+//! Layer 3 of the three-layer Rust + JAX + Pallas stack: the
+//! coordinator owning building blocks, execution plans, optimizers,
+//! meta-learning, ensembles, and the PJRT runtime that executes the
+//! AOT-compiled model trainers. See DESIGN.md for the full inventory.
+
+pub mod baselines;
+pub mod bench;
+pub mod blocks;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod algos;
+pub mod ensemble;
+pub mod fe;
+pub mod meta;
+pub mod space;
+pub mod opt;
+pub mod plan;
+pub mod runtime;
+pub mod surrogate;
+pub mod util;

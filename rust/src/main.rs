@@ -1,0 +1,259 @@
+//! VolcanoML CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//!   run             run one AutoML search on a registry dataset
+//!   plans           compare the five execution plans on a dataset
+//!   datasets        list the dataset registry
+//!   artifacts       show the PJRT artifact manifest
+//!   collect-corpus  build the meta-learning corpus
+//!   help
+
+use std::path::PathBuf;
+
+use volcanoml::baselines::{run_system, BaseSpec, SystemKind};
+use volcanoml::bench::Table;
+use volcanoml::cli::Args;
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::metrics::Metric;
+use volcanoml::data::registry;
+use volcanoml::data::synthetic::generate;
+use volcanoml::meta::MetaCorpus;
+use volcanoml::plan::PlanKind;
+use volcanoml::runtime::Runtime;
+
+const HELP: &str = "volcanoml — scalable end-to-end AutoML via search \
+space decomposition
+
+USAGE: volcanoml <subcommand> [options]
+
+SUBCOMMANDS
+  run             --dataset <name> [--system volcanoml|ausk|tpot|...]
+                  [--plan J|C|A|AC|CA] [--scale small|medium|large]
+                  [--evals N] [--budget SECS] [--metric NAME]
+                  [--corpus PATH] [--seed N] [--no-pjrt]
+  plans           --dataset <name> [--evals N] — compare J/C/A/AC/CA
+  datasets        list the registry (name, task, n, d)
+  artifacts       show compiled PJRT artifacts
+  collect-corpus  --out PATH [--n-cls N] [--n-reg N] [--evals N]
+  help            this message
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("plans") => cmd_plans(&args),
+        Some("datasets") => cmd_datasets(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("collect-corpus") => cmd_collect(&args),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn open_runtime(args: &Args) -> Option<Runtime> {
+    if args.flag("no-pjrt") {
+        return None;
+    }
+    volcanoml::bench::try_runtime()
+}
+
+fn dataset_from(args: &Args) -> anyhow::Result<volcanoml::data::Dataset> {
+    let name = args.str_or("dataset", "quake");
+    let profile = registry::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown dataset {name:?} (see `volcanoml datasets`)"))?;
+    Ok(generate(&profile))
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let ds = dataset_from(args)?;
+    let system = SystemKind::parse(&args.str_or("system", "volcanoml-"))
+        .ok_or_else(|| anyhow::anyhow!("unknown system"))?;
+    let metric = Metric::parse(&args.str_or(
+        "metric",
+        if ds.task.is_classification() { "balanced_accuracy" }
+        else { "mse" },
+    )).ok_or_else(|| anyhow::anyhow!("unknown metric"))?;
+    let spec = BaseSpec {
+        scale: SpaceScale::parse(&args.str_or("scale", "large"))
+            .ok_or_else(|| anyhow::anyhow!("unknown scale"))?,
+        metric,
+        max_evals: args.usize_or("evals", 60)?,
+        budget_secs: args.f64_or("budget", f64::INFINITY)?,
+        seed: args.u64_or("seed", 42)?,
+    };
+    let corpus = match args.str_opt("corpus") {
+        Some(p) => Some(MetaCorpus::load(&PathBuf::from(p))?),
+        None => None,
+    };
+    let runtime = open_runtime(args);
+    args.finish()?;
+
+    println!("dataset {} (n={}, d={}, task={:?})",
+             ds.name, ds.n, ds.d, ds.task);
+    println!("system {} | scale {} | {} evals | metric {}",
+             system.name(), spec.scale.name(), spec.max_evals,
+             spec.metric.name());
+    let out = run_system(system, &ds, &spec, corpus.as_ref(),
+                         runtime.as_ref())?;
+    println!("\nevaluations     : {} ({} failed)", out.n_evals,
+             out.n_failures);
+    println!("elapsed         : {:.2}s", out.elapsed_secs);
+    println!("best valid util : {:.4}", out.best_valid_utility);
+    println!("test utility    : {:.4}", out.test_utility);
+    println!("ensemble test   : {:.4}", out.ensemble_test_utility);
+    println!("test metric     : {:.4} ({})", out.test_metric_value,
+             spec.metric.name());
+    if let Some(cfg) = &out.best_config {
+        println!("\nbest configuration:");
+        for (k, v) in cfg.iter() {
+            println!("  {k} = {v}");
+        }
+    }
+    if !out.valid_curve.is_empty() {
+        println!("\nvalidation improvement curve (secs, utility):");
+        for (t, u) in &out.valid_curve {
+            println!("  {t:8.2}s  {u:.4}");
+        }
+    }
+    if let Some(rt) = &runtime {
+        let stats = rt.exec_stats();
+        if !stats.is_empty() {
+            println!("\nPJRT executions:");
+            for (name, n, secs) in stats {
+                println!("  {name:<20} {n:>5} execs  {secs:>8.2}s");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_plans(args: &Args) -> anyhow::Result<()> {
+    let ds = dataset_from(args)?;
+    let evals = args.usize_or("evals", 40)?;
+    let seed = args.u64_or("seed", 42)?;
+    let runtime = open_runtime(args);
+    args.finish()?;
+    let metric = if ds.task.is_classification() {
+        Metric::BalancedAccuracy
+    } else {
+        Metric::Mse
+    };
+    let mut table = Table::new(
+        &format!("execution plans on {}", ds.name),
+        &["plan", "valid util", "test util", "evals", "secs"]);
+    for kind in PlanKind::all() {
+        let cfg = volcanoml::coordinator::automl::VolcanoConfig {
+            plan: kind,
+            metric,
+            max_evals: evals,
+            seed,
+            ..Default::default()
+        };
+        let out = volcanoml::coordinator::automl::VolcanoML::new(cfg)
+            .run(&ds, runtime.as_ref())?;
+        table.row(vec![
+            kind.name().to_string(),
+            format!("{:.4}", out.best_valid_utility),
+            format!("{:.4}", out.test_utility),
+            format!("{}", out.n_evals),
+            format!("{:.1}", out.elapsed_secs),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_datasets(args: &Args) -> anyhow::Result<()> {
+    args.finish()?;
+    let mut table = Table::new("dataset registry",
+                               &["name", "task", "n", "d", "classes"]);
+    for p in registry::all_profiles() {
+        table.row(vec![
+            p.name.clone(),
+            if p.task.is_classification() { "cls".into() }
+            else { "reg".into() },
+            p.n.to_string(),
+            p.d.to_string(),
+            p.task.n_classes().to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    args.finish()?;
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let c = rt.constants();
+    println!("canonical shapes: n_train={} n_val={} d={} c={} t={} \
+              k_max={}", c.n_train, c.n_val, c.d, c.c, c.t_steps,
+             c.k_max);
+    let mut table = Table::new("PJRT artifacts",
+                               &["name", "family", "inputs", "outputs"]);
+    for name in rt.artifact_names() {
+        let info = rt.info(&name).unwrap();
+        table.row(vec![
+            name.clone(),
+            info.family.clone(),
+            info.input_shapes.len().to_string(),
+            info.output_shapes.len().to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_collect(args: &Args) -> anyhow::Result<()> {
+    let out_path = PathBuf::from(args.str_or(
+        "out", "artifacts/meta_corpus.json"));
+    let n_cls = args.usize_or("n-cls", 12)?;
+    let n_reg = args.usize_or("n-reg", 8)?;
+    let evals = args.usize_or("evals", 40)?;
+    let seed = args.u64_or("seed", 7)?;
+    let runtime = open_runtime(args);
+    args.finish()?;
+
+    let mut corpus = MetaCorpus::default();
+    for (i, profile) in registry::meta_corpus(n_cls, n_reg)
+        .into_iter().enumerate() {
+        let ds = generate(&profile);
+        let metric = if ds.task.is_classification() {
+            Metric::BalancedAccuracy
+        } else {
+            Metric::Mse
+        };
+        let spec = BaseSpec {
+            scale: SpaceScale::Large,
+            metric,
+            max_evals: evals,
+            budget_secs: f64::INFINITY,
+            seed: seed + i as u64,
+        };
+        let t0 = std::time::Instant::now();
+        match run_system(SystemKind::VolcanoMLMinus, &ds, &spec, None,
+                         runtime.as_ref()) {
+            Ok(outcome) => {
+                println!("[{}/{}] {} ({} evals, {:.1}s)",
+                         i + 1, n_cls + n_reg, ds.name,
+                         outcome.n_evals, t0.elapsed().as_secs_f64());
+                corpus.push(outcome.record);
+            }
+            Err(e) => eprintln!("skip {}: {e}", ds.name),
+        }
+    }
+    corpus.save(&out_path)?;
+    println!("saved {} task records -> {}", corpus.len(),
+             out_path.display());
+    Ok(())
+}

@@ -1,0 +1,306 @@
+//! Persistent meta-knowledge (§5 + §6.1 "Training Data for
+//! Meta-learning"): per prior task we store its meta-features, the
+//! best utility each algorithm arm achieved, and the BO histories of
+//! each leaf block (feature-encoded in that leaf's subspace). The
+//! corpus feeds RankNet arm pruning and RGPE surrogate transfer with
+//! the paper's leave-one-out protocol.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::ranknet::{triples_from_scores, RankNet, Triple};
+use super::rgpe::Rgpe;
+
+#[derive(Clone, Debug, Default)]
+pub struct TaskRecord {
+    pub name: String,
+    pub metric: String,
+    pub meta_features: Vec<f64>,
+    /// best utility per algorithm arm on this task.
+    pub arm_scores: BTreeMap<String, f64>,
+    /// per-leaf BO history: label -> (encoded configs, utilities).
+    pub leaf_histories: BTreeMap<String, (Vec<Vec<f64>>, Vec<f64>)>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetaCorpus {
+    pub records: Vec<TaskRecord>,
+}
+
+impl MetaCorpus {
+    pub fn push(&mut self, rec: TaskRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    // ---- persistence ----------------------------------------------
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    let arms = Json::Obj(
+                        r.arm_scores
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                            .collect(),
+                    );
+                    let hists = Json::Obj(
+                        r.leaf_histories
+                            .iter()
+                            .map(|(k, (xs, ys))| {
+                                (k.clone(), Json::obj(vec![
+                                    ("x", Json::Arr(xs.iter()
+                                        .map(|row| Json::arr_f64(row))
+                                        .collect())),
+                                    ("y", Json::arr_f64(ys)),
+                                ]))
+                            })
+                            .collect(),
+                    );
+                    Json::obj(vec![
+                        ("name", Json::Str(r.name.clone())),
+                        ("metric", Json::Str(r.metric.clone())),
+                        ("meta_features",
+                         Json::arr_f64(&r.meta_features)),
+                        ("arm_scores", arms),
+                        ("leaf_histories", hists),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn from_json(v: &Json) -> Result<MetaCorpus> {
+        let arr = v.as_arr().ok_or_else(|| anyhow!("corpus not array"))?;
+        let mut out = MetaCorpus::default();
+        for item in arr {
+            let mut rec = TaskRecord {
+                name: item.get("name").and_then(|s| s.as_str())
+                    .unwrap_or("").to_string(),
+                metric: item.get("metric").and_then(|s| s.as_str())
+                    .unwrap_or("").to_string(),
+                meta_features: item
+                    .get("meta_features")
+                    .and_then(|a| a.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_f64())
+                        .collect())
+                    .unwrap_or_default(),
+                ..Default::default()
+            };
+            if let Some(arms) =
+                item.get("arm_scores").and_then(|o| o.as_obj()) {
+                for (k, v) in arms {
+                    if let Some(x) = v.as_f64() {
+                        rec.arm_scores.insert(k.clone(), x);
+                    }
+                }
+            }
+            if let Some(h) =
+                item.get("leaf_histories").and_then(|o| o.as_obj()) {
+                for (k, v) in h {
+                    let xs: Vec<Vec<f64>> = v
+                        .get("x")
+                        .and_then(|a| a.as_arr())
+                        .map(|rows| rows.iter()
+                            .map(|r| r.as_arr().map(|c| c.iter()
+                                .filter_map(|x| x.as_f64()).collect())
+                                .unwrap_or_default())
+                            .collect())
+                        .unwrap_or_default();
+                    let ys: Vec<f64> = v
+                        .get("y")
+                        .and_then(|a| a.as_arr())
+                        .map(|a| a.iter().filter_map(|x| x.as_f64())
+                            .collect())
+                        .unwrap_or_default();
+                    rec.leaf_histories.insert(k.clone(), (xs, ys));
+                }
+            }
+            out.records.push(rec);
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &Path) -> Result<MetaCorpus> {
+        let v = Json::parse_file(path)?;
+        Self::from_json(&v)
+    }
+
+    // ---- meta-learning consumers ------------------------------------
+    /// Records usable for a task (same metric, leave-one-out by name).
+    fn relevant<'a>(&'a self, metric: &str, exclude: &str)
+        -> impl Iterator<Item = &'a TaskRecord> {
+        let metric = metric.to_string();
+        let exclude = exclude.to_string();
+        self.records
+            .iter()
+            .filter(move |r| r.metric == metric && r.name != exclude)
+    }
+
+    /// Train a RankNet over the corpus (leave-one-out) for the given
+    /// arm universe; returns None with too little data.
+    pub fn train_ranknet(&self, arms: &[String], metric: &str,
+                         exclude: &str, rng: &mut Rng)
+        -> Option<RankNet> {
+        let mut triples: Vec<Triple> = Vec::new();
+        let mut meta_dim = 0;
+        for rec in self.relevant(metric, exclude) {
+            if rec.meta_features.is_empty() {
+                continue;
+            }
+            meta_dim = rec.meta_features.len();
+            let scores: Vec<(usize, f64)> = arms
+                .iter()
+                .enumerate()
+                .filter_map(|(i, a)| {
+                    rec.arm_scores.get(a).map(|&s| (i, s))
+                })
+                .collect();
+            triples.extend(triples_from_scores(
+                &rec.meta_features, &scores, 1e-4));
+        }
+        if triples.len() < 3 || meta_dim == 0 {
+            return None;
+        }
+        let mut net = RankNet::new(meta_dim, arms.len(), 24, rng);
+        net.train(&triples, 30, rng);
+        Some(net)
+    }
+
+    /// Build an RGPE surrogate for one leaf label from prior
+    /// histories with matching feature dimension.
+    pub fn rgpe_for_leaf(&self, leaf: &str, metric: &str, exclude: &str,
+                         dim: usize, seed: u64) -> Option<Rgpe> {
+        let hists: Vec<(Vec<Vec<f64>>, Vec<f64>)> = self
+            .relevant(metric, exclude)
+            .filter_map(|r| r.leaf_histories.get(leaf))
+            .filter(|(xs, _)| !xs.is_empty() && xs[0].len() == dim)
+            .map(|(xs, ys)| {
+                // cap per-task history so GP fits stay cheap
+                let cap = 40.min(xs.len());
+                (xs[..cap].to_vec(), ys[..cap].to_vec())
+            })
+            .collect();
+        if hists.is_empty() {
+            return None;
+        }
+        Some(Rgpe::new(&hists, seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(name: &str, f0: f64) -> TaskRecord {
+        let mut arm_scores = BTreeMap::new();
+        // arm "a" wins when f0 > 0
+        arm_scores.insert("a".into(), if f0 > 0.0 { 0.9 } else { 0.2 });
+        arm_scores.insert("b".into(), 0.5);
+        let mut leaf_histories = BTreeMap::new();
+        leaf_histories.insert(
+            "hp|a".into(),
+            (vec![vec![0.1], vec![0.5], vec![0.9]],
+             vec![0.2, 0.6, 0.4]),
+        );
+        TaskRecord {
+            name: name.into(),
+            metric: "balanced_accuracy".into(),
+            meta_features: vec![f0, 1.0],
+            arm_scores,
+            leaf_histories,
+        }
+    }
+
+    fn corpus(n: usize) -> MetaCorpus {
+        let mut c = MetaCorpus::default();
+        for i in 0..n {
+            let f0 = if i % 2 == 0 { 0.8 } else { -0.8 };
+            c.push(record(&format!("t{i}"), f0));
+        }
+        c
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = corpus(4);
+        let j = c.to_json();
+        let c2 = MetaCorpus::from_json(&j).unwrap();
+        assert_eq!(c2.len(), 4);
+        assert_eq!(c2.records[0].arm_scores["a"], 0.9);
+        assert_eq!(c2.records[0].leaf_histories["hp|a"].0.len(), 3);
+        assert_eq!(c2.records[1].meta_features, vec![-0.8, 1.0]);
+    }
+
+    #[test]
+    fn save_and_load(){
+        let dir = std::env::temp_dir().join("volcano_corpus_test.json");
+        let c = corpus(3);
+        c.save(&dir).unwrap();
+        let c2 = MetaCorpus::load(&dir).unwrap();
+        assert_eq!(c2.len(), 3);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn ranknet_trains_and_discriminates() {
+        let c = corpus(40);
+        let arms = vec!["a".to_string(), "b".to_string()];
+        let mut rng = Rng::new(0);
+        let net = c
+            .train_ranknet(&arms, "balanced_accuracy", "none", &mut rng)
+            .expect("enough data");
+        assert_eq!(net.top_k(&[0.8, 1.0], 1), vec![0]);
+        assert_eq!(net.top_k(&[-0.8, 1.0], 1), vec![1]);
+    }
+
+    #[test]
+    fn leave_one_out_excludes_target() {
+        let mut c = corpus(2);
+        // poison record for the excluded task: if used, ranking flips
+        let mut bad = record("target", 0.8);
+        bad.arm_scores.insert("a".into(), -10.0);
+        c.push(bad);
+        let arms = vec!["a".to_string(), "b".to_string()];
+        let mut rng = Rng::new(1);
+        // with only 2 clean records there are few triples: accept None
+        // or a net; if a net exists it must not have learned a == bad
+        if let Some(net) =
+            c.train_ranknet(&arms, "balanced_accuracy", "target",
+                            &mut rng)
+        {
+            let top = net.top_k(&[0.8, 1.0], 1);
+            assert_eq!(top, vec![0]);
+        }
+    }
+
+    #[test]
+    fn rgpe_for_leaf_checks_dim_and_metric() {
+        let c = corpus(5);
+        assert!(c.rgpe_for_leaf("hp|a", "balanced_accuracy", "x", 1, 0)
+            .is_some());
+        assert!(c.rgpe_for_leaf("hp|a", "mse", "x", 1, 0).is_none());
+        assert!(c.rgpe_for_leaf("hp|a", "balanced_accuracy", "x", 7, 0)
+            .is_none());
+        assert!(c.rgpe_for_leaf("nope", "balanced_accuracy", "x", 1, 0)
+            .is_none());
+    }
+}

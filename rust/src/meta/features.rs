@@ -1,0 +1,159 @@
+//! Dataset meta-features (the `h_D` extractor of §5.1): a fixed-length
+//! numeric description of a dataset used by RankNet arm pruning and
+//! for matching prior tasks. Kept cheap — a single pass plus one
+//! covariance probe on a subsample.
+
+use crate::data::dataset::{Dataset, Task};
+
+pub const META_DIM: usize = 12;
+
+/// Extract the 12-dim meta-feature vector.
+pub fn meta_features(ds: &Dataset) -> Vec<f64> {
+    let n = ds.n.max(1);
+    let d = ds.d.max(1);
+    let rows: Vec<usize> = (0..n.min(512)).collect();
+    let (mean, std) = ds.col_stats(&rows);
+
+    // label statistics
+    let (class_entropy, imbalance, n_classes) = match ds.task {
+        Task::Classification { n_classes } => {
+            let counts = ds.class_counts();
+            let total: usize = counts.iter().sum();
+            let mut h = 0.0;
+            let mut max_c = 0usize;
+            let mut min_c = usize::MAX;
+            for &c in &counts {
+                if c > 0 {
+                    let p = c as f64 / total.max(1) as f64;
+                    h -= p * p.ln();
+                    max_c = max_c.max(c);
+                    min_c = min_c.min(c);
+                }
+            }
+            let imb = if min_c == 0 || min_c == usize::MAX {
+                1.0
+            } else {
+                max_c as f64 / min_c as f64
+            };
+            (h, imb, n_classes as f64)
+        }
+        Task::Regression => {
+            let ys: Vec<f64> =
+                rows.iter().map(|&i| ds.y[i] as f64).collect();
+            let v = crate::util::stats::variance(&ys);
+            (v.ln_1p(), 1.0, 0.0)
+        }
+    };
+
+    // feature statistics
+    let mean_abs_mean = mean.iter().map(|m| m.abs()).sum::<f64>()
+        / d as f64;
+    let std_spread = {
+        let max = std.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+        let min = std.iter().cloned().fold(f64::INFINITY, f64::min)
+            .max(1e-12);
+        (max / min).ln()
+    };
+    // mean |corr(feature, label)| — signal strength probe
+    let mut corr_sum = 0.0;
+    let ys: Vec<f64> = rows.iter().map(|&i| ds.y[i] as f64).collect();
+    let y_mean = crate::util::stats::mean(&ys);
+    let y_var: f64 = ys.iter().map(|y| (y - y_mean).powi(2)).sum();
+    for j in 0..d {
+        let mut num = 0.0;
+        let mut xv = 0.0;
+        for (&i, y) in rows.iter().zip(&ys) {
+            let x = ds.row(i)[j] as f64 - mean[j];
+            num += x * (y - y_mean);
+            xv += x * x;
+        }
+        if xv > 0.0 && y_var > 0.0 {
+            corr_sum += (num / (xv.sqrt() * y_var.sqrt())).abs();
+        }
+    }
+    let mean_abs_corr = corr_sum / d as f64;
+
+    // skewness proxy: mean |(mean - median)| / std over a few columns
+    let mut skew = 0.0;
+    let probe_cols = d.min(8);
+    for j in 0..probe_cols {
+        let xs: Vec<f64> =
+            rows.iter().map(|&i| ds.row(i)[j] as f64).collect();
+        let med = crate::util::stats::median(&xs);
+        skew += (mean[j] - med).abs() / std[j].max(1e-9);
+    }
+    skew /= probe_cols.max(1) as f64;
+
+    vec![
+        (n as f64).ln(),
+        (d as f64).ln(),
+        n_classes,
+        class_entropy,
+        imbalance.ln(),
+        if ds.task.is_classification() { 1.0 } else { 0.0 },
+        (n as f64 / d as f64).ln(),
+        mean_abs_mean.ln_1p(),
+        std_spread,
+        mean_abs_corr,
+        skew,
+        1.0, // bias term
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, GenKind, Profile};
+
+    fn mk(gen: GenKind, task: Task, imb: f64, wild: bool) -> Dataset {
+        generate(&Profile {
+            name: "mf".into(),
+            task,
+            gen,
+            n: 300,
+            d: 8,
+            noise: 0.05,
+            imbalance: imb,
+            redundant: 1,
+            wild_scales: wild,
+            seed: 4,
+        })
+    }
+
+    #[test]
+    fn dimension_is_stable() {
+        let ds = mk(GenKind::Blobs { sep: 1.0 },
+                    Task::Classification { n_classes: 3 }, 1.0, false);
+        assert_eq!(meta_features(&ds).len(), META_DIM);
+        let dr = mk(GenKind::Friedman1, Task::Regression, 1.0, false);
+        assert_eq!(meta_features(&dr).len(), META_DIM);
+    }
+
+    #[test]
+    fn imbalance_is_reflected() {
+        let bal = mk(GenKind::Blobs { sep: 2.0 },
+                     Task::Classification { n_classes: 2 }, 1.0, false);
+        let imb = mk(GenKind::Blobs { sep: 2.0 },
+                     Task::Classification { n_classes: 2 }, 20.0, false);
+        assert!(meta_features(&imb)[4] > meta_features(&bal)[4] + 0.5);
+    }
+
+    #[test]
+    fn scale_spread_is_reflected() {
+        let uni = mk(GenKind::Blobs { sep: 2.0 },
+                     Task::Classification { n_classes: 2 }, 1.0, false);
+        let wild = mk(GenKind::Blobs { sep: 2.0 },
+                      Task::Classification { n_classes: 2 }, 1.0, true);
+        assert!(meta_features(&wild)[8] > meta_features(&uni)[8]);
+    }
+
+    #[test]
+    fn all_features_finite() {
+        for gen in [GenKind::Rings, GenKind::Texture,
+                    GenKind::NonlinearCls] {
+            let ds = mk(gen, Task::Classification { n_classes: 2 },
+                        3.0, true);
+            assert!(meta_features(&ds).iter().all(|v| v.is_finite()));
+        }
+    }
+}

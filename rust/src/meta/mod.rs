@@ -1,0 +1,14 @@
+//! Meta-learning accelerations (§5): dataset meta-features, RankNet
+//! arm pruning for conditioning blocks, RGPE surrogate transfer for
+//! joint blocks, and the persisted meta-corpus with the paper's
+//! leave-one-out protocol.
+
+pub mod corpus;
+pub mod features;
+pub mod ranknet;
+pub mod rgpe;
+
+pub use corpus::{MetaCorpus, TaskRecord};
+pub use features::{meta_features, META_DIM};
+pub use ranknet::RankNet;
+pub use rgpe::Rgpe;

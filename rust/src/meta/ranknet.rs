@@ -1,0 +1,227 @@
+//! RankNet arm-ranking for conditioning blocks (§5.1, Eq. 11).
+//!
+//! A small MLP scores (dataset meta-features, arm one-hot) pairs;
+//! training minimises the pairwise hinge objective
+//! `l+(σ(r_j - r_k)) + l-(σ(r_k - r_j))` over triples
+//! (A_j better-than A_k on D_i). Inference ranks the arms for a new
+//! dataset; the top-`k` subset prunes the conditioning block's arms.
+//!
+//! Implemented natively (manual backprop) — it runs at planning time,
+//! not on the evaluation hot path.
+
+use crate::util::rng::Rng;
+
+/// A preference triple: on dataset with meta-features `d`, arm
+/// `better` outperformed arm `worse`.
+#[derive(Clone, Debug)]
+pub struct Triple {
+    pub d: Vec<f64>,
+    pub better: usize,
+    pub worse: usize,
+}
+
+pub struct RankNet {
+    pub n_arms: usize,
+    d_in: usize,
+    h: usize,
+    w1: Vec<f64>, // d_in x h
+    b1: Vec<f64>,
+    w2: Vec<f64>, // h
+    b2: f64,
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl RankNet {
+    pub fn new(meta_dim: usize, n_arms: usize, hidden: usize,
+               rng: &mut Rng) -> RankNet {
+        let d_in = meta_dim + n_arms;
+        let scale = (2.0 / d_in as f64).sqrt();
+        RankNet {
+            n_arms,
+            d_in,
+            h: hidden,
+            w1: (0..d_in * hidden).map(|_| rng.normal() * scale)
+                .collect(),
+            b1: vec![0.0; hidden],
+            w2: (0..hidden).map(|_| rng.normal() * (1.0
+                / hidden as f64).sqrt()).collect(),
+            b2: 0.0,
+        }
+    }
+
+    fn input(&self, d: &[f64], arm: usize) -> Vec<f64> {
+        let mut x = d.to_vec();
+        let mut onehot = vec![0.0; self.n_arms];
+        onehot[arm.min(self.n_arms - 1)] = 1.0;
+        x.extend(onehot);
+        x
+    }
+
+    /// Forward pass returning (score, hidden activations).
+    fn forward(&self, x: &[f64]) -> (f64, Vec<f64>) {
+        let mut hid = vec![0.0; self.h];
+        for j in 0..self.h {
+            let mut z = self.b1[j];
+            for (i, &xi) in x.iter().enumerate() {
+                z += xi * self.w1[i * self.h + j];
+            }
+            hid[j] = z.max(0.0);
+        }
+        let mut out = self.b2;
+        for j in 0..self.h {
+            out += hid[j] * self.w2[j];
+        }
+        (out, hid)
+    }
+
+    pub fn score(&self, d: &[f64], arm: usize) -> f64 {
+        self.forward(&self.input(d, arm)).0
+    }
+
+    /// Rank all arms for a dataset (best first).
+    pub fn rank_arms(&self, d: &[f64]) -> Vec<usize> {
+        let scores: Vec<f64> =
+            (0..self.n_arms).map(|a| self.score(d, a)).collect();
+        let mut idx: Vec<usize> = (0..self.n_arms).collect();
+        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal));
+        idx
+    }
+
+    pub fn top_k(&self, d: &[f64], k: usize) -> Vec<usize> {
+        let mut r = self.rank_arms(d);
+        r.truncate(k.max(1));
+        r
+    }
+
+    /// One SGD pass over the triples; returns the mean pairwise loss.
+    pub fn train_epoch(&mut self, triples: &[Triple], lr: f64,
+                       rng: &mut Rng) -> f64 {
+        let mut order: Vec<usize> = (0..triples.len()).collect();
+        rng.shuffle(&mut order);
+        let mut total_loss = 0.0;
+        for &ti in &order {
+            let t = &triples[ti];
+            let xj = self.input(&t.d, t.better);
+            let xk = self.input(&t.d, t.worse);
+            let (rj, hj) = self.forward(&xj);
+            let (rk, hk) = self.forward(&xk);
+            // pairwise logistic (RankNet) loss on the margin rj - rk
+            let p = sigmoid(rj - rk);
+            total_loss += -(p.max(1e-12)).ln();
+            // dL/d(rj - rk) = p - 1
+            let g = p - 1.0;
+            // backprop through both branches (shared weights):
+            // d rj/d w2 = hj ; d rk/d w2 = hk
+            for j in 0..self.h {
+                let gw2 = g * (hj[j] - hk[j]);
+                // hidden grads
+                let gh_j = g * self.w2[j];
+                self.w2[j] -= lr * gw2;
+                if hj[j] > 0.0 {
+                    for (i, &xi) in xj.iter().enumerate() {
+                        self.w1[i * self.h + j] -= lr * gh_j * xi;
+                    }
+                    self.b1[j] -= lr * gh_j;
+                }
+                if hk[j] > 0.0 {
+                    for (i, &xi) in xk.iter().enumerate() {
+                        self.w1[i * self.h + j] += lr * gh_j * xi;
+                    }
+                    self.b1[j] += lr * gh_j;
+                }
+            }
+        }
+        total_loss / triples.len().max(1) as f64
+    }
+
+    /// Full training loop with a step-decayed learning rate.
+    pub fn train(&mut self, triples: &[Triple], epochs: usize,
+                 rng: &mut Rng) -> f64 {
+        let mut loss = f64::INFINITY;
+        for e in 0..epochs {
+            let lr = 0.02 * 0.97f64.powi(e as i32);
+            loss = self.train_epoch(triples, lr, rng);
+        }
+        loss
+    }
+}
+
+/// Turn per-dataset arm utilities into preference triples (all ordered
+/// pairs with a margin).
+pub fn triples_from_scores(d: &[f64], arm_scores: &[(usize, f64)],
+                           margin: f64) -> Vec<Triple> {
+    let mut out = Vec::new();
+    for i in 0..arm_scores.len() {
+        for j in 0..arm_scores.len() {
+            if arm_scores[i].1 > arm_scores[j].1 + margin {
+                out.push(Triple {
+                    d: d.to_vec(),
+                    better: arm_scores[i].0,
+                    worse: arm_scores[j].0,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic meta-world: arm 0 wins when d[0] > 0, arm 1 wins when
+    /// d[0] < 0; arm 2 always mediocre.
+    fn world(rng: &mut Rng, n_tasks: usize) -> Vec<Triple> {
+        let mut triples = Vec::new();
+        for _ in 0..n_tasks {
+            let f0 = rng.uniform(-1.0, 1.0);
+            let d = vec![f0, rng.normal() * 0.1, 1.0];
+            let scores = if f0 > 0.0 {
+                vec![(0usize, 0.9), (1usize, 0.3), (2usize, 0.6)]
+            } else {
+                vec![(0, 0.3), (1, 0.9), (2, 0.6)]
+            };
+            triples.extend(triples_from_scores(&d, &scores, 0.05));
+        }
+        triples
+    }
+
+    #[test]
+    fn learns_context_dependent_ranking() {
+        let mut rng = Rng::new(0);
+        let triples = world(&mut rng, 120);
+        let mut net = RankNet::new(3, 3, 16, &mut rng);
+        let loss0 = net.train_epoch(&triples, 0.0, &mut rng); // probe
+        let loss = net.train(&triples, 40, &mut rng);
+        assert!(loss < loss0 * 0.8, "loss {loss0} -> {loss}");
+        // rankings flip with the context feature
+        let pos = net.rank_arms(&[0.8, 0.0, 1.0]);
+        let neg = net.rank_arms(&[-0.8, 0.0, 1.0]);
+        assert_eq!(pos[0], 0, "pos context ranks {pos:?}");
+        assert_eq!(neg[0], 1, "neg context ranks {neg:?}");
+    }
+
+    #[test]
+    fn top_k_subset_contains_winner() {
+        let mut rng = Rng::new(1);
+        let triples = world(&mut rng, 120);
+        let mut net = RankNet::new(3, 3, 16, &mut rng);
+        net.train(&triples, 40, &mut rng);
+        let top2 = net.top_k(&[0.9, 0.0, 1.0], 2);
+        assert!(top2.contains(&0));
+        assert_eq!(top2.len(), 2);
+    }
+
+    #[test]
+    fn triples_respect_margin() {
+        let scores = vec![(0usize, 0.5), (1usize, 0.5001), (2usize, 0.9)];
+        let t = triples_from_scores(&[1.0], &scores, 0.05);
+        // only arm 2 dominates the others beyond the margin
+        assert_eq!(t.len(), 2);
+        assert!(t.iter().all(|x| x.better == 2));
+    }
+}

@@ -1,0 +1,367 @@
+//! Single-fidelity optimizers: random search, SMAC-style Bayesian
+//! optimization (the joint block's engine, §3.3.1) and the
+//! evolutionary pipeline search standing in for TPOT.
+//!
+//! All optimizers *maximise* utility.
+
+pub mod multifidelity;
+
+use crate::space::{Config, ConfigSpace};
+use crate::surrogate::{expected_improvement, Surrogate};
+use crate::util::rng::Rng;
+
+pub trait Optimizer {
+    fn suggest(&mut self, rng: &mut Rng) -> Config;
+    fn observe(&mut self, cfg: Config, y: f64);
+    fn best(&self) -> Option<&(Config, f64)>;
+    fn n_obs(&self) -> usize;
+    fn history(&self) -> &[(Config, f64)];
+}
+
+// ====================================================================
+// Random search
+// ====================================================================
+
+pub struct RandomSearch {
+    space: ConfigSpace,
+    history: Vec<(Config, f64)>,
+    best: Option<usize>,
+}
+
+impl RandomSearch {
+    pub fn new(space: ConfigSpace) -> Self {
+        RandomSearch { space, history: Vec::new(), best: None }
+    }
+}
+
+impl Optimizer for RandomSearch {
+    fn suggest(&mut self, rng: &mut Rng) -> Config {
+        self.space.sample(rng)
+    }
+    fn observe(&mut self, cfg: Config, y: f64) {
+        self.history.push((cfg, y));
+        let i = self.history.len() - 1;
+        if self.best.map(|b| y > self.history[b].1).unwrap_or(true) {
+            self.best = Some(i);
+        }
+    }
+    fn best(&self) -> Option<&(Config, f64)> {
+        self.best.map(|i| &self.history[i])
+    }
+    fn n_obs(&self) -> usize {
+        self.history.len()
+    }
+    fn history(&self) -> &[(Config, f64)] {
+        &self.history
+    }
+}
+
+// ====================================================================
+// SMAC-style BO
+// ====================================================================
+
+pub struct SmacBo {
+    pub space: ConfigSpace,
+    pub n_init: usize,
+    pub n_candidates: usize,
+    surrogate: Box<dyn Surrogate>,
+    history: Vec<(Config, f64)>,
+    feats: Vec<Vec<f64>>,
+    best: Option<usize>,
+    dirty: bool,
+    /// Interleave one random config every `random_interleave` suggests
+    /// (SMAC's random interleaving for theoretical guarantees).
+    pub random_interleave: usize,
+    suggests: usize,
+}
+
+impl SmacBo {
+    pub fn new(space: ConfigSpace, seed: u64) -> SmacBo {
+        let surrogate: Box<dyn Surrogate> =
+            Box::new(crate::surrogate::rf::ProbForest::new(seed));
+        Self::with_surrogate(space, surrogate)
+    }
+
+    pub fn with_surrogate(space: ConfigSpace,
+                          surrogate: Box<dyn Surrogate>) -> SmacBo {
+        SmacBo {
+            space,
+            n_init: 8,
+            n_candidates: 200,
+            surrogate,
+            history: Vec::new(),
+            feats: Vec::new(),
+            best: None,
+            dirty: true,
+            random_interleave: 7,
+            suggests: 0,
+        }
+    }
+
+    fn refit(&mut self) {
+        if self.dirty && !self.history.is_empty() {
+            let ys: Vec<f64> =
+                self.history.iter().map(|(_, y)| *y).collect();
+            self.surrogate.fit(&self.feats, &ys);
+            self.dirty = false;
+        }
+    }
+}
+
+impl Optimizer for SmacBo {
+    fn suggest(&mut self, rng: &mut Rng) -> Config {
+        self.suggests += 1;
+        if self.history.len() < self.n_init
+            || self.suggests % self.random_interleave == 0
+        {
+            return self.space.sample(rng);
+        }
+        self.refit();
+        let y_best = self.best().map(|(_, y)| *y).unwrap_or(0.0);
+        // candidate pool: random + local mutations of the incumbents
+        let mut candidates: Vec<Config> = (0..self.n_candidates)
+            .map(|_| self.space.sample(rng))
+            .collect();
+        let mut by_y: Vec<usize> = (0..self.history.len()).collect();
+        by_y.sort_by(|&a, &b| self.history[b].1
+            .partial_cmp(&self.history[a].1)
+            .unwrap_or(std::cmp::Ordering::Equal));
+        for &i in by_y.iter().take(5) {
+            for _ in 0..8 {
+                candidates.push(
+                    self.space.neighbor(&self.history[i].0, rng));
+            }
+        }
+        let mut best_cfg = None;
+        let mut best_ei = f64::NEG_INFINITY;
+        for cand in candidates {
+            let f = self.space.to_features(&cand);
+            let (m, v) = self.surrogate.predict(&f);
+            let ei = expected_improvement(m, v, y_best);
+            if ei > best_ei {
+                best_ei = ei;
+                best_cfg = Some(cand);
+            }
+        }
+        best_cfg.unwrap_or_else(|| self.space.sample(rng))
+    }
+
+    fn observe(&mut self, cfg: Config, y: f64) {
+        self.feats.push(self.space.to_features(&cfg));
+        self.history.push((cfg, y));
+        self.dirty = true;
+        let i = self.history.len() - 1;
+        if self.best.map(|b| y > self.history[b].1).unwrap_or(true) {
+            self.best = Some(i);
+        }
+    }
+    fn best(&self) -> Option<&(Config, f64)> {
+        self.best.map(|i| &self.history[i])
+    }
+    fn n_obs(&self) -> usize {
+        self.history.len()
+    }
+    fn history(&self) -> &[(Config, f64)] {
+        &self.history
+    }
+}
+
+// ====================================================================
+// Evolutionary search (TPOT-style)
+// ====================================================================
+
+pub struct Evolutionary {
+    space: ConfigSpace,
+    pub pop_size: usize,
+    pub tournament: usize,
+    pub mutation_rate: f64,
+    population: Vec<(Config, f64)>,
+    pending: Vec<Config>,
+    history: Vec<(Config, f64)>,
+    best: Option<usize>,
+}
+
+impl Evolutionary {
+    pub fn new(space: ConfigSpace) -> Evolutionary {
+        Evolutionary {
+            space,
+            pop_size: 16,
+            tournament: 3,
+            mutation_rate: 0.7,
+            population: Vec::new(),
+            pending: Vec::new(),
+            history: Vec::new(),
+            best: None,
+        }
+    }
+
+    fn select<'a>(&'a self, rng: &mut Rng) -> &'a Config {
+        let mut best: Option<&(Config, f64)> = None;
+        for _ in 0..self.tournament {
+            let c = &self.population[rng.below(self.population.len())];
+            if best.map(|b| c.1 > b.1).unwrap_or(true) {
+                best = Some(c);
+            }
+        }
+        &best.unwrap().0
+    }
+}
+
+impl Optimizer for Evolutionary {
+    fn suggest(&mut self, rng: &mut Rng) -> Config {
+        if let Some(cfg) = self.pending.pop() {
+            return cfg;
+        }
+        if self.population.len() < self.pop_size {
+            // TPOT discretises the space: sample on a coarse grid by
+            // snapping a random sample to grid values
+            let mut cfg = self.space.sample(rng);
+            for p in &self.space.params.clone() {
+                if cfg.get(&p.name).is_none() {
+                    continue;
+                }
+                let grid = self.space.grid_values(p, 6);
+                cfg.set(&p.name, grid[rng.below(grid.len())].clone());
+            }
+            return cfg;
+        }
+        // breed: crossover two tournament winners, then mutate
+        let a = self.select(rng).clone();
+        let b = self.select(rng).clone();
+        let mut child = self.space.crossover(&a, &b, rng);
+        if rng.bool(self.mutation_rate) {
+            child = self.space.neighbor(&child, rng);
+        }
+        child
+    }
+
+    fn observe(&mut self, cfg: Config, y: f64) {
+        self.history.push((cfg.clone(), y));
+        let i = self.history.len() - 1;
+        if self.best.map(|b| y > self.history[b].1).unwrap_or(true) {
+            self.best = Some(i);
+        }
+        self.population.push((cfg, y));
+        if self.population.len() > self.pop_size * 2 {
+            // generational survival: keep the fittest pop_size
+            self.population.sort_by(|x, z| z.1.partial_cmp(&x.1)
+                .unwrap_or(std::cmp::Ordering::Equal));
+            self.population.truncate(self.pop_size);
+        }
+    }
+    fn best(&self) -> Option<&(Config, f64)> {
+        self.best.map(|i| &self.history[i])
+    }
+    fn n_obs(&self) -> usize {
+        self.history.len()
+    }
+    fn history(&self) -> &[(Config, f64)] {
+        &self.history
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Value;
+
+    fn quad_space() -> ConfigSpace {
+        ConfigSpace::new()
+            .float("x", -2.0, 2.0, 0.0)
+            .float("y", -2.0, 2.0, 0.0)
+    }
+
+    /// utility = -(x-0.7)^2 - (y+0.3)^2 (max at (0.7, -0.3))
+    fn utility(cfg: &Config) -> f64 {
+        let x = cfg.f64_or("x", 0.0);
+        let y = cfg.f64_or("y", 0.0);
+        -((x - 0.7).powi(2) + (y + 0.3).powi(2))
+    }
+
+    fn run(opt: &mut dyn Optimizer, iters: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        for _ in 0..iters {
+            let cfg = opt.suggest(&mut rng);
+            let y = utility(&cfg);
+            opt.observe(cfg, y);
+        }
+        opt.best().unwrap().1
+    }
+
+    #[test]
+    fn smac_beats_random_on_quadratic() {
+        let mut diffs = 0;
+        for seed in 0..5 {
+            let mut rs = RandomSearch::new(quad_space());
+            let mut bo = SmacBo::new(quad_space(), seed);
+            let yr = run(&mut rs, 60, seed);
+            let yb = run(&mut bo, 60, seed);
+            if yb >= yr {
+                diffs += 1;
+            }
+        }
+        assert!(diffs >= 4, "BO won only {diffs}/5 seeds");
+    }
+
+    #[test]
+    fn smac_converges_near_optimum() {
+        let mut bo = SmacBo::new(quad_space(), 3);
+        let y = run(&mut bo, 100, 3);
+        assert!(y > -0.05, "best={y}");
+        let best = bo.best().unwrap().0.clone();
+        assert!((best.f64_or("x", 0.0) - 0.7).abs() < 0.3);
+    }
+
+    #[test]
+    fn evolutionary_improves_over_population_init() {
+        let mut ev = Evolutionary::new(quad_space());
+        let mut rng = Rng::new(4);
+        let mut first_gen_best = f64::NEG_INFINITY;
+        for i in 0..80 {
+            let cfg = ev.suggest(&mut rng);
+            let y = utility(&cfg);
+            if i < ev.pop_size {
+                first_gen_best = first_gen_best.max(y);
+            }
+            ev.observe(cfg, y);
+        }
+        assert!(ev.best().unwrap().1 >= first_gen_best);
+        assert!(ev.best().unwrap().1 > -0.2,
+                "best={}", ev.best().unwrap().1);
+    }
+
+    #[test]
+    fn observe_tracks_best() {
+        let mut rs = RandomSearch::new(quad_space());
+        rs.observe(Config::new().with("x", Value::F(0.0)), -1.0);
+        rs.observe(Config::new().with("x", Value::F(0.5)), -0.1);
+        rs.observe(Config::new().with("x", Value::F(1.0)), -0.5);
+        assert_eq!(rs.best().unwrap().1, -0.1);
+        assert_eq!(rs.n_obs(), 3);
+    }
+
+    #[test]
+    fn smac_respects_conditionals() {
+        let space = ConfigSpace::new()
+            .cat("algo", &["a", "b"], "a")
+            .float("p", 0.0, 1.0, 0.5)
+            .when("algo", &["a"]);
+        let mut bo = SmacBo::new(space.clone(), 5);
+        let mut rng = Rng::new(5);
+        for _ in 0..30 {
+            let cfg = bo.suggest(&mut rng);
+            // validity: p present iff algo == a
+            assert_eq!(cfg.get("p").is_some(),
+                       cfg.str_or("algo", "") == "a");
+            let y = if cfg.str_or("algo", "") == "a" {
+                cfg.f64_or("p", 0.0)
+            } else {
+                0.1
+            };
+            bo.observe(cfg, y);
+        }
+        // should learn algo=a with high p
+        let best = &bo.best().unwrap().0;
+        assert_eq!(best.str_or("algo", ""), "a");
+    }
+}

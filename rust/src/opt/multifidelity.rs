@@ -1,0 +1,440 @@
+//! Early-stopping / multi-fidelity optimizers (§3.3.1, §6.8):
+//! successive halving, Hyperband, BOHB (model-based Hyperband) and
+//! MFES-HB (multi-fidelity surrogate ensemble). Fidelity is the
+//! fraction of the evaluation budget (train subsample / GD steps);
+//! promotion uses the observed utility at the current rung.
+
+use std::collections::HashMap;
+
+use crate::space::{Config, ConfigSpace};
+use crate::surrogate::rf::ProbForest;
+use crate::surrogate::{expected_improvement, Surrogate};
+use crate::util::rng::Rng;
+
+/// Multi-fidelity optimizers suggest (config, fidelity) pairs.
+pub trait MfOptimizer {
+    fn suggest(&mut self, rng: &mut Rng) -> (Config, f64);
+    fn observe(&mut self, cfg: Config, fidelity: f64, y: f64);
+    /// Best observation at the highest fidelity seen so far.
+    fn best(&self) -> Option<&(Config, f64)>;
+    fn n_obs(&self) -> usize;
+}
+
+/// How BOHB/MFES-HB pick new configurations at the bottom rung.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampling {
+    /// Plain Hyperband: uniform random.
+    Random,
+    /// BOHB: EI on a surrogate fitted to the highest fidelity with
+    /// enough observations.
+    TopFidelityModel,
+    /// MFES-HB: EI on a weighted ensemble of per-fidelity surrogates.
+    MultiFidelityEnsemble,
+}
+
+struct Rung {
+    fidelity: f64,
+    /// configs awaiting evaluation at this rung
+    pending: Vec<Config>,
+    /// evaluated (config, y) at this rung
+    done: Vec<(Config, f64)>,
+    capacity: usize,
+}
+
+/// One Hyperband bracket = a successive-halving ladder.
+struct Bracket {
+    rungs: Vec<Rung>,
+    cursor: usize,
+}
+
+pub struct HyperbandFamily {
+    space: ConfigSpace,
+    pub eta: usize,
+    /// Fidelity ladder, ascending, last == 1.0.
+    pub fidelities: Vec<f64>,
+    sampling: Sampling,
+    bracket: Option<Bracket>,
+    /// cycles through bracket sizes s = s_max .. 0
+    next_s: usize,
+    history: Vec<(Config, f64, f64)>, // (cfg, fidelity, y)
+    best_full: Option<(Config, f64)>,
+    surrogates: HashMap<u64, ProbForest>,
+    dirty: bool,
+    seed: u64,
+}
+
+fn fid_key(f: f64) -> u64 {
+    (f * 1e6).round() as u64
+}
+
+impl HyperbandFamily {
+    pub fn new(space: ConfigSpace, sampling: Sampling, seed: u64)
+        -> HyperbandFamily {
+        HyperbandFamily {
+            space,
+            eta: 3,
+            fidelities: vec![1.0 / 9.0, 1.0 / 3.0, 1.0],
+            sampling,
+            bracket: None,
+            next_s: 2,
+            history: Vec::new(),
+            best_full: None,
+            surrogates: HashMap::new(),
+            dirty: true,
+            seed,
+        }
+    }
+
+    pub fn successive_halving(space: ConfigSpace, seed: u64)
+        -> HyperbandFamily {
+        // SH = Hyperband restricted to the widest bracket
+        let mut hb = Self::new(space, Sampling::Random, seed);
+        hb.next_s = hb.fidelities.len() - 1;
+        hb
+    }
+
+    pub fn hyperband(space: ConfigSpace, seed: u64) -> HyperbandFamily {
+        Self::new(space, Sampling::Random, seed)
+    }
+
+    pub fn bohb(space: ConfigSpace, seed: u64) -> HyperbandFamily {
+        Self::new(space, Sampling::TopFidelityModel, seed)
+    }
+
+    pub fn mfes_hb(space: ConfigSpace, seed: u64) -> HyperbandFamily {
+        Self::new(space, Sampling::MultiFidelityEnsemble, seed)
+    }
+
+    fn refit(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        self.dirty = false;
+        let mut by_fid: HashMap<u64, (Vec<Vec<f64>>, Vec<f64>)> =
+            HashMap::new();
+        for (cfg, fid, y) in &self.history {
+            let e = by_fid.entry(fid_key(*fid)).or_default();
+            e.0.push(self.space.to_features(cfg));
+            e.1.push(*y);
+        }
+        self.surrogates.clear();
+        for (k, (xs, ys)) in by_fid {
+            if xs.len() >= 4 {
+                let mut f = ProbForest::new(self.seed ^ k);
+                f.fit(&xs, &ys);
+                self.surrogates.insert(k, f);
+            }
+        }
+    }
+
+    /// MFES-HB weights: rank agreement of each fidelity's surrogate
+    /// with the observations at the highest available fidelity.
+    fn ensemble_weights(&self, top_fid: f64) -> Vec<(u64, f64)> {
+        let top: Vec<(&Config, f64)> = self
+            .history
+            .iter()
+            .filter(|(_, f, _)| fid_key(*f) == fid_key(top_fid))
+            .map(|(c, _, y)| (c, *y))
+            .collect();
+        let mut out = Vec::new();
+        for (k, sur) in &self.surrogates {
+            let mut agree = 1.0;
+            let mut total = 2.0;
+            for i in 0..top.len() {
+                for j in i + 1..top.len() {
+                    let fi = self.space.to_features(top[i].0);
+                    let fj = self.space.to_features(top[j].0);
+                    let (mi, _) = sur.predict(&fi);
+                    let (mj, _) = sur.predict(&fj);
+                    total += 1.0;
+                    if (mi > mj) == (top[i].1 > top[j].1) {
+                        agree += 1.0;
+                    }
+                }
+            }
+            // fidelity prior: higher fidelities are more trustworthy
+            let fid_prior = (*k as f64 / 1e6).sqrt();
+            out.push((*k, (agree / total) * fid_prior));
+        }
+        let s: f64 = out.iter().map(|(_, w)| *w).sum();
+        if s > 0.0 {
+            for (_, w) in &mut out {
+                *w /= s;
+            }
+        }
+        out
+    }
+
+    fn model_sample(&mut self, rng: &mut Rng) -> Config {
+        self.refit();
+        let n_cand = 120;
+        let candidates: Vec<Config> =
+            (0..n_cand).map(|_| self.space.sample(rng)).collect();
+        let y_best = self
+            .best_full
+            .as_ref()
+            .map(|(_, y)| *y)
+            .or_else(|| {
+                self.history.iter().map(|(_, _, y)| *y)
+                    .fold(None, |acc: Option<f64>, y| {
+                        Some(acc.map_or(y, |a| a.max(y)))
+                    })
+            })
+            .unwrap_or(0.0);
+        let score = |cfg: &Config, this: &Self| -> f64 {
+            let f = this.space.to_features(cfg);
+            match this.sampling {
+                Sampling::Random => 0.0,
+                Sampling::TopFidelityModel => {
+                    // use the highest fidelity that has a surrogate
+                    let mut keys: Vec<u64> =
+                        this.surrogates.keys().copied().collect();
+                    keys.sort_unstable();
+                    match keys.last() {
+                        Some(k) => {
+                            let (m, v) = this.surrogates[k].predict(&f);
+                            expected_improvement(m, v, y_best)
+                        }
+                        None => 0.0,
+                    }
+                }
+                Sampling::MultiFidelityEnsemble => {
+                    let ws = this.ensemble_weights(1.0);
+                    if ws.is_empty() {
+                        return 0.0;
+                    }
+                    let mut mean = 0.0;
+                    let mut var = 0.0;
+                    for (k, w) in &ws {
+                        let (m, v) = this.surrogates[k].predict(&f);
+                        mean += w * m;
+                        var += w * v;
+                    }
+                    expected_improvement(mean, var, y_best)
+                }
+            }
+        };
+        if self.surrogates.is_empty()
+            || self.sampling == Sampling::Random {
+            return self.space.sample(rng);
+        }
+        candidates
+            .into_iter()
+            .map(|c| {
+                let s = score(&c, self);
+                (c, s)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1)
+                .unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(c, _)| c)
+            .unwrap_or_else(|| self.space.sample(rng))
+    }
+
+    fn new_bracket(&mut self, rng: &mut Rng) -> Bracket {
+        let s_max = self.fidelities.len() - 1;
+        let s = self.next_s;
+        self.next_s = if self.next_s == 0 { s_max } else { self.next_s - 1 };
+        // number of configs in the bottom rung of this bracket
+        let n0 = ((s_max as f64 + 1.0) / (s as f64 + 1.0)
+            * (self.eta.pow(s as u32) as f64))
+            .ceil() as usize;
+        let start = s_max - s;
+        let mut rungs = Vec::new();
+        let mut n = n0.max(1);
+        for (level, &fid) in
+            self.fidelities.iter().enumerate().skip(start) {
+            rungs.push(Rung {
+                fidelity: fid,
+                pending: Vec::new(),
+                done: Vec::new(),
+                capacity: n.max(1),
+            });
+            let _ = level;
+            n = (n / self.eta).max(1);
+        }
+        // seed the bottom rung
+        let bottom_capacity = rungs[0].capacity;
+        for _ in 0..bottom_capacity {
+            let cfg = match self.sampling {
+                Sampling::Random => self.space.sample(rng),
+                _ => self.model_sample(rng),
+            };
+            rungs[0].pending.push(cfg);
+        }
+        Bracket { rungs, cursor: 0 }
+    }
+}
+
+impl MfOptimizer for HyperbandFamily {
+    fn suggest(&mut self, rng: &mut Rng) -> (Config, f64) {
+        loop {
+            if self.bracket.is_none() {
+                let b = self.new_bracket(rng);
+                self.bracket = Some(b);
+            }
+            {
+                let bracket = self.bracket.as_mut().unwrap();
+                // find a rung with pending work
+                while bracket.cursor < bracket.rungs.len() {
+                    let c = bracket.cursor;
+                    if let Some(cfg) = bracket.rungs[c].pending.pop() {
+                        let fid = bracket.rungs[c].fidelity;
+                        return (cfg, fid);
+                    }
+                    // rung exhausted: promote if complete
+                    let complete = bracket.rungs[c].done.len()
+                        >= bracket.rungs[c].capacity;
+                    if complete {
+                        if c + 1 < bracket.rungs.len() {
+                            let mut done =
+                                bracket.rungs[c].done.clone();
+                            done.sort_by(|a, b| b.1.partial_cmp(&a.1)
+                                .unwrap_or(std::cmp::Ordering::Equal));
+                            let promote =
+                                bracket.rungs[c + 1].capacity;
+                            bracket.rungs[c + 1].pending = done
+                                .into_iter()
+                                .take(promote)
+                                .map(|(c, _)| c)
+                                .collect();
+                        }
+                        bracket.cursor += 1;
+                    } else {
+                        // waiting on observe(); shouldn't happen in the
+                        // sequential driver, but guard anyway
+                        break;
+                    }
+                }
+            }
+            let finished = {
+                let b = self.bracket.as_ref().unwrap();
+                b.cursor >= b.rungs.len()
+            };
+            if finished {
+                self.bracket = None;
+                continue;
+            }
+            // incomplete rung without pending: fill with fresh samples
+            let bracket = self.bracket.as_mut().unwrap();
+            let c = bracket.cursor;
+            let fid = bracket.rungs[c].fidelity;
+            let cfg = match self.sampling {
+                Sampling::Random => self.space.sample(rng),
+                _ => self.model_sample(rng),
+            };
+            return (cfg, fid);
+        }
+    }
+
+    fn observe(&mut self, cfg: Config, fidelity: f64, y: f64) {
+        self.history.push((cfg.clone(), fidelity, y));
+        self.dirty = true;
+        if fid_key(fidelity) == fid_key(1.0)
+            && self
+                .best_full
+                .as_ref()
+                .map(|(_, b)| y > *b)
+                .unwrap_or(true)
+        {
+            self.best_full = Some((cfg.clone(), y));
+        }
+        if let Some(bracket) = &mut self.bracket {
+            let c = bracket.cursor;
+            if c < bracket.rungs.len()
+                && fid_key(bracket.rungs[c].fidelity) == fid_key(fidelity)
+            {
+                bracket.rungs[c].done.push((cfg, y));
+            }
+        }
+    }
+
+    fn best(&self) -> Option<&(Config, f64)> {
+        self.best_full.as_ref()
+    }
+
+    fn n_obs(&self) -> usize {
+        self.history.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::new().float("x", 0.0, 1.0, 0.5)
+    }
+
+    /// Noisy objective whose fidelity controls noise: low fidelity is
+    /// a noisy estimate of -(x-0.8)^2.
+    fn utility(cfg: &Config, fid: f64, rng: &mut Rng) -> f64 {
+        let x = cfg.f64_or("x", 0.0);
+        let noise = (1.0 - fid) * 0.2 * rng.normal();
+        -(x - 0.8).powi(2) + noise
+    }
+
+    fn drive(opt: &mut dyn MfOptimizer, iters: usize, seed: u64)
+        -> (f64, usize) {
+        let mut rng = Rng::new(seed);
+        let mut full_evals = 0;
+        for _ in 0..iters {
+            let (cfg, fid) = opt.suggest(&mut rng);
+            if fid >= 1.0 {
+                full_evals += 1;
+            }
+            let y = utility(&cfg, fid, &mut rng);
+            opt.observe(cfg, fid, y);
+        }
+        (opt.best().map(|(_, y)| *y).unwrap_or(f64::NEG_INFINITY),
+         full_evals)
+    }
+
+    #[test]
+    fn hyperband_spends_most_budget_at_low_fidelity() {
+        let mut hb = HyperbandFamily::hyperband(space(), 0);
+        let (_, full) = drive(&mut hb, 120, 0);
+        assert!(full < 60, "too many full-fidelity evals: {full}");
+        assert!(hb.best().is_some());
+    }
+
+    #[test]
+    fn all_variants_find_good_x() {
+        for (name, mut opt) in [
+            ("sh", HyperbandFamily::successive_halving(space(), 1)),
+            ("hb", HyperbandFamily::hyperband(space(), 1)),
+            ("bohb", HyperbandFamily::bohb(space(), 1)),
+            ("mfes", HyperbandFamily::mfes_hb(space(), 1)),
+        ] {
+            let (best, _) = drive(&mut opt, 150, 2);
+            assert!(best > -0.1, "{name}: best={best}");
+        }
+    }
+
+    #[test]
+    fn promotion_keeps_the_better_configs() {
+        let mut hb = HyperbandFamily::hyperband(space(), 3);
+        let mut rng = Rng::new(3);
+        // run exactly one bracket worth of bottom-rung evals
+        let mut seen_fids = Vec::new();
+        for _ in 0..40 {
+            let (cfg, fid) = hb.suggest(&mut rng);
+            seen_fids.push(fid);
+            let y = utility(&cfg, fid, &mut rng);
+            hb.observe(cfg, fid, y);
+        }
+        // fidelities are non-decreasing within a bracket scan
+        let min_f = seen_fids.iter().cloned().fold(f64::INFINITY,
+                                                   f64::min);
+        assert!(min_f < 0.2, "bottom rung fidelity {min_f}");
+        assert!(seen_fids.iter().any(|&f| f >= 1.0),
+                "never promoted to full fidelity");
+    }
+
+    #[test]
+    fn bohb_uses_model_after_enough_observations() {
+        let mut bohb = HyperbandFamily::bohb(space(), 4);
+        let (best, _) = drive(&mut bohb, 200, 5);
+        assert!(best > -0.05, "best={best}");
+        assert!(!bohb.surrogates.is_empty());
+    }
+}

@@ -1,0 +1,504 @@
+//! VolcanoML execution plans (§4): trees of building blocks over the
+//! joint AutoML space, executed Volcano-style (`do_next!` propagating
+//! root -> leaf).
+//!
+//! Space conventions (built by `coordinator::joint_space`):
+//! * `algorithm` — categorical over the arm names;
+//! * `alg.<name>:<hp>` — per-algorithm hyper-parameters, conditional
+//!   on `algorithm == name`;
+//! * `fe:<stage>` / `fe:<stage>.<op>:<hp>` — FE pipeline parameters.
+//!
+//! The five coarse-grained plans of §4.2 / Fig 6 are implemented:
+//! J, C, A, AC and CA (the paper's default, Fig 4), plus the
+//! progressive top-down strategy of §4.3.
+
+pub mod progressive;
+
+use anyhow::Result;
+
+use crate::blocks::{
+    AlternatingBlock, Arm, BuildingBlock, ConditioningBlock, Env,
+    JointBlock, JointEngine,
+};
+use crate::opt::multifidelity::HyperbandFamily;
+use crate::opt::{Evolutionary, RandomSearch, SmacBo};
+use crate::space::{Config, ConfigSpace, Domain, Value};
+use crate::surrogate::Surrogate;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanKind {
+    /// Plan 1 — single joint block over the entire space.
+    J,
+    /// Plan 2 — conditioning on algorithm, joint subspaces.
+    C,
+    /// Plan 3 — alternating FE <-> CASH.
+    A,
+    /// Plan 4 — alternating FE <-> (conditioning on algorithm).
+    AC,
+    /// Plan 5 — conditioning on algorithm, then alternating FE <-> HP
+    /// (the VolcanoML default).
+    CA,
+}
+
+impl PlanKind {
+    pub fn parse(s: &str) -> Option<PlanKind> {
+        Some(match s.to_ascii_uppercase().as_str() {
+            "J" | "PLAN1" | "1" => PlanKind::J,
+            "C" | "PLAN2" | "2" => PlanKind::C,
+            "A" | "PLAN3" | "3" => PlanKind::A,
+            "AC" | "PLAN4" | "4" => PlanKind::AC,
+            "CA" | "PLAN5" | "5" => PlanKind::CA,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanKind::J => "J",
+            PlanKind::C => "C",
+            PlanKind::A => "A",
+            PlanKind::AC => "AC",
+            PlanKind::CA => "CA",
+        }
+    }
+
+    pub fn all() -> [PlanKind; 5] {
+        [PlanKind::J, PlanKind::C, PlanKind::A, PlanKind::AC,
+         PlanKind::CA]
+    }
+}
+
+/// Engine used by every leaf joint block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Bo,
+    Random,
+    /// TPOT-style evolutionary engine.
+    Evolutionary,
+    Hyperband,
+    Bohb,
+    MfesHb,
+    SuccessiveHalving,
+}
+
+/// Builds plan trees over a joint space. Meta-learning hooks:
+/// `arm_filter` restricts conditioning arms (RankNet pruning, §5.1);
+/// `surrogate_factory` injects per-leaf surrogates (RGPE, §5.2).
+pub struct PlanBuilder<'a> {
+    pub space: &'a ConfigSpace,
+    pub engine: EngineKind,
+    pub seed: u64,
+    pub arm_filter: Option<Vec<String>>,
+    #[allow(clippy::type_complexity)]
+    pub surrogate_factory:
+        Option<&'a dyn Fn(&str, &ConfigSpace) -> Option<Box<dyn Surrogate>>>,
+}
+
+impl<'a> PlanBuilder<'a> {
+    pub fn new(space: &'a ConfigSpace, engine: EngineKind, seed: u64)
+        -> PlanBuilder<'a> {
+        PlanBuilder {
+            space,
+            engine,
+            seed,
+            arm_filter: None,
+            surrogate_factory: None,
+        }
+    }
+
+    /// Algorithm values (optionally pruned by the meta-learned filter).
+    pub fn algo_values(&self) -> Vec<String> {
+        let all = match self.space.param("algorithm").map(|p| &p.domain) {
+            Some(Domain::Cat(vals)) => vals.clone(),
+            _ => Vec::new(),
+        };
+        match &self.arm_filter {
+            Some(keep) => all
+                .into_iter()
+                .filter(|a| keep.contains(a))
+                .collect(),
+            None => all,
+        }
+    }
+
+    pub fn fe_space(&self) -> ConfigSpace {
+        self.space.subspace_prefixed("fe:")
+    }
+
+    pub fn hp_space(&self, algo: &str) -> ConfigSpace {
+        self.space.subspace_prefixed(&format!("alg.{algo}:"))
+    }
+
+    /// CASH space: algorithm selection + all conditional HPs.
+    pub fn cash_space(&self) -> ConfigSpace {
+        let names: Vec<&str> = self
+            .space
+            .params
+            .iter()
+            .filter(|p| p.name == "algorithm"
+                || p.name.starts_with("alg."))
+            .map(|p| p.name.as_str())
+            .collect();
+        let mut sub = self.space.subspace(&names);
+        if let Some(filter) = &self.arm_filter {
+            for p in &mut sub.params {
+                if p.name == "algorithm" {
+                    if let Domain::Cat(vals) = &mut p.domain {
+                        vals.retain(|v| filter.contains(v));
+                        if let Value::C(d) = &p.default {
+                            if !vals.contains(d) && !vals.is_empty() {
+                                p.default = Value::C(vals[0].clone());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        sub
+    }
+
+    fn leaf(&self, label: &str, sub: ConfigSpace, fixed: Config,
+            salt: u64) -> JointBlock {
+        let seed = self.seed ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
+        let engine = match self.engine {
+            EngineKind::Bo => {
+                let bo = match &self.surrogate_factory {
+                    Some(f) => match f(label, &sub) {
+                        Some(s) => SmacBo::with_surrogate(sub.clone(), s),
+                        None => SmacBo::new(sub.clone(), seed),
+                    },
+                    None => SmacBo::new(sub.clone(), seed),
+                };
+                JointEngine::Bo(bo)
+            }
+            EngineKind::Random => {
+                JointEngine::Random(RandomSearch::new(sub.clone()))
+            }
+            EngineKind::Evolutionary => {
+                JointEngine::Evo(Evolutionary::new(sub.clone()))
+            }
+            EngineKind::Hyperband => JointEngine::Mf(
+                HyperbandFamily::hyperband(sub.clone(), seed)),
+            EngineKind::Bohb => JointEngine::Mf(
+                HyperbandFamily::bohb(sub.clone(), seed)),
+            EngineKind::MfesHb => JointEngine::Mf(
+                HyperbandFamily::mfes_hb(sub.clone(), seed)),
+            EngineKind::SuccessiveHalving => JointEngine::Mf(
+                HyperbandFamily::successive_halving(sub.clone(), seed)),
+        };
+        JointBlock::with_engine(label, sub, fixed, engine)
+    }
+
+    /// Per-algorithm alternating block: FE <-> HP (Fig 4 subtree).
+    fn alt_fe_hp(&self, algo: &str, salt: u64) -> Box<dyn BuildingBlock> {
+        let fe = self.fe_space();
+        let hp = self.hp_space(algo);
+        let algo_fix = Config::new()
+            .with("algorithm", Value::C(algo.to_string()));
+        let fe_fixed = algo_fix.merged(&hp.default_config());
+        let hp_fixed = algo_fix.merged(&fe.default_config());
+        if hp.is_empty() {
+            return Box::new(self.leaf(
+                &format!("fe|{algo}"), fe, fe_fixed, salt));
+        }
+        let b_fe = self.leaf(&format!("fe|{algo}"), fe.clone(), fe_fixed,
+                             salt * 2 + 1);
+        let b_hp = self.leaf(&format!("hp|{algo}"), hp.clone(), hp_fixed,
+                             salt * 2 + 2);
+        let fe_vars: Vec<String> =
+            fe.params.iter().map(|p| p.name.clone()).collect();
+        let hp_vars: Vec<String> =
+            hp.params.iter().map(|p| p.name.clone()).collect();
+        Box::new(AlternatingBlock::new(
+            Box::new(b_fe), fe_vars, Box::new(b_hp), hp_vars))
+    }
+
+    pub fn build(&self, kind: PlanKind) -> Box<dyn BuildingBlock> {
+        match kind {
+            PlanKind::J => {
+                let mut sub = self.space.clone();
+                if self.arm_filter.is_some() {
+                    // prune algorithm domain in place
+                    sub = self.prune_space(sub);
+                }
+                Box::new(self.leaf("full", sub, Config::new(), 1))
+            }
+            PlanKind::C => {
+                let arms = self
+                    .algo_values()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, a)| {
+                        let mut sub = self.fe_space();
+                        sub = merge_spaces(sub, self.hp_space(a));
+                        let fixed = Config::new().with(
+                            "algorithm", Value::C(a.clone()));
+                        Arm {
+                            value: a.clone(),
+                            block: Box::new(self.leaf(
+                                &format!("fe+hp|{a}"), sub, fixed,
+                                100 + i as u64)),
+                            active: true,
+                        }
+                    })
+                    .collect();
+                Box::new(ConditioningBlock::new("algorithm", arms))
+            }
+            PlanKind::A => {
+                let fe = self.fe_space();
+                let cash = self.cash_space();
+                let fe_fixed = cash.default_config();
+                let cash_fixed = fe.default_config();
+                let b_fe = self.leaf("fe", fe.clone(), fe_fixed, 11);
+                let b_cash =
+                    self.leaf("cash", cash.clone(), cash_fixed, 12);
+                let fe_vars: Vec<String> =
+                    fe.params.iter().map(|p| p.name.clone()).collect();
+                let cash_vars: Vec<String> =
+                    cash.params.iter().map(|p| p.name.clone()).collect();
+                Box::new(AlternatingBlock::new(
+                    Box::new(b_fe), fe_vars,
+                    Box::new(b_cash), cash_vars))
+            }
+            PlanKind::AC => {
+                let fe = self.fe_space();
+                let fe_fixed = self.cash_space().default_config();
+                let b_fe = self.leaf("fe", fe.clone(), fe_fixed, 21);
+                let arms = self
+                    .algo_values()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, a)| {
+                        let hp = self.hp_space(a);
+                        let fixed = Config::new()
+                            .with("algorithm", Value::C(a.clone()))
+                            .merged(&fe.default_config());
+                        Arm {
+                            value: a.clone(),
+                            block: Box::new(self.leaf(
+                                &format!("hp|{a}"), hp, fixed,
+                                200 + i as u64)),
+                            active: true,
+                        }
+                    })
+                    .collect();
+                let mut cond = ConditioningBlock::new("algorithm", arms);
+                // inner conditioning plays fewer rounds per pull so the
+                // alternation stays responsive
+                cond.plays_per_round = 1;
+                let fe_vars: Vec<String> =
+                    fe.params.iter().map(|p| p.name.clone()).collect();
+                let cash_vars: Vec<String> = self
+                    .cash_space()
+                    .params
+                    .iter()
+                    .map(|p| p.name.clone())
+                    .collect();
+                Box::new(AlternatingBlock::new(
+                    Box::new(b_fe), fe_vars,
+                    Box::new(cond), cash_vars))
+            }
+            PlanKind::CA => {
+                Box::new(ConditioningBlock::new("algorithm",
+                                                self.ca_arms()))
+            }
+        }
+    }
+
+    /// The CA plan's conditioning arms (public so continue-tuning
+    /// drivers can extend a live block with new algorithms, §3.3.6).
+    pub fn ca_arms(&self) -> Vec<Arm> {
+        self.algo_values()
+            .iter()
+            .enumerate()
+            .map(|(i, a)| Arm {
+                value: a.clone(),
+                block: self.alt_fe_hp(a, 300 + i as u64),
+                active: true,
+            })
+            .collect()
+    }
+
+    fn prune_space(&self, mut space: ConfigSpace) -> ConfigSpace {
+        if let Some(filter) = &self.arm_filter {
+            for p in &mut space.params {
+                if p.name == "algorithm" {
+                    if let Domain::Cat(vals) = &mut p.domain {
+                        vals.retain(|v| filter.contains(v));
+                        if let Value::C(d) = &p.default {
+                            if !vals.contains(d) && !vals.is_empty() {
+                                p.default = Value::C(vals[0].clone());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        space
+    }
+}
+
+fn merge_spaces(mut a: ConfigSpace, b: ConfigSpace) -> ConfigSpace {
+    a.params.extend(b.params);
+    a
+}
+
+/// Top-level executor: repeatedly invokes the root's `do_next!` until
+/// the objective's budget is exhausted.
+pub struct ExecutionPlan {
+    pub root: Box<dyn BuildingBlock>,
+    pub iterations: usize,
+}
+
+impl ExecutionPlan {
+    pub fn new(root: Box<dyn BuildingBlock>) -> ExecutionPlan {
+        ExecutionPlan { root, iterations: 0 }
+    }
+
+    pub fn run(&mut self, env: &mut Env) -> Result<()> {
+        while !env.obj.exhausted() {
+            self.root.do_next(env)?;
+            self.iterations += 1;
+        }
+        Ok(())
+    }
+
+    pub fn best(&self) -> Option<(Config, f64)> {
+        self.root.current_best()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::Objective;
+
+    /// Joint space shaped like the AutoML convention.
+    fn automl_like_space() -> ConfigSpace {
+        ConfigSpace::new()
+            .cat("algorithm", &["tree", "linear"], "tree")
+            .float("alg.tree:depth", 0.0, 1.0, 0.5)
+            .when("algorithm", &["tree"])
+            .float("alg.linear:reg", 0.0, 1.0, 0.5)
+            .when("algorithm", &["linear"])
+            .cat("fe:scaler", &["none", "standard"], "none")
+            .float("fe:frac", 0.0, 1.0, 0.5)
+    }
+
+    struct Synth {
+        evals: usize,
+        cap: usize,
+    }
+
+    impl Objective for Synth {
+        fn evaluate(&mut self, cfg: &Config, _f: f64)
+            -> Result<f64> {
+            self.evals += 1;
+            let fe_bonus = if cfg.str_or("fe:scaler", "none")
+                == "standard" { 0.2 } else { 0.0 };
+            let frac = cfg.f64_or("fe:frac", 0.5);
+            Ok(match cfg.str_or("algorithm", "tree") {
+                "tree" => {
+                    let d = cfg.f64_or("alg.tree:depth", 0.5);
+                    0.5 + fe_bonus - (d - 0.8).powi(2)
+                        - 0.1 * (frac - 0.3).powi(2)
+                }
+                _ => {
+                    let r = cfg.f64_or("alg.linear:reg", 0.5);
+                    0.3 + fe_bonus - (r - 0.5).powi(2)
+                }
+            })
+        }
+        fn exhausted(&self) -> bool {
+            self.evals >= self.cap
+        }
+    }
+
+    #[test]
+    fn plan_kind_parsing() {
+        assert_eq!(PlanKind::parse("ca"), Some(PlanKind::CA));
+        assert_eq!(PlanKind::parse("Plan1"), Some(PlanKind::J));
+        assert_eq!(PlanKind::parse("xx"), None);
+        assert_eq!(PlanKind::all().len(), 5);
+    }
+
+    #[test]
+    fn subspace_helpers_split_by_prefix() {
+        let space = automl_like_space();
+        let b = PlanBuilder::new(&space, EngineKind::Bo, 0);
+        assert_eq!(b.fe_space().len(), 2);
+        assert_eq!(b.hp_space("tree").len(), 1);
+        assert_eq!(b.cash_space().len(), 3);
+        assert_eq!(b.algo_values(), vec!["tree", "linear"]);
+    }
+
+    #[test]
+    fn all_five_plans_find_the_good_region() {
+        let space = automl_like_space();
+        for kind in PlanKind::all() {
+            let mut obj = Synth { evals: 0, cap: 220 };
+            let mut rng = crate::util::rng::Rng::new(kind as u64);
+            let builder = PlanBuilder::new(&space, EngineKind::Bo,
+                                           42 + kind as u64);
+            let mut plan = ExecutionPlan::new(builder.build(kind));
+            {
+                let mut env = Env { obj: &mut obj, rng: &mut rng };
+                plan.run(&mut env).unwrap();
+            }
+            let (cfg, y) = plan.best()
+                .unwrap_or_else(|| panic!("{}: no best", kind.name()));
+            // optimum is algorithm=tree, scaler=standard, depth~0.8
+            // with utility ~0.7
+            assert!(y > 0.55, "{}: best={y}", kind.name());
+            assert_eq!(cfg.str_or("algorithm", ""), "tree",
+                       "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn ca_plan_structure_matches_fig4() {
+        let space = automl_like_space();
+        let builder = PlanBuilder::new(&space, EngineKind::Bo, 1);
+        let root = builder.build(PlanKind::CA);
+        assert!(root.name().starts_with("conditioning"));
+        assert_eq!(root.active_children(), 2);
+    }
+
+    #[test]
+    fn arm_filter_prunes_conditioning_arms() {
+        let space = automl_like_space();
+        let mut builder = PlanBuilder::new(&space, EngineKind::Bo, 2);
+        builder.arm_filter = Some(vec!["linear".to_string()]);
+        let root = builder.build(PlanKind::CA);
+        assert_eq!(root.active_children(), 1);
+        // and plan J's algorithm domain is pruned too
+        let j = builder.build(PlanKind::J);
+        let mut obj = Synth { evals: 0, cap: 30 };
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut plan = ExecutionPlan::new(j);
+        {
+            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            plan.run(&mut env).unwrap();
+        }
+        let (cfg, _) = plan.best().unwrap();
+        assert_eq!(cfg.str_or("algorithm", ""), "linear");
+    }
+
+    #[test]
+    fn mf_engines_build_and_run() {
+        let space = automl_like_space();
+        for engine in [EngineKind::Hyperband, EngineKind::MfesHb,
+                       EngineKind::Bohb, EngineKind::SuccessiveHalving,
+                       EngineKind::Random] {
+            let builder = PlanBuilder::new(&space, engine, 4);
+            let mut plan = ExecutionPlan::new(builder.build(PlanKind::J));
+            let mut obj = Synth { evals: 0, cap: 80 };
+            let mut rng = crate::util::rng::Rng::new(5);
+            {
+                let mut env = Env { obj: &mut obj, rng: &mut rng };
+                plan.run(&mut env).unwrap();
+            }
+            assert!(plan.best().is_some(), "{engine:?}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Progressive optimization (§4.3): a top-down pass through the plan-5
+//! tree — first pick the best algorithm with everything else at
+//! defaults, then optimise feature engineering under the chosen
+//! algorithm, then its hyper-parameters. High exploration efficiency,
+//! but risks committing to the wrong algorithm and yields a
+//! low-diversity model pool (Table 11 quantifies both).
+
+use anyhow::Result;
+
+use crate::blocks::{Env, Objective};
+use crate::opt::{Optimizer, SmacBo};
+use crate::space::{Config, ConfigSpace, Value};
+
+use super::PlanBuilder;
+
+pub struct ProgressiveResult {
+    pub best: Option<(Config, f64)>,
+    pub chosen_algorithm: Option<String>,
+    pub history: Vec<(Config, f64)>,
+}
+
+/// Run the progressive strategy. Budget is whatever the objective
+/// allows; the FE and HP phases split the remaining evaluations
+/// roughly in half.
+pub fn run_progressive(builder: &PlanBuilder, env: &mut Env,
+                       fe_phase_evals: usize, hp_phase_evals: usize)
+    -> Result<ProgressiveResult> {
+    let mut history: Vec<(Config, f64)> = Vec::new();
+    let mut track = |cfg: Config, y: f64,
+                     history: &mut Vec<(Config, f64)>| {
+        history.push((cfg, y));
+    };
+
+    // ---- phase 1: try each algorithm at defaults -------------------
+    let fe_default = builder.fe_space().default_config();
+    let mut best_algo: Option<(String, f64)> = None;
+    for algo in builder.algo_values() {
+        if env.obj.exhausted() {
+            break;
+        }
+        let hp_default = builder.hp_space(&algo).default_config();
+        let cfg = Config::new()
+            .with("algorithm", Value::C(algo.clone()))
+            .merged(&hp_default)
+            .merged(&fe_default);
+        let y = env.obj.evaluate(&cfg, 1.0)?;
+        track(cfg, y, &mut history);
+        if best_algo.as_ref().map(|(_, b)| y > *b).unwrap_or(true) {
+            best_algo = Some((algo, y));
+        }
+    }
+    let Some((algo, _)) = best_algo.clone() else {
+        return Ok(ProgressiveResult {
+            best: None,
+            chosen_algorithm: None,
+            history,
+        });
+    };
+
+    // ---- phase 2: optimise FE with the algorithm fixed -------------
+    let fixed_algo = Config::new()
+        .with("algorithm", Value::C(algo.clone()))
+        .merged(&builder.hp_space(&algo).default_config());
+    let mut best_fe = fe_default.clone();
+    {
+        let mut bo = SmacBo::new(builder.fe_space(), builder.seed ^ 0xFE);
+        for _ in 0..fe_phase_evals {
+            if env.obj.exhausted() {
+                break;
+            }
+            let sub = bo.suggest(env.rng);
+            let full = fixed_algo.merged(&sub);
+            let y = env.obj.evaluate(&full, 1.0)?;
+            bo.observe(sub, y);
+            track(full, y, &mut history);
+        }
+        if let Some((cfg, _)) = bo.best() {
+            best_fe = cfg.clone();
+        }
+    }
+
+    // ---- phase 3: optimise HPs with algorithm + FE fixed ------------
+    let hp_space: ConfigSpace = builder.hp_space(&algo);
+    if !hp_space.is_empty() {
+        let fixed = Config::new()
+            .with("algorithm", Value::C(algo.clone()))
+            .merged(&best_fe);
+        let mut bo = SmacBo::new(hp_space, builder.seed ^ 0x4B);
+        for _ in 0..hp_phase_evals {
+            if env.obj.exhausted() {
+                break;
+            }
+            let sub = bo.suggest(env.rng);
+            let full = fixed.merged(&sub);
+            let y = env.obj.evaluate(&full, 1.0)?;
+            bo.observe(sub, y);
+            track(full, y, &mut history);
+        }
+    }
+
+    let best = history
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.1.partial_cmp(&b.1)
+            .unwrap_or(std::cmp::Ordering::Equal));
+    Ok(ProgressiveResult { best, chosen_algorithm: Some(algo), history })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::EngineKind;
+    use crate::util::rng::Rng;
+
+    struct Synth {
+        evals: usize,
+        cap: usize,
+    }
+    impl Objective for Synth {
+        fn evaluate(&mut self, cfg: &Config, _f: f64) -> Result<f64> {
+            self.evals += 1;
+            let d = cfg.f64_or("alg.tree:depth", 0.5);
+            let frac = cfg.f64_or("fe:frac", 0.5);
+            Ok(match cfg.str_or("algorithm", "tree") {
+                "tree" => 0.6 - (d - 0.9).powi(2) - (frac - 0.2).powi(2),
+                _ => 0.2,
+            })
+        }
+        fn exhausted(&self) -> bool {
+            self.evals >= self.cap
+        }
+    }
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::new()
+            .cat("algorithm", &["tree", "linear"], "linear")
+            .float("alg.tree:depth", 0.0, 1.0, 0.5)
+            .when("algorithm", &["tree"])
+            .float("fe:frac", 0.0, 1.0, 0.5)
+    }
+
+    #[test]
+    fn progressive_picks_algo_then_improves() {
+        let sp = space();
+        let builder = PlanBuilder::new(&sp, EngineKind::Bo, 7);
+        let mut obj = Synth { evals: 0, cap: 120 };
+        let mut rng = Rng::new(7);
+        let mut env = Env { obj: &mut obj, rng: &mut rng };
+        let res = run_progressive(&builder, &mut env, 40, 40).unwrap();
+        assert_eq!(res.chosen_algorithm.as_deref(), Some("tree"));
+        let (cfg, y) = res.best.unwrap();
+        assert!(y > 0.45, "best={y}");
+        assert_eq!(cfg.str_or("algorithm", ""), "tree");
+        // phase-1 history contains both default-algo probes
+        assert!(res.history.len() >= 2);
+    }
+
+    #[test]
+    fn progressive_respects_budget() {
+        let sp = space();
+        let builder = PlanBuilder::new(&sp, EngineKind::Bo, 8);
+        let mut obj = Synth { evals: 0, cap: 10 };
+        let mut rng = Rng::new(8);
+        let mut env = Env { obj: &mut obj, rng: &mut rng };
+        let res = run_progressive(&builder, &mut env, 40, 40).unwrap();
+        assert!(res.history.len() <= 10);
+    }
+}

@@ -1,0 +1,402 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Interchange is HLO *text* (not serialized HloModuleProto): jax >=
+//! 0.5 emits 64-bit instruction ids which xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! One `PjRtLoadedExecutable` per artifact, compiled lazily on first
+//! use and cached for the lifetime of the runtime — Python never runs
+//! at search time.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Canonical shape constants exported by the AOT manifest. Mirrors
+/// `python/compile/shapes.py`.
+#[derive(Clone, Debug)]
+pub struct Constants {
+    pub n_train: usize,
+    pub n_val: usize,
+    pub d: usize,
+    pub c: usize,
+    pub c_reg: usize,
+    pub t_steps: usize,
+    pub k_max: usize,
+    pub mlp_hidden: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub family: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// A host-side tensor to feed an artifact.
+pub enum Input {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Input {
+    fn shape(&self) -> &[usize] {
+        match self {
+            Input::F32(_, s) | Input::I32(_, s) => s,
+        }
+    }
+}
+
+/// A host-side output tensor (always converted to f32 for callers).
+#[derive(Clone, Debug)]
+pub struct Output {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    constants: Constants,
+    artifacts: HashMap<String, ArtifactInfo>,
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    art_dir: PathBuf,
+    /// Telemetry: (#executions, total execute seconds) per artifact.
+    stats: RefCell<HashMap<String, (u64, f64)>>,
+}
+
+impl Runtime {
+    pub fn new(art_dir: &Path) -> Result<Runtime> {
+        let manifest_path = art_dir.join("manifest.json");
+        let man = Json::parse_file(&manifest_path).with_context(|| {
+            format!("reading {} (run `make artifacts` first)",
+                    manifest_path.display())
+        })?;
+        let consts = man
+            .get("constants")
+            .ok_or_else(|| anyhow!("manifest missing constants"))?;
+        let need = |k: &str| -> Result<usize> {
+            consts
+                .get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest constant {k} missing"))
+        };
+        let constants = Constants {
+            n_train: need("n_train")?,
+            n_val: need("n_val")?,
+            d: need("d")?,
+            c: need("c")?,
+            c_reg: need("c_reg")?,
+            t_steps: need("t_steps")?,
+            k_max: need("k_max")?,
+            mlp_hidden: consts
+                .get("mlp_hidden")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+        };
+        let mut artifacts = HashMap::new();
+        let arts = man
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for (name, entry) in arts {
+            let shapes_of = |key: &str| -> Vec<Vec<usize>> {
+                entry
+                    .get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|items| {
+                        items
+                            .iter()
+                            .map(|it| {
+                                it.get("shape")
+                                    .and_then(|s| s.as_arr())
+                                    .map(|dims| dims.iter()
+                                        .filter_map(|d| d.as_usize())
+                                        .collect())
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let dtypes: Vec<String> = entry
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .map(|items| {
+                    items
+                        .iter()
+                        .map(|it| it.get("dtype").and_then(|d| d.as_str())
+                            .unwrap_or("float32").to_string())
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(name.clone(), ArtifactInfo {
+                file: entry.get("file").and_then(|f| f.as_str())
+                    .unwrap_or("").to_string(),
+                family: entry.get("family").and_then(|f| f.as_str())
+                    .unwrap_or("").to_string(),
+                input_shapes: shapes_of("inputs"),
+                input_dtypes: dtypes,
+                output_shapes: shapes_of("output_shapes"),
+            });
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            constants,
+            artifacts,
+            execs: RefCell::new(HashMap::new()),
+            art_dir: art_dir.to_path_buf(),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Locate the artifacts directory next to the current executable /
+    /// working directory (used by binaries and tests).
+    pub fn default_dir() -> PathBuf {
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn constants(&self) -> &Constants {
+        &self.constants
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.get(name)
+    }
+
+    fn executable(&self, name: &str)
+        -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.art_dir.join(&info.file);
+        let text_path = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(text_path)
+            .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let rc = Rc::new(exe);
+        self.execs.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute an artifact; returns the decomposed output tuple.
+    pub fn execute(&self, name: &str, inputs: &[Input])
+        -> Result<Vec<Output>> {
+        let info = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        if inputs.len() != info.input_shapes.len() {
+            bail!("{name}: expected {} inputs, got {}",
+                  info.input_shapes.len(), inputs.len());
+        }
+        for (i, (inp, want)) in
+            inputs.iter().zip(&info.input_shapes).enumerate() {
+            if inp.shape() != want.as_slice() {
+                bail!("{name}: input {i} shape {:?} != expected {:?}",
+                      inp.shape(), want);
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                let lit = match inp {
+                    Input::F32(data, shape) => {
+                        let dims: Vec<i64> =
+                            shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(data)
+                            .reshape(&dims)
+                            .map_err(|e| anyhow!("reshape: {e:?}"))?
+                    }
+                    Input::I32(data, shape) => {
+                        let dims: Vec<i64> =
+                            shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(data)
+                            .reshape(&dims)
+                            .map_err(|e| anyhow!("reshape: {e:?}"))?
+                    }
+                };
+                Ok(lit)
+            })
+            .collect::<Result<_>>()?;
+
+        let t0 = std::time::Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let buf = &result[0][0];
+        let tuple = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.borrow_mut();
+            let e = st.entry(name.to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += dt;
+        }
+
+        let outputs = tuple
+            .into_iter()
+            .zip(info.output_shapes.iter())
+            .map(|(lit, shape)| -> Result<Output> {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output to_vec: {e:?}"))?;
+                Ok(Output { data, shape: shape.clone() })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(outputs)
+    }
+
+    /// (#executions, total seconds) per artifact, for §Perf telemetry.
+    pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
+        let mut v: Vec<(String, u64, f64)> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, (n, s))| (k.clone(), *n, *s))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(&dir).expect("runtime"))
+    }
+
+    #[test]
+    fn manifest_loads_with_expected_artifacts() {
+        let Some(rt) = runtime() else { return };
+        let names = rt.artifact_names();
+        for want in ["glm_softmax", "glm_hinge", "glm_identity",
+                     "glm_huber", "knn_cls", "knn_reg"] {
+            assert!(names.iter().any(|n| n == want), "{want} missing");
+        }
+        assert_eq!(rt.constants().d, 32);
+        assert!(rt.constants().n_train >= 256);
+    }
+
+    #[test]
+    fn glm_softmax_trains_on_blobs_via_pjrt() {
+        let Some(rt) = runtime() else { return };
+        let c = rt.constants().clone();
+        let mut rng = crate::util::rng::Rng::new(0);
+        // 3-class blobs in the first 2 dims, padded
+        let m = 400.min(c.n_train);
+        let mut x = vec![0.0f32; c.n_train * c.d];
+        let mut y = vec![0.0f32; c.n_train * c.c];
+        let mut labels = vec![0usize; m];
+        let centers = [(0.0, 0.0), (3.0, 0.0), (0.0, 3.0)];
+        for i in 0..m {
+            let cls = rng.below(3);
+            labels[i] = cls;
+            x[i * c.d] = (centers[cls].0 + rng.normal() * 0.5) as f32;
+            x[i * c.d + 1] = (centers[cls].1 + rng.normal() * 0.5) as f32;
+            y[i * c.c + cls] = 1.0;
+        }
+        let mut mask = vec![0.0f32; c.n_train];
+        for v in mask.iter_mut().take(m) {
+            *v = 1.0;
+        }
+        let mut cmask = vec![0.0f32; c.c];
+        cmask[..3].fill(1.0);
+        let xv: Vec<f32> = x[..c.n_val * c.d].to_vec();
+        let sched = vec![1.0f32; c.t_steps];
+        let hypers = vec![0.5f32, 1e-4, 0.0, 1.0];
+
+        let out = rt
+            .execute("glm_softmax", &[
+                Input::F32(x, vec![c.n_train, c.d]),
+                Input::F32(y, vec![c.n_train, c.c]),
+                Input::F32(mask, vec![c.n_train, 1]),
+                Input::F32(cmask, vec![1, c.c]),
+                Input::F32(xv, vec![c.n_val, c.d]),
+                Input::F32(sched, vec![c.t_steps]),
+                Input::F32(hypers, vec![1, 4]),
+            ])
+            .expect("execute");
+        assert_eq!(out.len(), 3);
+        let scores = &out[0];
+        assert_eq!(scores.shape, vec![c.n_val, c.c]);
+        let mut hits = 0;
+        for i in 0..c.n_val.min(m) {
+            let row = &scores.data[i * c.c..i * c.c + 3];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == labels[i] {
+                hits += 1;
+            }
+        }
+        let acc = hits as f64 / c.n_val.min(m) as f64;
+        assert!(acc > 0.9, "pjrt-trained GLM acc = {acc}");
+        // telemetry recorded
+        let stats = rt.exec_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].1, 1);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let Some(rt) = runtime() else { return };
+        let bad = rt.execute("glm_softmax",
+                             &[Input::F32(vec![0.0], vec![1])]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_is_rejected() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,620 @@
+//! Hyper-parameter search-space substrate.
+//!
+//! Mirrors the paper's space structure (§3.1, Appendix A.2): float
+//! (optionally log-scale), integer and categorical parameters, with
+//! *conditional* parameters that are only active when a parent
+//! categorical takes given values. Spaces compose: the end-to-end
+//! AutoML space is built by prefix-merging FE-stage spaces and
+//! per-algorithm spaces, and the building blocks decompose it again by
+//! fixing subsets of variables (`f[x̄_g / c̄_g]` in the paper).
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F(f64),
+    I(i64),
+    C(String),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Value::F(x) => *x,
+            Value::I(i) => *i as f64,
+            Value::C(_) => f64::NAN,
+        }
+    }
+    pub fn as_i64(&self) -> i64 {
+        match self {
+            Value::F(x) => x.round() as i64,
+            Value::I(i) => *i,
+            Value::C(_) => 0,
+        }
+    }
+    pub fn as_str(&self) -> &str {
+        match self {
+            Value::C(s) => s,
+            _ => "",
+        }
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::F(x) => write!(f, "{x:.5}"),
+            Value::I(i) => write!(f, "{i}"),
+            Value::C(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Domain {
+    Float { lo: f64, hi: f64, log: bool },
+    Int { lo: i64, hi: i64, log: bool },
+    Cat(Vec<String>),
+}
+
+impl Domain {
+    /// Number of grid levels a discretising optimizer (TPOT-style)
+    /// would use.
+    pub fn cardinality_hint(&self) -> usize {
+        match self {
+            Domain::Cat(c) => c.len(),
+            Domain::Int { lo, hi, .. } => ((hi - lo + 1) as usize).min(8),
+            Domain::Float { .. } => 8,
+        }
+    }
+}
+
+/// Condition: parameter is active iff `parent` (a categorical) takes a
+/// value in `values`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Condition {
+    pub parent: String,
+    pub values: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub domain: Domain,
+    pub default: Value,
+    pub condition: Option<Condition>,
+}
+
+/// A concrete assignment of (a subset of) parameters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config::default()
+    }
+    pub fn set(&mut self, name: &str, v: Value) {
+        self.values.insert(name.to_string(), v);
+    }
+    pub fn with(mut self, name: &str, v: Value) -> Config {
+        self.set(name, v);
+        self
+    }
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.values.get(name)
+    }
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn i64_or(&self, name: &str, default: i64) -> i64 {
+        self.get(name).map(|v| v.as_i64()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.i64_or(name, default as i64).max(0) as usize
+    }
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        match self.get(name) {
+            Some(Value::C(s)) => s,
+            _ => default,
+        }
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Value)> {
+        self.values.iter()
+    }
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+    /// Overlay: other's values win on conflicts.
+    pub fn merged(&self, other: &Config) -> Config {
+        let mut out = self.clone();
+        for (k, v) in other.iter() {
+            out.values.insert(k.clone(), v.clone());
+        }
+        out
+    }
+    /// Stable identity string (used for caching evaluations).
+    pub fn key(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.values {
+            s.push_str(k);
+            s.push('=');
+            s.push_str(&v.to_string());
+            s.push(';');
+        }
+        s
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ConfigSpace {
+    pub params: Vec<Param>,
+}
+
+impl ConfigSpace {
+    pub fn new() -> ConfigSpace {
+        ConfigSpace::default()
+    }
+
+    // ---- declaration helpers --------------------------------------
+    pub fn float(mut self, name: &str, lo: f64, hi: f64, default: f64)
+        -> Self {
+        self.params.push(Param {
+            name: name.into(),
+            domain: Domain::Float { lo, hi, log: false },
+            default: Value::F(default),
+            condition: None,
+        });
+        self
+    }
+    pub fn log_float(mut self, name: &str, lo: f64, hi: f64, default: f64)
+        -> Self {
+        assert!(lo > 0.0, "log-scale lower bound must be positive");
+        self.params.push(Param {
+            name: name.into(),
+            domain: Domain::Float { lo, hi, log: true },
+            default: Value::F(default),
+            condition: None,
+        });
+        self
+    }
+    pub fn int(mut self, name: &str, lo: i64, hi: i64, default: i64)
+        -> Self {
+        self.params.push(Param {
+            name: name.into(),
+            domain: Domain::Int { lo, hi, log: false },
+            default: Value::I(default),
+            condition: None,
+        });
+        self
+    }
+    pub fn cat(mut self, name: &str, choices: &[&str], default: &str)
+        -> Self {
+        assert!(choices.contains(&default));
+        self.params.push(Param {
+            name: name.into(),
+            domain: Domain::Cat(choices.iter().map(|s| s.to_string())
+                .collect()),
+            default: Value::C(default.into()),
+            condition: None,
+        });
+        self
+    }
+    /// Make the most recently added parameter conditional.
+    pub fn when(mut self, parent: &str, values: &[&str]) -> Self {
+        let p = self.params.last_mut().expect("no parameter to condition");
+        p.condition = Some(Condition {
+            parent: parent.into(),
+            values: values.iter().map(|s| s.to_string()).collect(),
+        });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    pub fn param(&self, name: &str) -> Option<&Param> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Merge another space with every parameter (and condition parent)
+    /// renamed to `prefix:<name>`.
+    pub fn merge_prefixed(mut self, prefix: &str, other: &ConfigSpace)
+        -> Self {
+        for p in &other.params {
+            let mut q = p.clone();
+            q.name = format!("{prefix}:{}", p.name);
+            if let Some(c) = &mut q.condition {
+                c.parent = format!("{prefix}:{}", c.parent);
+            }
+            self.params.push(q);
+        }
+        self
+    }
+
+    /// Subspace containing only the named parameters (conditions on
+    /// missing parents are dropped — they are assumed fixed-active).
+    pub fn subspace(&self, names: &[&str]) -> ConfigSpace {
+        let keep: std::collections::HashSet<&str> =
+            names.iter().copied().collect();
+        let mut out = ConfigSpace::new();
+        for p in &self.params {
+            if keep.contains(p.name.as_str()) {
+                let mut q = p.clone();
+                if let Some(c) = &q.condition {
+                    if !keep.contains(c.parent.as_str()) {
+                        q.condition = None;
+                    }
+                }
+                out.params.push(q);
+            }
+        }
+        out
+    }
+
+    /// Subspace of parameters whose names start with `prefix`.
+    pub fn subspace_prefixed(&self, prefix: &str) -> ConfigSpace {
+        let names: Vec<&str> = self
+            .params
+            .iter()
+            .filter(|p| p.name.starts_with(prefix))
+            .map(|p| p.name.as_str())
+            .collect();
+        self.subspace(&names)
+    }
+
+    /// Is `param` active under `cfg` (transitively through parents)?
+    pub fn is_active(&self, name: &str, cfg: &Config) -> bool {
+        match self.param(name) {
+            None => false,
+            Some(p) => match &p.condition {
+                None => true,
+                Some(c) => {
+                    if !self.is_active(&c.parent, cfg) {
+                        return false;
+                    }
+                    match cfg.get(&c.parent) {
+                        Some(Value::C(v)) => c.values.contains(v),
+                        _ => false,
+                    }
+                }
+            },
+        }
+    }
+
+    fn sample_domain(&self, d: &Domain, rng: &mut Rng) -> Value {
+        match d {
+            Domain::Float { lo, hi, log } => Value::F(if *log {
+                rng.log_uniform(*lo, *hi)
+            } else {
+                rng.uniform(*lo, *hi)
+            }),
+            Domain::Int { lo, hi, log } => Value::I(if *log {
+                rng.log_uniform(*lo as f64, *hi as f64).round() as i64
+            } else {
+                rng.int_range(*lo, *hi)
+            }),
+            Domain::Cat(choices) => Value::C(rng.choice(choices).clone()),
+        }
+    }
+
+    /// Sample a complete configuration (only active params present).
+    /// Parents must be declared before their children.
+    pub fn sample(&self, rng: &mut Rng) -> Config {
+        let mut cfg = Config::new();
+        for p in &self.params {
+            if self.is_active(&p.name, &cfg) {
+                cfg.set(&p.name, self.sample_domain(&p.domain, rng));
+            }
+        }
+        cfg
+    }
+
+    pub fn default_config(&self) -> Config {
+        let mut cfg = Config::new();
+        for p in &self.params {
+            if self.is_active(&p.name, &cfg) {
+                cfg.set(&p.name, p.default.clone());
+            }
+        }
+        cfg
+    }
+
+    /// Mutate one active parameter of `cfg` (local-search neighbour /
+    /// evolutionary mutation). Numeric params move locally; categorical
+    /// params resample. Children are (re)sampled or dropped as activity
+    /// changes.
+    pub fn neighbor(&self, cfg: &Config, rng: &mut Rng) -> Config {
+        let active: Vec<&Param> = self
+            .params
+            .iter()
+            .filter(|p| self.is_active(&p.name, cfg))
+            .collect();
+        if active.is_empty() {
+            return cfg.clone();
+        }
+        let target = active[rng.below(active.len())].name.clone();
+        let mut out = Config::new();
+        for p in &self.params {
+            if !self.is_active(&p.name, &out) {
+                continue;
+            }
+            let v = if p.name == target {
+                self.mutate_value(p, cfg.get(&p.name), rng)
+            } else {
+                match cfg.get(&p.name) {
+                    Some(v) => v.clone(),
+                    None => self.sample_domain(&p.domain, rng),
+                }
+            };
+            out.set(&p.name, v);
+        }
+        out
+    }
+
+    fn mutate_value(&self, p: &Param, cur: Option<&Value>, rng: &mut Rng)
+        -> Value {
+        match (&p.domain, cur) {
+            (Domain::Float { lo, hi, log }, Some(Value::F(x))) => {
+                if *log {
+                    let (l, h) = (lo.ln(), hi.ln());
+                    let z = (x.ln() + rng.normal() * 0.2 * (h - l))
+                        .clamp(l, h);
+                    Value::F(z.exp())
+                } else {
+                    Value::F((x + rng.normal() * 0.2 * (hi - lo))
+                        .clamp(*lo, *hi))
+                }
+            }
+            (Domain::Int { lo, hi, .. }, Some(Value::I(i))) => {
+                let span = ((hi - lo) as f64 * 0.25).max(1.0);
+                let z = (*i as f64 + rng.normal() * span).round() as i64;
+                Value::I(z.clamp(*lo, *hi))
+            }
+            _ => self.sample_domain(&p.domain, rng),
+        }
+    }
+
+    /// Uniform crossover for evolutionary search.
+    pub fn crossover(&self, a: &Config, b: &Config, rng: &mut Rng)
+        -> Config {
+        let mut out = Config::new();
+        for p in &self.params {
+            if !self.is_active(&p.name, &out) {
+                continue;
+            }
+            let pick = if rng.bool(0.5) { a } else { b };
+            let v = pick
+                .get(&p.name)
+                .cloned()
+                .unwrap_or_else(|| self.sample_domain(&p.domain, rng));
+            out.set(&p.name, v);
+        }
+        out
+    }
+
+    /// Encode a config as a fixed-length feature vector in [0,1] for
+    /// surrogate models; inactive parameters encode as -1 (SMAC-style).
+    pub fn to_features(&self, cfg: &Config) -> Vec<f64> {
+        self.params
+            .iter()
+            .map(|p| {
+                if !self.is_active(&p.name, cfg) {
+                    return -1.0;
+                }
+                let v = match cfg.get(&p.name) {
+                    Some(v) => v,
+                    None => return -1.0,
+                };
+                match &p.domain {
+                    Domain::Float { lo, hi, log } => {
+                        let x = v.as_f64();
+                        if *log {
+                            (x.ln() - lo.ln()) / (hi.ln() - lo.ln())
+                        } else {
+                            (x - lo) / (hi - lo)
+                        }
+                    }
+                    Domain::Int { lo, hi, .. } => {
+                        if hi == lo {
+                            0.5
+                        } else {
+                            (v.as_i64() - lo) as f64 / (hi - lo) as f64
+                        }
+                    }
+                    Domain::Cat(choices) => {
+                        let idx = choices
+                            .iter()
+                            .position(|c| c == v.as_str())
+                            .unwrap_or(0);
+                        if choices.len() <= 1 {
+                            0.5
+                        } else {
+                            idx as f64 / (choices.len() - 1) as f64
+                        }
+                    }
+                }
+                .clamp(0.0, 1.0)
+            })
+            .collect()
+    }
+
+    /// Grid levels per parameter for discretising optimizers.
+    pub fn grid_values(&self, p: &Param, levels: usize) -> Vec<Value> {
+        match &p.domain {
+            Domain::Cat(choices) => {
+                choices.iter().map(|c| Value::C(c.clone())).collect()
+            }
+            Domain::Int { lo, hi, .. } => {
+                let span = (hi - lo) as usize + 1;
+                let lv = levels.min(span).max(1);
+                (0..lv)
+                    .map(|i| {
+                        Value::I(lo + ((hi - lo) as f64 * i as f64
+                            / (lv.max(2) - 1) as f64).round() as i64)
+                    })
+                    .collect()
+            }
+            Domain::Float { lo, hi, log } => (0..levels.max(2))
+                .map(|i| {
+                    let t = i as f64 / (levels.max(2) - 1) as f64;
+                    Value::F(if *log {
+                        (lo.ln() + t * (hi.ln() - lo.ln())).exp()
+                    } else {
+                        lo + t * (hi - lo)
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_space() -> ConfigSpace {
+        ConfigSpace::new()
+            .cat("kernel", &["linear", "rbf", "poly"], "rbf")
+            .log_float("gamma", 1e-4, 10.0, 0.1)
+            .when("kernel", &["rbf", "poly"])
+            .int("degree", 2, 5, 3)
+            .when("kernel", &["poly"])
+            .float("c", 0.1, 10.0, 1.0)
+    }
+
+    #[test]
+    fn conditionals_gate_sampling() {
+        let s = demo_space();
+        let mut rng = Rng::new(0);
+        let mut saw_inactive_gamma = false;
+        for _ in 0..100 {
+            let cfg = s.sample(&mut rng);
+            match cfg.str_or("kernel", "") {
+                "linear" => {
+                    assert!(cfg.get("gamma").is_none());
+                    assert!(cfg.get("degree").is_none());
+                    saw_inactive_gamma = true;
+                }
+                "rbf" => {
+                    assert!(cfg.get("gamma").is_some());
+                    assert!(cfg.get("degree").is_none());
+                }
+                "poly" => {
+                    assert!(cfg.get("gamma").is_some());
+                    assert!(cfg.get("degree").is_some());
+                }
+                other => panic!("unexpected kernel {other}"),
+            }
+            assert!(cfg.get("c").is_some());
+        }
+        assert!(saw_inactive_gamma);
+    }
+
+    #[test]
+    fn samples_respect_bounds_and_log_scale() {
+        let s = demo_space();
+        let mut rng = Rng::new(1);
+        let mut low_gamma = 0;
+        for _ in 0..500 {
+            let cfg = s.sample(&mut rng);
+            if let Some(g) = cfg.get("gamma") {
+                let g = g.as_f64();
+                assert!((1e-4..=10.0).contains(&g));
+                if g < 0.03 {
+                    low_gamma += 1; // log scale => many small draws
+                }
+            }
+            let c = cfg.f64_or("c", -1.0);
+            assert!((0.1..=10.0).contains(&c));
+        }
+        assert!(low_gamma > 50, "log sampling looks linear: {low_gamma}");
+    }
+
+    #[test]
+    fn default_config_is_complete_and_active_only() {
+        let s = demo_space();
+        let d = s.default_config();
+        assert_eq!(d.str_or("kernel", ""), "rbf");
+        assert!(d.get("gamma").is_some());
+        assert!(d.get("degree").is_none()); // rbf doesn't use degree
+    }
+
+    #[test]
+    fn features_encode_inactive_as_minus_one() {
+        let s = demo_space();
+        let cfg = Config::new()
+            .with("kernel", Value::C("linear".into()))
+            .with("c", Value::F(0.1));
+        let f = s.to_features(&cfg);
+        assert_eq!(f.len(), 4);
+        assert_eq!(f[1], -1.0); // gamma inactive
+        assert_eq!(f[2], -1.0); // degree inactive
+        assert!((f[3] - 0.0).abs() < 1e-9); // c at lower bound
+    }
+
+    #[test]
+    fn neighbor_changes_but_stays_valid() {
+        let s = demo_space();
+        let mut rng = Rng::new(2);
+        let cfg = s.default_config();
+        let mut changed = 0;
+        for _ in 0..50 {
+            let nb = s.neighbor(&cfg, &mut rng);
+            if nb != cfg {
+                changed += 1;
+            }
+            // validity: active params present, inactive absent
+            for p in &s.params {
+                assert_eq!(s.is_active(&p.name, &nb),
+                           nb.get(&p.name).is_some(), "{}", p.name);
+            }
+        }
+        assert!(changed > 30);
+    }
+
+    #[test]
+    fn merge_prefixed_rewrites_conditions() {
+        let joint = ConfigSpace::new()
+            .cat("algo", &["svm"], "svm")
+            .merge_prefixed("fe", &demo_space());
+        assert!(joint.param("fe:gamma").is_some());
+        let cond = joint.param("fe:gamma").unwrap().condition.clone()
+            .unwrap();
+        assert_eq!(cond.parent, "fe:kernel");
+        let sub = joint.subspace_prefixed("fe:");
+        assert_eq!(sub.len(), 4);
+    }
+
+    #[test]
+    fn config_merge_and_key_stable() {
+        let a = Config::new().with("x", Value::F(1.0));
+        let b = Config::new().with("y", Value::I(2));
+        let m = a.merged(&b);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.key(), m.clone().key());
+        assert_ne!(a.key(), m.key());
+    }
+
+    #[test]
+    fn grid_values_cover_domain() {
+        let s = demo_space();
+        let p = s.param("c").unwrap();
+        let g = s.grid_values(p, 5);
+        assert_eq!(g.len(), 5);
+        assert!((g[0].as_f64() - 0.1).abs() < 1e-9);
+        assert!((g[4].as_f64() - 10.0).abs() < 1e-9);
+        let k = s.param("kernel").unwrap();
+        assert_eq!(s.grid_values(k, 5).len(), 3);
+    }
+}

@@ -1,0 +1,170 @@
+//! Gaussian-process surrogate (Matérn-5/2), the base learner of the
+//! RGPE meta-surrogate (§5.2). Lengthscale via the median heuristic,
+//! signal variance from data, Cholesky solves from util::linalg.
+
+use crate::util::linalg::{cholesky, solve_lower, solve_upper_t, Mat};
+
+use super::Surrogate;
+
+#[derive(Clone, Debug)]
+pub struct Gp {
+    pub noise: f64,
+    lengthscale: f64,
+    signal_var: f64,
+    y_mean: f64,
+    x_train: Vec<Vec<f64>>,
+    /// Cholesky factor of K + noise I and alpha = K^-1 (y - mean).
+    chol: Option<Mat>,
+    alpha: Vec<f64>,
+}
+
+impl Gp {
+    pub fn new() -> Gp {
+        Gp {
+            noise: 1e-6,
+            lengthscale: 1.0,
+            signal_var: 1.0,
+            y_mean: 0.0,
+            x_train: Vec::new(),
+            chol: None,
+            alpha: Vec::new(),
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.x_train.len()
+    }
+
+    fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    fn matern52(&self, a: &[f64], b: &[f64]) -> f64 {
+        let r = Self::sq_dist(a, b).sqrt() / self.lengthscale.max(1e-12);
+        let s5 = 5.0f64.sqrt();
+        self.signal_var * (1.0 + s5 * r + 5.0 * r * r / 3.0)
+            * (-s5 * r).exp()
+    }
+}
+
+impl Default for Gp {
+    fn default() -> Self {
+        Gp::new()
+    }
+}
+
+impl Surrogate for Gp {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        self.x_train = x.to_vec();
+        self.chol = None;
+        self.alpha.clear();
+        let n = x.len();
+        if n == 0 {
+            return;
+        }
+        self.y_mean = crate::util::stats::mean(y);
+        self.signal_var = crate::util::stats::variance(y).max(1e-6);
+        // median pairwise distance heuristic (subsampled)
+        let mut dists = Vec::new();
+        let step = (n / 32).max(1);
+        for i in (0..n).step_by(step) {
+            for j in (i + 1..n).step_by(step) {
+                let d = Self::sq_dist(&x[i], &x[j]).sqrt();
+                if d > 0.0 {
+                    dists.push(d);
+                }
+            }
+        }
+        self.lengthscale = if dists.is_empty() {
+            1.0
+        } else {
+            crate::util::stats::median(&dists).max(1e-3)
+        };
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = self.matern52(&x[i], &x[j]);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+            k[(i, i)] += self.noise * self.signal_var + 1e-10;
+        }
+        if let Some(l) = cholesky(&k) {
+            let resid: Vec<f64> =
+                y.iter().map(|&v| v - self.y_mean).collect();
+            let tmp = solve_lower(&l, &resid);
+            self.alpha = solve_upper_t(&l, &tmp);
+            self.chol = Some(l);
+        }
+    }
+
+    fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let n = self.x_train.len();
+        let (Some(l), false) = (&self.chol, n == 0) else {
+            return (self.y_mean, self.signal_var.max(1.0));
+        };
+        let kstar: Vec<f64> = self
+            .x_train
+            .iter()
+            .map(|xi| self.matern52(xi, x))
+            .collect();
+        let mean = self.y_mean
+            + crate::util::linalg::dot(&kstar, &self.alpha);
+        let v = solve_lower(l, &kstar);
+        let var = (self.matern52(x, x)
+            - crate::util::linalg::dot(&v, &v))
+            .max(1e-10);
+        (mean, var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolates_training_points() {
+        let xs: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![i as f64 / 19.0])
+            .collect();
+        let ys: Vec<f64> = xs.iter()
+            .map(|v| (3.0 * v[0]).sin()).collect();
+        let mut gp = Gp::new();
+        gp.fit(&xs, &ys);
+        for (x, &y) in xs.iter().zip(&ys) {
+            let (m, v) = gp.predict(x);
+            assert!((m - y).abs() < 0.05, "{m} vs {y}");
+            assert!(v < 0.05, "var {v} at train point");
+        }
+    }
+
+    #[test]
+    fn uncertainty_grows_away_from_data() {
+        let xs = vec![vec![0.0], vec![0.1], vec![0.2]];
+        let ys = vec![0.0, 0.1, 0.2];
+        let mut gp = Gp::new();
+        gp.fit(&xs, &ys);
+        let (_, v_near) = gp.predict(&[0.1]);
+        let (_, v_far) = gp.predict(&[3.0]);
+        assert!(v_far > 10.0 * v_near, "{v_far} !>> {v_near}");
+    }
+
+    #[test]
+    fn empty_fit_returns_prior() {
+        let gp = Gp::new();
+        let (m, v) = gp.predict(&[0.5]);
+        assert_eq!(m, 0.0);
+        assert!(v > 0.0);
+    }
+
+    #[test]
+    fn duplicate_points_do_not_break_cholesky() {
+        let xs = vec![vec![0.5], vec![0.5], vec![0.5], vec![0.6]];
+        let ys = vec![1.0, 1.0, 1.01, 2.0];
+        let mut gp = Gp::new();
+        gp.fit(&xs, &ys);
+        let (m, _) = gp.predict(&[0.5]);
+        assert!((m - 1.0).abs() < 0.3, "m={m}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Surrogate models for Bayesian optimization.
+//!
+//! * [`rf::ProbForest`] — the probabilistic random forest used by SMAC
+//!   / auto-sklearn (§3.3.1): mean + variance across trees.
+//! * [`gp::Gp`] — Matérn-5/2 Gaussian process, the base learner of the
+//!   RGPE meta-surrogate (§5.2).
+//! * [`expected_improvement`] — the EI acquisition (maximisation form).
+
+pub mod gp;
+pub mod rf;
+
+/// Standard normal pdf/cdf.
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Abramowitz-Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736
+                + t * (1.421413741
+                    + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Expected improvement of a *maximised* objective at a point with
+/// predictive (mean, var), over the current best `y_best`.
+pub fn expected_improvement(mean: f64, var: f64, y_best: f64) -> f64 {
+    let sigma = var.max(1e-12).sqrt();
+    let z = (mean - y_best) / sigma;
+    (mean - y_best) * norm_cdf(z) + sigma * norm_pdf(z)
+}
+
+/// Predictive distribution interface shared by all surrogates.
+pub trait Surrogate {
+    /// Fit on feature-encoded configurations and utilities.
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]);
+    /// (mean, variance) at a point.
+    fn predict(&self, x: &[f64]) -> (f64, f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427007).abs() < 1e-5);
+        assert!((erf(3.0) - 0.9999779).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ei_is_zero_far_below_best_and_grows_with_mean() {
+        let low = expected_improvement(-10.0, 0.01, 0.0);
+        let at = expected_improvement(0.0, 0.01, 0.0);
+        let hi = expected_improvement(1.0, 0.01, 0.0);
+        assert!(low < 1e-10);
+        assert!(at > low && hi > at);
+    }
+
+    #[test]
+    fn ei_grows_with_uncertainty() {
+        let tight = expected_improvement(-0.5, 0.01, 0.0);
+        let loose = expected_improvement(-0.5, 4.0, 0.0);
+        assert!(loose > tight);
+    }
+}

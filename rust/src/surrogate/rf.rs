@@ -1,0 +1,151 @@
+//! Probabilistic random forest surrogate (SMAC-style, §3.3.1):
+//! a bagged regression forest over feature-encoded configurations;
+//! the predictive distribution is the mean/variance across trees.
+
+use crate::algos::tree::{Criterion, Tree, TreeParams};
+use crate::util::rng::Rng;
+
+use super::Surrogate;
+
+pub struct ProbForest {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_leaf: usize,
+    trees: Vec<Tree>,
+    rng: Rng,
+    /// Global variance floor keeps EI exploring when trees agree.
+    var_floor: f64,
+}
+
+impl ProbForest {
+    pub fn new(seed: u64) -> ProbForest {
+        ProbForest {
+            n_trees: 24,
+            max_depth: 12,
+            min_leaf: 2,
+            trees: Vec::new(),
+            rng: Rng::new(seed),
+            var_floor: 1e-8,
+        }
+    }
+
+    pub fn is_fitted(&self) -> bool {
+        !self.trees.is_empty()
+    }
+}
+
+impl Surrogate for ProbForest {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        self.trees.clear();
+        if x.is_empty() {
+            return;
+        }
+        let d = x[0].len().max(1);
+        let flat: Vec<f32> = x
+            .iter()
+            .flat_map(|row| row.iter().map(|&v| v as f32))
+            .collect();
+        let n = x.len();
+        let p = TreeParams {
+            max_depth: self.max_depth,
+            min_samples_split: 2 * self.min_leaf,
+            min_samples_leaf: self.min_leaf,
+            max_features: 0.8,
+            criterion: Criterion::Mse,
+            random_thresholds: false,
+            n_classes: 0,
+        };
+        let yv = crate::util::stats::variance(y);
+        self.var_floor = (yv * 1e-4).max(1e-10);
+        for t in 0..self.n_trees {
+            let mut trng = self.rng.fork(t as u64);
+            let rows: Vec<usize> =
+                (0..n).map(|_| trng.below(n)).collect();
+            self.trees.push(Tree::fit(&flat, d, y, &rows, &p, &mut trng));
+        }
+    }
+
+    fn predict(&self, x: &[f64]) -> (f64, f64) {
+        if self.trees.is_empty() {
+            return (0.0, 1.0);
+        }
+        let row: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let preds: Vec<f64> = self
+            .trees
+            .iter()
+            .map(|t| t.predict_row(&row)[0])
+            .collect();
+        let mean = crate::util::stats::mean(&preds);
+        let var = crate::util::stats::variance(&preds)
+            .max(self.var_floor);
+        (mean, var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_1d(n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|i| vec![i as f64 / (n - 1) as f64])
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|v| (v[0] * std::f64::consts::TAU).sin())
+            .collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn interpolates_smooth_function() {
+        let (xs, ys) = grid_1d(60);
+        let mut f = ProbForest::new(0);
+        f.fit(&xs, &ys);
+        let (m, _) = f.predict(&[0.25]);
+        assert!((m - 1.0).abs() < 0.25, "pred at peak = {m}");
+        let (m2, _) = f.predict(&[0.75]);
+        assert!((m2 + 1.0).abs() < 0.25, "pred at trough = {m2}");
+    }
+
+    #[test]
+    fn variance_smaller_near_training_data() {
+        // dense cluster at x~0.1, single point at 0.9: predictions far
+        // from data should disagree more across bootstrap trees
+        let mut xs: Vec<Vec<f64>> = (0..30)
+            .map(|i| vec![0.1 + 0.001 * i as f64])
+            .collect();
+        xs.push(vec![0.9]);
+        let ys: Vec<f64> = xs.iter()
+            .map(|v| if v[0] < 0.5 { 0.0 } else { 5.0 }).collect();
+        let mut f = ProbForest::new(1);
+        f.fit(&xs, &ys);
+        let (_, v_near) = f.predict(&[0.1]);
+        let (_, v_far) = f.predict(&[0.55]);
+        assert!(v_far >= v_near, "v_far={v_far} v_near={v_near}");
+    }
+
+    #[test]
+    fn unfitted_predicts_prior() {
+        let f = ProbForest::new(2);
+        let (m, v) = f.predict(&[0.3]);
+        assert_eq!((m, v), (0.0, 1.0));
+    }
+
+    #[test]
+    fn handles_inactive_encoding() {
+        // -1 encodes inactive params; forest must split on it fine
+        let xs = vec![
+            vec![-1.0, 0.2], vec![-1.0, 0.8],
+            vec![0.5, -1.0], vec![0.9, -1.0],
+        ];
+        let ys = vec![1.0, 1.2, 3.0, 3.2];
+        let mut f = ProbForest::new(3);
+        f.fit(&xs, &ys);
+        let (m, _) = f.predict(&[-1.0, 0.5]);
+        assert!(m < 2.0, "m={m}");
+        let (m2, _) = f.predict(&[0.7, -1.0]);
+        assert!(m2 > 2.0, "m2={m2}");
+    }
+}

@@ -1,0 +1,398 @@
+//! Dense linear-algebra substrate (row-major f64 matrices).
+//!
+//! No external linalg crates are available offline; this module owns
+//! everything the system needs: matmul, Cholesky factor/solve (GP
+//! surrogates), symmetric power iteration with deflation (PCA / SVD /
+//! agglomeration FE operators), and small helpers.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// self (r x k) * other (k x c) -> (r x c); ikj loop order for cache
+    /// friendliness on row-major data.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (r, k, c) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(r, c);
+        for i in 0..r {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * c..(i + 1) * c];
+            for (kk, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * c..(kk + 1) * c];
+                for j in 0..c {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| dot(self.row(i), v))
+            .collect()
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Column means.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut m = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                m[j] += x;
+            }
+        }
+        let n = self.rows.max(1) as f64;
+        for x in &mut m {
+            *x /= n;
+        }
+        m
+    }
+
+    /// Covariance matrix of rows (features as columns), biased (1/n).
+    pub fn covariance(&self) -> Mat {
+        let means = self.col_means();
+        let d = self.cols;
+        let mut cov = Mat::zeros(d, d);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for a in 0..d {
+                let da = r[a] - means[a];
+                if da == 0.0 {
+                    continue;
+                }
+                let crow = &mut cov.data[a * d..(a + 1) * d];
+                for b in 0..d {
+                    crow[b] += da * (r[b] - means[b]);
+                }
+            }
+        }
+        cov.scale(1.0 / self.rows.max(1) as f64);
+        cov
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Cholesky factorisation A = L L^T of a symmetric positive-definite
+/// matrix. Adds escalating jitter to the diagonal on failure (standard
+/// GP practice). Returns the lower-triangular factor.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut jitter = 0.0;
+    let scale = (0..n).map(|i| a[(i, i)].abs()).fold(0.0, f64::max).max(1e-12);
+    for _attempt in 0..6 {
+        let mut l = Mat::zeros(n, n);
+        let mut ok = true;
+        'outer: for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                if i == j {
+                    s += jitter;
+                }
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        ok = false;
+                        break 'outer;
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        if ok {
+            return Some(l);
+        }
+        jitter = if jitter == 0.0 { scale * 1e-10 } else { jitter * 100.0 };
+    }
+    None
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    y
+}
+
+/// Solve L^T x = y (backward substitution).
+pub fn solve_upper_t(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve A x = b for SPD A via Cholesky.
+pub fn cho_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    Some(solve_upper_t(&l, &solve_lower(&l, b)))
+}
+
+/// Top-k eigenpairs of a symmetric matrix by power iteration with
+/// Hotelling deflation. Good enough for PCA/agglomeration FE operators
+/// (k small, accuracy needs modest).
+pub fn top_eigs(a: &Mat, k: usize, rng: &mut crate::util::rng::Rng)
+    -> Vec<(f64, Vec<f64>)> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let k = k.min(n);
+    let mut deflated = a.clone();
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let nv = norm2(&v).max(1e-300);
+        for x in &mut v {
+            *x /= nv;
+        }
+        let mut lambda = 0.0;
+        for _it in 0..200 {
+            let mut w = deflated.matvec(&v);
+            let nw = norm2(&w);
+            if nw < 1e-14 {
+                break;
+            }
+            for x in &mut w {
+                *x /= nw;
+            }
+            let new_lambda = dot(&w, &deflated.matvec(&w));
+            let delta = (new_lambda - lambda).abs();
+            v = w;
+            lambda = new_lambda;
+            if delta < 1e-10 * lambda.abs().max(1.0) {
+                break;
+            }
+        }
+        // deflate: A <- A - lambda v v^T
+        for i in 0..n {
+            for j in 0..n {
+                deflated[(i, j)] -= lambda * v[i] * v[j];
+            }
+        }
+        out.push((lambda, v));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.t().t(), a);
+        assert_eq!(a.t()[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = B B^T + n I is SPD
+        let mut rng = Rng::new(0);
+        let n = 8;
+        let mut b = Mat::zeros(n, n);
+        for x in &mut b.data {
+            *x = rng.normal();
+        }
+        let mut a = b.matmul(&b.t());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.t());
+        for i in 0..n {
+            for j in 0..n {
+                assert_close(rec[(i, j)], a[(i, j)], 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn cho_solve_solves() {
+        let a = Mat::from_rows(&[
+            vec![4.0, 1.0, 0.0],
+            vec![1.0, 3.0, 1.0],
+            vec![0.0, 1.0, 2.0],
+        ]);
+        let x_true = vec![1.0, -2.0, 3.0];
+        let b = a.matvec(&x_true);
+        let x = cho_solve(&a, &b).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert_close(*xi, *ti, 1e-9);
+        }
+    }
+
+    #[test]
+    fn cholesky_jitters_near_singular() {
+        // rank-1 matrix: needs jitter, must not return None
+        let v = [1.0, 2.0, 3.0];
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                a[(i, j)] = v[i] * v[j];
+            }
+        }
+        assert!(cholesky(&a).is_some());
+    }
+
+    #[test]
+    fn power_iteration_finds_dominant_eig() {
+        // diag(5, 2, 1) rotated is still spectrum {5,2,1}
+        let a = Mat::from_rows(&[
+            vec![5.0, 0.0, 0.0],
+            vec![0.0, 2.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ]);
+        let mut rng = Rng::new(1);
+        let eigs = top_eigs(&a, 2, &mut rng);
+        assert_close(eigs[0].0, 5.0, 1e-6);
+        assert_close(eigs[1].0, 2.0, 1e-6);
+        assert_close(eigs[0].1[0].abs(), 1.0, 1e-5);
+    }
+
+    #[test]
+    fn covariance_of_correlated_data() {
+        let mut rng = Rng::new(2);
+        let n = 4000;
+        let mut m = Mat::zeros(n, 2);
+        for i in 0..n {
+            let x = rng.normal();
+            m[(i, 0)] = x;
+            m[(i, 1)] = 0.5 * x + 0.1 * rng.normal();
+        }
+        let c = m.covariance();
+        assert_close(c[(0, 0)], 1.0, 0.08);
+        assert_close(c[(0, 1)], 0.5, 0.08);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_rejects_bad_shapes() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

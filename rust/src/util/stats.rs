@@ -1,0 +1,222 @@
+//! Statistics substrate: the metrics and rank aggregation used by the
+//! paper's evaluation protocol (average ranks with tie handling,
+//! mAP@k for the RankNet comparison, basic moments/quantiles).
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Indices that would sort xs ascending (stable).
+pub fn argsort(xs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b])
+        .unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Quantile with linear interpolation, q in [0,1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Competition ranks with ties averaged (1-based), lower value = rank 1.
+/// This is the paper's "average rank" building block: systems that tie
+/// (within eps) share the mean of the ranks they occupy.
+pub fn ranks_with_ties(xs: &[f64], eps: f64) -> Vec<f64> {
+    let n = xs.len();
+    let idx = argsort(xs);
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && (xs[idx[j + 1]] - xs[idx[i]]).abs() <= eps {
+            j += 1;
+        }
+        let avg = (i + 1 + j + 1) as f64 / 2.0;
+        for k in i..=j {
+            ranks[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Average rank of each system across datasets.
+/// `scores[d][s]` = utility of system s on dataset d; `higher_better`
+/// flips the ordering. `eps` is the tie tolerance (the paper adjusts
+/// rankings with statistical testing; we use a tolerance band).
+pub fn average_ranks(scores: &[Vec<f64>], higher_better: bool, eps: f64)
+    -> Vec<f64> {
+    assert!(!scores.is_empty());
+    let s = scores[0].len();
+    let mut acc = vec![0.0; s];
+    for row in scores {
+        assert_eq!(row.len(), s);
+        let keyed: Vec<f64> = row
+            .iter()
+            .map(|&x| if higher_better { -x } else { x })
+            .collect();
+        for (i, r) in ranks_with_ties(&keyed, eps).into_iter().enumerate() {
+            acc[i] += r;
+        }
+    }
+    for a in &mut acc {
+        *a /= scores.len() as f64;
+    }
+    acc
+}
+
+/// Mean Average Precision at k: `predicted[i]` is the ranked list of
+/// item ids for query i, `relevant[i]` the set of relevant ids.
+pub fn map_at_k(predicted: &[Vec<usize>], relevant: &[Vec<usize>], k: usize)
+    -> f64 {
+    assert_eq!(predicted.len(), relevant.len());
+    if predicted.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for (pred, rel) in predicted.iter().zip(relevant) {
+        let rel_set: std::collections::HashSet<_> = rel.iter().collect();
+        if rel_set.is_empty() {
+            continue;
+        }
+        let mut hits = 0.0;
+        let mut ap = 0.0;
+        for (i, p) in pred.iter().take(k).enumerate() {
+            if rel_set.contains(p) {
+                hits += 1.0;
+                ap += hits / (i + 1) as f64;
+            }
+        }
+        total += ap / (rel_set.len().min(k)) as f64;
+    }
+    total / predicted.len() as f64
+}
+
+/// Welch's t statistic for difference of means (used for tie detection
+/// in rank tables when repetitions are available).
+pub fn welch_t(a: &[f64], b: &[f64]) -> f64 {
+    let (ma, mb) = (mean(a), mean(b));
+    let (va, vb) = (variance(a), variance(b));
+    let denom = (va / a.len().max(1) as f64 + vb / b.len().max(1) as f64)
+        .sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (ma - mb) / denom
+    }
+}
+
+/// Exponential moving average helper for EUI tracking.
+#[derive(Clone, Debug, Default)]
+pub struct RunningMean {
+    pub n: usize,
+    pub mean: f64,
+}
+
+impl RunningMean {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.mean += (x - self.mean) / self.n as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138_089_935).abs() < 1e-6);
+        assert!((median(&xs) - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranks_average_ties() {
+        let r = ranks_with_ties(&[1.0, 2.0, 2.0, 3.0], 1e-9);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+        let r2 = ranks_with_ties(&[5.0, 1.0, 5.0], 1e-9);
+        assert_eq!(r2, vec![2.5, 1.0, 2.5]);
+    }
+
+    #[test]
+    fn average_ranks_matches_paper_convention() {
+        // two datasets, three systems, higher utility better
+        let scores = vec![
+            vec![0.9, 0.8, 0.7],  // ranks 1, 2, 3
+            vec![0.5, 0.9, 0.5],  // ranks 2.5, 1, 2.5
+        ];
+        let ar = average_ranks(&scores, true, 1e-9);
+        assert_eq!(ar, vec![1.75, 1.5, 2.75]);
+    }
+
+    #[test]
+    fn map_at_k_perfect_and_empty() {
+        let pred = vec![vec![0, 1, 2, 3, 4]];
+        let rel = vec![vec![0, 1, 2, 3, 4]];
+        assert!((map_at_k(&pred, &rel, 5) - 1.0).abs() < 1e-12);
+        let pred2 = vec![vec![9, 8, 0]];
+        let rel2 = vec![vec![0]];
+        // hit at position 3: AP = (1/3)/1
+        assert!((map_at_k(&pred2, &rel2, 5) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_mean_incremental() {
+        let mut rm = RunningMean::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            rm.push(x);
+        }
+        assert!((rm.mean - 2.5).abs() < 1e-12);
+        assert_eq!(rm.n, 4);
+    }
+
+    #[test]
+    fn welch_t_signs() {
+        let a = [5.0, 5.1, 4.9, 5.0];
+        let b = [1.0, 1.1, 0.9, 1.0];
+        assert!(welch_t(&a, &b) > 10.0);
+        assert!(welch_t(&b, &a) < -10.0);
+    }
+}

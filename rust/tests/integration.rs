@@ -1,0 +1,214 @@
+//! Integration tests: the full three-layer stack (Rust coordinator ->
+//! PJRT executables -> Pallas-lowered HLO) plus cross-module system
+//! behaviour. PJRT tests skip gracefully when artifacts are missing.
+
+use volcanoml::baselines::{run_system, BaseSpec, SystemKind};
+use volcanoml::coordinator::automl::{VolcanoConfig, VolcanoML};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::metrics::Metric;
+use volcanoml::data::registry;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::Task;
+use volcanoml::meta::MetaCorpus;
+use volcanoml::plan::PlanKind;
+use volcanoml::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping PJRT portions: artifacts not built");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn blob_ds(seed: u64, n: usize) -> volcanoml::data::Dataset {
+    generate(&Profile {
+        name: format!("it-{seed}"),
+        task: Task::Classification { n_classes: 3 },
+        gen: GenKind::Blobs { sep: 1.8 },
+        n,
+        d: 8,
+        noise: 0.05,
+        imbalance: 1.5,
+        redundant: 2,
+        wild_scales: true,
+        seed,
+    })
+}
+
+#[test]
+fn full_stack_search_with_pjrt_arms() {
+    let Some(rt) = runtime() else { return };
+    let ds = blob_ds(1, 300);
+    let cfg = VolcanoConfig {
+        scale: SpaceScale::Large,
+        max_evals: 40,
+        seed: 9,
+        ..Default::default()
+    };
+    let out = VolcanoML::new(cfg).run(&ds, Some(&rt)).unwrap();
+    assert!(out.test_utility > 0.7, "test={}", out.test_utility);
+    // the PJRT arms actually executed on the hot path
+    let execs: u64 = rt.exec_stats().iter().map(|(_, n, _)| n).sum();
+    assert!(execs > 0, "no PJRT executions recorded");
+    // and PJRT algorithms were among the evaluated arms
+    assert!(out.record.arm_scores.keys().any(|k| {
+        matches!(k.as_str(), "logistic_regression" | "linear_svc"
+                 | "mlp" | "knn")
+    }), "arm scores: {:?}", out.record.arm_scores.keys());
+}
+
+#[test]
+fn registry_dataset_end_to_end_quake() {
+    let rt = runtime();
+    let mut p = registry::by_name("quake").unwrap();
+    p.n = 400;
+    let ds = generate(&p);
+    let spec = BaseSpec {
+        scale: SpaceScale::Medium,
+        metric: Metric::BalancedAccuracy,
+        max_evals: 20,
+        budget_secs: f64::INFINITY,
+        seed: 3,
+    };
+    let out = run_system(SystemKind::VolcanoMLMinus, &ds, &spec, None,
+                         rt.as_ref()).unwrap();
+    // quake is noisy (25% label noise): anything over 0.55 is signal
+    assert!(out.test_utility > 0.5, "{}", out.test_utility);
+}
+
+#[test]
+fn determinism_same_seed_same_outcome() {
+    let ds = blob_ds(2, 260);
+    let mk = || VolcanoConfig {
+        scale: SpaceScale::Medium,
+        max_evals: 15,
+        seed: 77,
+        ..Default::default()
+    };
+    let a = VolcanoML::new(mk()).run(&ds, None).unwrap();
+    let b = VolcanoML::new(mk()).run(&ds, None).unwrap();
+    assert_eq!(a.best_valid_utility, b.best_valid_utility);
+    assert_eq!(a.best_config, b.best_config);
+    assert_eq!(a.n_evals, b.n_evals);
+}
+
+#[test]
+fn budget_is_respected_across_plans() {
+    let ds = blob_ds(3, 240);
+    for plan in PlanKind::all() {
+        let cfg = VolcanoConfig {
+            plan,
+            scale: SpaceScale::Medium,
+            max_evals: 12,
+            seed: 5,
+            ..Default::default()
+        };
+        let out = VolcanoML::new(cfg).run(&ds, None).unwrap();
+        // one do_next may add a handful of evals before the check
+        assert!(out.n_evals <= 12 + 1,
+                "{}: {} evals", plan.name(), out.n_evals);
+    }
+}
+
+#[test]
+fn wallclock_budget_terminates() {
+    let ds = blob_ds(4, 400);
+    let cfg = VolcanoConfig {
+        scale: SpaceScale::Large,
+        max_evals: usize::MAX,
+        budget_secs: 3.0,
+        seed: 6,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = VolcanoML::new(cfg).run(&ds, None).unwrap();
+    let elapsed = t0.elapsed().as_secs_f64();
+    assert!(out.n_evals > 0);
+    // generous slack: one in-flight evaluation may overshoot
+    assert!(elapsed < 30.0, "took {elapsed}s");
+}
+
+#[test]
+fn meta_corpus_roundtrip_through_disk() {
+    let ds = blob_ds(5, 240);
+    let cfg = VolcanoConfig {
+        scale: SpaceScale::Medium,
+        max_evals: 15,
+        seed: 8,
+        ..Default::default()
+    };
+    let out = VolcanoML::new(cfg).run(&ds, None).unwrap();
+    let mut corpus = MetaCorpus::default();
+    corpus.push(out.record);
+    let path = std::env::temp_dir().join("volcano_it_corpus.json");
+    corpus.save(&path).unwrap();
+    let loaded = MetaCorpus::load(&path).unwrap();
+    assert_eq!(loaded.len(), 1);
+    assert!(!loaded.records[0].arm_scores.is_empty());
+    assert!(!loaded.records[0].leaf_histories.is_empty());
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn enriched_smote_space_is_searchable() {
+    let mut p = registry::by_name("pc2").unwrap();
+    p.n = 400;
+    let ds = generate(&p);
+    let cfg = VolcanoConfig {
+        scale: SpaceScale::Large,
+        enriched_smote: true,
+        max_evals: 20,
+        seed: 4,
+        ..Default::default()
+    };
+    let out = VolcanoML::new(cfg).run(&ds, None).unwrap();
+    assert!(out.best_config.is_some());
+    assert!(out.n_failures <= out.n_evals / 2,
+            "{} failures", out.n_failures);
+}
+
+#[test]
+fn embedding_stage_beats_raw_on_texture() {
+    let mut p = registry::dogs_vs_cats();
+    p.n = 400;
+    let ds = generate(&p);
+    let run = |with_embedding: bool| {
+        let cfg = VolcanoConfig {
+            scale: SpaceScale::Large,
+            with_embedding,
+            max_evals: 18,
+            seed: 12,
+            ..Default::default()
+        };
+        VolcanoML::new(cfg).run(&ds, None).unwrap().test_utility
+    };
+    let raw = run(false);
+    let emb = run(true);
+    // the paper's gap (96.5 vs 70.4) relies on real images; our
+    // texture analogue still separates, with a smaller margin
+    assert!(emb > 0.8, "embedding path failed: {emb}");
+    assert!(emb >= raw - 0.02,
+            "embedding {emb} should not lose to raw {raw}");
+}
+
+#[test]
+fn regression_system_comparison_smoke() {
+    let mut p = registry::by_name("space_ga").unwrap();
+    p.n = 400;
+    let ds = generate(&p);
+    let spec = BaseSpec {
+        scale: SpaceScale::Medium,
+        metric: Metric::Mse,
+        max_evals: 15,
+        budget_secs: f64::INFINITY,
+        seed: 2,
+    };
+    for sys in [SystemKind::VolcanoMLMinus, SystemKind::Tpot] {
+        let out = run_system(sys, &ds, &spec, None, None).unwrap();
+        assert!(out.test_metric_value.is_finite(), "{}", sys.name());
+        assert!(out.test_metric_value < 5.0,
+                "{}: mse {}", sys.name(), out.test_metric_value);
+    }
+}

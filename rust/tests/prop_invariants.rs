@@ -1,0 +1,268 @@
+//! Property-based tests over coordinator/search invariants, using the
+//! in-house harness (util::prop). These sweep randomised spaces,
+//! datasets and budgets and assert structural invariants: sampling
+//! validity, budget routing, elimination state, ensemble dominance,
+//! rank-table arithmetic.
+
+use volcanoml::blocks::{Arm, BuildingBlock, ConditioningBlock, Env,
+                        JointBlock, Objective};
+use volcanoml::coordinator::evaluator::PipelineEvaluator;
+use volcanoml::coordinator::{joint_space, pipeline_for, roster_for,
+                             SpaceScale};
+use volcanoml::data::metrics::Metric;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::{Split, Task};
+use volcanoml::ensemble::{combine, fit_weights, EnsembleMethod};
+use volcanoml::space::{Config, ConfigSpace, Value};
+use volcanoml::util::prop::check;
+use volcanoml::util::rng::Rng;
+
+/// Random config space with nested conditionals.
+fn random_space(g: &mut volcanoml::util::prop::Gen) -> ConfigSpace {
+    let mut cs = ConfigSpace::new()
+        .cat("root", &["a", "b", "c"], "a");
+    let n = g.usize_in(1, 8);
+    for i in 0..n {
+        let name = format!("p{i}");
+        cs = match g.usize_in(0, 2) {
+            0 => cs.float(&name, -1.0, 1.0, 0.0),
+            1 => cs.int(&name, 0, 10, 5),
+            _ => cs.log_float(&name, 1e-4, 10.0, 0.1),
+        };
+        if g.bool() {
+            let parent_vals: &[&str] =
+                if g.bool() { &["a"] } else { &["b", "c"] };
+            cs = cs.when("root", parent_vals);
+        }
+    }
+    cs
+}
+
+#[test]
+fn prop_sampled_configs_are_always_valid() {
+    check("sampled-configs-valid", 40, |g| {
+        let cs = random_space(g);
+        for _ in 0..10 {
+            let cfg = cs.sample(&mut g.rng);
+            for p in &cs.params {
+                let active = cs.is_active(&p.name, &cfg);
+                if active != cfg.get(&p.name).is_some() {
+                    return Err(format!(
+                        "{}: active={active} but present={}",
+                        p.name, cfg.get(&p.name).is_some()));
+                }
+            }
+            // features encode every param
+            if cs.to_features(&cfg).len() != cs.len() {
+                return Err("feature length mismatch".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_neighbor_and_crossover_stay_valid() {
+    check("neighbor-crossover-valid", 30, |g| {
+        let cs = random_space(g);
+        let a = cs.sample(&mut g.rng);
+        let b = cs.sample(&mut g.rng);
+        for cfg in [cs.neighbor(&a, &mut g.rng),
+                    cs.crossover(&a, &b, &mut g.rng)] {
+            for p in &cs.params {
+                if cs.is_active(&p.name, &cfg)
+                    != cfg.get(&p.name).is_some() {
+                    return Err(format!("invalid under {}", p.name));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Simple counting objective for block-level invariants.
+struct Counter {
+    evals: usize,
+    cap: usize,
+    f: Box<dyn Fn(&Config) -> f64>,
+}
+
+impl Objective for Counter {
+    fn evaluate(&mut self, cfg: &Config, _f: f64)
+        -> anyhow::Result<f64> {
+        self.evals += 1;
+        Ok((self.f)(cfg))
+    }
+    fn exhausted(&self) -> bool {
+        self.evals >= self.cap
+    }
+}
+
+#[test]
+fn prop_conditioning_block_never_loses_the_best_arm() {
+    check("conditioning-keeps-winner", 12, |g| {
+        // arm utilities: random plateaus; the best arm must survive
+        let n_arms = g.usize_in(2, 5);
+        let levels: Vec<f64> =
+            (0..n_arms).map(|_| g.f64_in(0.0, 1.0)).collect();
+        let best_arm = (0..n_arms)
+            .max_by(|&a, &b| levels[a].partial_cmp(&levels[b]).unwrap())
+            .unwrap();
+        let sub = ConfigSpace::new().float("x", 0.0, 1.0, 0.5);
+        let arms: Vec<Arm> = (0..n_arms)
+            .map(|a| Arm {
+                value: format!("arm{a}"),
+                block: Box::new(JointBlock::bo(
+                    &format!("arm{a}"),
+                    sub.clone(),
+                    Config::new().with("arm",
+                        Value::C(format!("arm{a}"))),
+                    g.seed ^ a as u64)),
+                active: true,
+            })
+            .collect();
+        let mut cond = ConditioningBlock::new("arm", arms);
+        let levels2 = levels.clone();
+        let mut obj = Counter {
+            evals: 0,
+            cap: 150,
+            f: Box::new(move |cfg: &Config| {
+                let arm: usize = cfg.str_or("arm", "arm0")[3..]
+                    .parse().unwrap_or(0);
+                // plateau + small x-dependent wiggle
+                levels2[arm] + 0.01 * cfg.f64_or("x", 0.0)
+            }),
+        };
+        let mut rng = Rng::new(g.seed);
+        while !obj.exhausted() {
+            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            cond.do_next(&mut env).map_err(|e| e.to_string())?;
+        }
+        let active = cond.active_values();
+        if !active.contains(&format!("arm{best_arm}")) {
+            return Err(format!(
+                "best arm {best_arm} (levels {levels:?}) eliminated; \
+                 active: {active:?}"));
+        }
+        // the reported best must come from the best arm's plateau
+        let (_, y) = cond.current_best().ok_or("no best")?;
+        if y + 1e-9 < levels[best_arm] {
+            return Err(format!("best {y} below plateau"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_evaluator_budget_and_cache_routing() {
+    check("evaluator-budget-cache", 8, |g| {
+        let n = g.usize_in(150, 300);
+        let ds = generate(&Profile {
+            name: format!("prop-{}", g.seed),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 2.0 },
+            n,
+            d: g.usize_in(3, 8),
+            noise: 0.05,
+            imbalance: 1.0,
+            redundant: 0,
+            wild_scales: false,
+            seed: g.seed,
+        });
+        let pipeline = pipeline_for(SpaceScale::Small, false, false);
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut g.rng);
+        let cap = g.usize_in(3, 8);
+        let mut ev = PipelineEvaluator::new(
+            &ds, split, Metric::BalancedAccuracy, &pipeline, &algos,
+            None, g.seed)
+            .with_budget(cap, f64::INFINITY);
+        let mut seen = Vec::new();
+        while !ev.exhausted() {
+            let cfg = space.sample(&mut g.rng);
+            let u = ev.evaluate(&cfg, 1.0).map_err(|e| e.to_string())?;
+            seen.push((cfg, u));
+        }
+        if ev.n_evals() > cap {
+            return Err(format!("{} evals > cap {cap}", ev.n_evals()));
+        }
+        // cache: re-evaluating any seen config returns the identical
+        // value and does not consume budget
+        let before = ev.n_evals();
+        for (cfg, u) in &seen {
+            let u2 = ev.evaluate(cfg, 1.0).map_err(|e| e.to_string())?;
+            if u2 != *u {
+                return Err(format!("cache mismatch {u} vs {u2}"));
+            }
+        }
+        if ev.n_evals() != before {
+            return Err("cache hits consumed budget".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ensemble_selection_dominates_members_on_valid() {
+    check("ensemble-dominates", 20, |g| {
+        // random binary scorers over random labels
+        let n = g.usize_in(20, 60);
+        let y: Vec<f32> =
+            (0..n).map(|_| (g.rng.below(2)) as f32).collect();
+        let m = g.usize_in(2, 6);
+        let members: Vec<volcanoml::data::Predictions> = (0..m)
+            .map(|_| {
+                let acc_target = g.f64_in(0.4, 0.95);
+                volcanoml::data::Predictions::ClassScores {
+                    n_classes: 2,
+                    scores: y.iter().flat_map(|&t| {
+                        let correct = g.rng.bool(acc_target);
+                        let hit = if correct { t } else { 1.0 - t };
+                        if hit == 1.0 { vec![0.25, 0.75] }
+                        else { vec![0.75, 0.25] }
+                    }).collect(),
+                }
+            })
+            .collect();
+        let best_single = members.iter()
+            .map(|p| Metric::BalancedAccuracy.utility(&y, p))
+            .fold(f64::NEG_INFINITY, f64::max);
+        let w = fit_weights(EnsembleMethod::Selection,
+                            Metric::BalancedAccuracy, &y, &members, 12,
+                            &mut g.rng);
+        let u = Metric::BalancedAccuracy.utility(
+            &y, &combine(&members, &w));
+        // greedy selection starts from the best single model: it can
+        // never be worse on the data it optimises
+        if u + 1e-9 < best_single {
+            return Err(format!("ensemble {u} < best member \
+                                {best_single}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rank_table_arithmetic() {
+    check("avg-rank-arithmetic", 30, |g| {
+        let n_ds = g.usize_in(2, 8);
+        let n_sys = g.usize_in(2, 5);
+        let scores: Vec<Vec<f64>> = (0..n_ds)
+            .map(|_| (0..n_sys).map(|_| g.f64_in(0.0, 1.0)).collect())
+            .collect();
+        let ranks = volcanoml::util::stats::average_ranks(
+            &scores, true, 1e-12);
+        // ranks sum to n_sys*(n_sys+1)/2 per dataset on average
+        let total: f64 = ranks.iter().sum();
+        let expect = (n_sys * (n_sys + 1)) as f64 / 2.0;
+        if (total - expect).abs() > 1e-6 {
+            return Err(format!("rank sum {total} != {expect}"));
+        }
+        // every rank within [1, n_sys]
+        if ranks.iter().any(|&r| !(1.0..=n_sys as f64).contains(&r)) {
+            return Err(format!("rank out of range: {ranks:?}"));
+        }
+        Ok(())
+    });
+}
