@@ -61,7 +61,7 @@ fn main() {
                                            fixed, i as u64);
             let mut rng = Rng::new(100 + i as u64);
             while !ev.exhausted() {
-                let mut env = Env { obj: &mut ev, rng: &mut rng };
+                let mut env = Env::new(&mut ev, &mut rng);
                 block.do_next(&mut env).unwrap();
             }
             let hist: (Vec<Vec<f64>>, Vec<f64>) = block
@@ -107,7 +107,7 @@ fn main() {
                     break;
                 }
                 {
-                    let mut env = Env { obj: &mut ev, rng: &mut rng };
+                    let mut env = Env::new(&mut ev, &mut rng);
                     block.do_next(&mut env).unwrap();
                 }
                 best = block.current_best().map(|(_, y)| y)

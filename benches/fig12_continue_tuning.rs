@@ -54,7 +54,7 @@ fn main() {
         let mut trend: Vec<(usize, usize)> = Vec::new();
 
         for _ in 0..phase1 {
-            let mut env = Env { obj: &mut ev, rng: &mut rng };
+            let mut env = Env::new(&mut ev, &mut rng);
             root.do_next(&mut env).unwrap();
             drop(env);
             trend.push((ev.n_evals(), root.active_children()));
@@ -79,7 +79,7 @@ fn main() {
             if ev.exhausted() {
                 break;
             }
-            let mut env = Env { obj: &mut ev, rng: &mut rng };
+            let mut env = Env::new(&mut ev, &mut rng);
             root.do_next(&mut env).unwrap();
             drop(env);
             trend.push((ev.n_evals(), root.active_children()));
@@ -118,7 +118,7 @@ fn main() {
     root.as_any_mut().downcast_mut::<ConditioningBlock>()
         .unwrap().eliminate = false;
     while !ev.exhausted() {
-        let mut env = Env { obj: &mut ev, rng: &mut rng };
+        let mut env = Env::new(&mut ev, &mut rng);
         root.do_next(&mut env).unwrap();
     }
     println!("\nablation (elimination off): best valid = {:.4}, arms \

@@ -7,8 +7,9 @@
 //! Ablation: VOLCANO_NO_ENSEMBLE=1 disables ensembling for VolcanoML.
 
 use volcanoml::baselines::SystemKind;
-use volcanoml::bench::{bench_scale, run_matrix, save_results,
-                       shrink_profile, try_runtime, Table};
+use volcanoml::bench::{bench_scale, bench_workers, run_matrix,
+                       save_results, shrink_profile, try_runtime,
+                       Table};
 use volcanoml::coordinator::SpaceScale;
 use volcanoml::data::metrics::relative_mse_improvement;
 use volcanoml::data::registry;
@@ -28,8 +29,9 @@ fn main() {
             .take(scale.datasets_cap)
             .map(|p| shrink_profile(p, &scale))
             .collect();
-        println!("\n=== Fig 7 ({label}): {} datasets, {} evals each ===",
-                 profiles.len(), scale.evals);
+        println!("\n=== Fig 7 ({label}): {} datasets, {} evals each, \
+                  {} worker(s) ===",
+                 profiles.len(), scale.evals, bench_workers());
         let m = run_matrix(&profiles, &systems, SpaceScale::Large,
                            scale.evals, 42, None, runtime.as_ref());
 

@@ -51,6 +51,7 @@ fn main() {
                 metric: Metric::BalancedAccuracy,
                 max_evals: scale.evals,
                 budget_secs: f64::INFINITY,
+                workers: volcanoml::bench::bench_workers(),
                 seed: 43,
             };
             if let Ok(out) = run_system(sys, &ds, &spec, None,

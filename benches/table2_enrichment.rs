@@ -27,6 +27,7 @@ fn main() {
             metric: Metric::Accuracy,
             max_evals: scale.evals,
             budget_secs: f64::INFINITY,
+            workers: volcanoml::bench::bench_workers(),
             seed: 42,
         };
         let ausk = run_system(SystemKind::AuskMinus, &ds, &spec, None,

@@ -4,8 +4,8 @@
 //! ablation: CA with round-robin alternation instead of EUI routing.
 
 use volcanoml::baselines::{run_system, BaseSpec, SystemKind};
-use volcanoml::bench::{bench_scale, save_results, shrink_profile,
-                       try_runtime, Table};
+use volcanoml::bench::{bench_scale, bench_workers, save_results,
+                       shrink_profile, try_runtime, Table};
 use volcanoml::coordinator::automl::{VolcanoConfig, VolcanoML};
 use volcanoml::coordinator::SpaceScale;
 use volcanoml::data::metrics::Metric;
@@ -17,7 +17,11 @@ use volcanoml::util::stats::average_ranks;
 
 fn main() {
     let scale = bench_scale();
+    let workers = bench_workers();
     let runtime = try_runtime();
+    if workers > 1 {
+        println!("[batched evaluation on {workers} workers]");
+    }
     for (t_label, profiles, header_metric) in [
         ("Table 7 (CLS, test accuracy)",
          registry::medium_classification(), Metric::Accuracy),
@@ -44,6 +48,7 @@ fn main() {
                     scale: SpaceScale::Large,
                     metric: header_metric,
                     max_evals: scale.evals,
+                    workers,
                     seed: 42,
                     ..Default::default()
                 };
@@ -64,6 +69,7 @@ fn main() {
                 metric: header_metric,
                 max_evals: scale.evals,
                 budget_secs: f64::INFINITY,
+                workers,
                 seed: 42,
             };
             for sys in [SystemKind::Tpot, SystemKind::AuskMinus] {
@@ -145,7 +151,7 @@ fn ablation_eui(scale: &volcanoml::bench::BenchScale,
                 .with_budget(scale.evals, f64::INFINITY);
             let mut rng = Rng::new(2);
             while !ev.exhausted() {
-                let mut env = Env { obj: &mut ev, rng: &mut rng };
+                let mut env = Env::new(&mut ev, &mut rng);
                 root.do_next(&mut env).unwrap();
             }
             vals.push(ev.best.map(|(_, u)| u).unwrap_or(f64::NAN));

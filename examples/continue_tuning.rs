@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     let mut trend: Vec<(usize, usize)> = Vec::new();
     for round in 0..4 {
         {
-            let mut env = Env { obj: &mut evaluator, rng: &mut rng };
+            let mut env = Env::new(&mut evaluator, &mut rng);
             root.do_next(&mut env)?;
         }
         trend.push((evaluator.n_evals(), root.active_children()));
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     println!("\nphase 2 (extended roster):");
     for round in 0..6 {
         {
-            let mut env = Env { obj: &mut evaluator, rng: &mut rng };
+            let mut env = Env::new(&mut evaluator, &mut rng);
             root.do_next(&mut env)?;
         }
         trend.push((evaluator.n_evals(), root.active_children()));

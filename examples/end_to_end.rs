@@ -1,34 +1,105 @@
 //! End-to-end system driver — proves all three layers compose on a
-//! real workload: the Rust coordinator executes a full VolcanoML
-//! search (plan CA, conditioning + alternating + joint blocks) whose
-//! trainable arms run through the AOT-compiled JAX/Pallas artifacts
-//! via PJRT, on several registry datasets. Logs the validation
-//! improvement curve, held-out test results and PJRT execution stats.
-//! Results are recorded in EXPERIMENTS.md §End-to-end driver.
+//! real workload, and demonstrates the parallel Volcano executor.
 //!
-//!     make artifacts && cargo run --release --example end_to_end
+//! Part 1 (always runs): a VolcanoML search (plan CA) on a synthetic
+//! blob workload, once strictly serially (`workers = 1`, batch of 1 —
+//! the exact pre-parallel execution path) and, when `--workers N > 1`,
+//! once with batched `do_next` fanned out across N worker threads.
+//! Prints both incumbents and the wall-clock speedup.
+//!
+//! Part 2: full searches over several registry datasets whose
+//! trainable arms run through the AOT-compiled JAX/Pallas artifacts
+//! via PJRT when artifacts are built (degrades to the native roster
+//! otherwise). Logs validation curves, held-out test results and PJRT
+//! execution stats.
+//!
+//!     cargo run --release --example end_to_end -- --workers 4
+
+use std::time::Instant;
 
 use volcanoml::baselines::{run_system, BaseSpec, SystemKind};
-use volcanoml::bench::Table;
+use volcanoml::bench::{try_runtime, Table};
+use volcanoml::cli::Args;
+use volcanoml::coordinator::automl::{VolcanoConfig, VolcanoML};
 use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::dataset::Task;
 use volcanoml::data::metrics::Metric;
 use volcanoml::data::registry;
-use volcanoml::data::synthetic::generate;
-use volcanoml::runtime::Runtime;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::ensemble::EnsembleMethod;
+use volcanoml::plan::PlanKind;
 
 fn main() -> anyhow::Result<()> {
-    let runtime = Runtime::new(&Runtime::default_dir())?;
-    println!("PJRT runtime up: {} artifacts, canonical \
-              (n_train={}, d={})",
-             runtime.artifact_names().len(),
-             runtime.constants().n_train, runtime.constants().d);
+    let args = Args::from_env()?;
+    let workers = args.usize_or("workers", 2)?.max(1);
+    args.finish()?;
+    let evals = std::env::var("E2E_EVALS")
+        .ok().and_then(|v| v.parse().ok()).unwrap_or(48);
+
+    // ---- part 1: parallel executor on the synthetic blob workload --
+    let blobs = generate(&Profile {
+        name: "blobs-e2e".into(),
+        task: Task::Classification { n_classes: 3 },
+        gen: GenKind::Blobs { sep: 1.5 },
+        n: 1600,
+        d: 12,
+        noise: 0.05,
+        imbalance: 1.3,
+        redundant: 2,
+        wild_scales: false,
+        seed: 7,
+    });
+    let search = |w: usize| -> anyhow::Result<(f64, f64, usize)> {
+        let cfg = VolcanoConfig {
+            plan: PlanKind::CA,
+            scale: SpaceScale::Medium,
+            metric: Metric::BalancedAccuracy,
+            max_evals: evals,
+            // no ensemble refits: time the search itself
+            ensemble: EnsembleMethod::None,
+            workers: w,
+            seed: 42,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let out = VolcanoML::new(cfg).run(&blobs, None)?;
+        Ok((t0.elapsed().as_secs_f64(), out.best_valid_utility,
+            out.n_evals))
+    };
+
+    println!("== parallel Volcano executor on {} (n={}, d={}, {} \
+              evals) ==", blobs.name, blobs.n, blobs.d, evals);
+    let (t1, u1, n1) = search(1)?;
+    println!("  serial   (workers=1): {t1:7.2}s  best valid {u1:.4}  \
+              ({n1} evals)");
+    if workers > 1 {
+        let (tn, un, nn) = search(workers)?;
+        println!("  parallel (workers={workers}): {tn:7.2}s  best \
+                  valid {un:.4}  ({nn} evals)");
+        println!("  speedup: {:.2}x", t1 / tn.max(1e-9));
+        assert!(un.is_finite() && nn == n1,
+                "parallel run must spend the identical budget");
+    } else {
+        println!("  (pass --workers N to compare against the worker \
+                  pool)");
+    }
+
+    // ---- part 2: registry datasets, PJRT arms when available -------
+    let runtime = try_runtime();
+    match &runtime {
+        Some(rt) => println!(
+            "\nPJRT runtime up: {} artifacts, canonical (n_train={}, \
+             d={})",
+            rt.artifact_names().len(), rt.constants().n_train,
+            rt.constants().d),
+        None => println!("\nPJRT artifacts not built: running the \
+                          native algorithm roster"),
+    }
 
     let datasets = ["quake", "segment", "space_ga"];
-    let evals = std::env::var("E2E_EVALS")
-        .ok().and_then(|v| v.parse().ok()).unwrap_or(60);
-
     let mut table = Table::new(
-        "end-to-end: VolcanoML (CA+BO+ensemble) with PJRT arms",
+        "end-to-end: VolcanoML (CA+BO+ensemble) across registry \
+         datasets",
         &["dataset", "task", "evals", "best valid", "test (single)",
           "test (ensemble)", "secs"]);
 
@@ -44,10 +115,11 @@ fn main() -> anyhow::Result<()> {
             metric,
             max_evals: evals,
             budget_secs: f64::INFINITY,
+            workers,
             seed: 42,
         };
         let out = run_system(SystemKind::VolcanoMLMinus, &ds, &spec,
-                             None, Some(&runtime))?;
+                             None, runtime.as_ref())?;
         println!("\n--- {} ---", ds.name);
         println!("validation improvement curve:");
         for (t, u) in &out.valid_curve {
@@ -66,11 +138,14 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
-    println!("\nPJRT execution stats (artifact, #execs, total secs):");
-    for (name, n, secs) in runtime.exec_stats() {
-        println!("  {name:<20} {n:>6}  {secs:>8.2}s");
+    if let Some(rt) = &runtime {
+        println!("\nPJRT execution stats (artifact, #execs, total \
+                  secs):");
+        for (name, n, secs) in rt.exec_stats() {
+            println!("  {name:<20} {n:>6}  {secs:>8.2}s");
+        }
+        println!("\nall layers composed: Rust blocks -> PJRT \
+                  executables -> Pallas kernels.");
     }
-    println!("\nall layers composed: Rust blocks -> PJRT executables \
-              -> Pallas kernels.");
     Ok(())
 }

@@ -89,6 +89,9 @@ pub struct BaseSpec {
     pub metric: Metric,
     pub max_evals: usize,
     pub budget_secs: f64,
+    /// Worker threads for batched candidate evaluation (1 = serial);
+    /// applies identically to every system so comparisons stay fair.
+    pub workers: usize,
     pub seed: u64,
 }
 
@@ -99,6 +102,7 @@ impl BaseSpec {
             metric: self.metric,
             max_evals: self.max_evals,
             budget_secs: self.budget_secs,
+            workers: self.workers.max(1),
             seed: self.seed,
             ..Default::default()
         };
@@ -253,6 +257,7 @@ mod tests {
             metric: Metric::BalancedAccuracy,
             max_evals: 18,
             budget_secs: f64::INFINITY,
+            workers: 1,
             seed: 5,
         }
     }

@@ -261,6 +261,28 @@ pub fn save_results(name: &str, v: &crate::util::json::Json) {
     }
 }
 
+/// Worker threads for bench / driver runs: `--workers N` (pass after
+/// `--` under `cargo bench`/`cargo run`) or the VOLCANO_WORKERS env
+/// var; defaults to 1 (serial). N > 1 also proposes candidates in
+/// batches of N, and batch BO reorders proposals — so expect small
+/// deviations from the serial (N = 1) paper-table trajectories.
+/// Worker count alone is trajectory-invariant only at a fixed batch
+/// size (see rust/README.md).
+pub fn bench_workers() -> usize {
+    let from_args = crate::cli::Args::from_env()
+        .ok()
+        .and_then(|a| a.usize_or("workers", 0).ok())
+        .filter(|&n| n > 0);
+    from_args
+        .or_else(|| {
+            std::env::var("VOLCANO_WORKERS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .filter(|&n| n > 0)
+        })
+        .unwrap_or(1)
+}
+
 /// Open the PJRT runtime if artifacts are built (bench targets degrade
 /// to the native roster otherwise, with a warning).
 pub fn try_runtime() -> Option<crate::runtime::Runtime> {
@@ -327,6 +349,7 @@ pub fn run_matrix(profiles: &[crate::data::synthetic::Profile],
             metric,
             max_evals: evals,
             budget_secs: f64::INFINITY,
+            workers: bench_workers(),
             seed,
         };
         let mut urow = Vec::new();

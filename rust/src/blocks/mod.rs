@@ -8,6 +8,15 @@
 //! block owns a free subspace plus a `fixed` partial assignment
 //! (`f[x̄_g/c̄_g]` in the paper); evaluations always submit the merged
 //! full configuration.
+//!
+//! `do_next!` is a *batched* pull: each leaf proposes `Env::batch`
+//! candidates per invocation and submits them through
+//! [`Objective::evaluate_batch`], which may evaluate them on a worker
+//! pool (see `runtime::executor`). Results come back in proposal
+//! order and observations are applied in that order, so the search
+//! trajectory depends only on the batch size — never on the worker
+//! count. `batch == 1` reproduces the original one-candidate-per-pull
+//! Volcano semantics exactly.
 
 use anyhow::Result;
 
@@ -20,6 +29,31 @@ use crate::util::rng::Rng;
 /// fidelity, returning a *utility* (higher is better).
 pub trait Objective {
     fn evaluate(&mut self, cfg: &Config, fidelity: f64) -> Result<f64>;
+
+    /// Batched pull: evaluate a slice of (config, fidelity) requests
+    /// and return utilities for a **prefix** of them, in request
+    /// order. The returned vector may be shorter than `reqs` when the
+    /// evaluation budget runs out mid-batch — callers must only
+    /// observe the returned prefix, which is how batched `do_next`
+    /// preserves exact budget accounting.
+    ///
+    /// The default implementation evaluates sequentially, stopping at
+    /// budget exhaustion between requests; parallel objectives (see
+    /// `coordinator::evaluator`) fan the batch out across a worker
+    /// pool while committing results in request order, so the output
+    /// is identical for any worker count.
+    fn evaluate_batch(&mut self, reqs: &[(Config, f64)])
+        -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for (i, (cfg, fid)) in reqs.iter().enumerate() {
+            if i > 0 && self.exhausted() {
+                break;
+            }
+            out.push(self.evaluate(cfg, *fid)?);
+        }
+        Ok(out)
+    }
+
     /// True when the budget is exhausted; blocks stop issuing work.
     fn exhausted(&self) -> bool;
 }
@@ -27,6 +61,22 @@ pub trait Objective {
 pub struct Env<'a> {
     pub obj: &'a mut dyn Objective,
     pub rng: &'a mut Rng,
+    /// Candidates proposed per leaf-block pull (>= 1). With 1 every
+    /// leaf `do_next` evaluates exactly one configuration — the
+    /// original strictly-serial Volcano semantics.
+    pub batch: usize,
+}
+
+impl<'a> Env<'a> {
+    /// Serial environment (batch of 1).
+    pub fn new(obj: &'a mut dyn Objective, rng: &'a mut Rng) -> Env<'a> {
+        Env::with_batch(obj, rng, 1)
+    }
+
+    pub fn with_batch(obj: &'a mut dyn Objective, rng: &'a mut Rng,
+                      batch: usize) -> Env<'a> {
+        Env { obj, rng, batch: batch.max(1) }
+    }
 }
 
 pub trait BuildingBlock {
@@ -123,44 +173,77 @@ impl BuildingBlock for JointBlock {
         if env.obj.exhausted() {
             return Ok(());
         }
+        let k = env.batch.max(1);
+        // (full config, utility, counts toward the best curve);
+        // observations are applied in proposal order after the batch
+        // returns, so reward updates are independent of how the
+        // objective scheduled the evaluations.
+        let mut recs: Vec<(Config, f64, bool)> = Vec::with_capacity(k);
         match &mut self.engine {
             JointEngine::Bo(bo) => {
-                let sub = bo.suggest(env.rng);
-                let full = self.fixed.merged(&sub);
-                let y = env.obj.evaluate(&full, 1.0)?;
-                bo.observe(sub, y);
-                self.record(full, y);
+                let subs = bo.suggest_batch(env.rng, k);
+                let reqs: Vec<(Config, f64)> = subs
+                    .iter()
+                    .map(|s| (self.fixed.merged(s), 1.0))
+                    .collect();
+                let ys = env.obj.evaluate_batch(&reqs)?;
+                for ((sub, (full, _)), y) in
+                    subs.into_iter().zip(reqs).zip(ys) {
+                    bo.observe(sub, y);
+                    recs.push((full, y, true));
+                }
             }
             JointEngine::Random(rs) => {
-                let sub = rs.suggest(env.rng);
-                let full = self.fixed.merged(&sub);
-                let y = env.obj.evaluate(&full, 1.0)?;
-                rs.observe(sub, y);
-                self.record(full, y);
+                let subs = rs.suggest_batch(env.rng, k);
+                let reqs: Vec<(Config, f64)> = subs
+                    .iter()
+                    .map(|s| (self.fixed.merged(s), 1.0))
+                    .collect();
+                let ys = env.obj.evaluate_batch(&reqs)?;
+                for ((sub, (full, _)), y) in
+                    subs.into_iter().zip(reqs).zip(ys) {
+                    rs.observe(sub, y);
+                    recs.push((full, y, true));
+                }
             }
             JointEngine::Evo(ev) => {
-                let sub = ev.suggest(env.rng);
-                let full = self.fixed.merged(&sub);
-                let y = env.obj.evaluate(&full, 1.0)?;
-                ev.observe(sub, y);
-                self.record(full, y);
+                let subs = ev.suggest_batch(env.rng, k);
+                let reqs: Vec<(Config, f64)> = subs
+                    .iter()
+                    .map(|s| (self.fixed.merged(s), 1.0))
+                    .collect();
+                let ys = env.obj.evaluate_batch(&reqs)?;
+                for ((sub, (full, _)), y) in
+                    subs.into_iter().zip(reqs).zip(ys) {
+                    ev.observe(sub, y);
+                    recs.push((full, y, true));
+                }
             }
             JointEngine::Mf(mf) => {
-                let (sub, fid) = mf.suggest(env.rng);
-                let full = self.fixed.merged(&sub);
-                let y = env.obj.evaluate(&full, fid)?;
-                mf.observe(sub, fid, y);
-                // only count full-fidelity results toward the best
-                if fid >= 1.0 {
-                    self.record(full, y);
-                } else {
-                    let prev = self.best_curve.last().copied()
-                        .unwrap_or(f64::NEG_INFINITY);
-                    self.best_curve.push(prev);
-                    self.history.push((full, f64::NEG_INFINITY.max(y)));
-                    // history keeps the low-fidelity value for the
-                    // record but best_curve ignores it
+                let picks = mf.suggest_batch(env.rng, k);
+                let reqs: Vec<(Config, f64)> = picks
+                    .iter()
+                    .map(|(s, fid)| (self.fixed.merged(s), *fid))
+                    .collect();
+                let ys = env.obj.evaluate_batch(&reqs)?;
+                for (((sub, fid), (full, _)), y) in
+                    picks.into_iter().zip(reqs).zip(ys) {
+                    mf.observe(sub, fid, y);
+                    // only count full-fidelity results toward the best
+                    recs.push((full, y, fid >= 1.0));
                 }
+            }
+        }
+        for (full, y, counts) in recs {
+            if counts {
+                self.record(full, y);
+            } else {
+                let prev = self.best_curve.last().copied()
+                    .unwrap_or(f64::NEG_INFINITY);
+                self.best_curve.push(prev);
+                self.history.push((full, f64::NEG_INFINITY.max(y)));
+                // history keeps the low-fidelity value for the record
+                // but best_curve ignores it
             }
         }
         Ok(())
@@ -581,7 +664,7 @@ mod tests {
         let mut rng = Rng::new(0);
         let mut block = joint_for("a", 0);
         {
-            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            let mut env = Env::new(&mut obj, &mut rng);
             for _ in 0..60 {
                 block.do_next(&mut env).unwrap();
             }
@@ -601,7 +684,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut block = joint_for("a", 1);
         {
-            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            let mut env = Env::new(&mut obj, &mut rng);
             for _ in 0..30 {
                 block.do_next(&mut env).unwrap();
             }
@@ -624,7 +707,7 @@ mod tests {
         ];
         let mut cond = ConditioningBlock::new("algorithm", arms);
         {
-            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            let mut env = Env::new(&mut obj, &mut rng);
             for _ in 0..8 {
                 cond.do_next(&mut env).unwrap();
             }
@@ -645,7 +728,7 @@ mod tests {
                   active: true },
         ];
         let mut cond = ConditioningBlock::new("algorithm", arms);
-        let mut env = Env { obj: &mut obj, rng: &mut rng };
+        let mut env = Env::new(&mut obj, &mut rng);
         for _ in 0..5 {
             cond.do_next(&mut env).unwrap();
         }
@@ -662,7 +745,7 @@ mod tests {
         ];
         let mut cond = ConditioningBlock::new("algorithm", arms);
         {
-            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            let mut env = Env::new(&mut obj, &mut rng);
             for _ in 0..3 {
                 cond.do_next(&mut env).unwrap();
             }
@@ -675,7 +758,7 @@ mod tests {
             active: true,
         }]);
         {
-            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            let mut env = Env::new(&mut obj, &mut rng);
             for _ in 0..8 {
                 cond.do_next(&mut env).unwrap();
             }
@@ -727,7 +810,7 @@ mod tests {
             Box::new(by), vec!["y".into()],
         );
         {
-            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            let mut env = Env::new(&mut obj, &mut rng);
             for _ in 0..60 {
                 alt.do_next(&mut env).unwrap();
             }
@@ -754,7 +837,7 @@ mod tests {
             Box::new(bx), vec!["x".into()],
             Box::new(by), vec!["y".into()]);
         {
-            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            let mut env = Env::new(&mut obj, &mut rng);
             for _ in 0..30 {
                 alt.do_next(&mut env).unwrap();
             }
@@ -773,5 +856,69 @@ mod tests {
         let (l, u) = block.get_eu(5.0);
         assert!(l.is_infinite() && l < 0.0);
         assert!(u.is_infinite() && u > 0.0);
+    }
+
+    #[test]
+    fn batched_pull_counts_every_evaluation() {
+        let mut obj = Synth { evals: 0, max_evals: 60 };
+        let mut rng = Rng::new(12);
+        let mut block = joint_for("a", 12);
+        {
+            let mut env = Env::with_batch(&mut obj, &mut rng, 4);
+            for _ in 0..15 {
+                block.do_next(&mut env).unwrap();
+            }
+        }
+        assert_eq!(block.n_evals(), 60);
+        let (_, y) = block.current_best().unwrap();
+        assert!(y > 0.6, "best={y}");
+    }
+
+    #[test]
+    fn batched_pull_truncates_exactly_at_the_budget() {
+        // cap 10 with batch 4: the final batch must be cut to the
+        // remaining budget, never overshooting it
+        let mut obj = Synth { evals: 0, max_evals: 10 };
+        let mut rng = Rng::new(13);
+        let mut block = joint_for("a", 13);
+        {
+            let mut env = Env::with_batch(&mut obj, &mut rng, 4);
+            for _ in 0..6 {
+                block.do_next(&mut env).unwrap();
+            }
+        }
+        assert_eq!(obj.evals, 10);
+        assert_eq!(block.n_evals(), 10);
+    }
+
+    #[test]
+    fn env_batch_defaults_and_clamps() {
+        let mut obj = Synth { evals: 0, max_evals: 1 };
+        let mut rng = Rng::new(14);
+        assert_eq!(Env::new(&mut obj, &mut rng).batch, 1);
+        let mut obj2 = Synth { evals: 0, max_evals: 1 };
+        let mut rng2 = Rng::new(15);
+        assert_eq!(Env::with_batch(&mut obj2, &mut rng2, 0).batch, 1);
+    }
+
+    #[test]
+    fn batched_conditioning_block_still_eliminates() {
+        let mut obj = Synth { evals: 0, max_evals: 400 };
+        let mut rng = Rng::new(16);
+        let arms = vec![
+            Arm { value: "a".into(), block: Box::new(joint_for("a", 17)),
+                  active: true },
+            Arm { value: "b".into(), block: Box::new(joint_for("b", 18)),
+                  active: true },
+        ];
+        let mut cond = ConditioningBlock::new("algorithm", arms);
+        {
+            let mut env = Env::with_batch(&mut obj, &mut rng, 3);
+            for _ in 0..6 {
+                cond.do_next(&mut env).unwrap();
+            }
+        }
+        assert_eq!(cond.active_values(), vec!["a".to_string()]);
+        assert!(cond.n_evals() <= 400);
     }
 }

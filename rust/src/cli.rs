@@ -15,15 +15,30 @@ pub struct Args {
     consumed: std::cell::RefCell<BTreeSet<String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for option --{0}")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {val:?} ({why})")]
     BadValue { key: String, val: String, why: String },
-    #[error("unknown options: {0:?} (see --help)")]
     Unknown(Vec<String>),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => {
+                write!(f, "missing value for option --{k}")
+            }
+            CliError::BadValue { key, val, why } => {
+                write!(f, "invalid value for --{key}: {val:?} ({why})")
+            }
+            CliError::Unknown(keys) => {
+                write!(f, "unknown options: {keys:?} (see --help)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw args (not including argv[0]). Options may appear

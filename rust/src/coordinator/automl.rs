@@ -45,6 +45,15 @@ pub struct VolcanoConfig {
     pub meta_top_arms: usize,
     /// Progressive top-down strategy instead of plan execution (§4.3).
     pub progressive: bool,
+    /// Worker threads evaluating each candidate batch (1 = serial).
+    /// Never changes search results for a fixed `eval_batch` — only
+    /// wall-clock time.
+    pub workers: usize,
+    /// Candidates proposed per leaf-block pull; 0 follows `workers`.
+    /// Batch size *does* shape the trajectory (batch BO proposes k
+    /// configs before seeing any of their results); `eval_batch = 1`
+    /// reproduces the strictly-serial pre-parallel semantics.
+    pub eval_batch: usize,
     pub seed: u64,
 }
 
@@ -65,6 +74,8 @@ impl Default for VolcanoConfig {
             meta: false,
             meta_top_arms: 5,
             progressive: false,
+            workers: 1,
+            eval_batch: 0,
             seed: 42,
         }
     }
@@ -164,17 +175,21 @@ impl VolcanoML {
         }
 
         // ---- run ----------------------------------------------------
+        let workers = cfg.workers.max(1);
+        let batch = if cfg.eval_batch == 0 { workers }
+                    else { cfg.eval_batch };
         let mut evaluator = PipelineEvaluator::new(
             ds, split, cfg.metric, &pipeline, &algos, runtime,
             cfg.seed)
-            .with_budget(cfg.max_evals, cfg.budget_secs);
+            .with_budget(cfg.max_evals, cfg.budget_secs)
+            .with_workers(workers);
         let mut arm_trend: Vec<(usize, usize)> = Vec::new();
         let mut search_rng = rng.fork(0xB10C);
 
         let root: Box<dyn BuildingBlock>;
         if cfg.progressive {
-            let mut env = Env { obj: &mut evaluator,
-                                rng: &mut search_rng };
+            let mut env = Env::with_batch(&mut evaluator,
+                                          &mut search_rng, batch);
             let phase = cfg.max_evals / 3;
             run_progressive(&builder, &mut env, phase, phase)?;
             root = builder.build(cfg.plan); // structure only (unused)
@@ -182,8 +197,9 @@ impl VolcanoML {
             let mut plan = ExecutionPlan::new(builder.build(cfg.plan));
             loop {
                 {
-                    let mut env = Env { obj: &mut evaluator,
-                                        rng: &mut search_rng };
+                    let mut env = Env::with_batch(&mut evaluator,
+                                                  &mut search_rng,
+                                                  batch);
                     if env.obj.exhausted() {
                         break;
                     }
@@ -526,6 +542,24 @@ mod tests {
         let algo_set: std::collections::HashSet<_> =
             out.record.arm_scores.keys().cloned().collect();
         assert_eq!(algo_set.len(), 1, "{algo_set:?}");
+    }
+
+    #[test]
+    fn worker_count_never_changes_the_outcome() {
+        let ds = small_ds(9);
+        let run = |workers: usize| {
+            let mut cfg = quick_cfg();
+            cfg.max_evals = 16;
+            cfg.workers = workers;
+            cfg.eval_batch = 3; // fixed batch: workers is perf-only
+            VolcanoML::new(cfg).run(&ds, None).unwrap()
+        };
+        let a = run(1);
+        let b = run(3);
+        assert_eq!(a.best_valid_utility.to_bits(),
+                   b.best_valid_utility.to_bits());
+        assert_eq!(a.best_config, b.best_config);
+        assert_eq!(a.n_evals, b.n_evals);
     }
 
     #[test]

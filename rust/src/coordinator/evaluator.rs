@@ -2,6 +2,16 @@
 //! algorithm on the training split, score the validation split. This
 //! is the only place where search configurations touch data, and the
 //! only caller of the PJRT runtime on the search path.
+//!
+//! Parallel evaluation: `evaluate_batch` fans fresh (uncached)
+//! requests out across the [`Executor`] worker pool. The heavy lifting
+//! (`eval_inner`) is a pure `&self` function — per-evaluation
+//! determinism comes from `eval_seed`, not shared state — while every
+//! side effect (cache, records, budget, crash penalties, incumbent
+//! tracking) is committed serially in request order after the join.
+//! Consequently the search outcome is identical for any worker count,
+//! and the evaluation budget is enforced exactly: a batch is truncated
+//! to the remaining budget before any work is scheduled.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -14,6 +24,7 @@ use crate::blocks::Objective;
 use crate::data::dataset::{Dataset, Predictions, Split};
 use crate::data::metrics::Metric;
 use crate::fe::FePipeline;
+use crate::runtime::executor::Executor;
 use crate::runtime::Runtime;
 use crate::space::Config;
 use crate::util::rng::Rng;
@@ -36,6 +47,8 @@ pub struct PipelineEvaluator<'a> {
     default_algo: String,
     pub runtime: Option<&'a Runtime>,
     pub seed: u64,
+    /// Worker pool for batched evaluation (serial by default).
+    pub executor: Executor,
     // budget
     start: Instant,
     pub budget_secs: f64,
@@ -76,6 +89,7 @@ impl<'a> PipelineEvaluator<'a> {
             default_algo,
             runtime,
             seed,
+            executor: Executor::serial(),
             start: Instant::now(),
             budget_secs: f64::INFINITY,
             max_evals: usize::MAX,
@@ -94,6 +108,13 @@ impl<'a> PipelineEvaluator<'a> {
         self.max_evals = max_evals;
         self.budget_secs = budget_secs;
         self.start = Instant::now();
+        self
+    }
+
+    /// Evaluate batches on `workers` threads (1 = serial). Worker
+    /// count never changes search results — only wall-clock time.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.executor = Executor::new(workers);
         self
     }
 
@@ -222,14 +243,13 @@ impl<'a> PipelineEvaluator<'a> {
     }
 }
 
-impl<'a> Objective for PipelineEvaluator<'a> {
-    fn evaluate(&mut self, cfg: &Config, fidelity: f64) -> Result<f64> {
-        let key = format!("{}@{fidelity:.4}", cfg.key());
-        if let Some(&u) = self.cache.get(&key) {
-            return Ok(u);
-        }
-        let t0 = Instant::now();
-        let utility = match self.eval_inner(cfg, fidelity) {
+impl<'a> PipelineEvaluator<'a> {
+    /// Commit one completed (non-cached) evaluation. Shared by the
+    /// serial and batched paths so both account for budget, failures,
+    /// the crash-penalty anchor and the incumbent identically.
+    fn commit(&mut self, key: String, cfg: &Config, fidelity: f64,
+              res: Result<f64>, elapsed: f64) -> f64 {
+        let utility = match res {
             Ok(u) if u.is_finite() => u,
             _ => {
                 self.failures += 1;
@@ -237,7 +257,6 @@ impl<'a> Objective for PipelineEvaluator<'a> {
             }
         };
         self.worst = self.worst.min(utility);
-        let elapsed = t0.elapsed().as_secs_f64();
         self.cache.insert(key, utility);
         self.records.push(EvalRecord {
             config: cfg.clone(),
@@ -256,7 +275,102 @@ impl<'a> Objective for PipelineEvaluator<'a> {
             self.valid_curve.push((t, utility));
             self.snapshots.push((t, cfg.clone()));
         }
-        Ok(utility)
+        utility
+    }
+}
+
+impl<'a> Objective for PipelineEvaluator<'a> {
+    fn evaluate(&mut self, cfg: &Config, fidelity: f64) -> Result<f64> {
+        let key = format!("{}@{fidelity:.4}", cfg.key());
+        if let Some(&u) = self.cache.get(&key) {
+            return Ok(u);
+        }
+        let t0 = Instant::now();
+        let res = self.eval_inner(cfg, fidelity);
+        let elapsed = t0.elapsed().as_secs_f64();
+        Ok(self.commit(key, cfg, fidelity, res, elapsed))
+    }
+
+    /// Batched evaluation over the worker pool.
+    ///
+    /// Three phases keep this exactly equivalent to processing the
+    /// requests one by one in order:
+    /// 1. *Plan* (serial): walk the requests in order, routing each to
+    ///    the cache, to an earlier in-batch duplicate, or to the fresh
+    ///    list — truncating the batch once the fresh list reaches the
+    ///    remaining evaluation budget.
+    /// 2. *Execute* (parallel): run the fresh list on the pool; pure
+    ///    `&self`, results land by index.
+    /// 3. *Commit* (serial): walk the planned slots in order, applying
+    ///    each fresh result's side effects via [`Self::commit`].
+    fn evaluate_batch(&mut self, reqs: &[(Config, f64)])
+        -> Result<Vec<f64>> {
+        if reqs.len() <= 1 {
+            return reqs
+                .iter()
+                .map(|(cfg, fid)| self.evaluate(cfg, *fid))
+                .collect();
+        }
+
+        enum Slot {
+            Cached(f64),
+            Fresh(usize),
+        }
+        let remaining =
+            self.max_evals.saturating_sub(self.records.len());
+        let mut slots: Vec<Slot> = Vec::with_capacity(reqs.len());
+        let mut fresh: Vec<(String, Config, f64)> = Vec::new();
+        let mut scheduled: HashMap<String, usize> = HashMap::new();
+        for (cfg, fid) in reqs {
+            let key = format!("{}@{fid:.4}", cfg.key());
+            if let Some(&u) = self.cache.get(&key) {
+                slots.push(Slot::Cached(u));
+            } else if let Some(&i) = scheduled.get(&key) {
+                // duplicate within the batch: serial processing would
+                // hit the cache the second time around
+                slots.push(Slot::Fresh(i));
+            } else if fresh.len() < remaining {
+                scheduled.insert(key.clone(), fresh.len());
+                slots.push(Slot::Fresh(fresh.len()));
+                fresh.push((key, cfg.clone(), *fid));
+            } else {
+                break; // budget exhausted: truncate the batch
+            }
+        }
+
+        let ex = self.executor;
+        let shared: &PipelineEvaluator = self;
+        let mut outs: Vec<Option<(f64, Result<f64>)>> = ex
+            .run(&fresh, |(_, cfg, fid)| {
+                let t0 = Instant::now();
+                let res = shared.eval_inner(cfg, *fid);
+                (t0.elapsed().as_secs_f64(), res)
+            })
+            .into_iter()
+            .map(Some)
+            .collect();
+
+        let mut done: Vec<Option<f64>> = vec![None; fresh.len()];
+        let mut out = Vec::with_capacity(slots.len());
+        for (slot, (cfg, fid)) in slots.iter().zip(reqs) {
+            let u = match slot {
+                Slot::Cached(u) => *u,
+                Slot::Fresh(i) => match done[*i] {
+                    Some(u) => u,
+                    None => {
+                        let (elapsed, res) = outs[*i]
+                            .take()
+                            .expect("fresh result consumed twice");
+                        let u = self.commit(fresh[*i].0.clone(), cfg,
+                                            *fid, res, elapsed);
+                        done[*i] = Some(u);
+                        u
+                    }
+                },
+            };
+            out.push(u);
+        }
+        Ok(out)
     }
 
     fn exhausted(&self) -> bool {
@@ -370,6 +484,99 @@ mod tests {
         let acc = Metric::BalancedAccuracy
             .utility(&ev.y_test(), &preds);
         assert!(acc > 0.8, "test acc {acc}");
+    }
+
+    #[test]
+    fn evaluator_is_sync_for_worker_sharing() {
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<PipelineEvaluator<'static>>();
+    }
+
+    #[test]
+    fn batch_matches_serial_evaluation_bitwise() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let mut rng = Rng::new(21);
+        let cfgs: Vec<Config> =
+            (0..6).map(|_| space.sample(&mut rng)).collect();
+        let reqs: Vec<(Config, f64)> =
+            cfgs.iter().map(|c| (c.clone(), 1.0)).collect();
+
+        let split_a = Split::stratified(&ds, &mut Rng::new(22));
+        let mut serial = PipelineEvaluator::new(&ds, split_a,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 23);
+        let serial_us: Vec<f64> = cfgs
+            .iter()
+            .map(|c| serial.evaluate(c, 1.0).unwrap())
+            .collect();
+
+        let split_b = Split::stratified(&ds, &mut Rng::new(22));
+        let mut par = PipelineEvaluator::new(&ds, split_b,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 23)
+            .with_workers(3);
+        let par_us = par.evaluate_batch(&reqs).unwrap();
+
+        assert_eq!(serial_us.len(), par_us.len());
+        for (a, b) in serial_us.iter().zip(&par_us) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(serial.n_evals(), par.n_evals());
+        assert_eq!(serial.best.as_ref().unwrap().1,
+                   par.best.as_ref().unwrap().1);
+        // record streams agree config-by-config
+        for (ra, rb) in serial.records.iter().zip(&par.records) {
+            assert_eq!(ra.config, rb.config);
+            assert_eq!(ra.utility.to_bits(), rb.utility.to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_truncates_exactly_at_eval_budget() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(31));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 32)
+            .with_budget(4, f64::INFINITY)
+            .with_workers(2);
+        let mut rng = Rng::new(33);
+        let reqs: Vec<(Config, f64)> =
+            (0..7).map(|_| (space.sample(&mut rng), 1.0)).collect();
+        let us = ev.evaluate_batch(&reqs).unwrap();
+        assert_eq!(us.len(), 4, "prefix cut to the remaining budget");
+        assert_eq!(ev.n_evals(), 4);
+        assert!(ev.exhausted());
+        // a follow-up batch gets nothing
+        let more = ev.evaluate_batch(&reqs).unwrap();
+        assert!(more.len() <= reqs.len());
+        assert_eq!(ev.n_evals(), 4, "no evaluation beyond the budget");
+    }
+
+    #[test]
+    fn batch_reuses_cache_and_in_batch_duplicates() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(41));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 42)
+            .with_workers(2);
+        let a = space.default_config();
+        let b = space.sample(&mut Rng::new(43));
+        // duplicate of `a` inside one batch: evaluated once
+        let us = ev.evaluate_batch(&[(a.clone(), 1.0),
+                                     (b.clone(), 1.0),
+                                     (a.clone(), 1.0)]).unwrap();
+        assert_eq!(us.len(), 3);
+        assert_eq!(us[0].to_bits(), us[2].to_bits());
+        assert_eq!(ev.n_evals(), 2, "duplicate must not re-evaluate");
+        // second batch over the same configs: all cache hits
+        let us2 = ev.evaluate_batch(&[(a, 1.0), (b, 1.0)]).unwrap();
+        assert_eq!(us2[0].to_bits(), us[0].to_bits());
+        assert_eq!(us2[1].to_bits(), us[1].to_bits());
+        assert_eq!(ev.n_evals(), 2, "cache hits consume no budget");
     }
 
     #[test]

@@ -30,12 +30,17 @@ SUBCOMMANDS
   run             --dataset <name> [--system volcanoml|ausk|tpot|...]
                   [--plan J|C|A|AC|CA] [--scale small|medium|large]
                   [--evals N] [--budget SECS] [--metric NAME]
-                  [--corpus PATH] [--seed N] [--no-pjrt]
-  plans           --dataset <name> [--evals N] — compare J/C/A/AC/CA
+                  [--corpus PATH] [--seed N] [--workers N] [--no-pjrt]
+  plans           --dataset <name> [--evals N] [--workers N]
+                  — compare J/C/A/AC/CA
   datasets        list the registry (name, task, n, d)
   artifacts       show compiled PJRT artifacts
   collect-corpus  --out PATH [--n-cls N] [--n-reg N] [--evals N]
+                  [--workers N]
   help            this message
+
+  --workers N evaluates each candidate batch on N threads; the search
+  trajectory is unchanged for a fixed batch size (see rust/README.md).
 ";
 
 fn main() {
@@ -90,6 +95,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         metric,
         max_evals: args.usize_or("evals", 60)?,
         budget_secs: args.f64_or("budget", f64::INFINITY)?,
+        workers: args.usize_or("workers", 1)?.max(1),
         seed: args.u64_or("seed", 42)?,
     };
     let corpus = match args.str_opt("corpus") {
@@ -142,6 +148,7 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
     let ds = dataset_from(args)?;
     let evals = args.usize_or("evals", 40)?;
     let seed = args.u64_or("seed", 42)?;
+    let workers = args.usize_or("workers", 1)?.max(1);
     let runtime = open_runtime(args);
     args.finish()?;
     let metric = if ds.task.is_classification() {
@@ -157,6 +164,7 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
             plan: kind,
             metric,
             max_evals: evals,
+            workers,
             seed,
             ..Default::default()
         };
@@ -221,6 +229,7 @@ fn cmd_collect(args: &Args) -> anyhow::Result<()> {
     let n_reg = args.usize_or("n-reg", 8)?;
     let evals = args.usize_or("evals", 40)?;
     let seed = args.u64_or("seed", 7)?;
+    let workers = args.usize_or("workers", 1)?.max(1);
     let runtime = open_runtime(args);
     args.finish()?;
 
@@ -238,6 +247,7 @@ fn cmd_collect(args: &Args) -> anyhow::Result<()> {
             metric,
             max_evals: evals,
             budget_secs: f64::INFINITY,
+            workers,
             seed: seed + i as u64,
         };
         let t0 = std::time::Instant::now();

@@ -12,6 +12,16 @@ use crate::util::rng::Rng;
 
 pub trait Optimizer {
     fn suggest(&mut self, rng: &mut Rng) -> Config;
+
+    /// Propose `k` configurations *without* intermediate observations
+    /// — the batched pull used by the parallel executor. The default
+    /// draws `k` sequential suggestions (exactly the serial behaviour
+    /// for `k == 1`); engines with a genuine batch strategy override
+    /// it (see [`SmacBo`]'s top-k expected-improvement batch).
+    fn suggest_batch(&mut self, rng: &mut Rng, k: usize) -> Vec<Config> {
+        (0..k).map(|_| self.suggest(rng)).collect()
+    }
+
     fn observe(&mut self, cfg: Config, y: f64);
     fn best(&self) -> Option<&(Config, f64)>;
     fn n_obs(&self) -> usize;
@@ -144,6 +154,64 @@ impl Optimizer for SmacBo {
             }
         }
         best_cfg.unwrap_or_else(|| self.space.sample(rng))
+    }
+
+    /// Batch BO: refit once, score one shared candidate pool, and take
+    /// the top-`k` distinct configurations by expected improvement
+    /// (with SMAC's random interleaving preserved per slot). `k == 1`
+    /// delegates to [`SmacBo::suggest`] so the serial trajectory is
+    /// bit-identical to the one-at-a-time path.
+    fn suggest_batch(&mut self, rng: &mut Rng, k: usize) -> Vec<Config> {
+        if k <= 1 {
+            return (0..k).map(|_| self.suggest(rng)).collect();
+        }
+        if self.history.len() < self.n_init {
+            self.suggests += k;
+            return (0..k).map(|_| self.space.sample(rng)).collect();
+        }
+        self.refit();
+        let y_best = self.best().map(|(_, y)| *y).unwrap_or(0.0);
+        let mut candidates: Vec<Config> = (0..self.n_candidates)
+            .map(|_| self.space.sample(rng))
+            .collect();
+        let mut by_y: Vec<usize> = (0..self.history.len()).collect();
+        by_y.sort_by(|&a, &b| self.history[b].1
+            .partial_cmp(&self.history[a].1)
+            .unwrap_or(std::cmp::Ordering::Equal));
+        for &i in by_y.iter().take(5) {
+            for _ in 0..8 {
+                candidates.push(
+                    self.space.neighbor(&self.history[i].0, rng));
+            }
+        }
+        let mut scored: Vec<(f64, Config)> = candidates
+            .into_iter()
+            .map(|c| {
+                let f = self.space.to_features(&c);
+                let (m, v) = self.surrogate.predict(&f);
+                (expected_improvement(m, v, y_best), c)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal));
+        // drop repeated candidates wherever they rank (EI ties make
+        // adjacency-based dedup insufficient)
+        let mut seen = std::collections::HashSet::new();
+        let mut ranked = scored
+            .into_iter()
+            .filter(move |(_, c)| seen.insert(c.key()))
+            .map(|(_, c)| c);
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            self.suggests += 1;
+            if self.suggests % self.random_interleave == 0 {
+                out.push(self.space.sample(rng));
+            } else {
+                out.push(ranked.next()
+                    .unwrap_or_else(|| self.space.sample(rng)));
+            }
+        }
+        out
     }
 
     fn observe(&mut self, cfg: Config, y: f64) {
@@ -328,6 +396,59 @@ mod tests {
         assert!(ev.best().unwrap().1 >= first_gen_best);
         assert!(ev.best().unwrap().1 > -0.2,
                 "best={}", ev.best().unwrap().1);
+    }
+
+    #[test]
+    fn batch_of_one_matches_serial_suggest_exactly() {
+        // same seed, same observation stream: suggest_batch(rng, 1)
+        // must reproduce suggest(rng) bit-for-bit
+        let mut a = SmacBo::new(quad_space(), 9);
+        let mut b = SmacBo::new(quad_space(), 9);
+        let mut ra = Rng::new(11);
+        let mut rb = Rng::new(11);
+        for _ in 0..25 {
+            let ca = a.suggest(&mut ra);
+            let cb = b.suggest_batch(&mut rb, 1)
+                .into_iter().next().unwrap();
+            assert_eq!(ca, cb);
+            let y = utility(&ca);
+            a.observe(ca, y);
+            b.observe(cb, y);
+        }
+    }
+
+    #[test]
+    fn smac_batch_suggestions_are_distinct_and_valid() {
+        let mut bo = SmacBo::new(quad_space(), 6);
+        let mut rng = Rng::new(6);
+        // get past the init phase
+        for _ in 0..10 {
+            let cfg = bo.suggest(&mut rng);
+            let y = utility(&cfg);
+            bo.observe(cfg, y);
+        }
+        let batch = bo.suggest_batch(&mut rng, 4);
+        assert_eq!(batch.len(), 4);
+        for cfg in &batch {
+            assert!(cfg.get("x").is_some() && cfg.get("y").is_some());
+        }
+        // top-k EI picks are deduplicated before slotting, so at most
+        // one duplicate (via the random-interleave slot) can appear
+        let mut dupes = 0;
+        for i in 0..batch.len() {
+            for j in i + 1..batch.len() {
+                if batch[i] == batch[j] {
+                    dupes += 1;
+                }
+            }
+        }
+        assert!(dupes <= 1, "{dupes} duplicate batch members");
+        let evo_batch = Evolutionary::new(quad_space())
+            .suggest_batch(&mut rng, 3);
+        assert_eq!(evo_batch.len(), 3);
+        let rs_batch = RandomSearch::new(quad_space())
+            .suggest_batch(&mut rng, 5);
+        assert_eq!(rs_batch.len(), 5);
     }
 
     #[test]

@@ -14,6 +14,18 @@ use crate::util::rng::Rng;
 /// Multi-fidelity optimizers suggest (config, fidelity) pairs.
 pub trait MfOptimizer {
     fn suggest(&mut self, rng: &mut Rng) -> (Config, f64);
+
+    /// Batched pull: `k` (config, fidelity) proposals without
+    /// intermediate observations. The Hyperband family is naturally
+    /// batch-friendly — rung queues hand out pending configurations
+    /// and tolerate deferred `observe`s (an incomplete rung simply
+    /// backfills fresh samples at the same fidelity) — so the default
+    /// sequential draw is the real implementation.
+    fn suggest_batch(&mut self, rng: &mut Rng, k: usize)
+        -> Vec<(Config, f64)> {
+        (0..k).map(|_| self.suggest(rng)).collect()
+    }
+
     fn observe(&mut self, cfg: Config, fidelity: f64, y: f64);
     /// Best observation at the highest fidelity seen so far.
     fn best(&self) -> Option<&(Config, f64)>;

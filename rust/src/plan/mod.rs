@@ -442,7 +442,7 @@ mod tests {
                                            42 + kind as u64);
             let mut plan = ExecutionPlan::new(builder.build(kind));
             {
-                let mut env = Env { obj: &mut obj, rng: &mut rng };
+                let mut env = Env::new(&mut obj, &mut rng);
                 plan.run(&mut env).unwrap();
             }
             let (cfg, y) = plan.best()
@@ -477,7 +477,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(3);
         let mut plan = ExecutionPlan::new(j);
         {
-            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            let mut env = Env::new(&mut obj, &mut rng);
             plan.run(&mut env).unwrap();
         }
         let (cfg, _) = plan.best().unwrap();
@@ -495,7 +495,7 @@ mod tests {
             let mut obj = Synth { evals: 0, cap: 80 };
             let mut rng = crate::util::rng::Rng::new(5);
             {
-                let mut env = Env { obj: &mut obj, rng: &mut rng };
+                let mut env = Env::new(&mut obj, &mut rng);
                 plan.run(&mut env).unwrap();
             }
             assert!(plan.best().is_some(), "{engine:?}");

@@ -32,22 +32,40 @@ pub fn run_progressive(builder: &PlanBuilder, env: &mut Env,
     };
 
     // ---- phase 1: try each algorithm at defaults -------------------
+    // every arm's default config is independent, so they fan out
+    // across the worker pool in `Env::batch`-sized chunks (a batch of
+    // 1 reproduces the original per-algorithm serial loop, including
+    // its between-algorithm budget checks)
     let fe_default = builder.fe_space().default_config();
     let mut best_algo: Option<(String, f64)> = None;
-    for algo in builder.algo_values() {
-        if env.obj.exhausted() {
-            break;
+    let algos = builder.algo_values();
+    let mut idx = 0;
+    while idx < algos.len() && !env.obj.exhausted() {
+        let k = env.batch.max(1).min(algos.len() - idx);
+        let chunk = &algos[idx..idx + k];
+        let reqs: Vec<(Config, f64)> = chunk
+            .iter()
+            .map(|algo| {
+                let hp_default = builder.hp_space(algo).default_config();
+                let cfg = Config::new()
+                    .with("algorithm", Value::C(algo.clone()))
+                    .merged(&hp_default)
+                    .merged(&fe_default);
+                (cfg, 1.0)
+            })
+            .collect();
+        let ys = env.obj.evaluate_batch(&reqs)?;
+        let n = ys.len();
+        for ((algo, (cfg, _)), y) in chunk.iter().zip(reqs).zip(ys) {
+            track(cfg, y, &mut history);
+            if best_algo.as_ref().map(|(_, b)| y > *b).unwrap_or(true) {
+                best_algo = Some((algo.clone(), y));
+            }
         }
-        let hp_default = builder.hp_space(&algo).default_config();
-        let cfg = Config::new()
-            .with("algorithm", Value::C(algo.clone()))
-            .merged(&hp_default)
-            .merged(&fe_default);
-        let y = env.obj.evaluate(&cfg, 1.0)?;
-        track(cfg, y, &mut history);
-        if best_algo.as_ref().map(|(_, b)| y > *b).unwrap_or(true) {
-            best_algo = Some((algo, y));
+        if n < k {
+            break; // budget exhausted mid-chunk
         }
+        idx += k;
     }
     let Some((algo, _)) = best_algo.clone() else {
         return Ok(ProgressiveResult {
@@ -64,16 +82,8 @@ pub fn run_progressive(builder: &PlanBuilder, env: &mut Env,
     let mut best_fe = fe_default.clone();
     {
         let mut bo = SmacBo::new(builder.fe_space(), builder.seed ^ 0xFE);
-        for _ in 0..fe_phase_evals {
-            if env.obj.exhausted() {
-                break;
-            }
-            let sub = bo.suggest(env.rng);
-            let full = fixed_algo.merged(&sub);
-            let y = env.obj.evaluate(&full, 1.0)?;
-            bo.observe(sub, y);
-            track(full, y, &mut history);
-        }
+        run_bo_phase(&mut bo, &fixed_algo, fe_phase_evals, env,
+                     &mut history)?;
         if let Some((cfg, _)) = bo.best() {
             best_fe = cfg.clone();
         }
@@ -86,16 +96,8 @@ pub fn run_progressive(builder: &PlanBuilder, env: &mut Env,
             .with("algorithm", Value::C(algo.clone()))
             .merged(&best_fe);
         let mut bo = SmacBo::new(hp_space, builder.seed ^ 0x4B);
-        for _ in 0..hp_phase_evals {
-            if env.obj.exhausted() {
-                break;
-            }
-            let sub = bo.suggest(env.rng);
-            let full = fixed.merged(&sub);
-            let y = env.obj.evaluate(&full, 1.0)?;
-            bo.observe(sub, y);
-            track(full, y, &mut history);
-        }
+        run_bo_phase(&mut bo, &fixed, hp_phase_evals, env,
+                     &mut history)?;
     }
 
     let best = history
@@ -104,6 +106,36 @@ pub fn run_progressive(builder: &PlanBuilder, env: &mut Env,
         .max_by(|a, b| a.1.partial_cmp(&b.1)
             .unwrap_or(std::cmp::Ordering::Equal));
     Ok(ProgressiveResult { best, chosen_algorithm: Some(algo), history })
+}
+
+/// One batched BO phase of the progressive strategy: propose
+/// `Env::batch`-sized chunks (clamped to the phase budget) until the
+/// phase or the global objective budget is exhausted. With a batch of
+/// 1 this reproduces the original one-suggestion-per-step loop.
+fn run_bo_phase(bo: &mut SmacBo, fixed: &Config, phase_evals: usize,
+                env: &mut Env, history: &mut Vec<(Config, f64)>)
+    -> Result<()> {
+    let mut done = 0;
+    while done < phase_evals && !env.obj.exhausted() {
+        let k = env.batch.max(1).min(phase_evals - done);
+        let subs = bo.suggest_batch(env.rng, k);
+        let reqs: Vec<(Config, f64)> = subs
+            .iter()
+            .map(|s| (fixed.merged(s), 1.0))
+            .collect();
+        let ys = env.obj.evaluate_batch(&reqs)?;
+        let n = ys.len();
+        for ((sub, (full, _)), y) in
+            subs.into_iter().zip(reqs).zip(ys) {
+            bo.observe(sub, y);
+            history.push((full, y));
+        }
+        if n == 0 {
+            break; // budget exhausted mid-batch
+        }
+        done += n;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -145,7 +177,7 @@ mod tests {
         let builder = PlanBuilder::new(&sp, EngineKind::Bo, 7);
         let mut obj = Synth { evals: 0, cap: 120 };
         let mut rng = Rng::new(7);
-        let mut env = Env { obj: &mut obj, rng: &mut rng };
+        let mut env = Env::new(&mut obj, &mut rng);
         let res = run_progressive(&builder, &mut env, 40, 40).unwrap();
         assert_eq!(res.chosen_algorithm.as_deref(), Some("tree"));
         let (cfg, y) = res.best.unwrap();
@@ -161,7 +193,7 @@ mod tests {
         let builder = PlanBuilder::new(&sp, EngineKind::Bo, 8);
         let mut obj = Synth { evals: 0, cap: 10 };
         let mut rng = Rng::new(8);
-        let mut env = Env { obj: &mut obj, rng: &mut rng };
+        let mut env = Env::new(&mut obj, &mut rng);
         let res = run_progressive(&builder, &mut env, 40, 40).unwrap();
         assert!(res.history.len() <= 10);
     }

@@ -5,18 +5,30 @@
 //! 0.5 emits 64-bit instruction ids which xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
 //!
-//! One `PjRtLoadedExecutable` per artifact, compiled lazily on first
-//! use and cached for the lifetime of the runtime — Python never runs
-//! at search time.
+//! Thread-safety: the runtime is shared immutably across the
+//! `runtime::executor` worker pool, so it holds no interior `Rc`s —
+//! execution telemetry sits behind a `Mutex`, and compiled
+//! `PjRtLoadedExecutable`s (which are not `Sync`) live in *per-thread*
+//! caches: each worker compiles an artifact once on first use and
+//! reuses its own instance for the lifetime of the thread. Python
+//! never runs at search time.
+//!
+//! The `xla` crate (and its native XLA libraries) is only present in
+//! artifact-enabled deployments, so everything touching it is gated
+//! behind the `pjrt` cargo feature. Without the feature,
+//! [`Runtime::new`] returns an error and every caller degrades to the
+//! native algorithm roster — the documented PJRT-skip path.
 
-use std::cell::RefCell;
+pub mod executor;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
 
 /// Canonical shape constants exported by the AOT manifest. Mirrors
 /// `python/compile/shapes.py`.
@@ -48,6 +60,7 @@ pub enum Input {
 }
 
 impl Input {
+    #[cfg(feature = "pjrt")]
     fn shape(&self) -> &[usize] {
         match self {
             Input::F32(_, s) | Input::I32(_, s) => s,
@@ -63,17 +76,43 @@ pub struct Output {
 }
 
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     constants: Constants,
     artifacts: HashMap<String, ArtifactInfo>,
-    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     art_dir: PathBuf,
     /// Telemetry: (#executions, total execute seconds) per artifact.
-    stats: RefCell<HashMap<String, (u64, f64)>>,
+    stats: Mutex<HashMap<String, (u64, f64)>>,
+}
+
+#[cfg(feature = "pjrt")]
+thread_local! {
+    /// Per-thread compiled-executable cache, keyed by
+    /// `<artifact dir>::<artifact name>`. PJRT loaded executables are
+    /// not `Sync`; one compilation per (thread, artifact) keeps the
+    /// hot path lock-free.
+    static EXECS: std::cell::RefCell<
+        HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>
+        = std::cell::RefCell::new(HashMap::new());
 }
 
 impl Runtime {
+    #[cfg(not(feature = "pjrt"))]
     pub fn new(art_dir: &Path) -> Result<Runtime> {
+        bail!(
+            "PJRT runtime support is not compiled in (artifact dir: \
+             {}): rebuild with `--features pjrt` and supply the `xla` \
+             crate (see rust/README.md); falling back to the native \
+             algorithm roster",
+            art_dir.display()
+        );
+    }
+
+    #[cfg(feature = "pjrt")]
+    pub fn new(art_dir: &Path) -> Result<Runtime> {
+        use crate::util::json::Json;
+
         let manifest_path = art_dir.join("manifest.json");
         let man = Json::parse_file(&manifest_path).with_context(|| {
             format!("reading {} (run `make artifacts` first)",
@@ -154,9 +193,8 @@ impl Runtime {
             client,
             constants,
             artifacts,
-            execs: RefCell::new(HashMap::new()),
             art_dir: art_dir.to_path_buf(),
-            stats: RefCell::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
         })
     }
 
@@ -186,10 +224,13 @@ impl Runtime {
         self.artifacts.get(name)
     }
 
+    #[cfg(feature = "pjrt")]
     fn executable(&self, name: &str)
-        -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.execs.borrow().get(name) {
-            return Ok(e.clone());
+        -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let cache_key = format!("{}::{name}", self.art_dir.display());
+        let hit = EXECS.with(|c| c.borrow().get(&cache_key).cloned());
+        if let Some(e) = hit {
+            return Ok(e);
         }
         let info = self
             .artifacts
@@ -206,12 +247,23 @@ impl Runtime {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let rc = Rc::new(exe);
-        self.execs.borrow_mut().insert(name.to_string(), rc.clone());
+        let rc = std::rc::Rc::new(exe);
+        EXECS.with(|c| {
+            c.borrow_mut().insert(cache_key, rc.clone());
+        });
         Ok(rc)
     }
 
     /// Execute an artifact; returns the decomposed output tuple.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(&self, name: &str, _inputs: &[Input])
+        -> Result<Vec<Output>> {
+        bail!("cannot execute artifact {name}: built without the \
+               `pjrt` feature")
+    }
+
+    /// Execute an artifact; returns the decomposed output tuple.
+    #[cfg(feature = "pjrt")]
     pub fn execute(&self, name: &str, inputs: &[Input])
         -> Result<Vec<Output>> {
         let info = self
@@ -266,7 +318,10 @@ impl Runtime {
             .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
         let dt = t0.elapsed().as_secs_f64();
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = match self.stats.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
             let e = st.entry(name.to_string()).or_insert((0, 0.0));
             e.0 += 1;
             e.1 += dt;
@@ -287,9 +342,11 @@ impl Runtime {
 
     /// (#executions, total seconds) per artifact, for §Perf telemetry.
     pub fn exec_stats(&self) -> Vec<(String, u64, f64)> {
-        let mut v: Vec<(String, u64, f64)> = self
-            .stats
-            .borrow()
+        let st = match self.stats.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let mut v: Vec<(String, u64, f64)> = st
             .iter()
             .map(|(k, (n, s))| (k.clone(), *n, *s))
             .collect();
@@ -308,7 +365,28 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return None;
         }
-        Some(Runtime::new(&dir).expect("runtime"))
+        // built without the pjrt feature this errors; skip then too
+        Runtime::new(&dir).ok()
+    }
+
+    #[test]
+    fn runtime_is_send_and_sync() {
+        #[allow(dead_code)]
+        fn assert_send_sync<T: Send + Sync>() {}
+        // with the pjrt feature the bound depends on the xla client;
+        // the stub build must always be shareable across workers
+        #[cfg(not(feature = "pjrt"))]
+        assert_send_sync::<Runtime>();
+    }
+
+    #[test]
+    fn missing_artifacts_error_gracefully() {
+        // the PJRT-skip path: construction must return Err (so callers
+        // degrade to the native roster), never panic
+        let bad = std::env::temp_dir().join("volcano-no-artifacts");
+        let _ = std::fs::create_dir_all(&bad);
+        assert!(Runtime::new(&bad).is_err());
+        assert!(Runtime::new(Path::new("/nonexistent/nowhere")).is_err());
     }
 
     #[test]

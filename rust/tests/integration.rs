@@ -19,7 +19,8 @@ fn runtime() -> Option<Runtime> {
         eprintln!("skipping PJRT portions: artifacts not built");
         return None;
     }
-    Some(Runtime::new(&dir).expect("runtime"))
+    // also skips when built without the `pjrt` feature
+    Runtime::new(&dir).ok()
 }
 
 fn blob_ds(seed: u64, n: usize) -> volcanoml::data::Dataset {
@@ -70,6 +71,7 @@ fn registry_dataset_end_to_end_quake() {
         metric: Metric::BalancedAccuracy,
         max_evals: 20,
         budget_secs: f64::INFINITY,
+        workers: 1,
         seed: 3,
     };
     let out = run_system(SystemKind::VolcanoMLMinus, &ds, &spec, None,
@@ -203,6 +205,7 @@ fn regression_system_comparison_smoke() {
         metric: Metric::Mse,
         max_evals: 15,
         budget_secs: f64::INFINITY,
+        workers: 1,
         seed: 2,
     };
     for sys in [SystemKind::VolcanoMLMinus, SystemKind::Tpot] {

@@ -1,0 +1,147 @@
+//! Parallel-executor equivalence tests: for every execution plan, a
+//! search with `workers = 1` and one with `workers = 4` (same seed,
+//! same batch size) must produce the *identical* outcome — the worker
+//! pool only changes wall-clock time, never the trajectory — and the
+//! evaluation budget must be spent exactly.
+//!
+//! Batch size is the knob that changes semantics (batch BO proposes k
+//! candidates before observing any of them), which is why every
+//! comparison below pins `eval_batch` while varying `workers`.
+
+use volcanoml::coordinator::automl::{RunOutcome, VolcanoConfig,
+                                     VolcanoML};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::Task;
+use volcanoml::ensemble::EnsembleMethod;
+use volcanoml::plan::PlanKind;
+
+fn blob_ds(seed: u64) -> volcanoml::data::Dataset {
+    generate(&Profile {
+        name: format!("pareq-{seed}"),
+        task: Task::Classification { n_classes: 2 },
+        gen: GenKind::Blobs { sep: 1.7 },
+        n: 240,
+        d: 6,
+        noise: 0.05,
+        imbalance: 1.2,
+        redundant: 1,
+        wild_scales: false,
+        seed,
+    })
+}
+
+fn run_plan(ds: &volcanoml::data::Dataset, plan: PlanKind,
+            workers: usize, batch: usize, evals: usize) -> RunOutcome {
+    let cfg = VolcanoConfig {
+        plan,
+        scale: SpaceScale::Medium,
+        max_evals: evals,
+        ensemble: EnsembleMethod::None,
+        workers,
+        eval_batch: batch,
+        seed: 1234,
+        ..Default::default()
+    };
+    VolcanoML::new(cfg).run(ds, None).unwrap()
+}
+
+#[test]
+fn every_plan_is_worker_count_invariant() {
+    let ds = blob_ds(1);
+    for plan in PlanKind::all() {
+        let serial = run_plan(&ds, plan, 1, 4, 24);
+        let parallel = run_plan(&ds, plan, 4, 4, 24);
+        assert_eq!(serial.best_valid_utility.to_bits(),
+                   parallel.best_valid_utility.to_bits(),
+                   "{}: incumbent diverged ({} vs {})", plan.name(),
+                   serial.best_valid_utility,
+                   parallel.best_valid_utility);
+        assert_eq!(serial.best_config, parallel.best_config,
+                   "{}: best config diverged", plan.name());
+        assert_eq!(serial.n_evals, parallel.n_evals,
+                   "{}: evaluation counts diverged", plan.name());
+    }
+}
+
+#[test]
+fn budget_is_spent_exactly_under_batching() {
+    let ds = blob_ds(2);
+    // 22 is deliberately not a multiple of the batch (4): the final
+    // batch must be truncated to land exactly on the budget
+    for plan in PlanKind::all() {
+        for workers in [1, 4] {
+            let out = run_plan(&ds, plan, workers, 4, 22);
+            assert_eq!(out.n_evals, 22,
+                       "{} workers={workers}: spent {} of 22 evals",
+                       plan.name(), out.n_evals);
+        }
+    }
+}
+
+#[test]
+fn serial_batch_of_one_is_deterministic() {
+    // workers=1, batch=1 is the pre-parallel serial path; two
+    // identical invocations must agree bit-for-bit (guards the
+    // refactor against hidden nondeterminism)
+    let ds = blob_ds(3);
+    let a = run_plan(&ds, PlanKind::CA, 1, 1, 20);
+    let b = run_plan(&ds, PlanKind::CA, 1, 1, 20);
+    assert_eq!(a.best_valid_utility.to_bits(),
+               b.best_valid_utility.to_bits());
+    assert_eq!(a.best_config, b.best_config);
+    assert_eq!(a.n_evals, b.n_evals);
+    assert_eq!(a.valid_curve.len(), b.valid_curve.len());
+}
+
+#[test]
+fn parallel_run_with_ensemble_still_matches() {
+    // the ensemble/refit pipeline sits downstream of the search; it
+    // must inherit the worker-count invariance
+    let ds = blob_ds(4);
+    let run = |workers: usize| {
+        let cfg = VolcanoConfig {
+            plan: PlanKind::CA,
+            scale: SpaceScale::Medium,
+            max_evals: 18,
+            ensemble: EnsembleMethod::Selection,
+            ensemble_size: 4,
+            top_per_algo: 2,
+            workers,
+            eval_batch: 3,
+            seed: 77,
+            ..Default::default()
+        };
+        VolcanoML::new(cfg).run(&ds, None).unwrap()
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.best_valid_utility.to_bits(),
+               b.best_valid_utility.to_bits());
+    assert_eq!(a.test_utility.to_bits(), b.test_utility.to_bits());
+    assert_eq!(a.ensemble_test_utility.to_bits(),
+               b.ensemble_test_utility.to_bits());
+}
+
+#[test]
+fn progressive_strategy_is_worker_count_invariant() {
+    let ds = blob_ds(5);
+    let run = |workers: usize| {
+        let cfg = VolcanoConfig {
+            scale: SpaceScale::Medium,
+            max_evals: 18,
+            ensemble: EnsembleMethod::None,
+            progressive: true,
+            workers,
+            eval_batch: 3,
+            seed: 9,
+            ..Default::default()
+        };
+        VolcanoML::new(cfg).run(&ds, None).unwrap()
+    };
+    let a = run(1);
+    let b = run(3);
+    assert_eq!(a.best_valid_utility.to_bits(),
+               b.best_valid_utility.to_bits());
+    assert_eq!(a.n_evals, b.n_evals);
+}

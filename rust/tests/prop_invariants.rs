@@ -135,7 +135,7 @@ fn prop_conditioning_block_never_loses_the_best_arm() {
         };
         let mut rng = Rng::new(g.seed);
         while !obj.exhausted() {
-            let mut env = Env { obj: &mut obj, rng: &mut rng };
+            let mut env = Env::new(&mut obj, &mut rng);
             cond.do_next(&mut env).map_err(|e| e.to_string())?;
         }
         let active = cond.active_values();
@@ -198,6 +198,118 @@ fn prop_evaluator_budget_and_cache_routing() {
         }
         if ev.n_evals() != before {
             return Err("cache hits consumed budget".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_do_next_never_exceeds_budget() {
+    // budget-accounting invariant for batched pulls: for random plans,
+    // batch sizes and worker counts, the evaluator never records more
+    // evaluations than its cap — and a full run lands exactly on it
+    check("batched-budget-exact", 6, |g| {
+        use volcanoml::plan::{EngineKind, ExecutionPlan, PlanBuilder,
+                              PlanKind};
+        let ds = generate(&Profile {
+            name: format!("pbatch-{}", g.seed),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 2.0 },
+            n: 160,
+            d: 4,
+            noise: 0.05,
+            imbalance: 1.0,
+            redundant: 0,
+            wild_scales: false,
+            seed: g.seed,
+        });
+        let pipeline = pipeline_for(SpaceScale::Small, false, false);
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut g.rng);
+        let cap = g.usize_in(5, 11);
+        let batch = g.usize_in(1, 5);
+        let workers = g.usize_in(1, 4);
+        let plan_kind = *g.choice(&PlanKind::all());
+        let mut ev = PipelineEvaluator::new(
+            &ds, split, Metric::BalancedAccuracy, &pipeline, &algos,
+            None, g.seed)
+            .with_budget(cap, f64::INFINITY)
+            .with_workers(workers);
+        let builder = PlanBuilder::new(&space, EngineKind::Bo, g.seed);
+        let mut plan = ExecutionPlan::new(builder.build(plan_kind));
+        let mut rng = Rng::new(g.seed ^ 0xBA7C);
+        {
+            let mut env = Env::with_batch(&mut ev, &mut rng, batch);
+            plan.run(&mut env).map_err(|e| e.to_string())?;
+        }
+        if ev.n_evals() > cap {
+            return Err(format!(
+                "{} batch={batch} workers={workers}: {} evals > cap \
+                 {cap}", plan_kind.name(), ev.n_evals()));
+        }
+        if ev.n_evals() < cap {
+            return Err(format!(
+                "{} batch={batch} workers={workers}: run ended at {} \
+                 of {cap} evals", plan_kind.name(), ev.n_evals()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_reward_updates_are_order_independent() {
+    // within a batch, observations commit in proposal order no matter
+    // how the pool schedules the work: the full record stream (and so
+    // every alternating/conditioning reward update downstream of it)
+    // is identical across worker counts
+    check("batch-order-independent", 5, |g| {
+        use volcanoml::plan::{EngineKind, ExecutionPlan, PlanBuilder,
+                              PlanKind};
+        let ds = generate(&Profile {
+            name: format!("porder-{}", g.seed),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 1.8 },
+            n: 160,
+            d: 4,
+            noise: 0.05,
+            imbalance: 1.0,
+            redundant: 0,
+            wild_scales: false,
+            seed: g.seed,
+        });
+        let pipeline = pipeline_for(SpaceScale::Small, false, false);
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let batch = g.usize_in(2, 4);
+        let cap = g.usize_in(8, 12);
+        let mut streams: Vec<Vec<(String, u64)>> = Vec::new();
+        for workers in [1usize, 3] {
+            let split = Split::stratified(&ds, &mut Rng::new(g.seed));
+            let mut ev = PipelineEvaluator::new(
+                &ds, split, Metric::BalancedAccuracy, &pipeline,
+                &algos, None, g.seed)
+                .with_budget(cap, f64::INFINITY)
+                .with_workers(workers);
+            // CA exercises conditioning + alternating reward updates
+            let builder =
+                PlanBuilder::new(&space, EngineKind::Bo, g.seed);
+            let mut plan =
+                ExecutionPlan::new(builder.build(PlanKind::CA));
+            let mut rng = Rng::new(g.seed ^ 0x0DD);
+            {
+                let mut env = Env::with_batch(&mut ev, &mut rng, batch);
+                plan.run(&mut env).map_err(|e| e.to_string())?;
+            }
+            streams.push(ev.records.iter()
+                .map(|r| (r.config.key(), r.utility.to_bits()))
+                .collect());
+        }
+        if streams[0] != streams[1] {
+            return Err(format!(
+                "record streams diverged across worker counts \
+                 (batch={batch}): {} vs {} records",
+                streams[0].len(), streams[1].len()));
         }
         Ok(())
     });

@@ -1,0 +1,89 @@
+//! Unit-test backfill: round-trips for the CLI-facing enum parsers
+//! and the PJRT-skip regression (missing artifacts must degrade
+//! gracefully in both serial and parallel modes, never panic).
+
+use std::path::Path;
+
+use volcanoml::coordinator::automl::{VolcanoConfig, VolcanoML};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::Task;
+use volcanoml::plan::PlanKind;
+use volcanoml::runtime::Runtime;
+
+#[test]
+fn plan_kind_name_parse_roundtrip() {
+    for kind in PlanKind::all() {
+        assert_eq!(PlanKind::parse(kind.name()), Some(kind),
+                   "{} must round-trip", kind.name());
+        // parsing is case-insensitive
+        assert_eq!(PlanKind::parse(&kind.name().to_ascii_lowercase()),
+                   Some(kind));
+    }
+    // positional aliases map onto the same five plans
+    for (alias, kind) in [("plan1", PlanKind::J), ("1", PlanKind::J),
+                          ("plan2", PlanKind::C), ("plan3", PlanKind::A),
+                          ("plan4", PlanKind::AC),
+                          ("plan5", PlanKind::CA), ("5", PlanKind::CA)] {
+        assert_eq!(PlanKind::parse(alias), Some(kind), "{alias}");
+    }
+    assert_eq!(PlanKind::parse(""), None);
+    assert_eq!(PlanKind::parse("CAA"), None);
+    assert_eq!(PlanKind::parse("plan6"), None);
+}
+
+#[test]
+fn space_scale_name_parse_roundtrip() {
+    for scale in [SpaceScale::Small, SpaceScale::Medium,
+                  SpaceScale::Large] {
+        assert_eq!(SpaceScale::parse(scale.name()), Some(scale),
+                   "{} must round-trip", scale.name());
+    }
+    assert_eq!(SpaceScale::parse("SMALL"), None,
+               "scale parsing is exact-case by contract");
+    assert_eq!(SpaceScale::parse("huge"), None);
+    assert_eq!(SpaceScale::parse(""), None);
+}
+
+#[test]
+fn missing_manifest_never_panics() {
+    // regression for the PJRT-skip path: Runtime construction against
+    // a directory without manifest.json returns Err (callers fall
+    // back to the native roster); it must not panic
+    let tmp = std::env::temp_dir().join("volcanoml-backfill-empty");
+    let _ = std::fs::create_dir_all(&tmp);
+    assert!(Runtime::new(&tmp).is_err());
+    assert!(Runtime::new(Path::new("/definitely/not/here")).is_err());
+}
+
+#[test]
+fn search_degrades_gracefully_without_pjrt() {
+    // with no runtime the roster drops the PJRT arms; the search must
+    // still produce a valid incumbent in serial AND parallel mode
+    let ds = generate(&Profile {
+        name: "backfill-blobs".into(),
+        task: Task::Classification { n_classes: 2 },
+        gen: GenKind::Blobs { sep: 2.0 },
+        n: 200,
+        d: 5,
+        noise: 0.05,
+        imbalance: 1.0,
+        redundant: 0,
+        wild_scales: false,
+        seed: 11,
+    });
+    for workers in [1, 3] {
+        let cfg = VolcanoConfig {
+            scale: SpaceScale::Medium,
+            max_evals: 10,
+            workers,
+            seed: 5,
+            ..Default::default()
+        };
+        let out = VolcanoML::new(cfg).run(&ds, None)
+            .unwrap_or_else(|e| panic!("workers={workers}: {e}"));
+        assert!(out.best_config.is_some(), "workers={workers}");
+        assert!(out.test_utility > 0.5,
+                "workers={workers}: {}", out.test_utility);
+    }
+}
