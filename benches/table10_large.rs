@@ -52,6 +52,7 @@ fn main() {
                 max_evals: scale.evals,
                 budget_secs: f64::INFINITY,
                 workers: volcanoml::bench::bench_workers(),
+                super_batch: volcanoml::bench::bench_super_batch(),
                 seed: 43,
             };
             if let Ok(out) = run_system(sys, &ds, &spec, None,

@@ -28,6 +28,7 @@ fn main() {
             max_evals: scale.evals,
             budget_secs: f64::INFINITY,
             workers: volcanoml::bench::bench_workers(),
+            super_batch: volcanoml::bench::bench_super_batch(),
             seed: 42,
         };
         let ausk = run_system(SystemKind::AuskMinus, &ds, &spec, None,

@@ -70,6 +70,7 @@ fn main() {
                 max_evals: scale.evals,
                 budget_secs: f64::INFINITY,
                 workers,
+                super_batch: volcanoml::bench::bench_super_batch(),
                 seed: 42,
             };
             for sys in [SystemKind::Tpot, SystemKind::AuskMinus] {

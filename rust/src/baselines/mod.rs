@@ -92,6 +92,9 @@ pub struct BaseSpec {
     /// Worker threads for batched candidate evaluation (1 = serial);
     /// applies identically to every system so comparisons stay fair.
     pub workers: usize,
+    /// Cross-leaf super-batching (leaf pulls per `evaluate_batch`
+    /// submission in conditioning rounds): 1 = off, 0 = whole round.
+    pub super_batch: usize,
     pub seed: u64,
 }
 
@@ -103,6 +106,7 @@ impl BaseSpec {
             max_evals: self.max_evals,
             budget_secs: self.budget_secs,
             workers: self.workers.max(1),
+            super_batch: self.super_batch,
             seed: self.seed,
             ..Default::default()
         };
@@ -258,6 +262,7 @@ mod tests {
             max_evals: 18,
             budget_secs: f64::INFINITY,
             workers: 1,
+            super_batch: 1,
             seed: 5,
         }
     }

@@ -283,6 +283,26 @@ pub fn bench_workers() -> usize {
         .unwrap_or(1)
 }
 
+/// Cross-leaf super-batch size for bench / driver runs:
+/// `--super-batch N` (after `--`) or VOLCANO_SUPER_BATCH; defaults to
+/// 1 (off — every leaf pull is its own batch). 0 submits a whole
+/// conditioning round per `evaluate_batch` call. Like the leaf batch
+/// size this is a semantic knob, so paper-table trajectories shift
+/// when it is enabled (worker count alone still never changes them).
+pub fn bench_super_batch() -> usize {
+    let from_args = crate::cli::Args::from_env()
+        .ok()
+        .and_then(|a| a.usize_or("super-batch", usize::MAX).ok())
+        .filter(|&n| n != usize::MAX);
+    from_args
+        .or_else(|| {
+            std::env::var("VOLCANO_SUPER_BATCH")
+                .ok()
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(1)
+}
+
 /// Open the PJRT runtime if artifacts are built (bench targets degrade
 /// to the native roster otherwise, with a warning).
 pub fn try_runtime() -> Option<crate::runtime::Runtime> {
@@ -350,6 +370,7 @@ pub fn run_matrix(profiles: &[crate::data::synthetic::Profile],
             max_evals: evals,
             budget_secs: f64::INFINITY,
             workers: bench_workers(),
+            super_batch: bench_super_batch(),
             seed,
         };
         let mut urow = Vec::new();

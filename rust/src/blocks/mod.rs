@@ -17,6 +17,19 @@
 //! trajectory depends only on the batch size — never on the worker
 //! count. `batch == 1` reproduces the original one-candidate-per-pull
 //! Volcano semantics exactly.
+//!
+//! The pull itself is split into two halves — [`BuildingBlock::propose`]
+//! plans the requests without evaluating them, and
+//! [`BuildingBlock::observe`] commits the utilities — so a *parent*
+//! can lift batching above the leaf: with `Env::super_batch != 1` the
+//! conditioning block gathers proposals from several leaf pulls of one
+//! elimination round (up to `plays_per_round × active arms` of them)
+//! and submits them through a **single** `evaluate_batch` call,
+//! parallelising across arms instead of only within one leaf pull.
+//! Results are still committed back in proposal order, so worker
+//! count never changes the trajectory; the super-batch size (like the
+//! leaf batch size) is a semantic knob, and `super_batch == 1`
+//! (the default) reproduces the leaf-level batching exactly.
 
 use anyhow::Result;
 
@@ -45,8 +58,10 @@ pub trait Objective {
     fn evaluate_batch(&mut self, reqs: &[(Config, f64)])
         -> Result<Vec<f64>> {
         let mut out = Vec::with_capacity(reqs.len());
-        for (i, (cfg, fid)) in reqs.iter().enumerate() {
-            if i > 0 && self.exhausted() {
+        for (cfg, fid) in reqs.iter() {
+            // checked before *every* request (including the first):
+            // a batch of 1 at zero remaining budget evaluates nothing
+            if self.exhausted() {
                 break;
             }
             out.push(self.evaluate(cfg, *fid)?);
@@ -65,6 +80,15 @@ pub struct Env<'a> {
     /// leaf `do_next` evaluates exactly one configuration — the
     /// original strictly-serial Volcano semantics.
     pub batch: usize,
+    /// Cross-leaf super-batching: how many *leaf pulls* a conditioning
+    /// block coalesces into one `evaluate_batch` submission when
+    /// playing its round. `1` (the default) disables it — every leaf
+    /// pull is its own batch, the PR-1 leaf-level semantics. `0` means
+    /// the whole round (`plays_per_round × active arms` pulls) goes
+    /// out as a single super-batch; `n > 1` gathers chunks of `n`
+    /// pulls. Like `batch`, this is a semantic knob: proposals inside
+    /// one super-batch cannot see each other's results.
+    pub super_batch: usize,
 }
 
 impl<'a> Env<'a> {
@@ -75,7 +99,70 @@ impl<'a> Env<'a> {
 
     pub fn with_batch(obj: &'a mut dyn Objective, rng: &'a mut Rng,
                       batch: usize) -> Env<'a> {
-        Env { obj, rng, batch: batch.max(1) }
+        Env::with_super_batch(obj, rng, batch, 1)
+    }
+
+    pub fn with_super_batch(obj: &'a mut dyn Objective,
+                            rng: &'a mut Rng, batch: usize,
+                            super_batch: usize) -> Env<'a> {
+        Env { obj, rng, batch: batch.max(1), super_batch }
+    }
+}
+
+// ====================================================================
+// Split pulls: propose / observe
+// ====================================================================
+
+/// A planned-but-unevaluated pull: the (full config, fidelity)
+/// requests a block wants evaluated, plus the block-private
+/// bookkeeping needed to commit the results. Produced by
+/// [`BuildingBlock::propose`], consumed by [`BuildingBlock::observe`];
+/// the caller owns scheduling in between (typically concatenating
+/// several proposals into one [`Objective::evaluate_batch`] call).
+pub struct Proposal {
+    /// (full config, fidelity) requests, in proposal order.
+    pub reqs: Vec<(Config, f64)>,
+    payload: Payload,
+}
+
+enum Payload {
+    /// Nothing to commit.
+    Empty,
+    /// Single-fidelity joint engines: the subspace configs behind
+    /// `reqs` (same order).
+    Joint(Vec<Config>),
+    /// Multi-fidelity joint engine: subspace (config, fidelity) picks.
+    JointMf(Vec<(Config, f64)>),
+    /// Alternating block: which side proposed (and whether this was a
+    /// warmup half); the side's own payload rides along and is handed
+    /// back down with the shared `reqs`.
+    Alt { first: bool, warmup: bool, inner: Box<Payload> },
+}
+
+impl Proposal {
+    pub fn empty() -> Proposal {
+        Proposal { reqs: Vec::new(), payload: Payload::Empty }
+    }
+
+    fn joint(fixed: &Config, subs: Vec<Config>) -> Proposal {
+        let reqs = subs.iter().map(|s| (fixed.merged(s), 1.0)).collect();
+        Proposal { reqs, payload: Payload::Joint(subs) }
+    }
+
+    fn joint_mf(fixed: &Config, picks: Vec<(Config, f64)>) -> Proposal {
+        let reqs = picks
+            .iter()
+            .map(|(s, fid)| (fixed.merged(s), *fid))
+            .collect();
+        Proposal { reqs, payload: Payload::JointMf(picks) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
     }
 }
 
@@ -83,6 +170,25 @@ pub trait BuildingBlock {
     fn name(&self) -> String;
     /// One Volcano-style iteration (recursively invokes children).
     fn do_next(&mut self, env: &mut Env) -> Result<()>;
+    /// True when this block can split a pull into
+    /// [`propose`](Self::propose) / [`observe`](Self::observe) —
+    /// required for a parent to gather it into a cross-leaf
+    /// super-batch.
+    fn supports_propose(&self) -> bool {
+        false
+    }
+    /// First half of a split pull: plan up to `env.batch` candidate
+    /// requests *without* evaluating them. Implementations must not
+    /// touch `env.obj` (the parent owns scheduling), so the planned
+    /// requests depend only on the rng and block state.
+    fn propose(&mut self, _env: &mut Env) -> Result<Proposal> {
+        Ok(Proposal::empty())
+    }
+    /// Second half: commit the utilities of a **prefix** of the
+    /// proposal's requests (`ys` shorter than `prop.reqs` means the
+    /// evaluation budget ran out mid-batch; only the prefix is
+    /// observed, mirroring [`Objective::evaluate_batch`]).
+    fn observe(&mut self, _prop: Proposal, _ys: &[f64]) {}
     /// Best (full config, utility) observed in this subtree.
     fn current_best(&self) -> Option<(Config, f64)>;
     /// Expected-utility interval after `k` more iterations
@@ -173,66 +279,78 @@ impl BuildingBlock for JointBlock {
         if env.obj.exhausted() {
             return Ok(());
         }
+        // a leaf pull is propose -> evaluate -> observe; parents doing
+        // cross-leaf super-batching call the two halves directly and
+        // schedule the evaluation themselves
+        let prop = self.propose(env)?;
+        let ys = env.obj.evaluate_batch(&prop.reqs)?;
+        self.observe(prop, &ys);
+        Ok(())
+    }
+
+    fn supports_propose(&self) -> bool {
+        true
+    }
+
+    fn propose(&mut self, env: &mut Env) -> Result<Proposal> {
         let k = env.batch.max(1);
-        // (full config, utility, counts toward the best curve);
-        // observations are applied in proposal order after the batch
-        // returns, so reward updates are independent of how the
-        // objective scheduled the evaluations.
-        let mut recs: Vec<(Config, f64, bool)> = Vec::with_capacity(k);
-        match &mut self.engine {
+        Ok(match &mut self.engine {
             JointEngine::Bo(bo) => {
-                let subs = bo.suggest_batch(env.rng, k);
-                let reqs: Vec<(Config, f64)> = subs
-                    .iter()
-                    .map(|s| (self.fixed.merged(s), 1.0))
-                    .collect();
-                let ys = env.obj.evaluate_batch(&reqs)?;
-                for ((sub, (full, _)), y) in
+                Proposal::joint(&self.fixed, bo.suggest_batch(env.rng, k))
+            }
+            JointEngine::Random(rs) => {
+                Proposal::joint(&self.fixed, rs.suggest_batch(env.rng, k))
+            }
+            JointEngine::Evo(ev) => {
+                Proposal::joint(&self.fixed, ev.suggest_batch(env.rng, k))
+            }
+            JointEngine::Mf(mf) => {
+                Proposal::joint_mf(&self.fixed,
+                                   mf.suggest_batch(env.rng, k))
+            }
+        })
+    }
+
+    fn observe(&mut self, prop: Proposal, ys: &[f64]) {
+        let Proposal { reqs, payload } = prop;
+        // (full config, utility, counts toward the best curve);
+        // observations are applied in proposal order, so reward
+        // updates are independent of how the objective scheduled the
+        // evaluations. `ys` may be a prefix of the requests (budget
+        // exhaustion): the zips below observe exactly that prefix.
+        let mut recs: Vec<(Config, f64, bool)> =
+            Vec::with_capacity(ys.len());
+        match (payload, &mut self.engine) {
+            (Payload::Joint(subs), JointEngine::Bo(bo)) => {
+                for ((sub, (full, _)), &y) in
                     subs.into_iter().zip(reqs).zip(ys) {
                     bo.observe(sub, y);
                     recs.push((full, y, true));
                 }
             }
-            JointEngine::Random(rs) => {
-                let subs = rs.suggest_batch(env.rng, k);
-                let reqs: Vec<(Config, f64)> = subs
-                    .iter()
-                    .map(|s| (self.fixed.merged(s), 1.0))
-                    .collect();
-                let ys = env.obj.evaluate_batch(&reqs)?;
-                for ((sub, (full, _)), y) in
+            (Payload::Joint(subs), JointEngine::Random(rs)) => {
+                for ((sub, (full, _)), &y) in
                     subs.into_iter().zip(reqs).zip(ys) {
                     rs.observe(sub, y);
                     recs.push((full, y, true));
                 }
             }
-            JointEngine::Evo(ev) => {
-                let subs = ev.suggest_batch(env.rng, k);
-                let reqs: Vec<(Config, f64)> = subs
-                    .iter()
-                    .map(|s| (self.fixed.merged(s), 1.0))
-                    .collect();
-                let ys = env.obj.evaluate_batch(&reqs)?;
-                for ((sub, (full, _)), y) in
+            (Payload::Joint(subs), JointEngine::Evo(ev)) => {
+                for ((sub, (full, _)), &y) in
                     subs.into_iter().zip(reqs).zip(ys) {
                     ev.observe(sub, y);
                     recs.push((full, y, true));
                 }
             }
-            JointEngine::Mf(mf) => {
-                let picks = mf.suggest_batch(env.rng, k);
-                let reqs: Vec<(Config, f64)> = picks
-                    .iter()
-                    .map(|(s, fid)| (self.fixed.merged(s), *fid))
-                    .collect();
-                let ys = env.obj.evaluate_batch(&reqs)?;
-                for (((sub, fid), (full, _)), y) in
+            (Payload::JointMf(picks), JointEngine::Mf(mf)) => {
+                for (((sub, fid), (full, _)), &y) in
                     picks.into_iter().zip(reqs).zip(ys) {
                     mf.observe(sub, fid, y);
                     // only count full-fidelity results toward the best
                     recs.push((full, y, fid >= 1.0));
                 }
             }
+            _ => debug_assert!(false, "proposal/engine mismatch"),
         }
         for (full, y, counts) in recs {
             if counts {
@@ -246,7 +364,6 @@ impl BuildingBlock for JointBlock {
                 // but best_curve ignores it
             }
         }
-        Ok(())
     }
 
     fn current_best(&self) -> Option<(Config, f64)> {
@@ -278,7 +395,16 @@ impl BuildingBlock for JointBlock {
         } else {
             f64::INFINITY
         };
-        (best, best + gain * k)
+        // `best + inf * 0.0` is NaN (one observation, zero lookahead):
+        // keep the interval well-defined for every (n, k)
+        let upper = if k <= 0.0 {
+            best
+        } else if gain.is_infinite() {
+            f64::INFINITY
+        } else {
+            best + gain * k
+        };
+        (best, upper)
     }
 
     fn get_eui(&self) -> f64 {
@@ -363,6 +489,143 @@ impl ConditioningBlock {
             .map(|a| a.value.clone())
             .collect()
     }
+
+    /// One elimination round with cross-leaf super-batching: gather
+    /// proposals from `chunk` consecutive arm pulls (0 = the whole
+    /// round) into a single [`Objective::evaluate_batch`] submission,
+    /// then commit the results back to the arms in proposal order.
+    /// Requires every active arm to support propose/observe (the
+    /// caller checks). With `chunk == 1` each pull is proposed,
+    /// evaluated and observed before the next pull proposes.
+    ///
+    /// Pull granularity: one gathered pull is one `propose()` call.
+    /// For leaf arms that equals one `do_next`, so chunk-1 gathering
+    /// is bit-identical to the plain round-robin loop. An alternating
+    /// arm in warmup, however, proposes one *half* (b1 or b2) per
+    /// pull, where its serial `do_next` plays both halves — its
+    /// warmup stretches over twice as many plays under gathering.
+    /// That granularity shift (like proposal staleness) is part of
+    /// the super-batch semantics: `super_batch == 1` routes through
+    /// the serial loop and is unaffected.
+    ///
+    /// Returns false when exhaustion is detected at a *chunk
+    /// boundary* (the round is abandoned and elimination skipped,
+    /// mirroring the serial loop's early return at its pull
+    /// boundaries). Exhaustion *inside* the final chunk completes the
+    /// round — truncated — and returns true, again like the serial
+    /// loop when the budget dies in its last pull. With whole-round
+    /// chunks there are no interior boundaries, so elimination can
+    /// run on a budget-truncated round; the elimination grace still
+    /// applies.
+    fn gather_round(&mut self, env: &mut Env, chunk: usize)
+        -> Result<bool> {
+        let active: Vec<usize> = self
+            .arms
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.active)
+            .map(|(i, _)| i)
+            .collect();
+        let mut pulls: Vec<usize> =
+            Vec::with_capacity(active.len() * self.plays_per_round);
+        for _ in 0..self.plays_per_round {
+            pulls.extend(&active);
+        }
+        let chunk = if chunk == 0 { pulls.len().max(1) } else { chunk };
+        let mut i = 0;
+        while i < pulls.len() {
+            if env.obj.exhausted() {
+                return Ok(false);
+            }
+            let end = (i + chunk).min(pulls.len());
+            let mut props: Vec<(usize, Proposal)> =
+                Vec::with_capacity(end - i);
+            let mut reqs: Vec<(Config, f64)> = Vec::new();
+            for &ai in &pulls[i..end] {
+                let p = self.arms[ai].block.propose(env)?;
+                reqs.extend_from_slice(&p.reqs);
+                props.push((ai, p));
+            }
+            let ys = env.obj.evaluate_batch(&reqs)?;
+            // commit in proposal order; each arm observes the prefix
+            // of its slice that the budget allowed (possibly empty)
+            let mut off = 0;
+            for (ai, p) in props {
+                let n = p.reqs.len();
+                let lo = off.min(ys.len());
+                let hi = (off + n).min(ys.len());
+                self.arms[ai].block.observe(p, &ys[lo..hi]);
+                off += n;
+            }
+            i = end;
+        }
+        Ok(true)
+    }
+
+    /// Testing/driver hook: run one round through the gather path with
+    /// an explicit chunk size (bypassing `Env::super_batch`), then
+    /// eliminate. `chunk == 1` must be bit-identical to the plain
+    /// `do_next` round-robin when every arm is a leaf (property-tested
+    /// in `tests/super_batch.rs`; see [`Self::gather_round`] for the
+    /// alternating-arm granularity caveat).
+    pub fn do_next_gathered(&mut self, env: &mut Env, chunk: usize)
+        -> Result<()> {
+        self.rounds += 1;
+        if !self.gather_round(env, chunk)? {
+            return Ok(());
+        }
+        if self.eliminate {
+            self.eliminate_dominated();
+        }
+        Ok(())
+    }
+
+    /// Lines 5-7 of Algorithm 1: deactivate arms whose EU upper bound
+    /// is dominated by the best lower bound (with the grace period),
+    /// never eliminating everything.
+    fn eliminate_dominated(&mut self) {
+        let bounds: Vec<Option<(f64, f64)>> = self
+            .arms
+            .iter()
+            .map(|a| {
+                if a.active {
+                    Some(a.block.get_eu(self.eu_lookahead))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let max_lower = bounds
+            .iter()
+            .flatten()
+            .map(|(l, _)| *l)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let grace = self.elimination_grace;
+        for (arm, b) in self.arms.iter_mut().zip(&bounds) {
+            if let Some((_, u)) = b {
+                if *u < max_lower && arm.block.n_evals() >= grace {
+                    arm.active = false;
+                }
+            }
+        }
+        // never eliminate everything
+        if self.arms.iter().all(|a| !a.active) {
+            if let Some(best) = self
+                .arms
+                .iter_mut()
+                .max_by(|a, b| {
+                    let ya = a.block.current_best()
+                        .map(|(_, y)| y).unwrap_or(f64::NEG_INFINITY);
+                    let yb = b.block.current_best()
+                        .map(|(_, y)| y).unwrap_or(f64::NEG_INFINITY);
+                    ya.partial_cmp(&yb)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+            {
+                best.active = true;
+            }
+        }
+    }
 }
 
 impl BuildingBlock for ConditioningBlock {
@@ -371,8 +634,24 @@ impl BuildingBlock for ConditioningBlock {
     }
 
     fn do_next(&mut self, env: &mut Env) -> Result<()> {
+        // cross-leaf super-batching: when enabled and every active arm
+        // can split its pull, gather the round's proposals and submit
+        // them in super-batches (one evaluate_batch for up to the
+        // whole round) so elimination rounds parallelise across arms
+        if env.super_batch != 1
+            && self.arms.iter().any(|a| a.active)
+            && self
+                .arms
+                .iter()
+                .filter(|a| a.active)
+                .all(|a| a.block.supports_propose())
+        {
+            let chunk = env.super_batch;
+            return self.do_next_gathered(env, chunk);
+        }
         self.rounds += 1;
-        // lines 2-4: play each active arm L times (round-robin)
+        // lines 2-4: play each active arm L times (round-robin); with
+        // super-batching off each arm pull is its own batch
         for _ in 0..self.plays_per_round {
             for arm in self.arms.iter_mut().filter(|a| a.active) {
                 if env.obj.exhausted() {
@@ -383,47 +662,7 @@ impl BuildingBlock for ConditioningBlock {
         }
         // lines 5-7: eliminate arms dominated under the EU intervals
         if self.eliminate {
-            let bounds: Vec<Option<(f64, f64)>> = self
-                .arms
-                .iter()
-                .map(|a| {
-                    if a.active {
-                        Some(a.block.get_eu(self.eu_lookahead))
-                    } else {
-                        None
-                    }
-                })
-                .collect();
-            let max_lower = bounds
-                .iter()
-                .flatten()
-                .map(|(l, _)| *l)
-                .fold(f64::NEG_INFINITY, f64::max);
-            let grace = self.elimination_grace;
-            for (arm, b) in self.arms.iter_mut().zip(&bounds) {
-                if let Some((_, u)) = b {
-                    if *u < max_lower && arm.block.n_evals() >= grace {
-                        arm.active = false;
-                    }
-                }
-            }
-            // never eliminate everything
-            if self.arms.iter().all(|a| !a.active) {
-                if let Some(best) = self
-                    .arms
-                    .iter_mut()
-                    .max_by(|a, b| {
-                        let ya = a.block.current_best()
-                            .map(|(_, y)| y).unwrap_or(f64::NEG_INFINITY);
-                        let yb = b.block.current_best()
-                            .map(|(_, y)| y).unwrap_or(f64::NEG_INFINITY);
-                        ya.partial_cmp(&yb)
-                            .unwrap_or(std::cmp::Ordering::Equal)
-                    })
-                {
-                    best.active = true;
-                }
-            }
+            self.eliminate_dominated();
         }
         Ok(())
     }
@@ -437,14 +676,26 @@ impl BuildingBlock for ConditioningBlock {
     }
 
     fn get_eu(&self, k: f64) -> (f64, f64) {
-        let mut lo = f64::NEG_INFINITY;
-        let mut hi = f64::NEG_INFINITY;
-        for a in self.arms.iter().filter(|a| a.active) {
-            let (l, u) = a.block.get_eu(k);
-            lo = lo.max(l);
-            hi = hi.max(u);
-        }
-        (lo, hi)
+        let span = |active_only: bool| -> Option<(f64, f64)> {
+            let mut any = false;
+            let mut lo = f64::NEG_INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for a in self.arms.iter()
+                .filter(|a| a.active || !active_only) {
+                let (l, u) = a.block.get_eu(k);
+                lo = lo.max(l);
+                hi = hi.max(u);
+                any = true;
+            }
+            any.then_some((lo, hi))
+        };
+        // with zero active arms a (-inf, -inf) interval would silently
+        // dominate nothing in the rising-bandit comparison: fall back
+        // to the inactive arms' evidence, and to the unexplored
+        // interval when there are no arms at all
+        span(true)
+            .or_else(|| span(false))
+            .unwrap_or((f64::NEG_INFINITY, f64::INFINITY))
     }
 
     fn get_eui(&self) -> f64 {
@@ -494,6 +745,9 @@ pub struct AlternatingBlock {
     vars2: Vec<String>,
     /// Warmup rounds remaining (Algorithm 2's L round-robin rounds).
     warmup_left: usize,
+    /// Split-pull bookkeeping: false = the next proposed warmup half
+    /// plays b1, true = b2 (a warmup round is two halves).
+    warmup_phase: bool,
     /// EUI-driven arm choice (Algorithm 3); round-robin if false
     /// (ablation of the design choice in §3.3.3).
     pub eui_driven: bool,
@@ -510,6 +764,7 @@ impl AlternatingBlock {
             vars1,
             vars2,
             warmup_left: 3,
+            warmup_phase: false,
             eui_driven: true,
             toggle: false,
         }
@@ -548,6 +803,13 @@ impl BuildingBlock for AlternatingBlock {
     }
 
     fn do_next(&mut self, env: &mut Env) -> Result<()> {
+        // NOTE: deliberately *not* routed through propose/observe —
+        // a child may be a nested conditioning block (plan AC), which
+        // does not support split pulls; child.do_next handles every
+        // child kind (and lets that nested conditioning block gather
+        // its own super-batches). The propose/observe pair below is
+        // the parent-driven path used when *this* block sits under a
+        // gathering conditioning block (plan CA).
         if env.obj.exhausted() {
             return Ok(());
         }
@@ -576,6 +838,73 @@ impl BuildingBlock for AlternatingBlock {
             self.b2.do_next(env)?;
         }
         Ok(())
+    }
+
+    fn supports_propose(&self) -> bool {
+        self.b1.supports_propose() && self.b2.supports_propose()
+    }
+
+    fn propose(&mut self, env: &mut Env) -> Result<Proposal> {
+        // Pick the side exactly as the serial iteration would; the
+        // results-driven exchanges (`set_var` of the other side's
+        // best) happen in `observe`, so under super-batching a side
+        // proposes against the best known *at proposal time* — the
+        // usual batched-BO staleness, never a torn state.
+        let (first, warmup) = if self.warmup_left > 0 {
+            let second_half = self.warmup_phase;
+            self.warmup_phase = !second_half;
+            if second_half {
+                self.warmup_left -= 1;
+            }
+            (!second_half, true)
+        } else if self.eui_driven {
+            (self.b1.get_eui() >= self.b2.get_eui(), false)
+        } else {
+            self.toggle = !self.toggle;
+            (self.toggle, false)
+        };
+        // outside warmup the exchange precedes the pull (Algorithm 3
+        // lines 4-6 / 8-10); warmup exchanges follow the observations
+        if !warmup {
+            if first {
+                self.exchange_to_b1();
+            } else {
+                self.exchange_to_b2();
+            }
+        }
+        let inner = if first {
+            self.b1.propose(env)?
+        } else {
+            self.b2.propose(env)?
+        };
+        let Proposal { reqs, payload } = inner;
+        Ok(Proposal {
+            reqs,
+            payload: Payload::Alt { first, warmup,
+                                    inner: Box::new(payload) },
+        })
+    }
+
+    fn observe(&mut self, prop: Proposal, ys: &[f64]) {
+        let Proposal { reqs, payload } = prop;
+        let Payload::Alt { first, warmup, inner } = payload else {
+            debug_assert!(false, "proposal/block mismatch");
+            return;
+        };
+        let inner = Proposal { reqs, payload: *inner };
+        if first {
+            self.b1.observe(inner, ys);
+            if warmup {
+                // Algorithm 2: push b1's fresh best into b2 before its
+                // warmup half
+                self.exchange_to_b2();
+            }
+        } else {
+            self.b2.observe(inner, ys);
+            if warmup {
+                self.exchange_to_b1();
+            }
+        }
     }
 
     fn current_best(&self) -> Option<(Config, f64)> {
@@ -899,6 +1228,100 @@ mod tests {
         let mut obj2 = Synth { evals: 0, max_evals: 1 };
         let mut rng2 = Rng::new(15);
         assert_eq!(Env::with_batch(&mut obj2, &mut rng2, 0).batch, 1);
+    }
+
+    #[test]
+    fn propose_observe_roundtrip_matches_do_next_bitwise() {
+        // the split pull is the pull: driving a joint block through
+        // propose -> evaluate_batch -> observe by hand must reproduce
+        // do_next exactly, for serial and batched pulls
+        for batch in [1usize, 4] {
+            let mut obj_a = Synth { evals: 0, max_evals: 40 };
+            let mut rng_a = Rng::new(31);
+            let mut block_a = joint_for("a", 31);
+            {
+                let mut env = Env::with_batch(&mut obj_a, &mut rng_a,
+                                              batch);
+                for _ in 0..10 {
+                    block_a.do_next(&mut env).unwrap();
+                }
+            }
+            let mut obj_b = Synth { evals: 0, max_evals: 40 };
+            let mut rng_b = Rng::new(31);
+            let mut block_b = joint_for("a", 31);
+            {
+                let mut env = Env::with_batch(&mut obj_b, &mut rng_b,
+                                              batch);
+                for _ in 0..10 {
+                    if env.obj.exhausted() {
+                        break;
+                    }
+                    let prop = block_b.propose(&mut env).unwrap();
+                    let ys = env.obj.evaluate_batch(&prop.reqs).unwrap();
+                    block_b.observe(prop, &ys);
+                }
+            }
+            assert_eq!(block_a.n_evals(), block_b.n_evals(),
+                       "batch={batch}");
+            let oa = block_a.observations();
+            let ob = block_b.observations();
+            for ((ca, ya), (cb, yb)) in oa.iter().zip(&ob) {
+                assert_eq!(ca, cb, "batch={batch}");
+                assert_eq!(ya.to_bits(), yb.to_bits(), "batch={batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn eu_interval_is_never_nan() {
+        // one observation + zero lookahead used to produce
+        // best + inf * 0.0 = NaN
+        let mut obj = Synth { evals: 0, max_evals: 1 };
+        let mut rng = Rng::new(41);
+        let mut block = joint_for("a", 41);
+        {
+            let mut env = Env::new(&mut obj, &mut rng);
+            block.do_next(&mut env).unwrap();
+        }
+        assert_eq!(block.n_evals(), 1);
+        let (l, u) = block.get_eu(0.0);
+        assert!(!l.is_nan() && !u.is_nan(), "NaN EU interval");
+        assert_eq!(l.to_bits(), u.to_bits(),
+                   "zero lookahead pins the interval to the best");
+        // positive lookahead with one observation: still unbounded
+        let (l1, u1) = block.get_eu(10.0);
+        assert!(l1.is_finite());
+        assert!(u1.is_infinite() && u1 > 0.0);
+    }
+
+    #[test]
+    fn conditioning_eu_guards_zero_active_arms() {
+        let mut obj = Synth { evals: 0, max_evals: 60 };
+        let mut rng = Rng::new(42);
+        let arms = vec![
+            Arm { value: "a".into(), block: Box::new(joint_for("a", 43)),
+                  active: true },
+        ];
+        let mut cond = ConditioningBlock::new("algorithm", arms);
+        {
+            let mut env = Env::new(&mut obj, &mut rng);
+            for _ in 0..3 {
+                cond.do_next(&mut env).unwrap();
+            }
+        }
+        // transient zero-active state (e.g. mid-update in a nested
+        // plan): the interval must fall back to the arms' evidence
+        // instead of the dominated-by-nothing (-inf, -inf)
+        cond.arms[0].active = false;
+        let (l, u) = cond.get_eu(10.0);
+        assert!(!l.is_nan() && !u.is_nan());
+        assert!(u > f64::NEG_INFINITY,
+                "(-inf, -inf) interval leaked: ({l}, {u})");
+        assert!(l.is_finite(), "lower bound should track the best");
+        // and with no arms at all: the unexplored interval
+        let empty = ConditioningBlock::new("algorithm", Vec::new());
+        let (l2, u2) = empty.get_eu(5.0);
+        assert!(l2 == f64::NEG_INFINITY && u2 == f64::INFINITY);
     }
 
     #[test]

@@ -54,6 +54,16 @@ pub struct VolcanoConfig {
     /// configs before seeing any of their results); `eval_batch = 1`
     /// reproduces the strictly-serial pre-parallel semantics.
     pub eval_batch: usize,
+    /// Cross-leaf super-batching: leaf pulls coalesced per
+    /// `evaluate_batch` submission when a conditioning block plays its
+    /// elimination round. `1` (default) = off — every leaf pull is its
+    /// own batch, the leaf-level batching semantics; `0` = the whole
+    /// round (`plays_per_round × active arms` pulls) in one
+    /// submission; `n > 1` = chunks of `n` pulls. Like `eval_batch`
+    /// this shapes the trajectory (arms propose a round before seeing
+    /// each other's results); for any fixed value the trajectory is
+    /// still worker-count invariant.
+    pub super_batch: usize,
     pub seed: u64,
 }
 
@@ -76,6 +86,7 @@ impl Default for VolcanoConfig {
             progressive: false,
             workers: 1,
             eval_batch: 0,
+            super_batch: 1,
             seed: 42,
         }
     }
@@ -188,8 +199,9 @@ impl VolcanoML {
 
         let root: Box<dyn BuildingBlock>;
         if cfg.progressive {
-            let mut env = Env::with_batch(&mut evaluator,
-                                          &mut search_rng, batch);
+            let mut env = Env::with_super_batch(&mut evaluator,
+                                                &mut search_rng, batch,
+                                                cfg.super_batch);
             let phase = cfg.max_evals / 3;
             run_progressive(&builder, &mut env, phase, phase)?;
             root = builder.build(cfg.plan); // structure only (unused)
@@ -197,9 +209,10 @@ impl VolcanoML {
             let mut plan = ExecutionPlan::new(builder.build(cfg.plan));
             loop {
                 {
-                    let mut env = Env::with_batch(&mut evaluator,
-                                                  &mut search_rng,
-                                                  batch);
+                    let mut env = Env::with_super_batch(&mut evaluator,
+                                                        &mut search_rng,
+                                                        batch,
+                                                        cfg.super_batch);
                     if env.obj.exhausted() {
                         break;
                     }

@@ -111,7 +111,10 @@ impl<'a> PipelineEvaluator<'a> {
         self
     }
 
-    /// Evaluate batches on `workers` threads (1 = serial). Worker
+    /// Evaluate batches on `workers` persistent threads (1 = serial).
+    /// The pool is spawned here, once per evaluator, and its threads
+    /// are reused across every batch of the search (so per-thread
+    /// state such as the PJRT executable caches is amortised). Worker
     /// count never changes search results — only wall-clock time.
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.executor = Executor::new(workers);
@@ -249,14 +252,20 @@ impl<'a> PipelineEvaluator<'a> {
     /// the crash-penalty anchor and the incumbent identically.
     fn commit(&mut self, key: String, cfg: &Config, fidelity: f64,
               res: Result<f64>, elapsed: f64) -> f64 {
-        let utility = match res {
-            Ok(u) if u.is_finite() => u,
+        let (utility, genuine) = match res {
+            Ok(u) if u.is_finite() => (u, true),
             _ => {
                 self.failures += 1;
-                self.crash_penalty()
+                (self.crash_penalty(), false)
             }
         };
-        self.worst = self.worst.min(utility);
+        // anchor the crash penalty on genuinely observed utilities
+        // only: folding the synthetic penalty back into `worst` would
+        // ratchet every subsequent penalty lower (repeated crashes
+        // would drive utilities toward -inf and distort the surrogate)
+        if genuine {
+            self.worst = self.worst.min(utility);
+        }
         self.cache.insert(key, utility);
         self.records.push(EvalRecord {
             config: cfg.clone(),
@@ -285,6 +294,18 @@ impl<'a> Objective for PipelineEvaluator<'a> {
         if let Some(&u) = self.cache.get(&key) {
             return Ok(u);
         }
+        // a cache hit is free, but fresh work must respect the
+        // remaining *evaluation* budget — a single evaluation at zero
+        // remaining budget must not run and record (batches of any
+        // size truncate to it; see evaluate_batch). The wall-clock
+        // deadline is deliberately not checked here: callers gate on
+        // exhausted() between pulls, and turning a clock tick that
+        // lands between that check and this call into a hard error
+        // would be worse than the documented one-evaluation overshoot.
+        if self.records.len() >= self.max_evals {
+            anyhow::bail!(
+                "evaluation budget exhausted ({} evals)", self.max_evals);
+        }
         let t0 = Instant::now();
         let res = self.eval_inner(cfg, fidelity);
         let elapsed = t0.elapsed().as_secs_f64();
@@ -305,19 +326,23 @@ impl<'a> Objective for PipelineEvaluator<'a> {
     ///    each fresh result's side effects via [`Self::commit`].
     fn evaluate_batch(&mut self, reqs: &[(Config, f64)])
         -> Result<Vec<f64>> {
-        if reqs.len() <= 1 {
-            return reqs
-                .iter()
-                .map(|(cfg, fid)| self.evaluate(cfg, *fid))
-                .collect();
-        }
-
+        // every batch size goes through the planner — a batch of 1 at
+        // zero remaining budget truncates to nothing (returning the
+        // empty prefix) instead of overshooting `max_evals`
         enum Slot {
             Cached(f64),
             Fresh(usize),
         }
-        let remaining =
-            self.max_evals.saturating_sub(self.records.len());
+        // like the serial path's per-request exhausted() check, the
+        // wall-clock budget gates *scheduling*: past the deadline no
+        // fresh work is planned (cache hits still resolve). A batch
+        // already in flight cannot be cancelled mid-run, so the time
+        // budget can overshoot by at most one (super-)batch.
+        let remaining = if self.elapsed() >= self.budget_secs {
+            0
+        } else {
+            self.max_evals.saturating_sub(self.records.len())
+        };
         let mut slots: Vec<Slot> = Vec::with_capacity(reqs.len());
         let mut fresh: Vec<(String, Config, f64)> = Vec::new();
         let mut scheduled: HashMap<String, usize> = HashMap::new();
@@ -338,7 +363,7 @@ impl<'a> Objective for PipelineEvaluator<'a> {
             }
         }
 
-        let ex = self.executor;
+        let ex = self.executor.clone();
         let shared: &PipelineEvaluator = self;
         let mut outs: Vec<Option<(f64, Result<f64>)>> = ex
             .run(&fresh, |(_, cfg, fid)| {
@@ -452,7 +477,18 @@ mod tests {
             n += 1;
             assert!(n <= 10, "runaway");
         }
-        assert!(ev.n_evals() <= 3 + 1);
+        assert_eq!(ev.n_evals(), 3, "budget must be hit exactly");
+        // a fresh singleton past the budget is refused outright...
+        let cfg = space.sample(&mut rng);
+        assert!(ev.evaluate(&cfg, 1.0).is_err());
+        // ...a singleton *batch* truncates to the empty prefix...
+        let us = ev.evaluate_batch(&[(cfg, 1.0)]).unwrap();
+        assert!(us.is_empty(), "batch of 1 overshot the budget");
+        assert_eq!(ev.n_evals(), 3);
+        // ...and cache hits stay free
+        let done = ev.records[0].config.clone();
+        assert!(ev.evaluate(&done, 1.0).is_ok());
+        assert_eq!(ev.n_evals(), 3);
     }
 
     #[test]
@@ -467,6 +503,35 @@ mod tests {
         let u = ev.evaluate(&cfg, 1.0).unwrap();
         assert!(u <= 0.0, "penalty expected, got {u}");
         assert_eq!(ev.failures, 1);
+    }
+
+    #[test]
+    fn crash_penalty_does_not_ratchet() {
+        // repeated failures must all receive the same penalty: the
+        // penalty anchor (`worst`) tracks genuinely observed utilities
+        // only, never the synthetic penalties themselves
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(61));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 62);
+        let genuine = ev.evaluate(&space.default_config(), 1.0).unwrap();
+        assert!(genuine.is_finite());
+        let mut penalties = Vec::new();
+        for i in 0..4 {
+            let cfg = Config::new()
+                .with("algorithm",
+                      crate::space::Value::C(format!("bogus-{i}")));
+            penalties.push(ev.evaluate(&cfg, 1.0).unwrap());
+        }
+        assert_eq!(ev.failures, 4);
+        for p in &penalties {
+            assert_eq!(p.to_bits(), penalties[0].to_bits(),
+                       "penalty ratcheted: {penalties:?}");
+            assert!(*p < genuine, "penalty must undercut the worst \
+                                   genuine utility");
+        }
     }
 
     #[test]

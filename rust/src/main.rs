@@ -30,17 +30,22 @@ SUBCOMMANDS
   run             --dataset <name> [--system volcanoml|ausk|tpot|...]
                   [--plan J|C|A|AC|CA] [--scale small|medium|large]
                   [--evals N] [--budget SECS] [--metric NAME]
-                  [--corpus PATH] [--seed N] [--workers N] [--no-pjrt]
+                  [--corpus PATH] [--seed N] [--workers N]
+                  [--super-batch N] [--no-pjrt]
   plans           --dataset <name> [--evals N] [--workers N]
-                  — compare J/C/A/AC/CA
+                  [--super-batch N] — compare J/C/A/AC/CA
   datasets        list the registry (name, task, n, d)
   artifacts       show compiled PJRT artifacts
   collect-corpus  --out PATH [--n-cls N] [--n-reg N] [--evals N]
-                  [--workers N]
+                  [--workers N] [--super-batch N]
   help            this message
 
-  --workers N evaluates each candidate batch on N threads; the search
-  trajectory is unchanged for a fixed batch size (see rust/README.md).
+  --workers N evaluates each candidate batch on N persistent pool
+  threads; the search trajectory is unchanged for a fixed batch size.
+  --super-batch N coalesces N leaf pulls of a conditioning round into
+  one batch (0 = the whole round, 1 = off); larger super-batches keep
+  more workers busy during elimination rounds but, like the batch
+  size, shape the trajectory (see rust/README.md).
 ";
 
 fn main() {
@@ -96,6 +101,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         max_evals: args.usize_or("evals", 60)?,
         budget_secs: args.f64_or("budget", f64::INFINITY)?,
         workers: args.usize_or("workers", 1)?.max(1),
+        super_batch: args.usize_or("super-batch", 1)?,
         seed: args.u64_or("seed", 42)?,
     };
     let corpus = match args.str_opt("corpus") {
@@ -149,6 +155,7 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
     let evals = args.usize_or("evals", 40)?;
     let seed = args.u64_or("seed", 42)?;
     let workers = args.usize_or("workers", 1)?.max(1);
+    let super_batch = args.usize_or("super-batch", 1)?;
     let runtime = open_runtime(args);
     args.finish()?;
     let metric = if ds.task.is_classification() {
@@ -165,6 +172,7 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
             metric,
             max_evals: evals,
             workers,
+            super_batch,
             seed,
             ..Default::default()
         };
@@ -230,6 +238,7 @@ fn cmd_collect(args: &Args) -> anyhow::Result<()> {
     let evals = args.usize_or("evals", 40)?;
     let seed = args.u64_or("seed", 7)?;
     let workers = args.usize_or("workers", 1)?.max(1);
+    let super_batch = args.usize_or("super-batch", 1)?;
     let runtime = open_runtime(args);
     args.finish()?;
 
@@ -248,6 +257,7 @@ fn cmd_collect(args: &Args) -> anyhow::Result<()> {
             max_evals: evals,
             budget_secs: f64::INFINITY,
             workers,
+            super_batch,
             seed: seed + i as u64,
         };
         let t0 = std::time::Instant::now();

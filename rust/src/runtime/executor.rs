@@ -1,82 +1,145 @@
-//! Worker-pool executor for batched candidate evaluation.
+//! Persistent worker-pool executor for batched candidate evaluation.
 //!
 //! The Volcano-style `do_next!` pull proposes a *batch* of candidate
-//! configurations per leaf block; this executor fans the batch out
-//! across a pool of scoped worker threads and returns the results in
-//! request order. Determinism contract: the executor never reorders
-//! results — `workers = 1` and `workers = N` produce identical output
-//! for the same input batch, so worker count is purely a performance
-//! knob (the *batch size* is what changes search semantics).
+//! configurations per pull (and, with cross-leaf super-batching, a
+//! whole elimination round of pulls); this executor fans each batch
+//! out across a pool of **long-lived** worker threads and returns the
+//! results in request order. Determinism contract: the executor never
+//! reorders results — `workers = 1` and `workers = N` produce
+//! identical output for the same input batch, so worker count is
+//! purely a performance knob (the *batch size* is what changes search
+//! semantics).
 //!
-//! Built on `std::thread::scope`: no queue handoff of owned data, no
-//! extra dependencies, and worker closures may borrow the evaluator
-//! immutably (`F: Sync`). Work is claimed through an atomic cursor so
-//! uneven per-candidate costs balance across the pool.
+//! The pool is spawned once (per search, via
+//! `PipelineEvaluator::with_workers`) and its threads are reused
+//! across every batch, so per-thread state — notably the PJRT
+//! executable caches in `runtime::mod`, which live in thread-locals —
+//! is amortised over the whole search instead of being rebuilt for
+//! every batch as the previous `std::thread::scope`-per-batch design
+//! did. Work is claimed through an atomic cursor so uneven
+//! per-candidate costs balance across the pool, and a panic inside
+//! the work closure propagates to the submitting thread once the
+//! batch joins, exactly like the serial path.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
-#[derive(Clone, Copy, Debug)]
-pub struct Executor {
-    workers: usize,
-}
+type Job = Box<dyn FnOnce() + Send + 'static>;
 
-impl Default for Executor {
-    fn default() -> Self {
-        Executor::serial()
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
     }
 }
 
-impl Executor {
-    /// Pool with `workers` threads; 0 is clamped to 1 (serial).
-    pub fn new(workers: usize) -> Executor {
-        Executor { workers: workers.max(1) }
+/// A fixed-size pool of persistent worker threads fed over a shared
+/// channel. Threads are spawned at construction and live until the
+/// pool is dropped; every [`WorkerPool::run`] reuses them.
+pub struct WorkerPool {
+    injector: Mutex<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("volcano-worker-{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only while dequeuing, never
+                        // while running a job
+                        let job = lock(&rx).recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("executor: failed to spawn worker thread")
+            })
+            .collect();
+        WorkerPool { injector: Mutex::new(tx), handles }
     }
 
-    /// The strictly sequential executor (the pre-parallel behaviour).
-    pub fn serial() -> Executor {
-        Executor::new(1)
+    pub fn threads(&self) -> usize {
+        self.handles.len()
     }
 
-    pub fn workers(&self) -> usize {
-        self.workers
-    }
-
-    /// Apply `f` to every item, returning results in item order.
-    ///
-    /// With one worker (or at most one item) this runs inline on the
-    /// caller's thread — byte-for-byte the serial evaluation path.
-    /// Otherwise `min(workers, items)` scoped threads claim items via
-    /// an atomic cursor. A panic inside `f` propagates to the caller
-    /// once the scope joins, exactly like the serial path.
+    /// Apply `f` to every item on the pool, blocking until the batch
+    /// completes; results come back in item order. At most
+    /// `min(threads, items)` workers claim items via an atomic cursor.
     pub fn run<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
     where
         T: Sync,
         R: Send,
         F: Fn(&T) -> R + Sync,
     {
-        if self.workers <= 1 || items.len() <= 1 {
-            return items.iter().map(&f).collect();
+        if items.is_empty() {
+            return Vec::new();
         }
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<R>>> =
             items.iter().map(|_| Mutex::new(None)).collect();
-        let n_threads = self.workers.min(items.len());
-        std::thread::scope(|s| {
-            for _ in 0..n_threads {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
-                        break;
-                    }
-                    let r = f(&items[i]);
-                    match slots[i].lock() {
-                        Ok(mut g) => *g = Some(r),
-                        Err(p) => *p.into_inner() = Some(r),
-                    }
-                });
+        let (done_tx, done_rx) = channel::<std::thread::Result<()>>();
+        let n_jobs = self.handles.len().min(items.len());
+        {
+            let next = &next;
+            let slots = &slots;
+            let f = &f;
+            for _ in 0..n_jobs {
+                let done_tx = done_tx.clone();
+                let job: Box<dyn FnOnce() + Send + '_> =
+                    Box::new(move || {
+                        let r = catch_unwind(AssertUnwindSafe(|| loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= items.len() {
+                                break;
+                            }
+                            let out = f(&items[i]);
+                            *lock(&slots[i]) = Some(out);
+                        }));
+                        // the batch joins on this send, not the return
+                        let _ = done_tx.send(r);
+                    });
+                // SAFETY: the job borrows `items`, `f`, `next` and
+                // `slots` from this stack frame. We erase the lifetime
+                // to ship it through the 'static channel, and block
+                // below until every submitted job has signalled
+                // completion (or panicked) before returning — the
+                // borrows therefore strictly outlive all use. The
+                // completion signal is sent after the closure finishes
+                // (panic included, via catch_unwind), so no worker can
+                // still touch the frame once recv() has yielded
+                // `n_jobs` results.
+                let job: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>,
+                                          Job>(job)
+                };
+                lock(&self.injector)
+                    .send(job)
+                    .expect("executor: worker pool shut down");
             }
-        });
+        }
+        drop(done_tx);
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..n_jobs {
+            match done_rx.recv()
+                .expect("executor: worker exited without signalling") {
+                Ok(()) => {}
+                Err(p) => panic = Some(p),
+            }
+        }
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
         slots
             .into_iter()
             .map(|m| {
@@ -88,9 +151,81 @@ impl Executor {
     }
 }
 
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // replace the injector with a dangling sender so the original
+        // is dropped and every worker's recv() errors out
+        let (tx, _) = channel::<Job>();
+        *lock(&self.injector) = tx;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Executor facade used by the evaluator: serial inline execution for
+/// one worker (or one item), a shared persistent [`WorkerPool`]
+/// otherwise. Cloning shares the pool (and its threads).
+#[derive(Clone, Default)]
+pub struct Executor {
+    workers: usize,
+    pool: Option<Arc<WorkerPool>>,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor")
+            .field("workers", &self.workers.max(1))
+            .field("persistent", &self.pool.is_some())
+            .finish()
+    }
+}
+
+impl Executor {
+    /// Pool with `workers` persistent threads; 0 is clamped to 1
+    /// (serial, no threads spawned).
+    pub fn new(workers: usize) -> Executor {
+        let workers = workers.max(1);
+        let pool = if workers > 1 {
+            Some(Arc::new(WorkerPool::new(workers)))
+        } else {
+            None
+        };
+        Executor { workers, pool }
+    }
+
+    /// The strictly sequential executor (the pre-parallel behaviour).
+    pub fn serial() -> Executor {
+        Executor::new(1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.max(1)
+    }
+
+    /// Apply `f` to every item, returning results in item order.
+    ///
+    /// With one worker (or at most one item) this runs inline on the
+    /// caller's thread — byte-for-byte the serial evaluation path.
+    /// Otherwise the batch runs on the persistent pool.
+    pub fn run<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        match &self.pool {
+            Some(pool) if items.len() > 1 => pool.run(items, f),
+            _ => items.iter().map(&f).collect(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
+    use std::thread::ThreadId;
     use std::time::{Duration, Instant};
 
     #[test]
@@ -120,8 +255,9 @@ mod tests {
         // 8 sleeps of 20ms: serial floor is 160ms; two workers should
         // land well under it even on a loaded box.
         let items: Vec<u32> = (0..8).collect();
+        let ex = Executor::new(4);
         let t0 = Instant::now();
-        Executor::new(4).run(&items, |_| {
+        ex.run(&items, |_| {
             std::thread::sleep(Duration::from_millis(20));
         });
         let dt = t0.elapsed();
@@ -146,5 +282,66 @@ mod tests {
     fn more_workers_than_items_is_fine() {
         let out = Executor::new(16).run(&[5, 6], |&x| x * x);
         assert_eq!(out, vec![25, 36]);
+    }
+
+    /// Force both pool threads to participate: each of the two items
+    /// blocks until two distinct claimants have arrived, so a single
+    /// thread can never clear the batch alone.
+    fn both_worker_ids(ex: &Executor) -> HashSet<ThreadId> {
+        let arrived = AtomicUsize::new(0);
+        let ids = ex.run(&[0usize, 1usize], |_| {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            let t0 = Instant::now();
+            while arrived.load(Ordering::SeqCst) < 2 {
+                assert!(t0.elapsed() < Duration::from_secs(10),
+                        "second worker never arrived");
+                std::hint::spin_loop();
+            }
+            std::thread::current().id()
+        });
+        ids.into_iter().collect()
+    }
+
+    #[test]
+    fn pool_threads_persist_across_batches() {
+        // the whole point of the persistent pool: consecutive batches
+        // run on the *same* threads, so per-thread caches survive
+        let ex = Executor::new(2);
+        let first = both_worker_ids(&ex);
+        assert_eq!(first.len(), 2, "both workers claim one item each");
+        assert!(!first.contains(&std::thread::current().id()),
+                "work runs on pool threads, not the caller");
+        for _ in 0..3 {
+            let again = both_worker_ids(&ex);
+            assert_eq!(first, again,
+                       "batch ran on fresh threads: {again:?} vs \
+                        {first:?}");
+        }
+    }
+
+    #[test]
+    fn cloned_executor_shares_the_pool() {
+        let ex = Executor::new(2);
+        let clone = ex.clone();
+        let a = both_worker_ids(&ex);
+        let b = both_worker_ids(&clone);
+        assert_eq!(a, b, "clone must reuse the same pool threads");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let ex = Executor::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            ex.run(&[0, 1, 2, 3], |&i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+                i
+            });
+        }));
+        assert!(caught.is_err(), "panic must reach the caller");
+        // the pool is still usable afterwards
+        let out = ex.run(&[1, 2, 3, 4], |&x| x + 1);
+        assert_eq!(out, vec![2, 3, 4, 5]);
     }
 }

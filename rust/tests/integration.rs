@@ -72,6 +72,7 @@ fn registry_dataset_end_to_end_quake() {
         max_evals: 20,
         budget_secs: f64::INFINITY,
         workers: 1,
+        super_batch: 1,
         seed: 3,
     };
     let out = run_system(SystemKind::VolcanoMLMinus, &ds, &spec, None,
@@ -206,6 +207,7 @@ fn regression_system_comparison_smoke() {
         max_evals: 15,
         budget_secs: f64::INFINITY,
         workers: 1,
+        super_batch: 1,
         seed: 2,
     };
     for sys in [SystemKind::VolcanoMLMinus, SystemKind::Tpot] {

@@ -1,0 +1,313 @@
+//! Cross-leaf super-batching tests: the conditioning block may gather
+//! one elimination round of leaf pulls into a single
+//! `Objective::evaluate_batch` submission (`Env::super_batch`).
+//!
+//! Contracts under test:
+//! * super-batched trajectories are bit-identical across worker counts
+//!   (worker count stays a pure wall-clock knob);
+//! * gathering with a chunk of one pull is bit-identical to the PR-1
+//!   leaf-level batching when the arms are leaves — the propose /
+//!   observe split loses nothing;
+//! * super-batching actually coalesces submissions (one
+//!   `evaluate_batch` per round instead of one per pull);
+//! * the evaluation budget stays exact through the gather path.
+
+use anyhow::Result;
+
+use volcanoml::blocks::{Arm, BuildingBlock, ConditioningBlock, Env,
+                        JointBlock, Objective};
+use volcanoml::coordinator::automl::{RunOutcome, VolcanoConfig,
+                                     VolcanoML};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::Task;
+use volcanoml::ensemble::EnsembleMethod;
+use volcanoml::plan::PlanKind;
+use volcanoml::space::{Config, ConfigSpace, Value};
+use volcanoml::util::rng::Rng;
+
+// ---- blocks-level harness ------------------------------------------
+
+/// Synthetic objective over {algorithm in a,b} x (x, y), same shape as
+/// the blocks unit tests: algo 'a' peaks at 0.8, algo 'b' caps at 0.4.
+struct Synth {
+    evals: usize,
+    max_evals: usize,
+    /// Sizes of every evaluate_batch submission, in call order.
+    submissions: Vec<usize>,
+}
+
+impl Synth {
+    fn capped(max_evals: usize) -> Synth {
+        Synth { evals: 0, max_evals, submissions: Vec::new() }
+    }
+}
+
+impl Objective for Synth {
+    fn evaluate(&mut self, cfg: &Config, _f: f64) -> Result<f64> {
+        self.evals += 1;
+        let x = cfg.f64_or("x", 0.5);
+        let y = cfg.f64_or("y", 0.5);
+        Ok(match cfg.str_or("algorithm", "a") {
+            "a" => 0.8 - (x - 0.9).powi(2) - (y - 0.1).powi(2),
+            _ => 0.4 - 0.5 * (x - 0.5).powi(2),
+        })
+    }
+
+    fn evaluate_batch(&mut self, reqs: &[(Config, f64)])
+        -> Result<Vec<f64>> {
+        self.submissions.push(reqs.len());
+        let mut out = Vec::with_capacity(reqs.len());
+        for (cfg, fid) in reqs.iter() {
+            if self.exhausted() {
+                break;
+            }
+            out.push(self.evaluate(cfg, *fid)?);
+        }
+        Ok(out)
+    }
+
+    fn exhausted(&self) -> bool {
+        self.evals >= self.max_evals
+    }
+}
+
+fn xy_space() -> ConfigSpace {
+    ConfigSpace::new()
+        .float("x", 0.0, 1.0, 0.5)
+        .float("y", 0.0, 1.0, 0.5)
+}
+
+fn joint_for(algo: &str, seed: u64) -> JointBlock {
+    JointBlock::bo(
+        &format!("hp[{algo}]"),
+        xy_space(),
+        Config::new().with("algorithm", Value::C(algo.into())),
+        seed,
+    )
+}
+
+fn cond_block() -> ConditioningBlock {
+    ConditioningBlock::new("algorithm", vec![
+        Arm { value: "a".into(), block: Box::new(joint_for("a", 21)),
+              active: true },
+        Arm { value: "b".into(), block: Box::new(joint_for("b", 22)),
+              active: true },
+    ])
+}
+
+fn obs_bits(block: &dyn BuildingBlock) -> Vec<(String, u64)> {
+    block
+        .observations()
+        .into_iter()
+        .map(|(c, y)| (c.key(), y.to_bits()))
+        .collect()
+}
+
+#[test]
+fn gathered_chunk_of_one_matches_leaf_level_batching_bitwise() {
+    // the propose/observe split must lose nothing: gathering one pull
+    // per submission reproduces the plain round-robin (each leaf pull
+    // its own batch) bit for bit, for leaf batches of 1 and of 3
+    for batch in [1usize, 3] {
+        let mut obj_a = Synth::capped(240);
+        let mut rng_a = Rng::new(99);
+        let mut cond_a = cond_block();
+        {
+            let mut env = Env::with_batch(&mut obj_a, &mut rng_a, batch);
+            for _ in 0..5 {
+                cond_a.do_next(&mut env).unwrap();
+            }
+        }
+
+        let mut obj_b = Synth::capped(240);
+        let mut rng_b = Rng::new(99);
+        let mut cond_b = cond_block();
+        {
+            let mut env = Env::with_batch(&mut obj_b, &mut rng_b, batch);
+            for _ in 0..5 {
+                cond_b.do_next_gathered(&mut env, 1).unwrap();
+            }
+        }
+
+        assert_eq!(obj_a.evals, obj_b.evals, "batch={batch}");
+        assert_eq!(cond_a.n_evals(), cond_b.n_evals(), "batch={batch}");
+        assert_eq!(cond_a.active_values(), cond_b.active_values(),
+                   "batch={batch}");
+        assert_eq!(obs_bits(&cond_a), obs_bits(&cond_b),
+                   "batch={batch}: trajectories diverged");
+        // ...and the gathered run really did submit one batch per pull
+        assert_eq!(obj_a.submissions.len(), obj_b.submissions.len(),
+                   "batch={batch}");
+    }
+}
+
+#[test]
+fn whole_round_super_batch_coalesces_submissions() {
+    let plays = 5; // ConditioningBlock default plays_per_round
+    let mut obj = Synth::capped(1000);
+    let mut rng = Rng::new(7);
+    let mut cond = cond_block();
+    {
+        let mut env = Env::with_super_batch(&mut obj, &mut rng, 1, 0);
+        cond.do_next(&mut env).unwrap();
+    }
+    // 2 active arms x 5 plays x batch 1 = one submission of 10
+    assert_eq!(obj.submissions, vec![plays * 2],
+               "expected one submission for the whole round");
+    assert_eq!(cond.n_evals(), plays * 2);
+
+    // chunked: 3 pulls per submission -> ceil(10 / 3) = 4 submissions
+    let mut obj2 = Synth::capped(1000);
+    let mut rng2 = Rng::new(7);
+    let mut cond2 = cond_block();
+    {
+        let mut env = Env::with_super_batch(&mut obj2, &mut rng2, 1, 3);
+        cond2.do_next(&mut env).unwrap();
+    }
+    assert_eq!(obj2.submissions, vec![3, 3, 3, 1]);
+    assert_eq!(cond2.n_evals(), plays * 2);
+}
+
+#[test]
+fn super_batched_round_truncates_exactly_at_the_budget() {
+    // budget 7 cuts the 10-proposal round mid-batch: the observed
+    // prefix must land exactly on the budget, and arms past the cut
+    // observe nothing
+    let mut obj = Synth::capped(7);
+    let mut rng = Rng::new(8);
+    let mut cond = cond_block();
+    {
+        let mut env = Env::with_super_batch(&mut obj, &mut rng, 1, 0);
+        for _ in 0..3 {
+            cond.do_next(&mut env).unwrap();
+        }
+    }
+    assert_eq!(obj.evals, 7, "must not overshoot");
+    assert_eq!(cond.n_evals(), 7);
+}
+
+#[test]
+fn super_batched_conditioning_still_eliminates_weak_arm() {
+    let mut obj = Synth::capped(400);
+    let mut rng = Rng::new(9);
+    let mut cond = cond_block();
+    {
+        let mut env = Env::with_super_batch(&mut obj, &mut rng, 1, 0);
+        for _ in 0..12 {
+            cond.do_next(&mut env).unwrap();
+        }
+    }
+    assert_eq!(cond.active_values(), vec!["a".to_string()]);
+    let (cfg, y) = cond.current_best().unwrap();
+    assert_eq!(cfg.str_or("algorithm", ""), "a");
+    assert!(y > 0.7, "best={y}");
+}
+
+// ---- system-level harness ------------------------------------------
+
+fn blob_ds(seed: u64) -> volcanoml::data::Dataset {
+    generate(&Profile {
+        name: format!("sbatch-{seed}"),
+        task: Task::Classification { n_classes: 2 },
+        gen: GenKind::Blobs { sep: 1.7 },
+        n: 240,
+        d: 6,
+        noise: 0.05,
+        imbalance: 1.2,
+        redundant: 1,
+        wild_scales: false,
+        seed,
+    })
+}
+
+fn run_sb(ds: &volcanoml::data::Dataset, plan: PlanKind,
+          workers: usize, super_batch: usize, evals: usize)
+    -> RunOutcome {
+    let cfg = VolcanoConfig {
+        plan,
+        scale: SpaceScale::Medium,
+        max_evals: evals,
+        ensemble: EnsembleMethod::None,
+        workers,
+        eval_batch: 1,
+        super_batch,
+        seed: 4321,
+        ..Default::default()
+    };
+    VolcanoML::new(cfg).run(ds, None).unwrap()
+}
+
+#[test]
+fn super_batched_search_is_worker_count_invariant() {
+    // acceptance: cross-leaf super-batch trajectories are
+    // bit-identical across worker counts, for the conditioning plans
+    let ds = blob_ds(1);
+    for plan in [PlanKind::C, PlanKind::CA] {
+        let serial = run_sb(&ds, plan, 1, 0, 24);
+        let parallel = run_sb(&ds, plan, 4, 0, 24);
+        assert_eq!(serial.best_valid_utility.to_bits(),
+                   parallel.best_valid_utility.to_bits(),
+                   "{}: incumbent diverged", plan.name());
+        assert_eq!(serial.best_config, parallel.best_config,
+                   "{}: best config diverged", plan.name());
+        assert_eq!(serial.n_evals, parallel.n_evals,
+                   "{}: evaluation counts diverged", plan.name());
+    }
+}
+
+#[test]
+fn super_batched_search_spends_budget_exactly() {
+    // 22 is not a multiple of the round size: the final super-batch
+    // must truncate to land exactly on the budget
+    let ds = blob_ds(2);
+    for workers in [1, 4] {
+        let out = run_sb(&ds, PlanKind::CA, workers, 0, 22);
+        assert_eq!(out.n_evals, 22,
+                   "workers={workers}: spent {} of 22", out.n_evals);
+    }
+}
+
+#[test]
+fn nested_conditioning_under_alternating_terminates_and_gathers() {
+    // plan AC: Alternating(fe leaf, ConditioningBlock). The
+    // conditioning side cannot split pulls at the alternating level
+    // (regression: an empty-proposal no-op there once looped forever
+    // without consuming budget), but it still gathers its own joint
+    // arms internally — the run must terminate, spend the budget
+    // exactly, and stay worker-count invariant
+    let ds = blob_ds(4);
+    let a = run_sb(&ds, PlanKind::AC, 1, 0, 18);
+    let b = run_sb(&ds, PlanKind::AC, 4, 0, 18);
+    assert_eq!(a.n_evals, 18);
+    assert_eq!(b.n_evals, 18);
+    assert!(a.best_config.is_some());
+    assert_eq!(a.best_valid_utility.to_bits(),
+               b.best_valid_utility.to_bits());
+    assert_eq!(a.best_config, b.best_config);
+}
+
+#[test]
+fn super_batch_default_is_off_and_matches_explicit_one() {
+    // `super_batch: 1` (and the struct default) must keep the PR-1
+    // leaf-level trajectory: two runs, one relying on the default, one
+    // explicit, plus bit-identity between them
+    let ds = blob_ds(3);
+    let explicit = run_sb(&ds, PlanKind::CA, 1, 1, 20);
+    let cfg = VolcanoConfig {
+        plan: PlanKind::CA,
+        scale: SpaceScale::Medium,
+        max_evals: 20,
+        ensemble: EnsembleMethod::None,
+        workers: 1,
+        eval_batch: 1,
+        seed: 4321,
+        ..Default::default()
+    };
+    assert_eq!(cfg.super_batch, 1, "super-batching must default off");
+    let default_run = VolcanoML::new(cfg).run(&ds, None).unwrap();
+    assert_eq!(explicit.best_valid_utility.to_bits(),
+               default_run.best_valid_utility.to_bits());
+    assert_eq!(explicit.best_config, default_run.best_config);
+    assert_eq!(explicit.n_evals, default_run.n_evals);
+}
