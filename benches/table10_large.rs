@@ -53,6 +53,8 @@ fn main() {
                 budget_secs: f64::INFINITY,
                 workers: volcanoml::bench::bench_workers(),
                 super_batch: volcanoml::bench::bench_super_batch(),
+                pipeline_depth:
+                    volcanoml::bench::bench_pipeline_depth(),
                 seed: 43,
             };
             if let Ok(out) = run_system(sys, &ds, &spec, None,

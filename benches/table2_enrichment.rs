@@ -29,6 +29,7 @@ fn main() {
             budget_secs: f64::INFINITY,
             workers: volcanoml::bench::bench_workers(),
             super_batch: volcanoml::bench::bench_super_batch(),
+            pipeline_depth: volcanoml::bench::bench_pipeline_depth(),
             seed: 42,
         };
         let ausk = run_system(SystemKind::AuskMinus, &ds, &spec, None,

@@ -71,6 +71,8 @@ fn main() {
                 budget_secs: f64::INFINITY,
                 workers,
                 super_batch: volcanoml::bench::bench_super_batch(),
+                pipeline_depth:
+                    volcanoml::bench::bench_pipeline_depth(),
                 seed: 42,
             };
             for sys in [SystemKind::Tpot, SystemKind::AuskMinus] {

@@ -5,10 +5,12 @@
 //! blob workload, once strictly serially (`workers = 1`, batch of 1 —
 //! the exact pre-parallel execution path) and, when `--workers N > 1`,
 //! once with batched `do_next` fanned out across N persistent worker
-//! threads and once more with cross-leaf super-batching (`--super-batch
+//! threads, once more with cross-leaf super-batching (`--super-batch
 //! 0`: a whole conditioning round per `evaluate_batch` submission, so
-//! elimination rounds parallelise across arms too). Prints the
-//! incumbents and the wall-clock speedups.
+//! elimination rounds parallelise across arms too), and finally with
+//! the async pipeline at depth 2 (the next round is speculatively
+//! proposed while the current one is in flight, at the identical eval
+//! budget). Prints the incumbents and the wall-clock speedups.
 //!
 //! Part 2: full searches over several registry datasets whose
 //! trainable arms run through the AOT-compiled JAX/Pallas artifacts
@@ -35,9 +37,11 @@ use volcanoml::plan::PlanKind;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let workers = args.usize_or("workers", 2)?.max(1);
-    // super-batch size for the part-2 registry runs (part 1 sweeps
-    // the settings itself); 1 = off, 0 = whole conditioning round
+    // super-batch size / pipeline depth for the part-2 registry runs
+    // (part 1 sweeps the settings itself); super-batch: 1 = off, 0 =
+    // whole conditioning round; pipeline depth: 1 = synchronous
     let super_batch = args.usize_or("super-batch", 1)?;
+    let pipeline_depth = args.usize_or("pipeline-depth", 1)?.max(1);
     args.finish()?;
     let evals = std::env::var("E2E_EVALS")
         .ok().and_then(|v| v.parse().ok()).unwrap_or(48);
@@ -55,7 +59,8 @@ fn main() -> anyhow::Result<()> {
         wild_scales: false,
         seed: 7,
     });
-    let search = |w: usize, batch: usize, super_batch: usize|
+    let search = |w: usize, batch: usize, super_batch: usize,
+                  depth: usize|
         -> anyhow::Result<(f64, f64, usize)> {
         let cfg = VolcanoConfig {
             plan: PlanKind::CA,
@@ -67,6 +72,7 @@ fn main() -> anyhow::Result<()> {
             workers: w,
             eval_batch: batch,
             super_batch,
+            pipeline_depth: depth,
             seed: 42,
             ..Default::default()
         };
@@ -78,11 +84,11 @@ fn main() -> anyhow::Result<()> {
 
     println!("== parallel Volcano executor on {} (n={}, d={}, {} \
               evals) ==", blobs.name, blobs.n, blobs.d, evals);
-    let (t1, u1, n1) = search(1, 1, 1)?;
+    let (t1, u1, n1) = search(1, 1, 1, 1)?;
     println!("  serial        (workers=1): {t1:7.2}s  best valid \
               {u1:.4}  ({n1} evals)");
     if workers > 1 {
-        let (tn, un, nn) = search(workers, 0, 1)?;
+        let (tn, un, nn) = search(workers, 0, 1, 1)?;
         println!("  leaf-batched  (workers={workers}): {tn:7.2}s  best \
                   valid {un:.4}  ({nn} evals)");
         println!("    speedup vs serial: {:.2}x", t1 / tn.max(1e-9));
@@ -93,16 +99,32 @@ fn main() -> anyhow::Result<()> {
         // conditioning round per evaluate_batch call — the pool stays
         // saturated across arm boundaries instead of joining after
         // every leaf pull
-        let (ts, us, ns) = search(workers, 1, 0)?;
+        let (ts, us, ns) = search(workers, 1, 0, 1)?;
         println!("  super-batched (workers={workers}): {ts:7.2}s  best \
                   valid {us:.4}  ({ns} evals)");
         println!("    speedup vs serial: {:.2}x  vs leaf-batched: \
                   {:.2}x", t1 / ts.max(1e-9), tn / ts.max(1e-9));
         assert!(us.is_finite(),
                 "super-batched search must produce an incumbent");
+        // async pipeline depth 2: same super-batched rounds and the
+        // same eval budget, but while a round is in flight on the
+        // pool the coordinator refits surrogates and proposes the
+        // next round — the search's "thinking time" leaves the
+        // wall-clock hot path
+        let (tp, up, np) = search(workers, 1, 0, 2)?;
+        println!("  pipelined d=2 (workers={workers}): {tp:7.2}s  best \
+                  valid {up:.4}  ({np} evals)");
+        println!("    speedup vs serial: {:.2}x  vs depth-1 \
+                  super-batched: {:.2}x",
+                 t1 / tp.max(1e-9), ts / tp.max(1e-9));
+        assert!(up.is_finite(),
+                "pipelined search must produce an incumbent");
+        assert_eq!(np, ns,
+                   "pipeline depth must not change the eval budget");
     } else {
         println!("  (pass --workers N to compare against the worker \
-                  pool and cross-leaf super-batching)");
+                  pool, cross-leaf super-batching and the async \
+                  pipeline)");
     }
 
     // ---- part 2: registry datasets, PJRT arms when available -------
@@ -138,6 +160,7 @@ fn main() -> anyhow::Result<()> {
             budget_secs: f64::INFINITY,
             workers,
             super_batch,
+            pipeline_depth,
             seed: 42,
         };
         let out = run_system(SystemKind::VolcanoMLMinus, &ds, &spec,

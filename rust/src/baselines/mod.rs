@@ -95,6 +95,9 @@ pub struct BaseSpec {
     /// Cross-leaf super-batching (leaf pulls per `evaluate_batch`
     /// submission in conditioning rounds): 1 = off, 0 = whole round.
     pub super_batch: usize,
+    /// Async pipeline depth (chunks proposed ahead of the in-flight
+    /// one): 1 = synchronous, d > 1 = speculative overlap.
+    pub pipeline_depth: usize,
     pub seed: u64,
 }
 
@@ -107,6 +110,7 @@ impl BaseSpec {
             budget_secs: self.budget_secs,
             workers: self.workers.max(1),
             super_batch: self.super_batch,
+            pipeline_depth: self.pipeline_depth.max(1),
             seed: self.seed,
             ..Default::default()
         };
@@ -263,6 +267,7 @@ mod tests {
             budget_secs: f64::INFINITY,
             workers: 1,
             super_batch: 1,
+            pipeline_depth: 1,
             seed: 5,
         }
     }

@@ -261,6 +261,28 @@ pub fn save_results(name: &str, v: &crate::util::json::Json) {
     }
 }
 
+/// Shared parser for the bench / driver knobs: `--<flag> N` (pass
+/// after `--` under `cargo bench`/`cargo run`) wins over the env
+/// var, which wins over `default`. `zero_ok` admits 0 as a real
+/// value (the super-batch "whole round" setting); otherwise 0 and
+/// unparseable values fall through.
+fn bench_knob(flag: &str, env: &str, zero_ok: bool, default: usize)
+    -> usize {
+    let valid = |n: &usize| zero_ok || *n > 0;
+    crate::cli::Args::from_env()
+        .ok()
+        .and_then(|a| a.usize_or(flag, usize::MAX).ok())
+        .filter(|&n| n != usize::MAX)
+        .filter(valid)
+        .or_else(|| {
+            std::env::var(env)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .filter(valid)
+        })
+        .unwrap_or(default)
+}
+
 /// Worker threads for bench / driver runs: `--workers N` (pass after
 /// `--` under `cargo bench`/`cargo run`) or the VOLCANO_WORKERS env
 /// var; defaults to 1 (serial). N > 1 also proposes candidates in
@@ -269,18 +291,7 @@ pub fn save_results(name: &str, v: &crate::util::json::Json) {
 /// Worker count alone is trajectory-invariant only at a fixed batch
 /// size (see rust/README.md).
 pub fn bench_workers() -> usize {
-    let from_args = crate::cli::Args::from_env()
-        .ok()
-        .and_then(|a| a.usize_or("workers", 0).ok())
-        .filter(|&n| n > 0);
-    from_args
-        .or_else(|| {
-            std::env::var("VOLCANO_WORKERS")
-                .ok()
-                .and_then(|v| v.parse().ok())
-                .filter(|&n| n > 0)
-        })
-        .unwrap_or(1)
+    bench_knob("workers", "VOLCANO_WORKERS", false, 1)
 }
 
 /// Cross-leaf super-batch size for bench / driver runs:
@@ -290,17 +301,18 @@ pub fn bench_workers() -> usize {
 /// size this is a semantic knob, so paper-table trajectories shift
 /// when it is enabled (worker count alone still never changes them).
 pub fn bench_super_batch() -> usize {
-    let from_args = crate::cli::Args::from_env()
-        .ok()
-        .and_then(|a| a.usize_or("super-batch", usize::MAX).ok())
-        .filter(|&n| n != usize::MAX);
-    from_args
-        .or_else(|| {
-            std::env::var("VOLCANO_SUPER_BATCH")
-                .ok()
-                .and_then(|v| v.parse().ok())
-        })
-        .unwrap_or(1)
+    bench_knob("super-batch", "VOLCANO_SUPER_BATCH", true, 1)
+}
+
+/// Async pipeline depth for bench / driver runs: `--pipeline-depth N`
+/// (after `--`) or VOLCANO_PIPELINE_DEPTH; defaults to 1
+/// (synchronous — today's trajectories bit for bit). With N > 1 the
+/// coordinator speculatively proposes up to N - 1 chunks of the next
+/// conditioning rounds while the current chunk evaluates on the
+/// pool. Like the (super-)batch size this is a semantic knob; worker
+/// count alone still never changes trajectories at a fixed depth.
+pub fn bench_pipeline_depth() -> usize {
+    bench_knob("pipeline-depth", "VOLCANO_PIPELINE_DEPTH", false, 1)
 }
 
 /// Open the PJRT runtime if artifacts are built (bench targets degrade
@@ -371,6 +383,7 @@ pub fn run_matrix(profiles: &[crate::data::synthetic::Profile],
             budget_secs: f64::INFINITY,
             workers: bench_workers(),
             super_batch: bench_super_batch(),
+            pipeline_depth: bench_pipeline_depth(),
             seed,
         };
         let mut urow = Vec::new();

@@ -31,6 +31,8 @@
 //! leaf batch size) is a semantic knob, and `super_batch == 1`
 //! (the default) reproduces the leaf-level batching exactly.
 
+use std::collections::VecDeque;
+
 use anyhow::Result;
 
 use crate::opt::multifidelity::{HyperbandFamily, MfOptimizer};
@@ -69,8 +71,51 @@ pub trait Objective {
         Ok(out)
     }
 
+    /// Like [`evaluate_batch`](Self::evaluate_batch), but hands the
+    /// submitting thread back to the caller while the batch is in
+    /// flight: `overlap` runs on the caller's thread concurrently
+    /// with the evaluations (parallel objectives start the batch on
+    /// their worker pool first, then invoke `overlap`, then join).
+    /// This is the hook behind the async pipeline depth
+    /// ([`Env::pipeline_depth`]): the conditioning block uses the
+    /// window to speculatively propose the next round.
+    ///
+    /// Contract: `overlap` must not call back into this objective
+    /// (the budget/cache state is mid-batch), and it can never
+    /// observe the batch's results — whatever it proposes is based
+    /// on pre-batch state only. The returned utilities follow the
+    /// exact `evaluate_batch` prefix/budget semantics.
+    ///
+    /// The default implementation runs `overlap` first, then
+    /// evaluates serially — the same "speculation never sees the
+    /// results" ordering as a real overlapped pool, so trajectories
+    /// are identical whether or not an objective truly overlaps.
+    fn evaluate_batch_overlapped(&mut self, reqs: &[(Config, f64)],
+                                 overlap: &mut dyn FnMut())
+        -> Result<Vec<f64>> {
+        overlap();
+        self.evaluate_batch(reqs)
+    }
+
     /// True when the budget is exhausted; blocks stop issuing work.
     fn exhausted(&self) -> bool;
+}
+
+/// Placeholder objective handed to *speculative* `propose` calls
+/// (async pipeline depth): proposals must depend only on rng and
+/// block state, so touching the objective mid-speculation is a bug —
+/// this guard turns it into a loud panic instead of a torn read of
+/// in-flight budget/cache state.
+struct SpeculationGuard;
+
+impl Objective for SpeculationGuard {
+    fn evaluate(&mut self, _cfg: &Config, _fidelity: f64) -> Result<f64> {
+        unreachable!("speculative propose must not evaluate")
+    }
+
+    fn exhausted(&self) -> bool {
+        unreachable!("speculative propose must not consult the budget")
+    }
 }
 
 pub struct Env<'a> {
@@ -89,6 +134,18 @@ pub struct Env<'a> {
     /// pulls. Like `batch`, this is a semantic knob: proposals inside
     /// one super-batch cannot see each other's results.
     pub super_batch: usize,
+    /// Async pipeline depth: how many gathered chunks may be proposed
+    /// ahead of the chunk currently evaluating. `1` (the default) is
+    /// fully synchronous — propose, evaluate, observe, repeat — and
+    /// preserves today's trajectories bit for bit. `d > 1` lets the
+    /// conditioning block *speculatively* propose up to `d - 1`
+    /// future chunks (crossing elimination-round boundaries) while a
+    /// chunk is in flight on the worker pool, reconciling or
+    /// discarding the speculation when the observations land. Like
+    /// `batch`/`super_batch` this is a semantic knob (speculative
+    /// proposals cannot see the in-flight results), and for any fixed
+    /// depth the trajectory is still worker-count invariant.
+    pub pipeline_depth: usize,
 }
 
 impl<'a> Env<'a> {
@@ -105,7 +162,19 @@ impl<'a> Env<'a> {
     pub fn with_super_batch(obj: &'a mut dyn Objective,
                             rng: &'a mut Rng, batch: usize,
                             super_batch: usize) -> Env<'a> {
-        Env { obj, rng, batch: batch.max(1), super_batch }
+        Env::with_pipeline(obj, rng, batch, super_batch, 1)
+    }
+
+    pub fn with_pipeline(obj: &'a mut dyn Objective, rng: &'a mut Rng,
+                         batch: usize, super_batch: usize,
+                         pipeline_depth: usize) -> Env<'a> {
+        Env {
+            obj,
+            rng,
+            batch: batch.max(1),
+            super_batch,
+            pipeline_depth: pipeline_depth.max(1),
+        }
     }
 }
 
@@ -447,6 +516,58 @@ pub struct Arm {
     pub active: bool,
 }
 
+/// One speculatively proposed chunk: `(arm index, proposal)` pairs in
+/// pull order. Buffered in [`ConditioningBlock`] until its turn to be
+/// evaluated, reconciled against eliminations at every round
+/// boundary, and discarded unevaluated if the budget dies first.
+type SpecChunk = Vec<(usize, Proposal)>;
+
+/// The `Env` knobs a speculative proposal still needs (everything but
+/// the objective, which speculation must not touch).
+#[derive(Clone, Copy)]
+struct PullKnobs {
+    batch: usize,
+    super_batch: usize,
+    pipeline_depth: usize,
+}
+
+/// Plan one pull of `arm` for the speculative pipeline: the proposal
+/// may only depend on rng and block state, so the environment carries
+/// a [`SpeculationGuard`] instead of the (mid-batch) real objective.
+fn propose_pull(arm: &mut Arm, rng: &mut Rng, knobs: PullKnobs)
+    -> Result<Proposal> {
+    let mut guard = SpeculationGuard;
+    let mut env = Env {
+        obj: &mut guard,
+        rng,
+        batch: knobs.batch,
+        super_batch: knobs.super_batch,
+        pipeline_depth: knobs.pipeline_depth,
+    };
+    arm.block.propose(&mut env)
+}
+
+/// Propose the next chunk of the (conceptually infinite) pull stream
+/// `full[g % full.len()]` starting at `cursor`: up to `chunk` pulls,
+/// never crossing the next round boundary (elimination runs between
+/// rounds). Returns the new cursor and the planned chunk. Shared by
+/// the pipelined loop's synchronous fallback and its speculation
+/// window, so the round-capping arithmetic cannot diverge between
+/// them.
+fn propose_chunk(arms: &mut [Arm], rng: &mut Rng, full: &[usize],
+                 cursor: usize, chunk: usize, knobs: PullKnobs)
+    -> Result<(usize, SpecChunk)> {
+    let n = full.len();
+    let round_end = ((cursor / n) + 1) * n;
+    let end = (cursor + chunk).min(round_end);
+    let mut c: SpecChunk = Vec::with_capacity(end - cursor);
+    for g in cursor..end {
+        let ai = full[g % n];
+        c.push((ai, propose_pull(&mut arms[ai], rng, knobs)?));
+    }
+    Ok((end, c))
+}
+
 pub struct ConditioningBlock {
     pub var: String,
     pub arms: Vec<Arm>,
@@ -461,6 +582,14 @@ pub struct ConditioningBlock {
     /// EU interval is still over-pessimistic (§3.3.2 Remark).
     pub elimination_grace: usize,
     rounds: usize,
+    /// Speculative-proposal buffer (async pipeline depth): chunks
+    /// proposed ahead of the currently evaluating one, each tagged
+    /// with how many *round boundaries* ahead it lies (0 = the round
+    /// being played). Reconciled after every elimination (tags
+    /// decrement, pulls of eliminated arms are dropped) and cleared
+    /// whenever a round is abandoned — buffered proposals are never
+    /// evaluated or charged once the budget is gone.
+    spec: VecDeque<(usize, SpecChunk)>,
 }
 
 impl ConditioningBlock {
@@ -473,12 +602,20 @@ impl ConditioningBlock {
             eliminate: true,
             elimination_grace: 12,
             rounds: 0,
+            spec: VecDeque::new(),
         }
     }
 
     /// Continue-tuning (§3.3.6): extend the surviving candidate set
-    /// with new arms; they join the round-robin immediately.
+    /// with new arms; they join the round-robin immediately. Any
+    /// speculatively proposed rounds are discarded — they were
+    /// planned for the old arm set. (Like all discarded speculation
+    /// this leaves the surviving arms' proposal bookkeeping advanced
+    /// — deterministically — by the dropped pulls; drivers that mix
+    /// continue-tuning with `pipeline_depth > 1` accept that shift,
+    /// and depth 1 is unaffected.)
     pub fn add_arms(&mut self, arms: Vec<Arm>) {
+        self.spec.clear();
         self.arms.extend(arms);
     }
 
@@ -567,9 +704,19 @@ impl ConditioningBlock {
     /// eliminate. `chunk == 1` must be bit-identical to the plain
     /// `do_next` round-robin when every arm is a leaf (property-tested
     /// in `tests/super_batch.rs`; see [`Self::gather_round`] for the
-    /// alternating-arm granularity caveat).
+    /// alternating-arm granularity caveat). With
+    /// `Env::pipeline_depth > 1` the round runs through the
+    /// speculative pipeline instead (see
+    /// [`Self::do_next_pipelined`]).
     pub fn do_next_gathered(&mut self, env: &mut Env, chunk: usize)
         -> Result<()> {
+        let depth = env.pipeline_depth.max(1);
+        if depth > 1 {
+            return self.do_next_pipelined(env, chunk, depth);
+        }
+        // synchronous rounds never consume speculation: drop any
+        // buffer left over from a depth change between pulls
+        self.spec.clear();
         self.rounds += 1;
         if !self.gather_round(env, chunk)? {
             return Ok(());
@@ -578,6 +725,184 @@ impl ConditioningBlock {
             self.eliminate_dominated();
         }
         Ok(())
+    }
+
+    /// Testing/driver hook for the async pipeline: play one
+    /// elimination round with an explicit chunk size and pipeline
+    /// depth (bypassing the `Env` knobs). `depth == 1` is
+    /// bit-identical to [`Self::do_next_gathered`] — the pipelined
+    /// loop with an empty speculation window proposes, evaluates and
+    /// observes exactly like the synchronous gather (property-tested
+    /// in `tests/async_depth.rs`). `depth > 1` keeps up to
+    /// `depth - 1` chunks proposed ahead of the one in flight,
+    /// spilling across round boundaries; the speculation is
+    /// reconciled against eliminations when the round's observations
+    /// land and discarded — never evaluated, never charged — when
+    /// the budget dies first.
+    pub fn do_next_pipelined(&mut self, env: &mut Env, chunk: usize,
+                             depth: usize) -> Result<()> {
+        self.rounds += 1;
+        let window = depth.max(1) - 1;
+        if !self.pipelined_round(env, chunk, window)? {
+            // round abandoned at a chunk boundary: elimination is
+            // skipped, exactly like the synchronous gather path
+            return Ok(());
+        }
+        if self.eliminate {
+            self.eliminate_dominated();
+        }
+        self.reconcile_spec();
+        Ok(())
+    }
+
+    /// Play one elimination round with a speculation window of
+    /// `window` chunks: while a chunk is in flight (inside
+    /// [`Objective::evaluate_batch_overlapped`]) the submitting
+    /// thread proposes ahead — first the rest of this round, then
+    /// speculatively into future rounds — so surrogate refits and
+    /// acquisition optimisation run off the evaluation hot path.
+    /// Returns false when the budget is exhausted at a chunk
+    /// boundary (round abandoned; all speculation discarded), true
+    /// when the round completed — possibly truncated inside its
+    /// final chunk, mirroring [`Self::gather_round`].
+    fn pipelined_round(&mut self, env: &mut Env, chunk: usize,
+                       window: usize) -> Result<bool> {
+        let plays = self.plays_per_round;
+        let Env { obj, rng, batch, super_batch, pipeline_depth } = env;
+        let knobs = PullKnobs {
+            batch: *batch,
+            super_batch: *super_batch,
+            pipeline_depth: *pipeline_depth,
+        };
+        let arms = &mut self.arms;
+        let spec = &mut self.spec;
+        let active: Vec<usize> = arms
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.active)
+            .map(|(i, _)| i)
+            .collect();
+        let mut full: Vec<usize> =
+            Vec::with_capacity(active.len() * plays);
+        for _ in 0..plays {
+            full.extend(&active);
+        }
+        let n = full.len();
+        if n == 0 {
+            spec.clear();
+            return Ok(true);
+        }
+        let chunk = if chunk == 0 { n } else { chunk };
+        // The buffer covers a prefix of the pull stream (this round
+        // first, then future rounds): reconciliation preserves that —
+        // filtering eliminated arms out of a prefix of the old round
+        // yields exactly a prefix of the new one — so the proposal
+        // cursor resumes right after everything already proposed.
+        let mut cursor: usize = spec.iter().map(|(_, c)| c.len()).sum();
+        // chunks already proposed for *this* round
+        let mut ready: VecDeque<SpecChunk> = VecDeque::new();
+        while matches!(spec.front(), Some((0, _))) {
+            ready.push_back(spec.pop_front().expect("front checked").1);
+        }
+        let mut spec_err: Option<anyhow::Error> = None;
+        let mut done = 0usize; // pulls of this round observed
+        while done < n {
+            if obj.exhausted() {
+                // budget died at a chunk boundary: abandon the round
+                // and discard every speculative proposal unevaluated
+                spec.clear();
+                return Ok(false);
+            }
+            let cur: SpecChunk = match ready.pop_front() {
+                Some(c) => c,
+                None => {
+                    // nothing buffered: propose the next chunk now
+                    // (this is the whole loop when the window is 0 —
+                    // the synchronous gather semantics; the cursor is
+                    // always inside round 0 here, so the helper's
+                    // round cap reduces to `n`)
+                    let (end, c) = propose_chunk(arms, &mut **rng,
+                                                 &full, cursor, chunk,
+                                                 knobs)?;
+                    cursor = end;
+                    c
+                }
+            };
+            if cur.is_empty() {
+                // Defensive guard, unreachable today: reconcile_spec
+                // prunes emptied chunks and the propose branch always
+                // covers >= 1 pull. If a future change lets an empty
+                // chunk through, skipping it (it counts toward
+                // neither `done` nor the round length) beats the
+                // alternative — a zero-progress iteration that would
+                // spin this loop forever.
+                continue;
+            }
+            let mut reqs: Vec<(Config, f64)> = Vec::new();
+            for (_, p) in &cur {
+                reqs.extend_from_slice(&p.reqs);
+            }
+            // While this chunk is in flight, top the speculation
+            // window back up: the rest of this round first, then
+            // future rounds (tagged with their distance so the round
+            // boundary — elimination — is honoured when they play).
+            let ys = obj.evaluate_batch_overlapped(&reqs, &mut || {
+                while spec_err.is_none()
+                    && ready.len() + spec.len() < window
+                {
+                    let round = cursor / n;
+                    match propose_chunk(arms, &mut **rng, &full,
+                                        cursor, chunk, knobs) {
+                        Ok((end, c)) => {
+                            if round == 0 {
+                                ready.push_back(c);
+                            } else {
+                                spec.push_back((round, c));
+                            }
+                            cursor = end;
+                        }
+                        Err(e) => {
+                            spec_err = Some(e);
+                            return;
+                        }
+                    }
+                }
+            })?;
+            // commit in proposal order; each arm observes the prefix
+            // of its slice that the budget allowed (possibly empty)
+            let mut off = 0;
+            for (ai, p) in cur {
+                let m = p.reqs.len();
+                let lo = off.min(ys.len());
+                let hi = (off + m).min(ys.len());
+                arms[ai].block.observe(p, &ys[lo..hi]);
+                off += m;
+                done += 1;
+            }
+            if let Some(e) = spec_err.take() {
+                return Err(e);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Round-boundary reconciliation of the speculative buffer: every
+    /// chunk moves one round closer to play, and proposals of arms
+    /// eliminated this round are dropped — never evaluated, never
+    /// charged. Discarding is deterministic but not side-effect-free:
+    /// proposing advanced the arm's rng and any stateful proposal
+    /// bookkeeping (an alternating arm's warmup/toggle schedule, a
+    /// Hyperband engine's rung queue). That is part of the
+    /// depth-`d > 1` semantics — an eliminated arm never plays again,
+    /// and for any fixed depth the effect is identical on every run.
+    /// Chunks emptied entirely are pruned.
+    fn reconcile_spec(&mut self) {
+        let arms = &self.arms;
+        for (delta, chunk) in self.spec.iter_mut() {
+            *delta = delta.saturating_sub(1);
+            chunk.retain(|(ai, _)| arms[*ai].active);
+        }
+        self.spec.retain(|(_, c)| !c.is_empty());
     }
 
     /// Lines 5-7 of Algorithm 1: deactivate arms whose EU upper bound
@@ -634,11 +959,14 @@ impl BuildingBlock for ConditioningBlock {
     }
 
     fn do_next(&mut self, env: &mut Env) -> Result<()> {
-        // cross-leaf super-batching: when enabled and every active arm
-        // can split its pull, gather the round's proposals and submit
-        // them in super-batches (one evaluate_batch for up to the
-        // whole round) so elimination rounds parallelise across arms
-        if env.super_batch != 1
+        // cross-leaf super-batching and/or async pipelining: when
+        // enabled and every active arm can split its pull, gather the
+        // round's proposals and submit them in (possibly overlapped)
+        // super-batches so elimination rounds parallelise across arms
+        // — with pipeline_depth > 1 the next round is speculatively
+        // proposed while this one is in flight. A pipeline depth
+        // without super-batching gathers chunks of one pull.
+        if (env.super_batch != 1 || env.pipeline_depth > 1)
             && self.arms.iter().any(|a| a.active)
             && self
                 .arms
@@ -649,6 +977,8 @@ impl BuildingBlock for ConditioningBlock {
             let chunk = env.super_batch;
             return self.do_next_gathered(env, chunk);
         }
+        // the plain round-robin never consumes speculation
+        self.spec.clear();
         self.rounds += 1;
         // lines 2-4: play each active arm L times (round-robin); with
         // super-batching off each arm pull is its own batch

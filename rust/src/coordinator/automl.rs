@@ -64,6 +64,18 @@ pub struct VolcanoConfig {
     /// each other's results); for any fixed value the trajectory is
     /// still worker-count invariant.
     pub super_batch: usize,
+    /// Async pipeline depth: chunks of a conditioning round proposed
+    /// ahead of the one in flight on the worker pool. `1` (default)
+    /// is fully synchronous and preserves today's trajectories bit
+    /// for bit; `d > 1` overlaps surrogate refit + proposal of the
+    /// next `d - 1` chunks (crossing elimination rounds) with the
+    /// in-flight evaluations — speculation is reconciled against
+    /// eliminations when results land and discarded unevaluated when
+    /// the budget dies. Like `eval_batch`/`super_batch` this shapes
+    /// the trajectory; for any fixed depth it stays worker-count
+    /// invariant. Ignored by the progressive strategy (which has no
+    /// conditioning rounds to pipeline).
+    pub pipeline_depth: usize,
     pub seed: u64,
 }
 
@@ -87,6 +99,7 @@ impl Default for VolcanoConfig {
             workers: 1,
             eval_batch: 0,
             super_batch: 1,
+            pipeline_depth: 1,
             seed: 42,
         }
     }
@@ -199,9 +212,10 @@ impl VolcanoML {
 
         let root: Box<dyn BuildingBlock>;
         if cfg.progressive {
-            let mut env = Env::with_super_batch(&mut evaluator,
-                                                &mut search_rng, batch,
-                                                cfg.super_batch);
+            let mut env = Env::with_pipeline(&mut evaluator,
+                                             &mut search_rng, batch,
+                                             cfg.super_batch,
+                                             cfg.pipeline_depth);
             let phase = cfg.max_evals / 3;
             run_progressive(&builder, &mut env, phase, phase)?;
             root = builder.build(cfg.plan); // structure only (unused)
@@ -209,10 +223,11 @@ impl VolcanoML {
             let mut plan = ExecutionPlan::new(builder.build(cfg.plan));
             loop {
                 {
-                    let mut env = Env::with_super_batch(&mut evaluator,
-                                                        &mut search_rng,
-                                                        batch,
-                                                        cfg.super_batch);
+                    let mut env =
+                        Env::with_pipeline(&mut evaluator,
+                                           &mut search_rng, batch,
+                                           cfg.super_batch,
+                                           cfg.pipeline_depth);
                     if env.obj.exhausted() {
                         break;
                     }

@@ -312,7 +312,16 @@ impl<'a> Objective for PipelineEvaluator<'a> {
         Ok(self.commit(key, cfg, fidelity, res, elapsed))
     }
 
-    /// Batched evaluation over the worker pool.
+    /// Batched evaluation over the worker pool: the overlapped path
+    /// with an empty overlap window.
+    fn evaluate_batch(&mut self, reqs: &[(Config, f64)])
+        -> Result<Vec<f64>> {
+        self.evaluate_batch_overlapped(reqs, &mut || {})
+    }
+
+    /// Batched evaluation over the worker pool, with the submitting
+    /// thread handed back to `overlap` while the batch is in flight
+    /// (the async pipeline depth's speculative-proposal window).
     ///
     /// Three phases keep this exactly equivalent to processing the
     /// requests one by one in order:
@@ -320,11 +329,24 @@ impl<'a> Objective for PipelineEvaluator<'a> {
     ///    the cache, to an earlier in-batch duplicate, or to the fresh
     ///    list — truncating the batch once the fresh list reaches the
     ///    remaining evaluation budget.
-    /// 2. *Execute* (parallel): run the fresh list on the pool; pure
-    ///    `&self`, results land by index.
+    /// 2. *Execute* (parallel): submit the fresh list to the pool
+    ///    (non-blocking), run `overlap()` on this thread while the
+    ///    workers evaluate, then drain; pure `&self`, results land by
+    ///    index. With one worker nothing is scheduled: `overlap` runs
+    ///    first and the evaluations follow inline at the drain, so
+    ///    speculation never sees results for any worker count — and a
+    ///    panicking evaluation always surfaces at the join, after the
+    ///    overlap work, pool or no pool.
     /// 3. *Commit* (serial): walk the planned slots in order, applying
     ///    each fresh result's side effects via [`Self::commit`].
-    fn evaluate_batch(&mut self, reqs: &[(Config, f64)])
+    ///
+    /// Budget: `overlap` runs even when the batch truncates to
+    /// nothing, but anything it proposes past the budget is discarded
+    /// unevaluated by the caller (`ConditioningBlock` clears its
+    /// speculation buffer at the next exhausted check), so cancelled
+    /// speculative work is never charged.
+    fn evaluate_batch_overlapped(&mut self, reqs: &[(Config, f64)],
+                                 overlap: &mut dyn FnMut())
         -> Result<Vec<f64>> {
         // every batch size goes through the planner — a batch of 1 at
         // zero remaining budget truncates to nothing (returning the
@@ -364,16 +386,21 @@ impl<'a> Objective for PipelineEvaluator<'a> {
         }
 
         let ex = self.executor.clone();
-        let shared: &PipelineEvaluator = self;
-        let mut outs: Vec<Option<(f64, Result<f64>)>> = ex
-            .run(&fresh, |(_, cfg, fid)| {
-                let t0 = Instant::now();
-                let res = shared.eval_inner(cfg, *fid);
-                (t0.elapsed().as_secs_f64(), res)
-            })
-            .into_iter()
-            .map(Some)
-            .collect();
+        let mut outs: Vec<Option<(f64, Result<f64>)>> = {
+            let shared: &PipelineEvaluator = self;
+            let pending =
+                ex.submit(&fresh, |t: &(String, Config, f64)| {
+                    let t0 = Instant::now();
+                    let res = shared.eval_inner(&t.1, t.2);
+                    (t0.elapsed().as_secs_f64(), res)
+                });
+            // the overlap window: the caller speculates on this
+            // thread while the pool works the batch (with a serial
+            // executor the batch is deferred until the drain below,
+            // preserving the same speculate-then-observe order)
+            overlap();
+            pending.drain().into_iter().map(Some).collect()
+        };
 
         let mut done: Vec<Option<f64>> = vec![None; fresh.len()];
         let mut out = Vec::with_capacity(slots.len());

@@ -8,6 +8,7 @@ pub mod balance;
 pub mod embedding;
 pub mod ops;
 
+use std::borrow::Cow;
 use std::sync::Arc;
 
 use crate::data::dataset::Dataset;
@@ -208,9 +209,19 @@ impl FePipeline {
     /// the (possibly augmented) training index set. Validation/test
     /// indices remain valid because balancer rows are appended at the
     /// end.
-    pub fn fit_apply(&self, ds: &Dataset, cfg: &Config, train: &[usize],
-                     rng: &mut Rng) -> AppliedFe {
-        let mut data = ds.clone();
+    ///
+    /// Copy-on-write: the input dataset is *borrowed* until a stage
+    /// actually changes it — identity operators (`none` scalers and
+    /// transformers, the `raw` embedding, balancers that add no rows)
+    /// pass the borrow straight through, so a pipeline of no-ops
+    /// performs zero row copies per evaluation instead of cloning the
+    /// whole dataset, and any pipeline saves the old unconditional
+    /// up-front clone (the first transforming stage writes its output
+    /// into fresh storage directly).
+    pub fn fit_apply<'d>(&self, ds: &'d Dataset, cfg: &Config,
+                         train: &[usize], rng: &mut Rng)
+        -> AppliedFe<'d> {
+        let mut data: Cow<'d, Dataset> = Cow::Borrowed(ds);
         let mut train: Vec<usize> = train.to_vec();
         for stage in &self.stages {
             let fallback = if stage.ops.iter().any(|o| o == "none") {
@@ -222,27 +233,36 @@ impl FePipeline {
             let local = Self::local_cfg(&stage.name, &op, cfg);
             match stage.kind {
                 StageKind::Embedding => {
-                    data = embedding::apply_embedding(&op, &data);
+                    // the raw embedding is the identity
+                    if op != "raw" {
+                        data = Cow::Owned(
+                            embedding::apply_embedding(&op, &data));
+                    }
                 }
                 StageKind::Scaler => {
                     let f = ops::fit_scaler(&op, &data, &train, &local);
-                    data = f.apply(&data);
+                    if !matches!(f, ops::Fitted::Identity) {
+                        data = Cow::Owned(f.apply(&data));
+                    }
                 }
                 StageKind::Balancer => {
                     let b = balance::apply_balancer(&op, &data, &train,
                                                     &local, rng);
                     if b.n_extra > 0 {
-                        let first_new = data.n;
-                        data.x.extend_from_slice(&b.extra_x);
-                        data.y.extend_from_slice(&b.extra_y);
-                        data.n += b.n_extra;
+                        let d = data.to_mut();
+                        let first_new = d.n;
+                        d.x.extend_from_slice(&b.extra_x);
+                        d.y.extend_from_slice(&b.extra_y);
+                        d.n += b.n_extra;
                         train.extend(first_new..first_new + b.n_extra);
                     }
                 }
                 StageKind::Transformer => {
                     let f = ops::fit_transformer(&op, &data, &train,
                                                  &local, rng);
-                    data = f.apply(&data);
+                    if !matches!(f, ops::Fitted::Identity) {
+                        data = Cow::Owned(f.apply(&data));
+                    }
                 }
                 StageKind::Custom => {
                     if op != "none" {
@@ -252,7 +272,9 @@ impl FePipeline {
                             .find(|c| c.name() == op)
                             .unwrap_or_else(|| panic!("no op {op}"));
                         let f = c.fit(&data, &train, &local, rng);
-                        data = f.apply(&data);
+                        if !matches!(f, ops::Fitted::Identity) {
+                            data = Cow::Owned(f.apply(&data));
+                        }
                     }
                 }
             }
@@ -261,9 +283,11 @@ impl FePipeline {
     }
 }
 
-/// Output of the FE pipeline.
-pub struct AppliedFe {
-    pub data: Dataset,
+/// Output of the FE pipeline. `data` stays a borrow of the input
+/// dataset when no stage modified it (see
+/// [`FePipeline::fit_apply`]); callers read it through deref.
+pub struct AppliedFe<'d> {
+    pub data: Cow<'d, Dataset>,
     pub train: Vec<usize>,
 }
 
@@ -330,6 +354,35 @@ mod tests {
         let out = pipe.fit_apply(&data, &cfg, &train, &mut rng);
         assert_eq!(out.data.n, data.n); // default balancer = none
         assert_eq!(out.train, train);
+    }
+
+    #[test]
+    fn fit_apply_shares_untouched_data_without_copying() {
+        // an all-identity pipeline (none scaler/balancer/transformer)
+        // must pass the dataset through as a borrow — same storage,
+        // zero row copies — instead of cloning it per evaluation
+        let (data, train) = ds();
+        let pipe = FePipeline::standard(false, false);
+        let cfg = pipe.space().default_config();
+        let mut rng = Rng::new(7);
+        let out = pipe.fit_apply(&data, &cfg, &train, &mut rng);
+        assert!(matches!(out.data, Cow::Borrowed(_)),
+                "identity pipeline must not copy the dataset");
+        assert_eq!(out.data.x.as_ptr(), data.x.as_ptr(),
+                   "feature storage must be shared, not cloned");
+        assert_eq!(out.data.y.as_ptr(), data.y.as_ptr(),
+                   "label storage must be shared, not cloned");
+
+        // ...and a modifying stage still materialises a fresh copy
+        let scaled_cfg = cfg.merged(&Config::new().with(
+            "scaler", Value::C("standard".into())));
+        let mut rng2 = Rng::new(7);
+        let out2 = pipe.fit_apply(&data, &scaled_cfg, &train,
+                                  &mut rng2);
+        assert!(matches!(out2.data, Cow::Owned(_)));
+        assert_ne!(out2.data.x.as_ptr(), data.x.as_ptr());
+        // the borrowed-through original is untouched
+        assert_eq!(data.n, 150);
     }
 
     #[test]

@@ -31,13 +31,14 @@ SUBCOMMANDS
                   [--plan J|C|A|AC|CA] [--scale small|medium|large]
                   [--evals N] [--budget SECS] [--metric NAME]
                   [--corpus PATH] [--seed N] [--workers N]
-                  [--super-batch N] [--no-pjrt]
+                  [--super-batch N] [--pipeline-depth N] [--no-pjrt]
   plans           --dataset <name> [--evals N] [--workers N]
-                  [--super-batch N] — compare J/C/A/AC/CA
+                  [--super-batch N] [--pipeline-depth N]
+                  — compare J/C/A/AC/CA
   datasets        list the registry (name, task, n, d)
   artifacts       show compiled PJRT artifacts
   collect-corpus  --out PATH [--n-cls N] [--n-reg N] [--evals N]
-                  [--workers N] [--super-batch N]
+                  [--workers N] [--super-batch N] [--pipeline-depth N]
   help            this message
 
   --workers N evaluates each candidate batch on N persistent pool
@@ -46,6 +47,11 @@ SUBCOMMANDS
   one batch (0 = the whole round, 1 = off); larger super-batches keep
   more workers busy during elimination rounds but, like the batch
   size, shape the trajectory (see rust/README.md).
+  --pipeline-depth N (default 1 = synchronous) overlaps proposal of
+  the next N-1 chunks with the chunk in flight on the pool: surrogate
+  refits leave the hot path, speculation is reconciled when results
+  land and discarded at budget exhaustion. Semantic knob like the
+  batch sizes; depth 1 preserves trajectories bit for bit.
 ";
 
 fn main() {
@@ -102,6 +108,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         budget_secs: args.f64_or("budget", f64::INFINITY)?,
         workers: args.usize_or("workers", 1)?.max(1),
         super_batch: args.usize_or("super-batch", 1)?,
+        pipeline_depth: args.usize_or("pipeline-depth", 1)?.max(1),
         seed: args.u64_or("seed", 42)?,
     };
     let corpus = match args.str_opt("corpus") {
@@ -156,6 +163,7 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 42)?;
     let workers = args.usize_or("workers", 1)?.max(1);
     let super_batch = args.usize_or("super-batch", 1)?;
+    let pipeline_depth = args.usize_or("pipeline-depth", 1)?.max(1);
     let runtime = open_runtime(args);
     args.finish()?;
     let metric = if ds.task.is_classification() {
@@ -173,6 +181,7 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
             max_evals: evals,
             workers,
             super_batch,
+            pipeline_depth,
             seed,
             ..Default::default()
         };
@@ -239,6 +248,7 @@ fn cmd_collect(args: &Args) -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 7)?;
     let workers = args.usize_or("workers", 1)?.max(1);
     let super_batch = args.usize_or("super-batch", 1)?;
+    let pipeline_depth = args.usize_or("pipeline-depth", 1)?.max(1);
     let runtime = open_runtime(args);
     args.finish()?;
 
@@ -258,6 +268,7 @@ fn cmd_collect(args: &Args) -> anyhow::Result<()> {
             budget_secs: f64::INFINITY,
             workers,
             super_batch,
+            pipeline_depth,
             seed: seed + i as u64,
         };
         let t0 = std::time::Instant::now();

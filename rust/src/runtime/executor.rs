@@ -20,6 +20,14 @@
 //! per-candidate costs balance across the pool, and a panic inside
 //! the work closure propagates to the submitting thread once the
 //! batch joins, exactly like the serial path.
+//!
+//! Batches can also be issued **asynchronously**: [`Executor::submit`]
+//! returns a [`Submitted`] handle without blocking, so the submitting
+//! thread can keep working (the coordinator uses the window to
+//! speculatively propose the next round — the async pipeline depth,
+//! `Env::pipeline_depth`) and join later with [`Submitted::drain`].
+//! A worker panic is re-raised at the `drain` join, mirroring the
+//! blocking path, and the pool stays usable afterwards.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -80,74 +88,150 @@ impl WorkerPool {
     where
         T: Sync,
         R: Send,
-        F: Fn(&T) -> R + Sync,
+        F: Fn(&T) -> R + Send + Sync,
     {
-        if items.is_empty() {
-            return Vec::new();
-        }
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<R>>> =
-            items.iter().map(|_| Mutex::new(None)).collect();
+        self.submit(items, f).drain()
+    }
+
+    /// Start a batch on the pool **without blocking**: workers begin
+    /// claiming items immediately while the caller keeps running
+    /// (e.g. speculatively proposing the next round). Join with
+    /// [`PoolBatch::drain`] to collect the results in item order; a
+    /// worker panic is re-raised there.
+    ///
+    /// Crate-internal: the returned handle joins the batch when
+    /// dropped, so the borrows captured by `f` and `items` always
+    /// outlive the workers' use of them — but leaking the handle
+    /// (`mem::forget`, a reference cycle) would void that argument,
+    /// which is why this is not a public API. Callers inside the
+    /// crate must drain (or drop) the handle in the same frame that
+    /// owns the borrows; the public surface built on top
+    /// (`Objective::evaluate_batch_overlapped`, `Executor::run`)
+    /// always does.
+    pub(crate) fn submit<'env, T, R, F>(&self, items: &'env [T], f: F)
+        -> PoolBatch<'env, T, R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Send + Sync + 'env,
+    {
+        let state = Arc::new(BatchState {
+            items,
+            f: Box::new(f),
+            next: AtomicUsize::new(0),
+            slots: items.iter().map(|_| Mutex::new(None)).collect(),
+        });
         let (done_tx, done_rx) = channel::<std::thread::Result<()>>();
         let n_jobs = self.handles.len().min(items.len());
-        {
-            let next = &next;
-            let slots = &slots;
-            let f = &f;
-            for _ in 0..n_jobs {
-                let done_tx = done_tx.clone();
-                let job: Box<dyn FnOnce() + Send + '_> =
-                    Box::new(move || {
-                        let r = catch_unwind(AssertUnwindSafe(|| loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= items.len() {
-                                break;
-                            }
-                            let out = f(&items[i]);
-                            *lock(&slots[i]) = Some(out);
-                        }));
-                        // the batch joins on this send, not the return
-                        let _ = done_tx.send(r);
-                    });
-                // SAFETY: the job borrows `items`, `f`, `next` and
-                // `slots` from this stack frame. We erase the lifetime
-                // to ship it through the 'static channel, and block
-                // below until every submitted job has signalled
-                // completion (or panicked) before returning — the
-                // borrows therefore strictly outlive all use. The
-                // completion signal is sent after the closure finishes
-                // (panic included, via catch_unwind), so no worker can
-                // still touch the frame once recv() has yielded
-                // `n_jobs` results.
-                let job: Job = unsafe {
-                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>,
-                                          Job>(job)
-                };
-                lock(&self.injector)
-                    .send(job)
-                    .expect("executor: worker pool shut down");
-            }
-        }
-        drop(done_tx);
-        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
         for _ in 0..n_jobs {
-            match done_rx.recv()
+            let st = state.clone();
+            let done_tx = done_tx.clone();
+            let job: Box<dyn FnOnce() + Send + 'env> =
+                Box::new(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| loop {
+                        let i = st.next.fetch_add(1, Ordering::Relaxed);
+                        if i >= st.items.len() {
+                            break;
+                        }
+                        let out = (st.f)(&st.items[i]);
+                        *lock(&st.slots[i]) = Some(out);
+                    }));
+                    // release this worker's share of the batch state
+                    // *before* signalling: once the join has seen
+                    // every signal, only the handle's own Arc is
+                    // left, so no 'env drop glue (f's captures,
+                    // uncollected results) can ever run on a worker
+                    // after the join returned
+                    drop(st);
+                    // the batch joins on this send, not the return
+                    let _ = done_tx.send(r);
+                });
+            // SAFETY: the job borrows `items` and whatever `f`
+            // captures for 'env. We erase the lifetime to ship it
+            // through the 'static channel; the `PoolBatch` handle
+            // blocks until every submitted job has signalled
+            // completion (or panicked) in `drain` — and, failing
+            // that, in its Drop — before 'env can end, so the
+            // borrows strictly outlive all use. The completion
+            // signal is sent after the closure finishes (panic
+            // included, via catch_unwind) and after the worker has
+            // dropped its `Arc<BatchState>`, so no worker can still
+            // touch 'env data — not even through drop glue of the
+            // shared state — once recv() has yielded `n_jobs`
+            // results. (Leaking the handle with `mem::forget` would
+            // void this argument; the handle is never exposed in a
+            // way that invites it.)
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>,
+                                      Job>(job)
+            };
+            lock(&self.injector)
+                .send(job)
+                .expect("executor: worker pool shut down");
+        }
+        PoolBatch { state, done_rx, pending: n_jobs }
+    }
+}
+
+/// Shared per-batch state: the items, the work closure, the claim
+/// cursor and one result slot per item. Workers hold `Arc` clones
+/// for exactly as long as they run jobs of this batch.
+struct BatchState<'env, T, R> {
+    items: &'env [T],
+    f: Box<dyn Fn(&T) -> R + Send + Sync + 'env>,
+    next: AtomicUsize,
+    slots: Vec<Mutex<Option<R>>>,
+}
+
+/// An in-flight batch on a [`WorkerPool`], created by
+/// [`WorkerPool::submit`]. [`drain`](PoolBatch::drain) joins the
+/// batch and returns the results in item order (re-raising a worker
+/// panic); dropping the handle joins without collecting, so the
+/// batch can never outlive the data it borrows.
+pub struct PoolBatch<'env, T, R> {
+    state: Arc<BatchState<'env, T, R>>,
+    done_rx: Receiver<std::thread::Result<()>>,
+    pending: usize,
+}
+
+impl<'env, T, R> PoolBatch<'env, T, R> {
+    /// Block until every worker has finished this batch, then return
+    /// the results in item order. A panic inside the work closure is
+    /// re-raised here — after all workers have signalled, so the
+    /// pool (and the batch's borrows) are never left dangling.
+    pub fn drain(mut self) -> Vec<R> {
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..self.pending {
+            match self.done_rx.recv()
                 .expect("executor: worker exited without signalling") {
                 Ok(()) => {}
                 Err(p) => panic = Some(p),
             }
         }
+        self.pending = 0;
         if let Some(p) = panic {
             resume_unwind(p);
         }
-        slots
-            .into_iter()
+        self.state
+            .slots
+            .iter()
             .map(|m| {
-                m.into_inner()
-                    .unwrap_or_else(|p| p.into_inner())
+                lock(m)
+                    .take()
                     .expect("executor: worker left a slot empty")
             })
             .collect()
+    }
+}
+
+impl<'env, T, R> Drop for PoolBatch<'env, T, R> {
+    fn drop(&mut self) {
+        // join (without collecting) so the workers' borrows of 'env
+        // data end before the handle does — this runs during unwind
+        // too, keeping an abandoned overlap window panic-safe
+        for _ in 0..self.pending {
+            let _ = self.done_rx.recv();
+        }
     }
 }
 
@@ -212,11 +296,64 @@ impl Executor {
     where
         T: Sync,
         R: Send,
-        F: Fn(&T) -> R + Sync,
+        F: Fn(&T) -> R + Send + Sync,
+    {
+        self.submit(items, f).drain()
+    }
+
+    /// Start a batch **without blocking** and return a handle to join
+    /// it later — the primitive behind the async pipeline depth: the
+    /// caller keeps the submitting thread busy (speculative proposal
+    /// of the next round) while the pool evaluates, then calls
+    /// [`Submitted::drain`].
+    ///
+    /// With one worker (or at most one item) nothing is scheduled:
+    /// the work is deferred and runs inline on the caller's thread at
+    /// `drain`, *after* any overlap work — so the relative order of
+    /// speculation and evaluation is the same for every worker count
+    /// (speculation never sees the batch's results), and a panicking
+    /// evaluation always surfaces at the join.
+    ///
+    /// Crate-internal (see [`WorkerPool::submit`] for why): the
+    /// handle must be drained or dropped in the frame that owns the
+    /// borrows, never leaked.
+    pub(crate) fn submit<'env, T, R, F>(&self, items: &'env [T], f: F)
+        -> Submitted<'env, T, R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Send + Sync + 'env,
     {
         match &self.pool {
-            Some(pool) if items.len() > 1 => pool.run(items, f),
-            _ => items.iter().map(&f).collect(),
+            Some(pool) if items.len() > 1 => {
+                Submitted::Pool(pool.submit(items, f))
+            }
+            _ => Submitted::Lazy { items, f: Box::new(f) },
+        }
+    }
+}
+
+/// A batch issued through [`Executor::submit`]: either truly in
+/// flight on the pool, or deferred for inline execution at the join
+/// (serial executor / singleton batches).
+pub enum Submitted<'env, T, R> {
+    /// Deferred inline execution: nothing has run yet; `drain`
+    /// evaluates on the caller's thread.
+    Lazy {
+        items: &'env [T],
+        f: Box<dyn Fn(&T) -> R + Send + Sync + 'env>,
+    },
+    /// In flight on the persistent pool.
+    Pool(PoolBatch<'env, T, R>),
+}
+
+impl<'env, T, R> Submitted<'env, T, R> {
+    /// Join the batch: block for (or inline-run) the evaluations and
+    /// return the results in item order. Worker panics re-raise here.
+    pub fn drain(self) -> Vec<R> {
+        match self {
+            Submitted::Lazy { items, f } => items.iter().map(f).collect(),
+            Submitted::Pool(batch) => batch.drain(),
         }
     }
 }
@@ -326,6 +463,103 @@ mod tests {
         let a = both_worker_ids(&ex);
         let b = both_worker_ids(&clone);
         assert_eq!(a, b, "clone must reuse the same pool threads");
+    }
+
+    #[test]
+    fn submit_runs_concurrently_with_caller_work() {
+        // Ordering, not wall-clock (robust on loaded CI boxes):
+        // submit must return before the 30ms jobs can possibly have
+        // all finished, and while the caller then works, the pool
+        // must make progress on its own — both observable through
+        // the completion counter without any tight timing bound.
+        let ex = Executor::new(2);
+        let items: Vec<u32> = (0..4).collect();
+        let hits = AtomicUsize::new(0);
+        let pending = ex.submit(&items, |_| {
+            std::thread::sleep(Duration::from_millis(30));
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        // submit did not block: a 30ms job cannot have completed in
+        // the microseconds since
+        assert!(hits.load(Ordering::SeqCst) < items.len(),
+                "submit ran the whole batch before returning");
+        // the pool works while the caller does: wait out (generously)
+        // one job's length of caller-side work and expect progress
+        let t0 = Instant::now();
+        while hits.load(Ordering::SeqCst) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10),
+                    "pool made no progress during the overlap window");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        pending.drain();
+        assert_eq!(hits.load(Ordering::SeqCst), items.len());
+    }
+
+    #[test]
+    fn submit_serial_defers_work_until_drain() {
+        let ex = Executor::serial();
+        let ran = AtomicUsize::new(0);
+        let items = [1, 2, 3];
+        let pending = ex.submit(&items, |&x| {
+            ran.fetch_add(1, Ordering::SeqCst);
+            x * 2
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 0,
+                   "lazy submit must not evaluate before drain");
+        assert_eq!(pending.drain(), vec![2, 4, 6]);
+        assert_eq!(ran.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn submit_panic_propagates_at_drain_and_pool_survives() {
+        for workers in [1, 2] {
+            let ex = Executor::new(workers);
+            let before = if workers == 2 {
+                Some(both_worker_ids(&ex))
+            } else {
+                None
+            };
+            let items = [0, 1, 2, 3];
+            let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                let pending = ex.submit(&items, |&i: &i32| {
+                    if i == 2 {
+                        panic!("boom in flight");
+                    }
+                    i
+                });
+                // overlap window: the panic must wait for the join
+                let _ = std::hint::black_box(7 * 6);
+                pending.drain()
+            }));
+            assert!(caught.is_err(),
+                    "workers={workers}: panic must surface at drain");
+            let out = ex.run(&[1, 2, 3], |&x| x + 1);
+            assert_eq!(out, vec![2, 3, 4], "workers={workers}");
+            // thread identity is pinned across the panic: the same
+            // pool threads serve the post-panic batches
+            if let Some(before) = before {
+                assert_eq!(before, both_worker_ids(&ex),
+                           "pool threads changed across the panic");
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_submission_joins_without_collecting() {
+        // dropping the handle (e.g. during an unwind of the caller)
+        // must wait out the in-flight jobs, then leave the pool usable
+        let ex = Executor::new(2);
+        let items: Vec<u32> = (0..6).collect();
+        let hits = AtomicUsize::new(0);
+        {
+            let _pending = ex.submit(&items, |_| {
+                std::thread::sleep(Duration::from_millis(5));
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+            // handle dropped here, joining the batch
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 6);
+        assert_eq!(ex.run(&[9], |&x| x), vec![9]);
     }
 
     #[test]

@@ -73,6 +73,7 @@ fn registry_dataset_end_to_end_quake() {
         budget_secs: f64::INFINITY,
         workers: 1,
         super_batch: 1,
+        pipeline_depth: 1,
         seed: 3,
     };
     let out = run_system(SystemKind::VolcanoMLMinus, &ds, &spec, None,
@@ -208,6 +209,7 @@ fn regression_system_comparison_smoke() {
         budget_secs: f64::INFINITY,
         workers: 1,
         super_batch: 1,
+        pipeline_depth: 1,
         seed: 2,
     };
     for sys in [SystemKind::VolcanoMLMinus, SystemKind::Tpot] {
