@@ -1,7 +1,11 @@
-//! Tables 7-8: the five execution plans (J/C/A/AC/CA) plus TPOT and
-//! AUSK on classification and regression tasks — the paper's central
-//! decomposition ablation. Also includes the §3.3.3 design-choice
-//! ablation: CA with round-robin alternation instead of EUI routing.
+//! Tables 7-8: the five execution plans (J/C/A/AC/CA) plus the
+//! nested CC variant, TPOT and AUSK on classification and regression
+//! tasks — the paper's central decomposition ablation. The plan runs
+//! honour the `--super-batch` / `--pipeline-depth` / `--workers`
+//! knobs (and their `VOLCANO_*` env equivalents), so the nested
+//! plans' cross-level batching win shows up in the wall-clock
+//! trajectory. Also includes the §3.3.3 design-choice ablation: CA
+//! with round-robin alternation instead of EUI routing.
 
 use volcanoml::baselines::{run_system, BaseSpec, SystemKind};
 use volcanoml::bench::{bench_scale, bench_workers, save_results,
@@ -36,19 +40,22 @@ fn main() {
         let mut table = Table::new(
             t_label,
             &["dataset", "Plan1 J", "Plan2 C", "Plan3 A", "Plan4 AC",
-              "Plan5 CA", "TPOT", "AUSK"]);
+              "Plan5 CA", "CC (nested)", "TPOT", "AUSK"]);
         let mut utilities: Vec<Vec<f64>> = Vec::new();
         for p in &profiles {
             let ds = generate(p);
             let mut row_vals = Vec::new();
             let mut row_utils = Vec::new();
-            for kind in PlanKind::all() {
+            for kind in PlanKind::with_nested() {
                 let cfg = VolcanoConfig {
                     plan: kind,
                     scale: SpaceScale::Large,
                     metric: header_metric,
                     max_evals: scale.evals,
                     workers,
+                    super_batch: volcanoml::bench::bench_super_batch(),
+                    pipeline_depth:
+                        volcanoml::bench::bench_pipeline_depth(),
                     seed: 42,
                     ..Default::default()
                 };

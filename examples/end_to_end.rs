@@ -10,7 +10,9 @@
 //! elimination rounds parallelise across arms too), and finally with
 //! the async pipeline at depth 2 (the next round is speculatively
 //! proposed while the current one is in flight, at the identical eval
-//! budget). Prints the incumbents and the wall-clock speedups.
+//! budget), and a nested-conditioning plan (CC) at pipeline depth 1
+//! vs 2 — the recursive scheduler batching across decomposition
+//! levels. Prints the incumbents and the wall-clock speedups.
 //!
 //! Part 2: full searches over several registry datasets whose
 //! trainable arms run through the AOT-compiled JAX/Pallas artifacts
@@ -121,6 +123,43 @@ fn main() -> anyhow::Result<()> {
                 "pipelined search must produce an incumbent");
         assert_eq!(np, ns,
                    "pipeline depth must not change the eval budget");
+        // nested-plan cross-level batching (plan CC: conditioning on
+        // algorithm, then on an FE stage): propose/observe is total
+        // over the block algebra, so one super-batch spans both
+        // decomposition levels — and at depth 2 the next nested
+        // round is proposed while this one is in flight
+        let nested = |depth: usize|
+            -> anyhow::Result<(f64, f64, usize)> {
+            let cfg = VolcanoConfig {
+                plan: PlanKind::CC,
+                scale: SpaceScale::Medium,
+                metric: Metric::BalancedAccuracy,
+                max_evals: evals,
+                ensemble: EnsembleMethod::None,
+                workers,
+                eval_batch: 1,
+                super_batch: 0,
+                pipeline_depth: depth,
+                seed: 42,
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let out = VolcanoML::new(cfg).run(&blobs, None)?;
+            Ok((t0.elapsed().as_secs_f64(), out.best_valid_utility,
+                out.n_evals))
+        };
+        let (tc1, uc1, nc1) = nested(1)?;
+        println!("  nested CC d=1 (workers={workers}): {tc1:7.2}s  \
+                  best valid {uc1:.4}  ({nc1} evals)");
+        let (tc2, uc2, nc2) = nested(2)?;
+        println!("  nested CC d=2 (workers={workers}): {tc2:7.2}s  \
+                  best valid {uc2:.4}  ({nc2} evals)");
+        println!("    nested speedup d=2 vs d=1: {:.2}x",
+                 tc1 / tc2.max(1e-9));
+        assert!(uc1.is_finite() && uc2.is_finite(),
+                "nested searches must produce incumbents");
+        assert_eq!(nc1, nc2,
+                   "nested runs must spend the identical budget");
     } else {
         println!("  (pass --workers N to compare against the worker \
                   pool, cross-leaf super-batching and the async \

@@ -30,6 +30,23 @@
 //! count never changes the trajectory; the super-batch size (like the
 //! leaf batch size) is a semantic knob, and `super_batch == 1`
 //! (the default) reproduces the leaf-level batching exactly.
+//!
+//! `propose`/`observe` are **total over the block algebra**: joint
+//! leaves, alternating blocks and conditioning blocks all implement
+//! them, so gathering recurses through the whole plan tree. A
+//! conditioning block used as a *child* proposes one chunk of its own
+//! elimination round per pull (`Env::super_batch` pulls; 0 = the
+//! whole round), recursively proposing from its arms; its `observe`
+//! commits the results back, runs elimination when the chunk that
+//! completes a round lands, and drops observations of arms eliminated
+//! while the pull was speculated ahead. Every round — at every level —
+//! runs through one scheduler, [`ConditioningBlock::do_next_pipelined`]
+//! (the synchronous path is the same loop with an empty speculation
+//! window); the plain serial round-robin survives only where a
+//! chunk-of-one gather is *not* bit-identical to it: an alternating
+//! arm still in warmup (one propose covers one half, not both) and a
+//! nested conditioning arm at the default knobs (one propose covers
+//! one chunk, not a whole inner round).
 
 use std::collections::VecDeque;
 
@@ -206,6 +223,11 @@ enum Payload {
     /// warmup half); the side's own payload rides along and is handed
     /// back down with the shared `reqs`.
     Alt { first: bool, warmup: bool, inner: Box<Payload> },
+    /// Conditioning block proposing as a *child*: one chunk of its own
+    /// elimination round — `(arm index, request count, arm payload)`
+    /// per pull, in pull order, plus whether this chunk completes the
+    /// round (elimination runs when it is observed).
+    Cond { pulls: Vec<(usize, usize, Payload)>, ends_round: bool },
 }
 
 impl Proposal {
@@ -250,8 +272,30 @@ pub trait BuildingBlock {
     /// requests *without* evaluating them. Implementations must not
     /// touch `env.obj` (the parent owns scheduling), so the planned
     /// requests depend only on the rng and block state.
+    ///
+    /// The default **errors**: a block advertising
+    /// [`supports_propose`](Self::supports_propose) must override it.
+    /// (It used to return `Proposal::empty()`, which made a forgotten
+    /// override yield zero-request pulls that burned rounds without
+    /// ever evaluating anything.)
     fn propose(&mut self, _env: &mut Env) -> Result<Proposal> {
-        Ok(Proposal::empty())
+        anyhow::bail!(
+            "{}: propose() is not implemented — supports_propose() \
+             must return false for this block (a silently empty \
+             proposal would burn pulls without evaluating anything)",
+            self.name())
+    }
+    /// True when one [`propose`](Self::propose) call covers exactly
+    /// the work of one serial [`do_next`](Self::do_next) — the
+    /// condition under which a parent's chunk-of-one gathering is
+    /// bit-identical to the plain round-robin, letting the unified
+    /// scheduler absorb the serial path at the default knobs. Leaf
+    /// blocks are pull-granular; an alternating block in warmup
+    /// proposes one *half* per pull (its `do_next` plays both), and a
+    /// conditioning block proposes one *chunk* of its round (its
+    /// `do_next` plays the whole round), so both report false there.
+    fn pull_granular(&self) -> bool {
+        true
     }
     /// Second half: commit the utilities of a **prefix** of the
     /// proposal's requests (`ys` shorter than `prop.reqs` means the
@@ -522,6 +566,16 @@ pub struct Arm {
 /// boundary, and discarded unevaluated if the budget dies first.
 type SpecChunk = Vec<(usize, Proposal)>;
 
+/// Parent-driven round bookkeeping: when a [`ConditioningBlock`] is a
+/// *child* of a gathering parent, each [`BuildingBlock::propose`]
+/// call covers one chunk of this block's own elimination round; the
+/// pull schedule of the round currently being proposed and the cursor
+/// into it live here between calls. `None` between rounds.
+struct ExtRound {
+    sched: Vec<usize>,
+    cursor: usize,
+}
+
 /// The `Env` knobs a speculative proposal still needs (everything but
 /// the objective, which speculation must not touch).
 #[derive(Clone, Copy)]
@@ -590,6 +644,9 @@ pub struct ConditioningBlock {
     /// whenever a round is abandoned — buffered proposals are never
     /// evaluated or charged once the budget is gone.
     spec: VecDeque<(usize, SpecChunk)>,
+    /// Round-in-progress state for the parent-driven propose/observe
+    /// path (this block as a child of a gathering parent).
+    ext: Option<ExtRound>,
 }
 
 impl ConditioningBlock {
@@ -603,6 +660,7 @@ impl ConditioningBlock {
             elimination_grace: 12,
             rounds: 0,
             spec: VecDeque::new(),
+            ext: None,
         }
     }
 
@@ -616,6 +674,7 @@ impl ConditioningBlock {
     /// and depth 1 is unaffected.)
     pub fn add_arms(&mut self, arms: Vec<Arm>) {
         self.spec.clear();
+        self.ext = None;
         self.arms.extend(arms);
     }
 
@@ -627,35 +686,11 @@ impl ConditioningBlock {
             .collect()
     }
 
-    /// One elimination round with cross-leaf super-batching: gather
-    /// proposals from `chunk` consecutive arm pulls (0 = the whole
-    /// round) into a single [`Objective::evaluate_batch`] submission,
-    /// then commit the results back to the arms in proposal order.
-    /// Requires every active arm to support propose/observe (the
-    /// caller checks). With `chunk == 1` each pull is proposed,
-    /// evaluated and observed before the next pull proposes.
-    ///
-    /// Pull granularity: one gathered pull is one `propose()` call.
-    /// For leaf arms that equals one `do_next`, so chunk-1 gathering
-    /// is bit-identical to the plain round-robin loop. An alternating
-    /// arm in warmup, however, proposes one *half* (b1 or b2) per
-    /// pull, where its serial `do_next` plays both halves — its
-    /// warmup stretches over twice as many plays under gathering.
-    /// That granularity shift (like proposal staleness) is part of
-    /// the super-batch semantics: `super_batch == 1` routes through
-    /// the serial loop and is unaffected.
-    ///
-    /// Returns false when exhaustion is detected at a *chunk
-    /// boundary* (the round is abandoned and elimination skipped,
-    /// mirroring the serial loop's early return at its pull
-    /// boundaries). Exhaustion *inside* the final chunk completes the
-    /// round — truncated — and returns true, again like the serial
-    /// loop when the budget dies in its last pull. With whole-round
-    /// chunks there are no interior boundaries, so elimination can
-    /// run on a budget-truncated round; the elimination grace still
-    /// applies.
-    fn gather_round(&mut self, env: &mut Env, chunk: usize)
-        -> Result<bool> {
+    /// The pull schedule of one elimination round: every active arm's
+    /// index, `plays_per_round` times over. Shared by the self-driven
+    /// scheduler ([`Self::do_next_pipelined`]) and the parent-driven
+    /// propose path so the two can never disagree on round shape.
+    fn round_sched(&self) -> Vec<usize> {
         let active: Vec<usize> = self
             .arms
             .iter()
@@ -663,86 +698,56 @@ impl ConditioningBlock {
             .filter(|(_, a)| a.active)
             .map(|(i, _)| i)
             .collect();
-        let mut pulls: Vec<usize> =
+        let mut sched: Vec<usize> =
             Vec::with_capacity(active.len() * self.plays_per_round);
         for _ in 0..self.plays_per_round {
-            pulls.extend(&active);
+            sched.extend(&active);
         }
-        let chunk = if chunk == 0 { pulls.len().max(1) } else { chunk };
-        let mut i = 0;
-        while i < pulls.len() {
-            if env.obj.exhausted() {
-                return Ok(false);
-            }
-            let end = (i + chunk).min(pulls.len());
-            let mut props: Vec<(usize, Proposal)> =
-                Vec::with_capacity(end - i);
-            let mut reqs: Vec<(Config, f64)> = Vec::new();
-            for &ai in &pulls[i..end] {
-                let p = self.arms[ai].block.propose(env)?;
-                reqs.extend_from_slice(&p.reqs);
-                props.push((ai, p));
-            }
-            let ys = env.obj.evaluate_batch(&reqs)?;
-            // commit in proposal order; each arm observes the prefix
-            // of its slice that the budget allowed (possibly empty)
-            let mut off = 0;
-            for (ai, p) in props {
-                let n = p.reqs.len();
-                let lo = off.min(ys.len());
-                let hi = (off + n).min(ys.len());
-                self.arms[ai].block.observe(p, &ys[lo..hi]);
-                off += n;
-            }
-            i = end;
-        }
-        Ok(true)
+        sched
     }
 
-    /// Testing/driver hook: run one round through the gather path with
-    /// an explicit chunk size (bypassing `Env::super_batch`), then
-    /// eliminate. `chunk == 1` must be bit-identical to the plain
-    /// `do_next` round-robin when every arm is a leaf (property-tested
-    /// in `tests/super_batch.rs`; see [`Self::gather_round`] for the
-    /// alternating-arm granularity caveat). With
-    /// `Env::pipeline_depth > 1` the round runs through the
-    /// speculative pipeline instead (see
-    /// [`Self::do_next_pipelined`]).
+    /// Driver hook: run one round through the unified scheduler with
+    /// an explicit chunk size (bypassing `Env::super_batch` at *this*
+    /// level only — nested arms still size their own chunks from
+    /// `Env::super_batch`, the knob that recurses) at the
+    /// environment's pipeline depth. This is
+    /// [`Self::do_next_pipelined`] at `Env::pipeline_depth` — depth 1
+    /// is the synchronous gather (the pipelined loop with an empty
+    /// speculation window), whose chunk-1 form is bit-identical to
+    /// the plain `do_next` round-robin when every arm is
+    /// pull-granular (property-tested in `tests/super_batch.rs` and
+    /// `tests/async_depth.rs`; see [`BuildingBlock::pull_granular`]
+    /// for the alternating-warmup and nested-conditioning caveats).
     pub fn do_next_gathered(&mut self, env: &mut Env, chunk: usize)
         -> Result<()> {
         let depth = env.pipeline_depth.max(1);
-        if depth > 1 {
-            return self.do_next_pipelined(env, chunk, depth);
-        }
-        // synchronous rounds never consume speculation: drop any
-        // buffer left over from a depth change between pulls
-        self.spec.clear();
-        self.rounds += 1;
-        if !self.gather_round(env, chunk)? {
-            return Ok(());
-        }
-        if self.eliminate {
-            self.eliminate_dominated();
-        }
-        Ok(())
+        self.do_next_pipelined(env, chunk, depth)
     }
 
-    /// Testing/driver hook for the async pipeline: play one
-    /// elimination round with an explicit chunk size and pipeline
-    /// depth (bypassing the `Env` knobs). `depth == 1` is
-    /// bit-identical to [`Self::do_next_gathered`] — the pipelined
-    /// loop with an empty speculation window proposes, evaluates and
-    /// observes exactly like the synchronous gather (property-tested
-    /// in `tests/async_depth.rs`). `depth > 1` keeps up to
-    /// `depth - 1` chunks proposed ahead of the one in flight,
-    /// spilling across round boundaries; the speculation is
-    /// reconciled against eliminations when the round's observations
-    /// land and discarded — never evaluated, never charged — when
-    /// the budget dies first.
+    /// The unified round scheduler: play one elimination round with
+    /// an explicit chunk size and pipeline depth (bypassing the `Env`
+    /// knobs). Every round — synchronous or speculative, at every
+    /// decomposition level — runs through this one loop. `depth == 1`
+    /// is the synchronous gather: the pipelined loop with an empty
+    /// speculation window proposes, evaluates and observes exactly
+    /// like the former `gather_round` (pinned bit for bit by
+    /// `tests/async_depth.rs`, which let that duplicate path be
+    /// deleted). `depth > 1` keeps up to `depth - 1` chunks proposed
+    /// ahead of the one in flight, spilling across round boundaries;
+    /// the speculation is reconciled against eliminations when the
+    /// round's observations land and discarded — never evaluated,
+    /// never charged — when the budget dies first.
     pub fn do_next_pipelined(&mut self, env: &mut Env, chunk: usize,
                              depth: usize) -> Result<()> {
-        self.rounds += 1;
+        // self-driven rounds invalidate any parent-driven bookkeeping
+        self.ext = None;
         let window = depth.max(1) - 1;
+        if window == 0 {
+            // synchronous rounds never consume speculation: drop any
+            // buffer left over from a depth change between pulls
+            self.spec.clear();
+        }
+        self.rounds += 1;
         if !self.pipelined_round(env, chunk, window)? {
             // round abandoned at a chunk boundary: elimination is
             // skipped, exactly like the synchronous gather path
@@ -762,31 +767,23 @@ impl ConditioningBlock {
     /// speculatively into future rounds — so surrogate refits and
     /// acquisition optimisation run off the evaluation hot path.
     /// Returns false when the budget is exhausted at a chunk
-    /// boundary (round abandoned; all speculation discarded), true
-    /// when the round completed — possibly truncated inside its
-    /// final chunk, mirroring [`Self::gather_round`].
+    /// boundary (round abandoned; all speculation discarded, exactly
+    /// like the serial loop's early return at its pull boundaries),
+    /// true when the round completed — possibly truncated inside its
+    /// final chunk, like the serial loop when the budget dies in its
+    /// last pull; elimination then still runs, with the elimination
+    /// grace applying as usual.
     fn pipelined_round(&mut self, env: &mut Env, chunk: usize,
                        window: usize) -> Result<bool> {
-        let plays = self.plays_per_round;
         let Env { obj, rng, batch, super_batch, pipeline_depth } = env;
         let knobs = PullKnobs {
             batch: *batch,
             super_batch: *super_batch,
             pipeline_depth: *pipeline_depth,
         };
+        let full = self.round_sched();
         let arms = &mut self.arms;
         let spec = &mut self.spec;
-        let active: Vec<usize> = arms
-            .iter()
-            .enumerate()
-            .filter(|(_, a)| a.active)
-            .map(|(i, _)| i)
-            .collect();
-        let mut full: Vec<usize> =
-            Vec::with_capacity(active.len() * plays);
-        for _ in 0..plays {
-            full.extend(&active);
-        }
         let n = full.len();
         if n == 0 {
             spec.clear();
@@ -959,26 +956,42 @@ impl BuildingBlock for ConditioningBlock {
     }
 
     fn do_next(&mut self, env: &mut Env) -> Result<()> {
-        // cross-leaf super-batching and/or async pipelining: when
-        // enabled and every active arm can split its pull, gather the
-        // round's proposals and submit them in (possibly overlapped)
-        // super-batches so elimination rounds parallelise across arms
-        // — with pipeline_depth > 1 the next round is speculatively
-        // proposed while this one is in flight. A pipeline depth
-        // without super-batching gathers chunks of one pull.
-        if (env.super_batch != 1 || env.pipeline_depth > 1)
-            && self.arms.iter().any(|a| a.active)
-            && self
-                .arms
-                .iter()
-                .filter(|a| a.active)
-                .all(|a| a.block.supports_propose())
+        // Unified scheduler: route the round through the pipelined
+        // loop whenever every active arm can split its pull — always
+        // when super-batching or pipelining is on (the knobs'
+        // documented semantic shifts apply; elimination rounds then
+        // parallelise across arms, recursively through nested
+        // blocks), and at the default knobs whenever chunk-of-one
+        // gathering is bit-identical to the plain round-robin (every
+        // active arm pull-granular). The serial loop below survives
+        // only for the granularity fallbacks: an alternating arm in
+        // warmup (a pull is one half, not a full round-robin pass)
+        // and a nested conditioning arm at default knobs (a pull is
+        // one chunk, not a whole inner round).
+        let any_active = self.arms.iter().any(|a| a.active);
+        let all_propose = self
+            .arms
+            .iter()
+            .filter(|a| a.active)
+            .all(|a| a.block.supports_propose());
+        let all_granular = self
+            .arms
+            .iter()
+            .filter(|a| a.active)
+            .all(|a| a.block.pull_granular());
+        if any_active
+            && all_propose
+            && (env.super_batch != 1
+                || env.pipeline_depth > 1
+                || all_granular)
         {
             let chunk = env.super_batch;
             return self.do_next_gathered(env, chunk);
         }
-        // the plain round-robin never consumes speculation
+        // the plain round-robin never consumes speculation, and
+        // invalidates any parent-driven round bookkeeping
         self.spec.clear();
+        self.ext = None;
         self.rounds += 1;
         // lines 2-4: play each active arm L times (round-robin); with
         // super-batching off each arm pull is its own batch
@@ -995,6 +1008,138 @@ impl BuildingBlock for ConditioningBlock {
             self.eliminate_dominated();
         }
         Ok(())
+    }
+
+    fn supports_propose(&self) -> bool {
+        // total over the block algebra: a conditioning block can
+        // split its pull whenever every active arm can — which makes
+        // nested conditioning/alternating plans gatherable by their
+        // parents instead of forcing the serial fallback
+        self.arms
+            .iter()
+            .filter(|a| a.active)
+            .all(|a| a.block.supports_propose())
+    }
+
+    fn pull_granular(&self) -> bool {
+        // one propose is one chunk of a round; one do_next is a whole
+        // round plus elimination — never the same granularity
+        false
+    }
+
+    /// One parent-level pull = one chunk (`env.super_batch` pulls;
+    /// 0 = the whole round) of this block's own elimination round,
+    /// recursively proposed from the arms. Round bookkeeping rides in
+    /// the payload: the chunk that completes the round is marked, and
+    /// [`observe`](Self::observe) runs elimination there. A parent
+    /// proposing ahead of its observations (speculation) makes this
+    /// block plan future rounds against the pre-elimination arm set —
+    /// the same cross-round speculation semantics as the block's own
+    /// pipeline, reconciled when the observations land.
+    fn propose(&mut self, env: &mut Env) -> Result<Proposal> {
+        if self.ext.is_none() {
+            let sched = self.round_sched();
+            if sched.is_empty() {
+                // no active arms: nothing to pull, nothing to commit
+                return Ok(Proposal::empty());
+            }
+            self.ext = Some(ExtRound { sched, cursor: 0 });
+        }
+        let (pull_idx, ends_round) = {
+            let ext = self.ext.as_mut().expect("ensured above");
+            let n = ext.sched.len();
+            let chunk = if env.super_batch == 0 {
+                n
+            } else {
+                env.super_batch.max(1)
+            };
+            // When elimination pruned away the entire unproposed tail
+            // of a speculated round (observe's ext reconciliation),
+            // the cursor already sits at the schedule's end: this
+            // emits a zero-pull chunk that still carries the
+            // `ends_round` marker, so the round's elimination runs at
+            // its true boundary — one empty parent pull, by design.
+            let end = (ext.cursor + chunk).min(n);
+            let idx = ext.sched[ext.cursor..end].to_vec();
+            ext.cursor = end;
+            (idx, end >= n)
+        };
+        if ends_round {
+            self.ext = None;
+        }
+        let mut pulls: Vec<(usize, usize, Payload)> =
+            Vec::with_capacity(pull_idx.len());
+        let mut reqs: Vec<(Config, f64)> = Vec::new();
+        for ai in pull_idx {
+            let p = self.arms[ai].block.propose(env)?;
+            pulls.push((ai, p.reqs.len(), p.payload));
+            reqs.extend(p.reqs);
+        }
+        Ok(Proposal {
+            reqs,
+            payload: Payload::Cond { pulls, ends_round },
+        })
+    }
+
+    /// Commit a chunk's utilities back to the arms in pull order
+    /// (each arm observes the prefix of its slice the budget
+    /// allowed), run elimination when the chunk completes a round,
+    /// and reconcile any buffered speculation. Pulls whose arm was
+    /// eliminated while they waited (the parent speculated past this
+    /// block's round boundary) are dropped — an eliminated arm never
+    /// observes again, mirroring [`Self::reconcile_spec`].
+    fn observe(&mut self, prop: Proposal, ys: &[f64]) {
+        let Proposal { reqs, payload } = prop;
+        let (pulls, ends_round) = match payload {
+            Payload::Cond { pulls, ends_round } => (pulls, ends_round),
+            // the zero-active-arm propose hands out an empty proposal
+            Payload::Empty => return,
+            _ => {
+                debug_assert!(false, "proposal/block mismatch");
+                return;
+            }
+        };
+        let mut reqs = reqs.into_iter();
+        let mut off = 0usize;
+        for (ai, len, inner) in pulls {
+            let sub_reqs: Vec<(Config, f64)> =
+                reqs.by_ref().take(len).collect();
+            let lo = off.min(ys.len());
+            let hi = (off + len).min(ys.len());
+            off += len;
+            if !self.arms[ai].active {
+                continue;
+            }
+            self.arms[ai].block.observe(
+                Proposal { reqs: sub_reqs, payload: inner },
+                &ys[lo..hi]);
+        }
+        if ends_round {
+            self.rounds += 1;
+            if self.eliminate {
+                self.eliminate_dominated();
+            }
+            self.reconcile_spec();
+            // reconcile the parent-driven schedule too: a parent
+            // proposing ahead may already hold a later round's
+            // cursor; pulls of freshly eliminated arms that have NOT
+            // been proposed yet are dropped from that round's
+            // remaining schedule — never proposed, never evaluated,
+            // never charged. (Pulls already proposed sit in the
+            // parent's buffer out of reach; their observations are
+            // dropped by the active check above.)
+            if let Some(ext) = self.ext.as_mut() {
+                let arms = &self.arms;
+                let cursor = ext.cursor.min(ext.sched.len());
+                let mut kept = ext.sched[..cursor].to_vec();
+                kept.extend(
+                    ext.sched[cursor..]
+                        .iter()
+                        .copied()
+                        .filter(|&ai| arms[ai].active));
+                ext.sched = kept;
+            }
+        }
     }
 
     fn current_best(&self) -> Option<(Config, f64)> {
@@ -1133,13 +1278,14 @@ impl BuildingBlock for AlternatingBlock {
     }
 
     fn do_next(&mut self, env: &mut Env) -> Result<()> {
-        // NOTE: deliberately *not* routed through propose/observe —
-        // a child may be a nested conditioning block (plan AC), which
-        // does not support split pulls; child.do_next handles every
-        // child kind (and lets that nested conditioning block gather
-        // its own super-batches). The propose/observe pair below is
-        // the parent-driven path used when *this* block sits under a
-        // gathering conditioning block (plan CA).
+        // Self-driven iteration stays child.do_next-based: a nested
+        // conditioning child (plan AC) then gathers — and pipelines —
+        // its own full rounds through the unified scheduler, which a
+        // one-chunk-per-pull parent-driven split could not. The
+        // propose/observe pair below is the parent-driven path used
+        // when *this* block sits under a gathering conditioning block
+        // (plan CA, or any nested shape — split pulls are total over
+        // the block algebra now).
         if env.obj.exhausted() {
             return Ok(());
         }
@@ -1172,6 +1318,15 @@ impl BuildingBlock for AlternatingBlock {
 
     fn supports_propose(&self) -> bool {
         self.b1.supports_propose() && self.b2.supports_propose()
+    }
+
+    fn pull_granular(&self) -> bool {
+        // in warmup a propose covers one half where do_next plays
+        // both; past warmup one propose plays exactly the side that
+        // do_next would — granular iff the sides themselves are
+        self.warmup_left == 0
+            && self.b1.pull_granular()
+            && self.b2.pull_granular()
     }
 
     fn propose(&mut self, env: &mut Env) -> Result<Proposal> {

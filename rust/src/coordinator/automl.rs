@@ -59,10 +59,16 @@ pub struct VolcanoConfig {
     /// elimination round. `1` (default) = off — every leaf pull is its
     /// own batch, the leaf-level batching semantics; `0` = the whole
     /// round (`plays_per_round × active arms` pulls) in one
-    /// submission; `n > 1` = chunks of `n` pulls. Like `eval_batch`
-    /// this shapes the trajectory (arms propose a round before seeing
-    /// each other's results); for any fixed value the trajectory is
-    /// still worker-count invariant.
+    /// submission; `n > 1` = chunks of `n` pulls. Gathering recurses
+    /// through the plan tree: a nested conditioning or alternating
+    /// arm contributes chunks of *its* round to the parent's
+    /// super-batch (propose/observe is total over the block algebra),
+    /// so every plan shape — including the nested
+    /// [`PlanKind::CC`](crate::plan::PlanKind) — batches across
+    /// decomposition levels. Like `eval_batch` this shapes the
+    /// trajectory (arms propose a round before seeing each other's
+    /// results); for any fixed value the trajectory is still
+    /// worker-count invariant.
     pub super_batch: usize,
     /// Async pipeline depth: chunks of a conditioning round proposed
     /// ahead of the one in flight on the worker pool. `1` (default)
@@ -73,8 +79,11 @@ pub struct VolcanoConfig {
     /// eliminations when results land and discarded unevaluated when
     /// the budget dies. Like `eval_batch`/`super_batch` this shapes
     /// the trajectory; for any fixed depth it stays worker-count
-    /// invariant. Ignored by the progressive strategy (which has no
-    /// conditioning rounds to pipeline).
+    /// invariant. Speculation spans decomposition levels: a pipelined
+    /// round over nested arms proposes ahead *through* them, and a
+    /// nested block's own eliminations drop the affected buffered
+    /// pulls when the observations land. Ignored by the progressive
+    /// strategy (which has no conditioning rounds to pipeline).
     pub pipeline_depth: usize,
     pub seed: u64,
 }

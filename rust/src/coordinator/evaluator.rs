@@ -125,6 +125,16 @@ impl<'a> PipelineEvaluator<'a> {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// True once the wall-clock deadline has passed. Checked when a
+    /// batch is planned *and* again per item on the worker pool
+    /// (through the executor's cancellation predicate), so a deadline
+    /// kills a round mid-batch — evaluations already in flight
+    /// finish, the unstarted suffix never runs — instead of
+    /// overshooting by one full super-batch.
+    fn deadline_passed(&self) -> bool {
+        self.elapsed() >= self.budget_secs
+    }
+
     pub fn n_evals(&self) -> usize {
         self.records.len()
     }
@@ -344,7 +354,12 @@ impl<'a> Objective for PipelineEvaluator<'a> {
     /// nothing, but anything it proposes past the budget is discarded
     /// unevaluated by the caller (`ConditioningBlock` clears its
     /// speculation buffer at the next exhausted check), so cancelled
-    /// speculative work is never charged.
+    /// speculative work is never charged. The wall-clock deadline is
+    /// enforced per item *inside* the batch too: workers stop
+    /// starting evaluations the moment it expires, and the committed
+    /// results truncate to the prefix that ran — a deadline kills a
+    /// round mid-super-batch instead of overshooting by the whole
+    /// batch.
     fn evaluate_batch_overlapped(&mut self, reqs: &[(Config, f64)],
                                  overlap: &mut dyn FnMut())
         -> Result<Vec<f64>> {
@@ -357,10 +372,11 @@ impl<'a> Objective for PipelineEvaluator<'a> {
         }
         // like the serial path's per-request exhausted() check, the
         // wall-clock budget gates *scheduling*: past the deadline no
-        // fresh work is planned (cache hits still resolve). A batch
-        // already in flight cannot be cancelled mid-run, so the time
-        // budget can overshoot by at most one (super-)batch.
-        let remaining = if self.elapsed() >= self.budget_secs {
+        // fresh work is planned (cache hits still resolve), and a
+        // batch in flight is cancelled item by item on the workers —
+        // the deadline overshoots by at most the evaluations already
+        // started when it expires, never a whole super-batch.
+        let remaining = if self.deadline_passed() {
             0
         } else {
             self.max_evals.saturating_sub(self.records.len())
@@ -388,18 +404,24 @@ impl<'a> Objective for PipelineEvaluator<'a> {
         let ex = self.executor.clone();
         let mut outs: Vec<Option<(f64, Result<f64>)>> = {
             let shared: &PipelineEvaluator = self;
-            let pending =
-                ex.submit(&fresh, |t: &(String, Config, f64)| {
+            let pending = ex.submit_cancellable(
+                &fresh,
+                |t: &(String, Config, f64)| {
                     let t0 = Instant::now();
                     let res = shared.eval_inner(&t.1, t.2);
                     (t0.elapsed().as_secs_f64(), res)
-                });
+                },
+                // per-item deadline check on the workers: past the
+                // wall-clock budget no further item starts; the
+                // unstarted suffix comes back as None below
+                || shared.deadline_passed(),
+            );
             // the overlap window: the caller speculates on this
             // thread while the pool works the batch (with a serial
             // executor the batch is deferred until the drain below,
             // preserving the same speculate-then-observe order)
             overlap();
-            pending.drain().into_iter().map(Some).collect()
+            pending.drain_partial()
         };
 
         let mut done: Vec<Option<f64>> = vec![None; fresh.len()];
@@ -409,15 +431,22 @@ impl<'a> Objective for PipelineEvaluator<'a> {
                 Slot::Cached(u) => *u,
                 Slot::Fresh(i) => match done[*i] {
                     Some(u) => u,
-                    None => {
-                        let (elapsed, res) = outs[*i]
-                            .take()
-                            .expect("fresh result consumed twice");
-                        let u = self.commit(fresh[*i].0.clone(), cfg,
-                                            *fid, res, elapsed);
-                        done[*i] = Some(u);
-                        u
-                    }
+                    None => match outs[*i].take() {
+                        Some((elapsed, res)) => {
+                            let u = self.commit(fresh[*i].0.clone(),
+                                                cfg, *fid, res,
+                                                elapsed);
+                            done[*i] = Some(u);
+                            u
+                        }
+                        // deadline killed the batch at this item (it
+                        // was never started — the executor's Nones
+                        // are a suffix of the fresh list): nothing
+                        // from here on is committed or charged, so
+                        // the returned utilities stay a prefix of
+                        // the requests
+                        None => break,
+                    },
                 },
             };
             out.push(u);
@@ -426,8 +455,7 @@ impl<'a> Objective for PipelineEvaluator<'a> {
     }
 
     fn exhausted(&self) -> bool {
-        self.records.len() >= self.max_evals
-            || self.elapsed() >= self.budget_secs
+        self.records.len() >= self.max_evals || self.deadline_passed()
     }
 }
 
@@ -669,6 +697,40 @@ mod tests {
         assert_eq!(us2[0].to_bits(), us[0].to_bits());
         assert_eq!(us2[1].to_bits(), us[1].to_bits());
         assert_eq!(ev.n_evals(), 2, "cache hits consume no budget");
+    }
+
+    #[test]
+    fn mid_batch_deadline_commits_only_a_prefix() {
+        // a wall-clock deadline expiring while a super-batch is in
+        // flight must stop the workers item by item: the committed
+        // utilities are a prefix of the requests, every commit is
+        // charged, and nothing runs past the cut
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(71));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 72)
+            .with_budget(10_000, 0.01)
+            .with_workers(2);
+        let mut rng = Rng::new(73);
+        // 200 requests: the 10ms deadline expires long before the
+        // batch could finish, and items past the cut are never even
+        // claimed — so the oversized batch costs nothing
+        let reqs: Vec<(Config, f64)> =
+            (0..200).map(|_| (space.sample(&mut rng), 1.0)).collect();
+        let us = ev.evaluate_batch(&reqs).unwrap();
+        assert!(us.len() < reqs.len(),
+                "10ms deadline must cut a 200-eval batch mid-run \
+                 ({} evals ran)", us.len());
+        assert_eq!(ev.n_evals(), us.len(),
+                   "committed prefix must match the charged budget");
+        assert!(ev.exhausted());
+        // and a follow-up batch schedules nothing fresh
+        let n = ev.n_evals();
+        let more = ev.evaluate_batch(&reqs[..5]).unwrap();
+        assert!(more.len() <= 5);
+        assert_eq!(ev.n_evals(), n, "no evaluation past the deadline");
     }
 
     #[test]

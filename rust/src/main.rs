@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   run             run one AutoML search on a registry dataset
-//!   plans           compare the five execution plans on a dataset
+//!   plans           compare the execution plans (incl. nested CC)
 //!   datasets        list the dataset registry
 //!   artifacts       show the PJRT artifact manifest
 //!   collect-corpus  build the meta-learning corpus
@@ -28,13 +28,13 @@ USAGE: volcanoml <subcommand> [options]
 
 SUBCOMMANDS
   run             --dataset <name> [--system volcanoml|ausk|tpot|...]
-                  [--plan J|C|A|AC|CA] [--scale small|medium|large]
+                  [--plan J|C|A|AC|CA|CC] [--scale small|medium|large]
                   [--evals N] [--budget SECS] [--metric NAME]
                   [--corpus PATH] [--seed N] [--workers N]
                   [--super-batch N] [--pipeline-depth N] [--no-pjrt]
   plans           --dataset <name> [--evals N] [--workers N]
                   [--super-batch N] [--pipeline-depth N]
-                  — compare J/C/A/AC/CA
+                  — compare J/C/A/AC/CA plus the nested CC
   datasets        list the registry (name, task, n, d)
   artifacts       show compiled PJRT artifacts
   collect-corpus  --out PATH [--n-cls N] [--n-reg N] [--evals N]
@@ -174,7 +174,7 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
     let mut table = Table::new(
         &format!("execution plans on {}", ds.name),
         &["plan", "valid util", "test util", "evals", "secs"]);
-    for kind in PlanKind::all() {
+    for kind in PlanKind::with_nested() {
         let cfg = volcanoml::coordinator::automl::VolcanoConfig {
             plan: kind,
             metric,

@@ -38,6 +38,14 @@ pub enum PlanKind {
     /// Plan 5 — conditioning on algorithm, then alternating FE <-> HP
     /// (the VolcanoML default).
     CA,
+    /// Nested decomposition — conditioning on algorithm, then
+    /// conditioning on the first categorical FE stage, joint leaves
+    /// over the remaining FE + HP subspace. Not one of the paper's
+    /// five coarse plans; it exercises the recursive propose/observe
+    /// contract (blocks compose arbitrarily, §3.2), so the unified
+    /// scheduler's cross-level batching is visible on a plan whose
+    /// elimination runs at *two* depths.
+    CC,
 }
 
 impl PlanKind {
@@ -48,6 +56,7 @@ impl PlanKind {
             "A" | "PLAN3" | "3" => PlanKind::A,
             "AC" | "PLAN4" | "4" => PlanKind::AC,
             "CA" | "PLAN5" | "5" => PlanKind::CA,
+            "CC" | "PLAN6" | "6" => PlanKind::CC,
             _ => return None,
         })
     }
@@ -59,12 +68,22 @@ impl PlanKind {
             PlanKind::A => "A",
             PlanKind::AC => "AC",
             PlanKind::CA => "CA",
+            PlanKind::CC => "CC",
         }
     }
 
+    /// The paper's five coarse-grained plans (§4.2 / Fig 6).
     pub fn all() -> [PlanKind; 5] {
         [PlanKind::J, PlanKind::C, PlanKind::A, PlanKind::AC,
          PlanKind::CA]
+    }
+
+    /// The five coarse plans plus the nested-decomposition variant
+    /// ([`PlanKind::CC`]) exercised by the unified-scheduler tests
+    /// and benches.
+    pub fn with_nested() -> [PlanKind; 6] {
+        [PlanKind::J, PlanKind::C, PlanKind::A, PlanKind::AC,
+         PlanKind::CA, PlanKind::CC]
     }
 }
 
@@ -302,6 +321,19 @@ impl<'a> PlanBuilder<'a> {
                 Box::new(ConditioningBlock::new("algorithm",
                                                 self.ca_arms()))
             }
+            PlanKind::CC => {
+                let arms = self
+                    .algo_values()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, a)| Arm {
+                        value: a.clone(),
+                        block: self.cc_inner(a, 400 + i as u64),
+                        active: true,
+                    })
+                    .collect();
+                Box::new(ConditioningBlock::new("algorithm", arms))
+            }
         }
     }
 
@@ -317,6 +349,82 @@ impl<'a> PlanBuilder<'a> {
                 active: true,
             })
             .collect()
+    }
+
+    /// The FE subspace with categorical stage `var` fixed to `val`:
+    /// the stage parameter itself is dropped (it rides in the arm's
+    /// `fixed` config) and the per-op parameters of the *other* ops
+    /// of that stage — inactive under `val` — are dropped with it.
+    fn cc_leaf_space(&self, var: &str, val: &str) -> ConfigSpace {
+        let fe = self.fe_space();
+        let mut out = ConfigSpace::new();
+        for p in &fe.params {
+            if p.name == var {
+                continue;
+            }
+            let mut q = p.clone();
+            if let Some(c) = &q.condition {
+                if c.parent == var {
+                    if !c.values.iter().any(|v| v == val) {
+                        continue;
+                    }
+                    q.condition = None;
+                }
+            }
+            out.params.push(q);
+        }
+        out
+    }
+
+    /// Inner conditioning block of the nested CC plan: conditions on
+    /// the first multi-valued categorical FE stage under a fixed
+    /// algorithm, with joint leaves over the remaining FE + HP
+    /// subspace. Falls back to plan C's joint leaf when the FE space
+    /// offers no categorical stage to nest on.
+    fn cc_inner(&self, algo: &str, salt: u64)
+        -> Box<dyn BuildingBlock> {
+        let fe = self.fe_space();
+        let nested = fe.params.iter().find(|p| {
+            p.condition.is_none()
+                && matches!(&p.domain, Domain::Cat(vals)
+                            if vals.len() >= 2)
+        });
+        let Some(nested) = nested else {
+            let sub = merge_spaces(self.fe_space(),
+                                   self.hp_space(algo));
+            let fixed = Config::new()
+                .with("algorithm", Value::C(algo.to_string()));
+            return Box::new(self.leaf(&format!("fe+hp|{algo}"), sub,
+                                      fixed, salt));
+        };
+        let var = nested.name.clone();
+        let vals = match &nested.domain {
+            Domain::Cat(vals) => vals.clone(),
+            _ => unreachable!("matched Cat above"),
+        };
+        let arms = vals
+            .iter()
+            .enumerate()
+            .map(|(j, v)| {
+                let sub = merge_spaces(self.cc_leaf_space(&var, v),
+                                       self.hp_space(algo));
+                let fixed = Config::new()
+                    .with("algorithm", Value::C(algo.to_string()))
+                    .with(&var, Value::C(v.clone()));
+                Arm {
+                    value: v.clone(),
+                    block: Box::new(self.leaf(
+                        &format!("{var}={v}|{algo}"), sub, fixed,
+                        salt * 37 + j as u64)),
+                    active: true,
+                }
+            })
+            .collect();
+        let mut inner = ConditioningBlock::new(&var, arms);
+        // short inner rounds keep the outer elimination responsive
+        // (same choice as the AC plan's nested conditioning)
+        inner.plays_per_round = 1;
+        Box::new(inner)
     }
 
     fn prune_space(&self, mut space: ConfigSpace) -> ConfigSpace {
@@ -418,8 +526,13 @@ mod tests {
     fn plan_kind_parsing() {
         assert_eq!(PlanKind::parse("ca"), Some(PlanKind::CA));
         assert_eq!(PlanKind::parse("Plan1"), Some(PlanKind::J));
+        assert_eq!(PlanKind::parse("cc"), Some(PlanKind::CC));
+        assert_eq!(PlanKind::parse("Plan6"), Some(PlanKind::CC));
         assert_eq!(PlanKind::parse("xx"), None);
+        // the paper's five coarse plans, plus the nested variant
         assert_eq!(PlanKind::all().len(), 5);
+        assert_eq!(PlanKind::with_nested().len(), 6);
+        assert!(!PlanKind::all().contains(&PlanKind::CC));
     }
 
     #[test]
@@ -433,9 +546,9 @@ mod tests {
     }
 
     #[test]
-    fn all_five_plans_find_the_good_region() {
+    fn all_plans_find_the_good_region() {
         let space = automl_like_space();
-        for kind in PlanKind::all() {
+        for kind in PlanKind::with_nested() {
             let mut obj = Synth { evals: 0, cap: 220 };
             let mut rng = crate::util::rng::Rng::new(kind as u64);
             let builder = PlanBuilder::new(&space, EngineKind::Bo,
@@ -462,6 +575,30 @@ mod tests {
         let root = builder.build(PlanKind::CA);
         assert!(root.name().starts_with("conditioning"));
         assert_eq!(root.active_children(), 2);
+    }
+
+    #[test]
+    fn cc_plan_nests_conditioning_inside_conditioning() {
+        let space = automl_like_space();
+        let builder = PlanBuilder::new(&space, EngineKind::Bo, 1);
+        let mut root = builder.build(PlanKind::CC);
+        assert!(root.name().starts_with("conditioning[algorithm]"));
+        assert_eq!(root.active_children(), 2);
+        let cond = root
+            .as_any_mut()
+            .downcast_mut::<ConditioningBlock>()
+            .expect("CC root is a conditioning block");
+        for arm in &mut cond.arms {
+            // each algorithm arm conditions on fe:scaler (the first
+            // categorical FE stage of the test space)
+            assert!(arm.block.name()
+                        .starts_with("conditioning[fe:scaler]"),
+                    "{}", arm.block.name());
+            assert_eq!(arm.block.active_children(), 2);
+            // the whole tree can split pulls: a gathering parent may
+            // batch across both decomposition levels
+            assert!(arm.block.supports_propose());
+        }
     }
 
     #[test]

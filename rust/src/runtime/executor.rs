@@ -28,6 +28,13 @@
 //! `Env::pipeline_depth`) and join later with [`Submitted::drain`].
 //! A worker panic is re-raised at the `drain` join, mirroring the
 //! blocking path, and the pool stays usable afterwards.
+//!
+//! Batches can carry a **cancellation predicate**
+//! ([`Executor::submit_cancellable`]): workers re-check it before
+//! claiming each item and stop claiming once it flips, so a
+//! wall-clock deadline kills a super-batch mid-run (the unstarted
+//! suffix comes back as `None` from [`Submitted::drain_partial`])
+//! instead of overshooting by one full batch.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -115,9 +122,30 @@ impl WorkerPool {
         R: Send,
         F: Fn(&T) -> R + Send + Sync + 'env,
     {
+        self.submit_cancellable(items, f, || false)
+    }
+
+    /// [`Self::submit`] with a cancellation predicate: every worker
+    /// re-evaluates `cancel()` before claiming each item and stops
+    /// claiming once it returns true, so a wall-clock deadline kills
+    /// a batch mid-run instead of overshooting by the whole batch.
+    /// Items in flight when the predicate flips still finish (an
+    /// evaluation cannot be torn); unclaimed items are left as `None`
+    /// — a suffix, since the claim cursor is monotone — and must be
+    /// collected with [`PoolBatch::drain_partial`].
+    pub(crate) fn submit_cancellable<'env, T, R, F, C>(
+        &self, items: &'env [T], f: F, cancel: C)
+        -> PoolBatch<'env, T, R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Send + Sync + 'env,
+        C: Fn() -> bool + Send + Sync + 'env,
+    {
         let state = Arc::new(BatchState {
             items,
             f: Box::new(f),
+            cancel: Box::new(cancel),
             next: AtomicUsize::new(0),
             slots: items.iter().map(|_| Mutex::new(None)).collect(),
         });
@@ -129,6 +157,12 @@ impl WorkerPool {
             let job: Box<dyn FnOnce() + Send + 'env> =
                 Box::new(move || {
                     let r = catch_unwind(AssertUnwindSafe(|| loop {
+                        // per-item cancellation check *before* the
+                        // claim: once the predicate flips (deadline),
+                        // no further work starts on any worker
+                        if (st.cancel)() {
+                            break;
+                        }
                         let i = st.next.fetch_add(1, Ordering::Relaxed);
                         if i >= st.items.len() {
                             break;
@@ -179,6 +213,8 @@ impl WorkerPool {
 struct BatchState<'env, T, R> {
     items: &'env [T],
     f: Box<dyn Fn(&T) -> R + Send + Sync + 'env>,
+    /// Checked before every claim; true stops further claiming.
+    cancel: Box<dyn Fn() -> bool + Send + Sync + 'env>,
     next: AtomicUsize,
     slots: Vec<Mutex<Option<R>>>,
 }
@@ -198,8 +234,23 @@ impl<'env, T, R> PoolBatch<'env, T, R> {
     /// Block until every worker has finished this batch, then return
     /// the results in item order. A panic inside the work closure is
     /// re-raised here — after all workers have signalled, so the
-    /// pool (and the batch's borrows) are never left dangling.
-    pub fn drain(mut self) -> Vec<R> {
+    /// pool (and the batch's borrows) are never left dangling. Only
+    /// valid for non-cancellable submissions (every slot filled);
+    /// cancellable batches join with
+    /// [`drain_partial`](Self::drain_partial).
+    pub fn drain(self) -> Vec<R> {
+        self.drain_partial()
+            .into_iter()
+            .map(|r| r.expect("executor: worker left a slot empty"))
+            .collect()
+    }
+
+    /// Like [`drain`](Self::drain), but items never claimed because
+    /// the batch's cancellation predicate flipped come back as
+    /// `None`. The `None`s always form a suffix: the claim cursor is
+    /// monotone, so everything before the first unclaimed item was
+    /// claimed (and, once the join completes, finished).
+    pub fn drain_partial(mut self) -> Vec<Option<R>> {
         let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
         for _ in 0..self.pending {
             match self.done_rx.recv()
@@ -215,11 +266,7 @@ impl<'env, T, R> PoolBatch<'env, T, R> {
         self.state
             .slots
             .iter()
-            .map(|m| {
-                lock(m)
-                    .take()
-                    .expect("executor: worker left a slot empty")
-            })
+            .map(|m| lock(m).take())
             .collect()
     }
 }
@@ -324,11 +371,35 @@ impl Executor {
         R: Send,
         F: Fn(&T) -> R + Send + Sync + 'env,
     {
+        self.submit_cancellable(items, f, || false)
+    }
+
+    /// [`Self::submit`] with a per-item cancellation predicate:
+    /// workers (or the inline path, item by item at the drain) stop
+    /// starting new items once `cancel()` returns true, leaving the
+    /// unstarted suffix as `None` in
+    /// [`Submitted::drain_partial`]'s output. This is how a
+    /// wall-clock deadline kills a super-batch mid-run instead of
+    /// overshooting by the full batch.
+    pub(crate) fn submit_cancellable<'env, T, R, F, C>(
+        &self, items: &'env [T], f: F, cancel: C)
+        -> Submitted<'env, T, R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Send + Sync + 'env,
+        C: Fn() -> bool + Send + Sync + 'env,
+    {
         match &self.pool {
             Some(pool) if items.len() > 1 => {
-                Submitted::Pool(pool.submit(items, f))
+                Submitted::Pool(pool.submit_cancellable(items, f,
+                                                        cancel))
             }
-            _ => Submitted::Lazy { items, f: Box::new(f) },
+            _ => Submitted::Lazy {
+                items,
+                f: Box::new(f),
+                cancel: Box::new(cancel),
+            },
         }
     }
 }
@@ -342,6 +413,7 @@ pub enum Submitted<'env, T, R> {
     Lazy {
         items: &'env [T],
         f: Box<dyn Fn(&T) -> R + Send + Sync + 'env>,
+        cancel: Box<dyn Fn() -> bool + Send + Sync + 'env>,
     },
     /// In flight on the persistent pool.
     Pool(PoolBatch<'env, T, R>),
@@ -350,10 +422,34 @@ pub enum Submitted<'env, T, R> {
 impl<'env, T, R> Submitted<'env, T, R> {
     /// Join the batch: block for (or inline-run) the evaluations and
     /// return the results in item order. Worker panics re-raise here.
+    /// Only valid for non-cancellable submissions; cancellable ones
+    /// join with [`drain_partial`](Self::drain_partial).
     pub fn drain(self) -> Vec<R> {
+        self.drain_partial()
+            .into_iter()
+            .map(|r| r.expect("executor: item cancelled in a \
+                               non-cancellable batch"))
+            .collect()
+    }
+
+    /// Join the batch, with items never started (the cancellation
+    /// predicate flipped first) as `None` — always a suffix of the
+    /// output, for the pool and the inline path alike.
+    pub fn drain_partial(self) -> Vec<Option<R>> {
         match self {
-            Submitted::Lazy { items, f } => items.iter().map(f).collect(),
-            Submitted::Pool(batch) => batch.drain(),
+            Submitted::Lazy { items, f, cancel } => {
+                let mut out: Vec<Option<R>> =
+                    Vec::with_capacity(items.len());
+                let mut dead = false;
+                for t in items {
+                    // once the predicate flips the rest of the batch
+                    // is an unstarted suffix, same as on the pool
+                    dead = dead || cancel();
+                    out.push(if dead { None } else { Some(f(t)) });
+                }
+                out
+            }
+            Submitted::Pool(batch) => batch.drain_partial(),
         }
     }
 }
@@ -560,6 +656,54 @@ mod tests {
         }
         assert_eq!(hits.load(Ordering::SeqCst), 6);
         assert_eq!(ex.run(&[9], |&x| x), vec![9]);
+    }
+
+    #[test]
+    fn cancelled_batch_returns_none_suffix_and_pool_survives() {
+        // a predicate that flips after k completions must leave the
+        // tail unclaimed (None), never tear an in-flight item, and
+        // keep the pool usable — on the pool and the inline path
+        for workers in [1usize, 3] {
+            let ex = Executor::new(workers);
+            let items: Vec<u32> = (0..12).collect();
+            let started = AtomicUsize::new(0);
+            let out = ex
+                .submit_cancellable(
+                    &items,
+                    |&x| {
+                        started.fetch_add(1, Ordering::SeqCst);
+                        x * 2
+                    },
+                    || started.load(Ordering::SeqCst) >= 4,
+                )
+                .drain_partial();
+            assert_eq!(out.len(), 12, "workers={workers}");
+            // completed prefix, cancelled suffix — no gaps
+            let cut = out.iter().position(|r| r.is_none())
+                .expect("cancellation must leave an unstarted tail");
+            assert!(cut >= 4 && cut < 12, "workers={workers}: {cut}");
+            for (i, r) in out.iter().enumerate() {
+                if i < cut {
+                    assert_eq!(*r, Some(items[i] * 2),
+                               "workers={workers}");
+                } else {
+                    assert!(r.is_none(),
+                            "workers={workers}: gap at {i}");
+                }
+            }
+            // pool unaffected
+            assert_eq!(ex.run(&[7, 8], |&x| x + 1), vec![8, 9]);
+        }
+    }
+
+    #[test]
+    fn never_cancelled_batch_fills_every_slot() {
+        let ex = Executor::new(2);
+        let items: Vec<u32> = (0..9).collect();
+        let out = ex
+            .submit_cancellable(&items, |&x| x + 1, || false)
+            .drain_partial();
+        assert_eq!(out, (1..=9).map(Some).collect::<Vec<_>>());
     }
 
     #[test]

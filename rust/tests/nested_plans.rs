@@ -1,0 +1,441 @@
+//! Recursive plan-tree scheduler tests: `propose`/`observe` are total
+//! over the block algebra, so cross-leaf super-batching and the async
+//! pipeline recurse through nested plans (conditioning over
+//! conditioning, alternating over conditioning) instead of silently
+//! falling back to the serial round-robin.
+//!
+//! Contracts under test:
+//! * at the default knobs (`super_batch = 1`, `pipeline_depth = 1`)
+//!   a nested plan runs the seed's serial round-robin bit for bit
+//!   (pinned against a manually driven reference loop);
+//! * with `super_batch != 1` a nested-conditioning round goes out as
+//!   *multi-arm* super-batches spanning both decomposition levels
+//!   (asserted via an instrumented objective), never as per-leaf
+//!   serial `do_next` submissions;
+//! * nested trajectories are bit-identical across worker counts at
+//!   any fixed `(super_batch, pipeline_depth)`, and the evaluation
+//!   budget is spent exactly;
+//! * an inner arm eliminated while the pipeline speculated past its
+//!   round boundary never observes again.
+
+use anyhow::Result;
+
+use volcanoml::blocks::{AlternatingBlock, Arm, BuildingBlock,
+                        ConditioningBlock, Env, JointBlock, Objective};
+use volcanoml::coordinator::automl::{RunOutcome, VolcanoConfig,
+                                     VolcanoML};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::Task;
+use volcanoml::ensemble::EnsembleMethod;
+use volcanoml::plan::PlanKind;
+use volcanoml::space::{Config, ConfigSpace, Value};
+use volcanoml::util::rng::Rng;
+
+// ---- blocks-level harness ------------------------------------------
+
+/// Synthetic objective over {algorithm in a,b} x {scaler in s0,s1} x
+/// (x, y): algorithm 'a' with scaler 's1' peaks at 0.8, 'a'/'s0' at
+/// 0.6, algorithm 'b' caps at 0.4. Logs every submission's size and
+/// the (algorithm, scaler) pairs inside it.
+struct Synth {
+    evals: usize,
+    max_evals: usize,
+    submissions: Vec<usize>,
+    /// (algorithm, scaler) of every request, per submission.
+    submission_tags: Vec<Vec<(String, String)>>,
+}
+
+impl Synth {
+    fn capped(max_evals: usize) -> Synth {
+        Synth {
+            evals: 0,
+            max_evals,
+            submissions: Vec::new(),
+            submission_tags: Vec::new(),
+        }
+    }
+}
+
+impl Objective for Synth {
+    fn evaluate(&mut self, cfg: &Config, _f: f64) -> Result<f64> {
+        self.evals += 1;
+        let x = cfg.f64_or("x", 0.5);
+        let y = cfg.f64_or("y", 0.5);
+        Ok(match (cfg.str_or("algorithm", "a"),
+                  cfg.str_or("scaler", "s0")) {
+            ("a", "s1") => 0.8 - (x - 0.9).powi(2) - (y - 0.1).powi(2),
+            ("a", _) => 0.6 - (x - 0.5).powi(2) - (y - 0.5).powi(2),
+            _ => 0.4 - 0.5 * (x - 0.5).powi(2),
+        })
+    }
+
+    fn evaluate_batch(&mut self, reqs: &[(Config, f64)])
+        -> Result<Vec<f64>> {
+        self.submissions.push(reqs.len());
+        self.submission_tags.push(
+            reqs.iter()
+                .map(|(c, _)| (c.str_or("algorithm", "?").to_string(),
+                               c.str_or("scaler", "?").to_string()))
+                .collect());
+        let mut out = Vec::with_capacity(reqs.len());
+        for (cfg, fid) in reqs.iter() {
+            if self.exhausted() {
+                break;
+            }
+            out.push(self.evaluate(cfg, *fid)?);
+        }
+        Ok(out)
+    }
+
+    fn exhausted(&self) -> bool {
+        self.evals >= self.max_evals
+    }
+}
+
+fn xy_space() -> ConfigSpace {
+    ConfigSpace::new()
+        .float("x", 0.0, 1.0, 0.5)
+        .float("y", 0.0, 1.0, 0.5)
+}
+
+fn leaf(algo: &str, scaler: &str, seed: u64) -> JointBlock {
+    JointBlock::bo(
+        &format!("hp[{algo}/{scaler}]"),
+        xy_space(),
+        Config::new()
+            .with("algorithm", Value::C(algo.into()))
+            .with("scaler", Value::C(scaler.into())),
+        seed,
+    )
+}
+
+/// Inner conditioning block over the scaler choice (one play per
+/// round, like the nested conditioning of plan AC/CC).
+fn inner_cond(algo: &str, seed: u64) -> ConditioningBlock {
+    let mut c = ConditioningBlock::new("scaler", vec![
+        Arm { value: "s0".into(),
+              block: Box::new(leaf(algo, "s0", seed)),
+              active: true },
+        Arm { value: "s1".into(),
+              block: Box::new(leaf(algo, "s1", seed + 1)),
+              active: true },
+    ]);
+    c.plays_per_round = 1;
+    c
+}
+
+/// Conditioning over conditioning: algorithm -> scaler -> joint leaf.
+fn nested_cc(outer_plays: usize) -> ConditioningBlock {
+    let mut c = ConditioningBlock::new("algorithm", vec![
+        Arm { value: "a".into(),
+              block: Box::new(inner_cond("a", 31)),
+              active: true },
+        Arm { value: "b".into(),
+              block: Box::new(inner_cond("b", 41)),
+              active: true },
+    ]);
+    c.plays_per_round = outer_plays;
+    c
+}
+
+/// Alternating over conditioning, under an outer conditioning block:
+/// algorithm -> (joint leaf <-> conditioning on scaler).
+fn nested_alt_cond(outer_plays: usize) -> ConditioningBlock {
+    let alt = |algo: &str, seed: u64| -> Box<dyn BuildingBlock> {
+        let side = JointBlock::bo(
+            &format!("side[{algo}]"),
+            ConfigSpace::new().float("x", 0.0, 1.0, 0.5),
+            Config::new()
+                .with("algorithm", Value::C(algo.into()))
+                .with("scaler", Value::C("s0".into()))
+                .with("y", Value::F(0.5)),
+            seed,
+        );
+        Box::new(AlternatingBlock::new(
+            Box::new(side), vec!["x".into()],
+            Box::new(inner_cond(algo, seed + 7)),
+            vec!["scaler".into(), "y".into()],
+        ))
+    };
+    let mut c = ConditioningBlock::new("algorithm", vec![
+        Arm { value: "a".into(), block: alt("a", 51), active: true },
+        Arm { value: "b".into(), block: alt("b", 61), active: true },
+    ]);
+    c.plays_per_round = outer_plays;
+    c
+}
+
+fn obs_bits(block: &dyn BuildingBlock) -> Vec<(String, u64)> {
+    block
+        .observations()
+        .into_iter()
+        .map(|(c, y)| (c.key(), y.to_bits()))
+        .collect()
+}
+
+/// The seed's serial round-robin, driven by hand: play each active
+/// arm `plays_per_round` times, checking exhaustion before every
+/// pull. Elimination is disabled on the block under test so the
+/// reference needs no access to the private elimination path.
+fn manual_round(cond: &mut ConditioningBlock, env: &mut Env)
+    -> Result<()> {
+    for _ in 0..cond.plays_per_round {
+        for arm in cond.arms.iter_mut().filter(|a| a.active) {
+            if env.obj.exhausted() {
+                return Ok(());
+            }
+            arm.block.do_next(env)?;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn nested_default_knobs_match_serial_round_robin_bitwise() {
+    // at super_batch = 1 / pipeline_depth = 1 a nested plan must run
+    // the seed's plain round-robin bit for bit (a nested arm is not
+    // pull-granular, so the unified scheduler leaves it on the serial
+    // fallback) — for conditioning-over-conditioning and
+    // alternating-over-conditioning alike
+    type Mk = fn(usize) -> ConditioningBlock;
+    let shapes: [(&str, Mk); 2] = [
+        ("cc", nested_cc as Mk),
+        ("alt-cond", nested_alt_cond as Mk),
+    ];
+    for (label, mk) in shapes {
+        let mut obj_a = Synth::capped(150);
+        let mut rng_a = Rng::new(7);
+        let mut cond_a = mk(2);
+        cond_a.eliminate = false;
+        {
+            let mut env = Env::new(&mut obj_a, &mut rng_a);
+            for _ in 0..6 {
+                cond_a.do_next(&mut env).unwrap();
+            }
+        }
+
+        let mut obj_b = Synth::capped(150);
+        let mut rng_b = Rng::new(7);
+        let mut cond_b = mk(2);
+        cond_b.eliminate = false;
+        {
+            let mut env = Env::new(&mut obj_b, &mut rng_b);
+            for _ in 0..6 {
+                manual_round(&mut cond_b, &mut env).unwrap();
+            }
+        }
+
+        assert_eq!(obj_a.evals, obj_b.evals, "{label}");
+        assert_eq!(obj_a.submissions, obj_b.submissions,
+                   "{label}: submission pattern diverged");
+        assert_eq!(obs_bits(&cond_a), obs_bits(&cond_b),
+                   "{label}: trajectories diverged");
+    }
+}
+
+#[test]
+fn nested_super_batch_submits_multi_arm_batches() {
+    // acceptance: with super_batch != 1 a nested-conditioning round
+    // goes out as super-batches spanning BOTH decomposition levels —
+    // one whole-round submission mixes both algorithms and both
+    // scaler arms — instead of falling back to one serial submission
+    // per leaf pull
+    let mut obj = Synth::capped(1000);
+    let mut rng = Rng::new(9);
+    let mut cond = nested_cc(2);
+    {
+        let mut env = Env::with_super_batch(&mut obj, &mut rng, 1, 0);
+        cond.do_next(&mut env).unwrap();
+    }
+    // outer round: 2 plays x 2 algorithm arms = 4 pulls; each pull is
+    // a whole inner round (1 play x 2 scaler arms = 2 requests) = one
+    // submission of 8 requests crossing every level
+    assert_eq!(obj.submissions, vec![8],
+               "whole nested round must be one submission");
+    let tags = &obj.submission_tags[0];
+    let algos: std::collections::BTreeSet<&str> =
+        tags.iter().map(|(a, _)| a.as_str()).collect();
+    let scalers: std::collections::BTreeSet<&str> =
+        tags.iter().map(|(_, s)| s.as_str()).collect();
+    assert_eq!(algos.into_iter().collect::<Vec<_>>(), vec!["a", "b"],
+               "super-batch must span the outer arms");
+    assert_eq!(scalers.into_iter().collect::<Vec<_>>(),
+               vec!["s0", "s1"],
+               "super-batch must span the inner arms");
+
+    // chunked: 3 outer pulls (2 requests each) per submission ->
+    // submissions of 6 then 2
+    let mut obj2 = Synth::capped(1000);
+    let mut rng2 = Rng::new(9);
+    let mut cond2 = nested_cc(2);
+    {
+        let mut env = Env::with_super_batch(&mut obj2, &mut rng2, 1, 3);
+        cond2.do_next(&mut env).unwrap();
+    }
+    assert_eq!(obj2.submissions, vec![6, 2]);
+}
+
+#[test]
+fn nested_round_stays_budget_exact_under_pipelining() {
+    // whole-round chunks at depth 2 across both levels: the budget
+    // must land exactly, with buffered speculation discarded
+    for budget in [13usize, 22, 40] {
+        let mut obj = Synth::capped(budget);
+        let mut rng = Rng::new(17);
+        let mut cond = nested_cc(2);
+        {
+            let mut env =
+                Env::with_pipeline(&mut obj, &mut rng, 1, 0, 2);
+            for _ in 0..10 {
+                cond.do_next(&mut env).unwrap();
+            }
+        }
+        assert_eq!(obj.evals, budget, "budget={budget}");
+        assert_eq!(cond.n_evals(), budget, "budget={budget}");
+    }
+}
+
+#[test]
+fn eliminated_inner_arm_never_observes_after_its_round() {
+    // run the nested block long enough for the inner conditioning
+    // (under algorithm 'a') to eliminate the weak scaler arm; pulls
+    // of that arm still buffered in the pipeline are dropped at
+    // observe, so its leaf history freezes at the elimination point
+    let mut obj = Synth::capped(600);
+    let mut rng = Rng::new(23);
+    let mut cond = nested_cc(2);
+    let mut frozen: Option<usize> = None;
+    {
+        let mut env = Env::with_pipeline(&mut obj, &mut rng, 1, 0, 2);
+        for _ in 0..20 {
+            cond.do_next(&mut env).unwrap();
+            let inner = cond.arms[0].block.as_any_mut()
+                .downcast_mut::<ConditioningBlock>()
+                .expect("inner conditioning block");
+            if frozen.is_none() && inner.active_values().len() == 1 {
+                let dead = inner.arms.iter()
+                    .find(|a| !a.active).expect("one arm eliminated");
+                frozen = Some(dead.block.n_evals());
+            }
+        }
+    }
+    let frozen = frozen.expect("inner elimination never happened");
+    let inner = cond.arms[0].block.as_any_mut()
+        .downcast_mut::<ConditioningBlock>().unwrap();
+    let dead = inner.arms.iter().find(|a| !a.active).unwrap();
+    assert_eq!(dead.block.n_evals(), frozen,
+               "eliminated inner arm observed after its elimination");
+}
+
+// ---- system-level harness ------------------------------------------
+
+fn blob_ds(seed: u64) -> volcanoml::data::Dataset {
+    generate(&Profile {
+        name: format!("nested-{seed}"),
+        task: Task::Classification { n_classes: 2 },
+        gen: GenKind::Blobs { sep: 1.7 },
+        n: 240,
+        d: 6,
+        noise: 0.05,
+        imbalance: 1.2,
+        redundant: 1,
+        wild_scales: false,
+        seed,
+    })
+}
+
+fn run_nested(ds: &volcanoml::data::Dataset, plan: PlanKind,
+              workers: usize, super_batch: usize, depth: usize,
+              evals: usize) -> RunOutcome {
+    let cfg = VolcanoConfig {
+        plan,
+        scale: SpaceScale::Medium,
+        max_evals: evals,
+        ensemble: EnsembleMethod::None,
+        workers,
+        eval_batch: 1,
+        super_batch,
+        pipeline_depth: depth,
+        seed: 4321,
+        ..Default::default()
+    };
+    VolcanoML::new(cfg).run(ds, None).unwrap()
+}
+
+#[test]
+fn nested_plans_are_worker_count_invariant_and_budget_exact() {
+    // the nested CC plan and the alternating-over-conditioning AC
+    // plan: for any fixed (super_batch, pipeline_depth) the worker
+    // count is a pure wall-clock knob and the budget lands exactly —
+    // 22 is not a multiple of any round size here
+    let ds = blob_ds(1);
+    for plan in [PlanKind::CC, PlanKind::AC] {
+        for (sb, depth) in [(0usize, 1usize), (0, 2), (3, 2)] {
+            let serial = run_nested(&ds, plan, 1, sb, depth, 22);
+            let parallel = run_nested(&ds, plan, 4, sb, depth, 22);
+            assert_eq!(serial.n_evals, 22,
+                       "{} sb={sb} d={depth}: budget", plan.name());
+            assert_eq!(parallel.n_evals, 22,
+                       "{} sb={sb} d={depth}: budget", plan.name());
+            assert_eq!(serial.best_valid_utility.to_bits(),
+                       parallel.best_valid_utility.to_bits(),
+                       "{} sb={sb} d={depth}: incumbent diverged",
+                       plan.name());
+            assert_eq!(serial.best_config, parallel.best_config,
+                       "{} sb={sb} d={depth}", plan.name());
+        }
+    }
+}
+
+#[test]
+fn nested_default_knobs_match_explicit_serial_settings() {
+    // super_batch = 1 / pipeline_depth = 1 (the defaults) on a nested
+    // plan is the seed serial path: a run relying on the defaults and
+    // one passing them explicitly must agree bit for bit
+    let ds = blob_ds(2);
+    let explicit = run_nested(&ds, PlanKind::CC, 1, 1, 1, 20);
+    let cfg = VolcanoConfig {
+        plan: PlanKind::CC,
+        scale: SpaceScale::Medium,
+        max_evals: 20,
+        ensemble: EnsembleMethod::None,
+        workers: 1,
+        eval_batch: 1,
+        seed: 4321,
+        ..Default::default()
+    };
+    assert_eq!((cfg.super_batch, cfg.pipeline_depth), (1, 1),
+               "batching knobs must default off");
+    let default_run = VolcanoML::new(cfg).run(&ds, None).unwrap();
+    assert_eq!(explicit.best_valid_utility.to_bits(),
+               default_run.best_valid_utility.to_bits());
+    assert_eq!(explicit.best_config, default_run.best_config);
+    assert_eq!(explicit.n_evals, default_run.n_evals);
+}
+
+#[test]
+fn ci_matrix_nested_search_is_exact() {
+    // the CI matrix re-runs the suite with VOLCANO_PIPELINE_DEPTH=2
+    // VOLCANO_SUPER_BATCH=0 VOLCANO_WORKERS=4 (a whole nested round
+    // in flight on a real pool); the defaults below cover a second
+    // overlapped point of the knob space, so both configurations
+    // exercise the recursive scheduler on every push
+    let env_usize = |key: &str, default: usize| -> usize {
+        std::env::var(key).ok().and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+    let depth = env_usize("VOLCANO_PIPELINE_DEPTH", 3).max(1);
+    let super_batch = env_usize("VOLCANO_SUPER_BATCH", 2);
+    let workers = env_usize("VOLCANO_WORKERS", 2).max(1);
+    let ds = blob_ds(3);
+    for plan in [PlanKind::CC, PlanKind::AC] {
+        let out = run_nested(&ds, plan, workers, super_batch, depth,
+                             19);
+        assert_eq!(out.n_evals, 19,
+                   "{}: depth={depth} sb={super_batch} \
+                    workers={workers}", plan.name());
+        assert!(out.best_config.is_some(), "{}", plan.name());
+        assert!(out.best_valid_utility.is_finite(), "{}", plan.name());
+    }
+}
