@@ -93,6 +93,70 @@ fn main() {
                        t.per_iter_label(), t.iters.to_string()]);
     }
 
+    // ---- FE artifact store: miss+publish vs hit ---------------------
+    {
+        use std::sync::Arc;
+        use volcanoml::cache::{FeStore, Fingerprint, Resolved};
+        let store = FeStore::new(256 * 1024 * 1024);
+        let art_ds = Arc::new(ds.clone());
+        let art_train = Arc::new(train.clone());
+        let mut salt = 0u64;
+        let t = bench("fe_store_miss", 2, 200, || {
+            salt += 1;
+            let fp = Fingerprint::new().push_u64(salt);
+            match store.begin(fp) {
+                Resolved::Compute(t) => {
+                    std::hint::black_box(t.publish(
+                        art_ds.clone(), art_train.clone()));
+                }
+                Resolved::Ready(_) => unreachable!("fresh key"),
+            }
+        });
+        table.row(vec!["FE store miss+publish (800x16 artifact)".into(),
+                       t.per_iter_label(), t.iters.to_string()]);
+        let hot = Fingerprint::new().push_str("hot");
+        if let Resolved::Compute(tk) = store.begin(hot) {
+            tk.publish(art_ds.clone(), art_train.clone());
+        }
+        let t = bench("fe_store_hit", 2, 200, || {
+            std::hint::black_box(store.lookup(hot).unwrap());
+        });
+        table.row(vec!["FE store hit (lookup + LRU stamp)".into(),
+                       t.per_iter_label(), t.iters.to_string()]);
+    }
+
+    // ---- row-sharded FE apply over the worker pool ------------------
+    {
+        let big = generate(&Profile {
+            name: "micro-big".into(),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Checker { cells: 3 },
+            n: 20_000,
+            d: 16,
+            noise: 0.05,
+            imbalance: 1.0,
+            redundant: 2,
+            wild_scales: false,
+            seed: 6,
+        });
+        let btrain: Vec<usize> = (0..16_000).collect();
+        let cfg = volcanoml::fe::ops::scaler_space("quantile")
+            .default_config();
+        let f = volcanoml::fe::ops::fit_scaler("quantile", &big,
+                                               &btrain, &cfg);
+        for workers in [1usize, 4] {
+            let ex = volcanoml::runtime::executor::Executor::new(
+                workers);
+            let t = bench("apply_sharded", 1, 5, || {
+                std::hint::black_box(f.apply_sharded(&big, &ex));
+            });
+            table.row(vec![
+                format!("quantile apply row-sharded w={workers} \
+                         (20000x16)"),
+                t.per_iter_label(), t.iters.to_string()]);
+        }
+    }
+
     // ---- full pipeline evaluation (the objective) --------------------
     let pipeline = pipeline_for(SpaceScale::Large, false, false);
     let algos = roster_for(SpaceScale::Large, ds.task, false);

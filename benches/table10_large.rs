@@ -55,6 +55,7 @@ fn main() {
                 super_batch: volcanoml::bench::bench_super_batch(),
                 pipeline_depth:
                     volcanoml::bench::bench_pipeline_depth(),
+                fe_cache_mb: volcanoml::bench::bench_fe_cache_mb(),
                 seed: 43,
             };
             if let Ok(out) = run_system(sys, &ds, &spec, None,

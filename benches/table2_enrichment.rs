@@ -30,6 +30,7 @@ fn main() {
             workers: volcanoml::bench::bench_workers(),
             super_batch: volcanoml::bench::bench_super_batch(),
             pipeline_depth: volcanoml::bench::bench_pipeline_depth(),
+            fe_cache_mb: volcanoml::bench::bench_fe_cache_mb(),
             seed: 42,
         };
         let ausk = run_system(SystemKind::AuskMinus, &ds, &spec, None,

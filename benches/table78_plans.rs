@@ -56,6 +56,8 @@ fn main() {
                     super_batch: volcanoml::bench::bench_super_batch(),
                     pipeline_depth:
                         volcanoml::bench::bench_pipeline_depth(),
+                    fe_cache_mb:
+                        volcanoml::bench::bench_fe_cache_mb(),
                     seed: 42,
                     ..Default::default()
                 };
@@ -80,6 +82,8 @@ fn main() {
                 super_batch: volcanoml::bench::bench_super_batch(),
                 pipeline_depth:
                     volcanoml::bench::bench_pipeline_depth(),
+                fe_cache_mb:
+                    volcanoml::bench::bench_fe_cache_mb(),
                 seed: 42,
             };
             for sys in [SystemKind::Tpot, SystemKind::AuskMinus] {

@@ -44,6 +44,9 @@ fn main() -> anyhow::Result<()> {
     // whole conditioning round; pipeline depth: 1 = synchronous
     let super_batch = args.usize_or("super-batch", 1)?;
     let pipeline_depth = args.usize_or("pipeline-depth", 1)?.max(1);
+    // FE artifact store for the part-2 runs (part 1 compares on/off
+    // itself); trajectory-neutral, so any bound is safe
+    let fe_cache_mb = args.usize_or("fe-cache-mb", 0)?;
     args.finish()?;
     let evals = std::env::var("E2E_EVALS")
         .ok().and_then(|v| v.parse().ok()).unwrap_or(48);
@@ -166,6 +169,53 @@ fn main() -> anyhow::Result<()> {
                   pipeline)");
     }
 
+    // FE artifact store: a conditioning plan over the full FE space
+    // (CC nests on an FE stage, so whole arms share stage prefixes)
+    // at the identical budget, store off vs on. Content addressing
+    // makes the store trajectory-neutral — the incumbent must agree
+    // bit for bit — while repeated FE prefixes are served from the
+    // cache and transforming stages row-shard across the pool.
+    let fe_run = |mb: usize| -> anyhow::Result<(
+        f64, f64, usize, volcanoml::coordinator::evaluator::EvalStats,
+    )> {
+        let cfg = VolcanoConfig {
+            plan: PlanKind::CC,
+            scale: SpaceScale::Large,
+            metric: Metric::BalancedAccuracy,
+            max_evals: evals,
+            ensemble: EnsembleMethod::None,
+            workers,
+            eval_batch: 1,
+            fe_cache_mb: mb,
+            seed: 42,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let out = VolcanoML::new(cfg).run(&blobs, None)?;
+        Ok((t0.elapsed().as_secs_f64(), out.best_valid_utility,
+            out.n_evals, out.eval_stats))
+    };
+    println!("\n== FE artifact store on plan CC ({} evals, \
+              workers={workers}) ==", evals);
+    let (t_off, u_off, n_off, _) = fe_run(0)?;
+    println!("  store off   : {t_off:7.2}s  best valid {u_off:.4}  \
+              ({n_off} evals)");
+    let (t_on, u_on, n_on, stats) = fe_run(256)?;
+    let fe = stats.fe.expect("store was enabled");
+    println!("  store 256MB : {t_on:7.2}s  best valid {u_on:.4}  \
+              ({n_on} evals)");
+    println!("    hit rate {:.0}%  ({} hits + {} coalesced vs {} \
+              fitted, {} KiB resident)  speedup vs off: {:.2}x",
+             fe.hit_rate() * 100.0, fe.hits, fe.coalesced, fe.misses,
+             fe.bytes / 1024, t_off / t_on.max(1e-9));
+    assert_eq!(u_on.to_bits(), u_off.to_bits(),
+               "the FE store must be trajectory-neutral");
+    assert_eq!(n_on, n_off,
+               "the FE store must not change the spent budget");
+    assert!(fe.hits + fe.coalesced > 0,
+            "a conditioning plan over the FE space must share \
+             stage prefixes");
+
     // ---- part 2: registry datasets, PJRT arms when available -------
     let runtime = try_runtime();
     match &runtime {
@@ -200,6 +250,7 @@ fn main() -> anyhow::Result<()> {
             workers,
             super_batch,
             pipeline_depth,
+            fe_cache_mb,
             seed: 42,
         };
         let out = run_system(SystemKind::VolcanoMLMinus, &ds, &spec,

@@ -98,6 +98,10 @@ pub struct BaseSpec {
     /// Async pipeline depth (chunks proposed ahead of the in-flight
     /// one): 1 = synchronous, d > 1 = speculative overlap.
     pub pipeline_depth: usize,
+    /// FE artifact-store byte budget in MB (0 = off). Applies
+    /// identically to every system; trajectory-neutral (the store
+    /// only skips recomputation), so comparisons stay exact.
+    pub fe_cache_mb: usize,
     pub seed: u64,
 }
 
@@ -111,6 +115,7 @@ impl BaseSpec {
             workers: self.workers.max(1),
             super_batch: self.super_batch,
             pipeline_depth: self.pipeline_depth.max(1),
+            fe_cache_mb: self.fe_cache_mb,
             seed: self.seed,
             ..Default::default()
         };
@@ -268,6 +273,7 @@ mod tests {
             workers: 1,
             super_batch: 1,
             pipeline_depth: 1,
+            fe_cache_mb: 0,
             seed: 5,
         }
     }

@@ -315,6 +315,17 @@ pub fn bench_pipeline_depth() -> usize {
     bench_knob("pipeline-depth", "VOLCANO_PIPELINE_DEPTH", false, 1)
 }
 
+/// FE artifact-store byte budget (in MB) for bench / driver runs:
+/// `--fe-cache-mb N` (after `--`) or VOLCANO_FE_CACHE_MB; defaults
+/// to 0 (store off — every evaluation recomputes its FE pipeline).
+/// Unlike the batching knobs this is *not* semantic: artifacts are
+/// content-addressed by everything their computation depends on, so
+/// any bound leaves trajectories bit-identical — a pure wall-clock
+/// knob, safe to flip on paper-table runs.
+pub fn bench_fe_cache_mb() -> usize {
+    bench_knob("fe-cache-mb", "VOLCANO_FE_CACHE_MB", true, 0)
+}
+
 /// Open the PJRT runtime if artifacts are built (bench targets degrade
 /// to the native roster otherwise, with a warning).
 pub fn try_runtime() -> Option<crate::runtime::Runtime> {
@@ -384,6 +395,7 @@ pub fn run_matrix(profiles: &[crate::data::synthetic::Profile],
             workers: bench_workers(),
             super_batch: bench_super_batch(),
             pipeline_depth: bench_pipeline_depth(),
+            fe_cache_mb: bench_fe_cache_mb(),
             seed,
         };
         let mut urow = Vec::new();

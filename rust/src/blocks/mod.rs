@@ -297,6 +297,25 @@ pub trait BuildingBlock {
     fn pull_granular(&self) -> bool {
         true
     }
+    /// Re-filter a previously planned (but not yet evaluated) pull
+    /// against *current* block state. A pull buffered in a parent's
+    /// speculation window can outlive a decision that invalidates
+    /// part of it: an inner conditioning block eliminates an arm
+    /// while the pull waits, and the eliminated arm's requests would
+    /// be evaluated only for their observations to be dropped.
+    /// Parents call `revise` on every buffered pull just before
+    /// submission, so those requests are filtered out — never
+    /// evaluated, never charged. Implementations must keep the
+    /// proposal's bookkeeping consistent with the surviving requests
+    /// (an [`observe`](Self::observe) of the revised proposal commits
+    /// exactly them). The default keeps the proposal unchanged —
+    /// leaf blocks cannot invalidate their own plans between propose
+    /// and evaluate. At `pipeline_depth` 1 nothing is ever buffered
+    /// across a decision point, so `revise` is the identity there
+    /// and default-knob trajectories are untouched.
+    fn revise(&mut self, prop: Proposal) -> Proposal {
+        prop
+    }
     /// Second half: commit the utilities of a **prefix** of the
     /// proposal's requests (`ys` shorter than `prop.reqs` means the
     /// evaluation budget ran out mid-batch; only the prefix is
@@ -825,6 +844,20 @@ impl ConditioningBlock {
                     c
                 }
             };
+            // revise buffered pulls against current state: a nested
+            // arm may have eliminated inner arms while this chunk sat
+            // in the speculation window — their requests are filtered
+            // out here instead of being evaluated for observations
+            // the observe would drop. Freshly proposed chunks (and
+            // everything at window 0) revise to themselves, keeping
+            // the synchronous path bit-identical.
+            let cur: SpecChunk = cur
+                .into_iter()
+                .map(|(ai, p)| {
+                    let p = arms[ai].block.revise(p);
+                    (ai, p)
+                })
+                .collect();
             if cur.is_empty() {
                 // Defensive guard, unreachable today: reconcile_spec
                 // prunes emptied chunks and the propose branch always
@@ -1142,6 +1175,46 @@ impl BuildingBlock for ConditioningBlock {
         }
     }
 
+    /// Drop the requests of arms eliminated since this pull was
+    /// planned, recursing into the surviving arms (a nested block may
+    /// have eliminated *its* arms too). Emptied pulls keep their slot
+    /// — round bookkeeping (`ends_round`, the parent's pull count)
+    /// must survive revision — but carry zero requests, so the dead
+    /// work is never submitted. Mirrors the observation-drop in
+    /// [`Self::observe`], one step earlier in the pipeline.
+    fn revise(&mut self, prop: Proposal) -> Proposal {
+        let Proposal { reqs, payload } = prop;
+        let (pulls, ends_round) = match payload {
+            Payload::Cond { pulls, ends_round } => (pulls, ends_round),
+            other => return Proposal { reqs, payload: other },
+        };
+        let mut reqs = reqs.into_iter();
+        let mut out_reqs: Vec<(Config, f64)> = Vec::new();
+        let mut out_pulls: Vec<(usize, usize, Payload)> =
+            Vec::with_capacity(pulls.len());
+        for (ai, len, inner) in pulls {
+            let sub: Vec<(Config, f64)> =
+                reqs.by_ref().take(len).collect();
+            if !self.arms[ai].active {
+                // eliminated while buffered: keep the pull slot,
+                // submit nothing for it
+                out_pulls.push((ai, 0, Payload::Empty));
+                continue;
+            }
+            let revised = self.arms[ai].block.revise(Proposal {
+                reqs: sub,
+                payload: inner,
+            });
+            let Proposal { reqs: sub, payload: inner } = revised;
+            out_pulls.push((ai, sub.len(), inner));
+            out_reqs.extend(sub);
+        }
+        Proposal {
+            reqs: out_reqs,
+            payload: Payload::Cond { pulls: out_pulls, ends_round },
+        }
+    }
+
     fn current_best(&self) -> Option<(Config, f64)> {
         self.arms
             .iter()
@@ -1368,6 +1441,32 @@ impl BuildingBlock for AlternatingBlock {
             payload: Payload::Alt { first, warmup,
                                     inner: Box::new(payload) },
         })
+    }
+
+    /// Delegate revision to the side that planned the pull (a nested
+    /// conditioning side may have eliminated arms since).
+    fn revise(&mut self, prop: Proposal) -> Proposal {
+        let Proposal { reqs, payload } = prop;
+        match payload {
+            Payload::Alt { first, warmup, inner } => {
+                let side =
+                    if first { &mut self.b1 } else { &mut self.b2 };
+                let revised = side.revise(Proposal {
+                    reqs,
+                    payload: *inner,
+                });
+                let Proposal { reqs, payload } = revised;
+                Proposal {
+                    reqs,
+                    payload: Payload::Alt {
+                        first,
+                        warmup,
+                        inner: Box::new(payload),
+                    },
+                }
+            }
+            other => Proposal { reqs, payload: other },
+        }
     }
 
     fn observe(&mut self, prop: Proposal, ys: &[f64]) {

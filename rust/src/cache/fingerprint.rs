@@ -1,0 +1,178 @@
+//! Stable content fingerprints for FE artifacts.
+//!
+//! A [`Fingerprint`] is a 128-bit rolling hash (two independent
+//! FNV-1a lanes) over everything an FE stage's output depends on:
+//! the evaluator seed, the dataset identity, the fit-row set, and the
+//! (stage, operator, operator-config) triples of the stage prefix.
+//! Two evaluations fold the same byte stream iff the staged
+//! `fe::FePipeline::fit_apply` would produce bit-identical artifacts
+//! for them, which is exactly the contract the content-addressed
+//! store needs: serving a cached artifact is indistinguishable from
+//! recomputing it.
+//!
+//! Float config values are folded through their IEEE-754 bit pattern
+//! (never a decimal rendering): two configs that differ below any
+//! print precision must still key different artifacts, or the store
+//! would silently change evaluation results.
+
+use crate::space::{Config, Value};
+
+/// 128-bit rolling content hash; `Copy`, cheap to fold, and stable
+/// across runs and platforms (no pointer or layout dependence).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Fingerprint {
+    hi: u64,
+    lo: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+/// Second-lane offset (FNV offset basis of a different stream): the
+/// lanes see the same bytes but from different states, so a collision
+/// must defeat both simultaneously.
+const LANE2_OFFSET: u64 = 0x6c62272e07bb0142;
+/// Per-byte perturbation of the second lane's input.
+const LANE2_XOR: u8 = 0xA5;
+
+impl Default for Fingerprint {
+    fn default() -> Self {
+        Fingerprint::new()
+    }
+}
+
+impl Fingerprint {
+    pub fn new() -> Fingerprint {
+        Fingerprint { hi: FNV_OFFSET, lo: LANE2_OFFSET }
+    }
+
+    #[inline]
+    pub fn push_bytes(mut self, bytes: &[u8]) -> Fingerprint {
+        for &b in bytes {
+            self.hi = (self.hi ^ b as u64).wrapping_mul(FNV_PRIME);
+            self.lo = (self.lo ^ (b ^ LANE2_XOR) as u64)
+                .wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Fold a string with a terminator byte, so `("ab", "c")` and
+    /// `("a", "bc")` fold differently.
+    #[inline]
+    pub fn push_str(self, s: &str) -> Fingerprint {
+        self.push_bytes(s.as_bytes()).push_bytes(&[0xFE])
+    }
+
+    #[inline]
+    pub fn push_u64(self, v: u64) -> Fingerprint {
+        self.push_bytes(&v.to_le_bytes())
+    }
+
+    /// Fold a row-index set (split identity: which rows a stage fits
+    /// on is part of the artifact's content address).
+    pub fn push_rows(self, rows: &[usize]) -> Fingerprint {
+        let mut fp = self.push_u64(rows.len() as u64);
+        for &r in rows {
+            fp = fp.push_u64(r as u64);
+        }
+        fp
+    }
+
+    /// Fold one config value *exactly*: floats by bit pattern with a
+    /// type tag, so `F(1.0)` and `I(1)` (and any two floats that
+    /// would print identically) stay distinct.
+    pub fn push_value(self, v: &Value) -> Fingerprint {
+        match v {
+            Value::F(x) => self.push_bytes(&[b'F']).push_u64(x.to_bits()),
+            Value::I(i) => self.push_bytes(&[b'I']).push_u64(*i as u64),
+            Value::C(s) => self.push_bytes(&[b'C']).push_str(s),
+        }
+    }
+
+    /// Fold a whole config in its stable (BTreeMap) key order.
+    pub fn push_config(self, cfg: &Config) -> Fingerprint {
+        let mut fp = self;
+        for (k, v) in cfg.iter() {
+            fp = fp.push_str(k).push_value(v);
+        }
+        fp.push_bytes(&[0xFD])
+    }
+
+    /// The 128-bit key used to address the store.
+    #[inline]
+    pub fn key(&self) -> u128 {
+        ((self.hi as u128) << 64) | self.lo as u128
+    }
+
+    /// Deterministic 64-bit seed for a stage's private rng stream.
+    #[inline]
+    pub fn seed64(&self) -> u64 {
+        self.hi ^ self.lo.rotate_left(32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_and_boundaries_matter() {
+        let a = Fingerprint::new().push_str("ab").push_str("c");
+        let b = Fingerprint::new().push_str("a").push_str("bc");
+        assert_ne!(a.key(), b.key());
+        let c = Fingerprint::new().push_str("c").push_str("ab");
+        assert_ne!(a.key(), c.key());
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mk = || {
+            Fingerprint::new()
+                .push_str("scaler")
+                .push_u64(42)
+                .push_rows(&[1, 2, 3])
+        };
+        assert_eq!(mk().key(), mk().key());
+        assert_eq!(mk().seed64(), mk().seed64());
+    }
+
+    #[test]
+    fn float_values_fold_by_bit_pattern() {
+        // two floats that print identically at any fixed precision
+        // must still produce distinct fingerprints
+        let x = 0.123456789012345_f64;
+        let y = f64::from_bits(x.to_bits() + 1);
+        let a = Fingerprint::new().push_value(&Value::F(x));
+        let b = Fingerprint::new().push_value(&Value::F(y));
+        assert_ne!(a.key(), b.key());
+        // and F(1.0) vs I(1) are tagged apart
+        let f = Fingerprint::new().push_value(&Value::F(1.0));
+        let i = Fingerprint::new().push_value(&Value::I(1));
+        assert_ne!(f.key(), i.key());
+    }
+
+    #[test]
+    fn config_folding_uses_stable_order() {
+        let a = Config::new()
+            .with("b", Value::F(2.0))
+            .with("a", Value::F(1.0));
+        let b = Config::new()
+            .with("a", Value::F(1.0))
+            .with("b", Value::F(2.0));
+        // BTreeMap iteration order makes insertion order irrelevant
+        assert_eq!(Fingerprint::new().push_config(&a).key(),
+                   Fingerprint::new().push_config(&b).key());
+        // but different assignments differ
+        let c = Config::new().with("a", Value::F(1.0));
+        assert_ne!(Fingerprint::new().push_config(&a).key(),
+                   Fingerprint::new().push_config(&c).key());
+    }
+
+    #[test]
+    fn row_sets_are_part_of_the_address() {
+        let base = Fingerprint::new().push_str("ds");
+        assert_ne!(base.push_rows(&[0, 1]).key(),
+                   base.push_rows(&[1, 0]).key());
+        assert_ne!(base.push_rows(&[0, 1]).key(),
+                   base.push_rows(&[0, 1, 2]).key());
+    }
+}

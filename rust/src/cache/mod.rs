@@ -1,0 +1,561 @@
+//! Shared FE artifact store: a concurrent, content-addressed cache of
+//! feature-engineering stage outputs.
+//!
+//! VolcanoML's decomposition makes whole subtrees of the plan share FE
+//! prefixes — a conditioning arm fixes an FE stage while its leaves
+//! sweep the rest, and super-batched rounds re-evaluate the same stage
+//! config with only algorithm hyper-parameters varying — yet the
+//! evaluator used to recompute `fe::fit_apply` from scratch for every
+//! fresh evaluation. The store keys `Arc<Dataset>` artifacts by a
+//! stable [`Fingerprint`] of (dataset identity, fit rows, FE
+//! stage-prefix config): the staged `fit_apply` resolves the longest
+//! cached prefix and fits only the suffix.
+//!
+//! Properties:
+//! * **Trajectory-neutral.** An artifact's fingerprint covers every
+//!   input of its computation (including the per-stage rng seed, which
+//!   is itself derived from the fingerprint), so serving a cached
+//!   artifact is bit-identical to recomputing it. Search trajectories
+//!   are the same at any byte bound, worker count, or hit pattern —
+//!   the store is a pure wall-clock knob.
+//! * **Sharded locking.** The map is split into [`SHARDS`] independent
+//!   mutexes addressed by fingerprint bits, so concurrent workers
+//!   rarely contend.
+//! * **Cross-worker dedup.** Two workers fitting the same prefix
+//!   concurrently coalesce on one computation: the first inserts a
+//!   *pending* entry and computes; the rest block on its condvar and
+//!   receive the published artifact ([`FeStoreStats::coalesced`]).
+//!   An abandoned computation (the stage turned out to be the
+//!   identity, or the fit panicked) wakes the waiters to compute for
+//!   themselves, so nobody hangs.
+//! * **Byte-bounded LRU.** Entries carry a last-use stamp from a
+//!   global clock; publishing past the byte budget evicts the
+//!   least-recently-used ready entries until the store fits. Pending
+//!   entries are never evicted.
+//!
+//! Follow-ups recorded in ROADMAP.md: spill-to-disk for artifacts
+//! evicted under memory pressure, and cross-run persistence keyed by
+//! the same fingerprints.
+
+mod fingerprint;
+
+pub use fingerprint::Fingerprint;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::data::dataset::Dataset;
+use crate::util::lock;
+
+/// Lock-shard count (power of two; addressed by low fingerprint bits).
+const SHARDS: usize = 16;
+
+/// One cached FE state: the transformed dataset plus the (possibly
+/// balancer-augmented) training index set that goes with it.
+pub struct FeArtifact {
+    pub data: Arc<Dataset>,
+    pub train: Arc<Vec<usize>>,
+}
+
+impl FeArtifact {
+    /// Approximate resident bytes, used for the LRU byte bound.
+    fn cost(&self) -> usize {
+        self.data.x.len() * 4 + self.data.y.len() * 4
+            + self.train.len() * std::mem::size_of::<usize>()
+            + 64
+    }
+}
+
+enum WaitState {
+    Pending,
+    Ready(Arc<FeArtifact>),
+    /// The computing thread gave up (identity stage or unwound):
+    /// waiters compute for themselves.
+    Abandoned,
+}
+
+struct Waiter {
+    state: Mutex<WaitState>,
+    cv: Condvar,
+}
+
+impl Waiter {
+    fn new() -> Waiter {
+        Waiter { state: Mutex::new(WaitState::Pending),
+                 cv: Condvar::new() }
+    }
+
+    fn resolve(&self, state: WaitState) {
+        *lock(&self.state) = state;
+        self.cv.notify_all();
+    }
+}
+
+enum Entry {
+    Ready { art: Arc<FeArtifact>, stamp: u64, cost: usize },
+    Pending(Arc<Waiter>),
+}
+
+/// Point-in-time counters of the store (see module docs). `hits`
+/// count artifacts served from the map, `coalesced` artifacts
+/// received by waiting out a concurrent computation, `misses` the
+/// computations actually run by callers; the hit rate of interest is
+/// `(hits + coalesced) / (hits + coalesced + misses)`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FeStoreStats {
+    pub hits: u64,
+    pub coalesced: u64,
+    pub misses: u64,
+    pub published: u64,
+    pub evictions: u64,
+    pub bytes: usize,
+    pub entries: usize,
+    pub cap_bytes: usize,
+}
+
+impl FeStoreStats {
+    pub fn hit_rate(&self) -> f64 {
+        let served = self.hits + self.coalesced;
+        let total = served + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            served as f64 / total as f64
+        }
+    }
+}
+
+/// Outcome of [`FeStore::begin`]: either the artifact is already
+/// available (cached, or received from a concurrent computation), or
+/// the caller owns the computation and must publish through (or drop)
+/// the ticket.
+pub enum Resolved<'s> {
+    Ready(Arc<FeArtifact>),
+    Compute(Ticket<'s>),
+}
+
+/// Ownership of one in-flight computation. Publish the artifact with
+/// [`Ticket::publish`]; dropping the ticket instead (identity stage,
+/// or an unwinding fit) abandons the pending entry and wakes any
+/// waiters to compute for themselves — a panicking fit can never
+/// strand them.
+pub struct Ticket<'s> {
+    store: &'s FeStore,
+    fp: Fingerprint,
+    /// The pending entry registered in the map, if any (a waiter that
+    /// was woken by an abandon computes unregistered).
+    waiter: Option<Arc<Waiter>>,
+}
+
+impl<'s> Ticket<'s> {
+    /// Insert the artifact, wake waiters, and enforce the byte bound.
+    pub fn publish(mut self, data: Arc<Dataset>, train: Arc<Vec<usize>>)
+        -> Arc<FeArtifact> {
+        let art = Arc::new(FeArtifact { data, train });
+        self.store.insert_ready(self.fp, art.clone(),
+                                self.waiter.take());
+        art
+    }
+}
+
+impl Drop for Ticket<'_> {
+    fn drop(&mut self) {
+        // not published: clear our pending entry (if it is still
+        // ours) and wake waiters to compute for themselves
+        if let Some(w) = self.waiter.take() {
+            let mut shard = self.store.shard(self.fp);
+            if matches!(shard.get(&self.fp.key()),
+                        Some(Entry::Pending(p)) if Arc::ptr_eq(p, &w))
+            {
+                shard.remove(&self.fp.key());
+            }
+            drop(shard);
+            w.resolve(WaitState::Abandoned);
+        }
+    }
+}
+
+/// The concurrent, content-addressed FE artifact store. Shared across
+/// evaluator worker threads through an `Arc`; see module docs.
+pub struct FeStore {
+    shards: Vec<Mutex<HashMap<u128, Entry>>>,
+    cap_bytes: usize,
+    bytes: AtomicUsize,
+    clock: AtomicU64,
+    /// Serialises evictions (concurrent publishers past the bound
+    /// would otherwise both scan the whole map).
+    evict_gate: Mutex<()>,
+    hits: AtomicU64,
+    coalesced: AtomicU64,
+    misses: AtomicU64,
+    published: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl FeStore {
+    pub fn new(cap_bytes: usize) -> FeStore {
+        FeStore {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+            cap_bytes,
+            bytes: AtomicUsize::new(0),
+            clock: AtomicU64::new(0),
+            evict_gate: Mutex::new(()),
+            hits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            published: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, fp: Fingerprint)
+        -> MutexGuard<'_, HashMap<u128, Entry>> {
+        let idx = (fp.key() as usize) & (SHARDS - 1);
+        lock(&self.shards[idx])
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Non-blocking probe: a ready artifact or nothing. Used by the
+    /// longest-cached-prefix walk; an in-flight (pending) entry reads
+    /// as absent here, so the walk falls back to a shorter prefix
+    /// instead of blocking (the per-stage [`Self::begin`] still
+    /// coalesces with the in-flight fit when the walk reaches it).
+    /// Counts a hit only on success — failed probes of a prefix walk
+    /// are not misses (the computation miss is counted by `begin`).
+    pub fn lookup(&self, fp: Fingerprint) -> Option<Arc<FeArtifact>> {
+        let mut shard = self.shard(fp);
+        match shard.get_mut(&fp.key()) {
+            Some(Entry::Ready { art, stamp, .. }) => {
+                *stamp = self.tick();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(art.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Resolve one stage: a ready artifact (hit), the artifact of a
+    /// concurrent computation of the same fingerprint (coalesced —
+    /// this call blocks until it publishes or abandons), or a
+    /// [`Ticket`] making the caller the computing thread (miss).
+    pub fn begin(&self, fp: Fingerprint) -> Resolved<'_> {
+        let waiter = {
+            let mut shard = self.shard(fp);
+            match shard.get_mut(&fp.key()) {
+                Some(Entry::Ready { art, stamp, .. }) => {
+                    *stamp = self.tick();
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Resolved::Ready(art.clone());
+                }
+                Some(Entry::Pending(w)) => w.clone(),
+                None => {
+                    let w = Arc::new(Waiter::new());
+                    shard.insert(fp.key(), Entry::Pending(w.clone()));
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return Resolved::Compute(Ticket {
+                        store: self,
+                        fp,
+                        waiter: Some(w),
+                    });
+                }
+            }
+        };
+        // coalesce: wait out the concurrent computation
+        let mut st = lock(&waiter.state);
+        loop {
+            match &*st {
+                WaitState::Ready(art) => {
+                    self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    return Resolved::Ready(art.clone());
+                }
+                WaitState::Abandoned => {
+                    // the computing thread gave up (identity stage or
+                    // unwound): compute for ourselves, unregistered —
+                    // re-registering could livelock against other
+                    // woken waiters, and duplicate identical work is
+                    // harmless (last publish wins)
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return Resolved::Compute(Ticket {
+                        store: self,
+                        fp,
+                        waiter: None,
+                    });
+                }
+                WaitState::Pending => {
+                    st = match waiter.cv.wait(st) {
+                        Ok(g) => g,
+                        Err(p) => p.into_inner(),
+                    };
+                }
+            }
+        }
+    }
+
+    /// Insert a ready entry (replacing a pending or stale one), wake
+    /// `waiter`, and evict down to the byte bound.
+    fn insert_ready(&self, fp: Fingerprint, art: Arc<FeArtifact>,
+                    waiter: Option<Arc<Waiter>>) {
+        let cost = art.cost();
+        {
+            let mut shard = self.shard(fp);
+            let old = shard.insert(fp.key(), Entry::Ready {
+                art: art.clone(),
+                stamp: self.tick(),
+                cost,
+            });
+            if let Some(Entry::Ready { cost: old_cost, .. }) = old {
+                self.bytes.fetch_sub(old_cost, Ordering::Relaxed);
+            }
+            self.bytes.fetch_add(cost, Ordering::Relaxed);
+        }
+        self.published.fetch_add(1, Ordering::Relaxed);
+        if let Some(w) = waiter {
+            w.resolve(WaitState::Ready(art));
+        }
+        self.evict_to_cap();
+    }
+
+    /// Evict least-recently-used ready entries until the byte bound
+    /// holds. Pending entries are never evicted; an entry touched
+    /// after the candidate scan is skipped (its stamp moved).
+    fn evict_to_cap(&self) {
+        if self.bytes.load(Ordering::Relaxed) <= self.cap_bytes {
+            return;
+        }
+        let _gate = lock(&self.evict_gate);
+        while self.bytes.load(Ordering::Relaxed) > self.cap_bytes {
+            // candidate scan: (stamp, key, cost) of every ready entry
+            let mut cands: Vec<(u64, usize, u128, usize)> = Vec::new();
+            for (si, sh) in self.shards.iter().enumerate() {
+                let shard = lock(sh);
+                for (key, e) in shard.iter() {
+                    if let Entry::Ready { stamp, cost, .. } = e {
+                        cands.push((*stamp, si, *key, *cost));
+                    }
+                }
+            }
+            cands.sort_unstable_by_key(|c| c.0);
+            let mut progressed = false;
+            for (stamp, si, key, cost) in cands {
+                if self.bytes.load(Ordering::Relaxed) <= self.cap_bytes
+                {
+                    break;
+                }
+                let mut shard = lock(&self.shards[si]);
+                let still_lru = matches!(
+                    shard.get(&key),
+                    Some(Entry::Ready { stamp: s, .. }) if *s == stamp);
+                if still_lru {
+                    shard.remove(&key);
+                    self.bytes.fetch_sub(cost, Ordering::Relaxed);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                // everything left is pending or freshly touched:
+                // nothing evictable right now
+                break;
+            }
+        }
+    }
+
+    pub fn stats(&self) -> FeStoreStats {
+        FeStoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            published: self.published.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            entries: self.shards.iter()
+                .map(|s| lock(s).len())
+                .sum(),
+            cap_bytes: self.cap_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Task;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    fn toy_dataset(rows: usize, tag: f32) -> Arc<Dataset> {
+        let mut ds = Dataset::new("toy",
+                                  Task::Classification { n_classes: 2 },
+                                  4);
+        for i in 0..rows {
+            ds.push_row(&[tag, i as f32, 0.0, 1.0],
+                        (i % 2) as f32);
+        }
+        Arc::new(ds)
+    }
+
+    fn publish(store: &FeStore, fp: Fingerprint, rows: usize)
+        -> Arc<FeArtifact> {
+        match store.begin(fp) {
+            Resolved::Compute(t) => t.publish(
+                toy_dataset(rows, 1.0),
+                Arc::new((0..rows).collect())),
+            Resolved::Ready(a) => a,
+        }
+    }
+
+    fn fp_of(tag: &str) -> Fingerprint {
+        Fingerprint::new().push_str(tag)
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let store = FeStore::new(1 << 20);
+        let fp = fp_of("a");
+        assert!(store.lookup(fp).is_none());
+        let art = publish(&store, fp, 10);
+        assert_eq!(art.data.n, 10);
+        let hit = store.lookup(fp).expect("published artifact");
+        assert!(Arc::ptr_eq(&hit.data, &art.data));
+        let st = store.stats();
+        assert_eq!((st.hits, st.misses, st.published), (1, 1, 1));
+        assert_eq!(st.entries, 1);
+        assert!(st.bytes > 0 && st.bytes <= st.cap_bytes);
+    }
+
+    #[test]
+    fn abandoned_ticket_clears_its_pending_entry() {
+        let store = FeStore::new(1 << 20);
+        let fp = fp_of("b");
+        match store.begin(fp) {
+            Resolved::Compute(t) => drop(t), // identity stage
+            Resolved::Ready(_) => panic!("empty store cannot hit"),
+        }
+        // the pending entry is gone: the next begin computes afresh
+        match store.begin(fp) {
+            Resolved::Compute(t) => drop(t),
+            Resolved::Ready(_) => panic!("abandon must not publish"),
+        }
+        assert_eq!(store.stats().entries, 0);
+    }
+
+    #[test]
+    fn eviction_respects_the_byte_bound() {
+        // artifacts of ~ (rows * 4 floats * 4 bytes + rows * 8 + 64)
+        let one = {
+            let probe = FeStore::new(usize::MAX);
+            publish(&probe, fp_of("probe"), 50);
+            probe.stats().bytes
+        };
+        let cap = one * 3 + one / 2; // room for three artifacts
+        let store = FeStore::new(cap);
+        for i in 0..10 {
+            publish(&store, fp_of(&format!("k{i}")), 50);
+            assert!(store.stats().bytes <= cap,
+                    "byte bound violated after insert {i}: {} > {cap}",
+                    store.stats().bytes);
+        }
+        let st = store.stats();
+        assert!(st.evictions >= 7, "evictions: {}", st.evictions);
+        assert!(st.entries <= 3);
+        // the most recently published keys survive, the oldest are
+        // gone (LRU order)
+        assert!(store.lookup(fp_of("k9")).is_some());
+        assert!(store.lookup(fp_of("k0")).is_none());
+    }
+
+    #[test]
+    fn lru_prefers_recently_used_entries() {
+        let one = {
+            let probe = FeStore::new(usize::MAX);
+            publish(&probe, fp_of("probe"), 50);
+            probe.stats().bytes
+        };
+        let store = FeStore::new(2 * one + one / 2);
+        publish(&store, fp_of("old"), 50);
+        publish(&store, fp_of("new"), 50);
+        // touch "old" so "new" becomes the LRU victim
+        assert!(store.lookup(fp_of("old")).is_some());
+        publish(&store, fp_of("third"), 50);
+        assert!(store.lookup(fp_of("old")).is_some(),
+                "recently used entry was evicted");
+        assert!(store.lookup(fp_of("new")).is_none(),
+                "LRU entry survived past the byte bound");
+    }
+
+    #[test]
+    fn zero_cap_store_stays_empty_but_correct() {
+        let store = FeStore::new(0);
+        let art = publish(&store, fp_of("z"), 20);
+        assert_eq!(art.data.n, 20, "publish still hands the artifact \
+                                    back to the computing thread");
+        assert_eq!(store.stats().bytes, 0);
+        assert_eq!(store.stats().entries, 0);
+        assert!(store.lookup(fp_of("z")).is_none());
+    }
+
+    #[test]
+    fn concurrent_same_prefix_fits_coalesce_to_one_computation() {
+        let store = FeStore::new(1 << 20);
+        let fp = fp_of("shared");
+        let computed = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| match store.begin(fp) {
+                    Resolved::Ready(a) => assert_eq!(a.data.n, 33),
+                    Resolved::Compute(t) => {
+                        computed.fetch_add(1, Ordering::SeqCst);
+                        // widen the race window so the other threads
+                        // really arrive while we are "fitting"
+                        std::thread::sleep(Duration::from_millis(20));
+                        t.publish(toy_dataset(33, 2.0),
+                                  Arc::new((0..33).collect()));
+                    }
+                });
+            }
+        });
+        assert_eq!(computed.load(Ordering::SeqCst), 1,
+                   "same-prefix fits must coalesce to one computation");
+        let st = store.stats();
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.hits + st.coalesced, 7,
+                   "every other thread was served the one artifact");
+        assert_eq!(st.published, 1);
+    }
+
+    #[test]
+    fn abandoned_computation_wakes_waiters_to_compute() {
+        let store = FeStore::new(1 << 20);
+        let fp = fp_of("abandoned");
+        let outcomes = Mutex::new(Vec::new());
+        let (store, outcomes) = (&store, &outcomes);
+        std::thread::scope(|s| {
+            for i in 0..4 {
+                s.spawn(move || match store.begin(fp) {
+                    Resolved::Ready(a) => {
+                        lock(&outcomes).push(("ready", a.data.n));
+                    }
+                    Resolved::Compute(t) => {
+                        if i == 0 {
+                            std::thread::sleep(
+                                Duration::from_millis(20));
+                            drop(t); // identity: abandon
+                            lock(&outcomes).push(("abandon", 0));
+                        } else {
+                            t.publish(toy_dataset(5, 3.0),
+                                      Arc::new(vec![0]));
+                            lock(&outcomes).push(("compute", 5));
+                        }
+                    }
+                });
+            }
+        });
+        // nobody hung, and every thread resolved one way or another
+        assert_eq!(lock(&outcomes).len(), 4);
+    }
+}

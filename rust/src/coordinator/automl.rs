@@ -21,7 +21,7 @@ use crate::space::Config;
 use crate::surrogate::Surrogate;
 use crate::util::rng::Rng;
 
-use super::evaluator::PipelineEvaluator;
+use super::evaluator::{EvalStats, PipelineEvaluator};
 use super::{joint_space, pipeline_for, roster_for, SpaceScale};
 
 /// Search configuration (the `Classifier(**params)` analogue).
@@ -85,6 +85,21 @@ pub struct VolcanoConfig {
     /// pulls when the observations land. Ignored by the progressive
     /// strategy (which has no conditioning rounds to pipeline).
     pub pipeline_depth: usize,
+    /// FE artifact store byte budget in megabytes. `0` (default) =
+    /// off — every evaluation recomputes its FE pipeline, today's
+    /// behaviour bit for bit. `mb > 0` attaches a shared
+    /// content-addressed store of FE stage outputs
+    /// ([`crate::cache::FeStore`]): evaluations sharing an FE
+    /// stage-prefix (conditioning arms that fix an FE stage,
+    /// super-batches sweeping only algorithm HPs, multi-fidelity
+    /// re-evaluations, final refits) reuse the cached artifacts
+    /// instead of refitting, and transforming stages row-shard their
+    /// apply across the worker pool. Unlike the batching knobs this
+    /// never shapes the trajectory: artifacts are content-addressed
+    /// by everything their computation depends on, so search results
+    /// are bit-identical at any bound and any worker count — a pure
+    /// wall-clock knob.
+    pub fe_cache_mb: usize,
     pub seed: u64,
 }
 
@@ -109,6 +124,7 @@ impl Default for VolcanoConfig {
             eval_batch: 0,
             super_batch: 1,
             pipeline_depth: 1,
+            fe_cache_mb: 0,
             seed: 42,
         }
     }
@@ -136,6 +152,9 @@ pub struct RunOutcome {
     pub test_curve: Vec<(f64, f64)>,
     /// (cumulative evals, live conditioning arms) — Fig 12 trend.
     pub arm_trend: Vec<(usize, usize)>,
+    /// Evaluation-cache counters: config→utility memo hit/miss plus
+    /// the FE artifact store's stats when `fe_cache_mb > 0`.
+    pub eval_stats: EvalStats,
     /// Meta-corpus record of this run (for corpus collection).
     pub record: TaskRecord,
 }
@@ -215,7 +234,8 @@ impl VolcanoML {
             ds, split, cfg.metric, &pipeline, &algos, runtime,
             cfg.seed)
             .with_budget(cfg.max_evals, cfg.budget_secs)
-            .with_workers(workers);
+            .with_workers(workers)
+            .with_fe_cache(cfg.fe_cache_mb);
         let mut arm_trend: Vec<(usize, usize)> = Vec::new();
         let mut search_rng = rng.fork(0xB10C);
 
@@ -347,6 +367,7 @@ impl VolcanoML {
             valid_curve: evaluator.valid_curve.clone(),
             test_curve,
             arm_trend,
+            eval_stats: evaluator.stats(),
             record,
         })
     }

@@ -13,7 +13,7 @@
 //! and the evaluation budget is enforced exactly: a batch is truncated
 //! to the remaining budget before any work is scheduled.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -21,9 +21,10 @@ use anyhow::Result;
 
 use crate::algos::{Algorithm, EvalContext};
 use crate::blocks::Objective;
+use crate::cache::{FeStore, FeStoreStats, Fingerprint};
 use crate::data::dataset::{Dataset, Predictions, Split};
 use crate::data::metrics::Metric;
-use crate::fe::FePipeline;
+use crate::fe::{FeExec, FePipeline};
 use crate::runtime::executor::Executor;
 use crate::runtime::Runtime;
 use crate::space::Config;
@@ -49,13 +50,24 @@ pub struct PipelineEvaluator<'a> {
     pub seed: u64,
     /// Worker pool for batched evaluation (serial by default).
     pub executor: Executor,
+    /// Shared FE artifact store (None = off): content-addressed cache
+    /// of FE stage outputs, shared across the worker threads. A pure
+    /// wall-clock knob — trajectories are bit-identical at any bound.
+    fe_store: Option<Arc<FeStore>>,
+    /// Identity prefix of every FE fingerprint: evaluator seed +
+    /// dataset identity (fit rows fold in per call).
+    fe_base: Fingerprint,
+    /// `fe_base` folded with `split.train` — the fit-row set of every
+    /// search-time evaluation — precomputed once so the hot path does
+    /// not re-hash the row set per evaluation.
+    fe_base_train: Fingerprint,
     // budget
     start: Instant,
     pub budget_secs: f64,
     pub max_evals: usize,
     // telemetry
     pub records: Vec<EvalRecord>,
-    cache: HashMap<String, f64>,
+    cache: Memo,
     pub best: Option<(Config, f64)>,
     /// (elapsed secs, best valid utility) whenever the best improves.
     pub valid_curve: Vec<(f64, f64)>,
@@ -77,6 +89,12 @@ impl<'a> PipelineEvaluator<'a> {
             .first()
             .map(|a| a.name().to_string())
             .unwrap_or_default();
+        let fe_base = Fingerprint::new()
+            .push_str(&ds.name)
+            .push_u64(ds.n as u64)
+            .push_u64(ds.d as u64)
+            .push_u64(seed);
+        let fe_base_train = fe_base.push_rows(&split.train);
         PipelineEvaluator {
             ds,
             split,
@@ -90,11 +108,14 @@ impl<'a> PipelineEvaluator<'a> {
             runtime,
             seed,
             executor: Executor::serial(),
+            fe_store: None,
+            fe_base,
+            fe_base_train,
             start: Instant::now(),
             budget_secs: f64::INFINITY,
             max_evals: usize::MAX,
             records: Vec::new(),
-            cache: HashMap::new(),
+            cache: Memo::new(MEMO_CAP),
             best: None,
             valid_curve: Vec::new(),
             snapshots: Vec::new(),
@@ -119,6 +140,46 @@ impl<'a> PipelineEvaluator<'a> {
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.executor = Executor::new(workers);
         self
+    }
+
+    /// Attach a shared FE artifact store with a byte budget of `mb`
+    /// megabytes (0 = off, today's recompute-everything behaviour —
+    /// bit-identical either way, the store is a pure wall-clock
+    /// knob). The store is shared across the evaluator's worker
+    /// threads: concurrent fits of the same FE prefix coalesce on one
+    /// computation, and every published artifact is visible to every
+    /// other in-flight evaluation of the batch.
+    pub fn with_fe_cache(mut self, mb: usize) -> Self {
+        self.fe_store = if mb == 0 {
+            None
+        } else {
+            Some(Arc::new(FeStore::new(
+                mb.saturating_mul(1024 * 1024))))
+        };
+        self
+    }
+
+    /// Override the config→utility memo's entry bound (default
+    /// [`MEMO_CAP`]). A memo entry evicted and later re-requested is
+    /// simply re-evaluated (recorded and charged like any fresh
+    /// evaluation) — deterministic, worker-count invariant, and
+    /// memory-bounded instead of growing with the search length.
+    pub fn with_memo_cap(mut self, cap: usize) -> Self {
+        self.cache = Memo::new(cap);
+        self
+    }
+
+    /// Point-in-time evaluation-cache counters: the config→utility
+    /// memo's hit/miss/occupancy plus the FE artifact store's stats
+    /// when one is attached.
+    pub fn stats(&self) -> EvalStats {
+        EvalStats {
+            memo_hits: self.cache.hits,
+            memo_misses: self.cache.misses,
+            memo_entries: self.cache.map.len(),
+            memo_cap: self.cache.cap,
+            fe: self.fe_store.as_ref().map(|s| s.stats()),
+        }
     }
 
     pub fn elapsed(&self) -> f64 {
@@ -163,13 +224,38 @@ impl<'a> PipelineEvaluator<'a> {
     /// Fit FE + algorithm on `fit_rows`, predict `predict_rows` of the
     /// transformed dataset. Used for search (train -> valid) and final
     /// refits (train+valid -> test).
+    ///
+    /// FE runs through the staged, content-addressed path: each
+    /// stage's rng stream derives from (evaluator seed, dataset
+    /// identity, fit rows, FE stage-prefix config) — never from the
+    /// algorithm half of the configuration or the fidelity — so
+    /// evaluations sharing an FE prefix share artifacts, the store
+    /// (when attached) serves them bit-identically, and multi-fidelity
+    /// re-evaluations of one config reuse the same FE output. The
+    /// *model* side keeps its full per-(config, fidelity) seed, so
+    /// repeated evaluations of one request stay exact.
     pub fn fit_predict(&self, cfg: &Config, fidelity: f64,
                        fit_rows: &[usize], predict_rows: &[usize])
         -> Result<Predictions> {
         let key = format!("{}@{fidelity:.4}", cfg.key());
-        let mut rng = Rng::new(self.eval_seed(&key));
+        // the search path passes &split.train thousands of times:
+        // reuse its precomputed fingerprint (ptr+len identity is
+        // sound — the split is owned by this evaluator and never
+        // mutated) and re-hash only the refit row sets
+        let base = if fit_rows.as_ptr() == self.split.train.as_ptr()
+            && fit_rows.len() == self.split.train.len()
+        {
+            self.fe_base_train
+        } else {
+            self.fe_base.push_rows(fit_rows)
+        };
+        let fx = FeExec {
+            store: self.fe_store.as_deref(),
+            exec: Some(&self.executor),
+            base,
+        };
         let applied =
-            self.pipeline.fit_apply(self.ds, cfg, fit_rows, &mut rng);
+            self.pipeline.fit_apply(self.ds, cfg, fit_rows, &fx);
         let algo_name = cfg.str_or("algorithm", &self.default_algo);
         let algo = self
             .algos
@@ -184,6 +270,7 @@ impl<'a> PipelineEvaluator<'a> {
                 local.set(rest, v.clone());
             }
         }
+        let mut rng = Rng::new(self.eval_seed(&key));
         let mut ctx = EvalContext::new(self.runtime,
                                        rng.next_u64());
         ctx.fidelity = fidelity;
@@ -298,10 +385,88 @@ impl<'a> PipelineEvaluator<'a> {
     }
 }
 
+/// Default entry bound of the config→utility memo. Large enough that
+/// no realistic search evicts (budgets are orders of magnitude
+/// smaller), small enough that a long-running service reusing one
+/// evaluator cannot grow without bound.
+pub const MEMO_CAP: usize = 65_536;
+
+/// Bounded config→utility memo with hit/miss counters. Eviction is
+/// insertion-ordered (FIFO): deterministic, independent of lookup
+/// order races, and O(1). An evicted entry that is requested again is
+/// re-evaluated like any fresh config — correct, charged, recorded —
+/// so the bound trades budget for memory, never correctness.
+struct Memo {
+    map: HashMap<String, f64>,
+    order: VecDeque<String>,
+    cap: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl Memo {
+    fn new(cap: usize) -> Memo {
+        Memo {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            cap: cap.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Counting lookup (the serial path: a miss here means a fresh
+    /// evaluation follows).
+    fn get(&mut self, key: &str) -> Option<f64> {
+        match self.map.get(key) {
+            Some(&u) => {
+                self.hits += 1;
+                Some(u)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Non-counting lookup for the batch planner, which accounts
+    /// hits/misses itself (in-batch duplicates are hits, truncated
+    /// requests count nothing).
+    fn peek(&self, key: &str) -> Option<f64> {
+        self.map.get(key).copied()
+    }
+
+    fn insert(&mut self, key: String, v: f64) {
+        if self.map.insert(key.clone(), v).is_none() {
+            self.order.push_back(key);
+            while self.map.len() > self.cap {
+                match self.order.pop_front() {
+                    Some(old) => {
+                        self.map.remove(&old);
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+}
+
+/// Point-in-time snapshot of the evaluator's caches: the bounded
+/// config→utility memo and (when attached) the FE artifact store.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+    pub memo_entries: usize,
+    pub memo_cap: usize,
+    pub fe: Option<FeStoreStats>,
+}
+
 impl<'a> Objective for PipelineEvaluator<'a> {
     fn evaluate(&mut self, cfg: &Config, fidelity: f64) -> Result<f64> {
         let key = format!("{}@{fidelity:.4}", cfg.key());
-        if let Some(&u) = self.cache.get(&key) {
+        if let Some(u) = self.cache.get(&key) {
             return Ok(u);
         }
         // a cache hit is free, but fresh work must respect the
@@ -384,15 +549,23 @@ impl<'a> Objective for PipelineEvaluator<'a> {
         let mut slots: Vec<Slot> = Vec::with_capacity(reqs.len());
         let mut fresh: Vec<(String, Config, f64)> = Vec::new();
         let mut scheduled: HashMap<String, usize> = HashMap::new();
+        // counters are accounted like serial processing would see
+        // them: an in-batch duplicate is a hit (it would have found
+        // the memo the second time around), a budget-truncated
+        // request counts nothing (it never evaluates), and only
+        // genuinely scheduled fresh work is a miss.
         for (cfg, fid) in reqs {
             let key = format!("{}@{fid:.4}", cfg.key());
-            if let Some(&u) = self.cache.get(&key) {
+            if let Some(u) = self.cache.peek(&key) {
+                self.cache.hits += 1;
                 slots.push(Slot::Cached(u));
             } else if let Some(&i) = scheduled.get(&key) {
                 // duplicate within the batch: serial processing would
                 // hit the cache the second time around
+                self.cache.hits += 1;
                 slots.push(Slot::Fresh(i));
             } else if fresh.len() < remaining {
+                self.cache.misses += 1;
                 scheduled.insert(key.clone(), fresh.len());
                 slots.push(Slot::Fresh(fresh.len()));
                 fresh.push((key, cfg.clone(), *fid));
@@ -731,6 +904,123 @@ mod tests {
         let more = ev.evaluate_batch(&reqs[..5]).unwrap();
         assert!(more.len() <= 5);
         assert_eq!(ev.n_evals(), n, "no evaluation past the deadline");
+    }
+
+    #[test]
+    fn memo_is_bounded_and_recomputes_evicted_entries() {
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(81));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 82)
+            .with_memo_cap(2);
+        let mut rng = Rng::new(83);
+        let cfgs: Vec<Config> =
+            (0..3).map(|_| space.sample(&mut rng)).collect();
+        let us: Vec<f64> = cfgs
+            .iter()
+            .map(|c| ev.evaluate(c, 1.0).unwrap())
+            .collect();
+        assert_eq!(ev.n_evals(), 3);
+        let st = ev.stats();
+        assert_eq!(st.memo_entries, 2,
+                   "memo must hold at most cap entries");
+        assert_eq!(st.memo_cap, 2);
+        // the latest entries are memoised: a hit returns the same
+        // bits without re-recording
+        let u2 = ev.evaluate(&cfgs[2], 1.0).unwrap();
+        assert_eq!(u2.to_bits(), us[2].to_bits());
+        assert_eq!(ev.n_evals(), 3, "memo hit must not re-record");
+        // the evicted (oldest) config re-evaluates — to the identical
+        // utility, since evaluations are seed-deterministic — and is
+        // charged like fresh work
+        let u0 = ev.evaluate(&cfgs[0], 1.0).unwrap();
+        assert_eq!(u0.to_bits(), us[0].to_bits(),
+                   "re-evaluation must be deterministic");
+        assert_eq!(ev.n_evals(), 4, "evicted entry must re-evaluate");
+        let st = ev.stats();
+        assert!(st.memo_hits >= 1, "{st:?}");
+        assert!(st.memo_misses >= 4, "{st:?}");
+    }
+
+    #[test]
+    fn fe_store_keeps_trajectories_bit_identical() {
+        // acceptance: with the store enabled at any byte bound, the
+        // utilities (and everything downstream of them) match the
+        // store-off evaluator bit for bit, at every worker count
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let mut rng = Rng::new(91);
+        let reqs: Vec<(Config, f64)> =
+            (0..8).map(|_| (space.sample(&mut rng), 1.0)).collect();
+
+        let split_a = Split::stratified(&ds, &mut Rng::new(92));
+        let mut plain = PipelineEvaluator::new(&ds, split_a,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 93);
+        let plain_us = plain.evaluate_batch(&reqs).unwrap();
+
+        for (mb, workers) in [(64usize, 1usize), (64, 3), (1, 3)] {
+            let split_b = Split::stratified(&ds, &mut Rng::new(92));
+            let mut cached = PipelineEvaluator::new(&ds, split_b,
+                Metric::BalancedAccuracy, &pipeline, &algos, None, 93)
+                .with_workers(workers)
+                .with_fe_cache(mb);
+            let us = cached.evaluate_batch(&reqs).unwrap();
+            assert_eq!(plain_us.len(), us.len());
+            for (a, b) in plain_us.iter().zip(&us) {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "mb={mb} workers={workers}");
+            }
+            for (ra, rb) in plain.records.iter()
+                .zip(&cached.records) {
+                assert_eq!(ra.config, rb.config,
+                           "mb={mb} workers={workers}");
+                assert_eq!(ra.utility.to_bits(),
+                           rb.utility.to_bits(),
+                           "mb={mb} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn same_fe_prefix_batch_coalesces_to_one_fit() {
+        // six configs share the full FE prefix and differ only in an
+        // algorithm hyper-parameter: across 4 workers the FE stage
+        // must be fitted exactly once — the rest hit the store or
+        // coalesce on the in-flight computation
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(95));
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 96)
+            .with_workers(4)
+            .with_fe_cache(64);
+        let fe = Config::new()
+            .with("fe:transformer",
+                  crate::space::Value::C("select_percentile".into()))
+            .with("fe:transformer.select_percentile:percentile",
+                  crate::space::Value::F(0.5));
+        let reqs: Vec<(Config, f64)> = (0..6)
+            .map(|i| {
+                let cfg = space.default_config().merged(&fe).merged(
+                    &Config::new().with(
+                        "alg.random_forest:n_estimators",
+                        crate::space::Value::I(20 + i as i64)));
+                (cfg, 1.0)
+            })
+            .collect();
+        let us = ev.evaluate_batch(&reqs).unwrap();
+        assert_eq!(us.len(), 6);
+        assert_eq!(ev.n_evals(), 6, "distinct configs all evaluate");
+        let fe_stats = ev.stats().fe.expect("store attached");
+        assert_eq!(fe_stats.misses, 1,
+                   "one shared FE prefix => one fit: {fe_stats:?}");
+        assert_eq!(fe_stats.hits + fe_stats.coalesced, 5,
+                   "{fe_stats:?}");
+        assert_eq!(fe_stats.published, 1, "{fe_stats:?}");
     }
 
     #[test]

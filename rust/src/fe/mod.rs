@@ -3,20 +3,37 @@
 //! hyper-parameters — exactly the search-space structure of
 //! auto-sklearn, plus the extensions the paper adds (smote balancer,
 //! embedding-selection stage, user-defined operators/stages).
+//!
+//! `fit_apply` is *staged and content-addressed*: every stage's
+//! output is a deterministic function of (dataset identity, fit rows,
+//! the stage-prefix config) — the per-stage rng streams are derived
+//! from a rolling [`Fingerprint`] of exactly those inputs, never from
+//! anything else in the joint configuration. That contract is what
+//! lets the shared FE artifact store ([`crate::cache::FeStore`])
+//! serve a cached prefix bit-identically to recomputing it: the
+//! evaluator resolves the longest cached stage prefix and fits only
+//! the suffix, and transforming stages row-shard their apply across
+//! the worker pool ([`crate::fe::ops::Fitted::apply_sharded`]).
+//! With no store and a serial executor the staged path degenerates to
+//! the plain sequential loop.
 
 pub mod balance;
 pub mod embedding;
 pub mod ops;
 
-use std::borrow::Cow;
+use std::ops::Deref;
 use std::sync::Arc;
 
+use crate::cache::{FeStore, Fingerprint, Resolved};
 use crate::data::dataset::Dataset;
+use crate::runtime::executor::Executor;
 use crate::space::{Config, ConfigSpace};
 use crate::util::rng::Rng;
 
 /// User-defined feature operator (the `update_FEPipeline` API analogue
-/// from Appendix A.2.2).
+/// from Appendix A.2.2). Implementations must be deterministic given
+/// `(ds, train, cfg, rng)` — the artifact store assumes a stage's
+/// output is fully determined by its content address.
 pub trait CustomOp: Send + Sync {
     fn name(&self) -> &str;
     fn space(&self) -> ConfigSpace;
@@ -192,17 +209,60 @@ impl FePipeline {
         cs
     }
 
+    /// The operator `cfg` picks for `stage`. The *joint* AutoML space
+    /// carries FE parameters under the `fe:` prefix
+    /// (`coordinator::joint_space` merges them as `fe:<stage>`), the
+    /// pipeline-local space uses the bare stage name — both spellings
+    /// resolve, prefixed first.
+    fn stage_op<'c>(stage: &'c FeStage, cfg: &'c Config) -> &'c str {
+        let fallback = if stage.ops.iter().any(|o| o == "none") {
+            "none"
+        } else {
+            stage.ops[0].as_str()
+        };
+        let prefixed = format!("fe:{}", stage.name);
+        match cfg.get(&prefixed) {
+            Some(crate::space::Value::C(s)) => s.as_str(),
+            _ => cfg.str_or(&stage.name, fallback),
+        }
+    }
+
     /// Extract the operator-local config for `stage`/`op` from a joint
-    /// FE config (strips the `<stage>.<op>:` prefix).
+    /// FE config (strips the `fe:<stage>.<op>:` / `<stage>.<op>:`
+    /// prefix — joint and pipeline-local spellings both resolve).
     fn local_cfg(stage: &str, op: &str, cfg: &Config) -> Config {
-        let prefix = format!("{stage}.{op}:");
+        let bare = format!("{stage}.{op}:");
+        let prefixed = format!("fe:{bare}");
         let mut out = Config::new();
         for (k, v) in cfg.iter() {
-            if let Some(rest) = k.strip_prefix(&prefix) {
+            if let Some(rest) = k
+                .strip_prefix(&prefixed)
+                .or_else(|| k.strip_prefix(&bare))
+            {
                 out.set(rest, v.clone());
             }
         }
         out
+    }
+
+    /// Resolve the per-stage execution plan for `cfg`: chosen op,
+    /// operator-local config, and the rolling content fingerprint of
+    /// the stage *prefix* ending at each stage (seeded from
+    /// `fx.base`, which carries the dataset/split/seed identity).
+    fn plan_stages(&self, cfg: &Config, base: Fingerprint)
+        -> Vec<StagePlan<'_>> {
+        let mut fp = base;
+        let mut plans = Vec::with_capacity(self.stages.len());
+        for stage in &self.stages {
+            let op = Self::stage_op(stage, cfg).to_string();
+            let local = Self::local_cfg(&stage.name, &op, cfg);
+            fp = fp
+                .push_str(&stage.name)
+                .push_str(&op)
+                .push_config(&local);
+            plans.push(StagePlan { stage, op, local, fp });
+        }
+        plans
     }
 
     /// Fit on `train` rows and produce the transformed dataset plus
@@ -210,85 +270,338 @@ impl FePipeline {
     /// indices remain valid because balancer rows are appended at the
     /// end.
     ///
-    /// Copy-on-write: the input dataset is *borrowed* until a stage
-    /// actually changes it — identity operators (`none` scalers and
-    /// transformers, the `raw` embedding, balancers that add no rows)
-    /// pass the borrow straight through, so a pipeline of no-ops
-    /// performs zero row copies per evaluation instead of cloning the
-    /// whole dataset, and any pipeline saves the old unconditional
-    /// up-front clone (the first transforming stage writes its output
-    /// into fresh storage directly).
+    /// Staged execution (see module docs):
+    /// 1. resolve every stage's (op, local config, prefix
+    ///    fingerprint) — pure config work, no data touched;
+    /// 2. with a store, the **longest cached prefix wins**: probe the
+    ///    fingerprints from the last stage backwards and resume from
+    ///    the deepest artifact found;
+    /// 3. run the remaining stages. Statically-identity stages
+    ///    (`none` ops, the `raw` embedding) are skipped outright.
+    ///    With a store, each remaining stage first coalesces with any
+    ///    concurrent fit of the same prefix
+    ///    ([`crate::cache::FeStore::begin`]); a transforming stage
+    ///    publishes its output for every other in-flight evaluation.
+    ///
+    /// Copy-on-write is preserved: the input dataset is *borrowed*
+    /// until a stage actually changes it — an all-identity pipeline
+    /// performs zero row copies — and a cached artifact is *shared*
+    /// (`Arc`), never cloned.
     pub fn fit_apply<'d>(&self, ds: &'d Dataset, cfg: &Config,
-                         train: &[usize], rng: &mut Rng)
+                         train: &'d [usize], fx: &FeExec)
         -> AppliedFe<'d> {
-        let mut data: Cow<'d, Dataset> = Cow::Borrowed(ds);
-        let mut train: Vec<usize> = train.to_vec();
-        for stage in &self.stages {
-            let fallback = if stage.ops.iter().any(|o| o == "none") {
-                "none"
-            } else {
-                stage.ops[0].as_str()
-            };
-            let op = cfg.str_or(&stage.name, fallback).to_string();
-            let local = Self::local_cfg(&stage.name, &op, cfg);
-            match stage.kind {
-                StageKind::Embedding => {
-                    // the raw embedding is the identity
-                    if op != "raw" {
-                        data = Cow::Owned(
-                            embedding::apply_embedding(&op, &data));
-                    }
+        let plans = self.plan_stages(cfg, fx.base);
+        let mut data: FeData<'d> = FeData::Borrowed(ds);
+        let mut rows: FeRows<'d> = FeRows::Borrowed(train);
+        let mut start = 0usize;
+        if let Some(store) = fx.store {
+            for (k, plan) in plans.iter().enumerate().rev() {
+                // static-identity fingerprints are never published:
+                // skip the guaranteed-miss shard lookups
+                if plan.is_static_identity() {
+                    continue;
                 }
-                StageKind::Scaler => {
-                    let f = ops::fit_scaler(&op, &data, &train, &local);
-                    if !matches!(f, ops::Fitted::Identity) {
-                        data = Cow::Owned(f.apply(&data));
-                    }
-                }
-                StageKind::Balancer => {
-                    let b = balance::apply_balancer(&op, &data, &train,
-                                                    &local, rng);
-                    if b.n_extra > 0 {
-                        let d = data.to_mut();
-                        let first_new = d.n;
-                        d.x.extend_from_slice(&b.extra_x);
-                        d.y.extend_from_slice(&b.extra_y);
-                        d.n += b.n_extra;
-                        train.extend(first_new..first_new + b.n_extra);
-                    }
-                }
-                StageKind::Transformer => {
-                    let f = ops::fit_transformer(&op, &data, &train,
-                                                 &local, rng);
-                    if !matches!(f, ops::Fitted::Identity) {
-                        data = Cow::Owned(f.apply(&data));
-                    }
-                }
-                StageKind::Custom => {
-                    if op != "none" {
-                        let c = stage
-                            .custom
-                            .iter()
-                            .find(|c| c.name() == op)
-                            .unwrap_or_else(|| panic!("no op {op}"));
-                        let f = c.fit(&data, &train, &local, rng);
-                        if !matches!(f, ops::Fitted::Identity) {
-                            data = Cow::Owned(f.apply(&data));
-                        }
-                    }
+                if let Some(art) = store.lookup(plan.fp) {
+                    data = FeData::Shared(art.data.clone());
+                    rows = FeRows::Shared(art.train.clone());
+                    start = k + 1;
+                    break;
                 }
             }
         }
-        AppliedFe { data, train }
+        for plan in &plans[start..] {
+            if plan.is_static_identity() {
+                continue;
+            }
+            match fx.store {
+                None => {
+                    self.run_stage(plan, &mut data, &mut rows, fx);
+                }
+                Some(store) => match store.begin(plan.fp) {
+                    Resolved::Ready(art) => {
+                        data = FeData::Shared(art.data.clone());
+                        rows = FeRows::Shared(art.train.clone());
+                    }
+                    Resolved::Compute(ticket) => {
+                        let changed = self.run_stage(plan, &mut data,
+                                                     &mut rows, fx);
+                        if changed {
+                            data = data.into_shared();
+                            if let FeData::Shared(a) = &data {
+                                ticket.publish(a.clone(),
+                                               rows.share());
+                            } else {
+                                debug_assert!(
+                                    false,
+                                    "changed stage must own its output");
+                            }
+                        } else if let FeData::Shared(a) = &data {
+                            // dynamic identity (a balancer that adds
+                            // no rows, a transformer whose fit
+                            // degenerates): alias the unchanged state
+                            // under this stage's fingerprint —
+                            // zero-copy, since the state is already
+                            // an artifact — so later evaluations
+                            // sharing the prefix skip the (possibly
+                            // expensive) fit instead of rediscovering
+                            // the identity every time
+                            ticket.publish(a.clone(), rows.share());
+                        }
+                        // remaining !changed case (the state is still
+                        // the pristine borrow): the dropped ticket
+                        // abandons the pending entry and wakes any
+                        // coalesced waiters — publishing would cost a
+                        // full dataset copy to cache a no-op
+                    }
+                },
+            }
+        }
+        AppliedFe { data, train: rows }
+    }
+
+    /// Execute one stage against the current `(data, rows)` state,
+    /// returning whether the stage changed it. The stage's private
+    /// rng stream is seeded from its prefix fingerprint, so the
+    /// output depends on nothing outside the content address.
+    fn run_stage(&self, plan: &StagePlan, data: &mut FeData<'_>,
+                 rows: &mut FeRows<'_>, fx: &FeExec) -> bool {
+        let mut rng = Rng::new(plan.fp.seed64());
+        let op = plan.op.as_str();
+        match plan.stage.kind {
+            StageKind::Embedding => {
+                // the raw (identity) embedding is filtered out by
+                // is_static_identity before we get here
+                let out = embedding::apply_embedding(op, &**data);
+                *data = FeData::Owned(out);
+                true
+            }
+            StageKind::Scaler => {
+                let f = ops::fit_scaler(op, &**data, rows,
+                                        &plan.local);
+                if matches!(f, ops::Fitted::Identity) {
+                    false
+                } else {
+                    let out = Self::apply_fitted(&f, &**data, fx);
+                    *data = FeData::Owned(out);
+                    true
+                }
+            }
+            StageKind::Balancer => {
+                let b = balance::apply_balancer(op, &**data, rows,
+                                                &plan.local, &mut rng);
+                if b.n_extra == 0 {
+                    false
+                } else {
+                    let d = data.make_mut();
+                    let first_new = d.n;
+                    d.x.extend_from_slice(&b.extra_x);
+                    d.y.extend_from_slice(&b.extra_y);
+                    d.n += b.n_extra;
+                    rows.make_mut()
+                        .extend(first_new..first_new + b.n_extra);
+                    true
+                }
+            }
+            StageKind::Transformer => {
+                let f = ops::fit_transformer(op, &**data, rows,
+                                             &plan.local, &mut rng);
+                if matches!(f, ops::Fitted::Identity) {
+                    false
+                } else {
+                    let out = Self::apply_fitted(&f, &**data, fx);
+                    *data = FeData::Owned(out);
+                    true
+                }
+            }
+            StageKind::Custom => {
+                let c = plan
+                    .stage
+                    .custom
+                    .iter()
+                    .find(|c| c.name() == op)
+                    .unwrap_or_else(|| panic!("no op {op}"));
+                let f = c.fit(&**data, rows, &plan.local, &mut rng);
+                if matches!(f, ops::Fitted::Identity) {
+                    false
+                } else {
+                    let out = Self::apply_fitted(&f, &**data, fx);
+                    *data = FeData::Owned(out);
+                    true
+                }
+            }
+        }
+    }
+
+    /// Apply a fitted transform, row-sharded across the worker pool
+    /// when one is attached (bit-identical to the serial apply; see
+    /// [`ops::Fitted::apply_sharded`]).
+    fn apply_fitted(f: &ops::Fitted, ds: &Dataset, fx: &FeExec)
+        -> Dataset {
+        match fx.exec {
+            Some(ex) => f.apply_sharded(ds, ex),
+            None => f.apply(ds),
+        }
+    }
+}
+
+/// Per-stage execution plan resolved from the joint config (see
+/// [`FePipeline::plan_stages`]).
+struct StagePlan<'s> {
+    stage: &'s FeStage,
+    op: String,
+    local: Config,
+    /// Content fingerprint of the stage prefix ending here.
+    fp: Fingerprint,
+}
+
+impl StagePlan<'_> {
+    /// Ops that are the identity by construction: nothing to compute,
+    /// nothing to cache (their output state *is* the previous one).
+    fn is_static_identity(&self) -> bool {
+        match self.stage.kind {
+            StageKind::Embedding => self.op == "raw",
+            _ => self.op == "none",
+        }
+    }
+}
+
+/// Execution context of a staged [`FePipeline::fit_apply`]: the
+/// artifact store (None = caching off), the worker pool for
+/// row-sharded applies (None = single-threaded), and the base
+/// fingerprint carrying everything outside the FE config that stage
+/// outputs depend on (evaluator seed, dataset identity, fit rows).
+pub struct FeExec<'e> {
+    pub store: Option<&'e FeStore>,
+    pub exec: Option<&'e Executor>,
+    pub base: Fingerprint,
+}
+
+impl FeExec<'static> {
+    /// Store-less, single-threaded context (unit tests, standalone
+    /// pipeline use): stage rng streams still derive from `seed` via
+    /// the same fingerprint scheme as the evaluator path.
+    pub fn local(seed: u64) -> FeExec<'static> {
+        FeExec {
+            store: None,
+            exec: None,
+            base: Fingerprint::new().push_u64(seed),
+        }
+    }
+}
+
+/// The dataset state flowing through a staged `fit_apply`: borrowed
+/// from the caller until a stage changes it, owned after a fresh
+/// transform (store off), or shared with the artifact store / other
+/// in-flight evaluations (`Arc`). Derefs to [`Dataset`].
+pub enum FeData<'d> {
+    Borrowed(&'d Dataset),
+    Owned(Dataset),
+    Shared(Arc<Dataset>),
+}
+
+impl Deref for FeData<'_> {
+    type Target = Dataset;
+
+    fn deref(&self) -> &Dataset {
+        match self {
+            FeData::Borrowed(d) => d,
+            FeData::Owned(d) => d,
+            FeData::Shared(d) => d,
+        }
+    }
+}
+
+impl<'d> FeData<'d> {
+    /// Mutable access, cloning out of a borrow or a shared artifact
+    /// first (copy-on-write: artifacts are immutable once published).
+    fn make_mut(&mut self) -> &mut Dataset {
+        if !matches!(self, FeData::Owned(_)) {
+            let cloned: Dataset = (**self).clone();
+            *self = FeData::Owned(cloned);
+        }
+        match self {
+            FeData::Owned(d) => d,
+            _ => unreachable!("made owned above"),
+        }
+    }
+
+    /// Move an owned dataset behind an `Arc` (for publication);
+    /// borrows and already-shared states pass through.
+    fn into_shared(self) -> FeData<'d> {
+        match self {
+            FeData::Owned(d) => FeData::Shared(Arc::new(d)),
+            other => other,
+        }
+    }
+}
+
+/// The training-row index set flowing alongside [`FeData`]: borrowed
+/// from the caller until a balancer augments it, owned after an
+/// augmentation (store off), or `Arc`-shared with the artifact store.
+/// Derefs to `[usize]`, so callers read it as a slice; the
+/// copy-on-write mirror of `FeData` keeps store hits O(1) instead of
+/// cloning the row set per evaluation.
+pub enum FeRows<'d> {
+    Borrowed(&'d [usize]),
+    Owned(Vec<usize>),
+    Shared(Arc<Vec<usize>>),
+}
+
+impl Deref for FeRows<'_> {
+    type Target = [usize];
+
+    fn deref(&self) -> &[usize] {
+        match self {
+            FeRows::Borrowed(r) => r,
+            FeRows::Owned(v) => v,
+            FeRows::Shared(a) => a,
+        }
+    }
+}
+
+impl<'d> FeRows<'d> {
+    /// Mutable access, cloning out of a borrow or a shared artifact
+    /// first (artifacts are immutable once published).
+    fn make_mut(&mut self) -> &mut Vec<usize> {
+        if !matches!(self, FeRows::Owned(_)) {
+            let v: Vec<usize> = self.to_vec();
+            *self = FeRows::Owned(v);
+        }
+        match self {
+            FeRows::Owned(v) => v,
+            _ => unreachable!("made owned above"),
+        }
+    }
+
+    /// An `Arc` of the current row set for publication: owned rows
+    /// convert to shared in place (no copy), already-shared rows
+    /// clone the `Arc`, borrowed rows are copied once (per published
+    /// artifact, never per hit).
+    fn share(&mut self) -> Arc<Vec<usize>> {
+        match self {
+            FeRows::Borrowed(r) => Arc::new(r.to_vec()),
+            FeRows::Shared(a) => a.clone(),
+            FeRows::Owned(_) => {
+                let taken =
+                    std::mem::replace(self, FeRows::Borrowed(&[]));
+                let FeRows::Owned(v) = taken else {
+                    unreachable!("matched Owned above");
+                };
+                let a = Arc::new(v);
+                *self = FeRows::Shared(a.clone());
+                a
+            }
+        }
     }
 }
 
 /// Output of the FE pipeline. `data` stays a borrow of the input
-/// dataset when no stage modified it (see
-/// [`FePipeline::fit_apply`]); callers read it through deref.
+/// dataset when no stage modified it, and an `Arc` into the artifact
+/// store when the final stage was served from (or published to) the
+/// cache; callers read both `data` and `train` through deref.
 pub struct AppliedFe<'d> {
-    pub data: Cow<'d, Dataset>,
-    pub train: Vec<usize>,
+    pub data: FeData<'d>,
+    pub train: FeRows<'d>,
 }
 
 #[cfg(test)]
@@ -350,10 +663,12 @@ mod tests {
         let (data, train) = ds();
         let pipe = FePipeline::standard(false, false);
         let cfg = pipe.space().default_config();
-        let mut rng = Rng::new(0);
-        let out = pipe.fit_apply(&data, &cfg, &train, &mut rng);
+        let out = pipe.fit_apply(&data, &cfg, &train,
+                                 &FeExec::local(0));
         assert_eq!(out.data.n, data.n); // default balancer = none
-        assert_eq!(out.train, train);
+        assert_eq!(&out.train[..], &train[..]);
+        // the untouched row set is borrowed, not copied
+        assert!(matches!(out.train, FeRows::Borrowed(_)));
     }
 
     #[test]
@@ -364,9 +679,9 @@ mod tests {
         let (data, train) = ds();
         let pipe = FePipeline::standard(false, false);
         let cfg = pipe.space().default_config();
-        let mut rng = Rng::new(7);
-        let out = pipe.fit_apply(&data, &cfg, &train, &mut rng);
-        assert!(matches!(out.data, Cow::Borrowed(_)),
+        let out = pipe.fit_apply(&data, &cfg, &train,
+                                 &FeExec::local(7));
+        assert!(matches!(out.data, FeData::Borrowed(_)),
                 "identity pipeline must not copy the dataset");
         assert_eq!(out.data.x.as_ptr(), data.x.as_ptr(),
                    "feature storage must be shared, not cloned");
@@ -376,13 +691,41 @@ mod tests {
         // ...and a modifying stage still materialises a fresh copy
         let scaled_cfg = cfg.merged(&Config::new().with(
             "scaler", Value::C("standard".into())));
-        let mut rng2 = Rng::new(7);
         let out2 = pipe.fit_apply(&data, &scaled_cfg, &train,
-                                  &mut rng2);
-        assert!(matches!(out2.data, Cow::Owned(_)));
+                                  &FeExec::local(7));
+        assert!(matches!(out2.data, FeData::Owned(_)));
         assert_ne!(out2.data.x.as_ptr(), data.x.as_ptr());
         // the borrowed-through original is untouched
         assert_eq!(data.n, 150);
+    }
+
+    #[test]
+    fn joint_prefixed_fe_keys_drive_the_stages() {
+        // the joint AutoML space names FE parameters `fe:<stage>` /
+        // `fe:<stage>.<op>:<hp>` (coordinator::joint_space); those
+        // spellings must drive fit_apply exactly like the bare ones —
+        // a searched FE config is not allowed to fall back to the
+        // identity defaults
+        let (data, train) = ds();
+        let pipe = FePipeline::standard(false, false);
+        let bare = Config::new()
+            .with("scaler", Value::C("quantile".into()))
+            .with("scaler.quantile:n_quantiles", Value::I(32));
+        let prefixed = Config::new()
+            .with("fe:scaler", Value::C("quantile".into()))
+            .with("fe:scaler.quantile:n_quantiles", Value::I(32));
+        let a = pipe.fit_apply(&data, &bare, &train,
+                               &FeExec::local(3));
+        let b = pipe.fit_apply(&data, &prefixed, &train,
+                               &FeExec::local(3));
+        // the stage genuinely transformed...
+        assert_ne!(a.data.x.as_ptr(), data.x.as_ptr(),
+                   "quantile scaler must transform");
+        // ...and both spellings produce the identical output
+        assert_eq!(a.data.x.len(), b.data.x.len());
+        for (x, y) in a.data.x.iter().zip(&b.data.x) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]
@@ -391,9 +734,10 @@ mod tests {
         let pipe = FePipeline::standard(true, false);
         let cs = pipe.space();
         let mut rng = Rng::new(1);
+        let fx = FeExec::local(1);
         for _ in 0..25 {
             let cfg = cs.sample(&mut rng);
-            let out = pipe.fit_apply(&data, &cfg, &train, &mut rng);
+            let out = pipe.fit_apply(&data, &cfg, &train, &fx);
             assert!(out.data.d >= 1 && out.data.d <= ops::MAX_WIDTH);
             assert!(out.data.x.iter().all(|v| v.is_finite()),
                     "cfg {:?}", cfg.key());
@@ -406,14 +750,123 @@ mod tests {
     }
 
     #[test]
+    fn fit_apply_is_deterministic_per_config() {
+        // same config + same FeExec seed => bit-identical output,
+        // regardless of what other configs ran in between
+        let (data, train) = ds();
+        let pipe = FePipeline::standard(true, false);
+        let cs = pipe.space();
+        let cfg = cs.sample(&mut Rng::new(5));
+        let a = pipe.fit_apply(&data, &cfg, &train, &FeExec::local(4));
+        let other = cs.sample(&mut Rng::new(6));
+        let _ = pipe.fit_apply(&data, &other, &train,
+                               &FeExec::local(4));
+        let b = pipe.fit_apply(&data, &cfg, &train, &FeExec::local(4));
+        assert_eq!(a.data.x.len(), b.data.x.len());
+        for (x, y) in a.data.x.iter().zip(&b.data.x) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(&a.train[..], &b.train[..]);
+    }
+
+    #[test]
+    fn store_on_is_bit_identical_to_store_off() {
+        // the artifact store is a pure wall-clock knob: with it on
+        // (any bound), every sampled config produces the identical
+        // bytes as the store-less run — including on the second pass,
+        // when everything is served from the cache
+        let (data, train) = ds();
+        let pipe = FePipeline::standard(true, false);
+        let cs = pipe.space();
+        let store = FeStore::new(64 * 1024 * 1024);
+        let base = Fingerprint::new().push_u64(11);
+        let off = FeExec { store: None, exec: None, base };
+        let on = FeExec { store: Some(&store), exec: None, base };
+        let mut rng = Rng::new(2);
+        let cfgs: Vec<Config> =
+            (0..12).map(|_| cs.sample(&mut rng)).collect();
+        for pass in 0..2 {
+            for cfg in &cfgs {
+                let a = pipe.fit_apply(&data, cfg, &train, &off);
+                let b = pipe.fit_apply(&data, cfg, &train, &on);
+                assert_eq!(a.data.n, b.data.n, "pass {pass}");
+                assert_eq!(a.data.d, b.data.d, "pass {pass}");
+                for (x, y) in a.data.x.iter().zip(&b.data.x) {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "pass {pass}, cfg {:?}", cfg.key());
+                }
+                assert_eq!(&a.train[..], &b.train[..],
+                           "pass {pass}");
+            }
+        }
+        let st = store.stats();
+        assert!(st.hits > 0, "second pass must hit the store");
+        assert!(st.bytes <= st.cap_bytes);
+    }
+
+    #[test]
+    fn longest_cached_prefix_wins() {
+        // cfg1 publishes the scaler artifact; cfg2 shares that prefix
+        // and only computes its transformer suffix
+        let (data, train) = ds();
+        let pipe = FePipeline::standard(false, false);
+        let store = FeStore::new(64 * 1024 * 1024);
+        let base = Fingerprint::new().push_u64(21);
+        let fx = FeExec { store: Some(&store), exec: None, base };
+        let cfg1 = Config::new()
+            .with("scaler", Value::C("standard".into()));
+        let _ = pipe.fit_apply(&data, &cfg1, &train, &fx);
+        let st = store.stats();
+        assert_eq!((st.misses, st.published), (1, 1),
+                   "one transforming stage => one artifact");
+        let cfg2 = Config::new()
+            .with("scaler", Value::C("standard".into()))
+            .with("transformer", Value::C("pca".into()));
+        let out2 = pipe.fit_apply(&data, &cfg2, &train, &fx);
+        let st = store.stats();
+        assert_eq!(st.hits, 1, "scaler prefix must be served");
+        assert_eq!((st.misses, st.published), (2, 2),
+                   "only the pca suffix is computed");
+        // and the result matches the store-less computation bitwise
+        let off = pipe.fit_apply(&data, &cfg2, &train,
+                                 &FeExec { store: None, exec: None,
+                                           base });
+        for (x, y) in out2.data.x.iter().zip(&off.data.x) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn balancer_artifacts_capture_augmented_train_rows() {
+        // a cached balancer stage must hand back the augmented train
+        // index set, not just the data
+        let (data, train) = ds();
+        let pipe = FePipeline::standard(false, false);
+        let store = FeStore::new(64 * 1024 * 1024);
+        let base = Fingerprint::new().push_u64(31);
+        let fx = FeExec { store: Some(&store), exec: None, base };
+        let cfg = Config::new()
+            .with("balancer", Value::C("weight_balancer".into()));
+        let first = pipe.fit_apply(&data, &cfg, &train, &fx);
+        assert!(first.train.len() > train.len());
+        let again = pipe.fit_apply(&data, &cfg, &train, &fx);
+        assert!(matches!(again.data, FeData::Shared(_)),
+                "second run must be served from the store");
+        assert!(matches!(again.train, FeRows::Shared(_)),
+                "cached train rows must be Arc-shared, not cloned");
+        assert_eq!(&first.train[..], &again.train[..]);
+        assert_eq!(first.data.n, again.data.n);
+    }
+
+    #[test]
     fn balancer_augments_train_only() {
         let (data, train) = ds();
         let pipe = FePipeline::standard(false, false);
         let cfg = pipe.space().default_config()
             .merged(&Config::new().with("balancer",
                 Value::C("weight_balancer".into())));
-        let mut rng = Rng::new(2);
-        let out = pipe.fit_apply(&data, &cfg, &train, &mut rng);
+        let out = pipe.fit_apply(&data, &cfg, &train,
+                                 &FeExec::local(2));
         assert!(out.data.n > data.n);
         assert!(out.train.len() > train.len());
         // appended indices point past the original rows
@@ -452,8 +905,8 @@ mod tests {
             .merged(&Config::new().with("postprocess",
                 Value::C("clip3".into()))
                 .with("postprocess.clip3:limit", Value::F(2.0)));
-        let mut rng = Rng::new(3);
-        let out = pipe.fit_apply(&data, &cfg, &train, &mut rng);
+        let out = pipe.fit_apply(&data, &cfg, &train,
+                                 &FeExec::local(3));
         assert_eq!(out.data.d, data.d);
     }
 

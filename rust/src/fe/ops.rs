@@ -193,7 +193,43 @@ impl Fitted {
         out.n = ds.n;
         out
     }
+
+    /// [`Self::apply`], row-sharded across the executor's worker pool:
+    /// contiguous row ranges are transformed in parallel and spliced
+    /// back in order. Every row's output is computed by the identical
+    /// `apply_row` call, so the result is bit-identical to the serial
+    /// [`Self::apply`] at every worker count and chunking — sharding
+    /// is a pure wall-clock knob. Falls back to the serial loop on a
+    /// serial executor, below [`SHARD_MIN_ROWS`] rows, or when called
+    /// from a pool worker (the evaluation level already owns the
+    /// pool; see `runtime::executor::Executor::map_ranges`).
+    pub fn apply_sharded(&self, ds: &Dataset,
+                         exec: &crate::runtime::executor::Executor)
+        -> Dataset {
+        let d_out = self.out_dim(ds.d);
+        let parts = exec.map_ranges(ds.n, SHARD_MIN_ROWS, |lo, hi| {
+            let mut x = Vec::with_capacity((hi - lo) * d_out);
+            for i in lo..hi {
+                let row = self.apply_row(ds.row(i));
+                debug_assert_eq!(row.len(), d_out);
+                x.extend_from_slice(&row);
+            }
+            x
+        });
+        let mut out = Dataset::new(&ds.name, ds.task, d_out);
+        out.x.reserve(ds.n * d_out);
+        for p in &parts {
+            out.x.extend_from_slice(p);
+        }
+        out.y = ds.y.clone();
+        out.n = ds.n;
+        out
+    }
 }
+
+/// Minimum rows per shard of a row-parallel [`Fitted::apply_sharded`]:
+/// below this the per-batch bookkeeping outweighs the row work.
+pub const SHARD_MIN_ROWS: usize = 512;
 
 /// Acklam-style rational approximation of the standard normal inverse
 /// CDF (enough precision for quantile-normal output).
@@ -918,6 +954,44 @@ mod tests {
         assert!((inv_norm_cdf(0.5)).abs() < 1e-9);
         assert!((inv_norm_cdf(0.975) - 1.959964).abs() < 1e-3);
         assert!((inv_norm_cdf(0.025) + 1.959964).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sharded_apply_is_bitwise_identical_to_serial() {
+        // a dataset large enough to clear SHARD_MIN_ROWS, with a
+        // projection (float-heavy) and a selector (index-heavy) op
+        let p = Profile {
+            name: "fe-shard".into(),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 1.5 },
+            n: 3000,
+            d: 8,
+            noise: 0.05,
+            imbalance: 1.0,
+            redundant: 2,
+            wild_scales: true,
+            seed: 12,
+        };
+        let ds = generate(&p);
+        let train: Vec<usize> = (0..2400).collect();
+        for op in ["pca", "select_percentile", "kitchen_sinks"] {
+            let mut rng = Rng::new(4);
+            let cfg = transformer_space(op).default_config();
+            let f = fit_transformer(op, &ds, &train, &cfg, &mut rng);
+            let serial = f.apply(&ds);
+            for workers in [1usize, 3] {
+                let ex = crate::runtime::executor::Executor::new(
+                    workers);
+                let sharded = f.apply_sharded(&ds, &ex);
+                assert_eq!(sharded.n, serial.n, "{op}");
+                assert_eq!(sharded.d, serial.d, "{op}");
+                assert_eq!(sharded.y, serial.y, "{op}");
+                for (a, b) in serial.x.iter().zip(&sharded.x) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{op} workers={workers}");
+                }
+            }
+        }
     }
 
     #[test]

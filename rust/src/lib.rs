@@ -9,6 +9,7 @@
 pub mod baselines;
 pub mod bench;
 pub mod blocks;
+pub mod cache;
 pub mod cli;
 pub mod coordinator;
 pub mod data;

@@ -31,14 +31,17 @@ SUBCOMMANDS
                   [--plan J|C|A|AC|CA|CC] [--scale small|medium|large]
                   [--evals N] [--budget SECS] [--metric NAME]
                   [--corpus PATH] [--seed N] [--workers N]
-                  [--super-batch N] [--pipeline-depth N] [--no-pjrt]
+                  [--super-batch N] [--pipeline-depth N]
+                  [--fe-cache-mb N] [--no-pjrt]
   plans           --dataset <name> [--evals N] [--workers N]
                   [--super-batch N] [--pipeline-depth N]
+                  [--fe-cache-mb N]
                   — compare J/C/A/AC/CA plus the nested CC
   datasets        list the registry (name, task, n, d)
   artifacts       show compiled PJRT artifacts
   collect-corpus  --out PATH [--n-cls N] [--n-reg N] [--evals N]
                   [--workers N] [--super-batch N] [--pipeline-depth N]
+                  [--fe-cache-mb N]
   help            this message
 
   --workers N evaluates each candidate batch on N persistent pool
@@ -52,6 +55,13 @@ SUBCOMMANDS
   refits leave the hot path, speculation is reconciled when results
   land and discarded at budget exhaustion. Semantic knob like the
   batch sizes; depth 1 preserves trajectories bit for bit.
+  --fe-cache-mb N (default 0 = off) attaches the shared FE artifact
+  store with an N-megabyte LRU byte budget: evaluations sharing an FE
+  stage-prefix reuse the cached transform outputs, and transforming
+  stages row-shard their apply across the worker pool. Content
+  addressing makes this trajectory-neutral — results are
+  bit-identical at any bound, so it is a pure wall-clock knob
+  (VOLCANO_FE_CACHE_MB for benches).
 ";
 
 fn main() {
@@ -109,6 +119,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         workers: args.usize_or("workers", 1)?.max(1),
         super_batch: args.usize_or("super-batch", 1)?,
         pipeline_depth: args.usize_or("pipeline-depth", 1)?.max(1),
+        fe_cache_mb: args.usize_or("fe-cache-mb", 0)?,
         seed: args.u64_or("seed", 42)?,
     };
     let corpus = match args.str_opt("corpus") {
@@ -133,6 +144,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     println!("ensemble test   : {:.4}", out.ensemble_test_utility);
     println!("test metric     : {:.4} ({})", out.test_metric_value,
              spec.metric.name());
+    let st = &out.eval_stats;
+    println!("eval memo       : {} hits / {} misses ({} entries)",
+             st.memo_hits, st.memo_misses, st.memo_entries);
+    if let Some(fe) = &st.fe {
+        println!("fe store        : {:.0}% hit rate ({} hits, {} \
+                  coalesced, {} misses, {} evictions, {} KiB / {} MB)",
+                 fe.hit_rate() * 100.0, fe.hits, fe.coalesced,
+                 fe.misses, fe.evictions, fe.bytes / 1024,
+                 fe.cap_bytes / (1024 * 1024));
+    }
     if let Some(cfg) = &out.best_config {
         println!("\nbest configuration:");
         for (k, v) in cfg.iter() {
@@ -164,6 +185,7 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
     let workers = args.usize_or("workers", 1)?.max(1);
     let super_batch = args.usize_or("super-batch", 1)?;
     let pipeline_depth = args.usize_or("pipeline-depth", 1)?.max(1);
+    let fe_cache_mb = args.usize_or("fe-cache-mb", 0)?;
     let runtime = open_runtime(args);
     args.finish()?;
     let metric = if ds.task.is_classification() {
@@ -182,6 +204,7 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
             workers,
             super_batch,
             pipeline_depth,
+            fe_cache_mb,
             seed,
             ..Default::default()
         };
@@ -249,6 +272,7 @@ fn cmd_collect(args: &Args) -> anyhow::Result<()> {
     let workers = args.usize_or("workers", 1)?.max(1);
     let super_batch = args.usize_or("super-batch", 1)?;
     let pipeline_depth = args.usize_or("pipeline-depth", 1)?.max(1);
+    let fe_cache_mb = args.usize_or("fe-cache-mb", 0)?;
     let runtime = open_runtime(args);
     args.finish()?;
 
@@ -269,6 +293,7 @@ fn cmd_collect(args: &Args) -> anyhow::Result<()> {
             workers,
             super_batch,
             pipeline_depth,
+            fe_cache_mb,
             seed: seed + i as u64,
         };
         let t0 = std::time::Instant::now();

@@ -44,11 +44,24 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
-    match m.lock() {
-        Ok(g) => g,
-        Err(p) => p.into_inner(),
-    }
+use crate::util::lock;
+
+thread_local! {
+    /// True on threads spawned by a [`WorkerPool`]. A data-parallel
+    /// [`Executor::map_ranges`] issued *from* a pool worker (an
+    /// evaluation row-sharding its FE apply while the batch that
+    /// scheduled it is still running) must execute inline: submitting
+    /// a nested batch and blocking on its drain from a worker could
+    /// deadlock the pool (every worker waiting on jobs only an idle
+    /// worker could run), and eval-level parallelism already has the
+    /// pool saturated in that situation anyway.
+    static POOL_WORKER: std::cell::Cell<bool> =
+        std::cell::Cell::new(false);
+}
+
+/// True when the current thread is a [`WorkerPool`] worker.
+pub fn on_pool_thread() -> bool {
+    POOL_WORKER.with(|c| c.get())
 }
 
 /// A fixed-size pool of persistent worker threads fed over a shared
@@ -69,13 +82,16 @@ impl WorkerPool {
                 let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
                 std::thread::Builder::new()
                     .name(format!("volcano-worker-{i}"))
-                    .spawn(move || loop {
-                        // hold the lock only while dequeuing, never
-                        // while running a job
-                        let job = lock(&rx).recv();
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // pool dropped
+                    .spawn(move || {
+                        POOL_WORKER.with(|c| c.set(true));
+                        loop {
+                            // hold the lock only while dequeuing,
+                            // never while running a job
+                            let job = lock(&rx).recv();
+                            match job {
+                                Ok(job) => job(),
+                                Err(_) => break, // pool dropped
+                            }
                         }
                     })
                     .expect("executor: failed to spawn worker thread")
@@ -205,6 +221,51 @@ impl WorkerPool {
         }
         PoolBatch { state, done_rx, pending: n_jobs }
     }
+
+    /// Data-parallel map over the row ranges of `0..n`: split into
+    /// contiguous chunks of at least `min_chunk` rows (about two per
+    /// worker, so uneven per-row costs balance), run them on the pool
+    /// **with the calling thread helping** through the same claim
+    /// cursor, and return the per-chunk results in range order.
+    /// Chunk boundaries never affect the concatenated output (each
+    /// row's result is independent), so worker count stays a pure
+    /// wall-clock knob for callers that splice the chunks back
+    /// together — the contract the row-sharded FE apply relies on.
+    ///
+    /// The calling thread churns through the chunks itself while any
+    /// free worker claims alongside it; the return then joins the
+    /// queued claim jobs (workers dequeue them as they free up — a
+    /// no-op once the cursor is exhausted), so the batch never
+    /// outlives the borrows of `f`.
+    ///
+    /// Crate-internal, and self-guarded against being entered *from*
+    /// a pool worker: a nested blocking submission there could
+    /// deadlock the pool (every worker waiting in `drain` on queued
+    /// claim jobs only an idle worker could dequeue), so that case
+    /// runs inline — [`Executor::map_ranges`] is the public surface
+    /// and routes it inline one layer up already.
+    pub(crate) fn map_ranges<R, F>(&self, n: usize, min_chunk: usize,
+                                   f: &F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, usize) -> R + Send + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if on_pool_thread() {
+            return vec![f(0, n)];
+        }
+        let target = self.threads().max(1) * 2;
+        let chunk = n.div_ceil(target).max(min_chunk.max(1));
+        let ranges: Vec<(usize, usize)> = (0..n)
+            .step_by(chunk)
+            .map(|lo| (lo, (lo + chunk).min(n)))
+            .collect();
+        let batch = self.submit(&ranges, |&(lo, hi)| f(lo, hi));
+        batch.help();
+        batch.drain()
+    }
 }
 
 /// Shared per-batch state: the items, the work closure, the claim
@@ -231,6 +292,30 @@ pub struct PoolBatch<'env, T, R> {
 }
 
 impl<'env, T, R> PoolBatch<'env, T, R> {
+    /// Run the batch's claim loop on the *calling* thread: claim and
+    /// execute items through the same atomic cursor the workers use,
+    /// until the batch is exhausted (or its cancellation predicate
+    /// flips). This is how a data-parallel map keeps making progress
+    /// when every pool worker is busy — the submitter works its own
+    /// batch alongside whatever workers pick it up. A panic in the
+    /// work closure unwinds the caller directly, exactly like inline
+    /// execution; the [`Drop`] join then waits out the in-flight
+    /// workers.
+    pub(crate) fn help(&self) {
+        let st = &self.state;
+        loop {
+            if (st.cancel)() {
+                break;
+            }
+            let i = st.next.fetch_add(1, Ordering::Relaxed);
+            if i >= st.items.len() {
+                break;
+            }
+            let out = (st.f)(&st.items[i]);
+            *lock(&st.slots[i]) = Some(out);
+        }
+    }
+
     /// Block until every worker has finished this batch, then return
     /// the results in item order. A panic inside the work closure is
     /// re-raised here — after all workers have signalled, so the
@@ -346,6 +431,34 @@ impl Executor {
         F: Fn(&T) -> R + Send + Sync,
     {
         self.submit(items, f).drain()
+    }
+
+    /// Data-parallel map over the row ranges of `0..n` — the
+    /// primitive behind the row-sharded FE apply. Returns per-chunk
+    /// results in range order; callers concatenate. Runs inline (one
+    /// `f(0, n)` call) when the executor is serial, when `n` does not
+    /// clear `min_chunk`, or when the calling thread is itself a pool
+    /// worker (an evaluation already running on the pool — nesting a
+    /// blocking batch there could deadlock, and the pool is saturated
+    /// by eval-level parallelism anyway; see [`on_pool_thread`]).
+    /// Otherwise the chunks run on the pool with this thread helping
+    /// ([`WorkerPool::map_ranges`]). Chunking never changes the
+    /// concatenated output, so every path is bit-identical.
+    pub fn map_ranges<R, F>(&self, n: usize, min_chunk: usize, f: F)
+        -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, usize) -> R + Send + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        match &self.pool {
+            Some(pool) if n > min_chunk.max(1) && !on_pool_thread() => {
+                pool.map_ranges(n, min_chunk, &f)
+            }
+            _ => vec![f(0, n)],
+        }
     }
 
     /// Start a batch **without blocking** and return a handle to join
@@ -704,6 +817,102 @@ mod tests {
             .submit_cancellable(&items, |&x| x + 1, || false)
             .drain_partial();
         assert_eq!(out, (1..=9).map(Some).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_ranges_concatenation_matches_serial_bitwise() {
+        // per-row results spliced from chunks must equal the serial
+        // single-range output byte for byte, for any worker count
+        let n = 10_000usize;
+        let per_row = |i: usize| ((i as f64).sin() * 1e6).cos() as f32;
+        let run = |ex: &Executor, min_chunk: usize| -> Vec<f32> {
+            let parts = ex.map_ranges(n, min_chunk, |lo, hi| {
+                (lo..hi).map(per_row).collect::<Vec<f32>>()
+            });
+            parts.into_iter().flatten().collect()
+        };
+        let serial = run(&Executor::serial(), 1);
+        assert_eq!(serial.len(), n);
+        for workers in [2usize, 4, 7] {
+            let ex = Executor::new(workers);
+            for min_chunk in [1usize, 64, 5000, 20_000] {
+                let out = run(&ex, min_chunk);
+                assert_eq!(out.len(), n,
+                           "workers={workers} min_chunk={min_chunk}");
+                for (a, b) in serial.iter().zip(&out) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "workers={workers} \
+                                min_chunk={min_chunk}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_ranges_actually_runs_on_the_pool() {
+        // with a pool and a small min_chunk, more than one distinct
+        // thread participates (the caller helps, workers claim)
+        let ex = Executor::new(4);
+        let ids = Mutex::new(HashSet::new());
+        let parts = ex.map_ranges(64, 1, |lo, hi| {
+            lock(&ids).insert(std::thread::current().id());
+            // slow the chunks down so workers have time to claim
+            std::thread::sleep(Duration::from_millis(5));
+            hi - lo
+        });
+        assert_eq!(parts.iter().sum::<usize>(), 64);
+        assert!(lock(&ids).len() >= 2,
+                "expected pool participation, got {} thread(s)",
+                lock(&ids).len());
+    }
+
+    #[test]
+    fn map_ranges_from_a_pool_worker_runs_inline() {
+        // a nested data-parallel map issued from inside a pool job
+        // must not submit to the pool (deadlock risk): it runs inline
+        // on the worker, as one chunk, and the outer batch completes
+        let ex = Executor::new(2);
+        let ex2 = ex.clone();
+        let out = ex.run(&[10usize, 20, 30, 40], |&n| {
+            assert!(on_pool_thread());
+            let parts = ex2.map_ranges(n, 1, |lo, hi| hi - lo);
+            assert_eq!(parts.len(), 1,
+                       "nested map must run as one inline chunk");
+            parts.iter().sum::<usize>()
+        });
+        assert_eq!(out, vec![10, 20, 30, 40]);
+        // and the caller's thread is not a pool worker
+        assert!(!on_pool_thread());
+    }
+
+    #[test]
+    fn map_ranges_below_min_chunk_stays_inline() {
+        let ex = Executor::new(4);
+        let main_id = std::thread::current().id();
+        let parts = ex.map_ranges(100, 512, |lo, hi| {
+            assert_eq!(std::thread::current().id(), main_id);
+            (lo, hi)
+        });
+        assert_eq!(parts, vec![(0, 100)]);
+        let empty: Vec<(usize, usize)> =
+            ex.map_ranges(0, 1, |lo, hi| (lo, hi));
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn map_ranges_issued_against_a_busy_pool_still_completes() {
+        // a data-parallel map submitted while the workers are mid-way
+        // through another batch completes correctly: the helping
+        // caller churns through the chunks, and the queued claim jobs
+        // are joined once the workers free up
+        let ex = Executor::new(2);
+        let items: Vec<u32> = (0..4).collect();
+        let pending = ex.submit(&items, |_| {
+            std::thread::sleep(Duration::from_millis(30));
+        });
+        let parts = ex.map_ranges(1000, 1, |lo, hi| hi - lo);
+        assert_eq!(parts.iter().sum::<usize>(), 1000);
+        pending.drain();
     }
 
     #[test]

@@ -7,3 +7,17 @@ pub mod linalg;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+
+/// Poison-tolerant mutex lock, shared by every concurrent subsystem
+/// (worker pool, FE artifact store): a panicked holder must not
+/// poison the structure for the rest of the search — panics are
+/// re-raised at their joins instead, and the protected state is
+/// only ever observed in a consistent state (holders never unwind
+/// mid-update of the invariants these mutexes guard).
+pub fn lock<T>(m: &std::sync::Mutex<T>)
+    -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}

@@ -407,6 +407,16 @@ fn blob_ds(seed: u64) -> volcanoml::data::Dataset {
     })
 }
 
+/// The CI matrix's FE-store bound (VOLCANO_FE_CACHE_MB); 0 (the
+/// default run) keeps the store off. The store is content-addressed
+/// and trajectory-neutral, so every bit-identity assertion in this
+/// suite doubles as a cached-equals-recomputed check under the
+/// matrix entry.
+fn env_fe_cache_mb() -> usize {
+    std::env::var("VOLCANO_FE_CACHE_MB").ok()
+        .and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
 fn run_depth(ds: &volcanoml::data::Dataset, plan: PlanKind,
              workers: usize, super_batch: usize, depth: usize,
              evals: usize) -> RunOutcome {
@@ -419,6 +429,7 @@ fn run_depth(ds: &volcanoml::data::Dataset, plan: PlanKind,
         eval_batch: 1,
         super_batch,
         pipeline_depth: depth,
+        fe_cache_mb: env_fe_cache_mb(),
         seed: 4321,
         ..Default::default()
     };

@@ -74,6 +74,7 @@ fn registry_dataset_end_to_end_quake() {
         workers: 1,
         super_batch: 1,
         pipeline_depth: 1,
+        fe_cache_mb: 0,
         seed: 3,
     };
     let out = run_system(SystemKind::VolcanoMLMinus, &ds, &spec, None,
@@ -210,6 +211,7 @@ fn regression_system_comparison_smoke() {
         workers: 1,
         super_batch: 1,
         pipeline_depth: 1,
+        fe_cache_mb: 0,
         seed: 2,
     };
     for sys in [SystemKind::VolcanoMLMinus, SystemKind::Tpot] {

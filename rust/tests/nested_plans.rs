@@ -328,6 +328,52 @@ fn eliminated_inner_arm_never_observes_after_its_round() {
                "eliminated inner arm observed after its elimination");
 }
 
+#[test]
+fn revised_speculation_filters_eliminated_pulls_before_submission() {
+    // depth 2: outer chunks are buffered while the inner conditioning
+    // block (under algorithm 'a') eliminates a scaler arm. The
+    // buffered pulls of the dead arm must be *revised away* before
+    // submission — no submission after the elimination may carry the
+    // eliminated (algorithm, scaler) pair, where previously those
+    // requests were evaluated and their observations dropped.
+    let mut obj = Synth::capped(600);
+    let mut rng = Rng::new(23);
+    let mut cond = nested_cc(2);
+    let mut cut: Option<usize> = None; // submissions at elimination
+    {
+        let mut env = Env::with_pipeline(&mut obj, &mut rng, 1, 0, 2);
+        for _ in 0..20 {
+            cond.do_next(&mut env).unwrap();
+            if cut.is_none() {
+                let inner = cond.arms[0].block.as_any_mut()
+                    .downcast_mut::<ConditioningBlock>()
+                    .expect("inner conditioning block");
+                if inner.active_values().len() == 1 {
+                    cut = Some(obj.submissions.len());
+                }
+            }
+        }
+    }
+    let cut = cut.expect("inner elimination never happened");
+    assert!(obj.submissions.len() > cut,
+            "rounds must continue after the elimination");
+    let inner = cond.arms[0].block.as_any_mut()
+        .downcast_mut::<ConditioningBlock>().unwrap();
+    let dead: Vec<String> = inner.arms.iter()
+        .filter(|a| !a.active)
+        .map(|a| a.value.clone())
+        .collect();
+    assert!(!dead.is_empty());
+    for (si, tags) in obj.submission_tags[cut..].iter().enumerate() {
+        for (algo, scaler) in tags {
+            assert!(!(algo == "a" && dead.contains(scaler)),
+                    "eliminated inner pull submitted after its \
+                     round (submission {} past the cut): a/{scaler}",
+                    si);
+        }
+    }
+}
+
 // ---- system-level harness ------------------------------------------
 
 fn blob_ds(seed: u64) -> volcanoml::data::Dataset {
@@ -345,6 +391,15 @@ fn blob_ds(seed: u64) -> volcanoml::data::Dataset {
     })
 }
 
+/// The CI matrix's FE-store bound (VOLCANO_FE_CACHE_MB); 0 (the
+/// default run) keeps the store off. Content addressing makes the
+/// store trajectory-neutral, so the suite's bit-identity assertions
+/// double as cached-equals-recomputed checks under the matrix entry.
+fn env_fe_cache_mb() -> usize {
+    std::env::var("VOLCANO_FE_CACHE_MB").ok()
+        .and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
 fn run_nested(ds: &volcanoml::data::Dataset, plan: PlanKind,
               workers: usize, super_batch: usize, depth: usize,
               evals: usize) -> RunOutcome {
@@ -357,6 +412,7 @@ fn run_nested(ds: &volcanoml::data::Dataset, plan: PlanKind,
         eval_batch: 1,
         super_batch,
         pipeline_depth: depth,
+        fe_cache_mb: env_fe_cache_mb(),
         seed: 4321,
         ..Default::default()
     };
