@@ -1,0 +1,117 @@
+//! Saturation bench: one shared [`SearchService`] serving 1, 8 and
+//! 64 concurrent searches on a fixed worker-pool size. Reports, per
+//! concurrency level, the total wall-clock, aggregate evaluation
+//! throughput, and the max/min per-tenant throughput ratio (1.0 =
+//! perfectly fair; the fair-share scheduler should keep equal-weight
+//! tenants close). Saves `BENCH_saturation.json`.
+//!
+//! Knobs: `--workers N` / VOLCANO_WORKERS (pool threads; default 4
+//! here — a saturation bench on a serial pool measures nothing),
+//! `--fe-cache-mb N` / VOLCANO_FE_CACHE_MB (shared store; default
+//! 256), `--evals N` (per search; default 10).
+
+use std::time::Instant;
+
+use volcanoml::bench::{bench_fe_cache_mb, bench_workers,
+                       save_results};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::{Dataset, Task};
+use volcanoml::plan::PlanKind;
+use volcanoml::service::{JobSpec, SearchService, ServiceConfig};
+use volcanoml::util::json::Json;
+
+fn job_ds(seed: u64) -> Dataset {
+    generate(&Profile {
+        name: format!("sat-{seed}"),
+        task: Task::Classification { n_classes: 2 },
+        gen: GenKind::Blobs { sep: 1.7 },
+        n: 160,
+        d: 5,
+        noise: 0.05,
+        imbalance: 1.0,
+        redundant: 0,
+        wild_scales: false,
+        seed,
+    })
+}
+
+fn main() {
+    let workers = {
+        let w = bench_workers();
+        if w > 1 { w } else { 4 }
+    };
+    let fe_mb = {
+        let mb = bench_fe_cache_mb();
+        if mb > 0 { mb } else { 256 }
+    };
+    let evals = volcanoml::cli::Args::from_env()
+        .ok()
+        .and_then(|a| a.usize_or("evals", 10).ok())
+        .unwrap_or(10);
+
+    println!("=== Saturation: shared pool of {workers} worker(s), \
+              {fe_mb} MB FE store, {evals} evals/search ===");
+    let mut levels = Vec::new();
+    for concurrent in [1usize, 8, 64] {
+        let svc = SearchService::new(ServiceConfig {
+            workers,
+            fe_cache_mb: fe_mb,
+            max_active: concurrent,
+            pending_cap: concurrent,
+        });
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..concurrent)
+            .map(|i| {
+                let spec = JobSpec {
+                    name: format!("sat{i}"),
+                    dataset: "synthetic".to_string(),
+                    plan: PlanKind::CA,
+                    scale: SpaceScale::Small,
+                    max_evals: evals,
+                    eval_batch: 2,
+                    seed: 1000 + i as u64,
+                    ..JobSpec::default()
+                };
+                svc.submit_on(spec, job_ds(i as u64))
+                    .expect("admission refused below max_active")
+            })
+            .collect();
+        // per-tenant throughput over each search's own wall time
+        let mut thr: Vec<f64> = Vec::with_capacity(concurrent);
+        let mut total_evals = 0usize;
+        for h in handles {
+            let out = h.wait().expect("search failed");
+            total_evals += out.n_evals;
+            thr.push(out.n_evals as f64
+                     / out.elapsed_secs.max(1e-9));
+        }
+        svc.wait_idle();
+        let wall = t0.elapsed().as_secs_f64();
+        let (min, max) = thr.iter().fold(
+            (f64::INFINITY, 0.0f64),
+            |(lo, hi), &t| (lo.min(t), hi.max(t)));
+        let fairness = max / min.max(1e-9);
+        println!("  {concurrent:>2} concurrent: {wall:>7.2}s wall, \
+                  {:>7.1} evals/s aggregate, max/min per-tenant \
+                  throughput {fairness:.2}x",
+                 total_evals as f64 / wall.max(1e-9));
+        levels.push(Json::obj(vec![
+            ("concurrent", Json::Num(concurrent as f64)),
+            ("wall_secs", Json::Num(wall)),
+            ("total_evals", Json::Num(total_evals as f64)),
+            ("aggregate_evals_per_sec",
+             Json::Num(total_evals as f64 / wall.max(1e-9))),
+            ("tenant_throughput_max", Json::Num(max)),
+            ("tenant_throughput_min", Json::Num(min)),
+            ("tenant_throughput_ratio", Json::Num(fairness)),
+        ]));
+    }
+
+    save_results("BENCH_saturation", &Json::obj(vec![
+        ("workers", Json::Num(workers as f64)),
+        ("fe_cache_mb", Json::Num(fe_mb as f64)),
+        ("evals_per_search", Json::Num(evals as f64)),
+        ("levels", Json::Arr(levels)),
+    ]));
+}

@@ -126,6 +126,28 @@ impl FeStoreStats {
     }
 }
 
+/// Per-tenant slice of the store counters: how one co-tenant search
+/// experienced the shared store. `hits + coalesced` of a tenant can
+/// exceed its `misses`-driven contributions precisely when co-tenant
+/// searches on the same dataset dedup each other's fits — the
+/// cross-search sharing the multi-tenant runtime exists for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FeTenantStats {
+    pub hits: u64,
+    pub coalesced: u64,
+    pub misses: u64,
+}
+
+impl FeTenantStats {
+    pub fn served(&self) -> u64 {
+        self.hits + self.coalesced
+    }
+
+    pub fn total(&self) -> u64 {
+        self.hits + self.coalesced + self.misses
+    }
+}
+
 /// Outcome of [`FeStore::begin`]: either the artifact is already
 /// available (cached, or received from a concurrent computation), or
 /// the caller owns the computation and must publish through (or drop)
@@ -191,6 +213,12 @@ pub struct FeStore {
     misses: AtomicU64,
     published: AtomicU64,
     evictions: AtomicU64,
+    /// Per-tenant counters (see [`FeTenantStats`]). Keyed by the
+    /// executor's tenant id; single-search stores only ever touch
+    /// tenant 0. A plain mutex: the map is tiny (one entry per live
+    /// search) and bumped once per store operation, which is dwarfed
+    /// by the fit either side of it.
+    tenants: Mutex<HashMap<u64, FeTenantStats>>,
 }
 
 impl FeStore {
@@ -207,7 +235,13 @@ impl FeStore {
             misses: AtomicU64::new(0),
             published: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            tenants: Mutex::new(HashMap::new()),
         }
+    }
+
+    fn bump_tenant(&self, tenant: u64,
+                   f: impl FnOnce(&mut FeTenantStats)) {
+        f(lock(&self.tenants).entry(tenant).or_default());
     }
 
     fn shard(&self, fp: Fingerprint)
@@ -228,15 +262,29 @@ impl FeStore {
     /// Counts a hit only on success — failed probes of a prefix walk
     /// are not misses (the computation miss is counted by `begin`).
     pub fn lookup(&self, fp: Fingerprint) -> Option<Arc<FeArtifact>> {
-        let mut shard = self.shard(fp);
-        match shard.get_mut(&fp.key()) {
-            Some(Entry::Ready { art, stamp, .. }) => {
-                *stamp = self.tick();
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(art.clone())
+        self.lookup_as(fp, 0)
+    }
+
+    /// [`Self::lookup`] attributed to a tenant (see
+    /// [`Self::tenant_stats`]): same semantics, but a successful hit
+    /// is also counted on the tenant's slice of the stats.
+    pub fn lookup_as(&self, fp: Fingerprint, tenant: u64)
+        -> Option<Arc<FeArtifact>> {
+        let hit = {
+            let mut shard = self.shard(fp);
+            match shard.get_mut(&fp.key()) {
+                Some(Entry::Ready { art, stamp, .. }) => {
+                    *stamp = self.tick();
+                    Some(art.clone())
+                }
+                _ => None,
             }
-            _ => None,
+        };
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.bump_tenant(tenant, |t| t.hits += 1);
         }
+        hit
     }
 
     /// Resolve one stage: a ready artifact (hit), the artifact of a
@@ -244,12 +292,23 @@ impl FeStore {
     /// this call blocks until it publishes or abandons), or a
     /// [`Ticket`] making the caller the computing thread (miss).
     pub fn begin(&self, fp: Fingerprint) -> Resolved<'_> {
+        self.begin_as(fp, 0)
+    }
+
+    /// [`Self::begin`] attributed to a tenant (see
+    /// [`Self::tenant_stats`]): same semantics, but the hit /
+    /// coalesced / miss outcome is also counted on the tenant's slice
+    /// of the stats — this is what lets a co-tenancy test assert that
+    /// two searches sharing a dataset split one fit between them.
+    pub fn begin_as(&self, fp: Fingerprint, tenant: u64)
+        -> Resolved<'_> {
         let waiter = {
             let mut shard = self.shard(fp);
             match shard.get_mut(&fp.key()) {
                 Some(Entry::Ready { art, stamp, .. }) => {
                     *stamp = self.tick();
                     self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.bump_tenant(tenant, |t| t.hits += 1);
                     return Resolved::Ready(art.clone());
                 }
                 Some(Entry::Pending(w)) => w.clone(),
@@ -257,6 +316,7 @@ impl FeStore {
                     let w = Arc::new(Waiter::new());
                     shard.insert(fp.key(), Entry::Pending(w.clone()));
                     self.misses.fetch_add(1, Ordering::Relaxed);
+                    self.bump_tenant(tenant, |t| t.misses += 1);
                     return Resolved::Compute(Ticket {
                         store: self,
                         fp,
@@ -271,6 +331,7 @@ impl FeStore {
             match &*st {
                 WaitState::Ready(art) => {
                     self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    self.bump_tenant(tenant, |t| t.coalesced += 1);
                     return Resolved::Ready(art.clone());
                 }
                 WaitState::Abandoned => {
@@ -280,6 +341,7 @@ impl FeStore {
                     // woken waiters, and duplicate identical work is
                     // harmless (last publish wins)
                     self.misses.fetch_add(1, Ordering::Relaxed);
+                    self.bump_tenant(tenant, |t| t.misses += 1);
                     return Resolved::Compute(Ticket {
                         store: self,
                         fp,
@@ -294,6 +356,13 @@ impl FeStore {
                 }
             }
         }
+    }
+
+    /// One tenant's slice of the counters: every `lookup_as` /
+    /// `begin_as` outcome attributed to `tenant`. Unknown tenants
+    /// read as all-zero.
+    pub fn tenant_stats(&self, tenant: u64) -> FeTenantStats {
+        lock(&self.tenants).get(&tenant).copied().unwrap_or_default()
     }
 
     /// Insert a ready entry (replacing a pending or stale one), wake
@@ -526,6 +595,49 @@ mod tests {
         assert_eq!(st.hits + st.coalesced, 7,
                    "every other thread was served the one artifact");
         assert_eq!(st.published, 1);
+    }
+
+    #[test]
+    fn tenant_stats_split_the_global_counters() {
+        let store = FeStore::new(1 << 20);
+        let fp = fp_of("shared-across-tenants");
+        // tenant 7 computes; tenant 9 then hits the same fingerprint
+        match store.begin_as(fp, 7) {
+            Resolved::Compute(t) => {
+                t.publish(toy_dataset(12, 1.0),
+                          Arc::new((0..12).collect()));
+            }
+            Resolved::Ready(_) => panic!("empty store cannot hit"),
+        }
+        match store.begin_as(fp, 9) {
+            Resolved::Ready(a) => assert_eq!(a.data.n, 12),
+            Resolved::Compute(_) => {
+                panic!("tenant 9 must be served tenant 7's fit")
+            }
+        }
+        assert!(store.lookup_as(fp, 9).is_some());
+        let t7 = store.tenant_stats(7);
+        let t9 = store.tenant_stats(9);
+        assert_eq!((t7.hits, t7.coalesced, t7.misses), (0, 0, 1));
+        assert_eq!((t9.hits, t9.coalesced, t9.misses), (2, 0, 0));
+        assert_eq!(store.tenant_stats(42), FeTenantStats::default(),
+                   "unknown tenants read as zero");
+        // the global counters are the sum of the tenant slices
+        let st = store.stats();
+        assert_eq!(st.hits, t7.hits + t9.hits);
+        assert_eq!(st.misses, t7.misses + t9.misses);
+        assert_eq!(t9.served(), 2);
+        assert_eq!(t7.total(), 1);
+    }
+
+    #[test]
+    fn legacy_untagged_calls_count_as_tenant_zero() {
+        let store = FeStore::new(1 << 20);
+        let fp = fp_of("untagged");
+        publish(&store, fp, 8);
+        assert!(store.lookup(fp).is_some());
+        let t0 = store.tenant_stats(0);
+        assert_eq!((t0.hits, t0.misses), (1, 1));
     }
 
     #[test]

@@ -207,4 +207,41 @@ mod tests {
         let a = parse(&["run", "--meta"]);
         assert!(a.flag("meta"));
     }
+
+    #[test]
+    fn serve_subcommand_options_parse() {
+        let a = parse(&["serve", "--workers", "8", "--fe-cache-mb",
+                        "128", "--max-active", "3", "--pending-cap",
+                        "5"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("workers", 4).unwrap(), 8);
+        assert_eq!(a.usize_or("fe-cache-mb", 256).unwrap(), 128);
+        assert_eq!(a.usize_or("max-active", 4).unwrap(), 3);
+        assert_eq!(a.usize_or("pending-cap", 16).unwrap(), 5);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn serve_job_spec_line_round_trips_through_json() {
+        // the serve wire format: one JSON job spec per stdin line;
+        // parse -> serialise -> parse must be the identity
+        use crate::service::JobSpec;
+        use crate::util::json::Json;
+        let line = r#"{"name": "t", "dataset": "quake", "weight": 2,
+                       "plan": "CC", "scale": "small",
+                       "metric": "accuracy", "evals": 12,
+                       "eval_batch": 3, "super_batch": 0,
+                       "pipeline_depth": 2, "seed": 7,
+                       "ensemble": true}"#;
+        let spec = JobSpec::from_json(&Json::parse(line).unwrap())
+            .unwrap();
+        assert_eq!(spec.weight, 2);
+        assert_eq!(spec.max_evals, 12);
+        assert_eq!(spec.pipeline_depth, 2);
+        let round = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, round);
+        // and the serialised form itself is stable
+        assert_eq!(spec.to_json().to_string(),
+                   round.to_json().to_string());
+    }
 }

@@ -7,21 +7,25 @@
 //! [`Classifier`]/[`Regressor`] below:
 //! `Classifier(**params).fit(train)` == `Classifier::new(cfg).fit(&ds)`.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::blocks::{BuildingBlock, Env};
+use crate::cache::FeStore;
 use crate::data::dataset::{Dataset, Predictions, Split};
 use crate::data::metrics::Metric;
 use crate::ensemble::{combine, fit_weights, EnsembleMethod};
 use crate::meta::{meta_features, MetaCorpus, TaskRecord};
 use crate::plan::progressive::run_progressive;
 use crate::plan::{EngineKind, ExecutionPlan, PlanBuilder, PlanKind};
+use crate::runtime::executor::Executor;
 use crate::runtime::Runtime;
 use crate::space::Config;
 use crate::surrogate::Surrogate;
 use crate::util::rng::Rng;
 
-use super::evaluator::{EvalStats, PipelineEvaluator};
+use super::evaluator::{EvalStats, IncumbentSink, PipelineEvaluator};
 use super::{joint_space, pipeline_for, roster_for, SpaceScale};
 
 /// Search configuration (the `Classifier(**params)` analogue).
@@ -159,18 +163,65 @@ pub struct RunOutcome {
     pub record: TaskRecord,
 }
 
+/// Handles onto process-wide runtime resources, letting many
+/// concurrent `VolcanoML::run`s share one worker pool and one FE
+/// artifact store instead of each spawning private ones.
+///
+/// Either handle may be absent: `executor: None` falls back to a
+/// private pool sized by [`VolcanoConfig::workers`], `fe_store: None`
+/// to a private store sized by [`VolcanoConfig::fe_cache_mb`]. With a
+/// shared executor the run's batch sizing (when `eval_batch == 0`)
+/// follows the shared pool's thread count, exactly as a private pool
+/// of the same size would — so a fixed `eval_batch` (or fixed pool
+/// size) keeps trajectories bit-identical between shared and private
+/// execution, and invariant to how many co-tenants share the pool.
+#[derive(Clone, Default)]
+pub struct SharedRuntime {
+    /// Tenant handle onto a shared pool (see [`Executor::shared`]).
+    pub executor: Option<Executor>,
+    /// Process-wide content-addressed FE artifact store. Fingerprints
+    /// cover dataset identity and search seed, so co-tenant searches
+    /// on the same dataset dedup each other's FE fits for free while
+    /// unrelated searches can never collide.
+    pub fe_store: Option<Arc<FeStore>>,
+}
+
 pub struct VolcanoML {
     pub cfg: VolcanoConfig,
     pub corpus: Option<MetaCorpus>,
+    /// Externally owned pool/store handles (None = private runtime).
+    pub shared: Option<SharedRuntime>,
+    /// Streamed to on every incumbent improvement (the serve mode's
+    /// event source). Observational only — never shapes the search.
+    incumbent_sink: Option<IncumbentSink>,
 }
 
 impl VolcanoML {
     pub fn new(cfg: VolcanoConfig) -> VolcanoML {
-        VolcanoML { cfg, corpus: None }
+        VolcanoML {
+            cfg,
+            corpus: None,
+            shared: None,
+            incumbent_sink: None,
+        }
     }
 
     pub fn with_corpus(mut self, corpus: MetaCorpus) -> VolcanoML {
         self.corpus = Some(corpus);
+        self
+    }
+
+    /// Run on shared runtime resources (pool tenant handle and/or FE
+    /// store) instead of constructing private ones.
+    pub fn with_shared(mut self, shared: SharedRuntime) -> VolcanoML {
+        self.shared = Some(shared);
+        self
+    }
+
+    /// Register an observer fired on every incumbent improvement.
+    pub fn with_incumbent_sink(mut self, sink: IncumbentSink)
+        -> VolcanoML {
+        self.incumbent_sink = Some(sink);
         self
     }
 
@@ -227,15 +278,33 @@ impl VolcanoML {
         }
 
         // ---- run ----------------------------------------------------
-        let workers = cfg.workers.max(1);
+        let shared_exec = self.shared.as_ref()
+            .and_then(|s| s.executor.clone());
+        let shared_store = self.shared.as_ref()
+            .and_then(|s| s.fe_store.clone());
+        // batch sizing follows the pool actually used: a shared pool
+        // of T threads behaves exactly like `workers = T`
+        let workers = match &shared_exec {
+            Some(ex) => ex.workers().max(1),
+            None => cfg.workers.max(1),
+        };
         let batch = if cfg.eval_batch == 0 { workers }
                     else { cfg.eval_batch };
         let mut evaluator = PipelineEvaluator::new(
             ds, split, cfg.metric, &pipeline, &algos, runtime,
             cfg.seed)
-            .with_budget(cfg.max_evals, cfg.budget_secs)
-            .with_workers(workers)
-            .with_fe_cache(cfg.fe_cache_mb);
+            .with_budget(cfg.max_evals, cfg.budget_secs);
+        evaluator = match shared_exec {
+            Some(ex) => evaluator.with_executor(ex),
+            None => evaluator.with_workers(workers),
+        };
+        evaluator = match shared_store {
+            Some(store) => evaluator.with_fe_store(store),
+            None => evaluator.with_fe_cache(cfg.fe_cache_mb),
+        };
+        if let Some(sink) = &self.incumbent_sink {
+            evaluator = evaluator.with_incumbent_sink(sink.clone());
+        }
         let mut arm_trend: Vec<(usize, usize)> = Vec::new();
         let mut search_rng = rng.fork(0xB10C);
 
@@ -618,6 +687,48 @@ mod tests {
                    b.best_valid_utility.to_bits());
         assert_eq!(a.best_config, b.best_config);
         assert_eq!(a.n_evals, b.n_evals);
+    }
+
+    #[test]
+    fn shared_runtime_matches_private_runtime_bitwise() {
+        // the shared-pool tenant path must reproduce the private-pool
+        // trajectory exactly, and the incumbent sink must mirror the
+        // improvement curve without perturbing it
+        use crate::runtime::executor::WorkerPool;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ds = small_ds(11);
+        let mut cfg = quick_cfg();
+        cfg.max_evals = 16;
+        cfg.workers = 3;
+        cfg.eval_batch = 3; // pinned: batch size shapes trajectories
+        cfg.fe_cache_mb = 32;
+        let private = VolcanoML::new(cfg.clone()).run(&ds, None)
+            .unwrap();
+
+        let pool = Arc::new(WorkerPool::new(3));
+        let store = Arc::new(FeStore::new(32 * 1024 * 1024));
+        let n_events = Arc::new(AtomicUsize::new(0));
+        let tap = n_events.clone();
+        let shared = VolcanoML::new(cfg)
+            .with_shared(SharedRuntime {
+                executor: Some(Executor::shared(&pool, 2)),
+                fe_store: Some(store),
+            })
+            .with_incumbent_sink(Arc::new(move |_| {
+                tap.fetch_add(1, Ordering::Relaxed);
+            }))
+            .run(&ds, None)
+            .unwrap();
+
+        assert_eq!(private.best_valid_utility.to_bits(),
+                   shared.best_valid_utility.to_bits());
+        assert_eq!(private.best_config, shared.best_config);
+        assert_eq!(private.n_evals, shared.n_evals);
+        assert_eq!(private.valid_curve.len(),
+                   shared.valid_curve.len());
+        assert_eq!(n_events.load(Ordering::Relaxed),
+                   shared.valid_curve.len(),
+                   "one sink event per improvement");
     }
 
     #[test]

@@ -30,6 +30,26 @@ use crate::runtime::Runtime;
 use crate::space::Config;
 use crate::util::rng::Rng;
 
+/// Snapshot of an incumbent improvement, handed to the evaluator's
+/// [incumbent sink](PipelineEvaluator::with_incumbent_sink) the moment
+/// a full-fidelity evaluation beats the best-so-far.
+#[derive(Clone, Debug)]
+pub struct IncumbentEvent {
+    /// Evaluations committed so far (including the improving one).
+    pub n_evals: usize,
+    /// The new best validation utility.
+    pub utility: f64,
+    /// Seconds since the evaluator's budget clock started.
+    pub elapsed_secs: f64,
+    /// The improving configuration.
+    pub config: Config,
+}
+
+/// Callback invoked on every incumbent improvement. `Send + Sync` so a
+/// service thread can stream events while the evaluator itself stays
+/// shareable across the worker pool.
+pub type IncumbentSink = Arc<dyn Fn(&IncumbentEvent) + Send + Sync>;
+
 #[derive(Clone, Debug)]
 pub struct EvalRecord {
     pub config: Config,
@@ -77,6 +97,11 @@ pub struct PipelineEvaluator<'a> {
     /// Worst utility seen (crash penalty anchor).
     worst: f64,
     pub failures: usize,
+    /// Observer notified on every incumbent improvement (None = off).
+    /// Purely observational: firing order and payload are derived
+    /// from the serial commit stream, so attaching a sink never
+    /// perturbs the trajectory.
+    incumbent_sink: Option<IncumbentSink>,
 }
 
 impl<'a> PipelineEvaluator<'a> {
@@ -121,6 +146,7 @@ impl<'a> PipelineEvaluator<'a> {
             snapshots: Vec::new(),
             worst: f64::INFINITY,
             failures: 0,
+            incumbent_sink: None,
         }
     }
 
@@ -139,6 +165,40 @@ impl<'a> PipelineEvaluator<'a> {
     /// count never changes search results — only wall-clock time.
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.executor = Executor::new(workers);
+        self
+    }
+
+    /// Use an externally owned executor — typically a tenant handle
+    /// onto a process-wide shared [`WorkerPool`] (see
+    /// [`Executor::shared`]) — instead of spawning a private pool.
+    /// Store traffic is attributed to the executor's tenant id, and
+    /// because every per-search side effect commits serially in
+    /// request order, the trajectory is invariant to whichever
+    /// co-tenants share the pool's threads.
+    ///
+    /// [`WorkerPool`]: crate::runtime::executor::WorkerPool
+    pub fn with_executor(mut self, executor: Executor) -> Self {
+        self.executor = executor;
+        self
+    }
+
+    /// Attach an externally owned FE artifact store — typically the
+    /// process-wide store shared across concurrent searches.
+    /// Fingerprints cover the evaluator seed and dataset identity, so
+    /// co-tenant searches on the same dataset deduplicate each
+    /// other's FE fits while unrelated searches can never collide.
+    /// Like [`Self::with_fe_cache`], a pure wall-clock knob.
+    pub fn with_fe_store(mut self, store: Arc<FeStore>) -> Self {
+        self.fe_store = Some(store);
+        self
+    }
+
+    /// Register an observer fired on every incumbent improvement
+    /// (used by the service layer to stream incumbents to clients).
+    /// The sink observes the serial commit stream — attaching one
+    /// never changes what the search does, only who hears about it.
+    pub fn with_incumbent_sink(mut self, sink: IncumbentSink) -> Self {
+        self.incumbent_sink = Some(sink);
         self
     }
 
@@ -253,6 +313,7 @@ impl<'a> PipelineEvaluator<'a> {
             store: self.fe_store.as_deref(),
             exec: Some(&self.executor),
             base,
+            tenant: self.executor.tenant(),
         };
         let applied =
             self.pipeline.fit_apply(self.ds, cfg, fit_rows, &fx);
@@ -380,6 +441,14 @@ impl<'a> PipelineEvaluator<'a> {
             let t = self.elapsed();
             self.valid_curve.push((t, utility));
             self.snapshots.push((t, cfg.clone()));
+            if let Some(sink) = &self.incumbent_sink {
+                sink(&IncumbentEvent {
+                    n_evals: self.records.len(),
+                    utility,
+                    elapsed_secs: t,
+                    config: cfg.clone(),
+                });
+            }
         }
         utility
     }
@@ -1021,6 +1090,82 @@ mod tests {
         assert_eq!(fe_stats.hits + fe_stats.coalesced, 5,
                    "{fe_stats:?}");
         assert_eq!(fe_stats.published, 1, "{fe_stats:?}");
+    }
+
+    #[test]
+    fn incumbent_sink_mirrors_the_valid_curve() {
+        use std::sync::Mutex;
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let split = Split::stratified(&ds, &mut Rng::new(101));
+        let events: Arc<Mutex<Vec<IncumbentEvent>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let tap = events.clone();
+        let mut ev = PipelineEvaluator::new(&ds, split,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 102)
+            .with_budget(12, f64::INFINITY)
+            .with_incumbent_sink(Arc::new(move |e: &IncumbentEvent| {
+                tap.lock().unwrap().push(e.clone());
+            }));
+        let mut rng = Rng::new(103);
+        while !ev.exhausted() {
+            let cfg = space.sample(&mut rng);
+            let _ = ev.evaluate(&cfg, 1.0);
+        }
+        let seen = events.lock().unwrap();
+        assert_eq!(seen.len(), ev.valid_curve.len(),
+                   "one event per improvement");
+        for (e, (t, u)) in seen.iter().zip(&ev.valid_curve) {
+            assert_eq!(e.utility.to_bits(), u.to_bits());
+            assert_eq!(e.elapsed_secs.to_bits(), t.to_bits());
+            assert!(e.n_evals >= 1 && e.n_evals <= ev.n_evals());
+        }
+        for (e, (_, cfg)) in seen.iter().zip(&ev.snapshots) {
+            assert_eq!(&e.config, cfg);
+        }
+    }
+
+    #[test]
+    fn external_executor_and_store_match_private_ones() {
+        // with_executor(shared-pool tenant) + with_fe_store(external)
+        // must reproduce the private with_workers/with_fe_cache
+        // trajectory bit for bit
+        use crate::runtime::executor::WorkerPool;
+        let (ds, pipeline) = setup();
+        let algos = roster_for(SpaceScale::Small, ds.task, false);
+        let space = joint_space(&pipeline, &algos);
+        let mut rng = Rng::new(111);
+        let reqs: Vec<(Config, f64)> =
+            (0..6).map(|_| (space.sample(&mut rng), 1.0)).collect();
+
+        let split_a = Split::stratified(&ds, &mut Rng::new(112));
+        let mut private = PipelineEvaluator::new(&ds, split_a,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 113)
+            .with_workers(3)
+            .with_fe_cache(32);
+        let us_a = private.evaluate_batch(&reqs).unwrap();
+
+        let pool = Arc::new(WorkerPool::new(3));
+        let store = Arc::new(FeStore::new(32 * 1024 * 1024));
+        let split_b = Split::stratified(&ds, &mut Rng::new(112));
+        let mut shared = PipelineEvaluator::new(&ds, split_b,
+            Metric::BalancedAccuracy, &pipeline, &algos, None, 113)
+            .with_executor(Executor::shared(&pool, 1))
+            .with_fe_store(store.clone());
+        let us_b = shared.evaluate_batch(&reqs).unwrap();
+
+        assert_eq!(us_a.len(), us_b.len());
+        for (a, b) in us_a.iter().zip(&us_b) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // store traffic was attributed to the executor's tenant
+        let tenant = shared.executor.tenant();
+        assert!(tenant != 0, "shared executor registers a tenant");
+        let ts = store.tenant_stats(tenant);
+        let global = store.stats();
+        assert_eq!(ts.misses, global.misses);
+        assert_eq!(ts.hits, global.hits);
     }
 
     #[test]

@@ -301,7 +301,7 @@ impl FePipeline {
                 if plan.is_static_identity() {
                     continue;
                 }
-                if let Some(art) = store.lookup(plan.fp) {
+                if let Some(art) = store.lookup_as(plan.fp, fx.tenant) {
                     data = FeData::Shared(art.data.clone());
                     rows = FeRows::Shared(art.train.clone());
                     start = k + 1;
@@ -317,7 +317,7 @@ impl FePipeline {
                 None => {
                     self.run_stage(plan, &mut data, &mut rows, fx);
                 }
-                Some(store) => match store.begin(plan.fp) {
+                Some(store) => match store.begin_as(plan.fp, fx.tenant) {
                     Resolved::Ready(art) => {
                         data = FeData::Shared(art.data.clone());
                         rows = FeRows::Shared(art.train.clone());
@@ -474,6 +474,10 @@ pub struct FeExec<'e> {
     pub store: Option<&'e FeStore>,
     pub exec: Option<&'e Executor>,
     pub base: Fingerprint,
+    /// Fair-share tenant the store traffic is attributed to (the
+    /// submitting search's `Executor::tenant`); purely observational
+    /// — artifacts are content-addressed, so tenants share them.
+    pub tenant: u64,
 }
 
 impl FeExec<'static> {
@@ -485,6 +489,7 @@ impl FeExec<'static> {
             store: None,
             exec: None,
             base: Fingerprint::new().push_u64(seed),
+            tenant: 0,
         }
     }
 }
@@ -780,8 +785,8 @@ mod tests {
         let cs = pipe.space();
         let store = FeStore::new(64 * 1024 * 1024);
         let base = Fingerprint::new().push_u64(11);
-        let off = FeExec { store: None, exec: None, base };
-        let on = FeExec { store: Some(&store), exec: None, base };
+        let off = FeExec { store: None, exec: None, base, tenant: 0 };
+        let on = FeExec { store: Some(&store), exec: None, base, tenant: 0 };
         let mut rng = Rng::new(2);
         let cfgs: Vec<Config> =
             (0..12).map(|_| cs.sample(&mut rng)).collect();
@@ -812,7 +817,7 @@ mod tests {
         let pipe = FePipeline::standard(false, false);
         let store = FeStore::new(64 * 1024 * 1024);
         let base = Fingerprint::new().push_u64(21);
-        let fx = FeExec { store: Some(&store), exec: None, base };
+        let fx = FeExec { store: Some(&store), exec: None, base, tenant: 0 };
         let cfg1 = Config::new()
             .with("scaler", Value::C("standard".into()));
         let _ = pipe.fit_apply(&data, &cfg1, &train, &fx);
@@ -830,7 +835,7 @@ mod tests {
         // and the result matches the store-less computation bitwise
         let off = pipe.fit_apply(&data, &cfg2, &train,
                                  &FeExec { store: None, exec: None,
-                                           base });
+                                           base, tenant: 0 });
         for (x, y) in out2.data.x.iter().zip(&off.data.x) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
@@ -844,7 +849,7 @@ mod tests {
         let pipe = FePipeline::standard(false, false);
         let store = FeStore::new(64 * 1024 * 1024);
         let base = Fingerprint::new().push_u64(31);
-        let fx = FeExec { store: Some(&store), exec: None, base };
+        let fx = FeExec { store: Some(&store), exec: None, base, tenant: 0 };
         let cfg = Config::new()
             .with("balancer", Value::C("weight_balancer".into()));
         let first = pipe.fit_apply(&data, &cfg, &train, &fx);

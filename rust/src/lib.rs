@@ -21,5 +21,6 @@ pub mod space;
 pub mod opt;
 pub mod plan;
 pub mod runtime;
+pub mod service;
 pub mod surrogate;
 pub mod util;

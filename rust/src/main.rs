@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run             run one AutoML search on a registry dataset
 //!   plans           compare the execution plans (incl. nested CC)
+//!   serve           multi-tenant job server over stdin/stdout JSON
 //!   datasets        list the dataset registry
 //!   artifacts       show the PJRT artifact manifest
 //!   collect-corpus  build the meta-learning corpus
@@ -37,6 +38,18 @@ SUBCOMMANDS
                   [--super-batch N] [--pipeline-depth N]
                   [--fe-cache-mb N]
                   — compare J/C/A/AC/CA plus the nested CC
+  serve           [--workers N] [--fe-cache-mb N] [--max-active N]
+                  [--pending-cap N]
+                  — long-running multi-tenant search server: one
+                  shared worker pool + FE store serving every job.
+                  Reads one JSON job spec per stdin line ({\"name\":
+                  ..., \"dataset\": ..., optional weight/plan/scale/
+                  metric/evals/budget_secs/eval_batch/super_batch/
+                  pipeline_depth/seed/ensemble}) and streams JSON
+                  events to stdout (accepted, incumbent, done,
+                  failed, rejected; a final shutdown line once stdin
+                  closes and every job drains). Trajectories are
+                  invariant to co-tenants; see rust/README.md.
   datasets        list the registry (name, task, n, d)
   artifacts       show compiled PJRT artifacts
   collect-corpus  --out PATH [--n-cls N] [--n-reg N] [--evals N]
@@ -76,6 +89,7 @@ fn real_main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("plans") => cmd_plans(&args),
+        Some("serve") => cmd_serve(&args),
         Some("datasets") => cmd_datasets(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("collect-corpus") => cmd_collect(&args),
@@ -219,6 +233,144 @@ fn cmd_plans(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     table.print();
+    Ok(())
+}
+
+/// Long-running multi-tenant job server: one shared pool + FE store,
+/// JSON job specs in on stdin (one per line), JSON events out on
+/// stdout. Closing stdin is the shutdown signal: already-accepted
+/// jobs drain to their terminal events, then a final `shutdown` line
+/// is emitted and the process exits cleanly.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use std::io::{BufRead, Write};
+    use std::sync::{Arc, Mutex};
+    use volcanoml::service::{JobEvent, JobSpec, SearchService,
+                             ServiceConfig};
+    use volcanoml::util::json::Json;
+
+    let cfg = ServiceConfig {
+        workers: args.usize_or("workers", 4)?.max(1),
+        fe_cache_mb: args.usize_or("fe-cache-mb", 256)?,
+        max_active: args.usize_or("max-active", 4)?.max(1),
+        pending_cap: args.usize_or("pending-cap", 16)?,
+    };
+    args.finish()?;
+    let svc = SearchService::new(cfg);
+
+    // every job's forwarder thread shares stdout: one mutex keeps
+    // event lines whole, and each line is flushed so clients see
+    // incumbents as they land, not at buffer boundaries
+    let out = Arc::new(Mutex::new(std::io::stdout()));
+    let emit = |out: &Arc<Mutex<std::io::Stdout>>, v: Json| {
+        let mut o = out.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = writeln!(o, "{}", v.to_string());
+        let _ = o.flush();
+    };
+
+    let mut forwarders = Vec::new();
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let spec = Json::parse(line)
+            .map_err(anyhow::Error::from)
+            .and_then(|v| JobSpec::from_json(&v));
+        let spec = match spec {
+            Ok(s) => s,
+            Err(e) => {
+                emit(&out, Json::obj(vec![
+                    ("event", Json::Str("rejected".into())),
+                    ("error", Json::Str(format!("{e:#}"))),
+                ]));
+                continue;
+            }
+        };
+        let name = spec.name.clone();
+        match svc.submit(spec) {
+            Ok(handle) => {
+                emit(&out, Json::obj(vec![
+                    ("event", Json::Str("accepted".into())),
+                    ("job", Json::Num(handle.id as f64)),
+                    ("name", Json::Str(handle.name.clone())),
+                ]));
+                let out = out.clone();
+                forwarders.push(std::thread::spawn(move || {
+                    while let Some(ev) = handle.next_event() {
+                        let v = match ev {
+                            JobEvent::Incumbent {
+                                job, n_evals, utility,
+                                elapsed_secs, config_key,
+                            } => Json::obj(vec![
+                                ("event",
+                                 Json::Str("incumbent".into())),
+                                ("job", Json::Num(job as f64)),
+                                ("name",
+                                 Json::Str(handle.name.clone())),
+                                ("n_evals",
+                                 Json::Num(n_evals as f64)),
+                                ("utility", Json::Num(utility)),
+                                ("elapsed_secs",
+                                 Json::Num(elapsed_secs)),
+                                ("config", Json::Str(config_key)),
+                            ]),
+                            JobEvent::Done { job, outcome } => {
+                                Json::obj(vec![
+                                    ("event",
+                                     Json::Str("done".into())),
+                                    ("job", Json::Num(job as f64)),
+                                    ("name",
+                                     Json::Str(handle.name.clone())),
+                                    ("n_evals",
+                                     Json::Num(outcome.n_evals
+                                               as f64)),
+                                    ("best_valid_utility",
+                                     Json::Num(
+                                         outcome.best_valid_utility)),
+                                    ("test_utility",
+                                     Json::Num(outcome.test_utility)),
+                                    ("elapsed_secs",
+                                     Json::Num(outcome.elapsed_secs)),
+                                ])
+                            }
+                            JobEvent::Failed { job, error } => {
+                                Json::obj(vec![
+                                    ("event",
+                                     Json::Str("failed".into())),
+                                    ("job", Json::Num(job as f64)),
+                                    ("name",
+                                     Json::Str(handle.name.clone())),
+                                    ("error", Json::Str(error)),
+                                ])
+                            }
+                        };
+                        let mut o = out.lock()
+                            .unwrap_or_else(|p| p.into_inner());
+                        let _ = writeln!(o, "{}", v.to_string());
+                        let _ = o.flush();
+                    }
+                }));
+            }
+            Err(e) => {
+                emit(&out, Json::obj(vec![
+                    ("event", Json::Str("rejected".into())),
+                    ("name", Json::Str(name)),
+                    ("error", Json::Str(e.to_string())),
+                ]));
+            }
+        }
+    }
+
+    // stdin closed: drain every accepted job, then announce shutdown
+    for f in forwarders {
+        let _ = f.join();
+    }
+    svc.wait_idle();
+    emit(&out, Json::obj(vec![
+        ("event", Json::Str("shutdown".into())),
+    ]));
     Ok(())
 }
 

@@ -1,4 +1,5 @@
-//! Persistent worker-pool executor for batched candidate evaluation.
+//! Persistent multi-tenant worker-pool executor for batched candidate
+//! evaluation.
 //!
 //! The Volcano-style `do_next!` pull proposes a *batch* of candidate
 //! configurations per pull (and, with cross-leaf super-batching, a
@@ -10,16 +11,33 @@
 //! purely a performance knob (the *batch size* is what changes search
 //! semantics).
 //!
-//! The pool is spawned once (per search, via
-//! `PipelineEvaluator::with_workers`) and its threads are reused
-//! across every batch, so per-thread state — notably the PJRT
-//! executable caches in `runtime::mod`, which live in thread-locals —
-//! is amortised over the whole search instead of being rebuilt for
-//! every batch as the previous `std::thread::scope`-per-batch design
-//! did. Work is claimed through an atomic cursor so uneven
-//! per-candidate costs balance across the pool, and a panic inside
-//! the work closure propagates to the submitting thread once the
-//! batch joins, exactly like the serial path.
+//! One pool can serve **many concurrent searches**: each search
+//! registers a [`TenantId`] (see [`WorkerPool::register_tenant`] and
+//! [`Executor::shared`]) and submits batches to its own FIFO queue.
+//! Workers pick one item at a time by *stride scheduling*: every
+//! tenant carries a virtual-time `pass` that advances by
+//! `STRIDE_ONE / weight` per claimed item, and the runnable tenant
+//! with the smallest pass is picked next — so under saturating load
+//! per-tenant claim counts converge to weight proportions, an idle
+//! tenant re-enters at the current virtual time instead of
+//! monopolising the pool to catch up, and a tenant whose batch is
+//! cancelled mid-run (deadline death) simply stops claiming, freeing
+//! every subsequent pick to its co-tenants. Per-tenant batches still
+//! complete in submission order, and results never reorder, so
+//! co-tenancy — like worker count — is a pure wall-clock knob: a
+//! search's trajectory is invariant to how many tenants share the
+//! pool.
+//!
+//! The pool is spawned once (per search via
+//! `PipelineEvaluator::with_workers`, or per process via the search
+//! service) and its threads are reused across every batch, so
+//! per-thread state — notably the PJRT executable caches in
+//! `runtime::mod`, which live in thread-locals — is amortised over
+//! the whole search instead of being rebuilt for every batch. Work is
+//! claimed through an atomic cursor so uneven per-candidate costs
+//! balance across the pool, and a panic inside the work closure
+//! propagates to the submitting thread once the batch joins, exactly
+//! like the serial path.
 //!
 //! Batches can also be issued **asynchronously**: [`Executor::submit`]
 //! returns a [`Submitted`] handle without blocking, so the submitting
@@ -36,15 +54,22 @@
 //! suffix comes back as `None` from [`Submitted::drain_partial`])
 //! instead of overshooting by one full batch.
 
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
 use crate::util::lock;
+
+/// Identifies one fair-share claimant on a shared [`WorkerPool`].
+/// Tenant 0 is the implicit default for unregistered submissions.
+pub type TenantId = u64;
+
+/// Virtual-time increment of one weight-1 claim (stride scheduling):
+/// a tenant's pass advances by `STRIDE_ONE / weight` per pick, so the
+/// min-pass rule hands out claims in weight proportion.
+const STRIDE_ONE: u64 = 1 << 20;
 
 thread_local! {
     /// True on threads spawned by a [`WorkerPool`]. A data-parallel
@@ -64,56 +89,279 @@ pub fn on_pool_thread() -> bool {
     POOL_WORKER.with(|c| c.get())
 }
 
-/// A fixed-size pool of persistent worker threads fed over a shared
-/// channel. Threads are spawned at construction and live until the
-/// pool is dropped; every [`WorkerPool::run`] reuses them.
+/// Outcome of one claim attempt on a queued batch.
+#[derive(Clone, Copy, PartialEq)]
+enum Step {
+    /// An item was claimed and executed; the batch may have more.
+    Ran,
+    /// Nothing left to claim (cursor exhausted, cancelled or
+    /// poisoned by a panic): the batch should leave the queue.
+    Retired,
+}
+
+/// Claim-one-item interface a worker drives after picking a batch.
+/// Implemented by [`BatchState`]; object-safe so the scheduler queue
+/// can hold batches of any item/result type.
+trait PoolTask: Send + Sync {
+    fn run_one(&self) -> Step;
+}
+
+/// Completion latch shared between a batch handle and the workers:
+/// counts in-flight picks and records retirement. Lives in its own
+/// `'static` allocation so workers never touch `'env` batch state
+/// after their final [`Latch::post`].
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    /// Picks handed to workers that have not posted back yet.
+    active: usize,
+    /// No further pick will ever claim an item of this batch.
+    retired: bool,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { active: 0, retired: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn is_retired(&self) -> bool {
+        lock(&self.state).retired
+    }
+
+    fn retire(&self) {
+        lock(&self.state).retired = true;
+        self.cv.notify_all();
+    }
+
+    fn post(&self, step: Step) {
+        let mut st = lock(&self.state);
+        st.active -= 1;
+        if step == Step::Retired {
+            st.retired = true;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Block until the batch is retired with no pick in flight.
+    fn wait_done(&self) {
+        let mut st = lock(&self.state);
+        while !(st.retired && st.active == 0) {
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// One queued batch: the type-erased claim task plus the completion
+/// latch its handle waits on.
+struct QueuedBatch {
+    task: Arc<dyn PoolTask>,
+    latch: Arc<Latch>,
+}
+
+/// Per-tenant scheduler state: fair-share weight, stride virtual
+/// time, and a FIFO of this tenant's in-flight batches (only the
+/// front one is claimed from, preserving submission order).
+struct TenantState {
+    weight: u32,
+    /// Stride-scheduling virtual time; the min-pass runnable tenant
+    /// is picked next.
+    pass: u64,
+    queue: VecDeque<QueuedBatch>,
+}
+
+struct SchedState {
+    shutdown: bool,
+    /// Global virtual time: the pass of the last picked tenant.
+    /// (Re)activated tenants start here, so an idle spell never
+    /// turns into a catch-up monopoly.
+    vnow: u64,
+    tenants: HashMap<TenantId, TenantState>,
+}
+
+/// The `'static` heart of the pool, shared by workers and batch
+/// handles via `Arc` so a handle can finish its join even while the
+/// pool itself is being dropped.
+struct PoolInner {
+    sched: Mutex<SchedState>,
+    work_cv: Condvar,
+    next_tenant: AtomicU64,
+}
+
+type Picked = (Arc<dyn PoolTask>, Arc<Latch>);
+
+/// Stride-scheduling pick: prune retired front batches, select the
+/// min-pass tenant with runnable work (ties break on the smaller
+/// tenant id), advance its virtual time, and hand out its front
+/// batch. The pick is counted on the latch *under the scheduler
+/// lock*, so a handle that has seen `retired && active == 0` knows no
+/// further pick of its batch can exist.
+fn pick_task(st: &mut SchedState) -> Option<Picked> {
+    let mut best: Option<(u64, TenantId)> = None;
+    for (&id, t) in st.tenants.iter_mut() {
+        while t.queue.front().is_some_and(|b| b.latch.is_retired()) {
+            t.queue.pop_front();
+        }
+        if t.queue.is_empty() {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((bp, bid)) => {
+                t.pass < bp || (t.pass == bp && id < bid)
+            }
+        };
+        if better {
+            best = Some((t.pass, id));
+        }
+    }
+    let (_, id) = best?;
+    let vnow = st.vnow;
+    let t = st.tenants.get_mut(&id).expect("picked tenant exists");
+    st.vnow = vnow.max(t.pass);
+    t.pass = t
+        .pass
+        .saturating_add(STRIDE_ONE / u64::from(t.weight.max(1)));
+    let front = t.queue.front().expect("picked tenant has work");
+    let picked: Picked = (front.task.clone(), front.latch.clone());
+    lock(&picked.1.state).active += 1;
+    Some(picked)
+}
+
+fn worker_loop(inner: &PoolInner) {
+    POOL_WORKER.with(|c| c.set(true));
+    loop {
+        let (task, latch) = {
+            let mut st = lock(&inner.sched);
+            loop {
+                if let Some(p) = pick_task(&mut st) {
+                    break p;
+                }
+                // drain every queued batch before honouring shutdown,
+                // so in-flight handles always complete their join
+                if st.shutdown {
+                    return;
+                }
+                st = inner
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        let step = task.run_one();
+        // drop the batch state *before* posting: once a join has seen
+        // `active` reach zero, no worker clone of the 'env state
+        // survives, so not even Arc drop glue can run on a worker
+        // after the join returned
+        drop(task);
+        latch.post(step);
+    }
+}
+
+/// A fixed-size pool of persistent worker threads scheduled by
+/// weighted fair share across tenants. Threads are spawned at
+/// construction and live until the pool is dropped; every batch
+/// reuses them.
 pub struct WorkerPool {
-    injector: Mutex<Sender<Job>>,
+    inner: Arc<PoolInner>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
     pub fn new(threads: usize) -> WorkerPool {
         let threads = threads.max(1);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let inner = Arc::new(PoolInner {
+            sched: Mutex::new(SchedState {
+                shutdown: false,
+                vnow: 0,
+                tenants: HashMap::new(),
+            }),
+            work_cv: Condvar::new(),
+            next_tenant: AtomicU64::new(1),
+        });
         let handles = (0..threads)
             .map(|i| {
-                let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+                let inner = inner.clone();
                 std::thread::Builder::new()
                     .name(format!("volcano-worker-{i}"))
-                    .spawn(move || {
-                        POOL_WORKER.with(|c| c.set(true));
-                        loop {
-                            // hold the lock only while dequeuing,
-                            // never while running a job
-                            let job = lock(&rx).recv();
-                            match job {
-                                Ok(job) => job(),
-                                Err(_) => break, // pool dropped
-                            }
-                        }
-                    })
+                    .spawn(move || worker_loop(&inner))
                     .expect("executor: failed to spawn worker thread")
             })
             .collect();
-        WorkerPool { injector: Mutex::new(tx), handles }
+        WorkerPool { inner, handles }
     }
 
     pub fn threads(&self) -> usize {
         self.handles.len()
     }
 
-    /// Apply `f` to every item on the pool, blocking until the batch
-    /// completes; results come back in item order. At most
-    /// `min(threads, items)` workers claim items via an atomic cursor.
+    /// Register a new fair-share tenant with the given weight
+    /// (clamped to ≥ 1). Under saturating load the tenant's share of
+    /// the pool's claims converges to `weight / Σ weights`. The
+    /// entry persists until [`Self::remove_tenant`].
+    pub fn register_tenant(&self, weight: u32) -> TenantId {
+        let id = self.inner.next_tenant.fetch_add(1, Ordering::Relaxed);
+        let mut st = lock(&self.inner.sched);
+        let pass = st.vnow;
+        st.tenants.insert(
+            id,
+            TenantState {
+                weight: weight.max(1),
+                pass,
+                queue: VecDeque::new(),
+            },
+        );
+        id
+    }
+
+    /// Update a tenant's fair-share weight (clamped to ≥ 1). Takes
+    /// effect from the next pick.
+    pub fn set_tenant_weight(&self, tenant: TenantId, weight: u32) {
+        let mut st = lock(&self.inner.sched);
+        if let Some(t) = st.tenants.get_mut(&tenant) {
+            t.weight = weight.max(1);
+        }
+    }
+
+    /// A tenant's current weight, if it is registered (or has ever
+    /// submitted work).
+    pub fn tenant_weight(&self, tenant: TenantId) -> Option<u32> {
+        lock(&self.inner.sched)
+            .tenants
+            .get(&tenant)
+            .map(|t| t.weight)
+    }
+
+    /// Drop a tenant's scheduler entry. Refuses (returns `false`)
+    /// while the tenant still has unretired batches queued, so a
+    /// search must drain before its tenant can be reclaimed.
+    pub fn remove_tenant(&self, tenant: TenantId) -> bool {
+        let mut st = lock(&self.inner.sched);
+        if let Some(t) = st.tenants.get_mut(&tenant) {
+            t.queue.retain(|b| !b.latch.is_retired());
+            if t.queue.is_empty() {
+                st.tenants.remove(&tenant);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Apply `f` to every item on the pool (as tenant 0), blocking
+    /// until the batch completes; results come back in item order.
     pub fn run<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
     where
         T: Sync,
         R: Send,
         F: Fn(&T) -> R + Send + Sync,
     {
-        self.submit(items, f).drain()
+        self.submit(0, items, f).drain()
     }
 
     /// Start a batch on the pool **without blocking**: workers begin
@@ -131,14 +379,15 @@ impl WorkerPool {
     /// owns the borrows; the public surface built on top
     /// (`Objective::evaluate_batch_overlapped`, `Executor::run`)
     /// always does.
-    pub(crate) fn submit<'env, T, R, F>(&self, items: &'env [T], f: F)
+    pub(crate) fn submit<'env, T, R, F>(
+        &self, tenant: TenantId, items: &'env [T], f: F)
         -> PoolBatch<'env, T, R>
     where
         T: Sync,
         R: Send,
         F: Fn(&T) -> R + Send + Sync + 'env,
     {
-        self.submit_cancellable(items, f, || false)
+        self.submit_cancellable(tenant, items, f, || false)
     }
 
     /// [`Self::submit`] with a cancellation predicate: every worker
@@ -148,9 +397,11 @@ impl WorkerPool {
     /// Items in flight when the predicate flips still finish (an
     /// evaluation cannot be torn); unclaimed items are left as `None`
     /// — a suffix, since the claim cursor is monotone — and must be
-    /// collected with [`PoolBatch::drain_partial`].
+    /// collected with [`PoolBatch::drain_partial`]. A cancelled
+    /// batch retires from the scheduler, so its unclaimed slots go
+    /// straight to co-tenant work.
     pub(crate) fn submit_cancellable<'env, T, R, F, C>(
-        &self, items: &'env [T], f: F, cancel: C)
+        &self, tenant: TenantId, items: &'env [T], f: F, cancel: C)
         -> PoolBatch<'env, T, R>
     where
         T: Sync,
@@ -164,62 +415,67 @@ impl WorkerPool {
             cancel: Box::new(cancel),
             next: AtomicUsize::new(0),
             slots: items.iter().map(|_| Mutex::new(None)).collect(),
+            poisoned: AtomicBool::new(false),
+            panic: Mutex::new(None),
         });
-        let (done_tx, done_rx) = channel::<std::thread::Result<()>>();
-        let n_jobs = self.handles.len().min(items.len());
-        for _ in 0..n_jobs {
-            let st = state.clone();
-            let done_tx = done_tx.clone();
-            let job: Box<dyn FnOnce() + Send + 'env> =
-                Box::new(move || {
-                    let r = catch_unwind(AssertUnwindSafe(|| loop {
-                        // per-item cancellation check *before* the
-                        // claim: once the predicate flips (deadline),
-                        // no further work starts on any worker
-                        if (st.cancel)() {
-                            break;
-                        }
-                        let i = st.next.fetch_add(1, Ordering::Relaxed);
-                        if i >= st.items.len() {
-                            break;
-                        }
-                        let out = (st.f)(&st.items[i]);
-                        *lock(&st.slots[i]) = Some(out);
-                    }));
-                    // release this worker's share of the batch state
-                    // *before* signalling: once the join has seen
-                    // every signal, only the handle's own Arc is
-                    // left, so no 'env drop glue (f's captures,
-                    // uncollected results) can ever run on a worker
-                    // after the join returned
-                    drop(st);
-                    // the batch joins on this send, not the return
-                    let _ = done_tx.send(r);
-                });
-            // SAFETY: the job borrows `items` and whatever `f`
-            // captures for 'env. We erase the lifetime to ship it
-            // through the 'static channel; the `PoolBatch` handle
-            // blocks until every submitted job has signalled
-            // completion (or panicked) in `drain` — and, failing
-            // that, in its Drop — before 'env can end, so the
-            // borrows strictly outlive all use. The completion
-            // signal is sent after the closure finishes (panic
-            // included, via catch_unwind) and after the worker has
-            // dropped its `Arc<BatchState>`, so no worker can still
-            // touch 'env data — not even through drop glue of the
-            // shared state — once recv() has yielded `n_jobs`
-            // results. (Leaking the handle with `mem::forget` would
-            // void this argument; the handle is never exposed in a
-            // way that invites it.)
-            let job: Job = unsafe {
-                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>,
-                                      Job>(job)
+        let latch = Arc::new(Latch::new());
+        let mut queued = false;
+        if state.items.is_empty() {
+            // nothing to claim: born retired, never queued
+            latch.retire();
+        } else {
+            let task: Arc<dyn PoolTask + 'env> = state.clone();
+            // SAFETY: the task borrows `items` and whatever `f` and
+            // `cancel` capture for 'env; the scheduler queue is
+            // 'static, so the lifetime is erased here. The
+            // `PoolBatch` handle re-establishes the bound: its join
+            // (in `drain_partial`, and failing that in Drop) first
+            // waits until the batch is retired with zero in-flight
+            // picks — every pick is counted on the latch *under the
+            // scheduler lock*, before any worker sees the task — and
+            // then removes the queue's own Arc clone under that same
+            // lock. When the join returns, neither a queue entry nor
+            // a worker clone of this state survives: workers drop
+            // their task Arc *before* posting the final latch
+            // decrement, so not even drop glue for 'env data can run
+            // on a worker afterwards. (Leaking the handle with
+            // `mem::forget` would void this argument; the handle is
+            // never exposed in a way that invites it.)
+            let task: Arc<dyn PoolTask> = unsafe {
+                std::mem::transmute::<Arc<dyn PoolTask + 'env>,
+                                      Arc<dyn PoolTask>>(task)
             };
-            lock(&self.injector)
-                .send(job)
-                .expect("executor: worker pool shut down");
+            let mut st = lock(&self.inner.sched);
+            assert!(!st.shutdown, "executor: worker pool shut down");
+            let vnow = st.vnow;
+            let t = st.tenants.entry(tenant).or_insert_with(|| {
+                TenantState {
+                    weight: 1,
+                    pass: vnow,
+                    queue: VecDeque::new(),
+                }
+            });
+            if t.queue.is_empty() {
+                // waking from idle: rejoin at the current virtual
+                // time instead of replaying the idle spell
+                t.pass = t.pass.max(vnow);
+            }
+            t.queue.push_back(QueuedBatch {
+                task,
+                latch: latch.clone(),
+            });
+            drop(st);
+            self.inner.work_cv.notify_all();
+            queued = true;
         }
-        PoolBatch { state, done_rx, pending: n_jobs }
+        PoolBatch {
+            state,
+            latch,
+            inner: self.inner.clone(),
+            tenant,
+            queued,
+            joined: false,
+        }
     }
 
     /// Data-parallel map over the row ranges of `0..n`: split into
@@ -234,18 +490,17 @@ impl WorkerPool {
     ///
     /// The calling thread churns through the chunks itself while any
     /// free worker claims alongside it; the return then joins the
-    /// queued claim jobs (workers dequeue them as they free up — a
-    /// no-op once the cursor is exhausted), so the batch never
+    /// batch (a no-op pick once the cursor is exhausted), so it never
     /// outlives the borrows of `f`.
     ///
     /// Crate-internal, and self-guarded against being entered *from*
     /// a pool worker: a nested blocking submission there could
-    /// deadlock the pool (every worker waiting in `drain` on queued
-    /// claim jobs only an idle worker could dequeue), so that case
-    /// runs inline — [`Executor::map_ranges`] is the public surface
-    /// and routes it inline one layer up already.
-    pub(crate) fn map_ranges<R, F>(&self, n: usize, min_chunk: usize,
-                                   f: &F) -> Vec<R>
+    /// deadlock the pool (every worker waiting in `drain` on work
+    /// only an idle worker could claim), so that case runs inline —
+    /// [`Executor::map_ranges`] is the public surface and routes it
+    /// inline one layer up already.
+    pub(crate) fn map_ranges<R, F>(&self, tenant: TenantId, n: usize,
+                                   min_chunk: usize, f: &F) -> Vec<R>
     where
         R: Send,
         F: Fn(usize, usize) -> R + Send + Sync,
@@ -262,7 +517,7 @@ impl WorkerPool {
             .step_by(chunk)
             .map(|lo| (lo, (lo + chunk).min(n)))
             .collect();
-        let batch = self.submit(&ranges, |&(lo, hi)| f(lo, hi));
+        let batch = self.submit(tenant, &ranges, |&(lo, hi)| f(lo, hi));
         batch.help();
         batch.drain()
     }
@@ -270,7 +525,7 @@ impl WorkerPool {
 
 /// Shared per-batch state: the items, the work closure, the claim
 /// cursor and one result slot per item. Workers hold `Arc` clones
-/// for exactly as long as they run jobs of this batch.
+/// for exactly as long as they run picks of this batch.
 struct BatchState<'env, T, R> {
     items: &'env [T],
     f: Box<dyn Fn(&T) -> R + Send + Sync + 'env>,
@@ -278,6 +533,47 @@ struct BatchState<'env, T, R> {
     cancel: Box<dyn Fn() -> bool + Send + Sync + 'env>,
     next: AtomicUsize,
     slots: Vec<Mutex<Option<R>>>,
+    /// Set when an item panicked: stops further claims; the payload
+    /// below re-raises at the join.
+    poisoned: AtomicBool,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl<'env, T, R> PoolTask for BatchState<'env, T, R>
+where
+    T: Sync,
+    R: Send,
+{
+    fn run_one(&self) -> Step {
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            // per-item cancellation check *before* the claim: once
+            // the predicate flips (deadline) or a panic poisoned the
+            // batch, no further work starts on any worker
+            if self.poisoned.load(Ordering::Acquire)
+                || (self.cancel)()
+            {
+                return Step::Retired;
+            }
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.items.len() {
+                return Step::Retired;
+            }
+            let out = (self.f)(&self.items[i]);
+            *lock(&self.slots[i]) = Some(out);
+            Step::Ran
+        }));
+        match res {
+            Ok(step) => step,
+            Err(p) => {
+                let mut slot = lock(&self.panic);
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+                self.poisoned.store(true, Ordering::Release);
+                Step::Retired
+            }
+        }
+    }
 }
 
 /// An in-flight batch on a [`WorkerPool`], created by
@@ -287,24 +583,27 @@ struct BatchState<'env, T, R> {
 /// batch can never outlive the data it borrows.
 pub struct PoolBatch<'env, T, R> {
     state: Arc<BatchState<'env, T, R>>,
-    done_rx: Receiver<std::thread::Result<()>>,
-    pending: usize,
+    latch: Arc<Latch>,
+    inner: Arc<PoolInner>,
+    tenant: TenantId,
+    queued: bool,
+    joined: bool,
 }
 
 impl<'env, T, R> PoolBatch<'env, T, R> {
     /// Run the batch's claim loop on the *calling* thread: claim and
     /// execute items through the same atomic cursor the workers use,
     /// until the batch is exhausted (or its cancellation predicate
-    /// flips). This is how a data-parallel map keeps making progress
-    /// when every pool worker is busy — the submitter works its own
-    /// batch alongside whatever workers pick it up. A panic in the
-    /// work closure unwinds the caller directly, exactly like inline
-    /// execution; the [`Drop`] join then waits out the in-flight
-    /// workers.
+    /// flips), then retire it from the scheduler. This is how a
+    /// data-parallel map keeps making progress when every pool worker
+    /// is busy — the submitter works its own batch alongside whatever
+    /// workers pick it up. A panic in the work closure unwinds the
+    /// caller directly, exactly like inline execution; the [`Drop`]
+    /// join then waits out the in-flight workers.
     pub(crate) fn help(&self) {
         let st = &self.state;
         loop {
-            if (st.cancel)() {
+            if st.poisoned.load(Ordering::Acquire) || (st.cancel)() {
                 break;
             }
             let i = st.next.fetch_add(1, Ordering::Relaxed);
@@ -314,15 +613,37 @@ impl<'env, T, R> PoolBatch<'env, T, R> {
             let out = (st.f)(&st.items[i]);
             *lock(&st.slots[i]) = Some(out);
         }
+        // exhausted (or cancelled): no pick can claim another item,
+        // so retire here rather than waiting for a worker to discover
+        // the empty cursor
+        self.latch.retire();
+    }
+
+    /// Wait until no pick of this batch is or ever will be in
+    /// flight, then unlink it from the scheduler queue. After this
+    /// returns, no worker holds (or can ever reacquire) a reference
+    /// to the batch's `'env` state.
+    fn join(&mut self) {
+        if self.joined {
+            return;
+        }
+        self.latch.wait_done();
+        if self.queued {
+            let mut st = lock(&self.inner.sched);
+            if let Some(t) = st.tenants.get_mut(&self.tenant) {
+                t.queue
+                    .retain(|b| !Arc::ptr_eq(&b.latch, &self.latch));
+            }
+        }
+        self.joined = true;
     }
 
     /// Block until every worker has finished this batch, then return
     /// the results in item order. A panic inside the work closure is
-    /// re-raised here — after all workers have signalled, so the
-    /// pool (and the batch's borrows) are never left dangling. Only
-    /// valid for non-cancellable submissions (every slot filled);
-    /// cancellable batches join with
-    /// [`drain_partial`](Self::drain_partial).
+    /// re-raised here — after the join, so the pool (and the batch's
+    /// borrows) are never left dangling. Only valid for
+    /// non-cancellable submissions (every slot filled); cancellable
+    /// batches join with [`drain_partial`](Self::drain_partial).
     pub fn drain(self) -> Vec<R> {
         self.drain_partial()
             .into_iter()
@@ -336,23 +657,11 @@ impl<'env, T, R> PoolBatch<'env, T, R> {
     /// monotone, so everything before the first unclaimed item was
     /// claimed (and, once the join completes, finished).
     pub fn drain_partial(mut self) -> Vec<Option<R>> {
-        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
-        for _ in 0..self.pending {
-            match self.done_rx.recv()
-                .expect("executor: worker exited without signalling") {
-                Ok(()) => {}
-                Err(p) => panic = Some(p),
-            }
-        }
-        self.pending = 0;
-        if let Some(p) = panic {
+        self.join();
+        if let Some(p) = lock(&self.state.panic).take() {
             resume_unwind(p);
         }
-        self.state
-            .slots
-            .iter()
-            .map(|m| lock(m).take())
-            .collect()
+        self.state.slots.iter().map(|m| lock(m).take()).collect()
     }
 }
 
@@ -361,18 +670,14 @@ impl<'env, T, R> Drop for PoolBatch<'env, T, R> {
         // join (without collecting) so the workers' borrows of 'env
         // data end before the handle does — this runs during unwind
         // too, keeping an abandoned overlap window panic-safe
-        for _ in 0..self.pending {
-            let _ = self.done_rx.recv();
-        }
+        self.join();
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        // replace the injector with a dangling sender so the original
-        // is dropped and every worker's recv() errors out
-        let (tx, _) = channel::<Job>();
-        *lock(&self.injector) = tx;
+        lock(&self.inner.sched).shutdown = true;
+        self.inner.work_cv.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -380,12 +685,15 @@ impl Drop for WorkerPool {
 }
 
 /// Executor facade used by the evaluator: serial inline execution for
-/// one worker (or one item), a shared persistent [`WorkerPool`]
-/// otherwise. Cloning shares the pool (and its threads).
+/// one worker (or one item), a persistent [`WorkerPool`] otherwise.
+/// Cloning shares the pool (and the tenant identity). An executor
+/// built with [`Executor::shared`] submits all its work under its own
+/// fair-share tenant on a pool it shares with other searches.
 #[derive(Clone, Default)]
 pub struct Executor {
     workers: usize,
     pool: Option<Arc<WorkerPool>>,
+    tenant: TenantId,
 }
 
 impl std::fmt::Debug for Executor {
@@ -393,13 +701,14 @@ impl std::fmt::Debug for Executor {
         f.debug_struct("Executor")
             .field("workers", &self.workers.max(1))
             .field("persistent", &self.pool.is_some())
+            .field("tenant", &self.tenant)
             .finish()
     }
 }
 
 impl Executor {
-    /// Pool with `workers` persistent threads; 0 is clamped to 1
-    /// (serial, no threads spawned).
+    /// Private pool with `workers` persistent threads; 0 is clamped
+    /// to 1 (serial, no threads spawned). Submits as tenant 0.
     pub fn new(workers: usize) -> Executor {
         let workers = workers.max(1);
         let pool = if workers > 1 {
@@ -407,7 +716,23 @@ impl Executor {
         } else {
             None
         };
-        Executor { workers, pool }
+        Executor { workers, pool, tenant: 0 }
+    }
+
+    /// An executor on a **shared** pool, registered as a fresh
+    /// fair-share tenant with the given weight. Its `workers()` is
+    /// the pool's thread count, so batch sizing derived from it is
+    /// identical to a private pool of the same size — co-tenancy
+    /// stays a pure wall-clock knob. Remove the tenant with
+    /// [`WorkerPool::remove_tenant`] (via [`Self::tenant`]) once the
+    /// search is done.
+    pub fn shared(pool: &Arc<WorkerPool>, weight: u32) -> Executor {
+        let tenant = pool.register_tenant(weight);
+        Executor {
+            workers: pool.threads(),
+            pool: Some(pool.clone()),
+            tenant,
+        }
     }
 
     /// The strictly sequential executor (the pre-parallel behaviour).
@@ -417,6 +742,12 @@ impl Executor {
 
     pub fn workers(&self) -> usize {
         self.workers.max(1)
+    }
+
+    /// The fair-share tenant this executor submits under (0 unless
+    /// built with [`Self::shared`]).
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
     }
 
     /// Apply `f` to every item, returning results in item order.
@@ -455,7 +786,7 @@ impl Executor {
         }
         match &self.pool {
             Some(pool) if n > min_chunk.max(1) && !on_pool_thread() => {
-                pool.map_ranges(n, min_chunk, &f)
+                pool.map_ranges(self.tenant, n, min_chunk, &f)
             }
             _ => vec![f(0, n)],
         }
@@ -505,8 +836,8 @@ impl Executor {
     {
         match &self.pool {
             Some(pool) if items.len() > 1 => {
-                Submitted::Pool(pool.submit_cancellable(items, f,
-                                                        cancel))
+                Submitted::Pool(pool.submit_cancellable(
+                    self.tenant, items, f, cancel))
             }
             _ => Submitted::Lazy {
                 items,
@@ -903,8 +1234,8 @@ mod tests {
     fn map_ranges_issued_against_a_busy_pool_still_completes() {
         // a data-parallel map submitted while the workers are mid-way
         // through another batch completes correctly: the helping
-        // caller churns through the chunks, and the queued claim jobs
-        // are joined once the workers free up
+        // caller churns through the chunks, and the queued batch is
+        // joined once the workers free up
         let ex = Executor::new(2);
         let items: Vec<u32> = (0..4).collect();
         let pending = ex.submit(&items, |_| {
@@ -930,5 +1261,124 @@ mod tests {
         // the pool is still usable afterwards
         let out = ex.run(&[1, 2, 3, 4], |&x| x + 1);
         assert_eq!(out, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn tenants_register_and_remove() {
+        let pool = WorkerPool::new(2);
+        let a = pool.register_tenant(0); // weight clamps to 1
+        let b = pool.register_tenant(4);
+        assert_ne!(a, b);
+        assert_ne!(a, 0, "explicit tenants never collide with the \
+                          implicit default");
+        assert_eq!(pool.tenant_weight(a), Some(1));
+        assert_eq!(pool.tenant_weight(b), Some(4));
+        pool.set_tenant_weight(b, 0);
+        assert_eq!(pool.tenant_weight(b), Some(1));
+        assert!(pool.remove_tenant(a));
+        assert!(!pool.remove_tenant(a), "double remove must refuse");
+        assert_eq!(pool.tenant_weight(a), None);
+        assert!(pool.remove_tenant(b));
+    }
+
+    #[test]
+    fn shared_executors_serve_concurrent_tenants_in_order() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let a = Executor::shared(&pool, 1);
+        let b = Executor::shared(&pool, 3);
+        assert_eq!(a.workers(), 2, "shared executor reports the \
+                                    pool's thread count");
+        assert_ne!(a.tenant(), b.tenant());
+        std::thread::scope(|s| {
+            let ra = s.spawn(|| a.run(&[1, 2, 3, 4], |&x| x * 2));
+            let rb = s.spawn(|| b.run(&[5, 6, 7], |&x| x + 1));
+            assert_eq!(ra.join().unwrap(), vec![2, 4, 6, 8]);
+            assert_eq!(rb.join().unwrap(), vec![6, 7, 8]);
+        });
+        // drained tenants can be reclaimed
+        assert!(pool.remove_tenant(a.tenant()));
+        assert!(pool.remove_tenant(b.tenant()));
+        // ...and the pool still serves the default tenant
+        assert_eq!(pool.run(&[1, 2], |&x: &i32| x * 10),
+                   vec![10, 20]);
+    }
+
+    #[test]
+    fn a_dying_tenants_unclaimed_slots_go_to_co_tenants() {
+        // tenant A's batch is cancelled mid-run (the deadline-death
+        // shape); tenant B's batch must still complete fully, and the
+        // pool must be reusable — A's unclaimed slots never wedge the
+        // scheduler
+        let pool = Arc::new(WorkerPool::new(2));
+        let a = Executor::shared(&pool, 1);
+        let b = Executor::shared(&pool, 1);
+        let stop = AtomicBool::new(false);
+        let a_items: Vec<u32> = (0..100_000).collect();
+        let b_items: Vec<u32> = (0..64).collect();
+        std::thread::scope(|s| {
+            let ha = s.spawn(|| {
+                a.submit_cancellable(
+                    &a_items,
+                    |&x| {
+                        std::thread::sleep(Duration::from_millis(1));
+                        x
+                    },
+                    || stop.load(Ordering::SeqCst),
+                )
+                .drain_partial()
+            });
+            // let A get going, then kill it mid-batch
+            std::thread::sleep(Duration::from_millis(10));
+            stop.store(true, Ordering::SeqCst);
+            let rb = s.spawn(|| b.run(&b_items, |&x| x + 1));
+            assert_eq!(rb.join().unwrap(),
+                       (1..=64).collect::<Vec<u32>>());
+            let ra = ha.join().unwrap();
+            let claimed = ra.iter().filter(|r| r.is_some()).count();
+            assert!(claimed < a_items.len(),
+                    "cancellation never bit: {claimed} claims");
+        });
+        assert!(pool.remove_tenant(a.tenant()));
+        assert!(pool.remove_tenant(b.tenant()));
+    }
+
+    #[test]
+    fn weighted_tenants_split_claims_proportionally() {
+        // two saturating tenants with weights 1 and 3 on one worker:
+        // with a single worker the pick sequence is strictly
+        // sequential, so the stride ratio inside any window is exact
+        // up to rounding. Items gate on `go` so both queues are
+        // populated before the first claim can count.
+        let pool = Arc::new(WorkerPool::new(1));
+        let a = Executor::shared(&pool, 1);
+        let b = Executor::shared(&pool, 3);
+        let counts = [AtomicUsize::new(0), AtomicUsize::new(0)];
+        let total = AtomicUsize::new(0);
+        let go = AtomicBool::new(false);
+        const WINDOW: usize = 400;
+        let items: Vec<usize> = (0..600).collect();
+        let tick = |idx: usize| {
+            while !go.load(Ordering::Acquire) {
+                std::hint::spin_loop();
+            }
+            let t = total.fetch_add(1, Ordering::SeqCst);
+            if t < WINDOW {
+                counts[idx].fetch_add(1, Ordering::SeqCst);
+            }
+        };
+        let sa = a.submit(&items, |_| tick(0));
+        let sb = b.submit(&items, |_| tick(1));
+        go.store(true, Ordering::Release);
+        sa.drain();
+        sb.drain();
+        let ca = counts[0].load(Ordering::SeqCst) as f64;
+        let cb = counts[1].load(Ordering::SeqCst) as f64;
+        // expected 100 : 300, exact up to the single item the worker
+        // may have claimed before `go`
+        assert!(ca > 0.0 && cb > 0.0, "both tenants must progress");
+        let ratio = cb / ca;
+        assert!(ratio > 2.0 && ratio < 4.5,
+                "weight-3 tenant should claim ~3x in the window: \
+                 {cb} vs {ca}");
     }
 }

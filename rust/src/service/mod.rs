@@ -1,0 +1,740 @@
+//! Multi-tenant search service: one process-wide worker pool and one
+//! content-addressed FE artifact store serving N concurrent AutoML
+//! searches.
+//!
+//! The paper frames the executor as a database-style runtime; this
+//! module makes the database move of *sharing* it. Each submitted job
+//! registers a weighted tenant on the shared [`WorkerPool`] (stride
+//! scheduling drains tenant queues proportionally to their weights),
+//! runs its search through [`VolcanoML::with_shared`], and streams
+//! incumbent improvements back over a channel. Admission control
+//! bounds the blast radius: at most `max_active` searches run at
+//! once, at most `pending_cap` queue behind them, and anything beyond
+//! that is refused outright ([`AdmitError::Saturated`]) instead of
+//! accepted and silently starved.
+//!
+//! ## The co-tenancy determinism contract
+//!
+//! A search's trajectory is a function of its own configuration and
+//! seed — never of its co-tenants. Three properties compose to give
+//! this:
+//! 1. every per-search side effect commits serially in request order
+//!    on the search's own thread (the evaluator's plan/execute/commit
+//!    split), so pool scheduling order is invisible;
+//! 2. FE artifacts are content-addressed by everything their
+//!    computation depends on (dataset identity, search seed, fit
+//!    rows, stage-prefix config), so a co-tenant publishing an
+//!    artifact first changes *when* it is computed, never *what*;
+//! 3. per-search budgets and deadlines are enforced inside the
+//!    search's own evaluator — a tenant dying mid-batch retires its
+//!    queue entries and frees the pool for everyone else.
+//!
+//! Consequently `tests/multi_tenant.rs` can assert bit-identical
+//! incumbent trajectories solo vs. under 7 co-tenants. The one knob
+//! that *does* shape trajectories is batch sizing: when a job leaves
+//! `eval_batch == 0` it follows the pool's thread count, exactly as a
+//! private pool of the same size would. Pin `eval_batch` to compare
+//! runs across differently sized pools.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::cache::{FeStore, FeTenantStats};
+use crate::coordinator::automl::{RunOutcome, SharedRuntime,
+                                 VolcanoConfig, VolcanoML};
+use crate::coordinator::evaluator::IncumbentEvent;
+use crate::coordinator::SpaceScale;
+use crate::data::dataset::Dataset;
+use crate::data::metrics::Metric;
+use crate::data::registry;
+use crate::data::synthetic::generate;
+use crate::ensemble::EnsembleMethod;
+use crate::plan::PlanKind;
+use crate::runtime::executor::{Executor, TenantId, WorkerPool};
+use crate::util::json::Json;
+use crate::util::lock;
+
+/// Sizing of the shared runtime: pool threads, FE store byte budget,
+/// and the admission-control bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Threads in the shared worker pool.
+    pub workers: usize,
+    /// Shared FE artifact store byte budget in megabytes (0 = off).
+    pub fe_cache_mb: usize,
+    /// Searches running concurrently; further admissions queue.
+    pub max_active: usize,
+    /// Bounded pending queue; admissions beyond it are refused.
+    pub pending_cap: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 4,
+            fe_cache_mb: 256,
+            max_active: 4,
+            pending_cap: 16,
+        }
+    }
+}
+
+/// One search job: which dataset, how urgent (fair-share weight), and
+/// the search knobs. Parsed from / serialised to the `serve`
+/// subcommand's JSON-lines wire format by [`JobSpec::from_json`] /
+/// [`JobSpec::to_json`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Client-chosen label echoed back in every event.
+    pub name: String,
+    /// Registry dataset name (see `volcanoml datasets`).
+    pub dataset: String,
+    /// Fair-share weight of this search's pool tenant (min 1): a
+    /// weight-2 tenant drains its queue twice as fast as a weight-1
+    /// co-tenant under saturation. Never affects the trajectory.
+    pub weight: u32,
+    pub plan: PlanKind,
+    pub scale: SpaceScale,
+    /// None = pick by task (balanced accuracy / MSE) once the
+    /// dataset is resolved.
+    pub metric: Option<Metric>,
+    pub max_evals: usize,
+    pub budget_secs: f64,
+    /// 0 follows the shared pool's thread count (see module docs).
+    pub eval_batch: usize,
+    pub super_batch: usize,
+    pub pipeline_depth: usize,
+    pub seed: u64,
+    /// Greedy-selection ensembling on top of the search.
+    pub ensemble: bool,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            name: String::new(),
+            dataset: String::new(),
+            weight: 1,
+            plan: PlanKind::CA,
+            scale: SpaceScale::Medium,
+            metric: None,
+            max_evals: 60,
+            budget_secs: f64::INFINITY,
+            eval_batch: 0,
+            super_batch: 1,
+            pipeline_depth: 1,
+            seed: 42,
+            ensemble: false,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Parse a job spec from one JSON-lines request object. `name`
+    /// and `dataset` are required; everything else falls back to
+    /// [`JobSpec::default`]. Unknown enum values are hard errors —
+    /// a typo'd plan must not silently search a different space.
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        let d = JobSpec::default();
+        let req_str = |key: &str| -> Result<String> {
+            v.get(key)
+                .and_then(|x| x.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "job spec: missing required string field {key:?}"))
+        };
+        let parse_enum = |key: &str| -> Result<Option<String>> {
+            match v.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(Json::Str(s)) => Ok(Some(s.clone())),
+                Some(other) => anyhow::bail!(
+                    "job spec: {key} must be a string, got {other:?}"),
+            }
+        };
+        let plan = match parse_enum("plan")? {
+            Some(s) => PlanKind::parse(&s).ok_or_else(
+                || anyhow::anyhow!("job spec: unknown plan {s:?}"))?,
+            None => d.plan,
+        };
+        let scale = match parse_enum("scale")? {
+            Some(s) => SpaceScale::parse(&s).ok_or_else(
+                || anyhow::anyhow!("job spec: unknown scale {s:?}"))?,
+            None => d.scale,
+        };
+        let metric = match parse_enum("metric")? {
+            Some(s) => Some(Metric::parse(&s).ok_or_else(
+                || anyhow::anyhow!("job spec: unknown metric {s:?}"))?),
+            None => None,
+        };
+        let num = |key: &str, default: f64| -> f64 {
+            v.get(key).and_then(|x| x.as_f64()).unwrap_or(default)
+        };
+        Ok(JobSpec {
+            name: req_str("name")?,
+            dataset: req_str("dataset")?,
+            weight: (num("weight", f64::from(d.weight)) as u32).max(1),
+            plan,
+            scale,
+            metric,
+            max_evals: num("evals", d.max_evals as f64) as usize,
+            budget_secs: num("budget_secs", d.budget_secs),
+            eval_batch: num("eval_batch", d.eval_batch as f64) as usize,
+            super_batch: num("super_batch", d.super_batch as f64)
+                as usize,
+            pipeline_depth: num("pipeline_depth",
+                                d.pipeline_depth as f64)
+                as usize,
+            seed: num("seed", d.seed as f64) as u64,
+            ensemble: v.get("ensemble").and_then(|x| x.as_bool())
+                .unwrap_or(d.ensemble),
+        })
+    }
+
+    /// Serialise back to the wire format. `from_json(to_json(s))`
+    /// round-trips exactly (infinite budgets are omitted — JSON has
+    /// no `inf` — and fall back to the infinite default on parse).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("weight", Json::Num(f64::from(self.weight))),
+            ("plan", Json::Str(self.plan.name().to_string())),
+            ("scale", Json::Str(self.scale.name().to_string())),
+            ("evals", Json::Num(self.max_evals as f64)),
+            ("eval_batch", Json::Num(self.eval_batch as f64)),
+            ("super_batch", Json::Num(self.super_batch as f64)),
+            ("pipeline_depth",
+             Json::Num(self.pipeline_depth as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("ensemble", Json::Bool(self.ensemble)),
+        ];
+        if let Some(m) = self.metric {
+            pairs.push(("metric", Json::Str(m.name().to_string())));
+        }
+        if self.budget_secs.is_finite() {
+            pairs.push(("budget_secs", Json::Num(self.budget_secs)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Lower to a search configuration for a resolved dataset.
+    pub fn to_config(&self, ds: &Dataset) -> VolcanoConfig {
+        VolcanoConfig {
+            plan: self.plan,
+            scale: self.scale,
+            metric: self.metric.unwrap_or(
+                if ds.task.is_classification() {
+                    Metric::BalancedAccuracy
+                } else {
+                    Metric::Mse
+                }),
+            max_evals: self.max_evals,
+            budget_secs: self.budget_secs,
+            ensemble: if self.ensemble {
+                EnsembleMethod::Selection
+            } else {
+                EnsembleMethod::None
+            },
+            eval_batch: self.eval_batch,
+            super_batch: self.super_batch,
+            pipeline_depth: self.pipeline_depth.max(1),
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+}
+
+/// Events streamed to a job's [`JobHandle`], in commit order.
+#[derive(Debug)]
+pub enum JobEvent {
+    /// The search's incumbent improved.
+    Incumbent {
+        job: u64,
+        n_evals: usize,
+        utility: f64,
+        elapsed_secs: f64,
+        config_key: String,
+    },
+    /// The search finished; terminal.
+    Done { job: u64, outcome: Box<RunOutcome> },
+    /// The search failed (bad dataset, panic, ...); terminal.
+    Failed { job: u64, error: String },
+}
+
+/// Client half of a submitted job: receives its event stream.
+pub struct JobHandle {
+    pub id: u64,
+    pub name: String,
+    rx: Receiver<JobEvent>,
+}
+
+impl JobHandle {
+    /// Next event, blocking; `None` once the stream is exhausted
+    /// (after a terminal [`JobEvent::Done`] / [`JobEvent::Failed`]).
+    pub fn next_event(&self) -> Option<JobEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the stream to completion, returning the outcome (and
+    /// discarding incumbent events — use [`Self::next_event`] to
+    /// observe those).
+    pub fn wait(self) -> Result<Box<RunOutcome>> {
+        loop {
+            match self.rx.recv() {
+                Ok(JobEvent::Done { outcome, .. }) => {
+                    return Ok(outcome);
+                }
+                Ok(JobEvent::Failed { error, .. }) => {
+                    anyhow::bail!("job {}: {error}", self.name);
+                }
+                Ok(JobEvent::Incumbent { .. }) => continue,
+                Err(_) => anyhow::bail!(
+                    "job {}: worker vanished without a terminal \
+                     event", self.name),
+            }
+        }
+    }
+}
+
+/// Why an admission was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Active and pending slots are all taken; resubmit later.
+    Saturated { active: usize, pending: usize },
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+        -> std::fmt::Result {
+        match self {
+            AdmitError::Saturated { active, pending } => write!(
+                f,
+                "service saturated: {active} active searches and \
+                 {pending} pending (resubmit later)"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+struct PendingJob {
+    id: u64,
+    spec: JobSpec,
+    /// Pre-resolved dataset (tests / embedders); None resolves
+    /// `spec.dataset` from the registry when the job starts.
+    ds: Option<Dataset>,
+    tx: Sender<JobEvent>,
+}
+
+struct SvcState {
+    active: usize,
+    pending: VecDeque<PendingJob>,
+    next_id: u64,
+}
+
+struct SvcInner {
+    pool: Arc<WorkerPool>,
+    fe_store: Option<Arc<FeStore>>,
+    max_active: usize,
+    pending_cap: usize,
+    state: Mutex<SvcState>,
+    idle_cv: Condvar,
+}
+
+/// The process-wide multi-tenant search runtime (see module docs).
+pub struct SearchService {
+    inner: Arc<SvcInner>,
+}
+
+impl SearchService {
+    pub fn new(cfg: ServiceConfig) -> SearchService {
+        let fe_store = if cfg.fe_cache_mb == 0 {
+            None
+        } else {
+            Some(Arc::new(FeStore::new(
+                cfg.fe_cache_mb.saturating_mul(1024 * 1024))))
+        };
+        SearchService {
+            inner: Arc::new(SvcInner {
+                pool: Arc::new(WorkerPool::new(cfg.workers.max(1))),
+                fe_store,
+                max_active: cfg.max_active.max(1),
+                pending_cap: cfg.pending_cap,
+                state: Mutex::new(SvcState {
+                    active: 0,
+                    pending: VecDeque::new(),
+                    next_id: 1,
+                }),
+                idle_cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// The shared worker pool (e.g. to size client-side batching).
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.inner.pool
+    }
+
+    /// The shared FE store, when one is attached.
+    pub fn fe_store(&self) -> Option<&Arc<FeStore>> {
+        self.inner.fe_store.as_ref()
+    }
+
+    /// Per-tenant slice of the shared FE store's counters (all zero
+    /// when no store is attached or the tenant never ran).
+    pub fn tenant_fe_stats(&self, tenant: TenantId) -> FeTenantStats {
+        self.inner
+            .fe_store
+            .as_ref()
+            .map(|s| s.tenant_stats(tenant))
+            .unwrap_or_default()
+    }
+
+    /// (active, pending) job counts right now.
+    pub fn load(&self) -> (usize, usize) {
+        let st = lock(&self.inner.state);
+        (st.active, st.pending.len())
+    }
+
+    /// Submit a job whose dataset is resolved from the registry by
+    /// name when it starts. Refused with [`AdmitError::Saturated`]
+    /// when both the active slots and the pending queue are full.
+    pub fn submit(&self, spec: JobSpec)
+        -> Result<JobHandle, AdmitError> {
+        self.admit(spec, None)
+    }
+
+    /// Submit a job on an explicitly provided dataset (bypasses the
+    /// registry — the spec's `dataset` field is advisory).
+    pub fn submit_on(&self, spec: JobSpec, ds: Dataset)
+        -> Result<JobHandle, AdmitError> {
+        self.admit(spec, Some(ds))
+    }
+
+    fn admit(&self, spec: JobSpec, ds: Option<Dataset>)
+        -> Result<JobHandle, AdmitError> {
+        let (tx, rx) = channel();
+        let name = spec.name.clone();
+        let mut st = lock(&self.inner.state);
+        let id = st.next_id;
+        st.next_id += 1;
+        if st.active < self.inner.max_active {
+            st.active += 1;
+            drop(st);
+            let inner = self.inner.clone();
+            let job = PendingJob { id, spec, ds, tx };
+            thread::spawn(move || worker_loop(&inner, job));
+        } else if st.pending.len() < self.inner.pending_cap {
+            st.pending.push_back(PendingJob { id, spec, ds, tx });
+        } else {
+            return Err(AdmitError::Saturated {
+                active: st.active,
+                pending: st.pending.len(),
+            });
+        }
+        Ok(JobHandle { id, name, rx })
+    }
+
+    /// Block until no job is active or pending (the `serve` loop's
+    /// clean-shutdown barrier).
+    pub fn wait_idle(&self) {
+        let mut st = lock(&self.inner.state);
+        while st.active > 0 || !st.pending.is_empty() {
+            st = self
+                .inner
+                .idle_cv
+                .wait(st)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Run one job, then keep draining the pending queue from this same
+/// thread until it is empty (the active count is held, not re-taken,
+/// so `max_active` bounds *threads*, not submissions).
+fn worker_loop(inner: &Arc<SvcInner>, first: PendingJob) {
+    let mut job = first;
+    loop {
+        run_job(inner, job);
+        let mut st = lock(&inner.state);
+        match st.pending.pop_front() {
+            Some(next) => {
+                drop(st);
+                job = next;
+            }
+            None => {
+                st.active -= 1;
+                if st.active == 0 {
+                    inner.idle_cv.notify_all();
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn run_job(inner: &Arc<SvcInner>, job: PendingJob) {
+    let PendingJob { id, spec, ds, tx } = job;
+    let ds = match ds {
+        Some(ds) => ds,
+        None => match registry::by_name(&spec.dataset) {
+            Some(profile) => generate(&profile),
+            None => {
+                let _ = tx.send(JobEvent::Failed {
+                    job: id,
+                    error: format!("unknown dataset {:?} (see \
+                                    `volcanoml datasets`)",
+                                   spec.dataset),
+                });
+                return;
+            }
+        },
+    };
+    let cfg = spec.to_config(&ds);
+    // one fair-share tenant per job; its queue drains at
+    // weight-proportional speed and dies with the job
+    let executor = Executor::shared(&inner.pool, spec.weight.max(1));
+    let tenant = executor.tenant();
+    let sink_tx = Mutex::new(tx.clone());
+    let system = VolcanoML::new(cfg)
+        .with_shared(SharedRuntime {
+            executor: Some(executor),
+            fe_store: inner.fe_store.clone(),
+        })
+        .with_incumbent_sink(Arc::new(move |e: &IncumbentEvent| {
+            let _ = lock(&sink_tx).send(JobEvent::Incumbent {
+                job: id,
+                n_evals: e.n_evals,
+                utility: e.utility,
+                elapsed_secs: e.elapsed_secs,
+                config_key: e.config.key(),
+            });
+        }));
+    // a panicking search must not take the service thread (or its
+    // co-tenants) down with it: surface it as a Failed event
+    let result =
+        catch_unwind(AssertUnwindSafe(|| system.run(&ds, None)));
+    match result {
+        Ok(Ok(outcome)) => {
+            let _ = tx.send(JobEvent::Done {
+                job: id,
+                outcome: Box::new(outcome),
+            });
+        }
+        Ok(Err(e)) => {
+            let _ = tx.send(JobEvent::Failed {
+                job: id,
+                error: format!("{e:#}"),
+            });
+        }
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "search panicked".to_string());
+            let _ = tx.send(JobEvent::Failed {
+                job: id,
+                error: format!("panic: {msg}"),
+            });
+        }
+    }
+    // the search joined every batch before returning, so the tenant's
+    // queue is empty and removal succeeds; a leaked tenant would only
+    // cost a HashMap entry, so a refusal is not fatal
+    let _ = inner.pool.remove_tenant(tenant);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Task;
+    use crate::data::synthetic::{GenKind, Profile};
+
+    fn tiny_ds(seed: u64) -> Dataset {
+        generate(&Profile {
+            name: format!("svc-{seed}"),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 1.8 },
+            n: 200,
+            d: 5,
+            noise: 0.04,
+            imbalance: 1.0,
+            redundant: 1,
+            wild_scales: false,
+            seed,
+        })
+    }
+
+    fn quick_spec(name: &str, seed: u64) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            dataset: "synthetic".to_string(),
+            max_evals: 10,
+            eval_batch: 2,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn spec_json_round_trips_exactly() {
+        let spec = JobSpec {
+            name: "t1".into(),
+            dataset: "quake".into(),
+            weight: 3,
+            plan: PlanKind::CC,
+            scale: SpaceScale::Large,
+            metric: Some(Metric::F1Macro),
+            max_evals: 80,
+            budget_secs: 12.5,
+            eval_batch: 4,
+            super_batch: 0,
+            pipeline_depth: 2,
+            seed: 99,
+            ensemble: true,
+        };
+        let round = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, round);
+        // infinite budget is omitted on the wire and restored by the
+        // default on parse
+        let inf = JobSpec { budget_secs: f64::INFINITY, ..spec };
+        assert!(inf.to_json().get("budget_secs").is_none());
+        let back = JobSpec::from_json(&inf.to_json()).unwrap();
+        assert_eq!(inf, back);
+    }
+
+    #[test]
+    fn spec_parse_rejects_bad_input() {
+        let missing = Json::parse(r#"{"dataset": "quake"}"#).unwrap();
+        assert!(JobSpec::from_json(&missing).is_err(), "no name");
+        let bad_plan = Json::parse(
+            r#"{"name": "x", "dataset": "quake", "plan": "XX"}"#)
+            .unwrap();
+        assert!(JobSpec::from_json(&bad_plan).is_err());
+        let bad_metric = Json::parse(
+            r#"{"name": "x", "dataset": "quake", "metric": "vibes"}"#)
+            .unwrap();
+        assert!(JobSpec::from_json(&bad_metric).is_err());
+    }
+
+    #[test]
+    fn minimal_spec_uses_defaults() {
+        let v = Json::parse(r#"{"name": "j", "dataset": "quake"}"#)
+            .unwrap();
+        let spec = JobSpec::from_json(&v).unwrap();
+        let d = JobSpec::default();
+        assert_eq!(spec.weight, d.weight);
+        assert_eq!(spec.plan, d.plan);
+        assert_eq!(spec.metric, None);
+        assert_eq!(spec.max_evals, d.max_evals);
+        assert!(spec.budget_secs.is_infinite());
+    }
+
+    #[test]
+    fn service_runs_jobs_and_streams_incumbents() {
+        let svc = SearchService::new(ServiceConfig {
+            workers: 2,
+            fe_cache_mb: 16,
+            max_active: 2,
+            pending_cap: 4,
+        });
+        let h1 = svc.submit_on(quick_spec("a", 1), tiny_ds(1))
+            .unwrap();
+        let h2 = svc.submit_on(quick_spec("b", 2), tiny_ds(2))
+            .unwrap();
+        assert_ne!(h1.id, h2.id);
+        // both streams end in Done, with at least one incumbent each
+        let mut seen = 0usize;
+        while let Some(ev) = h1.next_event() {
+            match ev {
+                JobEvent::Incumbent { job, .. } => {
+                    assert_eq!(job, h1.id);
+                    seen += 1;
+                }
+                JobEvent::Done { job, outcome } => {
+                    assert_eq!(job, h1.id);
+                    assert!(outcome.n_evals <= 10);
+                    assert_eq!(outcome.valid_curve.len(), seen,
+                               "stream mirrors the curve");
+                }
+                JobEvent::Failed { error, .. } => {
+                    panic!("job a failed: {error}");
+                }
+            }
+        }
+        assert!(seen >= 1, "no incumbent events");
+        let out2 = h2.wait().unwrap();
+        assert!(out2.best_config.is_some());
+        svc.wait_idle();
+        assert_eq!(svc.load(), (0, 0));
+    }
+
+    #[test]
+    fn unknown_dataset_fails_cleanly() {
+        let svc = SearchService::new(ServiceConfig {
+            workers: 1,
+            fe_cache_mb: 0,
+            max_active: 1,
+            pending_cap: 0,
+        });
+        let h = svc
+            .submit(JobSpec {
+                name: "ghost".into(),
+                dataset: "no-such-dataset".into(),
+                ..Default::default()
+            })
+            .unwrap();
+        match h.wait() {
+            Err(e) => assert!(
+                format!("{e:#}").contains("no-such-dataset"),
+                "{e:#}"),
+            Ok(_) => panic!("expected failure"),
+        }
+        svc.wait_idle();
+    }
+
+    #[test]
+    fn admission_control_queues_then_refuses() {
+        // one active slot, one pending slot: the third concurrent
+        // submission must be refused, and after the backlog drains a
+        // resubmission is accepted
+        let svc = SearchService::new(ServiceConfig {
+            workers: 1,
+            fe_cache_mb: 0,
+            max_active: 1,
+            pending_cap: 1,
+        });
+        // a search of this size runs for far longer than the
+        // microseconds the two follow-up submissions take
+        let slow = JobSpec {
+            max_evals: 60,
+            ..quick_spec("slow", 3)
+        };
+        let h1 = svc.submit_on(slow, tiny_ds(3)).unwrap();
+        let h2 = svc.submit_on(quick_spec("q", 4), tiny_ds(4))
+            .unwrap();
+        let refused = svc.submit_on(quick_spec("r", 5), tiny_ds(5));
+        match refused {
+            Err(AdmitError::Saturated { active, pending }) => {
+                assert_eq!(active, 1);
+                assert_eq!(pending, 1);
+            }
+            Ok(_) => panic!("third job must be refused"),
+        }
+        h1.wait().unwrap();
+        h2.wait().unwrap();
+        svc.wait_idle();
+        let h3 = svc.submit_on(quick_spec("again", 5), tiny_ds(5))
+            .unwrap();
+        h3.wait().unwrap();
+        svc.wait_idle();
+        assert_eq!(svc.load(), (0, 0));
+    }
+}

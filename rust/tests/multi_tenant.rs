@@ -1,0 +1,289 @@
+//! Multi-tenant runtime tests: N concurrent searches on one shared
+//! worker pool + one shared FE artifact store must each produce the
+//! *bit-identical* trajectory they would produce running alone —
+//! co-tenancy is a pure wall-clock knob. Three mechanisms carry the
+//! contract (see `service::mod` docs): per-search serial commit
+//! order, content-addressed FE artifacts, and per-search budget
+//! isolation. The tests here pin each one, plus the cross-search FE
+//! dedup that makes sharing the store worthwhile.
+
+use std::sync::Arc;
+
+use volcanoml::blocks::Objective;
+use volcanoml::cache::FeStore;
+use volcanoml::coordinator::automl::{RunOutcome, VolcanoML};
+use volcanoml::coordinator::evaluator::PipelineEvaluator;
+use volcanoml::coordinator::{joint_space, pipeline_for, roster_for,
+                             SpaceScale};
+use volcanoml::data::metrics::Metric;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::{Dataset, Split, Task};
+use volcanoml::plan::PlanKind;
+use volcanoml::runtime::executor::{Executor, WorkerPool};
+use volcanoml::service::{JobEvent, JobSpec, SearchService,
+                         ServiceConfig};
+use volcanoml::space::{Config, Value};
+use volcanoml::util::rng::Rng;
+
+fn blob_ds(seed: u64, n: usize) -> Dataset {
+    generate(&Profile {
+        name: format!("mt-{seed}"),
+        task: Task::Classification { n_classes: 2 },
+        gen: GenKind::Blobs { sep: 1.7 },
+        n,
+        d: 6,
+        noise: 0.05,
+        imbalance: 1.2,
+        redundant: 1,
+        wild_scales: false,
+        seed,
+    })
+}
+
+fn spec(name: &str, seed: u64, super_batch: usize,
+        pipeline_depth: usize) -> JobSpec {
+    JobSpec {
+        name: name.to_string(),
+        dataset: "synthetic".to_string(),
+        plan: PlanKind::CA,
+        scale: SpaceScale::Small,
+        max_evals: 14,
+        eval_batch: 2, // pinned: batch size shapes the trajectory
+        super_batch,
+        pipeline_depth,
+        seed,
+        ..JobSpec::default()
+    }
+}
+
+/// Solo baseline: the same search the service would run, on a
+/// private pool of the same size and a private FE store.
+fn solo_run(spec: &JobSpec, ds: &Dataset, workers: usize)
+    -> RunOutcome {
+    let mut cfg = spec.to_config(ds);
+    cfg.workers = workers;
+    cfg.fe_cache_mb = 64;
+    VolcanoML::new(cfg).run(ds, None).unwrap()
+}
+
+/// Curve utilities as raw bits — wall-clock fields are the only ones
+/// allowed to differ between solo and co-tenant runs.
+fn curve_bits(out: &RunOutcome) -> Vec<u64> {
+    out.valid_curve.iter().map(|(_, u)| u.to_bits()).collect()
+}
+
+/// The tentpole invariant: a fixed-seed search submitted alongside 7
+/// co-tenants (varied seeds and weights, all live on the shared pool
+/// at once) streams and returns exactly the trajectory of the same
+/// search run alone — at a synchronous batching config and at a
+/// super-batched + pipelined one.
+#[test]
+fn search_trajectory_is_invariant_to_seven_co_tenants() {
+    let ds = blob_ds(7, 240);
+    for (super_batch, pipeline_depth) in [(1, 1), (0, 2)] {
+        let main = spec("main", 4242, super_batch, pipeline_depth);
+        let solo = solo_run(&main, &ds, 3);
+
+        let svc = SearchService::new(ServiceConfig {
+            workers: 3,
+            fe_cache_mb: 64,
+            max_active: 8,
+            pending_cap: 8,
+        });
+        let mut co = Vec::new();
+        for i in 0..7u64 {
+            let mut s = spec(&format!("co{i}"), 100 + i,
+                             super_batch, pipeline_depth);
+            s.weight = 1 + (i % 3) as u32;
+            co.push(svc.submit_on(s, blob_ds(50 + i, 200)).unwrap());
+        }
+        let h = svc.submit_on(main, ds.clone()).unwrap();
+
+        let mut stream: Vec<u64> = Vec::new();
+        let mut outcome = None;
+        while let Some(ev) = h.next_event() {
+            match ev {
+                JobEvent::Incumbent { utility, .. } => {
+                    stream.push(utility.to_bits());
+                }
+                JobEvent::Done { outcome: o, .. } => {
+                    outcome = Some(o);
+                    break;
+                }
+                JobEvent::Failed { error, .. } => {
+                    panic!("main job failed: {error}");
+                }
+            }
+        }
+        let got = outcome.expect("main job never finished");
+
+        let tag = format!("super_batch={super_batch} \
+                           depth={pipeline_depth}");
+        assert_eq!(got.best_valid_utility.to_bits(),
+                   solo.best_valid_utility.to_bits(),
+                   "{tag}: incumbent diverged under co-tenancy \
+                    ({} vs {})", got.best_valid_utility,
+                   solo.best_valid_utility);
+        assert_eq!(got.n_evals, solo.n_evals, "{tag}");
+        assert_eq!(got.best_config, solo.best_config, "{tag}");
+        assert_eq!(curve_bits(&got), curve_bits(&solo),
+                   "{tag}: improvement curve diverged");
+        // the streamed incumbent events are the curve, live
+        assert_eq!(stream, curve_bits(&solo),
+                   "{tag}: streamed incumbents != final curve");
+
+        for h in co {
+            h.wait().unwrap();
+        }
+        svc.wait_idle();
+    }
+}
+
+/// Cross-search FE dedup, exact counts: two evaluators (distinct
+/// fair-share tenants on one pool, one shared store) evaluate the
+/// same FE prefix; the second search refits nothing — every lookup
+/// hits the artifacts the first search published.
+#[test]
+fn second_tenant_reuses_first_tenants_fe_artifacts() {
+    let ds = blob_ds(21, 240);
+    let pipeline = pipeline_for(SpaceScale::Small, false, false);
+    let algos = roster_for(SpaceScale::Small, ds.task, false);
+    let space = joint_space(&pipeline, &algos);
+    let pool = Arc::new(WorkerPool::new(4));
+    let store = Arc::new(FeStore::new(64 << 20));
+
+    let fe = Config::new()
+        .with("fe:transformer", Value::C("select_percentile".into()))
+        .with("fe:transformer.select_percentile:percentile",
+              Value::F(0.5));
+    let reqs: Vec<(Config, f64)> = (0..6)
+        .map(|i| {
+            let cfg = space.default_config().merged(&fe).merged(
+                &Config::new().with("alg.random_forest:n_estimators",
+                                    Value::I(20 + i as i64)));
+            (cfg, 1.0)
+        })
+        .collect();
+
+    let run = |seed: u64| {
+        let split = Split::stratified(&ds, &mut Rng::new(95));
+        let ex = Executor::shared(&pool, 1);
+        let tenant = ex.tenant();
+        let mut ev = PipelineEvaluator::new(
+            &ds, split, Metric::BalancedAccuracy, &pipeline, &algos,
+            None, seed)
+            .with_executor(ex)
+            .with_fe_store(store.clone());
+        let us = ev.evaluate_batch(&reqs).unwrap();
+        assert_eq!(us.len(), 6);
+        tenant
+    };
+
+    let ta = run(96);
+    let after_a = store.stats();
+    assert_eq!(after_a.misses, 1,
+               "one shared FE prefix => one fit: {after_a:?}");
+    assert_eq!(after_a.published, 1, "{after_a:?}");
+    assert_eq!(after_a.hits + after_a.coalesced, 5, "{after_a:?}");
+
+    let tb = run(96);
+    let after_b = store.stats();
+    assert_eq!(after_b.misses, 1,
+               "second tenant refitted a cached artifact: \
+                {after_b:?}");
+    assert_eq!(after_b.published, 1, "{after_b:?}");
+    assert_eq!(after_b.hits + after_b.coalesced, 11, "{after_b:?}");
+
+    let sa = store.tenant_stats(ta);
+    let sb = store.tenant_stats(tb);
+    assert_ne!(ta, tb, "each executor gets its own tenant");
+    assert_eq!(sa.misses, 1, "{sa:?}");
+    assert_eq!(sa.served(), 5, "{sa:?}");
+    assert_eq!(sb.misses, 0, "tenant B computed nothing: {sb:?}");
+    assert_eq!(sb.total(), 6, "{sb:?}");
+}
+
+/// Service-level concurrent dedup: two identical searches running at
+/// once compute each FE artifact exactly once between them —
+/// `misses`/`published` match a solo run's, which is deterministic
+/// under co-tenancy (coalescing turns the race on an in-flight fit
+/// into a wait, and at 64 MB nothing evicts). Per-tenant hit counts
+/// are *not* asserted exactly: a deeper cached prefix legitimately
+/// short-circuits the backward probe, so they depend on timing.
+#[test]
+fn concurrent_identical_searches_share_every_fe_fit() {
+    let ds = blob_ds(9, 240);
+    let sp = spec("dedup", 777, 1, 1);
+    let solo = solo_run(&sp, &ds, 2);
+    let sfe = solo.eval_stats.fe.expect("solo run attached a store");
+    assert!(sfe.misses > 0, "baseline computed no FE artifacts");
+
+    let svc = SearchService::new(ServiceConfig {
+        workers: 2,
+        fe_cache_mb: 64,
+        max_active: 2,
+        pending_cap: 2,
+    });
+    let mut a = sp.clone();
+    a.name = "a".to_string();
+    let mut b = sp.clone();
+    b.name = "b".to_string();
+    let ha = svc.submit_on(a, ds.clone()).unwrap();
+    let hb = svc.submit_on(b, ds.clone()).unwrap();
+    ha.wait().unwrap();
+    hb.wait().unwrap();
+    svc.wait_idle();
+
+    let joint = svc.fe_store().expect("service store").stats();
+    assert_eq!(joint.evictions, 0, "{joint:?}");
+    assert_eq!(joint.misses, sfe.misses,
+               "two identical searches must compute exactly the solo \
+                set of artifacts: {joint:?} vs solo {sfe:?}");
+    assert_eq!(joint.published, sfe.published,
+               "{joint:?} vs solo {sfe:?}");
+
+    // both jobs (tenants 1 and 2, in admission order) touched the
+    // store, and the per-tenant slices account for the global totals
+    let t1 = svc.tenant_fe_stats(1);
+    let t2 = svc.tenant_fe_stats(2);
+    assert!(t1.total() > 0, "{t1:?}");
+    assert!(t2.total() > 0, "{t2:?}");
+    assert_eq!(t1.misses + t2.misses, joint.misses);
+    assert_eq!(t1.total() + t2.total(),
+               joint.hits + joint.coalesced + joint.misses);
+}
+
+/// Budget isolation: a co-tenant burning a tiny wall-clock deadline
+/// dies early without perturbing a budget-by-evals search sharing
+/// the pool — whose outcome stays bit-identical to its solo run.
+#[test]
+fn a_deadline_death_next_door_changes_nothing() {
+    let ds = blob_ds(31, 240);
+    let well = spec("well", 4242, 1, 1);
+    let solo = solo_run(&well, &ds, 3);
+
+    let svc = SearchService::new(ServiceConfig {
+        workers: 3,
+        fe_cache_mb: 64,
+        max_active: 4,
+        pending_cap: 4,
+    });
+    let mut dying = spec("dying", 555, 1, 1);
+    dying.max_evals = 100_000;
+    dying.budget_secs = 0.05;
+    dying.weight = 2;
+    let hd = svc.submit_on(dying, blob_ds(32, 400)).unwrap();
+    let hw = svc.submit_on(well, ds.clone()).unwrap();
+
+    let died = hd.wait().unwrap();
+    let out = hw.wait().unwrap();
+    svc.wait_idle();
+
+    assert!(died.n_evals < 100_000,
+            "50ms deadline never fired ({} evals)", died.n_evals);
+    assert_eq!(out.best_valid_utility.to_bits(),
+               solo.best_valid_utility.to_bits(),
+               "co-tenant's death changed the incumbent");
+    assert_eq!(out.n_evals, solo.n_evals);
+    assert_eq!(curve_bits(&out), curve_bits(&solo));
+}
