@@ -267,10 +267,32 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let _ = o.flush();
     };
 
-    let mut forwarders = Vec::new();
+    let mut forwarders: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // long-running server: reap forwarders whose jobs have finished
+    // so the handle list stays bounded by the number of *live* jobs
+    let reap = |forwarders: &mut Vec<std::thread::JoinHandle<()>>| {
+        let mut i = 0;
+        while i < forwarders.len() {
+            if forwarders[i].is_finished() {
+                let _ = forwarders.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+    };
     let stdin = std::io::stdin();
+    let mut read_err: Option<std::io::Error> = None;
     for line in stdin.lock().lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                // break, don't return: accepted jobs must still drain
+                // through the shutdown path below before the error
+                // surfaces, so the event stream stays well-formed
+                read_err = Some(e);
+                break;
+            }
+        };
         let line = line.trim();
         if line.is_empty() {
             continue;
@@ -352,6 +374,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                         let _ = o.flush();
                     }
                 }));
+                reap(&mut forwarders);
             }
             Err(e) => {
                 emit(&out, Json::obj(vec![
@@ -363,7 +386,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     }
 
-    // stdin closed: drain every accepted job, then announce shutdown
+    // stdin closed (or failed): drain every accepted job, then
+    // announce shutdown — only after that may a read error surface
     for f in forwarders {
         let _ = f.join();
     }
@@ -371,7 +395,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     emit(&out, Json::obj(vec![
         ("event", Json::Str("shutdown".into())),
     ]));
-    Ok(())
+    match read_err {
+        Some(e) => Err(e.into()),
+        None => Ok(()),
+    }
 }
 
 fn cmd_datasets(args: &Args) -> anyhow::Result<()> {

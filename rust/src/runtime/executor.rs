@@ -71,6 +71,13 @@ pub type TenantId = u64;
 /// min-pass rule hands out claims in weight proportion.
 const STRIDE_ONE: u64 = 1 << 20;
 
+/// Largest accepted fair-share weight. Beyond this the per-claim
+/// stride would truncate to zero and the tenant's virtual time would
+/// never advance — it would stay the min-pass tenant forever and
+/// starve every co-tenant — so [`WorkerPool::register_tenant`] and
+/// [`WorkerPool::set_tenant_weight`] clamp into `1..=MAX_TENANT_WEIGHT`.
+pub const MAX_TENANT_WEIGHT: u32 = STRIDE_ONE as u32;
+
 thread_local! {
     /// True on threads spawned by a [`WorkerPool`]. A data-parallel
     /// [`Executor::map_ranges`] issued *from* a pool worker (an
@@ -196,42 +203,71 @@ struct PoolInner {
 
 type Picked = (Arc<dyn PoolTask>, Arc<Latch>);
 
+/// Virtual-time advance of one claim for a tenant of this weight.
+/// Never zero — a zero stride would freeze the tenant's pass at the
+/// minimum and starve every co-tenant — so the effective weight range
+/// is `1..=STRIDE_ONE` (see [`MAX_TENANT_WEIGHT`]).
+fn stride(weight: u32) -> u64 {
+    (STRIDE_ONE / u64::from(weight.max(1))).max(1)
+}
+
 /// Stride-scheduling pick: prune retired front batches, select the
 /// min-pass tenant with runnable work (ties break on the smaller
 /// tenant id), advance its virtual time, and hand out its front
-/// batch. The pick is counted on the latch *under the scheduler
-/// lock*, so a handle that has seen `retired && active == 0` knows no
-/// further pick of its batch can exist.
+/// batch. Retirement check and pick count happen under **one** latch
+/// lock acquisition (while the scheduler lock is held, so the queue
+/// entry cannot be unlinked underneath): either the count lands
+/// before `retired` is observable — and a handle's `wait_done` then
+/// blocks until the pick posts back — or the batch is already retired
+/// and is popped instead of picked. A handle that has seen
+/// `retired && active == 0` therefore knows no further pick of its
+/// batch can ever exist.
 fn pick_task(st: &mut SchedState) -> Option<Picked> {
-    let mut best: Option<(u64, TenantId)> = None;
-    for (&id, t) in st.tenants.iter_mut() {
-        while t.queue.front().is_some_and(|b| b.latch.is_retired()) {
-            t.queue.pop_front();
+    loop {
+        let mut best: Option<(u64, TenantId)> = None;
+        for (&id, t) in st.tenants.iter_mut() {
+            while t.queue.front().is_some_and(|b| b.latch.is_retired())
+            {
+                t.queue.pop_front();
+            }
+            if t.queue.is_empty() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bp, bid)) => {
+                    t.pass < bp || (t.pass == bp && id < bid)
+                }
+            };
+            if better {
+                best = Some((t.pass, id));
+            }
         }
-        if t.queue.is_empty() {
-            continue;
-        }
-        let better = match best {
-            None => true,
-            Some((bp, bid)) => {
-                t.pass < bp || (t.pass == bp && id < bid)
+        let (_, id) = best?;
+        let vnow = st.vnow;
+        let t = st.tenants.get_mut(&id).expect("picked tenant exists");
+        let counted = {
+            let front =
+                t.queue.front().expect("picked tenant has work");
+            let mut latch = lock(&front.latch.state);
+            if latch.retired {
+                false
+            } else {
+                latch.active += 1;
+                true
             }
         };
-        if better {
-            best = Some((t.pass, id));
+        if !counted {
+            // retired between the prune above and the pick: drop it
+            // and redo tenant selection from scratch
+            t.queue.pop_front();
+            continue;
         }
+        st.vnow = vnow.max(t.pass);
+        t.pass = t.pass.saturating_add(stride(t.weight));
+        let front = t.queue.front().expect("picked tenant has work");
+        return Some((front.task.clone(), front.latch.clone()));
     }
-    let (_, id) = best?;
-    let vnow = st.vnow;
-    let t = st.tenants.get_mut(&id).expect("picked tenant exists");
-    st.vnow = vnow.max(t.pass);
-    t.pass = t
-        .pass
-        .saturating_add(STRIDE_ONE / u64::from(t.weight.max(1)));
-    let front = t.queue.front().expect("picked tenant has work");
-    let picked: Picked = (front.task.clone(), front.latch.clone());
-    lock(&picked.1.state).active += 1;
-    Some(picked)
 }
 
 fn worker_loop(inner: &PoolInner) {
@@ -302,9 +338,10 @@ impl WorkerPool {
     }
 
     /// Register a new fair-share tenant with the given weight
-    /// (clamped to ≥ 1). Under saturating load the tenant's share of
-    /// the pool's claims converges to `weight / Σ weights`. The
-    /// entry persists until [`Self::remove_tenant`].
+    /// (clamped into `1..=`[`MAX_TENANT_WEIGHT`]). Under saturating
+    /// load the tenant's share of the pool's claims converges to
+    /// `weight / Σ weights`. The entry persists until
+    /// [`Self::remove_tenant`].
     pub fn register_tenant(&self, weight: u32) -> TenantId {
         let id = self.inner.next_tenant.fetch_add(1, Ordering::Relaxed);
         let mut st = lock(&self.inner.sched);
@@ -312,7 +349,7 @@ impl WorkerPool {
         st.tenants.insert(
             id,
             TenantState {
-                weight: weight.max(1),
+                weight: weight.clamp(1, MAX_TENANT_WEIGHT),
                 pass,
                 queue: VecDeque::new(),
             },
@@ -320,12 +357,12 @@ impl WorkerPool {
         id
     }
 
-    /// Update a tenant's fair-share weight (clamped to ≥ 1). Takes
-    /// effect from the next pick.
+    /// Update a tenant's fair-share weight (clamped into
+    /// `1..=`[`MAX_TENANT_WEIGHT`]). Takes effect from the next pick.
     pub fn set_tenant_weight(&self, tenant: TenantId, weight: u32) {
         let mut st = lock(&self.inner.sched);
         if let Some(t) = st.tenants.get_mut(&tenant) {
-            t.weight = weight.max(1);
+            t.weight = weight.clamp(1, MAX_TENANT_WEIGHT);
         }
     }
 
@@ -431,8 +468,10 @@ impl WorkerPool {
             // `PoolBatch` handle re-establishes the bound: its join
             // (in `drain_partial`, and failing that in Drop) first
             // waits until the batch is retired with zero in-flight
-            // picks — every pick is counted on the latch *under the
-            // scheduler lock*, before any worker sees the task — and
+            // picks — every pick is counted on the latch under the
+            // scheduler lock, *atomically with the not-retired check*
+            // (one latch-lock hold in `pick_task`), before any worker
+            // sees the task — and
             // then removes the queue's own Arc clone under that same
             // lock. When the join returns, neither a queue entry nor
             // a worker clone of this state survives: workers drop
@@ -1279,6 +1318,41 @@ mod tests {
         assert!(!pool.remove_tenant(a), "double remove must refuse");
         assert_eq!(pool.tenant_weight(a), None);
         assert!(pool.remove_tenant(b));
+    }
+
+    #[test]
+    fn oversized_weights_clamp_and_stride_never_zeroes() {
+        // STRIDE_ONE / weight truncates to 0 past 2^20; a zero stride
+        // would pin the tenant at min-pass forever and starve every
+        // co-tenant, so both entry points clamp and stride() floors
+        assert_eq!(stride(0), STRIDE_ONE);
+        assert_eq!(stride(MAX_TENANT_WEIGHT), 1);
+        assert!(stride(u32::MAX) >= 1);
+        let pool = WorkerPool::new(1);
+        let t = pool.register_tenant(u32::MAX);
+        assert_eq!(pool.tenant_weight(t), Some(MAX_TENANT_WEIGHT));
+        pool.set_tenant_weight(t, 0);
+        assert_eq!(pool.tenant_weight(t), Some(1));
+        pool.set_tenant_weight(t, u32::MAX);
+        assert_eq!(pool.tenant_weight(t), Some(MAX_TENANT_WEIGHT));
+        assert!(pool.remove_tenant(t));
+    }
+
+    #[test]
+    fn helper_retirement_races_worker_picks_safely() {
+        // regression for the pick/retire TOCTOU: `help()` retires the
+        // batch from the submitting thread the instant the cursor is
+        // exhausted, racing workers mid-pick. Tiny fast batches in a
+        // tight loop maximise the window in which a stale pick could
+        // outlive the drain; the pick count and the retired check now
+        // share one latch-lock hold, so every iteration must join
+        // cleanly with all slots accounted for.
+        let ex = Executor::new(4);
+        for round in 0..300 {
+            let parts = ex.map_ranges(8, 1, |lo, hi| hi - lo);
+            assert_eq!(parts.iter().sum::<usize>(), 8,
+                       "round {round}");
+        }
     }
 
     #[test]

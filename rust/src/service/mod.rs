@@ -56,7 +56,8 @@ use crate::data::registry;
 use crate::data::synthetic::generate;
 use crate::ensemble::EnsembleMethod;
 use crate::plan::PlanKind;
-use crate::runtime::executor::{Executor, TenantId, WorkerPool};
+use crate::runtime::executor::{Executor, TenantId, WorkerPool,
+                               MAX_TENANT_WEIGHT};
 use crate::util::json::Json;
 use crate::util::lock;
 
@@ -95,9 +96,10 @@ pub struct JobSpec {
     pub name: String,
     /// Registry dataset name (see `volcanoml datasets`).
     pub dataset: String,
-    /// Fair-share weight of this search's pool tenant (min 1): a
-    /// weight-2 tenant drains its queue twice as fast as a weight-1
-    /// co-tenant under saturation. Never affects the trajectory.
+    /// Fair-share weight of this search's pool tenant (clamped into
+    /// `1..=MAX_TENANT_WEIGHT` at parse time): a weight-2 tenant
+    /// drains its queue twice as fast as a weight-1 co-tenant under
+    /// saturation. Never affects the trajectory.
     pub weight: u32,
     pub plan: PlanKind,
     pub scale: SpaceScale,
@@ -178,7 +180,11 @@ impl JobSpec {
         Ok(JobSpec {
             name: req_str("name")?,
             dataset: req_str("dataset")?,
-            weight: (num("weight", f64::from(d.weight)) as u32).max(1),
+            // clamp both ends: a zero/negative weight would never be
+            // scheduled, and an overlarge one would zero the stride
+            // and starve every co-tenant
+            weight: (num("weight", f64::from(d.weight)) as u32)
+                .clamp(1, MAX_TENANT_WEIGHT),
             plan,
             scale,
             metric,
@@ -622,6 +628,21 @@ mod tests {
             r#"{"name": "x", "dataset": "quake", "metric": "vibes"}"#)
             .unwrap();
         assert!(JobSpec::from_json(&bad_metric).is_err());
+    }
+
+    #[test]
+    fn spec_parse_clamps_weight_to_schedulable_range() {
+        // an oversized wire weight would zero the scheduler stride
+        // and starve co-tenants; the parser clamps both ends
+        let big = Json::parse(
+            r#"{"name": "j", "dataset": "quake", "weight": 2000000}"#)
+            .unwrap();
+        assert_eq!(JobSpec::from_json(&big).unwrap().weight,
+                   MAX_TENANT_WEIGHT);
+        let zero = Json::parse(
+            r#"{"name": "j", "dataset": "quake", "weight": 0}"#)
+            .unwrap();
+        assert_eq!(JobSpec::from_json(&zero).unwrap().weight, 1);
     }
 
     #[test]
