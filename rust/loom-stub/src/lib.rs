@@ -1,0 +1,134 @@
+//! Offline API stub of the [`loom`](https://docs.rs/loom) permutation
+//! model checker — the same pattern as `xla-stub` for the `pjrt`
+//! feature: the build is fully offline, so the real crate cannot be a
+//! dependency, but the concurrency models in
+//! `rust/tests/loom_models.rs` must type-check and *run* everywhere.
+//!
+//! The stub mirrors the subset of loom's surface the sync shim
+//! (`volcanoml::sync`) and the models use:
+//!
+//! * `loom::sync::{Arc, Mutex, MutexGuard, Condvar}` and
+//!   `loom::sync::atomic::*` — re-exports of `std`, so code ported
+//!   onto the shim compiles identically under `--features loom`.
+//! * `loom::thread::{spawn, yield_now, Builder, JoinHandle}` —
+//!   re-exports of `std::thread`.
+//! * `loom::model(f)` — runs the model body [`MODEL_ITERS`] times
+//!   with real threads. Model bodies are self-contained closures
+//!   (they build all their state internally, exactly as real loom
+//!   requires, since loom re-runs them once per explored
+//!   interleaving), so re-running them here is safe and turns each
+//!   model into a stress-sampled interleaving test.
+//!
+//! **Degradation contract:** under this stub a model samples
+//! interleavings; under the real crate it explores them exhaustively
+//! up to loom's preemption bound. To upgrade locally, point the
+//! renamed `loom` dependency in `rust/Cargo.toml` at the real crate
+//! (`loom = { version = "0.7", optional = true }`) — the models and
+//! the shim compile unchanged, with the one documented caveat that
+//! real loom's `Arc` cannot coerce to `Arc<dyn Trait>` (the shim
+//! notes this; the scheduler's type-erased task queue relies on
+//! `std::sync::Arc` for that coercion).
+
+/// How many times [`model`] re-runs a body under the stub. Real
+/// threads plus the schedulers' own lock contention make each run a
+/// fresh sampled interleaving; the count is a compromise between
+/// coverage and keeping `cargo test --features loom` quick.
+pub const MODEL_ITERS: usize = 64;
+
+pub mod sync {
+    pub use std::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard,
+                        RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+    pub mod atomic {
+        pub use std::sync::atomic::{AtomicBool, AtomicI32, AtomicI64,
+                                    AtomicIsize, AtomicU32, AtomicU64,
+                                    AtomicUsize, Ordering, fence};
+    }
+}
+
+pub mod thread {
+    pub use std::thread::{spawn, yield_now, Builder, JoinHandle};
+}
+
+pub mod hint {
+    pub use std::hint::spin_loop;
+}
+
+/// Run a model body repeatedly with real threads (stress sampling).
+/// Signature-compatible with `loom::model`; see the module docs for
+/// the degradation contract.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    for _ in 0..MODEL_ITERS {
+        f();
+    }
+}
+
+/// Mirror of `loom::model::Builder` for models that need a custom
+/// preemption bound with the real checker. The stub ignores the
+/// knobs and stress-samples like [`model`].
+pub mod model {
+    #[derive(Debug, Default)]
+    pub struct Builder {
+        /// Real loom bounds context switches per execution with this;
+        /// the stub carries it for signature compatibility only.
+        pub preemption_bound: Option<usize>,
+        /// Maximum branches to explore (ignored by the stub).
+        pub max_branches: usize,
+    }
+
+    impl Builder {
+        pub fn new() -> Builder {
+            Builder::default()
+        }
+
+        pub fn check<F>(&self, f: F)
+        where
+            F: Fn() + Sync + Send + 'static,
+        {
+            super::model(f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::Arc;
+
+    #[test]
+    fn model_reruns_the_body() {
+        let runs = Arc::new(AtomicUsize::new(0));
+        let r = runs.clone();
+        super::model(move || {
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(runs.load(Ordering::SeqCst), super::MODEL_ITERS);
+    }
+
+    #[test]
+    fn model_bodies_really_interleave_threads() {
+        super::model(|| {
+            let n = Arc::new(AtomicUsize::new(0));
+            let n2 = n.clone();
+            let h = super::thread::spawn(move || {
+                n2.fetch_add(1, Ordering::SeqCst);
+            });
+            n.fetch_add(1, Ordering::SeqCst);
+            h.join().unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    fn builder_check_runs_too() {
+        let runs = Arc::new(AtomicUsize::new(0));
+        let r = runs.clone();
+        super::model::Builder::new().check(move || {
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(runs.load(Ordering::SeqCst) > 0);
+    }
+}

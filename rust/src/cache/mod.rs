@@ -36,17 +36,25 @@
 //! Follow-ups recorded in ROADMAP.md: spill-to-disk for artifacts
 //! evicted under memory pressure, and cross-run persistence keyed by
 //! the same fingerprints.
+//!
+//! All synchronisation primitives come through [`crate::sync`] (plain
+//! `std` normally, loom under `--features loom`), so the
+//! pending-entry coalescing and the abandon-on-drop wake-up are
+//! model-checked by `rust/tests/loom_models.rs` against this exact
+//! code.
+
+// Every pub type here should explain itself in failure output.
+#![warn(missing_debug_implementations)]
 
 mod fingerprint;
 
 pub use fingerprint::Fingerprint;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::data::dataset::Dataset;
-use crate::util::lock;
+use crate::sync::{lock, Arc, AtomicU64, AtomicUsize, Condvar, Mutex,
+                  MutexGuard, Ordering};
 
 /// Lock-shard count (power of two; addressed by low fingerprint bits).
 const SHARDS: usize = 16;
@@ -64,6 +72,16 @@ impl FeArtifact {
         self.data.x.len() * 4 + self.data.y.len() * 4
             + self.train.len() * std::mem::size_of::<usize>()
             + 64
+    }
+}
+
+impl std::fmt::Debug for FeArtifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FeArtifact")
+            .field("rows", &self.data.n)
+            .field("train", &self.train.len())
+            .field("cost", &self.cost())
+            .finish_non_exhaustive()
     }
 }
 
@@ -157,6 +175,19 @@ pub enum Resolved<'s> {
     Compute(Ticket<'s>),
 }
 
+impl std::fmt::Debug for Resolved<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Resolved::Ready(art) => {
+                f.debug_tuple("Resolved::Ready").field(art).finish()
+            }
+            Resolved::Compute(t) => {
+                f.debug_tuple("Resolved::Compute").field(t).finish()
+            }
+        }
+    }
+}
+
 /// Ownership of one in-flight computation. Publish the artifact with
 /// [`Ticket::publish`]; dropping the ticket instead (identity stage,
 /// or an unwinding fit) abandons the pending entry and wakes any
@@ -178,6 +209,15 @@ impl<'s> Ticket<'s> {
         self.store.insert_ready(self.fp, art.clone(),
                                 self.waiter.take());
         art
+    }
+}
+
+impl std::fmt::Debug for Ticket<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket")
+            .field("fp", &self.fp)
+            .field("registered", &self.waiter.is_some())
+            .finish_non_exhaustive()
     }
 }
 
@@ -221,6 +261,14 @@ pub struct FeStore {
     tenants: Mutex<HashMap<u64, FeTenantStats>>,
 }
 
+impl std::fmt::Debug for FeStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FeStore")
+            .field("stats", &self.stats())
+            .finish_non_exhaustive()
+    }
+}
+
 impl FeStore {
     pub fn new(cap_bytes: usize) -> FeStore {
         FeStore {
@@ -251,6 +299,10 @@ impl FeStore {
     }
 
     fn tick(&self) -> u64 {
+        // SYNC: Relaxed — the LRU clock only needs distinct,
+        // monotone stamps (fetch_add is atomic at every ordering);
+        // stamps are stored and compared under the shard locks, which
+        // provide the ordering that matters.
         self.clock.fetch_add(1, Ordering::Relaxed)
     }
 
@@ -281,6 +333,8 @@ impl FeStore {
             }
         };
         if hit.is_some() {
+            // SYNC: Relaxed — monotone stats counter, only read back
+            // by stats() snapshots; never publishes data
             self.hits.fetch_add(1, Ordering::Relaxed);
             self.bump_tenant(tenant, |t| t.hits += 1);
         }
@@ -307,6 +361,9 @@ impl FeStore {
             match shard.get_mut(&fp.key()) {
                 Some(Entry::Ready { art, stamp, .. }) => {
                     *stamp = self.tick();
+                    // SYNC: Relaxed — monotone stats counter (here
+                    // and on every counter bump below): only read by
+                    // stats() snapshots, never publishes data
                     self.hits.fetch_add(1, Ordering::Relaxed);
                     self.bump_tenant(tenant, |t| t.hits += 1);
                     return Resolved::Ready(art.clone());
@@ -315,6 +372,7 @@ impl FeStore {
                 None => {
                     let w = Arc::new(Waiter::new());
                     shard.insert(fp.key(), Entry::Pending(w.clone()));
+                    // SYNC: Relaxed — monotone stats counter
                     self.misses.fetch_add(1, Ordering::Relaxed);
                     self.bump_tenant(tenant, |t| t.misses += 1);
                     return Resolved::Compute(Ticket {
@@ -330,6 +388,7 @@ impl FeStore {
         loop {
             match &*st {
                 WaitState::Ready(art) => {
+                    // SYNC: Relaxed — monotone stats counter
                     self.coalesced.fetch_add(1, Ordering::Relaxed);
                     self.bump_tenant(tenant, |t| t.coalesced += 1);
                     return Resolved::Ready(art.clone());
@@ -340,6 +399,7 @@ impl FeStore {
                     // re-registering could livelock against other
                     // woken waiters, and duplicate identical work is
                     // harmless (last publish wins)
+                    // SYNC: Relaxed — monotone stats counter
                     self.misses.fetch_add(1, Ordering::Relaxed);
                     self.bump_tenant(tenant, |t| t.misses += 1);
                     return Resolved::Compute(Ticket {
@@ -377,11 +437,17 @@ impl FeStore {
                 stamp: self.tick(),
                 cost,
             });
+            // SYNC: Relaxed — `bytes` is an advisory occupancy gauge
+            // for the eviction trigger, adjusted while the entry's
+            // shard lock is held (so it never drifts from the map);
+            // eviction decisions tolerate momentary staleness and
+            // converge under the evict gate.
             if let Some(Entry::Ready { cost: old_cost, .. }) = old {
                 self.bytes.fetch_sub(old_cost, Ordering::Relaxed);
             }
             self.bytes.fetch_add(cost, Ordering::Relaxed);
         }
+        // SYNC: Relaxed — monotone stats counter
         self.published.fetch_add(1, Ordering::Relaxed);
         if let Some(w) = waiter {
             w.resolve(WaitState::Ready(art));
@@ -393,10 +459,14 @@ impl FeStore {
     /// holds. Pending entries are never evicted; an entry touched
     /// after the candidate scan is skipped (its stamp moved).
     fn evict_to_cap(&self) {
+        // SYNC: Relaxed — advisory occupancy probe (see insert_ready
+        // on the `bytes` gauge); a stale read at worst delays or
+        // repeats an eviction pass, never corrupts the map
         if self.bytes.load(Ordering::Relaxed) <= self.cap_bytes {
             return;
         }
         let _gate = lock(&self.evict_gate);
+        // SYNC: Relaxed — same advisory `bytes` probe as above
         while self.bytes.load(Ordering::Relaxed) > self.cap_bytes {
             // candidate scan: (stamp, key, cost) of every ready entry
             let mut cands: Vec<(u64, usize, u128, usize)> = Vec::new();
@@ -411,6 +481,9 @@ impl FeStore {
             cands.sort_unstable_by_key(|c| c.0);
             let mut progressed = false;
             for (stamp, si, key, cost) in cands {
+                // SYNC: Relaxed — advisory `bytes` probe (above),
+                // gauge adjustment under the shard lock and a
+                // monotone stats counter (below)
                 if self.bytes.load(Ordering::Relaxed) <= self.cap_bytes
                 {
                     break;
@@ -435,6 +508,9 @@ impl FeStore {
     }
 
     pub fn stats(&self) -> FeStoreStats {
+        // SYNC: Relaxed — point-in-time snapshot of monotone
+        // counters and the advisory byte gauge; the snapshot is
+        // diagnostic, not a synchronisation point
         FeStoreStats {
             hits: self.hits.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),

@@ -13,7 +13,7 @@
 //! and the evaluation budget is enforced exactly: a batch is truncated
 //! to the remaining budget before any work is scheduled.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -64,7 +64,9 @@ pub struct PipelineEvaluator<'a> {
     pub split: Split,
     pub metric: Metric,
     pub pipeline: &'a FePipeline,
-    algos: HashMap<String, Arc<dyn Algorithm>>,
+    // BTreeMap: the roster is iterated when listing algorithms, and
+    // that order leaks into block construction downstream
+    algos: BTreeMap<String, Arc<dyn Algorithm>>,
     default_algo: String,
     pub runtime: Option<&'a Runtime>,
     pub seed: u64,
@@ -380,8 +382,11 @@ impl<'a> PipelineEvaluator<'a> {
     /// per-algorithm model store feeding the ensemble).
     pub fn top_configs(&self, per_algo: usize, cap: usize)
         -> Vec<(Config, f64)> {
-        let mut by_algo: HashMap<&str, Vec<&EvalRecord>> =
-            HashMap::new();
+        // BTreeMap: iterated below, and equal-utility configs from
+        // different algorithms keep a stable relative order in
+        // `picked` only if the groups are visited deterministically
+        let mut by_algo: BTreeMap<&str, Vec<&EvalRecord>> =
+            BTreeMap::new();
         for r in &self.records {
             if r.fidelity >= 1.0 && r.utility.is_finite() {
                 by_algo.entry(r.algorithm.as_str()).or_default()
@@ -466,6 +471,8 @@ pub const MEMO_CAP: usize = 65_536;
 /// re-evaluated like any fresh config — correct, charged, recorded —
 /// so the bound trades budget for memory, never correctness.
 struct Memo {
+    // DETLINT: allow(hash-iter): lookup-only — iteration order is
+    // never observed; eviction order comes from `order` (FIFO).
     map: HashMap<String, f64>,
     order: VecDeque<String>,
     cap: usize,
@@ -476,6 +483,7 @@ struct Memo {
 impl Memo {
     fn new(cap: usize) -> Memo {
         Memo {
+            // DETLINT: allow(hash-iter): see the field note above
             map: HashMap::new(),
             order: VecDeque::new(),
             cap: cap.max(1),
@@ -617,6 +625,8 @@ impl<'a> Objective for PipelineEvaluator<'a> {
         };
         let mut slots: Vec<Slot> = Vec::with_capacity(reqs.len());
         let mut fresh: Vec<(String, Config, f64)> = Vec::new();
+        // DETLINT: allow(hash-iter): in-batch dedup lookups only —
+        // never iterated; slot order is the request order.
         let mut scheduled: HashMap<String, usize> = HashMap::new();
         // counters are accounted like serial processing would see
         // them: an in-batch duplicate is a hit (it would have found

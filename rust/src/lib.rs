@@ -5,6 +5,18 @@
 //! coordinator owning building blocks, execution plans, optimizers,
 //! meta-learning, ensembles, and the PJRT runtime that executes the
 //! AOT-compiled model trainers. See DESIGN.md for the full inventory.
+//!
+//! Concurrency-correctness policy (enforced by `tools/detlint` and
+//! the loom models in `rust/tests/loom_models.rs`): every `unsafe`
+//! block carries a `// SAFETY:` argument, every `Ordering::Relaxed`
+//! a `// SYNC:` justification, search-path modules never iterate
+//! hash-ordered containers, and wall-clock reads stay inside the
+//! deadline/bench whitelist — see README.md "Verification".
+
+// Unsafe code must be explicit about each unsafe operation even
+// inside an `unsafe fn` — the executor's type-erased task queue is
+// load-bearing for every workload, so no implicit unsafety.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod baselines;
 pub mod bench;
@@ -24,3 +36,8 @@ pub mod runtime;
 pub mod service;
 pub mod surrogate;
 pub mod util;
+
+/// Crate-level alias for the sync shim, so concurrent subsystems
+/// write `crate::sync::{Mutex, Condvar, ...}` (std normally, `loom`
+/// under `--features loom` — see `util::sync`).
+pub use util::sync;

@@ -196,6 +196,8 @@ impl Optimizer for SmacBo {
             .unwrap_or(std::cmp::Ordering::Equal));
         // drop repeated candidates wherever they rank (EI ties make
         // adjacency-based dedup insufficient)
+        // DETLINT: allow(hash-iter): insert-only dedup filter — the
+        // ranking order comes from the sort above, never the set.
         let mut seen = std::collections::HashSet::new();
         let mut ranked = scored
             .into_iter()

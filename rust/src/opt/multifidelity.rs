@@ -4,7 +4,7 @@
 //! fraction of the evaluation budget (train subsample / GD steps);
 //! promotion uses the observed utility at the current rung.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::space::{Config, ConfigSpace};
 use crate::surrogate::rf::ProbForest;
@@ -70,7 +70,11 @@ pub struct HyperbandFamily {
     next_s: usize,
     history: Vec<(Config, f64, f64)>, // (cfg, fidelity, y)
     best_full: Option<(Config, f64)>,
-    surrogates: HashMap<u64, ProbForest>,
+    /// Per-fidelity surrogates, keyed by `fid_key`. A BTreeMap on
+    /// purpose: `ensemble_weights` iterates it into a weighted float
+    /// summation, and hash order would make MFES-HB's acquisition
+    /// values (and so the search trajectory) process-random.
+    surrogates: BTreeMap<u64, ProbForest>,
     dirty: bool,
     seed: u64,
 }
@@ -91,7 +95,7 @@ impl HyperbandFamily {
             next_s: 2,
             history: Vec::new(),
             best_full: None,
-            surrogates: HashMap::new(),
+            surrogates: BTreeMap::new(),
             dirty: true,
             seed,
         }
@@ -122,8 +126,11 @@ impl HyperbandFamily {
             return;
         }
         self.dirty = false;
-        let mut by_fid: HashMap<u64, (Vec<Vec<f64>>, Vec<f64>)> =
-            HashMap::new();
+        // BTreeMap: iterated below to refit the surrogates, so the
+        // fit order (and each forest's rng stream pairing) must be
+        // the fidelity order, not hash order
+        let mut by_fid: BTreeMap<u64, (Vec<Vec<f64>>, Vec<f64>)> =
+            BTreeMap::new();
         for (cfg, fid, y) in &self.history {
             let e = by_fid.entry(fid_key(*fid)).or_default();
             e.0.push(self.space.to_features(cfg));

@@ -306,6 +306,8 @@ impl Runtime {
             })
             .collect::<Result<_>>()?;
 
+        // DETLINT: allow(wall-clock): telemetry only — feeds the
+        // device-time gauge, never a search decision.
         let t0 = std::time::Instant::now();
         let result = exe
             .execute::<xla::Literal>(&literals)

@@ -245,6 +245,8 @@ impl ConfigSpace {
     /// Subspace containing only the named parameters (conditions on
     /// missing parents are dropped — they are assumed fixed-active).
     pub fn subspace(&self, names: &[&str]) -> ConfigSpace {
+        // DETLINT: allow(hash-iter): membership tests only — the
+        // output order is `self.params` order, never the set's.
         let keep: std::collections::HashSet<&str> =
             names.iter().copied().collect();
         let mut out = ConfigSpace::new();

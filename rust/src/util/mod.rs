@@ -7,6 +7,7 @@ pub mod linalg;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Poison-tolerant mutex lock, shared by every concurrent subsystem
 /// (worker pool, FE artifact store): a panicked holder must not

@@ -1,0 +1,110 @@
+//! Synchronisation shim: the one place the concurrent subsystems
+//! (worker-pool scheduler, FE artifact store) import their primitives
+//! from.
+//!
+//! In a normal build (`--features loom` absent) every name here is a
+//! plain re-export of `std::sync` / `std::sync::atomic` — zero cost,
+//! zero behaviour change; the default build is bit-identical to
+//! importing `std` directly. With `--features loom` the names resolve
+//! to the `loom` crate instead, so the *same* scheduler and store
+//! code can be driven by a model checker that explores thread
+//! interleavings exhaustively (see `rust/tests/loom_models.rs`).
+//!
+//! The `loom` dependency is the bundled `rust/loom-stub` crate (the
+//! same pattern as `xla-stub` for the `pjrt` feature): an offline
+//! API-compatible subset that re-exports `std` and runs each model
+//! body many times with real threads, so `cargo test --features
+//! loom` works everywhere and degrades to stress-sampled
+//! interleavings. Supplying the real `loom` crate locally (edit the
+//! dependency in `rust/Cargo.toml`) upgrades the identical tests to
+//! exhaustive bounded model checking. One caveat for real loom:
+//! `Arc` must keep pointing at `std` (unsized coercions to
+//! `Arc<dyn Trait>` are not implementable outside `std`); the stub
+//! sidesteps this by re-exporting `std::sync::Arc`.
+//!
+//! Ported modules must not reach around the shim: `tools/detlint`
+//! has no rule for it, but the loom models only cover what goes
+//! through these types.
+
+#[cfg(not(feature = "loom"))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize,
+                            Ordering};
+#[cfg(not(feature = "loom"))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(feature = "loom")]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize,
+                             Ordering};
+#[cfg(feature = "loom")]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Model-checking entry points, only present under the `loom`
+/// feature: `sync::model(|| ...)` runs a closure under the checker
+/// (exhaustively with real loom, stress-sampled with the bundled
+/// stub), and `sync::thread` is the matching thread API to spawn
+/// inside a model.
+#[cfg(feature = "loom")]
+pub use loom::{model, thread};
+
+/// Poison-tolerant lock on a shim mutex — the ported twin of
+/// [`crate::util::lock`]: a panicked holder must not poison the
+/// scheduler or the store for the rest of the search (panics
+/// re-raise at their joins; holders never unwind mid-update of the
+/// invariants these mutexes guard).
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shim_mutex_and_atomics_behave_like_std() {
+        let m = Mutex::new(7);
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 8);
+        let a = AtomicUsize::new(1);
+        assert_eq!(a.fetch_add(2, Ordering::SeqCst), 1);
+        assert_eq!(a.load(Ordering::SeqCst), 3);
+        let b = AtomicBool::new(false);
+        b.store(true, Ordering::Release);
+        assert!(b.load(Ordering::Acquire));
+        let c = AtomicU64::new(u64::MAX - 1);
+        c.fetch_add(1, Ordering::SeqCst);
+        assert_eq!(c.load(Ordering::SeqCst), u64::MAX);
+    }
+
+    #[test]
+    fn lock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 42);
+    }
+
+    #[test]
+    fn condvar_roundtrip() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = pair.clone();
+        let h = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            *lock(m) = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut done = lock(m);
+        while !*done {
+            done = cv.wait(done).unwrap_or_else(|p| p.into_inner());
+        }
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,265 @@
+//! Bounded concurrency models of the shared-pool scheduler and the
+//! FE artifact store (`cargo test --features loom --test
+//! loom_models`).
+//!
+//! Every model drives the *production* code: the scheduler models go
+//! through `runtime::executor::model` — a thin, feature-gated facade
+//! over the real `SchedState` / `pick_task` / latch / claim-cursor
+//! internals — and the store models use `FeStore`'s public API
+//! directly. With the bundled `loom-stub` each `model(..)` body is
+//! re-run many times with real threads (stress-sampled
+//! interleavings); pointing the `loom` dependency at the real crate
+//! upgrades the same tests to exhaustive bounded exploration (see
+//! rust/README.md "Verification").
+//!
+//! Each model keeps to at most one spawned thread plus the main one,
+//! so real loom's state space stays tractable.
+
+#![cfg(feature = "loom")]
+
+use volcanoml::cache::{FeStore, Fingerprint, Resolved};
+use volcanoml::data::dataset::{Dataset, Task};
+use volcanoml::runtime::executor::model::{MiniSched, ModelBatch, Probe};
+use volcanoml::sync::{model, thread, Arc};
+
+fn fp(tag: &str) -> Fingerprint {
+    Fingerprint::new().push_str(tag)
+}
+
+fn tiny_dataset() -> Arc<Dataset> {
+    let mut ds = Dataset::new(
+        "loom", Task::Classification { n_classes: 2 }, 2);
+    ds.push_row(&[0.0, 1.0], 0.0);
+    ds.push_row(&[1.0, 0.0], 1.0);
+    Arc::new(ds)
+}
+
+/// The PR-6 use-after-free shape, excluded for every interleaving: a
+/// worker's pick races the handle side's `help()` → `retire()` →
+/// `wait_done()` → unlink sequence. Because `pick_task` counts the
+/// pick on the latch atomically with the not-retired check (one
+/// latch-lock hold under the scheduler lock), either the pick is
+/// counted — and `wait_done` blocks until it posts — or the batch is
+/// already retired and is popped instead of picked. `kill()` poisons
+/// the probe immediately after the join, so any pick that could
+/// still run afterwards (the bug) asserts inside `run_one`.
+#[test]
+fn pick_vs_retire_never_leaves_a_stale_pick() {
+    model(|| {
+        let sched = Arc::new(MiniSched::new());
+        sched.add_tenant(1, 1);
+        let probe = Probe::new(1);
+        let latch = sched.enqueue(1, &probe);
+        let worker = {
+            let sched = sched.clone();
+            thread::spawn(move || {
+                if let Some(p) = sched.pick() {
+                    p.run();
+                }
+            })
+        };
+        // the handle side of PoolBatch::help + join
+        probe.help();
+        latch.retire();
+        latch.wait_done();
+        sched.unlink(1, &latch);
+        // after the join the 'env state is dead: no pick may run
+        probe.kill();
+        worker.join().unwrap();
+        assert_eq!(probe.claimed(), 1);
+        assert!(sched.remove_tenant(1));
+    });
+}
+
+/// Helper-vs-worker claim race through the *real* `BatchState`
+/// cursor (`run_one` against `claim_loop`): for every interleaving,
+/// the two claimants partition the items — each item claimed exactly
+/// once, each slot filled exactly once, no claim lost.
+#[test]
+fn helper_and_worker_claims_partition_the_cursor() {
+    model(|| {
+        let batch = ModelBatch::new();
+        let b2 = batch.clone();
+        let worker = thread::spawn(move || {
+            // one worker-loop lifetime: claim until the cursor says
+            // the batch retired
+            while b2.run_one() {}
+        });
+        batch.help();
+        worker.join().unwrap();
+        assert_eq!(batch.results(), ModelBatch::expected());
+    });
+}
+
+/// Abandon-on-drop must wake a coalesced waiter in every
+/// interleaving: whichever thread wins the pending-entry insert, the
+/// other either hits the published artifact, coalesces on the
+/// condvar, or — after the winner abandons — is woken to compute for
+/// itself. No interleaving may hang or lose the wake-up.
+#[test]
+fn abandon_on_drop_wakes_coalesced_waiters() {
+    model(|| {
+        let store = Arc::new(FeStore::new(1 << 16));
+        let f = fp("stage");
+        let s2 = store.clone();
+        let waiter = thread::spawn(move || match s2.begin(f) {
+            Resolved::Ready(a) => assert_eq!(a.data.n, 2),
+            Resolved::Compute(t) => {
+                t.publish(tiny_dataset(), Arc::new(vec![0, 1]));
+            }
+        });
+        match store.begin(f) {
+            Resolved::Ready(a) => assert_eq!(a.data.n, 2),
+            // identity stage: abandon, which must wake the waiter
+            Resolved::Compute(t) => drop(t),
+        }
+        waiter.join().unwrap();
+    });
+}
+
+/// The publish side of coalescing: both threads resolve to the same
+/// artifact, and exactly one entry lands in the store — whichever
+/// thread computes, the other is served (hit before the race, or
+/// coalesced during it).
+#[test]
+fn publish_serves_every_coalesced_waiter() {
+    model(|| {
+        let store = Arc::new(FeStore::new(1 << 16));
+        let f = fp("stage");
+        let s2 = store.clone();
+        let waiter = thread::spawn(move || match s2.begin(f) {
+            Resolved::Ready(a) => a,
+            Resolved::Compute(t) => {
+                t.publish(tiny_dataset(), Arc::new(vec![0, 1]))
+            }
+        });
+        let mine = match store.begin(f) {
+            Resolved::Ready(a) => a,
+            Resolved::Compute(t) => {
+                t.publish(tiny_dataset(), Arc::new(vec![0, 1]))
+            }
+        };
+        let theirs = waiter.join().unwrap();
+        assert_eq!(mine.data.n, 2);
+        assert_eq!(theirs.data.n, 2);
+        assert_eq!(store.stats().entries, 1);
+    });
+}
+
+/// Tenant removal drains cleanly while a worker still picks: tenant
+/// 1's handle joins mid-stream (help/retire/wait/unlink) and the
+/// tenant is then removable, while tenant 2's work is fully served —
+/// its unclaimed slots are never wedged by the co-tenant's death.
+#[test]
+fn dying_tenant_drains_and_co_tenant_completes() {
+    model(|| {
+        let sched = Arc::new(MiniSched::new());
+        sched.add_tenant(1, 1);
+        sched.add_tenant(2, 1);
+        let pa = Probe::new(1);
+        let pb = Probe::new(2);
+        let la = sched.enqueue(1, &pa);
+        let lb = sched.enqueue(2, &pb);
+        let s2 = sched.clone();
+        let worker = thread::spawn(move || {
+            // a bounded worker: a few picks across both tenants
+            for _ in 0..2 {
+                if let Some(p) = s2.pick() {
+                    p.run();
+                }
+            }
+        });
+        // tenant 1 dies: its handle joins exactly like PoolBatch
+        pa.help();
+        la.retire();
+        la.wait_done();
+        sched.unlink(1, &la);
+        pa.kill();
+        // main drains whatever the bounded worker left of tenant 2
+        while let Some(p) = sched.pick() {
+            p.run();
+        }
+        lb.wait_done();
+        sched.unlink(2, &lb);
+        worker.join().unwrap();
+        assert_eq!(pa.claimed(), 1);
+        assert_eq!(pb.claimed(), 2, "co-tenant work lost");
+        assert!(sched.remove_tenant(1), "drained tenant must remove");
+        assert!(sched.remove_tenant(2));
+    });
+}
+
+/// Stride fairness under concurrent re-weighting: however the
+/// `set_weight` calls interleave with the picks (including the
+/// clamped `u32::MAX` update, whose stride floors at 1), both
+/// tenants keep progressing — no weight update can hand every pick
+/// to one side.
+#[test]
+fn weight_updates_never_starve_a_tenant() {
+    model(|| {
+        let sched = Arc::new(MiniSched::new());
+        sched.add_tenant(1, 1);
+        sched.add_tenant(2, 2);
+        let p1 = Probe::new(4);
+        let p2 = Probe::new(8);
+        let l1 = sched.enqueue(1, &p1);
+        let l2 = sched.enqueue(2, &p2);
+        let s2 = sched.clone();
+        let updater = thread::spawn(move || {
+            s2.set_weight(2, 4);
+            s2.set_weight(1, u32::MAX); // clamps to MAX_TENANT_WEIGHT
+        });
+        for _ in 0..8 {
+            if let Some(p) = sched.pick() {
+                p.run();
+            }
+        }
+        updater.join().unwrap();
+        // loose proportional-progress bounds that hold for *every*
+        // interleaving of the two weight updates with the 8 picks
+        // (tight ratios would over-constrain legal schedules)
+        assert!(p1.claimed() >= 1, "tenant 1 starved");
+        assert!(p2.claimed() >= 2, "tenant 2 starved");
+        // drain to completion and verify full service
+        while let Some(p) = sched.pick() {
+            p.run();
+        }
+        l1.wait_done();
+        l2.wait_done();
+        sched.unlink(1, &l1);
+        sched.unlink(2, &l2);
+        assert_eq!(p1.claimed(), 4);
+        assert_eq!(p2.claimed(), 8);
+        assert!(sched.remove_tenant(1));
+        assert!(sched.remove_tenant(2));
+    });
+}
+
+/// Deterministic single-threaded invariant behind the fairness
+/// model: at the clamped maximum weight the per-claim stride floors
+/// at 1, so the tenant's virtual time still strictly advances on
+/// every pick — the property that makes starvation impossible (a
+/// zero stride would pin the tenant at min-pass forever).
+#[test]
+fn pass_strictly_advances_at_the_weight_clamp() {
+    model(|| {
+        let sched = MiniSched::new();
+        sched.add_tenant(1, u32::MAX); // clamps to MAX_TENANT_WEIGHT
+        let probe = Probe::new(3);
+        let latch = sched.enqueue(1, &probe);
+        let mut last = sched.pass_of(1).expect("tenant registered");
+        for _ in 0..3 {
+            let p = sched.pick().expect("work queued");
+            p.run();
+            let pass = sched.pass_of(1).expect("tenant registered");
+            assert!(pass > last,
+                    "pass must strictly advance: {pass} vs {last}");
+            last = pass;
+        }
+        latch.retire();
+        latch.wait_done();
+        sched.unlink(1, &latch);
+        assert_eq!(probe.claimed(), 3);
+        assert!(sched.remove_tenant(1));
+    });
+}

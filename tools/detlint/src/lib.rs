@@ -1,0 +1,734 @@
+//! detlint — the repo's determinism lint.
+//!
+//! The search trajectory must be a pure function of `(dataset, space,
+//! budget, seed)` (ROADMAP north star; enforced end-to-end by the
+//! determinism suites). Most regressions that break that property are
+//! textually recognisable long before a flaky test catches them, so
+//! this lint walks `rust/src` and rejects:
+//!
+//! - **hash-iter** — `HashMap`/`HashSet` in the search-path modules
+//!   (`blocks/`, `coordinator/`, `opt/`, `space/`, `fe/`). Hash
+//!   iteration order is randomised per process; any map whose order
+//!   can leak into scores, candidate lists or block construction must
+//!   be a `BTreeMap`/`BTreeSet`. Lookup-only maps may stay hashed
+//!   with a `// DETLINT: allow(hash-iter): <why>` note.
+//! - **wall-clock** — `Instant::now` / `SystemTime` outside the
+//!   deadline and bench whitelist. Clock reads on the search path are
+//!   hidden nondeterminism; telemetry-only reads take
+//!   `// DETLINT: allow(wall-clock): <why>`.
+//! - **unsafe-no-safety** — any `unsafe` without a `// SAFETY:`
+//!   argument in the surrounding comment paragraph.
+//! - **relaxed-no-sync** — any `Ordering::Relaxed` without a
+//!   `// SYNC:` note arguing why the weakest ordering suffices.
+//!
+//! Suppression markers are *paragraph-scoped*: a marker counts if it
+//! appears in the comments of the flagged line or of any contiguous
+//! non-blank line above it (bounded lookback). A blank line ends the
+//! paragraph, so a stale marker cannot silently cover code added
+//! below it.
+//!
+//! `#[cfg(test)]` regions are skipped entirely — tests may use hash
+//! maps, clocks and relaxed counters freely.
+//!
+//! The scanner is a line-oriented lexer, not a parser: it strips
+//! comments (nested block comments included), string/char/byte
+//! literals and raw strings, distinguishes lifetimes from char
+//! literals, and then pattern-matches the surviving code text. That
+//! is exactly enough to make the rules precise on this codebase
+//! without a syntax-tree dependency.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Search-path directories (relative to the source root) where hash
+/// collections are rejected.
+pub const HASH_SCOPED_DIRS: [&str; 5] =
+    ["blocks/", "coordinator/", "opt/", "space/", "fe/"];
+
+/// Files (relative to the source root) allowed to read the wall
+/// clock: the budget/deadline owner and the reporting binaries.
+pub const WALL_CLOCK_WHITELIST: [&str; 3] =
+    ["bench.rs", "main.rs", "coordinator/evaluator.rs"];
+
+/// Bounded lookback (in lines) of the paragraph marker scan.
+const PARAGRAPH_LOOKBACK: usize = 40;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    HashIter,
+    WallClock,
+    UnsafeNoSafety,
+    RelaxedNoSync,
+}
+
+impl Rule {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Rule::HashIter => "hash-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::UnsafeNoSafety => "unsafe-no-safety",
+            Rule::RelaxedNoSync => "relaxed-no-sync",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Path relative to the linted source root.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}",
+               self.file, self.line, self.rule.tag(), self.msg)
+    }
+}
+
+/// Result of linting a tree: how much was covered, and what failed.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub files: usize,
+    pub violations: Vec<Violation>,
+}
+
+// ---------------------------------------------------------------------
+// lexing: split each line into code text and comment text
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, Default)]
+struct SplitLine {
+    code: String,
+    comment: String,
+}
+
+impl SplitLine {
+    fn is_blank(&self) -> bool {
+        self.code.trim().is_empty() && self.comment.trim().is_empty()
+    }
+}
+
+/// Lexer state that survives a newline (block comments and strings
+/// may span lines; everything else is line-local).
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    /// Nesting depth (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// Number of `#`s in the `r#…"` opener.
+    RawStr(u32),
+    CharLit,
+}
+
+/// Strip literals and separate comments: per input line, the code
+/// text (literals blanked to a single space) and the comment text.
+fn split_lines(src: &str) -> Vec<SplitLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut cur = SplitLine::default();
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        let next = chars.get(i + 1).copied().unwrap_or('\0');
+        match mode {
+            Mode::Code => {
+                let prev_word = i > 0 && is_word_char(chars[i - 1]);
+                if c == '/' && next == '/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                } else if !prev_word
+                    && (c == 'r' || c == 'b')
+                    && raw_str_hashes(&chars, i).is_some()
+                {
+                    // r"…", r#"…"#, br#"…"# (b consumed en route)
+                    let (hashes, skip) =
+                        raw_str_hashes(&chars, i).unwrap();
+                    mode = Mode::RawStr(hashes);
+                    cur.code.push(' ');
+                    i += skip;
+                } else if !prev_word && c == 'b' && next == '"' {
+                    mode = Mode::Str;
+                    cur.code.push(' ');
+                    i += 2;
+                } else if !prev_word && c == 'b' && next == '\'' {
+                    // byte-char literal b'x' — never a lifetime
+                    mode = Mode::CharLit;
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '\'' {
+                    // char literal vs lifetime: a literal either
+                    // escapes ('\n') or closes two chars on ('x');
+                    // anything else ('env, 'static) is a lifetime
+                    if next == '\\' {
+                        mode = Mode::CharLit;
+                        cur.code.push(' ');
+                        i += 1;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == '/' && next == '*' {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == '/' {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    mode = Mode::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.is_blank() {
+        out.push(cur);
+    }
+    out
+}
+
+fn is_word_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// At `chars[i]` sitting on `r` or `b`: if an `r`/`br` raw-string
+/// opener starts here, the `#` count and the opener's length.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `chars[i]` close a raw string with `hashes` `#`s?
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize)
+        .all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+// ---------------------------------------------------------------------
+// word-boundary matching on the code text
+// ---------------------------------------------------------------------
+
+fn is_word_byte(b: u8) -> bool {
+    // non-ASCII conservatively counts as a word byte
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// `needle` (ASCII) occurs in `hay` with word boundaries on both
+/// sides — so `unsafe_op_in_unsafe_fn` does not contain the word
+/// `unsafe`.
+fn contains_word(hay: &str, needle: &str) -> bool {
+    let hb = hay.as_bytes();
+    let nb = needle.as_bytes();
+    if nb.is_empty() || hb.len() < nb.len() {
+        return false;
+    }
+    hb.windows(nb.len()).enumerate().any(|(pos, w)| {
+        w == nb
+            && (pos == 0 || !is_word_byte(hb[pos - 1]))
+            && (pos + nb.len() == hb.len()
+                || !is_word_byte(hb[pos + nb.len()]))
+    })
+}
+
+/// A `cfg` attribute-ish call whose argument mentions `test`:
+/// `#[cfg(test)]`, `#[cfg(all(test, …))]`. `cfg!(…)` (expression
+/// position) and `cfg_attr` deliberately do not match.
+fn has_cfg_test(code: &str) -> bool {
+    if !contains_word(code, "test") {
+        return false;
+    }
+    let b = code.as_bytes();
+    b.windows(3).enumerate().any(|(pos, w)| {
+        w == b"cfg"
+            && (pos == 0 || !is_word_byte(b[pos - 1]))
+            && {
+                let mut j = pos + 3;
+                while j < b.len() && b[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                j < b.len() && b[j] == b'('
+            }
+    })
+}
+
+// ---------------------------------------------------------------------
+// region and paragraph analysis
+// ---------------------------------------------------------------------
+
+/// Mark every line belonging to a `#[cfg(test)]`-gated item. From the
+/// attribute line, the gated item is brace-tracked to its closing
+/// `}`; a `;` before any `{` means a braceless item (`#[cfg(test)]
+/// use …;`) that ends the region on that line.
+fn test_regions(lines: &[SplitLine]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !has_cfg_test(&lines[i].code) {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        'scan: while j < lines.len() {
+            in_test[j] = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            break 'scan;
+                        }
+                    }
+                    ';' if !opened => break 'scan,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    in_test
+}
+
+/// Paragraph-scoped marker: `marker` occurs in the comment text of
+/// line `idx` or of a contiguous non-blank line above it (bounded
+/// lookback). A blank line ends the paragraph.
+fn paragraph_has_marker(lines: &[SplitLine], idx: usize,
+                        marker: &str) -> bool {
+    let lo = idx.saturating_sub(PARAGRAPH_LOOKBACK);
+    let mut j = idx;
+    loop {
+        let l = &lines[j];
+        if l.is_blank() {
+            return false;
+        }
+        if l.comment.contains(marker) {
+            return true;
+        }
+        if j == lo {
+            return false;
+        }
+        j -= 1;
+    }
+}
+
+fn is_import_line(code: &str) -> bool {
+    let t = code.trim_start();
+    t.starts_with("use ")
+        || t.starts_with("pub use ")
+        || t.starts_with("pub(crate) use ")
+}
+
+// ---------------------------------------------------------------------
+// the lint proper
+// ---------------------------------------------------------------------
+
+/// Lint one file's source. `rel` is the path relative to the source
+/// root with `/` separators (it selects the directory-scoped rules).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let lines = split_lines(src);
+    let in_test = test_regions(&lines);
+    let hash_scoped =
+        HASH_SCOPED_DIRS.iter().any(|d| rel.starts_with(d));
+    let clock_ok = WALL_CLOCK_WHITELIST.contains(&rel);
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: Rule, msg: String| {
+        out.push(Violation { file: rel.to_string(), line, rule, msg });
+    };
+    for (i, l) in lines.iter().enumerate() {
+        if in_test[i] || l.code.trim().is_empty() {
+            continue;
+        }
+        let code = l.code.as_str();
+        let n = i + 1;
+        if hash_scoped
+            && (contains_word(code, "HashMap")
+                || contains_word(code, "HashSet"))
+            && !is_import_line(code)
+            && !paragraph_has_marker(
+                &lines, i, "DETLINT: allow(hash-iter)")
+        {
+            push(n, Rule::HashIter,
+                 "hash collection on the search path: iteration \
+                  order is process-random — use BTreeMap/BTreeSet, \
+                  or mark the paragraph `// DETLINT: \
+                  allow(hash-iter): <why order never leaks>`"
+                     .to_string());
+        }
+        if !clock_ok
+            && (code.contains("Instant::now")
+                || contains_word(code, "SystemTime"))
+            && !paragraph_has_marker(
+                &lines, i, "DETLINT: allow(wall-clock)")
+        {
+            push(n, Rule::WallClock,
+                 "wall-clock read outside the deadline/bench \
+                  whitelist: clocks on the search path are hidden \
+                  nondeterminism — route through the evaluator's \
+                  budget clock, or mark the paragraph `// DETLINT: \
+                  allow(wall-clock): <why it cannot steer the \
+                  search>`"
+                     .to_string());
+        }
+        if contains_word(code, "unsafe")
+            && !paragraph_has_marker(&lines, i, "SAFETY:")
+        {
+            push(n, Rule::UnsafeNoSafety,
+                 "`unsafe` without a `// SAFETY:` argument in the \
+                  surrounding comment paragraph"
+                     .to_string());
+        }
+        if code.contains("Ordering::Relaxed")
+            && !paragraph_has_marker(&lines, i, "SYNC:")
+        {
+            push(n, Rule::RelaxedNoSync,
+                 "`Ordering::Relaxed` without a `// SYNC:` note \
+                  arguing why the weakest ordering suffices"
+                     .to_string());
+        }
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<_>>()?;
+    // sorted walk: the report (and any first-failure exit) is stable
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `src_root` (sorted walk).
+pub fn lint_tree(src_root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    let mut report = Report::default();
+    for f in &files {
+        let rel = f
+            .strip_prefix(src_root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        report.violations.extend(
+            lint_source(&rel, &fs::read_to_string(f)?));
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, src: &str) -> Vec<Rule> {
+        lint_source(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn hash_map_flagged_only_in_scoped_dirs() {
+        let src = "fn f() { let m: HashMap<u32, u32> = \
+                   HashMap::new(); }\n";
+        assert_eq!(rules("opt/mod.rs", src),
+                   vec![Rule::HashIter]);
+        assert_eq!(rules("coordinator/evaluator.rs", src),
+                   vec![Rule::HashIter]);
+        // outside the search-path dirs the same line is fine
+        assert!(rules("util/json.rs", src).is_empty());
+        assert!(rules("runtime/executor.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_set_flagged_and_import_lines_exempt() {
+        assert_eq!(
+            rules("space/mod.rs",
+                  "fn f() { let s = HashSet::new(); }\n"),
+            vec![Rule::HashIter]);
+        assert!(rules(
+            "space/mod.rs",
+            "use std::collections::{HashMap, HashSet};\n")
+            .is_empty());
+        assert!(rules(
+            "space/mod.rs",
+            "pub use std::collections::HashMap;\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn hash_iter_marker_suppresses_within_paragraph() {
+        let ok = "// DETLINT: allow(hash-iter): lookups only\n\
+                  let s = HashSet::new();\n";
+        assert!(rules("fe/mod.rs", ok).is_empty());
+        // a trailing same-line comment also counts
+        let trailing = "let s = HashSet::new(); \
+                        // DETLINT: allow(hash-iter): lookups only\n";
+        assert!(rules("fe/mod.rs", trailing).is_empty());
+        // a blank line ends the paragraph: the marker must not leak
+        let stale = "// DETLINT: allow(hash-iter): old note\n\
+                     \n\
+                     let s = HashSet::new();\n";
+        assert_eq!(rules("fe/mod.rs", stale), vec![Rule::HashIter]);
+    }
+
+    #[test]
+    fn hash_words_in_strings_and_comments_do_not_count() {
+        let src = "// a HashMap would be wrong here\n\
+                   fn f() { log(\"HashMap order\"); }\n\
+                   /* HashSet in a block comment */\n";
+        assert!(rules("blocks/mod.rs", src).is_empty());
+        // word boundary: MyHashMapLike is not HashMap
+        assert!(rules("blocks/mod.rs",
+                      "fn f(m: &MyHashMapLike) {}\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn wall_clock_flagged_outside_whitelist() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(rules("opt/mod.rs", src), vec![Rule::WallClock]);
+        assert_eq!(rules("util/rng.rs", src), vec![Rule::WallClock]);
+        // the deadline owner and the binaries are whitelisted
+        assert!(rules("coordinator/evaluator.rs", src).is_empty());
+        assert!(rules("bench.rs", src).is_empty());
+        assert!(rules("main.rs", src).is_empty());
+        assert_eq!(
+            rules("fe/mod.rs",
+                  "let t = SystemTime::now();\n"),
+            vec![Rule::WallClock]);
+        let marked =
+            "// DETLINT: allow(wall-clock): telemetry only\n\
+             let t = std::time::Instant::now();\n";
+        assert!(rules("runtime/mod.rs", marked).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_safety_paragraph() {
+        assert_eq!(
+            rules("runtime/executor.rs",
+                  "let p = unsafe { std::mem::transmute(q) };\n"),
+            vec![Rule::UnsafeNoSafety]);
+        let ok = "// SAFETY: the handle joins before 'env dies,\n\
+                  // so the erased lifetime never dangles.\n\
+                  let p = unsafe { std::mem::transmute(q) };\n";
+        assert!(rules("runtime/executor.rs", ok).is_empty());
+        // the lint-gate identifier is not the keyword
+        assert!(rules("lib.rs",
+                      "#![deny(unsafe_op_in_unsafe_fn)]\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn relaxed_requires_sync_paragraph() {
+        assert_eq!(
+            rules("cache/mod.rs",
+                  "self.hits.fetch_add(1, Ordering::Relaxed);\n"),
+            vec![Rule::RelaxedNoSync]);
+        let ok = "// SYNC: Relaxed — monotone stats counter\n\
+                  self.hits.fetch_add(1, Ordering::Relaxed);\n";
+        assert!(rules("cache/mod.rs", ok).is_empty());
+        // stronger orderings need no note
+        assert!(rules(
+            "cache/mod.rs",
+            "self.bytes.load(Ordering::Acquire);\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       use std::collections::HashMap;\n\
+                       #[test]\n\
+                       fn t() {\n\
+                           let m = HashMap::new();\n\
+                           let t0 = Instant::now();\n\
+                           x.store(1, Ordering::Relaxed);\n\
+                       }\n\
+                   }\n";
+        assert!(rules("opt/mod.rs", src).is_empty());
+        // cfg(all(test, …)) gates a region too
+        let all = "#[cfg(all(test, feature = \"slow\"))]\n\
+                   mod tests { fn t() { HashSet::new(); } }\n";
+        assert!(rules("opt/mod.rs", all).is_empty());
+    }
+
+    #[test]
+    fn braceless_cfg_test_item_ends_at_semicolon() {
+        // the gated `use` is exempt, but the region must not swallow
+        // the real code after it
+        let src = "#[cfg(test)]\n\
+                   use std::collections::HashMap;\n\
+                   fn prod() { let m = HashMap::new(); }\n";
+        assert_eq!(rules("opt/mod.rs", src), vec![Rule::HashIter]);
+    }
+
+    #[test]
+    fn cfg_expression_macro_is_not_a_region() {
+        // cfg!(test) in expression position gates nothing textually
+        let src = "fn f() {\n\
+                   let n = if cfg!(test) { 1 } else { 2 };\n\
+                   let m = HashSet::new();\n\
+                   }\n";
+        assert_eq!(rules("opt/mod.rs", src), vec![Rule::HashIter]);
+    }
+
+    #[test]
+    fn lexer_handles_literals_braces_and_lifetimes() {
+        // byte-char braces must not corrupt the brace tracking that
+        // bounds a test region (this is util/json.rs's idiom)
+        let src = "#[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { expect(b'{')?; expect(b'}')?; }\n\
+                       fn u() { let m = HashMap::new(); }\n\
+                   }\n\
+                   fn prod() { let m = HashMap::new(); }\n";
+        let got = lint_source("fe/mod.rs", src);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].line, 6);
+        // char escapes, lifetimes and raw strings all lex as
+        // non-code; the raw string's quote must not open a string
+        // that eats the following flagged line
+        let src2 = "fn f<'env>(c: char) -> &'env str {\n\
+                    let q = '\\'';\n\
+                    let r = r#\"Instant::now() \"quoted\"\"#;\n\
+                    let t = Instant::now();\n\
+                    unreachable!()\n\
+                    }\n";
+        let got2 = lint_source("opt/mod.rs", src2);
+        assert_eq!(got2.len(), 1, "{got2:?}");
+        assert_eq!(got2[0].rule, Rule::WallClock);
+        assert_eq!(got2[0].line, 4);
+        // nested block comments close correctly
+        let src3 = "/* outer /* inner */ still comment:\n\
+                    HashMap::new() */\n\
+                    fn f() {}\n";
+        assert!(rules("opt/mod.rs", src3).is_empty());
+    }
+
+    #[test]
+    fn violations_render_with_file_line_and_rule() {
+        let v = lint_source(
+            "opt/mod.rs",
+            "fn f() { let m = HashMap::new(); }\n");
+        let s = v[0].to_string();
+        assert!(s.starts_with("opt/mod.rs:1: [hash-iter]"), "{s}");
+    }
+
+    /// The lint must hold on the actual tree: every hash collection
+    /// on the search path is a BTree or annotated, every clock read
+    /// is whitelisted or annotated, every `unsafe` argues SAFETY,
+    /// every Relaxed argues SYNC. This is the same invocation CI
+    /// runs (`cargo run -p detlint`), as a test.
+    #[test]
+    fn tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../../rust/src");
+        let report = lint_tree(&root).expect("walk rust/src");
+        assert!(report.files > 10, "walked {} files", report.files);
+        let rendered: Vec<String> = report
+            .violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect();
+        assert!(rendered.is_empty(),
+                "determinism lint violations:\n{}",
+                rendered.join("\n"));
+    }
+}

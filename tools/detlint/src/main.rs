@@ -1,0 +1,44 @@
+//! CLI entry point: `cargo run -p detlint [SRC_ROOT]`.
+//!
+//! Lints `rust/src` (or the given root) with the determinism rules
+//! in [`detlint`] and exits non-zero on any violation — CI runs this
+//! as a blocking job, and `tools/detlint/src/lib.rs` runs the same
+//! walk as a unit test (`tree_is_clean`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        None => {
+            // from the workspace root (the CI invocation) rust/src
+            // is right there; otherwise anchor on this crate
+            let cwd = PathBuf::from("rust/src");
+            if cwd.is_dir() {
+                cwd
+            } else {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                    .join("../../rust/src")
+            }
+        }
+    };
+    let report = match detlint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: cannot walk {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if report.violations.is_empty() {
+        println!("detlint: clean ({} files)", report.files);
+        ExitCode::SUCCESS
+    } else {
+        println!("detlint: {} violation(s) in {} files",
+                 report.violations.len(), report.files);
+        ExitCode::FAILURE
+    }
+}
