@@ -4,7 +4,8 @@
 //! overhead. These are the numbers the EXPERIMENTS.md §Perf
 //! before/after table tracks.
 
-use volcanoml::bench::{bench, try_runtime, Table};
+use volcanoml::bench::{bench, peak_rss_bytes, save_bench_summary,
+                       timing_to_json, try_runtime, Table, Timing};
 use volcanoml::coordinator::evaluator::PipelineEvaluator;
 use volcanoml::coordinator::{joint_space, pipeline_for, roster_for,
                              SpaceScale};
@@ -16,9 +17,19 @@ use volcanoml::data::Split;
 use volcanoml::opt::{Optimizer, SmacBo};
 use volcanoml::util::rng::Rng;
 
+/// Render one timing as a table row and keep it for the
+/// `BENCH_micro_hotpaths.json` summary.
+fn record(table: &mut Table, timings: &mut Vec<Timing>, label: &str,
+          t: Timing) {
+    table.row(vec![label.to_string(), t.per_iter_label(),
+                   t.iters.to_string()]);
+    timings.push(Timing { name: label.to_string(), ..t });
+}
+
 fn main() {
     let mut table = Table::new("micro hot paths",
                                &["operation", "mean", "iters"]);
+    let mut timings: Vec<Timing> = Vec::new();
     let mut rng = Rng::new(0);
 
     // ---- BO iteration on a 20-dim space with 60 observations -------
@@ -38,8 +49,8 @@ fn main() {
     let t = bench("bo_suggest", 2, 10, || {
         std::hint::black_box(bo.suggest(&mut rng));
     });
-    table.row(vec!["BO suggest (refit+EI, 60 obs, 20d)".into(),
-                   t.per_iter_label(), t.iters.to_string()]);
+    record(&mut table, &mut timings,
+           "BO suggest (refit+EI, 60 obs, 20d)", t);
 
     // ---- native algorithm fits --------------------------------------
     let ds = generate(&Profile {
@@ -65,8 +76,8 @@ fn main() {
             std::hint::black_box(
                 algo.fit(&ds, &train, &cfg, &mut ctx).unwrap());
         });
-        table.row(vec![format!("fit {name} (640x16)"),
-                       t.per_iter_label(), t.iters.to_string()]);
+        record(&mut table, &mut timings,
+               &format!("fit {name} (640x16)"), t);
     }
 
     // ---- FE operators ----------------------------------------------
@@ -77,8 +88,8 @@ fn main() {
                                                    &cfg);
             std::hint::black_box(f.apply(&ds));
         });
-        table.row(vec![format!("scaler {op} (800x16)"),
-                       t.per_iter_label(), t.iters.to_string()]);
+        record(&mut table, &mut timings,
+               &format!("scaler {op} (800x16)"), t);
     }
     {
         let cfg = volcanoml::fe::ops::transformer_space("pca")
@@ -89,8 +100,8 @@ fn main() {
                 "pca", &ds, &train, &cfg, &mut r);
             std::hint::black_box(f.apply(&ds));
         });
-        table.row(vec!["transformer pca (800x16)".into(),
-                       t.per_iter_label(), t.iters.to_string()]);
+        record(&mut table, &mut timings, "transformer pca (800x16)",
+               t);
     }
 
     // ---- FE artifact store: miss+publish vs hit ---------------------
@@ -112,8 +123,8 @@ fn main() {
                 Resolved::Ready(_) => unreachable!("fresh key"),
             }
         });
-        table.row(vec!["FE store miss+publish (800x16 artifact)".into(),
-                       t.per_iter_label(), t.iters.to_string()]);
+        record(&mut table, &mut timings,
+               "FE store miss+publish (800x16 artifact)", t);
         let hot = Fingerprint::new().push_str("hot");
         if let Resolved::Compute(tk) = store.begin(hot) {
             tk.publish(art_ds.clone(), art_train.clone());
@@ -121,8 +132,8 @@ fn main() {
         let t = bench("fe_store_hit", 2, 200, || {
             std::hint::black_box(store.lookup(hot).unwrap());
         });
-        table.row(vec!["FE store hit (lookup + LRU stamp)".into(),
-                       t.per_iter_label(), t.iters.to_string()]);
+        record(&mut table, &mut timings,
+               "FE store hit (lookup + LRU stamp)", t);
     }
 
     // ---- row-sharded FE apply over the worker pool ------------------
@@ -150,10 +161,9 @@ fn main() {
             let t = bench("apply_sharded", 1, 5, || {
                 std::hint::black_box(f.apply_sharded(&big, &ex));
             });
-            table.row(vec![
-                format!("quantile apply row-sharded w={workers} \
-                         (20000x16)"),
-                t.per_iter_label(), t.iters.to_string()]);
+            record(&mut table, &mut timings,
+                   &format!("quantile apply row-sharded w={workers} \
+                             (20000x16)"), t);
         }
     }
 
@@ -171,8 +181,8 @@ fn main() {
         fid += 1e-4;
         std::hint::black_box(ev.evaluate(&cfg, fid).unwrap());
     });
-    table.row(vec!["pipeline evaluate (default cfg)".into(),
-                   t.per_iter_label(), t.iters.to_string()]);
+    record(&mut table, &mut timings, "pipeline evaluate (default cfg)",
+           t);
 
     // ---- PJRT execute ------------------------------------------------
     if let Some(rt) = try_runtime() {
@@ -201,10 +211,22 @@ fn main() {
             std::hint::black_box(
                 rt.execute("glm_softmax", &inputs()).unwrap());
         });
-        table.row(vec![
-            format!("PJRT glm_softmax ({} GD steps)", c.t_steps),
-            t.per_iter_label(), t.iters.to_string()]);
+        record(&mut table, &mut timings,
+               &format!("PJRT glm_softmax ({} GD steps)", c.t_steps),
+               t);
     }
 
     table.print();
+
+    use volcanoml::util::json::Json;
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("micro_hotpaths".into())),
+        ("results",
+         Json::Arr(timings.iter().map(timing_to_json).collect())),
+        ("peak_rss_bytes", match peak_rss_bytes() {
+            Some(b) => Json::Num(b as f64),
+            None => Json::Null,
+        }),
+    ]);
+    save_bench_summary("micro_hotpaths", &summary);
 }

@@ -3,9 +3,10 @@
 //! on four of them (the speed-up statistic the paper reports).
 
 use volcanoml::baselines::SystemKind;
-use volcanoml::bench::{bench_scale, render_curves, run_matrix,
-                       save_results, shrink_profile, try_runtime,
-                       Table};
+use volcanoml::bench::{bench_scale, peak_rss_bytes, render_curves,
+                       run_matrix, save_bench_summary, save_results,
+                       shrink_profile, try_runtime, Table};
+use volcanoml::util::json::Json;
 use volcanoml::coordinator::SpaceScale;
 use volcanoml::data::registry;
 
@@ -71,4 +72,20 @@ fn main() {
                                "seconds", &series));
     println!("(paper: VolcanoML reaches the baselines' final error \
               4.3-10.5x faster than TPOT, 4.8-11x faster than AUSK)");
+
+    // Machine-readable summary at the repo root for the CI artifact
+    // step. Peak RSS is the columnar-substrate statistic: splits and
+    // fidelity subsets are row views and FE stages share untouched
+    // column chunks, so the high-water mark stays near one copy of
+    // the data instead of one per materialised split/stage.
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("table10_large".into())),
+        ("matrix", m.to_json()),
+        ("volcano_best", Json::Num(volcano_best as f64)),
+        ("peak_rss_bytes", match peak_rss_bytes() {
+            Some(b) => Json::Num(b as f64),
+            None => Json::Null,
+        }),
+    ]);
+    save_bench_summary("table10", &summary);
 }

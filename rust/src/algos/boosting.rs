@@ -65,8 +65,9 @@ fn quantile_edges(ds: &Dataset, train: &[usize], n_bins: usize)
     -> Vec<Vec<f32>> {
     (0..ds.d)
         .map(|j| {
+            let c = ds.col(j);
             let mut xs: Vec<f32> =
-                train.iter().map(|&i| ds.row(i)[j]).collect();
+                train.iter().map(|&i| c[i]).collect();
             xs.sort_by(|a, b| a.partial_cmp(b)
                 .unwrap_or(std::cmp::Ordering::Equal));
             let mut edges: Vec<f32> = (1..n_bins)
@@ -107,15 +108,20 @@ impl Gbm {
         } else {
             None
         };
+        // boosting re-reads every row once per (round, class); one
+        // row-major gather here beats columnar strided access inside
+        // the tree loop, and the copy dies with the fit
         let (x_local, d): (Vec<f32>, usize) = match &bins {
             Some(b) => {
                 let mut x = Vec::with_capacity(ds.n * ds.d);
+                let mut buf = Vec::with_capacity(ds.d);
                 for i in 0..ds.n {
-                    x.extend(bin_row(ds.row(i), b));
+                    ds.gather_row(i, &mut buf);
+                    x.extend(bin_row(&buf, b));
                 }
                 (x, ds.d)
             }
-            None => (ds.x.clone(), ds.d),
+            None => (ds.to_row_major(), ds.d),
         };
 
         // base score: log priors (cls) or mean (reg)
@@ -196,15 +202,16 @@ impl Gbm {
     pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
         let k = self.base.len();
         let mut scores = vec![0.0f64; rows.len() * k];
+        let mut buf = Vec::with_capacity(ds.d);
         for (r, &i) in rows.iter().enumerate() {
-            let raw = ds.row(i);
+            ds.gather_row(i, &mut buf);
             let binned;
             let row: &[f32] = match &self.bins {
                 Some(b) => {
-                    binned = bin_row(raw, b);
+                    binned = bin_row(&buf, b);
                     &binned
                 }
-                None => raw,
+                None => &buf,
             };
             for c in 0..k {
                 let mut s = self.base[c];
@@ -266,19 +273,22 @@ impl AdaBoost {
             ..Default::default()
         };
         let mut stumps = Vec::new();
+        let mut buf = Vec::with_capacity(ds.d);
         for round in 0..p.n_estimators {
             let mut trng = rng.fork(round as u64);
             // weighted resample
             let rows: Vec<usize> = (0..n)
                 .map(|_| train[trng.weighted(&w)])
                 .collect();
-            let tree = Tree::fit(&ds.x, ds.d, &y, &rows, &tp, &mut trng);
+            let tree = Tree::fit_with(|i, j| ds.at(i, j), ds.d, &y,
+                                      &rows, &tp, &mut trng);
             if cls {
                 // SAMME error on weighted train
                 let mut err = 0.0;
                 let mut preds = Vec::with_capacity(n);
                 for (t, &i) in train.iter().enumerate() {
-                    let dist = tree.predict_row(ds.row(i));
+                    ds.gather_row(i, &mut buf);
+                    let dist = tree.predict_row(&buf);
                     let pred = dist
                         .iter()
                         .enumerate()
@@ -314,7 +324,8 @@ impl AdaBoost {
                 let mut errs = Vec::with_capacity(n);
                 let mut max_e: f64 = 1e-12;
                 for &i in train {
-                    let e = (tree.predict_row(ds.row(i))[0]
+                    ds.gather_row(i, &mut buf);
+                    let e = (tree.predict_row(&buf)[0]
                         - ds.y[i] as f64).abs();
                     max_e = max_e.max(e);
                     errs.push(e);
@@ -341,19 +352,22 @@ impl AdaBoost {
             // degenerate data: keep one unweighted tree
             let mut trng = rng.fork(999);
             let rows: Vec<usize> = train.to_vec();
-            let tree = Tree::fit(&ds.x, ds.d, &y, &rows, &tp, &mut trng);
+            let tree = Tree::fit_with(|i, j| ds.at(i, j), ds.d, &y,
+                                      &rows, &tp, &mut trng);
             stumps.push((tree, 1.0));
         }
         AdaBoost { stumps, task: ds.task }
     }
 
     pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
+        let mut buf = Vec::with_capacity(ds.d);
         match self.task {
             Task::Classification { n_classes } => {
                 let mut scores = vec![0.0f32; rows.len() * n_classes];
                 for (r, &i) in rows.iter().enumerate() {
+                    ds.gather_row(i, &mut buf);
                     for (tree, alpha) in &self.stumps {
-                        let dist = tree.predict_row(ds.row(i));
+                        let dist = tree.predict_row(&buf);
                         let pred = dist
                             .iter()
                             .enumerate()
@@ -373,10 +387,11 @@ impl AdaBoost {
                 let vals = rows
                     .iter()
                     .map(|&i| {
+                        ds.gather_row(i, &mut buf);
                         let s: f64 = self
                             .stumps
                             .iter()
-                            .map(|(t, a)| a * t.predict_row(ds.row(i))[0])
+                            .map(|(t, a)| a * t.predict_row(&buf)[0])
                             .sum();
                         (s / total) as f32
                     })

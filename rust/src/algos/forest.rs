@@ -66,20 +66,22 @@ impl Forest {
                 } else {
                     train.to_vec()
                 };
-                Tree::fit(&ds.x, ds.d, &y, &rows, &tp, &mut trng)
+                Tree::fit_with(|i, j| ds.at(i, j), ds.d, &y, &rows,
+                               &tp, &mut trng)
             })
             .collect();
         Forest { trees, task: ds.task }
     }
 
     pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
+        let mut buf = Vec::with_capacity(ds.d);
         match self.task {
             Task::Classification { n_classes } => {
                 let mut scores = vec![0.0f32; rows.len() * n_classes];
                 for (r, &i) in rows.iter().enumerate() {
-                    let row = ds.row(i);
+                    ds.gather_row(i, &mut buf);
                     for t in &self.trees {
-                        let dist = t.predict_row(row);
+                        let dist = t.predict_row(&buf);
                         for c in 0..n_classes.min(dist.len()) {
                             scores[r * n_classes + c] += dist[c] as f32;
                         }
@@ -95,11 +97,11 @@ impl Forest {
                 let vals = rows
                     .iter()
                     .map(|&i| {
-                        let row = ds.row(i);
+                        ds.gather_row(i, &mut buf);
                         let s: f64 = self
                             .trees
                             .iter()
-                            .map(|t| t.predict_row(row)[0])
+                            .map(|t| t.predict_row(&buf)[0])
                             .sum();
                         (s / self.trees.len().max(1) as f64) as f32
                     })

@@ -12,6 +12,7 @@ pub mod pjrt;
 pub mod simple;
 pub mod tree;
 
+use std::borrow::Cow;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -54,19 +55,23 @@ pub trait Algorithm: Send + Sync {
     }
 }
 
-/// Subsample training rows according to the fidelity knob.
-pub(crate) fn fidelity_rows(train: &[usize], fidelity: f64,
-                            rng: &mut Rng) -> Vec<usize> {
+/// Subsample training rows according to the fidelity knob. Full
+/// fidelity borrows the caller's row set (the common case on the
+/// final refit path) instead of copying it; the rng is only advanced
+/// when an actual subsample is drawn, so the borrow is invisible to
+/// downstream random streams.
+pub(crate) fn fidelity_rows<'a>(train: &'a [usize], fidelity: f64,
+                                rng: &mut Rng) -> Cow<'a, [usize]> {
     let f = fidelity.clamp(0.05, 1.0);
     if f >= 0.999 {
-        return train.to_vec();
+        return Cow::Borrowed(train);
     }
     let m = ((train.len() as f64 * f).round() as usize)
         .clamp(8.min(train.len()), train.len());
-    rng.sample_indices(train.len(), m)
+    Cow::Owned(rng.sample_indices(train.len(), m)
         .into_iter()
         .map(|i| train[i])
-        .collect()
+        .collect())
 }
 
 // ====================================================================
@@ -96,11 +101,13 @@ struct FittedTree {
 impl FittedModel for FittedTree {
     fn predict(&self, ds: &Dataset, rows: &[usize],
                _ctx: &mut EvalContext) -> Predictions {
+        let mut buf = Vec::with_capacity(ds.d);
         match self.task {
             Task::Classification { n_classes } => {
                 let mut scores = vec![0.0f32; rows.len() * n_classes];
                 for (r, &i) in rows.iter().enumerate() {
-                    let dist = self.tree.predict_row(ds.row(i));
+                    ds.gather_row(i, &mut buf);
+                    let dist = self.tree.predict_row(&buf);
                     for c in 0..n_classes.min(dist.len()) {
                         scores[r * n_classes + c] = dist[c] as f32;
                     }
@@ -109,7 +116,10 @@ impl FittedModel for FittedTree {
             }
             Task::Regression => Predictions::Values(
                 rows.iter()
-                    .map(|&i| self.tree.predict_row(ds.row(i))[0] as f32)
+                    .map(|&i| {
+                        ds.gather_row(i, &mut buf);
+                        self.tree.predict_row(&buf)[0] as f32
+                    })
                     .collect(),
             ),
         }
@@ -154,7 +164,8 @@ impl Algorithm for DecisionTreeAlgo {
             n_classes: if cls { ds.task.n_classes() } else { 0 },
         };
         let y: Vec<f64> = ds.y.iter().map(|&v| v as f64).collect();
-        let t = tree::Tree::fit(&ds.x, ds.d, &y, &rows, &p, &mut ctx.rng);
+        let t = tree::Tree::fit_with(|i, j| ds.at(i, j), ds.d, &y,
+                                     &rows, &p, &mut ctx.rng);
         Ok(Box::new(FittedTree { tree: t, task: ds.task }))
     }
 }

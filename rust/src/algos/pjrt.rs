@@ -94,8 +94,10 @@ fn train_tensors(ds: &Dataset, rows: &[usize], canon: &Canon,
     let mut x = vec![0.0f32; n * d];
     let mut y = vec![0.0f32; n * c];
     let mut mask = vec![0.0f32; n];
+    let mut rbuf = Vec::with_capacity(ds.d);
     for (r, &i) in rows.iter().take(m).enumerate() {
-        canon.row_into(ds.row(i), &mut x[r * d..(r + 1) * d]);
+        ds.gather_row(i, &mut rbuf);
+        canon.row_into(&rbuf, &mut x[r * d..(r + 1) * d]);
         if classification {
             let cls = (ds.y[i] as usize).min(c - 1);
             y[r * c + cls] = 1.0;
@@ -175,11 +177,13 @@ impl FittedModel for FittedGlm {
     fn predict(&self, ds: &Dataset, rows: &[usize],
                _ctx: &mut EvalContext) -> Predictions {
         let mut xrow = vec![0.0f32; self.d];
+        let mut rbuf = Vec::with_capacity(ds.d);
         match self.task {
             Task::Classification { n_classes } => {
                 let mut scores = vec![0.0f32; rows.len() * n_classes];
                 for (r, &i) in rows.iter().enumerate() {
-                    self.canon.row_into(ds.row(i), &mut xrow);
+                    ds.gather_row(i, &mut rbuf);
+                    self.canon.row_into(&rbuf, &mut xrow);
                     for cc in 0..n_classes.min(self.c) {
                         let mut s = self.b[cc];
                         for j in 0..self.d {
@@ -194,7 +198,8 @@ impl FittedModel for FittedGlm {
                 let vals = rows
                     .iter()
                     .map(|&i| {
-                        self.canon.row_into(ds.row(i), &mut xrow);
+                        ds.gather_row(i, &mut rbuf);
+                        self.canon.row_into(&rbuf, &mut xrow);
                         let mut s = self.b[0];
                         for j in 0..self.d {
                             s += xrow[j] * self.w[j * self.c];
@@ -247,7 +252,8 @@ impl Algorithm for GlmAlgo {
         if rows.len() > consts.n_train {
             rows = fidelity_rows(&rows,
                                  consts.n_train as f64 / rows.len() as f64,
-                                 &mut ctx.rng);
+                                 &mut ctx.rng)
+                .into_owned();
         }
         let cls = self.spec.classification;
         let canon = Canon::fit(ds, &rows, consts.d, !cls);
@@ -310,6 +316,7 @@ impl FittedModel for FittedMlp {
     fn predict(&self, ds: &Dataset, rows: &[usize],
                _ctx: &mut EvalContext) -> Predictions {
         let mut xrow = vec![0.0f32; self.d];
+        let mut rbuf = Vec::with_capacity(ds.d);
         let mut hid = vec![0.0f32; self.h];
         let mut score_of = |row: &[f32], out: &mut [f32]| {
             for (j, o) in out.iter_mut().enumerate() {
@@ -333,7 +340,8 @@ impl FittedModel for FittedMlp {
                 let mut scores = vec![0.0f32; rows.len() * n_classes];
                 let mut full = vec![0.0f32; self.c];
                 for (r, &i) in rows.iter().enumerate() {
-                    self.canon.row_into(ds.row(i), &mut xrow);
+                    ds.gather_row(i, &mut rbuf);
+                    self.canon.row_into(&rbuf, &mut xrow);
                     score_of(&xrow, &mut full);
                     scores[r * n_classes..(r + 1) * n_classes]
                         .copy_from_slice(&full[..n_classes]);
@@ -345,7 +353,8 @@ impl FittedModel for FittedMlp {
                 let vals = rows
                     .iter()
                     .map(|&i| {
-                        self.canon.row_into(ds.row(i), &mut xrow);
+                        ds.gather_row(i, &mut rbuf);
+                        self.canon.row_into(&rbuf, &mut xrow);
                         score_of(&xrow, &mut out1);
                         out1[0] * self.canon.y_std + self.canon.y_mean
                     })
@@ -396,7 +405,8 @@ impl Algorithm for MlpAlgo {
         if rows.len() > consts.n_train {
             rows = fidelity_rows(&rows,
                                  consts.n_train as f64 / rows.len() as f64,
-                                 &mut ctx.rng);
+                                 &mut ctx.rng)
+                .into_owned();
         }
         let canon = Canon::fit(ds, &rows, consts.d, !self.classification);
         let t = train_tensors(ds, &rows, &canon, &consts,
@@ -469,6 +479,7 @@ impl FittedModel for FittedKnn {
         let consts = rt.constants();
         let (nq, d, kmax) = (consts.n_val, consts.d, consts.k_max);
         let mut xrow = vec![0.0f32; d];
+        let mut rbuf = Vec::with_capacity(ds.d);
         let mut all_scores: Vec<f32> = Vec::new();
         let k_live = match self.task {
             Task::Classification { n_classes } => n_classes,
@@ -477,7 +488,8 @@ impl FittedModel for FittedKnn {
         for chunk in rows.chunks(nq) {
             let mut xq = vec![0.0f32; nq * d];
             for (r, &i) in chunk.iter().enumerate() {
-                self.canon.row_into(ds.row(i), &mut xrow);
+                ds.gather_row(i, &mut rbuf);
+                self.canon.row_into(&rbuf, &mut xrow);
                 xq[r * d..(r + 1) * d].copy_from_slice(&xrow);
             }
             let out = rt
@@ -554,7 +566,7 @@ impl Algorithm for KnnAlgo {
         let consts = rt.constants().clone();
         let mut rows = fidelity_rows(train, ctx.fidelity, &mut ctx.rng);
         if rows.len() > consts.n_train {
-            rows.truncate(consts.n_train);
+            rows.to_mut().truncate(consts.n_train);
         }
         let canon = Canon::fit(ds, &rows, consts.d, !self.classification);
         let t = train_tensors(ds, &rows, &canon, &consts,

@@ -24,10 +24,12 @@ impl GaussianNb {
         let d = ds.d;
         let mut counts = vec![0usize; k];
         let mut means = vec![vec![0.0f64; d]; k];
+        let mut buf = Vec::with_capacity(d);
         for &i in train {
             let c = ds.label(i).min(k - 1);
             counts[c] += 1;
-            for (j, &v) in ds.row(i).iter().enumerate() {
+            ds.gather_row(i, &mut buf);
+            for (j, &v) in buf.iter().enumerate() {
                 means[c][j] += v as f64;
             }
         }
@@ -40,7 +42,8 @@ impl GaussianNb {
         let mut max_var: f64 = 1e-12;
         for &i in train {
             let c = ds.label(i).min(k - 1);
-            for (j, &v) in ds.row(i).iter().enumerate() {
+            ds.gather_row(i, &mut buf);
+            for (j, &v) in buf.iter().enumerate() {
                 let dlt = v as f64 - means[c][j];
                 vars[c][j] += dlt * dlt;
             }
@@ -66,12 +69,13 @@ impl GaussianNb {
     pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
         let k = self.n_classes;
         let mut scores = vec![0.0f32; rows.len() * k];
+        let mut buf = Vec::with_capacity(ds.d);
         for (r, &i) in rows.iter().enumerate() {
-            let row = ds.row(i);
+            ds.gather_row(i, &mut buf);
             let mut lls = vec![0.0f64; k];
             for c in 0..k {
                 let mut ll = self.priors[c].ln();
-                for (j, &v) in row.iter().enumerate() {
+                for (j, &v) in buf.iter().enumerate() {
                     let var = self.vars[c][j];
                     let dlt = v as f64 - self.means[c][j];
                     ll += -0.5 * (2.0 * std::f64::consts::PI * var).ln()
@@ -138,10 +142,11 @@ impl Discriminant {
         let cov_of = |members: &[&Vec<usize>], means_of: &dyn Fn(usize) -> usize| -> Mat {
             let mut cov = Mat::zeros(d, d);
             let mut count = 0.0f64;
+            let mut row = Vec::with_capacity(d);
             for (ci, rows) in members.iter().enumerate() {
                 for &i in rows.iter() {
                     let mu = &means[means_of(ci)];
-                    let row = ds.row(i);
+                    ds.gather_row(i, &mut row);
                     for a in 0..d {
                         let da = row[a] as f64 - mu[a];
                         for b in a..d {
@@ -203,8 +208,9 @@ impl Discriminant {
         let k = self.n_classes;
         let d = ds.d;
         let mut scores = vec![0.0f32; rows.len() * k];
+        let mut row = Vec::with_capacity(d);
         for (r, &i) in rows.iter().enumerate() {
-            let row = ds.row(i);
+            ds.gather_row(i, &mut row);
             let mut lls = vec![f64::NEG_INFINITY; k];
             for c in 0..k {
                 let cov = if self.shared { &self.covs[0] }

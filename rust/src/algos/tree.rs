@@ -120,10 +120,25 @@ impl Tree {
     /// (class index as f64 for classification).
     pub fn fit(x: &[f32], d: usize, y: &[f64], rows: &[usize],
                p: &TreeParams, rng: &mut Rng) -> Tree {
+        Self::fit_with(|i, j| x[i * d + j], d, y, rows, p, rng)
+    }
+
+    /// Fit through a feature accessor `at(row, col)`. Columnar
+    /// datasets pass `|i, j| ds.at(i, j)` and avoid materialising a
+    /// row-major copy; the closure is monomorphised so the inner scan
+    /// loops compile to the same direct loads as the slice version.
+    /// Split search order is identical regardless of accessor, so the
+    /// fitted tree is bit-identical to the row-major path on the same
+    /// values.
+    pub fn fit_with<F>(at: F, d: usize, y: &[f64], rows: &[usize],
+                       p: &TreeParams, rng: &mut Rng) -> Tree
+    where
+        F: Fn(usize, usize) -> f32,
+    {
         assert!(d > 0, "empty feature matrix");
         let mut t = Tree { nodes: Vec::new(), n_classes: p.n_classes };
         let mut rows = rows.to_vec();
-        t.grow(x, d, y, &mut rows, p, rng, 0);
+        t.grow(&at, d, y, &mut rows, p, rng, 0);
         t
     }
 
@@ -148,9 +163,12 @@ impl Tree {
 
     /// Recursively grow; returns the node index. `rows` is reordered
     /// in-place (partitioning) to avoid allocation per node.
-    fn grow(&mut self, x: &[f32], d: usize, y: &[f64],
-            rows: &mut [usize], p: &TreeParams, rng: &mut Rng,
-            depth: usize) -> usize {
+    fn grow<F>(&mut self, at: &F, d: usize, y: &[f64],
+               rows: &mut [usize], p: &TreeParams, rng: &mut Rng,
+               depth: usize) -> usize
+    where
+        F: Fn(usize, usize) -> f32,
+    {
         let make_leaf = |t: &mut Tree, rows: &[usize]| {
             let v = t.leaf_value(y, rows, p);
             t.nodes.push(Node::Leaf(v));
@@ -190,7 +208,7 @@ impl Tree {
         for &f in &feats {
             scratch.clear();
             for &i in rows.iter() {
-                scratch.push((x[i * d + f], y[i]));
+                scratch.push((at(i, f), y[i]));
             }
             if p.random_thresholds {
                 let lo = scratch.iter().map(|s| s.0).fold(f32::INFINITY,
@@ -263,7 +281,7 @@ impl Tree {
         let mut lo = 0usize;
         let mut hi = rows.len();
         while lo < hi {
-            if x[rows[lo] * d + feat] <= thr {
+            if at(rows[lo], feat) <= thr {
                 lo += 1;
             } else {
                 hi -= 1;
@@ -278,8 +296,8 @@ impl Tree {
         self.nodes.push(Node::Split { feature: feat, thresh: thr,
                                       left: 0, right: 0 });
         let (lrows, rrows) = rows.split_at_mut(lo);
-        let li = self.grow(x, d, y, lrows, p, rng, depth + 1);
-        let ri = self.grow(x, d, y, rrows, p, rng, depth + 1);
+        let li = self.grow(at, d, y, lrows, p, rng, depth + 1);
+        let ri = self.grow(at, d, y, rrows, p, rng, depth + 1);
         if let Node::Split { left, right, .. } = &mut self.nodes[node_idx] {
             *left = li;
             *right = ri;
@@ -442,6 +460,36 @@ mod tests {
             }
         }
         assert!(hits > 440, "hits={hits}");
+    }
+
+    #[test]
+    fn accessor_path_is_bit_identical_to_row_major() {
+        let (x, y) = xor_data(250, 21);
+        let d = 2;
+        // column-major copy accessed through the closure, as a
+        // columnar Dataset would be
+        let mut cols = vec![Vec::with_capacity(250); d];
+        for i in 0..250 {
+            for (j, c) in cols.iter_mut().enumerate() {
+                c.push(x[i * d + j]);
+            }
+        }
+        let rows: Vec<usize> = (0..250).collect();
+        let p = TreeParams { max_depth: 6, max_features: 0.5,
+                             ..Default::default() };
+        let a = Tree::fit(&x, d, &y, &rows, &p, &mut Rng::new(33));
+        let b = Tree::fit_with(|i, j| cols[j][i], d, &y, &rows, &p,
+                               &mut Rng::new(33));
+        assert_eq!(a.n_nodes(), b.n_nodes());
+        assert_eq!(a.depth(), b.depth());
+        for i in 0..250 {
+            let ra = a.predict_row(&x[i * d..(i + 1) * d]);
+            let rb = b.predict_row(&x[i * d..(i + 1) * d]);
+            assert_eq!(ra.len(), rb.len());
+            for (va, vb) in ra.iter().zip(rb) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -261,6 +261,58 @@ pub fn save_results(name: &str, v: &crate::util::json::Json) {
     }
 }
 
+/// Workspace root (parent of this crate's directory): where the
+/// `BENCH_*.json` summaries land so CI can upload them as artifacts
+/// without digging through `target/`.
+fn workspace_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."))
+}
+
+/// Drop a machine-readable bench summary at the repo root as
+/// `BENCH_<name>.json`. Hot-path benches call this in addition to
+/// `save_results` so the summary survives a `cargo clean` and the CI
+/// artifact step has a fixed path to upload.
+pub fn save_bench_summary(name: &str, v: &crate::util::json::Json) {
+    let path = workspace_root().join(format!("BENCH_{name}.json"));
+    if let Err(e) = std::fs::write(&path, v.to_string()) {
+        eprintln!("warn: could not write {}: {e}", path.display());
+    } else {
+        println!("[bench summary -> {}]", path.display());
+    }
+}
+
+/// Peak resident set size of this process in bytes (Linux `VmHWM`,
+/// `None` elsewhere). The large-data bench reports it next to its
+/// timings: the columnar substrate's acceptance criterion is a lower
+/// peak than a row-major copy-per-split run would need.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let kb: u64 = status
+        .lines()
+        .find(|l| l.starts_with("VmHWM:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()?;
+    Some(kb * 1024)
+}
+
+/// JSON row for one [`Timing`] (used by the `BENCH_*.json` summaries).
+pub fn timing_to_json(t: &Timing) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("operation", Json::Str(t.name.clone())),
+        ("iters", Json::Num(t.iters as f64)),
+        ("mean_s", Json::Num(t.mean_s)),
+        ("std_s", Json::Num(t.std_s)),
+        ("min_s", Json::Num(t.min_s)),
+        ("max_s", Json::Num(t.max_s)),
+    ])
+}
+
 /// Shared parser for the bench / driver knobs: `--<flag> N` (pass
 /// after `--` under `cargo bench`/`cargo run`) wins over the env
 /// var, which wins over `default`. `zero_ok` admits 0 as a real

@@ -77,6 +77,27 @@ impl Fingerprint {
         fp
     }
 
+    /// Fold a column-visibility mask (which columns of the dataset a
+    /// stage prefix sees). Columnar datasets can share column chunks
+    /// between views, so column identity is part of an artifact's
+    /// content address: a 3-of-40-column view must never collide with
+    /// the full dataset even when name/n/d match. Bits are packed
+    /// little-endian into bytes, length-prefixed (so `[true]` and
+    /// `[true, false]` fold differently).
+    pub fn push_col_mask(self, mask: &[bool]) -> Fingerprint {
+        let mut fp = self.push_u64(mask.len() as u64);
+        for chunk in mask.chunks(8) {
+            let mut byte = 0u8;
+            for (b, &on) in chunk.iter().enumerate() {
+                if on {
+                    byte |= 1 << b;
+                }
+            }
+            fp = fp.push_bytes(&[byte]);
+        }
+        fp
+    }
+
     /// Fold one config value *exactly*: floats by bit pattern with a
     /// type tag, so `F(1.0)` and `I(1)` (and any two floats that
     /// would print identically) stay distinct.
@@ -165,6 +186,20 @@ mod tests {
         let c = Config::new().with("a", Value::F(1.0));
         assert_ne!(Fingerprint::new().push_config(&a).key(),
                    Fingerprint::new().push_config(&c).key());
+    }
+
+    #[test]
+    fn col_masks_are_part_of_the_address() {
+        let base = Fingerprint::new().push_str("ds");
+        // different subsets of the same width differ
+        assert_ne!(base.push_col_mask(&[true, false, true]).key(),
+                   base.push_col_mask(&[true, true, false]).key());
+        // all-true masks of different widths differ (d is folded)
+        assert_ne!(base.push_col_mask(&[true; 8]).key(),
+                   base.push_col_mask(&[true; 9]).key());
+        // deterministic
+        assert_eq!(base.push_col_mask(&[false, true]).key(),
+                   base.push_col_mask(&[false, true]).key());
     }
 
     #[test]

@@ -61,15 +61,50 @@ const SHARDS: usize = 16;
 
 /// One cached FE state: the transformed dataset plus the (possibly
 /// balancer-augmented) training index set that goes with it.
+///
+/// Datasets are columnar with `Arc`-shared columns, so an artifact
+/// "stores" only the columns its stage materialised: `novel` marks
+/// them, and [`FeArtifact::cost`] charges the byte bound for novel
+/// columns alone — a 3-of-40-column stage costs 3 columns, the other
+/// 37 stay pointer-shared with (and accounted to) its input.
 pub struct FeArtifact {
     pub data: Arc<Dataset>,
     pub train: Arc<Vec<usize>>,
+    /// Per-column novelty mask vs the stage input (`true` = this
+    /// artifact materialised the column; `false` = pointer-shared).
+    novel: Vec<bool>,
+    /// Whether `data.y` is a fresh allocation (balancer augmentation)
+    /// rather than shared with the stage input.
+    novel_y: bool,
 }
 
 impl FeArtifact {
-    /// Approximate resident bytes, used for the LRU byte bound.
+    fn vs(data: Arc<Dataset>, train: Arc<Vec<usize>>, base: &Dataset)
+        -> FeArtifact {
+        let novel = (0..data.d)
+            .map(|j| {
+                !(0..base.d).any(|b| Arc::ptr_eq(data.col_arc(j),
+                                                 base.col_arc(b)))
+            })
+            .collect();
+        let novel_y = !Arc::ptr_eq(&data.y, &base.y);
+        FeArtifact { data, train, novel, novel_y }
+    }
+
+    /// Which output columns this artifact materialised itself.
+    pub fn novel_mask(&self) -> &[bool] {
+        &self.novel
+    }
+
+    pub fn novel_cols(&self) -> usize {
+        self.novel.iter().filter(|&&b| b).count()
+    }
+
+    /// Approximate resident bytes, used for the LRU byte bound:
+    /// novel columns + (if fresh) labels + the train index set.
     fn cost(&self) -> usize {
-        self.data.x.len() * 4 + self.data.y.len() * 4
+        self.novel_cols() * self.data.n * 4
+            + if self.novel_y { self.data.y.len() * 4 } else { 0 }
             + self.train.len() * std::mem::size_of::<usize>()
             + 64
     }
@@ -80,6 +115,7 @@ impl std::fmt::Debug for FeArtifact {
         f.debug_struct("FeArtifact")
             .field("rows", &self.data.n)
             .field("train", &self.train.len())
+            .field("novel_cols", &self.novel_cols())
             .field("cost", &self.cost())
             .finish_non_exhaustive()
     }
@@ -130,6 +166,11 @@ pub struct FeStoreStats {
     pub bytes: usize,
     pub entries: usize,
     pub cap_bytes: usize,
+    /// Columns materialised by published artifacts (charged bytes).
+    pub novel_cols: u64,
+    /// Columns published as pointer-shares of their stage input
+    /// (zero-copy; not charged).
+    pub shared_cols: u64,
 }
 
 impl FeStoreStats {
@@ -203,9 +244,26 @@ pub struct Ticket<'s> {
 
 impl<'s> Ticket<'s> {
     /// Insert the artifact, wake waiters, and enforce the byte bound.
+    /// Every column is charged as novel (no stage input to share
+    /// with); prefer [`Ticket::publish_vs`] on the pipeline path.
     pub fn publish(mut self, data: Arc<Dataset>, train: Arc<Vec<usize>>)
         -> Arc<FeArtifact> {
-        let art = Arc::new(FeArtifact { data, train });
+        let novel = vec![true; data.d];
+        let art = Arc::new(FeArtifact { data, train, novel,
+                                        novel_y: true });
+        self.store.insert_ready(self.fp, art.clone(),
+                                self.waiter.take());
+        art
+    }
+
+    /// [`Ticket::publish`] with column-level accounting: columns of
+    /// `data` that are pointer-shared with any column of `base` (the
+    /// stage input) are recorded as non-novel and not charged against
+    /// the byte bound — they are already paid for upstream.
+    pub fn publish_vs(mut self, data: Arc<Dataset>,
+                      train: Arc<Vec<usize>>, base: &Dataset)
+        -> Arc<FeArtifact> {
+        let art = Arc::new(FeArtifact::vs(data, train, base));
         self.store.insert_ready(self.fp, art.clone(),
                                 self.waiter.take());
         art
@@ -253,6 +311,8 @@ pub struct FeStore {
     misses: AtomicU64,
     published: AtomicU64,
     evictions: AtomicU64,
+    novel_cols: AtomicU64,
+    shared_cols: AtomicU64,
     /// Per-tenant counters (see [`FeTenantStats`]). Keyed by the
     /// executor's tenant id; single-search stores only ever touch
     /// tenant 0. A plain mutex: the map is tiny (one entry per live
@@ -283,6 +343,8 @@ impl FeStore {
             misses: AtomicU64::new(0),
             published: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            novel_cols: AtomicU64::new(0),
+            shared_cols: AtomicU64::new(0),
             tenants: Mutex::new(HashMap::new()),
         }
     }
@@ -447,8 +509,12 @@ impl FeStore {
             }
             self.bytes.fetch_add(cost, Ordering::Relaxed);
         }
-        // SYNC: Relaxed — monotone stats counter
+        // SYNC: Relaxed — monotone stats counters
         self.published.fetch_add(1, Ordering::Relaxed);
+        let novel = art.novel_cols() as u64;
+        self.novel_cols.fetch_add(novel, Ordering::Relaxed);
+        self.shared_cols.fetch_add(art.data.d as u64 - novel,
+                                   Ordering::Relaxed);
         if let Some(w) = waiter {
             w.resolve(WaitState::Ready(art));
         }
@@ -517,6 +583,8 @@ impl FeStore {
             misses: self.misses.load(Ordering::Relaxed),
             published: self.published.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            novel_cols: self.novel_cols.load(Ordering::Relaxed),
+            shared_cols: self.shared_cols.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
             entries: self.shards.iter()
                 .map(|s| lock(s).len())

@@ -528,7 +528,7 @@ impl Classifier {
         let ev = PipelineEvaluator::new(ds, split,
             self.system.cfg.metric, &pipeline, &algos, runtime,
             self.system.cfg.seed);
-        let mut fit_rows = ev.split.train.clone();
+        let mut fit_rows = ev.split.train.to_vec();
         fit_rows.extend_from_slice(&ev.split.valid);
         let preds: Predictions =
             ev.fit_predict(cfg, 1.0, &fit_rows, rows)?;

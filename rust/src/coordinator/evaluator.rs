@@ -116,10 +116,16 @@ impl<'a> PipelineEvaluator<'a> {
             .first()
             .map(|a| a.name().to_string())
             .unwrap_or_default();
+        // column mask: which base-dataset columns FE sees. All of
+        // them today, but columnar datasets can share chunks between
+        // views, so column identity is folded into every artifact
+        // address (a future column-view of this dataset with the same
+        // name/n/d can never collide with the full one).
         let fe_base = Fingerprint::new()
             .push_str(&ds.name)
             .push_u64(ds.n as u64)
             .push_u64(ds.d as u64)
+            .push_col_mask(&vec![true; ds.d])
             .push_u64(seed);
         let fe_base_train = fe_base.push_rows(&split.train);
         PipelineEvaluator {
@@ -358,7 +364,7 @@ impl<'a> PipelineEvaluator<'a> {
     /// Final-refit prediction on the held-out test split (fits on
     /// train + valid, as the paper does for reporting).
     pub fn test_predictions(&self, cfg: &Config) -> Result<Predictions> {
-        let mut fit_rows = self.split.train.clone();
+        let mut fit_rows = self.split.train.to_vec();
         fit_rows.extend_from_slice(&self.split.valid);
         self.fit_predict(cfg, 1.0, &fit_rows, &self.split.test)
     }

@@ -1,6 +1,24 @@
-//! Core dataset types: a dense row-major feature matrix with labels,
-//! train/valid/test splits, and the prediction container shared by all
-//! algorithms (native and PJRT-backed).
+//! Core dataset types: a columnar feature store with `Arc`-shared
+//! column chunks and labels, view-based train/valid/test splits, and
+//! the prediction container shared by all algorithms (native and
+//! PJRT-backed).
+//!
+//! # Columnar zero-copy substrate
+//!
+//! `Dataset` holds one `Arc<Vec<f32>>` per column plus an `Arc`-shared
+//! label vector, so "sharing a column" costs a refcount bump: an FE
+//! stage that touches 3 of 40 columns republishes 3 fresh columns and
+//! pointer-shares the other 37 with its input (the `cache::FeStore`
+//! charges only the novel ones). Splits and fidelity subsampling are
+//! [`RowView`]s — index ranges over one shared permutation — instead
+//! of materialised index copies.
+//!
+//! Determinism contract: columnar storage changes *where* values live,
+//! never the values or the order any consumer combines them in, so
+//! trajectories stay bit-identical to the row-major layout at every
+//! worker count, chunking, and cache bound.
+
+use std::sync::Arc;
 
 use crate::util::rng::Rng;
 
@@ -23,34 +41,108 @@ impl Task {
     }
 }
 
-/// Dense dataset; `x` is row-major `n * d`, labels are class indices
-/// (as f32) for classification or target values for regression.
+/// Columnar dataset; `d` feature columns of length `n` behind `Arc`
+/// (clone = refcount), labels are class indices (as f32) for
+/// classification or target values for regression.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub name: String,
     pub task: Task,
     pub n: usize,
     pub d: usize,
-    pub x: Vec<f32>,
-    pub y: Vec<f32>,
+    cols: Vec<Arc<Vec<f32>>>,
+    pub y: Arc<Vec<f32>>,
 }
 
 impl Dataset {
     pub fn new(name: &str, task: Task, d: usize) -> Dataset {
-        Dataset { name: name.to_string(), task, n: 0, d, x: Vec::new(),
-                  y: Vec::new() }
+        Dataset {
+            name: name.to_string(),
+            task,
+            n: 0,
+            d,
+            cols: (0..d).map(|_| Arc::new(Vec::new())).collect(),
+            y: Arc::new(Vec::new()),
+        }
     }
 
+    /// Assemble from pre-built columns (the FE apply path): columns
+    /// may be shared with another dataset — that is the point.
+    pub fn from_columns(name: &str, task: Task,
+                        cols: Vec<Arc<Vec<f32>>>, y: Arc<Vec<f32>>)
+        -> Dataset {
+        let n = y.len();
+        for (j, c) in cols.iter().enumerate() {
+            assert_eq!(c.len(), n, "column {j} length != n rows");
+        }
+        Dataset { name: name.to_string(), task, n, d: cols.len(),
+                  cols, y }
+    }
+
+    /// One feature column as a contiguous slice.
     #[inline]
-    pub fn row(&self, i: usize) -> &[f32] {
-        &self.x[i * self.d..(i + 1) * self.d]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.cols[j]
+    }
+
+    /// The `Arc` behind column `j` (zero-copy sharing / pointer
+    /// identity checks).
+    #[inline]
+    pub fn col_arc(&self, j: usize) -> &Arc<Vec<f32>> {
+        &self.cols[j]
+    }
+
+    /// Single cell access.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.cols[j][i]
+    }
+
+    /// Gather row `i` into `buf` (cleared first). Reuse `buf` across
+    /// calls in hot loops.
+    #[inline]
+    pub fn gather_row(&self, i: usize, buf: &mut Vec<f32>) {
+        buf.clear();
+        buf.extend(self.cols.iter().map(|c| c[i]));
+    }
+
+    /// Row `i` as a fresh vector (cold paths / tests; hot loops should
+    /// reuse a buffer via [`Dataset::gather_row`]).
+    pub fn row_vec(&self, i: usize) -> Vec<f32> {
+        self.cols.iter().map(|c| c[i]).collect()
+    }
+
+    /// Row-major export (`n * d`), for consumers that need contiguous
+    /// rows (PJRT tensor upload, binning).
+    pub fn to_row_major(&self) -> Vec<f32> {
+        let mut x = Vec::with_capacity(self.n * self.d);
+        for i in 0..self.n {
+            x.extend(self.cols.iter().map(|c| c[i]));
+        }
+        x
     }
 
     pub fn push_row(&mut self, row: &[f32], y: f32) {
         assert_eq!(row.len(), self.d, "row width mismatch");
-        self.x.extend_from_slice(row);
-        self.y.push(y);
+        for (c, &v) in self.cols.iter_mut().zip(row) {
+            Arc::make_mut(c).push(v);
+        }
+        Arc::make_mut(&mut self.y).push(y);
         self.n += 1;
+    }
+
+    /// Bulk row append (balancer augmentation): `x` is row-major
+    /// `y.len() * d`. Each column is copied-on-write once, not per
+    /// appended row.
+    pub fn append_rows(&mut self, x: &[f32], y: &[f32]) {
+        assert_eq!(x.len(), y.len() * self.d, "row-major shape mismatch");
+        for (j, c) in self.cols.iter_mut().enumerate() {
+            let c = Arc::make_mut(c);
+            c.reserve(y.len());
+            c.extend(x.iter().skip(j).step_by(self.d.max(1)));
+        }
+        Arc::make_mut(&mut self.y).extend_from_slice(y);
+        self.n += y.len();
     }
 
     pub fn label(&self, i: usize) -> usize {
@@ -59,87 +151,165 @@ impl Dataset {
     }
 
     /// Rows selected by index (allows repetition — used by balancers
-    /// and bootstrap sampling).
+    /// and bootstrap sampling). Materialises fresh columns.
     pub fn subset(&self, idx: &[usize]) -> Dataset {
-        let mut out = Dataset::new(&self.name, self.task, self.d);
-        out.x.reserve(idx.len() * self.d);
-        out.y.reserve(idx.len());
-        for &i in idx {
-            out.x.extend_from_slice(self.row(i));
-            out.y.push(self.y[i]);
-        }
-        out.n = idx.len();
-        out
+        let cols = self
+            .cols
+            .iter()
+            .map(|c| Arc::new(idx.iter().map(|&i| c[i]).collect()))
+            .collect();
+        let y = Arc::new(idx.iter().map(|&i| self.y[i]).collect());
+        Dataset::from_columns(&self.name, self.task, cols, y)
     }
 
-    /// Class frequency histogram (classification only).
+    /// Class frequency histogram (classification only). Counts every
+    /// label exhaustively: out-of-range labels are a caller bug
+    /// (`debug_assert`ed) and saturate into the top class in release
+    /// rather than silently vanishing from the histogram.
     pub fn class_counts(&self) -> Vec<usize> {
         let k = self.task.n_classes();
         let mut counts = vec![0usize; k];
-        for &y in &self.y {
+        if k == 0 {
+            return counts;
+        }
+        for &y in self.y.iter() {
             let c = y as usize;
-            if c < k {
-                counts[c] += 1;
-            }
+            debug_assert!(c < k, "label {c} out of range for {k} classes");
+            counts[c.min(k - 1)] += 1;
         }
         counts
     }
 
     /// Column mean/std over given rows (used by meta-features & FE).
+    /// Per-column accumulation order equals the historical row-major
+    /// loop's (row order within each column), so results are
+    /// bit-identical to the seed layout.
     pub fn col_stats(&self, rows: &[usize]) -> (Vec<f64>, Vec<f64>) {
-        let mut mean = vec![0.0f64; self.d];
-        let mut var = vec![0.0f64; self.d];
         let n = rows.len().max(1) as f64;
-        for &i in rows {
-            for (j, &v) in self.row(i).iter().enumerate() {
-                mean[j] += v as f64;
+        let mut mean = vec![0.0f64; self.d];
+        let mut std = vec![0.0f64; self.d];
+        for (j, c) in self.cols.iter().enumerate() {
+            let mut m = 0.0f64;
+            for &i in rows {
+                m += c[i] as f64;
             }
-        }
-        for m in &mut mean {
-            *m /= n;
-        }
-        for &i in rows {
-            for (j, &v) in self.row(i).iter().enumerate() {
-                let dlt = v as f64 - mean[j];
-                var[j] += dlt * dlt;
+            m /= n;
+            let mut v = 0.0f64;
+            for &i in rows {
+                let dlt = c[i] as f64 - m;
+                v += dlt * dlt;
             }
+            mean[j] = m;
+            std[j] = (v / n).sqrt();
         }
-        let std: Vec<f64> = var.iter().map(|v| (v / n).sqrt()).collect();
         (mean, std)
+    }
+}
+
+/// A set of row indices as a view into a shared permutation: cloning
+/// is a refcount bump + two offsets, never an index copy. Derefs to
+/// `&[usize]`, so any `&[usize]` consumer takes a `RowView` as-is.
+#[derive(Clone, Debug)]
+pub struct RowView {
+    perm: Arc<Vec<usize>>,
+    lo: usize,
+    hi: usize,
+}
+
+impl RowView {
+    /// View owning its own (whole) index vector.
+    pub fn from_vec(v: Vec<usize>) -> RowView {
+        let hi = v.len();
+        RowView { perm: Arc::new(v), lo: 0, hi }
+    }
+
+    /// Range view over a shared permutation.
+    pub fn slice_of(perm: &Arc<Vec<usize>>, lo: usize, hi: usize)
+        -> RowView {
+        assert!(lo <= hi && hi <= perm.len(), "view range out of bounds");
+        RowView { perm: Arc::clone(perm), lo, hi }
+    }
+
+    pub fn to_vec(&self) -> Vec<usize> {
+        self[..].to_vec()
+    }
+
+    /// The shared permutation this view ranges over (pointer-identity
+    /// probes in tests).
+    pub fn perm_arc(&self) -> &Arc<Vec<usize>> {
+        &self.perm
+    }
+}
+
+impl std::ops::Deref for RowView {
+    type Target = [usize];
+    #[inline]
+    fn deref(&self) -> &[usize] {
+        &self.perm[self.lo..self.hi]
     }
 }
 
 /// Index-based split. `train` is what pipelines fit on, `valid` drives
 /// the search utility, `test` is only touched for final reporting.
+/// All three parts are views over ONE shared permutation laid out
+/// `[train | valid | test]` — constructing or cloning a `Split` never
+/// copies indices.
 #[derive(Clone, Debug)]
 pub struct Split {
-    pub train: Vec<usize>,
-    pub valid: Vec<usize>,
-    pub test: Vec<usize>,
+    pub train: RowView,
+    pub valid: RowView,
+    pub test: RowView,
 }
 
 impl Split {
+    /// Build from materialised parts (test helpers, external callers):
+    /// concatenates into the canonical shared permutation.
+    pub fn from_parts(train: Vec<usize>, valid: Vec<usize>,
+                      test: Vec<usize>) -> Split {
+        let (b1, b2) = (train.len(), train.len() + valid.len());
+        let mut perm = train;
+        perm.extend_from_slice(&valid);
+        perm.extend_from_slice(&test);
+        let b3 = perm.len();
+        let perm = Arc::new(perm);
+        Split {
+            train: RowView::slice_of(&perm, 0, b1),
+            valid: RowView::slice_of(&perm, b1, b2),
+            test: RowView::slice_of(&perm, b2, b3),
+        }
+    }
+
     /// The paper's protocol: 4/5 for search (of which an inner
     /// validation fifth drives utility), 1/5 held-out test.
     pub fn standard(n: usize, rng: &mut Rng) -> Split {
-        let mut perm = rng.permutation(n);
+        // rng.permutation already yields [train | valid | test] in the
+        // historical order: the old code split the tail off twice.
+        let perm = Arc::new(rng.permutation(n));
         let n_test = n / 5;
-        let test = perm.split_off(n - n_test);
-        let n_valid = perm.len() / 5;
-        let valid = perm.split_off(perm.len() - n_valid);
-        Split { train: perm, valid, test }
+        let b2 = n - n_test;
+        let n_valid = b2 / 5;
+        let b1 = b2 - n_valid;
+        Split {
+            train: RowView::slice_of(&perm, 0, b1),
+            valid: RowView::slice_of(&perm, b1, b2),
+            test: RowView::slice_of(&perm, b2, n),
+        }
     }
 
     /// Stratified variant keeping class proportions in every part
-    /// (classification); falls back to `standard` for regression.
+    /// (classification); falls back to `standard` for regression and
+    /// for degenerate `n_classes == 0` tasks (which previously
+    /// underflowed `k - 1`).
     pub fn stratified(ds: &Dataset, rng: &mut Rng) -> Split {
-        if !ds.task.is_classification() {
+        let k = ds.task.n_classes();
+        if !ds.task.is_classification() || k == 0 {
             return Split::standard(ds.n, rng);
         }
-        let k = ds.task.n_classes();
         let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); k];
         for i in 0..ds.n {
-            by_class[ds.label(i).min(k - 1)].push(i);
+            let c = ds.label(i);
+            debug_assert!(c < k, "label {c} out of range for {k} classes");
+            by_class[c.min(k - 1)].push(i);
         }
         let (mut train, mut valid, mut test) =
             (Vec::new(), Vec::new(), Vec::new());
@@ -156,21 +326,31 @@ impl Split {
         rng.shuffle(&mut train);
         rng.shuffle(&mut valid);
         rng.shuffle(&mut test);
-        Split { train, valid, test }
+        Split::from_parts(train, valid, test)
     }
 
     /// k-fold split of the *search* portion (train+valid), used by
-    /// cross-validation utilities.
-    pub fn kfold(n: usize, k: usize, rng: &mut Rng) -> Vec<(Vec<usize>, Vec<usize>)> {
+    /// cross-validation utilities. `k` is clamped to `1..=n` (a `0`
+    /// request previously divided by zero; `k > n` produced empty
+    /// folds). Each fold's train/valid are views over one shared
+    /// `[train | valid]` permutation.
+    pub fn kfold(n: usize, k: usize, rng: &mut Rng)
+        -> Vec<(RowView, RowView)> {
+        let k = k.clamp(1, n.max(1));
         let perm = rng.permutation(n);
         let mut folds = Vec::with_capacity(k);
         for f in 0..k {
             let lo = n * f / k;
             let hi = n * (f + 1) / k;
-            let valid: Vec<usize> = perm[lo..hi].to_vec();
-            let train: Vec<usize> =
-                perm[..lo].iter().chain(&perm[hi..]).copied().collect();
-            folds.push((train, valid));
+            // fold layout: [train (complement, in order) | valid]
+            let mut fold: Vec<usize> = Vec::with_capacity(n);
+            fold.extend_from_slice(&perm[..lo]);
+            fold.extend_from_slice(&perm[hi..]);
+            fold.extend_from_slice(&perm[lo..hi]);
+            let fold = Arc::new(fold);
+            let b = n - (hi - lo);
+            folds.push((RowView::slice_of(&fold, 0, b),
+                        RowView::slice_of(&fold, b, n)));
         }
         folds
     }
@@ -231,6 +411,8 @@ impl Predictions {
     }
 
     /// Elementwise weighted sum of predictions (ensembling substrate).
+    /// Panics unless every member has the same kind AND shape — a
+    /// short member used to silently truncate the blend.
     pub fn weighted_sum(preds: &[(&Predictions, f64)]) -> Predictions {
         assert!(!preds.is_empty());
         match preds[0].0 {
@@ -238,7 +420,12 @@ impl Predictions {
                 let mut acc = vec![0.0f32; scores.len()];
                 for (p, w) in preds {
                     match p {
-                        Predictions::ClassScores { scores: s, .. } => {
+                        Predictions::ClassScores { n_classes: k2,
+                                                   scores: s } => {
+                            assert_eq!(*k2, *n_classes,
+                                       "mismatched n_classes in blend");
+                            assert_eq!(s.len(), acc.len(),
+                                       "mismatched prediction lengths");
                             for (a, &v) in acc.iter_mut().zip(s.iter()) {
                                 *a += (*w as f32) * v;
                             }
@@ -252,7 +439,10 @@ impl Predictions {
             Predictions::Values(v0) => {
                 let mut acc = vec![0.0f32; v0.len()];
                 for (p, w) in preds {
-                    for (a, &v) in acc.iter_mut().zip(p.values().iter()) {
+                    let vals = p.values();
+                    assert_eq!(vals.len(), acc.len(),
+                               "mismatched prediction lengths");
+                    for (a, &v) in acc.iter_mut().zip(vals.iter()) {
                         *a += (*w as f32) * v;
                     }
                 }
@@ -277,11 +467,53 @@ mod tests {
     #[test]
     fn rows_and_subsets() {
         let d = toy(10, 2);
-        assert_eq!(d.row(3), &[3.0, 6.0]);
+        assert_eq!(d.row_vec(3), &[3.0, 6.0]);
+        assert_eq!(d.at(3, 1), 6.0);
         let s = d.subset(&[1, 1, 4]);
         assert_eq!(s.n, 3);
-        assert_eq!(s.row(0), s.row(1));
+        assert_eq!(s.row_vec(0), s.row_vec(1));
         assert_eq!(s.y[2], 0.0);
+    }
+
+    #[test]
+    fn columns_are_shared_by_refcount() {
+        let d = toy(10, 2);
+        let d2 = d.clone();
+        for j in 0..d.d {
+            assert!(Arc::ptr_eq(d.col_arc(j), d2.col_arc(j)));
+        }
+        assert!(Arc::ptr_eq(&d.y, &d2.y));
+        // from_columns with one replaced column shares the other
+        let fresh = Arc::new(vec![9.0f32; d.n]);
+        let ds3 = Dataset::from_columns(
+            "mix", d.task,
+            vec![Arc::clone(d.col_arc(0)), fresh.clone()],
+            Arc::clone(&d.y));
+        assert!(Arc::ptr_eq(ds3.col_arc(0), d.col_arc(0)));
+        assert!(Arc::ptr_eq(ds3.col_arc(1), &fresh));
+    }
+
+    #[test]
+    fn push_row_after_share_leaves_the_shared_copy_alone() {
+        let mut d = toy(4, 2);
+        let shared = d.clone();
+        d.push_row(&[100.0, 200.0], 1.0);
+        assert_eq!(d.n, 5);
+        assert_eq!(shared.n, 4);
+        assert_eq!(shared.col(0).len(), 4);
+        assert_eq!(d.at(4, 1), 200.0);
+    }
+
+    #[test]
+    fn gather_and_row_major_round_trip() {
+        let d = toy(5, 2);
+        let x = d.to_row_major();
+        assert_eq!(x.len(), 10);
+        let mut buf = Vec::new();
+        for i in 0..d.n {
+            d.gather_row(i, &mut buf);
+            assert_eq!(&x[i * d.d..(i + 1) * d.d], &buf[..]);
+        }
     }
 
     #[test]
@@ -292,9 +524,12 @@ mod tests {
         assert_eq!(s.valid.len(), 16);
         assert_eq!(s.train.len(), 64);
         let mut all: Vec<usize> = s.train.iter()
-            .chain(&s.valid).chain(&s.test).copied().collect();
+            .chain(s.valid.iter()).chain(s.test.iter()).copied().collect();
         all.sort_unstable();
         assert_eq!(all, (0..100).collect::<Vec<_>>());
+        // one shared permutation behind all three parts
+        assert!(Arc::ptr_eq(s.train.perm_arc(), s.valid.perm_arc()));
+        assert!(Arc::ptr_eq(s.train.perm_arc(), s.test.perm_arc()));
     }
 
     #[test]
@@ -311,6 +546,17 @@ mod tests {
     }
 
     #[test]
+    fn stratified_with_zero_classes_falls_back_to_standard() {
+        // previously underflowed `k - 1`
+        let mut d = Dataset::new("z", Task::Classification { n_classes: 0 }, 1);
+        for i in 0..50 {
+            d.push_row(&[i as f32], 0.0);
+        }
+        let s = Split::stratified(&d, &mut Rng::new(3));
+        assert_eq!(s.train.len() + s.valid.len() + s.test.len(), 50);
+    }
+
+    #[test]
     fn kfold_covers_everything_once() {
         let mut rng = Rng::new(2);
         let folds = Split::kfold(53, 5, &mut rng);
@@ -318,11 +564,22 @@ mod tests {
         let mut seen = vec![0usize; 53];
         for (tr, va) in &folds {
             assert_eq!(tr.len() + va.len(), 53);
-            for &i in va {
+            for &i in va.iter() {
                 seen[i] += 1;
             }
         }
         assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn kfold_clamps_degenerate_k() {
+        // k == 0 previously divided by zero; k > n made empty folds
+        let folds = Split::kfold(10, 0, &mut Rng::new(4));
+        assert_eq!(folds.len(), 1);
+        assert_eq!(folds[0].1.len(), 10);
+        let folds = Split::kfold(3, 10, &mut Rng::new(5));
+        assert_eq!(folds.len(), 3);
+        assert!(folds.iter().all(|(_, va)| !va.is_empty()));
     }
 
     #[test]
@@ -343,8 +600,36 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "mismatched prediction lengths")]
+    fn weighted_sum_rejects_short_members() {
+        let a = Predictions::Values(vec![1.0, 2.0]);
+        let b = Predictions::Values(vec![3.0]);
+        let _ = Predictions::weighted_sum(&[(&a, 0.5), (&b, 0.5)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched n_classes")]
+    fn weighted_sum_rejects_mismatched_classes() {
+        let a = Predictions::ClassScores { n_classes: 2,
+                                           scores: vec![0.1; 4] };
+        let b = Predictions::ClassScores { n_classes: 4,
+                                           scores: vec![0.1; 4] };
+        let _ = Predictions::weighted_sum(&[(&a, 0.5), (&b, 0.5)]);
+    }
+
+    #[test]
     fn class_counts_histogram() {
         let d = toy(10, 3);
         assert_eq!(d.class_counts(), vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn row_view_derefs_as_slice() {
+        let v = RowView::from_vec(vec![5, 6, 7]);
+        let s: &[usize] = &v;
+        assert_eq!(s, &[5, 6, 7]);
+        assert_eq!(v.to_vec(), vec![5, 6, 7]);
+        fn takes_slice(r: &[usize]) -> usize { r.len() }
+        assert_eq!(takes_slice(&v), 3);
     }
 }

@@ -306,11 +306,11 @@ mod tests {
                      Task::Classification { n_classes: 3 });
         let d1 = generate(&p);
         let d2 = generate(&p);
-        assert_eq!(d1.x, d2.x);
+        assert_eq!(d1.to_row_major(), d2.to_row_major());
         assert_eq!(d1.y, d2.y);
         let mut p2 = p.clone();
         p2.seed = 8;
-        assert_ne!(generate(&p2).x, d1.x);
+        assert_ne!(generate(&p2).to_row_major(), d1.to_row_major());
     }
 
     #[test]
@@ -330,7 +330,8 @@ mod tests {
             let p = base("t", gen, task);
             let ds = generate(&p);
             assert_eq!(ds.n, 400);
-            assert_eq!(ds.x.len(), 400 * 10);
+            assert_eq!(ds.d, 10);
+            assert!((0..ds.d).all(|j| ds.col(j).len() == 400));
             if task.is_classification() {
                 let k = task.n_classes();
                 assert!(ds.y.iter().all(|&y| (y as usize) < k));
@@ -389,7 +390,7 @@ mod tests {
         // radius separates classes almost perfectly
         let mut correct = 0;
         for i in 0..ds.n {
-            let r = (ds.row(i)[0].powi(2) + ds.row(i)[1].powi(2)).sqrt();
+            let r = (ds.at(i, 0).powi(2) + ds.at(i, 1).powi(2)).sqrt();
             let pred = if r < 1.75 { 0 } else { 1 };
             if pred == ds.label(i) {
                 correct += 1;

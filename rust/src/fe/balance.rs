@@ -57,11 +57,13 @@ pub fn apply_balancer(name: &str, ds: &Dataset, train: &[usize],
         "weight_balancer" => {
             // oversample minority classes by duplication up to parity
             let mut out = empty;
+            let mut buf = Vec::with_capacity(ds.d);
             for members in by_class.iter().filter(|m| !m.is_empty()) {
                 let deficit = max_count - members.len();
                 for _ in 0..deficit {
                     let &i = rng.choice(members);
-                    out.extra_x.extend_from_slice(ds.row(i));
+                    ds.gather_row(i, &mut buf);
+                    out.extra_x.extend_from_slice(&buf);
                     out.extra_y.push(ds.y[i]);
                     out.n_extra += 1;
                 }
@@ -74,6 +76,8 @@ pub fn apply_balancer(name: &str, ds: &Dataset, train: &[usize],
             let kn = cfg.usize_or("k_neighbors", 5).max(1);
             let ratio = cfg.f64_or("target_ratio", 1.0).clamp(0.1, 1.0);
             let mut out = empty;
+            let mut buf = Vec::with_capacity(ds.d);
+            let mut nbr = Vec::with_capacity(ds.d);
             for members in by_class.iter().filter(|m| !m.is_empty()) {
                 let target = (max_count as f64 * ratio) as usize;
                 if members.len() >= target {
@@ -82,24 +86,26 @@ pub fn apply_balancer(name: &str, ds: &Dataset, train: &[usize],
                 let deficit = target - members.len();
                 for _ in 0..deficit {
                     let &i = rng.choice(members);
+                    ds.gather_row(i, &mut buf);
                     // k nearest same-class neighbours of i (brute force
                     // over the minority class, which is small)
                     let mut dists: Vec<(f64, usize)> = members
                         .iter()
                         .filter(|&&j| j != i)
                         .map(|&j| {
-                            let d2: f64 = ds
-                                .row(i)
+                            let d2: f64 = buf
                                 .iter()
-                                .zip(ds.row(j))
-                                .map(|(a, b)| ((a - b) as f64).powi(2))
+                                .enumerate()
+                                .map(|(c, &a)| {
+                                    ((a - ds.at(j, c)) as f64).powi(2)
+                                })
                                 .sum();
                             (d2, j)
                         })
                         .collect();
                     if dists.is_empty() {
                         // singleton class: duplicate
-                        out.extra_x.extend_from_slice(ds.row(i));
+                        out.extra_x.extend_from_slice(&buf);
                         out.extra_y.push(ds.y[i]);
                         out.n_extra += 1;
                         continue;
@@ -108,10 +114,10 @@ pub fn apply_balancer(name: &str, ds: &Dataset, train: &[usize],
                         .unwrap_or(std::cmp::Ordering::Equal));
                     let (_, j) = dists[rng.below(dists.len().min(kn))];
                     let t = rng.f64();
-                    let row: Vec<f32> = ds
-                        .row(i)
+                    ds.gather_row(j, &mut nbr);
+                    let row: Vec<f32> = buf
                         .iter()
-                        .zip(ds.row(j))
+                        .zip(&nbr)
                         .map(|(a, b)| a + (t as f32) * (b - a))
                         .collect();
                     out.extra_x.extend_from_slice(&row);
@@ -197,10 +203,10 @@ mod tests {
             .filter(|&i| ds.label(i) == 1).collect();
         for col in 0..ds.d {
             let lo = minority.iter()
-                .map(|&i| ds.row(i)[col])
+                .map(|&i| ds.at(i, col))
                 .fold(f32::INFINITY, f32::min);
             let hi = minority.iter()
-                .map(|&i| ds.row(i)[col])
+                .map(|&i| ds.at(i, col))
                 .fold(f32::NEG_INFINITY, f32::max);
             for r in 0..b.n_extra {
                 let v = b.extra_x[r * ds.d + col];

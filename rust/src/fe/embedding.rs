@@ -57,12 +57,13 @@ pub fn apply_embedding(name: &str, ds: &Dataset) -> Dataset {
     let with_stats = name == "spectral_large";
     let d_out = bands.len() + if with_stats { 3 } else { 0 };
     let mut out = Dataset::new(&ds.name, ds.task, d_out);
+    let mut row = Vec::with_capacity(ds.d);
     for i in 0..ds.n {
-        let row = ds.row(i);
+        ds.gather_row(i, &mut row);
         let mut feats: Vec<f32> =
-            bands.iter().map(|&f| band_energy(row, f)).collect();
+            bands.iter().map(|&f| band_energy(&row, f)).collect();
         if with_stats {
-            feats.extend(stats_features(row));
+            feats.extend(stats_features(&row));
         }
         out.push_row(&feats, ds.y[i]);
     }
@@ -82,7 +83,7 @@ mod tests {
         p.n = 40;
         let ds = generate(&p);
         let out = apply_embedding("raw", &ds);
-        assert_eq!(out.x, ds.x);
+        assert_eq!(out.to_row_major(), ds.to_row_major());
     }
 
     #[test]
@@ -112,8 +113,8 @@ mod tests {
         for i in 0..half {
             let c = ds.label(i);
             counts[c] += 1;
-            for (j, &v) in ds.row(i).iter().enumerate() {
-                centroids[c][j] += v as f64;
+            for j in 0..ds.d {
+                centroids[c][j] += ds.at(i, j) as f64;
             }
         }
         for (c, cent) in centroids.iter_mut().enumerate() {
@@ -123,7 +124,7 @@ mod tests {
         }
         let mut hits = 0;
         for i in half..ds.n {
-            let row = ds.row(i);
+            let row = ds.row_vec(i);
             let pred = (0..k)
                 .min_by(|&a, &b| {
                     let da: f64 = row.iter().enumerate()
@@ -149,6 +150,7 @@ mod tests {
         let ds = generate(&p);
         let out = apply_embedding("spectral_large", &ds);
         assert_eq!(out.d, 19);
-        assert!(out.x.iter().all(|v| v.is_finite()));
+        assert!((0..out.d).all(|j| out.col(j).iter()
+            .all(|v| v.is_finite())));
     }
 }

@@ -323,13 +323,18 @@ impl FePipeline {
                         rows = FeRows::Shared(art.train.clone());
                     }
                     Resolved::Compute(ticket) => {
+                        // snapshot the stage input (shallow: column
+                        // Arcs only) so the publish can charge the
+                        // byte bound for novel columns alone
+                        let before: Dataset = (*data).clone();
                         let changed = self.run_stage(plan, &mut data,
                                                      &mut rows, fx);
                         if changed {
                             data = data.into_shared();
                             if let FeData::Shared(a) = &data {
-                                ticket.publish(a.clone(),
-                                               rows.share());
+                                ticket.publish_vs(a.clone(),
+                                                  rows.share(),
+                                                  &before);
                             } else {
                                 debug_assert!(
                                     false,
@@ -344,8 +349,12 @@ impl FePipeline {
                             // an artifact — so later evaluations
                             // sharing the prefix skip the (possibly
                             // expensive) fit instead of rediscovering
-                            // the identity every time
-                            ticket.publish(a.clone(), rows.share());
+                            // the identity every time. Aliased vs
+                            // itself: every column reads as shared,
+                            // so the alias is charged ~nothing.
+                            let base = a.clone();
+                            ticket.publish_vs(a.clone(), rows.share(),
+                                              &base);
                         }
                         // remaining !changed case (the state is still
                         // the pristine borrow): the dropped ticket
@@ -376,8 +385,11 @@ impl FePipeline {
                 true
             }
             StageKind::Scaler => {
-                let f = ops::fit_scaler(op, &**data, rows,
-                                        &plan.local);
+                // mergeable fits (min/max, moments, quantile grids)
+                // row-shard over the pool; the blocked merge keeps
+                // them bit-identical at every worker count
+                let f = ops::fit_scaler_with(op, &**data, rows,
+                                             &plan.local, fx.exec);
                 if matches!(f, ops::Fitted::Identity) {
                     false
                 } else {
@@ -394,9 +406,7 @@ impl FePipeline {
                 } else {
                     let d = data.make_mut();
                     let first_new = d.n;
-                    d.x.extend_from_slice(&b.extra_x);
-                    d.y.extend_from_slice(&b.extra_y);
-                    d.n += b.n_extra;
+                    d.append_rows(&b.extra_x, &b.extra_y);
                     rows.make_mut()
                         .extend(first_new..first_new + b.n_extra);
                     true
@@ -616,6 +626,15 @@ mod tests {
     use crate::data::synthetic::{generate, GenKind, Profile};
     use crate::space::Value;
 
+    fn assert_bits_eq(a: &Dataset, b: &Dataset) {
+        assert_eq!((a.n, a.d), (b.n, b.d));
+        for j in 0..a.d {
+            for (x, y) in a.col(j).iter().zip(b.col(j)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "col {j}");
+            }
+        }
+    }
+
     fn ds() -> (Dataset, Vec<usize>) {
         let p = Profile {
             name: "pipe".into(),
@@ -688,18 +707,22 @@ mod tests {
                                  &FeExec::local(7));
         assert!(matches!(out.data, FeData::Borrowed(_)),
                 "identity pipeline must not copy the dataset");
-        assert_eq!(out.data.x.as_ptr(), data.x.as_ptr(),
-                   "feature storage must be shared, not cloned");
-        assert_eq!(out.data.y.as_ptr(), data.y.as_ptr(),
-                   "label storage must be shared, not cloned");
+        for j in 0..data.d {
+            assert!(Arc::ptr_eq(out.data.col_arc(j), data.col_arc(j)),
+                    "column {j} must be shared, not cloned");
+        }
+        assert!(Arc::ptr_eq(&out.data.y, &data.y),
+                "label storage must be shared, not cloned");
 
-        // ...and a modifying stage still materialises a fresh copy
+        // ...and a modifying stage still materialises fresh columns
         let scaled_cfg = cfg.merged(&Config::new().with(
             "scaler", Value::C("standard".into())));
         let out2 = pipe.fit_apply(&data, &scaled_cfg, &train,
                                   &FeExec::local(7));
         assert!(matches!(out2.data, FeData::Owned(_)));
-        assert_ne!(out2.data.x.as_ptr(), data.x.as_ptr());
+        assert!(!Arc::ptr_eq(out2.data.col_arc(0), data.col_arc(0)));
+        // labels ride through shared even when features change
+        assert!(Arc::ptr_eq(&out2.data.y, &data.y));
         // the borrowed-through original is untouched
         assert_eq!(data.n, 150);
     }
@@ -724,13 +747,10 @@ mod tests {
         let b = pipe.fit_apply(&data, &prefixed, &train,
                                &FeExec::local(3));
         // the stage genuinely transformed...
-        assert_ne!(a.data.x.as_ptr(), data.x.as_ptr(),
-                   "quantile scaler must transform");
+        assert!(!Arc::ptr_eq(a.data.col_arc(0), data.col_arc(0)),
+                "quantile scaler must transform");
         // ...and both spellings produce the identical output
-        assert_eq!(a.data.x.len(), b.data.x.len());
-        for (x, y) in a.data.x.iter().zip(&b.data.x) {
-            assert_eq!(x.to_bits(), y.to_bits());
-        }
+        assert_bits_eq(&a.data, &b.data);
     }
 
     #[test]
@@ -744,7 +764,8 @@ mod tests {
             let cfg = cs.sample(&mut rng);
             let out = pipe.fit_apply(&data, &cfg, &train, &fx);
             assert!(out.data.d >= 1 && out.data.d <= ops::MAX_WIDTH);
-            assert!(out.data.x.iter().all(|v| v.is_finite()),
+            assert!((0..out.data.d).all(|j| out.data.col(j).iter()
+                        .all(|v| v.is_finite())),
                     "cfg {:?}", cfg.key());
             assert!(out.train.len() >= train.len());
             // balancer rows must be appended at the end
@@ -767,10 +788,7 @@ mod tests {
         let _ = pipe.fit_apply(&data, &other, &train,
                                &FeExec::local(4));
         let b = pipe.fit_apply(&data, &cfg, &train, &FeExec::local(4));
-        assert_eq!(a.data.x.len(), b.data.x.len());
-        for (x, y) in a.data.x.iter().zip(&b.data.x) {
-            assert_eq!(x.to_bits(), y.to_bits());
-        }
+        assert_bits_eq(&a.data, &b.data);
         assert_eq!(&a.train[..], &b.train[..]);
     }
 
@@ -796,10 +814,7 @@ mod tests {
                 let b = pipe.fit_apply(&data, cfg, &train, &on);
                 assert_eq!(a.data.n, b.data.n, "pass {pass}");
                 assert_eq!(a.data.d, b.data.d, "pass {pass}");
-                for (x, y) in a.data.x.iter().zip(&b.data.x) {
-                    assert_eq!(x.to_bits(), y.to_bits(),
-                               "pass {pass}, cfg {:?}", cfg.key());
-                }
+                assert_bits_eq(&a.data, &b.data);
                 assert_eq!(&a.train[..], &b.train[..],
                            "pass {pass}");
             }
@@ -836,9 +851,7 @@ mod tests {
         let off = pipe.fit_apply(&data, &cfg2, &train,
                                  &FeExec { store: None, exec: None,
                                            base, tenant: 0 });
-        for (x, y) in out2.data.x.iter().zip(&off.data.x) {
-            assert_eq!(x.to_bits(), y.to_bits());
-        }
+        assert_bits_eq(&out2.data, &off.data);
     }
 
     #[test]

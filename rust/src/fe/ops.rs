@@ -178,52 +178,137 @@ impl Fitted {
         }
     }
 
-    /// Transform a whole dataset (labels copied through).
+    /// Transform a whole dataset (labels `Arc`-shared through).
+    ///
+    /// Columnar zero-copy contract: output columns that are
+    /// bit-for-bit the input column are *pointer-shared* (`Arc`
+    /// clone), never copied — `Identity` shares every column,
+    /// `Select` shares the kept ones, `Affine` shares columns whose
+    /// `(shift, scale)` is a no-op, and `CrossPairs` shares the
+    /// original `d` columns under the appended products. Every
+    /// computed cell goes through the exact per-row / per-column math
+    /// the row-major layout used, so values are bit-identical.
     pub fn apply(&self, ds: &Dataset) -> Dataset {
-        let d_out = self.out_dim(ds.d);
-        let mut out = Dataset::new(&ds.name, ds.task, d_out);
-        out.x.reserve(ds.n * d_out);
-        out.y.reserve(ds.n);
-        for i in 0..ds.n {
-            let row = self.apply_row(ds.row(i));
-            debug_assert_eq!(row.len(), d_out);
-            out.x.extend_from_slice(&row);
-            out.y.push(ds.y[i]);
-        }
-        out.n = ds.n;
-        out
+        self.apply_with(ds, None)
     }
 
     /// [`Self::apply`], row-sharded across the executor's worker pool:
     /// contiguous row ranges are transformed in parallel and spliced
-    /// back in order. Every row's output is computed by the identical
-    /// `apply_row` call, so the result is bit-identical to the serial
-    /// [`Self::apply`] at every worker count and chunking — sharding
-    /// is a pure wall-clock knob. Falls back to the serial loop on a
-    /// serial executor, below [`SHARD_MIN_ROWS`] rows, or when called
-    /// from a pool worker (the evaluation level already owns the
-    /// pool; see `runtime::executor::Executor::map_ranges`).
+    /// back in order (per column). Every row's output is computed by
+    /// the identical per-row math, so the result is bit-identical to
+    /// the serial [`Self::apply`] at every worker count and chunking
+    /// — sharding is a pure wall-clock knob. Falls back to the serial
+    /// loop on a serial executor, below [`SHARD_MIN_ROWS`] rows, or
+    /// when called from a pool worker (the evaluation level already
+    /// owns the pool; see `runtime::executor::Executor::map_ranges`).
     pub fn apply_sharded(&self, ds: &Dataset,
                          exec: &crate::runtime::executor::Executor)
         -> Dataset {
-        let d_out = self.out_dim(ds.d);
-        let parts = exec.map_ranges(ds.n, SHARD_MIN_ROWS, |lo, hi| {
-            let mut x = Vec::with_capacity((hi - lo) * d_out);
-            for i in lo..hi {
-                let row = self.apply_row(ds.row(i));
-                debug_assert_eq!(row.len(), d_out);
-                x.extend_from_slice(&row);
+        self.apply_with(ds, Some(exec))
+    }
+
+    fn apply_with(&self, ds: &Dataset,
+                  exec: Option<&crate::runtime::executor::Executor>)
+        -> Dataset {
+        use std::sync::Arc;
+        let cols: Vec<Arc<Vec<f32>>> = match self {
+            // ---- column-sharing fast paths (zero-copy) -------------
+            Fitted::Identity => {
+                (0..ds.d).map(|j| Arc::clone(ds.col_arc(j))).collect()
             }
-            x
-        });
-        let mut out = Dataset::new(&ds.name, ds.task, d_out);
-        out.x.reserve(ds.n * d_out);
-        for p in &parts {
-            out.x.extend_from_slice(p);
-        }
-        out.y = ds.y.clone();
-        out.n = ds.n;
-        out
+            Fitted::Select(idx) => {
+                idx.iter().map(|&j| Arc::clone(ds.col_arc(j))).collect()
+            }
+            Fitted::Affine { shift, scale } => (0..ds.d)
+                .map(|j| {
+                    if shift[j] == 0.0 && scale[j] == 1.0 {
+                        // no-op column: share, don't copy
+                        Arc::clone(ds.col_arc(j))
+                    } else {
+                        Arc::new(
+                            ds.col(j)
+                                .iter()
+                                .map(|&v| ((v as f64 - shift[j])
+                                    * scale[j]) as f32)
+                                .collect(),
+                        )
+                    }
+                })
+                .collect(),
+            Fitted::Quantile { grids, normal_out } => (0..ds.d)
+                .map(|j| {
+                    let g = &grids[j];
+                    Arc::new(
+                        ds.col(j)
+                            .iter()
+                            .map(|&v| {
+                                let rank = match g.binary_search_by(|x| {
+                                    x.partial_cmp(&(v as f64))
+                                        .unwrap_or(std::cmp::Ordering::Less)
+                                }) {
+                                    Ok(i) => i,
+                                    Err(i) => i,
+                                };
+                                let q = rank as f64
+                                    / g.len().max(1) as f64;
+                                let q = q.clamp(0.001, 0.999);
+                                if *normal_out {
+                                    inv_norm_cdf(q) as f32
+                                } else {
+                                    q as f32
+                                }
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+            Fitted::CrossPairs(pairs) => {
+                let mut cols: Vec<Arc<Vec<f32>>> = (0..ds.d)
+                    .map(|j| Arc::clone(ds.col_arc(j)))
+                    .collect();
+                for &(a, b) in pairs {
+                    let (ca, cb) = (ds.col(a), ds.col(b));
+                    cols.push(Arc::new(
+                        ca.iter().zip(cb).map(|(&x, &y)| x * y).collect(),
+                    ));
+                }
+                cols
+            }
+            // ---- row-wise ops: gather / apply_row / scatter --------
+            _ => {
+                let d_out = self.out_dim(ds.d);
+                let run = |lo: usize, hi: usize| -> Vec<Vec<f32>> {
+                    let mut seg: Vec<Vec<f32>> = (0..d_out)
+                        .map(|_| Vec::with_capacity(hi - lo))
+                        .collect();
+                    let mut buf = Vec::with_capacity(ds.d);
+                    for i in lo..hi {
+                        ds.gather_row(i, &mut buf);
+                        let row = self.apply_row(&buf);
+                        debug_assert_eq!(row.len(), d_out);
+                        for (c, &v) in seg.iter_mut().zip(&row) {
+                            c.push(v);
+                        }
+                    }
+                    seg
+                };
+                let parts = match exec {
+                    Some(ex) => ex.map_ranges(ds.n, SHARD_MIN_ROWS, run),
+                    None => vec![run(0, ds.n)],
+                };
+                let mut cols: Vec<Vec<f32>> = (0..d_out)
+                    .map(|_| Vec::with_capacity(ds.n))
+                    .collect();
+                for part in &parts {
+                    for (c, seg) in cols.iter_mut().zip(part) {
+                        c.extend_from_slice(seg);
+                    }
+                }
+                cols.into_iter().map(Arc::new).collect()
+            }
+        };
+        Dataset::from_columns(&ds.name, ds.task, cols,
+                              Arc::clone(&ds.y))
     }
 }
 
@@ -264,6 +349,218 @@ fn inv_norm_cdf(p: f64) -> f64 {
 }
 
 // ====================================================================
+// Mergeable fit kernels (row-sharded fits with deterministic merges)
+// ====================================================================
+//
+// `Executor::map_ranges` chunk boundaries depend on the worker count,
+// so a fit that accumulates floats per chunk would change bits with
+// the pool size. Each kernel here is mergeable with a merge whose
+// result is *independent of the chunking*:
+//
+//   * min/max and integer counts — associative + commutative, exact;
+//   * sorted runs — merged output is the totally-ordered multiset,
+//     the same sequence of bit patterns whatever the run boundaries
+//     (comparisons use `total_cmp`, a total order);
+//   * mean/var — float addition is NOT associative, so partial sums
+//     are computed over fixed [`FIT_CHUNK`]-row blocks and merged in
+//     block order. Serial and sharded paths both use the identical
+//     block structure, so the result is bit-identical at every worker
+//     count (and the serial path defines the reference bits).
+
+/// Canonical block size for float partial sums in mergeable fits:
+/// fixed (worker-independent) so block boundaries never move with the
+/// pool size.
+pub const FIT_CHUNK: usize = 4096;
+
+/// Minimum rows before a fit bothers sharding (mirrors
+/// [`SHARD_MIN_ROWS`] on the apply side).
+pub const FIT_SHARD_MIN_ROWS: usize = 2 * FIT_CHUNK;
+
+type Exec = crate::runtime::executor::Executor;
+
+/// Run `block` over canonical [`FIT_CHUNK`] blocks of `0..n` (serial
+/// or sharded at block granularity) and return the per-block results
+/// in block order. Because blocks are fixed, the returned sequence is
+/// identical however the blocks were distributed over workers.
+fn map_fit_blocks<T, F>(n: usize, exec: Option<&Exec>, block: F)
+    -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let n_blocks = n.div_ceil(FIT_CHUNK).max(1);
+    let run = |blo: usize, bhi: usize| -> Vec<T> {
+        (blo..bhi)
+            .map(|b| block(b * FIT_CHUNK, ((b + 1) * FIT_CHUNK).min(n)))
+            .collect()
+    };
+    let parts = match exec {
+        Some(ex) if n >= FIT_SHARD_MIN_ROWS => {
+            ex.map_ranges(n_blocks, 1, run)
+        }
+        _ => vec![run(0, n_blocks)],
+    };
+    parts.into_iter().flatten().collect()
+}
+
+/// Column mean/std over `rows`, mergeable: fixed-block partial sums
+/// merged in block order (see module notes above). This is the fit
+/// kernel for the `standard` scaler; it intentionally does NOT match
+/// `Dataset::col_stats` bit-for-bit (that one is a straight
+/// sequential sum kept for meta-features and non-sharded ops).
+pub fn col_moments(ds: &Dataset, rows: &[usize], exec: Option<&Exec>)
+    -> (Vec<f64>, Vec<f64>) {
+    let d = ds.d;
+    let n = rows.len().max(1) as f64;
+    // pass 1: blocked sums -> means
+    let sums = map_fit_blocks(rows.len(), exec, |lo, hi| {
+        let mut s = vec![0.0f64; d];
+        for (j, sj) in s.iter_mut().enumerate() {
+            let c = ds.col(j);
+            for &i in &rows[lo..hi] {
+                *sj += c[i] as f64;
+            }
+        }
+        s
+    });
+    let mut mean = vec![0.0f64; d];
+    for s in &sums {
+        for (m, v) in mean.iter_mut().zip(s) {
+            *m += v;
+        }
+    }
+    for m in &mut mean {
+        *m /= n;
+    }
+    // pass 2: blocked squared deviations -> std
+    let sq = {
+        let mean = &mean;
+        map_fit_blocks(rows.len(), exec, move |lo, hi| {
+            let mut s = vec![0.0f64; d];
+            for (j, sj) in s.iter_mut().enumerate() {
+                let c = ds.col(j);
+                for &i in &rows[lo..hi] {
+                    let dlt = c[i] as f64 - mean[j];
+                    *sj += dlt * dlt;
+                }
+            }
+            s
+        })
+    };
+    let mut var = vec![0.0f64; d];
+    for s in &sq {
+        for (v, x) in var.iter_mut().zip(s) {
+            *v += x;
+        }
+    }
+    let std = var.iter().map(|v| (v / n).sqrt()).collect();
+    (mean, std)
+}
+
+/// Column min/max over `rows`, mergeable exactly (min/max are
+/// associative and commutative — any chunking gives the same bits).
+pub fn col_minmax(ds: &Dataset, rows: &[usize], exec: Option<&Exec>)
+    -> (Vec<f64>, Vec<f64>) {
+    let d = ds.d;
+    let parts = map_fit_blocks(rows.len(), exec, |lo, hi| {
+        let mut lo_v = vec![f64::INFINITY; d];
+        let mut hi_v = vec![f64::NEG_INFINITY; d];
+        for (j, (l, h)) in lo_v.iter_mut().zip(&mut hi_v).enumerate() {
+            let c = ds.col(j);
+            for &i in &rows[lo..hi] {
+                let v = c[i] as f64;
+                *l = l.min(v);
+                *h = h.max(v);
+            }
+        }
+        (lo_v, hi_v)
+    });
+    let mut lo = vec![f64::INFINITY; d];
+    let mut hi = vec![f64::NEG_INFINITY; d];
+    for (pl, ph) in &parts {
+        for (j, (l, h)) in lo.iter_mut().zip(&mut hi).enumerate() {
+            *l = l.min(pl[j]);
+            *h = h.max(ph[j]);
+        }
+    }
+    (lo, hi)
+}
+
+/// `total_cmp`-sorted values of column `j` over `rows`, mergeable:
+/// shards sort runs, then a k-way merge in run order reassembles the
+/// totally-ordered multiset — the identical bit sequence a full sort
+/// produces, whatever the run boundaries.
+pub fn col_sorted(ds: &Dataset, rows: &[usize], j: usize,
+                  exec: Option<&Exec>) -> Vec<f64> {
+    let c = ds.col(j);
+    let mut runs = map_fit_blocks(rows.len(), exec, |lo, hi| {
+        let mut xs: Vec<f64> =
+            rows[lo..hi].iter().map(|&i| c[i] as f64).collect();
+        xs.sort_unstable_by(|a, b| a.total_cmp(b));
+        xs
+    });
+    if runs.len() == 1 {
+        return runs.pop().unwrap();
+    }
+    // k-way merge, lowest run index wins ties: deterministic, and the
+    // output sequence only depends on the multiset being merged.
+    let mut out = Vec::with_capacity(rows.len());
+    let mut heads = vec![0usize; runs.len()];
+    loop {
+        let mut best: Option<usize> = None;
+        for (r, run) in runs.iter().enumerate() {
+            if heads[r] < run.len() {
+                match best {
+                    None => best = Some(r),
+                    Some(b) => {
+                        if runs[b][heads[b]]
+                            .total_cmp(&run[heads[r]])
+                            == std::cmp::Ordering::Greater
+                        {
+                            best = Some(r);
+                        }
+                    }
+                }
+            }
+        }
+        match best {
+            Some(r) => {
+                out.push(runs[r][heads[r]]);
+                heads[r] += 1;
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+/// Per-class row partition of `rows` (classification "category
+/// counts" fit), mergeable exactly: per-shard partitions concatenated
+/// in range order equal the serial scan order.
+pub fn class_partition(ds: &Dataset, rows: &[usize], k: usize,
+                       exec: Option<&Exec>) -> Vec<Vec<usize>> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let parts = map_fit_blocks(rows.len(), exec, |lo, hi| {
+        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for &i in &rows[lo..hi] {
+            let c = ds.label(i);
+            debug_assert!(c < k, "label {c} out of range for {k} classes");
+            by_class[c.min(k.saturating_sub(1))].push(i);
+        }
+        by_class
+    });
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for part in parts {
+        for (acc, mut p) in by_class.iter_mut().zip(part) {
+            acc.append(&mut p);
+        }
+    }
+    by_class
+}
+
+// ====================================================================
 // Fitting helpers
 // ====================================================================
 
@@ -272,7 +569,8 @@ fn train_stats(ds: &Dataset, train: &[usize]) -> (Vec<f64>, Vec<f64>) {
 }
 
 fn col_values(ds: &Dataset, train: &[usize], j: usize) -> Vec<f64> {
-    train.iter().map(|&i| ds.row(i)[j] as f64).collect()
+    let c = ds.col(j);
+    train.iter().map(|&i| c[i] as f64).collect()
 }
 
 /// |pearson correlation| of feature j with the label/target.
@@ -296,9 +594,10 @@ fn label_corr(ds: &Dataset, train: &[usize], j: usize) -> f64 {
 
 fn train_cov(ds: &Dataset, train: &[usize]) -> Mat {
     let mut m = Mat::zeros(train.len(), ds.d);
-    for (r, &i) in train.iter().enumerate() {
-        for (j, &v) in ds.row(i).iter().enumerate() {
-            m[(r, j)] = v as f64;
+    for j in 0..ds.d {
+        let c = ds.col(j);
+        for (r, &i) in train.iter().enumerate() {
+            m[(r, j)] = c[i] as f64;
         }
     }
     m.covariance()
@@ -335,19 +634,21 @@ pub fn scaler_space(name: &str) -> ConfigSpace {
 
 pub fn fit_scaler(name: &str, ds: &Dataset, train: &[usize], cfg: &Config)
     -> Fitted {
+    fit_scaler_with(name, ds, train, cfg, None)
+}
+
+/// [`fit_scaler`] with an optional executor: the mergeable fits
+/// (mean/var, min/max, quantile grids) row-shard over
+/// `Executor::map_ranges` with deterministic ordered merges, so the
+/// fitted operator is bit-identical at every worker count (see the
+/// mergeable-fit kernel notes above).
+pub fn fit_scaler_with(name: &str, ds: &Dataset, train: &[usize],
+                       cfg: &Config, exec: Option<&Exec>) -> Fitted {
     match name {
         "none" => Fitted::Identity,
         "normalizer" => Fitted::RowNorm,
         "minmax" => {
-            let d = ds.d;
-            let mut lo = vec![f64::INFINITY; d];
-            let mut hi = vec![f64::NEG_INFINITY; d];
-            for &i in train {
-                for (j, &v) in ds.row(i).iter().enumerate() {
-                    lo[j] = lo[j].min(v as f64);
-                    hi[j] = hi[j].max(v as f64);
-                }
-            }
+            let (lo, hi) = col_minmax(ds, train, exec);
             let scale: Vec<f64> = lo
                 .iter()
                 .zip(&hi)
@@ -356,7 +657,7 @@ pub fn fit_scaler(name: &str, ds: &Dataset, train: &[usize], cfg: &Config)
             Fitted::Affine { shift: lo, scale }
         }
         "standard" => {
-            let (mean, std) = train_stats(ds, train);
+            let (mean, std) = col_moments(ds, train, exec);
             let scale = std.iter().map(|s| 1.0 / s.max(1e-9)).collect();
             Fitted::Affine { shift: mean, scale }
         }
@@ -380,9 +681,8 @@ pub fn fit_scaler(name: &str, ds: &Dataset, train: &[usize], cfg: &Config)
             let normal_out = cfg.str_or("output", "uniform") == "normal";
             let grids = (0..ds.d)
                 .map(|j| {
-                    let mut xs = col_values(ds, train, j);
-                    xs.sort_by(|a, b| a.partial_cmp(b)
-                        .unwrap_or(std::cmp::Ordering::Equal));
+                    // sorted-run merge: equals a full total_cmp sort
+                    let xs = col_sorted(ds, train, j, exec);
                     // subsample to nq grid points
                     let step = (xs.len().max(1) as f64 / nq as f64).max(1.0);
                     let mut g: Vec<f64> = (0..nq)
@@ -478,9 +778,10 @@ pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
             let k = k.max(1);
             let mean = {
                 let mut m = Mat::zeros(train.len(), d);
-                for (r, &i) in train.iter().enumerate() {
-                    for (j, &v) in ds.row(i).iter().enumerate() {
-                        m[(r, j)] = v as f64;
+                for j in 0..d {
+                    let c = ds.col(j);
+                    for (r, &i) in train.iter().enumerate() {
+                        m[(r, j)] = c[i] as f64;
                     }
                 }
                 m.col_means()
@@ -498,8 +799,9 @@ pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
             let k = cfg.usize_or("n_components", 8).clamp(1, d);
             // second-moment matrix (no centering)
             let mut sm = Mat::zeros(d, d);
+            let mut r = Vec::with_capacity(d);
             for &i in train {
-                let r = ds.row(i);
+                ds.gather_row(i, &mut r);
                 for a in 0..d {
                     for b in 0..d {
                         sm[(a, b)] += r[a] as f64 * r[b] as f64;
@@ -568,8 +870,9 @@ pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
             let picks = rng.sample_indices(train.len(), m);
             let mut landmarks = Mat::zeros(m, d);
             for (r, &pi) in picks.iter().enumerate() {
-                for (j, &v) in ds.row(train[pi]).iter().enumerate() {
-                    landmarks[(r, j)] = v as f64;
+                let i = train[pi];
+                for j in 0..d {
+                    landmarks[(r, j)] = ds.at(i, j) as f64;
                 }
             }
             Fitted::Nystroem { landmarks, gamma }
@@ -723,9 +1026,10 @@ pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
             let mut w = vec![0.0f64; d];
             let y_mean: f64 = train.iter().map(|&i| ds.y[i] as f64)
                 .sum::<f64>() / train.len().max(1) as f64;
+            let mut row = Vec::with_capacity(d);
             for _epoch in 0..3 {
                 for &i in train {
-                    let row = ds.row(i);
+                    ds.gather_row(i, &mut row);
                     let target = if ds.task.is_classification() {
                         if ds.y[i] as f64 > y_mean { 1.0 } else { -1.0 }
                     } else if ds.y[i] as f64 > y_mean { 1.0 } else { -1.0 };
@@ -859,6 +1163,10 @@ mod tests {
         (ds, train)
     }
 
+    fn all_finite(ds: &Dataset) -> bool {
+        (0..ds.d).all(|j| ds.col(j).iter().all(|v| v.is_finite()))
+    }
+
     #[test]
     fn every_scaler_fits_and_applies() {
         let (ds, train) = toy_ds();
@@ -868,7 +1176,7 @@ mod tests {
             let out = f.apply(&ds);
             assert_eq!(out.n, ds.n, "{name}");
             assert_eq!(out.d, ds.d, "{name}");
-            assert!(out.x.iter().all(|v| v.is_finite()), "{name}");
+            assert!(all_finite(&out), "{name}");
         }
     }
 
@@ -890,7 +1198,7 @@ mod tests {
         let f = fit_scaler("minmax", &ds, &train, &Config::new());
         let out = f.apply(&ds);
         for &i in &train {
-            for &v in out.row(i) {
+            for v in out.row_vec(i) {
                 assert!((-1e-6..=1.0 + 1e-6).contains(&(v as f64)));
             }
         }
@@ -907,7 +1215,7 @@ mod tests {
             assert_eq!(out.n, ds.n, "{name}");
             assert!(out.d >= 1 && out.d <= MAX_WIDTH, "{name}: d={}", out.d);
             assert_eq!(out.d, f.out_dim(ds.d), "{name}");
-            assert!(out.x.iter().all(|v| v.is_finite()), "{name}");
+            assert!(all_finite(&out), "{name}");
         }
     }
 
@@ -946,7 +1254,8 @@ mod tests {
         let cfg = scaler_space("quantile").default_config();
         let f = fit_scaler("quantile", &ds, &train, &cfg);
         let out = f.apply(&ds);
-        assert!(out.x.iter().all(|&v| (0.0..=1.0).contains(&(v as f64))));
+        assert!((0..out.d).all(|j| out.col(j).iter()
+            .all(|&v| (0.0..=1.0).contains(&(v as f64)))));
     }
 
     #[test]
@@ -986,11 +1295,96 @@ mod tests {
                 assert_eq!(sharded.n, serial.n, "{op}");
                 assert_eq!(sharded.d, serial.d, "{op}");
                 assert_eq!(sharded.y, serial.y, "{op}");
-                for (a, b) in serial.x.iter().zip(&sharded.x) {
-                    assert_eq!(a.to_bits(), b.to_bits(),
-                               "{op} workers={workers}");
+                for j in 0..serial.d {
+                    for (a, b) in serial.col(j).iter()
+                        .zip(sharded.col(j)) {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "{op} workers={workers} col={j}");
+                    }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn sharded_fit_is_bitwise_identical_to_serial() {
+        // mergeable fits must be worker-count invariant: canonical
+        // FIT_CHUNK blocks merged in block order, so the executor's
+        // own chunking never leaks into the accumulation order
+        let p = Profile {
+            name: "fe-fitshard".into(),
+            task: Task::Classification { n_classes: 2 },
+            gen: GenKind::Blobs { sep: 1.5 },
+            n: 3 * FIT_CHUNK,
+            d: 6,
+            noise: 0.05,
+            imbalance: 1.0,
+            redundant: 2,
+            wild_scales: true,
+            seed: 13,
+        };
+        let ds = generate(&p);
+        let train: Vec<usize> = (0..ds.n).collect();
+        for name in ["minmax", "standard", "quantile", "robust"] {
+            let cfg = scaler_space(name).default_config();
+            let serial = fit_scaler_with(name, &ds, &train, &cfg, None);
+            for workers in [1usize, 3] {
+                let ex = crate::runtime::executor::Executor::new(workers);
+                let sharded =
+                    fit_scaler_with(name, &ds, &train, &cfg, Some(&ex));
+                let a = serial.apply(&ds);
+                let b = sharded.apply(&ds);
+                for j in 0..a.d {
+                    for (x, y) in a.col(j).iter().zip(b.col(j)) {
+                        assert_eq!(x.to_bits(), y.to_bits(),
+                                   "{name} workers={workers} col={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_copy_ops_share_column_arcs() {
+        let (ds, train) = toy_ds();
+        // identity: every column pointer-shared
+        let out = Fitted::Identity.apply(&ds);
+        for j in 0..ds.d {
+            assert!(std::sync::Arc::ptr_eq(out.col_arc(j), ds.col_arc(j)));
+        }
+        assert!(std::sync::Arc::ptr_eq(&out.y, &ds.y));
+        // select: the chosen columns are pointer-shared, none copied
+        let sel = Fitted::Select(vec![1, 4, 6]);
+        let out = sel.apply(&ds);
+        assert_eq!(out.d, 3);
+        for (o, &j) in [1usize, 4, 6].iter().enumerate() {
+            assert!(std::sync::Arc::ptr_eq(out.col_arc(o), ds.col_arc(j)));
+        }
+        // cross pairs: original columns shared, products appended
+        let cp = Fitted::CrossPairs(vec![(0, 2)]);
+        let out = cp.apply(&ds);
+        assert_eq!(out.d, ds.d + 1);
+        for j in 0..ds.d {
+            assert!(std::sync::Arc::ptr_eq(out.col_arc(j), ds.col_arc(j)));
+        }
+        // affine no-op lanes (shift 0, scale 1) stay shared; the
+        // touched lane gets a fresh column
+        let mut shift = vec![0.0f64; ds.d];
+        let mut scale = vec![1.0f64; ds.d];
+        shift[3] = 1.0;
+        scale[3] = 2.0;
+        let aff = Fitted::Affine { shift, scale };
+        let out = aff.apply(&ds);
+        for j in 0..ds.d {
+            assert_eq!(std::sync::Arc::ptr_eq(out.col_arc(j),
+                                              ds.col_arc(j)),
+                       j != 3, "col {j}");
+        }
+        // and the touched lane matches the scalar math
+        let _ = train;
+        for i in 0..ds.n {
+            let want = ((ds.at(i, 3) as f64 - 1.0) * 2.0) as f32;
+            assert_eq!(out.at(i, 3).to_bits(), want.to_bits());
         }
     }
 

@@ -62,8 +62,9 @@ pub fn meta_features(ds: &Dataset) -> Vec<f64> {
     for j in 0..d {
         let mut num = 0.0;
         let mut xv = 0.0;
+        let c = ds.col(j);
         for (&i, y) in rows.iter().zip(&ys) {
-            let x = ds.row(i)[j] as f64 - mean[j];
+            let x = c[i] as f64 - mean[j];
             num += x * (y - y_mean);
             xv += x * x;
         }
@@ -77,8 +78,9 @@ pub fn meta_features(ds: &Dataset) -> Vec<f64> {
     let mut skew = 0.0;
     let probe_cols = d.min(8);
     for j in 0..probe_cols {
+        let c = ds.col(j);
         let xs: Vec<f64> =
-            rows.iter().map(|&i| ds.row(i)[j] as f64).collect();
+            rows.iter().map(|&i| c[i] as f64).collect();
         let med = crate::util::stats::median(&xs);
         skew += (mean[j] - med).abs() / std[j].max(1e-9);
     }

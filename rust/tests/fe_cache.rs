@@ -137,6 +137,87 @@ fn tiny_byte_bound_stays_exact_and_within_budget() {
 }
 
 #[test]
+fn three_of_forty_column_stage_publishes_exactly_three_columns() {
+    // the columnar-substrate contract (ISSUE 8): an FE stage that
+    // touches 3 of 40 columns publishes 3 new columns while the
+    // untouched 37 (and y) stay pointer-shared with the base dataset,
+    // and the store charges only the novel columns.
+    use std::sync::Arc;
+    use volcanoml::cache::{Fingerprint, FeStore, Resolved};
+    use volcanoml::data::Dataset;
+    use volcanoml::fe::ops::Fitted;
+
+    let ds = Arc::new(generate(&Profile {
+        name: "wide".into(),
+        task: Task::Classification { n_classes: 2 },
+        gen: GenKind::Blobs { sep: 1.5 },
+        n: 120,
+        d: 40,
+        noise: 0.0,
+        imbalance: 1.0,
+        redundant: 0,
+        wild_scales: false,
+        seed: 11,
+    }));
+    let touched = [3usize, 17, 31];
+    let mut shift = vec![0.0f64; ds.d];
+    let mut scale = vec![1.0f64; ds.d];
+    for &j in &touched {
+        shift[j] = 0.5;
+        scale[j] = 2.0;
+    }
+    let out = Arc::new(Fitted::Affine { shift, scale }.apply(&ds));
+
+    // 37 columns and y are the same Arc as the base dataset
+    for j in 0..ds.d {
+        assert_eq!(Arc::ptr_eq(out.col_arc(j), ds.col_arc(j)),
+                   !touched.contains(&j), "col {j}");
+    }
+    assert!(Arc::ptr_eq(&out.y, &ds.y), "y must stay shared");
+
+    // publishing charges only the 3 novel columns (+ train indices)
+    let store = FeStore::new(64 * 1024 * 1024);
+    let fp = Fingerprint::new().push_str("wide-stage")
+        .push_col_mask(&vec![true; ds.d]);
+    let ticket = match store.begin(fp) {
+        Resolved::Compute(t) => t,
+        Resolved::Ready(_) => panic!("fresh store must miss"),
+    };
+    let train = Arc::new((0..96usize).collect::<Vec<_>>());
+    let art = ticket.publish_vs(Arc::clone(&out), train, &ds);
+    assert_eq!(art.novel_cols(), touched.len());
+    for (j, &novel) in art.novel_mask().iter().enumerate() {
+        assert_eq!(novel, touched.contains(&j), "novel mask col {j}");
+    }
+    let st = store.stats();
+    assert_eq!(st.novel_cols, touched.len() as u64);
+    assert_eq!(st.shared_cols, (ds.d - touched.len()) as u64);
+    // resident bytes ≈ 3 columns + train indices, nowhere near the
+    // 40-column dataset (which would be ~40*120*4 = 19200 bytes)
+    let full = ds.d * ds.n * 4;
+    assert!((st.bytes as usize) < full / 2,
+            "artifact cost {} should be far below a whole-dataset \
+             copy {}", st.bytes, full);
+}
+
+#[test]
+fn fixed_seed_search_is_bit_identical_across_knob_grid() {
+    // acceptance (ISSUE 8): fixed-seed searches stay bit-identical
+    // at (workers, super_batch, depth) ∈ {(1,1,1), (4,0,2)} on the
+    // columnar substrate.
+    let ds = blob_ds(6);
+    for plan in [PlanKind::CA, PlanKind::CC] {
+        let serial = run(&ds, plan, SpaceScale::Medium, 64, 1, 1, 1,
+                         22);
+        let overlapped = run(&ds, plan, SpaceScale::Medium, 64, 4, 0,
+                             2, 22);
+        assert_same_trajectory(
+            &serial, &overlapped,
+            &format!("{} (1,1,1) vs (4,0,2)", plan.name()));
+    }
+}
+
+#[test]
 fn memo_and_store_counters_are_surfaced() {
     let ds = blob_ds(4);
     let out = run(&ds, PlanKind::CA, SpaceScale::Medium, 64, 2, 1, 1,
