@@ -32,6 +32,135 @@ fn main() {
     let mut timings: Vec<Timing> = Vec::new();
     let mut rng = Rng::new(0);
 
+    // ---- kernel layer: pre-port scalar forms vs lane kernels --------
+    // Every run benches BOTH the pre-port loop shape ("(pre)") and the
+    // util::kernels replacement ("(lanes)"), so the speedup ratio is
+    // machine-independent evidence of the kernel layer's win; the
+    // absolute medians are additionally gated against
+    // BENCH_baseline.json by tools/benchdiff.
+    {
+        use volcanoml::util::kernels;
+        let n = 1 << 16;
+        let a: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin())
+            .collect();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.59).cos())
+            .collect();
+
+        let t = bench("dot_pre", 3, 40, || {
+            let s: f64 =
+                a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            std::hint::black_box(s);
+        });
+        record(&mut table, &mut timings, "kernel dot 64k f64 (pre)", t);
+        let t = bench("dot_lanes", 3, 40, || {
+            std::hint::black_box(kernels::dot(&a, &b));
+        });
+        record(&mut table, &mut timings, "kernel dot 64k f64 (lanes)",
+               t);
+
+        let col: Vec<f32> = (0..n).map(|i| (i as f64 * 0.13).sin()
+            as f32).collect();
+        let rows_idx: Vec<usize> = (0..n - n / 4).collect();
+        let t = bench("moments_pre", 3, 40, || {
+            // pre-port col_moments shape: two scalar passes
+            let mut s = 0.0f64;
+            for &i in &rows_idx {
+                s += col[i] as f64;
+            }
+            let m = s / rows_idx.len() as f64;
+            let mut q = 0.0f64;
+            for &i in &rows_idx {
+                let dlt = col[i] as f64 - m;
+                q += dlt * dlt;
+            }
+            std::hint::black_box((m, q));
+        });
+        record(&mut table, &mut timings,
+               "kernel moments 48k-row col (pre)", t);
+        let t = bench("moments_lanes", 3, 40, || {
+            std::hint::black_box(
+                kernels::moments_indexed_f32(&col, &rows_idx));
+        });
+        record(&mut table, &mut timings,
+               "kernel moments 48k-row col (lanes)", t);
+
+        let (mr, mk, mc) = (96usize, 96usize, 96usize);
+        let ma: Vec<f64> = (0..mr * mk)
+            .map(|i| (i as f64 * 0.11).sin()).collect();
+        let mb: Vec<f64> = (0..mk * mc)
+            .map(|i| (i as f64 * 0.17).cos()).collect();
+        let t = bench("matmul_pre", 2, 20, || {
+            // pre-port Mat::matmul: ikj with the zero-skip branch
+            let mut out = vec![0.0f64; mr * mc];
+            for i in 0..mr {
+                let arow = &ma[i * mk..(i + 1) * mk];
+                let orow = &mut out[i * mc..(i + 1) * mc];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &mb[kk * mc..(kk + 1) * mc];
+                    for j in 0..mc {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+            std::hint::black_box(out);
+        });
+        record(&mut table, &mut timings, "kernel matmul 96^3 (pre)", t);
+        let t = bench("matmul_lanes", 2, 20, || {
+            std::hint::black_box(kernels::matmul(&ma, &mb, mr, mk, mc));
+        });
+        record(&mut table, &mut timings, "kernel matmul 96^3 (lanes)",
+               t);
+
+        let (tr, tc) = (384usize, 256usize);
+        let tm: Vec<f64> = (0..tr * tc)
+            .map(|i| (i as f64 * 0.23).sin()).collect();
+        let t = bench("transpose_pre", 3, 40, || {
+            // pre-port Mat::t(): naive strided writes
+            let mut out = vec![0.0f64; tr * tc];
+            for i in 0..tr {
+                for j in 0..tc {
+                    out[j * tr + i] = tm[i * tc + j];
+                }
+            }
+            std::hint::black_box(out);
+        });
+        record(&mut table, &mut timings,
+               "kernel transpose 384x256 (pre)", t);
+        let t = bench("transpose_lanes", 3, 40, || {
+            std::hint::black_box(kernels::transpose(&tm, tr, tc));
+        });
+        record(&mut table, &mut timings,
+               "kernel transpose 384x256 (lanes)", t);
+
+        let (gn, gd) = (8192usize, 16usize);
+        let gcols: Vec<Vec<f32>> = (0..gd)
+            .map(|j| (0..gn).map(|i| ((i * gd + j) as f64 * 0.29).sin()
+                as f32).collect())
+            .collect();
+        let t = bench("gather_pre", 3, 40, || {
+            // pre-port to_row_major: one full column walk per row
+            let mut x = Vec::with_capacity(gn * gd);
+            for i in 0..gn {
+                x.extend(gcols.iter().map(|c| c[i]));
+            }
+            std::hint::black_box(x);
+        });
+        record(&mut table, &mut timings, "kernel gather 8192x16 (pre)",
+               t);
+        let gview: Vec<&[f32]> =
+            gcols.iter().map(|c| c.as_slice()).collect();
+        let t = bench("gather_lanes", 3, 40, || {
+            let mut x = Vec::new();
+            kernels::gather_range_rowmajor(&gview, 0, gn, &mut x);
+            std::hint::black_box(x);
+        });
+        record(&mut table, &mut timings,
+               "kernel gather 8192x16 (lanes)", t);
+    }
+
     // ---- BO iteration on a 20-dim space with 60 observations -------
     let space = {
         let mut cs = volcanoml::space::ConfigSpace::new();

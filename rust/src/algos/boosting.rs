@@ -6,6 +6,7 @@ use crate::data::dataset::{Dataset, Predictions, Task};
 use crate::util::rng::Rng;
 
 use super::tree::{Criterion, Tree, TreeParams};
+use super::PREDICT_BLOCK_ROWS;
 
 // ====================================================================
 // Gradient boosting
@@ -113,11 +114,13 @@ impl Gbm {
         // the tree loop, and the copy dies with the fit
         let (x_local, d): (Vec<f32>, usize) = match &bins {
             Some(b) => {
+                // blocked column-streaming gather, then bin each
+                // contiguous row slice (the raw copy dies here)
+                let raw = ds.to_row_major();
                 let mut x = Vec::with_capacity(ds.n * ds.d);
-                let mut buf = Vec::with_capacity(ds.d);
                 for i in 0..ds.n {
-                    ds.gather_row(i, &mut buf);
-                    x.extend(bin_row(&buf, b));
+                    x.extend(bin_row(&raw[i * ds.d..(i + 1) * ds.d],
+                                     b));
                 }
                 (x, ds.d)
             }
@@ -202,23 +205,29 @@ impl Gbm {
     pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
         let k = self.base.len();
         let mut scores = vec![0.0f64; rows.len() * k];
-        let mut buf = Vec::with_capacity(ds.d);
-        for (r, &i) in rows.iter().enumerate() {
-            ds.gather_row(i, &mut buf);
-            let binned;
-            let row: &[f32] = match &self.bins {
-                Some(b) => {
-                    binned = bin_row(&buf, b);
-                    &binned
+        // blocked gather: bounded row-major buffer, each source
+        // column streamed once per block (util::kernels)
+        let mut block = Vec::new();
+        for blo in (0..rows.len()).step_by(PREDICT_BLOCK_ROWS) {
+            let bhi = (blo + PREDICT_BLOCK_ROWS).min(rows.len());
+            ds.gather_rows_rowmajor(&rows[blo..bhi], &mut block);
+            for r in blo..bhi {
+                let buf = &block[(r - blo) * ds.d..(r - blo + 1) * ds.d];
+                let binned;
+                let row: &[f32] = match &self.bins {
+                    Some(b) => {
+                        binned = bin_row(buf, b);
+                        &binned
+                    }
+                    None => buf,
+                };
+                for c in 0..k {
+                    let mut s = self.base[c];
+                    for round in &self.trees {
+                        s += self.lr * round[c].predict_row(row)[0];
+                    }
+                    scores[r * k + c] = s;
                 }
-                None => &buf,
-            };
-            for c in 0..k {
-                let mut s = self.base[c];
-                for round in &self.trees {
-                    s += self.lr * round[c].predict_row(row)[0];
-                }
-                scores[r * k + c] = s;
             }
         }
         match self.task {

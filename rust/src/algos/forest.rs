@@ -6,6 +6,7 @@ use crate::data::dataset::{Dataset, Predictions, Task};
 use crate::util::rng::Rng;
 
 use super::tree::{Criterion, Tree, TreeParams};
+use super::PREDICT_BLOCK_ROWS;
 
 #[derive(Clone, Debug)]
 pub struct ForestParams {
@@ -74,38 +75,49 @@ impl Forest {
     }
 
     pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
-        let mut buf = Vec::with_capacity(ds.d);
+        // blocked gather: bounded row-major buffer, each source
+        // column streamed once per block (util::kernels)
+        let mut block = Vec::new();
         match self.task {
             Task::Classification { n_classes } => {
                 let mut scores = vec![0.0f32; rows.len() * n_classes];
-                for (r, &i) in rows.iter().enumerate() {
-                    ds.gather_row(i, &mut buf);
-                    for t in &self.trees {
-                        let dist = t.predict_row(&buf);
-                        for c in 0..n_classes.min(dist.len()) {
-                            scores[r * n_classes + c] += dist[c] as f32;
+                for blo in (0..rows.len()).step_by(PREDICT_BLOCK_ROWS) {
+                    let bhi = (blo + PREDICT_BLOCK_ROWS).min(rows.len());
+                    ds.gather_rows_rowmajor(&rows[blo..bhi], &mut block);
+                    for r in blo..bhi {
+                        let buf = &block[(r - blo) * ds.d
+                                         ..(r - blo + 1) * ds.d];
+                        for t in &self.trees {
+                            let dist = t.predict_row(buf);
+                            for c in 0..n_classes.min(dist.len()) {
+                                scores[r * n_classes + c] += dist[c] as f32;
+                            }
                         }
-                    }
-                    let inv = 1.0 / self.trees.len().max(1) as f32;
-                    for c in 0..n_classes {
-                        scores[r * n_classes + c] *= inv;
+                        let inv = 1.0 / self.trees.len().max(1) as f32;
+                        for c in 0..n_classes {
+                            scores[r * n_classes + c] *= inv;
+                        }
                     }
                 }
                 Predictions::ClassScores { n_classes, scores }
             }
             Task::Regression => {
-                let vals = rows
-                    .iter()
-                    .map(|&i| {
-                        ds.gather_row(i, &mut buf);
+                let mut vals = vec![0.0f32; rows.len()];
+                for blo in (0..rows.len()).step_by(PREDICT_BLOCK_ROWS) {
+                    let bhi = (blo + PREDICT_BLOCK_ROWS).min(rows.len());
+                    ds.gather_rows_rowmajor(&rows[blo..bhi], &mut block);
+                    for r in blo..bhi {
+                        let buf = &block[(r - blo) * ds.d
+                                         ..(r - blo + 1) * ds.d];
                         let s: f64 = self
                             .trees
                             .iter()
-                            .map(|t| t.predict_row(&buf)[0])
+                            .map(|t| t.predict_row(buf)[0])
                             .sum();
-                        (s / self.trees.len().max(1) as f64) as f32
-                    })
-                    .collect();
+                        vals[r] = (s / self.trees.len().max(1) as f64)
+                            as f32;
+                    }
+                }
                 Predictions::Values(vals)
             }
         }

@@ -38,6 +38,12 @@ impl<'a> EvalContext<'a> {
     }
 }
 
+/// Row-block height for batched predict-path gathers. Blocks keep the
+/// row-major staging buffer L1/L2-resident (1024 rows x d<=64 f32 =
+/// 256 KiB worst case) while amortizing the per-column pointer walk in
+/// [`Dataset::gather_rows_rowmajor`] across the whole block.
+pub(crate) const PREDICT_BLOCK_ROWS: usize = 1024;
+
 pub trait FittedModel {
     fn predict(&self, ds: &Dataset, rows: &[usize],
                ctx: &mut EvalContext) -> Predictions;
@@ -101,27 +107,39 @@ struct FittedTree {
 impl FittedModel for FittedTree {
     fn predict(&self, ds: &Dataset, rows: &[usize],
                _ctx: &mut EvalContext) -> Predictions {
-        let mut buf = Vec::with_capacity(ds.d);
+        // blocked gather: bounded row-major buffer, each source
+        // column streamed once per block (util::kernels)
+        let mut block = Vec::new();
         match self.task {
             Task::Classification { n_classes } => {
                 let mut scores = vec![0.0f32; rows.len() * n_classes];
-                for (r, &i) in rows.iter().enumerate() {
-                    ds.gather_row(i, &mut buf);
-                    let dist = self.tree.predict_row(&buf);
-                    for c in 0..n_classes.min(dist.len()) {
-                        scores[r * n_classes + c] = dist[c] as f32;
+                for blo in (0..rows.len()).step_by(PREDICT_BLOCK_ROWS) {
+                    let bhi = (blo + PREDICT_BLOCK_ROWS).min(rows.len());
+                    ds.gather_rows_rowmajor(&rows[blo..bhi], &mut block);
+                    for r in blo..bhi {
+                        let buf = &block[(r - blo) * ds.d
+                                         ..(r - blo + 1) * ds.d];
+                        let dist = self.tree.predict_row(buf);
+                        for c in 0..n_classes.min(dist.len()) {
+                            scores[r * n_classes + c] = dist[c] as f32;
+                        }
                     }
                 }
                 Predictions::ClassScores { n_classes, scores }
             }
-            Task::Regression => Predictions::Values(
-                rows.iter()
-                    .map(|&i| {
-                        ds.gather_row(i, &mut buf);
-                        self.tree.predict_row(&buf)[0] as f32
-                    })
-                    .collect(),
-            ),
+            Task::Regression => {
+                let mut vals = vec![0.0f32; rows.len()];
+                for blo in (0..rows.len()).step_by(PREDICT_BLOCK_ROWS) {
+                    let bhi = (blo + PREDICT_BLOCK_ROWS).min(rows.len());
+                    ds.gather_rows_rowmajor(&rows[blo..bhi], &mut block);
+                    for r in blo..bhi {
+                        let buf = &block[(r - blo) * ds.d
+                                         ..(r - blo + 1) * ds.d];
+                        vals[r] = self.tree.predict_row(buf)[0] as f32;
+                    }
+                }
+                Predictions::Values(vals)
+            }
         }
     }
 }

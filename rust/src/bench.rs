@@ -10,6 +10,10 @@ pub struct Timing {
     pub name: String,
     pub iters: usize,
     pub mean_s: f64,
+    /// Median of the measured runs — the number the perf-trajectory
+    /// gate (`tools/benchdiff`) compares against `BENCH_baseline.json`;
+    /// far less sensitive to scheduler noise spikes than the mean.
+    pub median_s: f64,
     pub std_s: f64,
     pub min_s: f64,
     pub max_s: f64,
@@ -50,13 +54,31 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
     let std = crate::util::stats::std_dev(&samples);
     let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
     let max = samples.iter().cloned().fold(0.0, f64::max);
+    let median = median_of(&samples);
     Timing {
         name: name.to_string(),
         iters: iters.max(1),
         mean_s: mean,
+        median_s: median,
         std_s: std,
         min_s: min,
         max_s: max,
+    }
+}
+
+/// Median of a non-empty sample set (even count: mean of the two
+/// central order statistics).
+fn median_of(samples: &[f64]) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
     }
 }
 
@@ -164,7 +186,15 @@ mod tests {
         });
         assert!(t.mean_s > 0.0);
         assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s + 1e-12);
+        assert!(t.min_s <= t.median_s && t.median_s <= t.max_s + 1e-12);
         assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn median_is_order_statistic() {
+        assert_eq!(median_of(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median_of(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median_of(&[7.0]), 7.0);
     }
 
     #[test]
@@ -307,6 +337,7 @@ pub fn timing_to_json(t: &Timing) -> crate::util::json::Json {
         ("operation", Json::Str(t.name.clone())),
         ("iters", Json::Num(t.iters as f64)),
         ("mean_s", Json::Num(t.mean_s)),
+        ("median_s", Json::Num(t.median_s)),
         ("std_s", Json::Num(t.std_s)),
         ("min_s", Json::Num(t.min_s)),
         ("max_s", Json::Num(t.max_s)),

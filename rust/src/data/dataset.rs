@@ -113,13 +113,29 @@ impl Dataset {
     }
 
     /// Row-major export (`n * d`), for consumers that need contiguous
-    /// rows (PJRT tensor upload, binning).
+    /// rows (PJRT tensor upload, binning). Blocked: each source
+    /// column is streamed once per row block instead of strided once
+    /// per row (`util::kernels::gather_all_rowmajor` — pure data
+    /// movement, bit-exact).
     pub fn to_row_major(&self) -> Vec<f32> {
-        let mut x = Vec::with_capacity(self.n * self.d);
-        for i in 0..self.n {
-            x.extend(self.cols.iter().map(|c| c[i]));
-        }
+        let cols: Vec<&[f32]> =
+            self.cols.iter().map(|c| c.as_slice()).collect();
+        let mut x = Vec::new();
+        crate::util::kernels::gather_all_rowmajor(&cols, self.n,
+                                                  &mut x);
         x
+    }
+
+    /// Gather an arbitrary row subset into a row-major buffer
+    /// (`out[r * d + j] = col j at rows[r]`), blocked the same way as
+    /// [`Dataset::to_row_major`]. The bulk counterpart of calling
+    /// [`Dataset::gather_row`] per index (tree/GBM training views,
+    /// batched predict).
+    pub fn gather_rows_rowmajor(&self, rows: &[usize],
+                                out: &mut Vec<f32>) {
+        let cols: Vec<&[f32]> =
+            self.cols.iter().map(|c| c.as_slice()).collect();
+        crate::util::kernels::gather_rowmajor(&cols, rows, out);
     }
 
     pub fn push_row(&mut self, row: &[f32], y: f32) {

@@ -7,6 +7,7 @@
 
 use crate::data::dataset::Dataset;
 use crate::space::{Config, ConfigSpace};
+use crate::util::kernels;
 use crate::util::linalg::{top_eigs, Mat};
 use crate::util::rng::Rng;
 
@@ -73,8 +74,9 @@ impl Fitted {
                 .map(|(j, &v)| ((v as f64 - shift[j]) * scale[j]) as f32)
                 .collect(),
             Fitted::RowNorm => {
-                let n: f64 = row.iter().map(|&v| (v as f64).powi(2)).sum();
-                let n = n.sqrt().max(1e-12);
+                let x: Vec<f64> =
+                    row.iter().map(|&v| v as f64).collect();
+                let n = kernels::norm2(&x).max(1e-12);
                 row.iter().map(|&v| (v as f64 / n) as f32).collect()
             }
             Fitted::Quantile { grids, normal_out } => row
@@ -105,6 +107,11 @@ impl Fitted {
                     .enumerate()
                     .map(|(j, &v)| v as f64 - mean[j])
                     .collect();
+                // DETLINT: allow(kernel-scalar): per-row reference
+                // path; proj columns are strided, and dataset-sized
+                // traffic takes the columnar kernel arm in apply_with
+                // (which must stay bit-identical to this exact
+                // j-ascending accumulation).
                 (0..proj.cols)
                     .map(|c| {
                         let mut s = 0.0;
@@ -125,6 +132,11 @@ impl Fitted {
             Fitted::Rff { w, b } => {
                 let m = w.cols;
                 let norm = (2.0 / m as f64).sqrt();
+                // DETLINT: allow(kernel-scalar): w columns are
+                // strided (fit-time layout is d×m); the row-wise
+                // fallback is already gather-blocked, and m·d per
+                // row is small at MAX_WIDTH. The phase argument must
+                // keep this exact j-ascending accumulation.
                 (0..m)
                     .map(|c| {
                         let mut s = b[c];
@@ -135,16 +147,16 @@ impl Fitted {
                     })
                     .collect()
             }
-            Fitted::Nystroem { landmarks, gamma } => (0..landmarks.rows)
-                .map(|l| {
-                    let mut d2 = 0.0;
-                    for (j, &x) in row.iter().enumerate() {
-                        let dlt = x as f64 - landmarks[(l, j)];
-                        d2 += dlt * dlt;
-                    }
-                    (-gamma * d2).exp() as f32
-                })
-                .collect(),
+            Fitted::Nystroem { landmarks, gamma } => {
+                let x: Vec<f64> =
+                    row.iter().map(|&v| v as f64).collect();
+                (0..landmarks.rows)
+                    .map(|l| {
+                        let d2 = kernels::sqdist(&x, landmarks.row(l));
+                        (-gamma * d2).exp() as f32
+                    })
+                    .collect()
+            }
             Fitted::RandTrees { trees } => trees
                 .iter()
                 .map(|splits| {
@@ -161,6 +173,11 @@ impl Fitted {
                     leaf as f32 / (1u32 << splits.len()) as f32
                 })
                 .collect(),
+            // DETLINT: allow(kernel-scalar): cluster member lists are
+            // tiny (≤ d ≤ MAX_WIDTH) and the f32 accumulation is part
+            // of the op's fitted semantics — widening through a lane
+            // kernel would change every downstream trajectory for no
+            // measurable win.
             Fitted::Agglomerate { clusters } => clusters
                 .iter()
                 .map(|members| {
@@ -225,41 +242,22 @@ impl Fitted {
                         // no-op column: share, don't copy
                         Arc::clone(ds.col_arc(j))
                     } else {
-                        Arc::new(
-                            ds.col(j)
-                                .iter()
-                                .map(|&v| ((v as f64 - shift[j])
-                                    * scale[j]) as f32)
-                                .collect(),
-                        )
+                        Arc::new(kernels::affine_apply_f32(
+                            ds.col(j), shift[j], scale[j]))
                     }
                 })
                 .collect(),
             Fitted::Quantile { grids, normal_out } => (0..ds.d)
                 .map(|j| {
-                    let g = &grids[j];
-                    Arc::new(
-                        ds.col(j)
-                            .iter()
-                            .map(|&v| {
-                                let rank = match g.binary_search_by(|x| {
-                                    x.partial_cmp(&(v as f64))
-                                        .unwrap_or(std::cmp::Ordering::Less)
-                                }) {
-                                    Ok(i) => i,
-                                    Err(i) => i,
-                                };
-                                let q = rank as f64
-                                    / g.len().max(1) as f64;
-                                let q = q.clamp(0.001, 0.999);
-                                if *normal_out {
-                                    inv_norm_cdf(q) as f32
-                                } else {
-                                    q as f32
-                                }
-                            })
-                            .collect(),
-                    )
+                    Arc::new(kernels::quantile_apply_f32(
+                        ds.col(j),
+                        &grids[j],
+                        |q| if *normal_out {
+                            inv_norm_cdf(q) as f32
+                        } else {
+                            q as f32
+                        },
+                    ))
                 })
                 .collect(),
             Fitted::CrossPairs(pairs) => {
@@ -267,27 +265,75 @@ impl Fitted {
                     .map(|j| Arc::clone(ds.col_arc(j)))
                     .collect();
                 for &(a, b) in pairs {
-                    let (ca, cb) = (ds.col(a), ds.col(b));
-                    cols.push(Arc::new(
-                        ca.iter().zip(cb).map(|(&x, &y)| x * y).collect(),
-                    ));
+                    cols.push(Arc::new(kernels::mul_f32(ds.col(a),
+                                                        ds.col(b))));
                 }
                 cols
             }
-            // ---- row-wise ops: gather / apply_row / scatter --------
+            // ---- columnar kernel arm: centered projection ----------
+            // Per output column c the accumulator runs j-ascending
+            // over input columns — the identical operation sequence
+            // `apply_row` performs per row, so every cell is
+            // bit-identical to the historical row-wise math at any
+            // sharding (each row's value is independent of every
+            // other row's).
+            Fitted::Project { mean, proj } => {
+                let run = |lo: usize, hi: usize| -> Vec<Vec<f32>> {
+                    (0..proj.cols)
+                        .map(|c| {
+                            let mut acc = vec![0.0f64; hi - lo];
+                            for j in 0..ds.d {
+                                kernels::axpy_centered_f32(
+                                    &mut acc,
+                                    &ds.col(j)[lo..hi],
+                                    mean[j],
+                                    proj[(j, c)],
+                                );
+                            }
+                            acc.iter().map(|&s| s as f32).collect()
+                        })
+                        .collect()
+                };
+                let parts = match exec {
+                    Some(ex) => {
+                        ex.map_ranges(ds.n, SHARD_MIN_ROWS, run)
+                    }
+                    None => vec![run(0, ds.n)],
+                };
+                splice_segments(proj.cols, ds.n, parts)
+            }
+            // ---- stage-wise composition: each stage takes its own
+            // fast path (columnar arms compose, untouched columns
+            // stay Arc-shared through the whole chain) ---------------
+            Fitted::Chain(ops) => {
+                let mut cur = ds.clone();
+                for op in ops {
+                    cur = op.apply_with(&cur, exec);
+                }
+                return cur;
+            }
+            // ---- row-wise ops: blocked gather / apply_row / scatter
+            // (the gather streams each source column once per
+            // G_BLOCK-row block instead of striding across all
+            // columns per row; pure data movement, bit-exact) --------
             _ => {
                 let d_out = self.out_dim(ds.d);
+                let col_refs: Vec<&[f32]> =
+                    (0..ds.d).map(|j| ds.col(j)).collect();
                 let run = |lo: usize, hi: usize| -> Vec<Vec<f32>> {
                     let mut seg: Vec<Vec<f32>> = (0..d_out)
                         .map(|_| Vec::with_capacity(hi - lo))
                         .collect();
-                    let mut buf = Vec::with_capacity(ds.d);
-                    for i in lo..hi {
-                        ds.gather_row(i, &mut buf);
-                        let row = self.apply_row(&buf);
-                        debug_assert_eq!(row.len(), d_out);
-                        for (c, &v) in seg.iter_mut().zip(&row) {
-                            c.push(v);
+                    let mut block = Vec::new();
+                    for blo in (lo..hi).step_by(kernels::G_BLOCK) {
+                        let bhi = (blo + kernels::G_BLOCK).min(hi);
+                        kernels::gather_range_rowmajor(
+                            &col_refs, blo, bhi, &mut block);
+                        for r in 0..bhi - blo {
+                            let row = self.apply_row(
+                                &block[r * ds.d..(r + 1) * ds.d]);
+                            debug_assert_eq!(row.len(), d_out);
+                            kernels::scatter_row_f32(&row, &mut seg);
                         }
                     }
                     seg
@@ -296,20 +342,30 @@ impl Fitted {
                     Some(ex) => ex.map_ranges(ds.n, SHARD_MIN_ROWS, run),
                     None => vec![run(0, ds.n)],
                 };
-                let mut cols: Vec<Vec<f32>> = (0..d_out)
-                    .map(|_| Vec::with_capacity(ds.n))
-                    .collect();
-                for part in &parts {
-                    for (c, seg) in cols.iter_mut().zip(part) {
-                        c.extend_from_slice(seg);
-                    }
-                }
-                cols.into_iter().map(Arc::new).collect()
+                return Dataset::from_columns(
+                    &ds.name, ds.task,
+                    splice_segments(d_out, ds.n, parts),
+                    Arc::clone(&ds.y));
             }
         };
         Dataset::from_columns(&ds.name, ds.task, cols,
                               Arc::clone(&ds.y))
     }
+}
+
+/// Splice per-range, per-column output segments (range order) back
+/// into whole columns.
+fn splice_segments(d_out: usize, n: usize,
+                   parts: Vec<Vec<Vec<f32>>>)
+    -> Vec<std::sync::Arc<Vec<f32>>> {
+    let mut cols: Vec<Vec<f32>> =
+        (0..d_out).map(|_| Vec::with_capacity(n)).collect();
+    for part in &parts {
+        for (c, seg) in cols.iter_mut().zip(part) {
+            c.extend_from_slice(seg);
+        }
+    }
+    cols.into_iter().map(std::sync::Arc::new).collect()
 }
 
 /// Minimum rows per shard of a row-parallel [`Fitted::apply_sharded`]:
@@ -403,62 +459,48 @@ where
     parts.into_iter().flatten().collect()
 }
 
-/// Column mean/std over `rows`, mergeable: fixed-block partial sums
-/// merged in block order (see module notes above). This is the fit
-/// kernel for the `standard` scaler; it intentionally does NOT match
-/// `Dataset::col_stats` bit-for-bit (that one is a straight
-/// sequential sum kept for meta-features and non-sharded ops).
+/// Column mean/std over `rows`, mergeable: fixed-block fused
+/// `(Σx, Σx²)` partials ([`kernels::moments_indexed_f32`], one pass
+/// over the data instead of the historical two) merged in block
+/// order (see module notes above). Variance comes out as
+/// `(Σx²/n − mean²).max(0)` — the clamp guards the tiny negative
+/// residue cancellation can leave on near-constant columns. This is
+/// the fit kernel for the `standard` scaler; it intentionally does
+/// NOT match `Dataset::col_stats` bit-for-bit (that one is a
+/// straight sequential sum kept for meta-features and non-sharded
+/// ops).
 pub fn col_moments(ds: &Dataset, rows: &[usize], exec: Option<&Exec>)
     -> (Vec<f64>, Vec<f64>) {
     let d = ds.d;
     let n = rows.len().max(1) as f64;
-    // pass 1: blocked sums -> means
-    let sums = map_fit_blocks(rows.len(), exec, |lo, hi| {
-        let mut s = vec![0.0f64; d];
-        for (j, sj) in s.iter_mut().enumerate() {
-            let c = ds.col(j);
-            for &i in &rows[lo..hi] {
-                *sj += c[i] as f64;
-            }
-        }
-        s
+    let parts = map_fit_blocks(rows.len(), exec, |lo, hi| {
+        (0..d)
+            .map(|j| {
+                kernels::moments_indexed_f32(ds.col(j), &rows[lo..hi])
+            })
+            .collect::<Vec<(f64, f64)>>()
     });
-    let mut mean = vec![0.0f64; d];
-    for s in &sums {
-        for (m, v) in mean.iter_mut().zip(s) {
-            *m += v;
+    let mut sum = vec![0.0f64; d];
+    let mut sumsq = vec![0.0f64; d];
+    for part in &parts {
+        for (j, &(s, q)) in part.iter().enumerate() {
+            sum[j] += s;
+            sumsq[j] += q;
         }
     }
-    for m in &mut mean {
-        *m /= n;
-    }
-    // pass 2: blocked squared deviations -> std
-    let sq = {
-        let mean = &mean;
-        map_fit_blocks(rows.len(), exec, move |lo, hi| {
-            let mut s = vec![0.0f64; d];
-            for (j, sj) in s.iter_mut().enumerate() {
-                let c = ds.col(j);
-                for &i in &rows[lo..hi] {
-                    let dlt = c[i] as f64 - mean[j];
-                    *sj += dlt * dlt;
-                }
-            }
-            s
-        })
-    };
-    let mut var = vec![0.0f64; d];
-    for s in &sq {
-        for (v, x) in var.iter_mut().zip(s) {
-            *v += x;
-        }
-    }
-    let std = var.iter().map(|v| (v / n).sqrt()).collect();
+    let mean: Vec<f64> = sum.iter().map(|s| s / n).collect();
+    let std = sumsq
+        .iter()
+        .zip(&mean)
+        .map(|(q, m)| (q / n - m * m).max(0.0).sqrt())
+        .collect();
     (mean, std)
 }
 
 /// Column min/max over `rows`, mergeable exactly (min/max are
-/// associative and commutative — any chunking gives the same bits).
+/// associative and commutative — any chunking gives the same bits;
+/// the lane-striped [`kernels::minmax_indexed_f32`] absorbs NaNs the
+/// same way a sequential `f64::min` fold does).
 pub fn col_minmax(ds: &Dataset, rows: &[usize], exec: Option<&Exec>)
     -> (Vec<f64>, Vec<f64>) {
     let d = ds.d;
@@ -466,12 +508,10 @@ pub fn col_minmax(ds: &Dataset, rows: &[usize], exec: Option<&Exec>)
         let mut lo_v = vec![f64::INFINITY; d];
         let mut hi_v = vec![f64::NEG_INFINITY; d];
         for (j, (l, h)) in lo_v.iter_mut().zip(&mut hi_v).enumerate() {
-            let c = ds.col(j);
-            for &i in &rows[lo..hi] {
-                let v = c[i] as f64;
-                *l = l.min(v);
-                *h = h.max(v);
-            }
+            let (bl, bh) =
+                kernels::minmax_indexed_f32(ds.col(j), &rows[lo..hi]);
+            *l = bl;
+            *h = bh;
         }
         (lo_v, hi_v)
     });
@@ -573,18 +613,23 @@ fn col_values(ds: &Dataset, train: &[usize], j: usize) -> Vec<f64> {
     train.iter().map(|&i| c[i] as f64).collect()
 }
 
-/// |pearson correlation| of feature j with the label/target.
+/// |pearson correlation| of feature j with the label/target: center
+/// both series, then three lane-striped dots.
 fn label_corr(ds: &Dataset, train: &[usize], j: usize) -> f64 {
-    let xs = col_values(ds, train, j);
-    let ys: Vec<f64> = train.iter().map(|&i| ds.y[i] as f64).collect();
+    let mut xs = col_values(ds, train, j);
+    let mut ys: Vec<f64> =
+        train.iter().map(|&i| ds.y[i] as f64).collect();
     let (mx, my) = (crate::util::stats::mean(&xs),
                     crate::util::stats::mean(&ys));
-    let (mut num, mut vx, mut vy) = (0.0f64, 0.0f64, 0.0f64);
-    for (x, y) in xs.iter().zip(&ys) {
-        num += (x - mx) * (y - my);
-        vx += (x - mx) * (x - mx);
-        vy += (y - my) * (y - my);
+    for x in &mut xs {
+        *x -= mx;
     }
+    for y in &mut ys {
+        *y -= my;
+    }
+    let num = kernels::dot(&xs, &ys);
+    let vx = kernels::dot(&xs, &xs);
+    let vy = kernels::dot(&ys, &ys);
     if vx <= 0.0 || vy <= 0.0 {
         0.0
     } else {
@@ -592,15 +637,23 @@ fn label_corr(ds: &Dataset, train: &[usize], j: usize) -> f64 {
     }
 }
 
-fn train_cov(ds: &Dataset, train: &[usize]) -> Mat {
-    let mut m = Mat::zeros(train.len(), ds.d);
+/// Feature-major (d × |train|) widened copy of the training rows:
+/// each feature is one contiguous row, built by streaming each
+/// source column once — the layout [`Mat::covariance_t`] /
+/// [`Mat::second_moment_t`] lane-dot directly, with no transpose.
+fn train_mat_t(ds: &Dataset, train: &[usize]) -> Mat {
+    let mut m = Mat::zeros(ds.d, train.len());
     for j in 0..ds.d {
         let c = ds.col(j);
-        for (r, &i) in train.iter().enumerate() {
-            m[(r, j)] = c[i] as f64;
+        for (x, &i) in m.row_mut(j).iter_mut().zip(train) {
+            *x = c[i] as f64;
         }
     }
-    m.covariance()
+    m
+}
+
+fn train_cov(ds: &Dataset, train: &[usize]) -> Mat {
+    train_mat_t(ds, train).covariance_t()
 }
 
 fn top_k_by_score(scores: &[f64], k: usize) -> Vec<usize> {
@@ -763,8 +816,11 @@ pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
         "pca" => {
             let keep = cfg.f64_or("keep_frac", 0.9);
             let whiten = cfg.str_or("whiten", "false") == "true";
-            let cov = train_cov(ds, train);
+            let tm = train_mat_t(ds, train);
+            let cov = tm.covariance_t();
             let eigs = top_eigs(&cov, d.min(MAX_WIDTH), rng);
+            // DETLINT: allow(kernel-scalar): spectrum-mass fold over
+            // at most MAX_WIDTH eigenvalues — cold and tiny.
             let total: f64 = eigs.iter().map(|(l, _)| l.max(0.0)).sum();
             let mut cum = 0.0;
             let mut k = 0;
@@ -776,16 +832,10 @@ pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
                 }
             }
             let k = k.max(1);
-            let mean = {
-                let mut m = Mat::zeros(train.len(), d);
-                for j in 0..d {
-                    let c = ds.col(j);
-                    for (r, &i) in train.iter().enumerate() {
-                        m[(r, j)] = c[i] as f64;
-                    }
-                }
-                m.col_means()
-            };
+            let nf = train.len().max(1) as f64;
+            let mean: Vec<f64> = (0..d)
+                .map(|j| kernels::sum(tm.row(j)) / nf)
+                .collect();
             let mut proj = Mat::zeros(d, k);
             for (c, (l, v)) in eigs.iter().take(k).enumerate() {
                 let w = if whiten { 1.0 / l.abs().sqrt().max(1e-9) } else { 1.0 };
@@ -797,18 +847,10 @@ pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
         }
         "svd" => {
             let k = cfg.usize_or("n_components", 8).clamp(1, d);
-            // second-moment matrix (no centering)
-            let mut sm = Mat::zeros(d, d);
-            let mut r = Vec::with_capacity(d);
-            for &i in train {
-                ds.gather_row(i, &mut r);
-                for a in 0..d {
-                    for b in 0..d {
-                        sm[(a, b)] += r[a] as f64 * r[b] as f64;
-                    }
-                }
-            }
-            sm.scale(1.0 / train.len().max(1) as f64);
+            // second-moment matrix (no centering): one lane-dot per
+            // feature pair over the feature-major copy, instead of
+            // the historical O(n·d²) scalar rank-1 accumulation
+            let sm = train_mat_t(ds, train).second_moment_t();
             let eigs = top_eigs(&sm, k, rng);
             let mut proj = Mat::zeros(d, eigs.len());
             for (c, (_, v)) in eigs.iter().enumerate() {
@@ -1024,25 +1066,26 @@ pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
             let l2 = cfg.f64_or("l2", 1e-3);
             let (mean, std) = train_stats(ds, train);
             let mut w = vec![0.0f64; d];
-            let y_mean: f64 = train.iter().map(|&i| ds.y[i] as f64)
-                .sum::<f64>() / train.len().max(1) as f64;
+            let ys: Vec<f64> =
+                train.iter().map(|&i| ds.y[i] as f64).collect();
+            let y_mean =
+                kernels::sum(&ys) / train.len().max(1) as f64;
             let mut row = Vec::with_capacity(d);
+            let mut x = vec![0.0f64; d];
             for _epoch in 0..3 {
                 for &i in train {
                     ds.gather_row(i, &mut row);
                     let target = if ds.task.is_classification() {
                         if ds.y[i] as f64 > y_mean { 1.0 } else { -1.0 }
                     } else if ds.y[i] as f64 > y_mean { 1.0 } else { -1.0 };
-                    let mut z = 0.0;
                     for j in 0..d {
-                        z += w[j] * (row[j] as f64 - mean[j])
+                        x[j] = (row[j] as f64 - mean[j])
                             / std[j].max(1e-9);
                     }
+                    let z = kernels::dot(&w, &x);
                     if z * target < 1.0 {
                         for j in 0..d {
-                            let xj = (row[j] as f64 - mean[j])
-                                / std[j].max(1e-9);
-                            w[j] += 0.01 * (target * xj - l2 * w[j]);
+                            w[j] += 0.01 * (target * x[j] - l2 * w[j]);
                         }
                     }
                 }
@@ -1069,11 +1112,10 @@ pub fn fit_transformer(name: &str, ds: &Dataset, train: &[usize],
                 let mut dir: Vec<f64> = cmean.iter().zip(&gmean)
                     .map(|(a, b)| a - b).collect();
                 // Gram-Schmidt against existing directions
+                // (x − proj·p ≡ x + (−proj)·p bitwise)
                 for prev in &dirs {
                     let proj = crate::util::linalg::dot(&dir, prev);
-                    for (x, p) in dir.iter_mut().zip(prev) {
-                        *x -= proj * p;
-                    }
+                    kernels::axpy(&mut dir, -proj, prev);
                 }
                 let n = crate::util::linalg::norm2(&dir);
                 if n > 1e-9 {
@@ -1120,9 +1162,7 @@ fn random_orthogonal(k: usize, rng: &mut Rng) -> Mat {
         let mut v: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
         for prev in &cols {
             let p = crate::util::linalg::dot(&v, prev);
-            for (x, q) in v.iter_mut().zip(prev) {
-                *x -= p * q;
-            }
+            kernels::axpy(&mut v, -p, prev);
         }
         let n = crate::util::linalg::norm2(&v).max(1e-12);
         for x in &mut v {
@@ -1385,6 +1425,68 @@ mod tests {
         for i in 0..ds.n {
             let want = ((ds.at(i, 3) as f64 - 1.0) * 2.0) as f32;
             assert_eq!(out.at(i, 3).to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn columnar_arms_match_apply_row_bitwise() {
+        // every op with a columnar kernel arm in apply_with must
+        // reproduce apply_row's bits cell-for-cell (the columnar
+        // path re-orders memory traffic, never arithmetic)
+        let (ds, train) = toy_ds();
+        let mut rng = Rng::new(5);
+        let mut ops: Vec<(&str, Fitted)> = vec![
+            ("affine",
+             fit_scaler("standard", &ds, &train, &Config::new())),
+            ("quantile",
+             fit_scaler("quantile", &ds, &train,
+                        &scaler_space("quantile").default_config())),
+        ];
+        let pca_cfg = transformer_space("pca").default_config();
+        ops.push(("project",
+                  fit_transformer("pca", &ds, &train, &pca_cfg,
+                                  &mut rng)));
+        let std_fit = fit_scaler("standard", &ds, &train,
+                                 &Config::new());
+        let svd_cfg = transformer_space("svd").default_config();
+        let svd_fit = fit_transformer("svd", &ds, &train, &svd_cfg,
+                                      &mut rng);
+        ops.push(("chain", Fitted::Chain(vec![std_fit, svd_fit])));
+        for (name, f) in &ops {
+            let out = f.apply(&ds);
+            let mut buf = Vec::new();
+            for i in 0..ds.n {
+                ds.gather_row(i, &mut buf);
+                let want = f.apply_row(&buf);
+                assert_eq!(out.d, want.len(), "{name}");
+                for (j, w) in want.iter().enumerate() {
+                    assert_eq!(out.at(i, j).to_bits(), w.to_bits(),
+                               "{name} row={i} col={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_shares_untouched_columns_through_stages() {
+        // a chain of two zero-copy stages must still pointer-share:
+        // Select keeps Arc identity, and a no-op Affine lane after it
+        // keeps sharing the original column
+        let (ds, _) = toy_ds();
+        let chain = Fitted::Chain(vec![
+            Fitted::Select(vec![0, 2, 5]),
+            Fitted::Affine {
+                shift: vec![0.0, 1.0, 0.0],
+                scale: vec![1.0, 2.0, 1.0],
+            },
+        ]);
+        let out = chain.apply(&ds);
+        assert_eq!(out.d, 3);
+        assert!(std::sync::Arc::ptr_eq(out.col_arc(0), ds.col_arc(0)));
+        assert!(std::sync::Arc::ptr_eq(out.col_arc(2), ds.col_arc(5)));
+        for i in 0..ds.n {
+            let want = ((ds.at(i, 2) as f64 - 1.0) * 2.0) as f32;
+            assert_eq!(out.at(i, 1).to_bits(), want.to_bits());
         }
     }
 

@@ -1,0 +1,891 @@
+//! Lane-deterministic SIMD-friendly kernel layer for the linalg and
+//! FE hot paths.
+//!
+//! Every reduction here splits its input into a **fixed number of
+//! accumulator lanes** ([`LANES`] = 8): element `i` always lands in
+//! lane `i % LANES`, lanes are folded in a fixed sequential order, and
+//! no step depends on the hardware vector width, the worker count, or
+//! the chunking of callers. That makes every kernel *bit-deterministic
+//! everywhere* — the compiler may map the 8 independent accumulators
+//! onto whatever SIMD registers the target has (or none at all)
+//! without changing a single result bit, because IEEE semantics of the
+//! written program are fixed and LLVM never re-associates floats.
+//!
+//! The lane split *re-associates* relative to a plain sequential fold,
+//! so kernel results differ in low bits from the pre-kernel scalar
+//! loops. That is allowed by the repo's determinism contract (bit
+//! identity across `(workers, super_batch, depth)` and across the
+//! serial/sharded fit paths) as long as **every** path goes through
+//! the same kernel — the fixed-4096-block sharded-fit merge of
+//! `fe::ops::map_fit_blocks` is the precedent. The contract is pinned
+//! two ways:
+//!
+//! * every kernel has a **scalar reference twin** in [`scalar`],
+//!   written as the simplest possible loop over the same fixed lane
+//!   structure; property tests assert bitwise equality across sizes
+//!   0/1/7/8/9/4095/4096/4097 (`tests` below and
+//!   `rust/tests/kernel_identity.rs`);
+//! * [`set_force_scalar`] flips the public entry points onto the
+//!   scalar twins at runtime (also via `VOLCANO_SCALAR_KERNELS=1`),
+//!   and a fixed-seed end-to-end search must be bit-identical across
+//!   the switch — so the vectorizable forms can never drift from the
+//!   reference semantics unnoticed.
+//!
+//! Element-wise kernels (axpy, scale, add_assign, the f32 column
+//! transforms, gather/scatter) have no accumulation order at all;
+//! their scalar twins exist so the on/off switch covers every entry
+//! point uniformly.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Fixed accumulator-lane count of every striped reduction. Part of
+/// the bit contract: changing it changes results, so it is a
+/// compile-time constant, never a tunable.
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------------
+// kernel-mode switch (vectorizable forms vs scalar reference twins)
+// ---------------------------------------------------------------------
+
+const MODE_UNSET: u8 = 0;
+const MODE_LANES: u8 = 1;
+const MODE_SCALAR: u8 = 2;
+
+// SYNC: Relaxed — the mode is a pure dispatch toggle between two
+// implementations that produce identical bits for every input (the
+// property pinned by the tests below), so no thread can observe a
+// result that depends on *when* another thread's store becomes
+// visible; monotonic per-cell atomicity is all that is needed.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Force every kernel entry point onto its scalar reference twin
+/// (`true`) or the vectorizable form (`false`). Test/bench hook for
+/// the on/off bit-identity suites; both settings produce identical
+/// bits by contract.
+pub fn set_force_scalar(on: bool) {
+    // SYNC: Relaxed — see the MODE note above.
+    MODE.store(if on { MODE_SCALAR } else { MODE_LANES },
+               Ordering::Relaxed);
+}
+
+#[inline]
+fn scalar_mode() -> bool {
+    // SYNC: Relaxed — see the MODE note above; the lazy env probe is
+    // idempotent, so a benign first-call race stores the same value.
+    let m = MODE.load(Ordering::Relaxed);
+    if m == MODE_UNSET {
+        let on = std::env::var("VOLCANO_SCALAR_KERNELS")
+            .is_ok_and(|v| v == "1" || v.eq_ignore_ascii_case("true"));
+        MODE.store(if on { MODE_SCALAR } else { MODE_LANES },
+                   Ordering::Relaxed);
+        return on;
+    }
+    m == MODE_SCALAR
+}
+
+/// Fold the lane accumulators in the fixed sequential order. The
+/// horizontal order is part of the bit contract (shared by the lane
+/// and scalar forms).
+#[inline]
+fn hsum(acc: &[f64; LANES]) -> f64 {
+    let mut s = 0.0;
+    for &v in acc {
+        s += v;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// f64 striped reductions
+// ---------------------------------------------------------------------
+
+/// Lane-striped dot product: lane `l` accumulates elements `l, l+8,
+/// l+16, …` in index order; lanes fold sequentially.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if scalar_mode() {
+        return scalar::dot(a, b);
+    }
+    let whole = a.len() - a.len() % LANES;
+    let mut acc = [0.0f64; LANES];
+    for (ca, cb) in a[..whole]
+        .chunks_exact(LANES)
+        .zip(b[..whole].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    for (l, (x, y)) in a[whole..].iter().zip(&b[whole..]).enumerate() {
+        acc[l] += x * y;
+    }
+    hsum(&acc)
+}
+
+/// Lane-striped sum.
+#[inline]
+pub fn sum(a: &[f64]) -> f64 {
+    if scalar_mode() {
+        return scalar::sum(a);
+    }
+    let whole = a.len() - a.len() % LANES;
+    let mut acc = [0.0f64; LANES];
+    for ca in a[..whole].chunks_exact(LANES) {
+        for l in 0..LANES {
+            acc[l] += ca[l];
+        }
+    }
+    for (l, x) in a[whole..].iter().enumerate() {
+        acc[l] += x;
+    }
+    hsum(&acc)
+}
+
+/// Euclidean norm through the lane-striped [`dot`].
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Lane-striped squared Euclidean distance `Σ (a[i] - b[i])²`
+/// (Nystroem RBF features, agglomeration distances).
+#[inline]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if scalar_mode() {
+        return scalar::sqdist(a, b);
+    }
+    let whole = a.len() - a.len() % LANES;
+    let mut acc = [0.0f64; LANES];
+    for (ca, cb) in a[..whole]
+        .chunks_exact(LANES)
+        .zip(b[..whole].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            let d = ca[l] - cb[l];
+            acc[l] += d * d;
+        }
+    }
+    for (l, (x, y)) in a[whole..].iter().zip(&b[whole..]).enumerate() {
+        let d = x - y;
+        acc[l] += d * d;
+    }
+    hsum(&acc)
+}
+
+/// Fused first/second moment over a contiguous f32 column: returns
+/// `(Σx, Σx²)` in f64, both lane-striped over the same stripe.
+#[inline]
+pub fn moments_f32(col: &[f32]) -> (f64, f64) {
+    if scalar_mode() {
+        return scalar::moments_f32(col);
+    }
+    let whole = col.len() - col.len() % LANES;
+    let mut s = [0.0f64; LANES];
+    let mut q = [0.0f64; LANES];
+    for c in col[..whole].chunks_exact(LANES) {
+        for l in 0..LANES {
+            let v = c[l] as f64;
+            s[l] += v;
+            q[l] += v * v;
+        }
+    }
+    for (l, &x) in col[whole..].iter().enumerate() {
+        let v = x as f64;
+        s[l] += v;
+        q[l] += v * v;
+    }
+    (hsum(&s), hsum(&q))
+}
+
+/// [`moments_f32`] over a gathered row subset: element `r` of the
+/// stripe is `col[idx[r]]`. The stripe runs over `idx` positions, so
+/// the result depends only on the index *sequence*, never on how a
+/// caller chunked it.
+#[inline]
+pub fn moments_indexed_f32(col: &[f32], idx: &[usize]) -> (f64, f64) {
+    if scalar_mode() {
+        return scalar::moments_indexed_f32(col, idx);
+    }
+    let whole = idx.len() - idx.len() % LANES;
+    let mut s = [0.0f64; LANES];
+    let mut q = [0.0f64; LANES];
+    for c in idx[..whole].chunks_exact(LANES) {
+        for l in 0..LANES {
+            let v = col[c[l]] as f64;
+            s[l] += v;
+            q[l] += v * v;
+        }
+    }
+    for (l, &i) in idx[whole..].iter().enumerate() {
+        let v = col[i] as f64;
+        s[l] += v;
+        q[l] += v * v;
+    }
+    (hsum(&s), hsum(&q))
+}
+
+/// Lane-striped min/max over a gathered row subset, in f64. Lanes
+/// fold sequentially with `f64::min`/`f64::max` (so NaN placement is
+/// fixed by the lane structure, not by hardware).
+#[inline]
+pub fn minmax_indexed_f32(col: &[f32], idx: &[usize]) -> (f64, f64) {
+    if scalar_mode() {
+        return scalar::minmax_indexed_f32(col, idx);
+    }
+    let whole = idx.len() - idx.len() % LANES;
+    let mut lo = [f64::INFINITY; LANES];
+    let mut hi = [f64::NEG_INFINITY; LANES];
+    for c in idx[..whole].chunks_exact(LANES) {
+        for l in 0..LANES {
+            let v = col[c[l]] as f64;
+            lo[l] = lo[l].min(v);
+            hi[l] = hi[l].max(v);
+        }
+    }
+    for (l, &i) in idx[whole..].iter().enumerate() {
+        let v = col[i] as f64;
+        lo[l] = lo[l].min(v);
+        hi[l] = hi[l].max(v);
+    }
+    fold_minmax(&lo, &hi)
+}
+
+#[inline]
+fn fold_minmax(lo: &[f64; LANES], hi: &[f64; LANES]) -> (f64, f64) {
+    let (mut l, mut h) = (f64::INFINITY, f64::NEG_INFINITY);
+    for k in 0..LANES {
+        l = l.min(lo[k]);
+        h = h.max(hi[k]);
+    }
+    (l, h)
+}
+
+// ---------------------------------------------------------------------
+// f64 element-wise kernels (no accumulation order — trivially
+// order-free; twins exist for switch coverage)
+// ---------------------------------------------------------------------
+
+/// `y[i] += a * x[i]`.
+#[inline]
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    if scalar_mode() {
+        return scalar::axpy(y, a, x);
+    }
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `x[i] *= s`.
+#[inline]
+pub fn scale(x: &mut [f64], s: f64) {
+    if scalar_mode() {
+        return scalar::scale(x, s);
+    }
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// `a[i] += b[i]`.
+#[inline]
+pub fn add_assign(a: &mut [f64], b: &[f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    if scalar_mode() {
+        return scalar::add_assign(a, b);
+    }
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// `acc[i] += (col[i] as f64 - mean) * w` — the centered-projection
+/// accumulator behind the columnar `Fitted::Project` apply.
+#[inline]
+pub fn axpy_centered_f32(acc: &mut [f64], col: &[f32], mean: f64,
+                         w: f64) {
+    debug_assert_eq!(acc.len(), col.len());
+    if scalar_mode() {
+        return scalar::axpy_centered_f32(acc, col, mean, w);
+    }
+    for (a, &v) in acc.iter_mut().zip(col) {
+        *a += (v as f64 - mean) * w;
+    }
+}
+
+// ---------------------------------------------------------------------
+// blocked matrix kernels (row-major f64)
+// ---------------------------------------------------------------------
+
+/// Depth of the k-unroll in [`matmul`]: groups of `K_GROUP` rank-1
+/// contributions are summed in-expression before touching the output
+/// row, quartering the passes over `out`. The grouping is part of the
+/// bit contract (mirrored by [`scalar::matmul`]).
+pub const K_GROUP: usize = 4;
+
+/// `out = a (r×k) * b (k×c)`, row-major. Per output element the k
+/// terms accumulate in ascending-k order, grouped in fixed
+/// [`K_GROUP`]s — no value-dependent skips, so non-finite values in
+/// `b` propagate even against `a == 0.0` (IEEE `0 * inf = NaN`).
+pub fn matmul(a: &[f64], b: &[f64], r: usize, k: usize, c: usize)
+    -> Vec<f64> {
+    debug_assert_eq!(a.len(), r * k);
+    debug_assert_eq!(b.len(), k * c);
+    if scalar_mode() {
+        return scalar::matmul(a, b, r, k, c);
+    }
+    let mut out = vec![0.0f64; r * c];
+    for i in 0..r {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * c..(i + 1) * c];
+        let mut kk = 0;
+        while kk + K_GROUP <= k {
+            let (a0, a1, a2, a3) =
+                (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+            let b0 = &b[kk * c..][..c];
+            let b1 = &b[(kk + 1) * c..][..c];
+            let b2 = &b[(kk + 2) * c..][..c];
+            let b3 = &b[(kk + 3) * c..][..c];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += a0 * b0[j] + a1 * b1[j] + a2 * b2[j]
+                    + a3 * b3[j];
+            }
+            kk += K_GROUP;
+        }
+        while kk < k {
+            let av = arow[kk];
+            let brow = &b[kk * c..][..c];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+            kk += 1;
+        }
+    }
+    out
+}
+
+/// `out[i] = dot(row i of a, v)` through the lane-striped [`dot`].
+pub fn matvec(a: &[f64], r: usize, c: usize, v: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), r * c);
+    debug_assert_eq!(v.len(), c);
+    // dispatches per row through dot()'s own mode switch
+    (0..r).map(|i| dot(&a[i * c..(i + 1) * c], v)).collect()
+}
+
+/// Tile edge of the cache-blocked [`transpose`]: 32×32 f64 tiles
+/// (8 KiB read + 8 KiB write) sit comfortably in L1.
+pub const T_BLOCK: usize = 32;
+
+/// Cache-blocked transpose of a row-major `r×c` matrix. Pure data
+/// movement — bit-exact by construction at any block size.
+pub fn transpose(a: &[f64], r: usize, c: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), r * c);
+    if scalar_mode() {
+        return scalar::transpose(a, r, c);
+    }
+    let mut out = vec![0.0f64; r * c];
+    for ib in (0..r).step_by(T_BLOCK) {
+        let ie = (ib + T_BLOCK).min(r);
+        for jb in (0..c).step_by(T_BLOCK) {
+            let je = (jb + T_BLOCK).min(c);
+            for i in ib..ie {
+                for j in jb..je {
+                    out[j * r + i] = a[i * c + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// contiguous-column f32 kernels (FE apply hot paths)
+// ---------------------------------------------------------------------
+
+/// Per-column affine transform: `out[i] = ((col[i] as f64 - shift) *
+/// scale) as f32`. Element-wise — identical bits to the historical
+/// per-row math.
+pub fn affine_apply_f32(col: &[f32], shift: f64, sc: f64) -> Vec<f32> {
+    if scalar_mode() {
+        return scalar::affine_apply_f32(col, shift, sc);
+    }
+    col.iter().map(|&v| ((v as f64 - shift) * sc) as f32).collect()
+}
+
+/// Quantile bucketing against a sorted grid: each value's insertion
+/// rank becomes `clamp(rank / len, 0.001, 0.999)`, then `map` (the
+/// caller's uniform/normal output transform) produces the f32 cell.
+/// The comparator treats incomparable (NaN) grid entries as `Less`,
+/// exactly like the historical per-row search.
+pub fn quantile_apply_f32<F: Fn(f64) -> f32>(col: &[f32], grid: &[f64],
+                                             map: F) -> Vec<f32> {
+    // element-wise: the scalar twin is the same loop (the mode switch
+    // covers it through the shared body)
+    let n = grid.len().max(1) as f64;
+    col.iter()
+        .map(|&v| {
+            let rank = match grid.binary_search_by(|x| {
+                x.partial_cmp(&(v as f64))
+                    .unwrap_or(std::cmp::Ordering::Less)
+            }) {
+                Ok(i) => i,
+                Err(i) => i,
+            };
+            map((rank as f64 / n).clamp(0.001, 0.999))
+        })
+        .collect()
+}
+
+/// Element-wise product of two columns (the CrossPairs append).
+pub fn mul_f32(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    if scalar_mode() {
+        return scalar::mul_f32(a, b);
+    }
+    a.iter().zip(b).map(|(&x, &y)| x * y).collect()
+}
+
+/// `a[i] += b[i]` on f32 columns (Agglomerate member accumulation).
+pub fn add_assign_f32(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    if scalar_mode() {
+        return scalar::add_assign_f32(a, b);
+    }
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Row block height of the blocked [`gather_rowmajor`] /
+/// [`gather_all_rowmajor`]: 128 rows × ≤64 cols × 4 B ≤ 32 KiB of
+/// output per block, so the strided writes stay in L1 while each
+/// source column is streamed once.
+pub const G_BLOCK: usize = 128;
+
+/// Gather `rows` of a columnar matrix into a row-major buffer
+/// (`out[r * d + j] = cols[j][rows[r]]`), column-streaming within
+/// fixed row blocks. Pure data movement — bit-exact.
+pub fn gather_rowmajor(cols: &[&[f32]], rows: &[usize],
+                       out: &mut Vec<f32>) {
+    let d = cols.len();
+    out.clear();
+    out.resize(rows.len() * d, 0.0);
+    if scalar_mode() {
+        return scalar::gather_rowmajor(cols, rows, out);
+    }
+    for rb in (0..rows.len()).step_by(G_BLOCK) {
+        let re = (rb + G_BLOCK).min(rows.len());
+        for (j, col) in cols.iter().enumerate() {
+            for (r, &i) in rows[rb..re].iter().enumerate() {
+                out[(rb + r) * d + j] = col[i];
+            }
+        }
+    }
+}
+
+/// [`gather_rowmajor`] over the contiguous row range `lo..hi` (no
+/// index vector): `out[(i - lo) * d + j] = cols[j][i]`.
+pub fn gather_range_rowmajor(cols: &[&[f32]], lo: usize, hi: usize,
+                             out: &mut Vec<f32>) {
+    let d = cols.len();
+    out.clear();
+    out.resize((hi - lo) * d, 0.0);
+    if scalar_mode() {
+        return scalar::gather_range_rowmajor(cols, lo, hi, out);
+    }
+    for rb in (lo..hi).step_by(G_BLOCK) {
+        let re = (rb + G_BLOCK).min(hi);
+        for (j, col) in cols.iter().enumerate() {
+            for (i, &v) in col[rb..re].iter().enumerate() {
+                out[(rb - lo + i) * d + j] = v;
+            }
+        }
+    }
+}
+
+/// [`gather_range_rowmajor`] over all rows `0..n`.
+pub fn gather_all_rowmajor(cols: &[&[f32]], n: usize,
+                           out: &mut Vec<f32>) {
+    gather_range_rowmajor(cols, 0, n, out);
+}
+
+/// Scatter one transformed row into per-column segment buffers (the
+/// row-wise FE fallback's output side).
+#[inline]
+pub fn scatter_row_f32(row: &[f32], segs: &mut [Vec<f32>]) {
+    debug_assert_eq!(row.len(), segs.len());
+    for (seg, &v) in segs.iter_mut().zip(row) {
+        seg.push(v);
+    }
+}
+
+// ---------------------------------------------------------------------
+// scalar reference twins
+// ---------------------------------------------------------------------
+
+/// Reference implementations: the simplest possible loops over the
+/// same fixed lane structure. These define the bit contract; the
+/// vectorizable forms above must match them exactly (property-tested
+/// across the size grid in `rust/tests/kernel_identity.rs`).
+pub mod scalar {
+    use super::{hsum, LANES};
+
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            acc[i % LANES] += x * y;
+        }
+        hsum(&acc)
+    }
+
+    pub fn sum(a: &[f64]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        for (i, x) in a.iter().enumerate() {
+            acc[i % LANES] += x;
+        }
+        hsum(&acc)
+    }
+
+    pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let d = x - y;
+            acc[i % LANES] += d * d;
+        }
+        hsum(&acc)
+    }
+
+    pub fn moments_f32(col: &[f32]) -> (f64, f64) {
+        let mut s = [0.0f64; LANES];
+        let mut q = [0.0f64; LANES];
+        for (i, &x) in col.iter().enumerate() {
+            let v = x as f64;
+            s[i % LANES] += v;
+            q[i % LANES] += v * v;
+        }
+        (hsum(&s), hsum(&q))
+    }
+
+    pub fn moments_indexed_f32(col: &[f32], idx: &[usize])
+        -> (f64, f64) {
+        let mut s = [0.0f64; LANES];
+        let mut q = [0.0f64; LANES];
+        for (r, &i) in idx.iter().enumerate() {
+            let v = col[i] as f64;
+            s[r % LANES] += v;
+            q[r % LANES] += v * v;
+        }
+        (hsum(&s), hsum(&q))
+    }
+
+    pub fn minmax_indexed_f32(col: &[f32], idx: &[usize])
+        -> (f64, f64) {
+        let mut lo = [f64::INFINITY; LANES];
+        let mut hi = [f64::NEG_INFINITY; LANES];
+        for (r, &i) in idx.iter().enumerate() {
+            let v = col[i] as f64;
+            lo[r % LANES] = lo[r % LANES].min(v);
+            hi[r % LANES] = hi[r % LANES].max(v);
+        }
+        super::fold_minmax(&lo, &hi)
+    }
+
+    pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    pub fn scale(x: &mut [f64], s: f64) {
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(a: &mut [f64], b: &[f64]) {
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+    }
+
+    pub fn axpy_centered_f32(acc: &mut [f64], col: &[f32], mean: f64,
+                             w: f64) {
+        for (a, &v) in acc.iter_mut().zip(col) {
+            *a += (v as f64 - mean) * w;
+        }
+    }
+
+    /// Per output element: ascending-k terms in fixed
+    /// [`super::K_GROUP`] groups, each group summed left-to-right
+    /// in-expression, groups added to the accumulator in order.
+    pub fn matmul(a: &[f64], b: &[f64], r: usize, k: usize, c: usize)
+        -> Vec<f64> {
+        let g = super::K_GROUP;
+        let mut out = vec![0.0f64; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                let mut s = 0.0f64;
+                let mut kk = 0;
+                while kk + g <= k {
+                    s += a[i * k + kk] * b[kk * c + j]
+                        + a[i * k + kk + 1] * b[(kk + 1) * c + j]
+                        + a[i * k + kk + 2] * b[(kk + 2) * c + j]
+                        + a[i * k + kk + 3] * b[(kk + 3) * c + j];
+                    kk += g;
+                }
+                while kk < k {
+                    s += a[i * k + kk] * b[kk * c + j];
+                    kk += 1;
+                }
+                out[i * c + j] = s;
+            }
+        }
+        out
+    }
+
+    pub fn transpose(a: &[f64], r: usize, c: usize) -> Vec<f64> {
+        let mut out = vec![0.0f64; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = a[i * c + j];
+            }
+        }
+        out
+    }
+
+    pub fn affine_apply_f32(col: &[f32], shift: f64, sc: f64)
+        -> Vec<f32> {
+        col.iter()
+            .map(|&v| ((v as f64 - shift) * sc) as f32)
+            .collect()
+    }
+
+    pub fn mul_f32(a: &[f32], b: &[f32]) -> Vec<f32> {
+        a.iter().zip(b).map(|(&x, &y)| x * y).collect()
+    }
+
+    pub fn add_assign_f32(a: &mut [f32], b: &[f32]) {
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+    }
+
+    pub fn gather_rowmajor(cols: &[&[f32]], rows: &[usize],
+                           out: &mut [f32]) {
+        let d = cols.len();
+        for (r, &i) in rows.iter().enumerate() {
+            for (j, col) in cols.iter().enumerate() {
+                out[r * d + j] = col[i];
+            }
+        }
+    }
+
+    pub fn gather_range_rowmajor(cols: &[&[f32]], lo: usize,
+                                 hi: usize, out: &mut [f32]) {
+        let d = cols.len();
+        for i in lo..hi {
+            for (j, col) in cols.iter().enumerate() {
+                out[(i - lo) * d + j] = col[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The size grid every reduction kernel is pinned on: empty, a
+    /// single element, one short of a lane, exactly one lane, one
+    /// over, and the same pattern around the 4096-block scale the
+    /// sharded fits use.
+    pub const SIZES: [usize; 8] = [0, 1, 7, 8, 9, 4095, 4096, 4097];
+
+    fn vf64(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal() * 3.0).collect()
+    }
+
+    fn vf32(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * 3.0) as f32).collect()
+    }
+
+    #[test]
+    fn dot_matches_scalar_twin_bitwise_on_size_grid() {
+        let mut rng = Rng::new(1);
+        for &n in &SIZES {
+            let a = vf64(&mut rng, n);
+            let b = vf64(&mut rng, n);
+            assert_eq!(dot(&a, &b).to_bits(),
+                       scalar::dot(&a, &b).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sum_and_moments_match_scalar_twins() {
+        let mut rng = Rng::new(2);
+        for &n in &SIZES {
+            let a = vf64(&mut rng, n);
+            assert_eq!(sum(&a).to_bits(), scalar::sum(&a).to_bits());
+            let c = vf32(&mut rng, n);
+            let (s1, q1) = moments_f32(&c);
+            let (s2, q2) = scalar::moments_f32(&c);
+            assert_eq!(s1.to_bits(), s2.to_bits(), "n={n}");
+            assert_eq!(q1.to_bits(), q2.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn indexed_reductions_match_scalar_twins() {
+        let mut rng = Rng::new(3);
+        let col = vf32(&mut rng, 5000);
+        for &n in &SIZES {
+            let idx: Vec<usize> =
+                (0..n).map(|_| rng.below(col.len())).collect();
+            let (s1, q1) = moments_indexed_f32(&col, &idx);
+            let (s2, q2) = scalar::moments_indexed_f32(&col, &idx);
+            assert_eq!(s1.to_bits(), s2.to_bits(), "n={n}");
+            assert_eq!(q1.to_bits(), q2.to_bits(), "n={n}");
+            let (l1, h1) = minmax_indexed_f32(&col, &idx);
+            let (l2, h2) = scalar::minmax_indexed_f32(&col, &idx);
+            assert_eq!(l1.to_bits(), l2.to_bits(), "n={n}");
+            assert_eq!(h1.to_bits(), h2.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_scalar_twin_bitwise() {
+        let mut rng = Rng::new(4);
+        for (r, k, c) in
+            [(0, 0, 0), (1, 1, 1), (3, 7, 5), (8, 8, 8), (9, 13, 11),
+             (17, 33, 9)]
+        {
+            let a = vf64(&mut rng, r * k);
+            let b = vf64(&mut rng, k * c);
+            let x = matmul(&a, &b, r, k, c);
+            let y = scalar::matmul(&a, &b, r, k, c);
+            assert_eq!(x.len(), y.len());
+            for (u, v) in x.iter().zip(&y) {
+                assert_eq!(u.to_bits(), v.to_bits(),
+                           "({r},{k},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_propagates_nonfinite_against_zero() {
+        // 0 * inf = NaN and 0 * NaN = NaN must reach the output; the
+        // historical `a == 0.0` skip silently produced 0 here
+        let a = vec![0.0, 1.0];
+        let b = vec![f64::INFINITY, 2.0, f64::NAN, 3.0];
+        let out = matmul(&a, &b, 1, 2, 2);
+        assert!(out[0].is_nan(), "0*inf + 1*nan must be NaN");
+        assert!(out[1].is_finite());
+        assert_eq!(out[1], 0.0 * 2.0 + 1.0 * 3.0);
+    }
+
+    #[test]
+    fn transpose_blocked_matches_naive_and_roundtrips() {
+        let mut rng = Rng::new(5);
+        for (r, c) in [(0, 0), (1, 1), (3, 5), (31, 33), (64, 64),
+                       (100, 37)] {
+            let a = vf64(&mut rng, r * c);
+            let t = transpose(&a, r, c);
+            assert_eq!(t, scalar::transpose(&a, r, c), "({r},{c})");
+            assert_eq!(transpose(&t, c, r), a, "({r},{c})");
+        }
+    }
+
+    #[test]
+    fn gather_blocked_matches_naive() {
+        let mut rng = Rng::new(6);
+        let n = 1000;
+        let cols_own: Vec<Vec<f32>> =
+            (0..6).map(|_| vf32(&mut rng, n)).collect();
+        let cols: Vec<&[f32]> =
+            cols_own.iter().map(|c| c.as_slice()).collect();
+        let rows: Vec<usize> =
+            (0..517).map(|_| rng.below(n)).collect();
+        let mut a = Vec::new();
+        gather_rowmajor(&cols, &rows, &mut a);
+        let mut b = vec![0.0f32; rows.len() * cols.len()];
+        scalar::gather_rowmajor(&cols, &rows, &mut b);
+        assert_eq!(a, b);
+        let mut c1 = Vec::new();
+        gather_all_rowmajor(&cols, n, &mut c1);
+        let mut c2 = vec![0.0f32; n * cols.len()];
+        scalar::gather_range_rowmajor(&cols, 0, n, &mut c2);
+        assert_eq!(c1, c2);
+        let mut r1 = Vec::new();
+        gather_range_rowmajor(&cols, 200, 900, &mut r1);
+        let mut r2 = vec![0.0f32; 700 * cols.len()];
+        scalar::gather_range_rowmajor(&cols, 200, 900, &mut r2);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn sqdist_matches_scalar_twin_bitwise() {
+        let mut rng = Rng::new(10);
+        for &n in &SIZES {
+            let a = vf64(&mut rng, n);
+            let b = vf64(&mut rng, n);
+            assert_eq!(sqdist(&a, &b).to_bits(),
+                       scalar::sqdist(&a, &b).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn force_scalar_switch_covers_entry_points() {
+        let mut rng = Rng::new(7);
+        let a = vf64(&mut rng, 1025);
+        let b = vf64(&mut rng, 1025);
+        let fast = dot(&a, &b);
+        set_force_scalar(true);
+        let slow = dot(&a, &b);
+        set_force_scalar(false);
+        assert_eq!(fast.to_bits(), slow.to_bits());
+    }
+
+    #[test]
+    fn elementwise_kernels_match_plain_loops() {
+        let mut rng = Rng::new(8);
+        let x = vf64(&mut rng, 100);
+        let mut y1 = vf64(&mut rng, 100);
+        let mut y2 = y1.clone();
+        axpy(&mut y1, 0.37, &x);
+        scalar::axpy(&mut y2, 0.37, &x);
+        assert_eq!(y1, y2);
+        let col = vf32(&mut rng, 100);
+        assert_eq!(affine_apply_f32(&col, 0.5, 2.0),
+                   scalar::affine_apply_f32(&col, 0.5, 2.0));
+        let mut acc1 = vec![0.0f64; 100];
+        let mut acc2 = vec![0.0f64; 100];
+        axpy_centered_f32(&mut acc1, &col, 0.25, 1.5);
+        scalar::axpy_centered_f32(&mut acc2, &col, 0.25, 1.5);
+        assert_eq!(acc1, acc2);
+    }
+
+    #[test]
+    fn quantile_apply_matches_per_element_search() {
+        let mut rng = Rng::new(9);
+        let col = vf32(&mut rng, 500);
+        let mut grid = vf64(&mut rng, 64);
+        grid.sort_unstable_by(|a, b| a.total_cmp(b));
+        let out = quantile_apply_f32(&col, &grid, |q| q as f32);
+        for (&v, &o) in col.iter().zip(&out) {
+            let rank = match grid.binary_search_by(|x| {
+                x.partial_cmp(&(v as f64))
+                    .unwrap_or(std::cmp::Ordering::Less)
+            }) {
+                Ok(i) => i,
+                Err(i) => i,
+            };
+            let q = (rank as f64 / grid.len() as f64)
+                .clamp(0.001, 0.999);
+            assert_eq!(o.to_bits(), (q as f32).to_bits());
+        }
+    }
+}

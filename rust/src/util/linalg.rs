@@ -4,6 +4,16 @@
 //! everything the system needs: matmul, Cholesky factor/solve (GP
 //! surrogates), symmetric power iteration with deflation (PCA / SVD /
 //! agglomeration FE operators), and small helpers.
+//!
+//! Every inner loop runs through [`crate::util::kernels`] — the
+//! lane-deterministic kernel layer — so results are bit-identical on
+//! all hardware and at all worker counts, and the hot reductions
+//! autovectorize. `tools/detlint`'s `kernel-scalar` rule keeps new
+//! scalar reductions from regrowing here; the one deliberate holdout
+//! (the column-strided back-substitution) carries an
+//! `allow(kernel-scalar)` note.
+
+use crate::util::kernels;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
@@ -51,93 +61,87 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Cache-blocked transpose ([`kernels::transpose`], 32×32 tiles).
     pub fn t(&self) -> Mat {
-        let mut out = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                out[(j, i)] = self[(i, j)];
-            }
+        Mat {
+            rows: self.cols,
+            cols: self.rows,
+            data: kernels::transpose(&self.data, self.rows, self.cols),
         }
-        out
     }
 
-    /// self (r x k) * other (k x c) -> (r x c); ikj loop order for cache
-    /// friendliness on row-major data.
+    /// self (r x k) * other (k x c) -> (r x c) through the blocked
+    /// [`kernels::matmul`]. No value-dependent skips: a zero in
+    /// `self` against a non-finite in `other` produces NaN, as IEEE
+    /// demands (the historical `a == 0.0 { continue }` silently
+    /// yielded 0 there).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (r, k, c) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(r, c);
-        for i in 0..r {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * c..(i + 1) * c];
-            for (kk, &a) in arow.iter().enumerate().take(k) {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * c..(kk + 1) * c];
-                for j in 0..c {
-                    orow[j] += a * brow[j];
-                }
-            }
+        Mat {
+            rows: r,
+            cols: c,
+            data: kernels::matmul(&self.data, &other.data, r, k, c),
         }
-        out
     }
 
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, v.len());
-        (0..self.rows)
-            .map(|i| dot(self.row(i), v))
-            .collect()
+        kernels::matvec(&self.data, self.rows, self.cols, v)
     }
 
     pub fn scale(&mut self, s: f64) {
-        for x in &mut self.data {
-            *x *= s;
-        }
+        kernels::scale(&mut self.data, s);
     }
 
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
-        }
+        kernels::add_assign(&mut self.data, &other.data);
     }
 
-    /// Column means.
+    /// Column means, via the blocked transpose: each column becomes a
+    /// contiguous row reduced by the lane-striped [`kernels::sum`].
     pub fn col_means(&self) -> Vec<f64> {
-        let mut m = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            for (j, &x) in self.row(i).iter().enumerate() {
-                m[j] += x;
-            }
-        }
+        let t = kernels::transpose(&self.data, self.rows, self.cols);
         let n = self.rows.max(1) as f64;
-        for x in &mut m {
-            *x /= n;
-        }
-        m
+        (0..self.cols)
+            .map(|j| {
+                kernels::sum(&t[j * self.rows..(j + 1) * self.rows]) / n
+            })
+            .collect()
     }
 
-    /// Covariance matrix of rows (features as columns), biased (1/n).
+    /// Covariance matrix of rows (features as columns), biased (1/n):
+    /// the blocked transpose feeds [`Mat::covariance_t`].
     pub fn covariance(&self) -> Mat {
-        let means = self.col_means();
-        let d = self.cols;
-        let mut cov = Mat::zeros(d, d);
-        for i in 0..self.rows {
-            let r = self.row(i);
-            for a in 0..d {
-                let da = r[a] - means[a];
-                if da == 0.0 {
-                    continue;
-                }
-                let crow = &mut cov.data[a * d..(a + 1) * d];
-                for b in 0..d {
-                    crow[b] += da * (r[b] - means[b]);
-                }
+        self.t().covariance_t()
+    }
+
+    /// Covariance of a *feature-major* matrix (each row one feature,
+    /// each column one sample) — the layout FE fits can build
+    /// directly from columnar datasets without a transpose. Centers
+    /// each feature row once, then every entry is one lane-striped
+    /// dot of two contiguous centered rows (upper triangle computed,
+    /// mirrored by symmetry).
+    pub fn covariance_t(&self) -> Mat {
+        let (d, n) = (self.rows, self.cols);
+        let mut t = self.data.clone();
+        let nf = n.max(1) as f64;
+        for j in 0..d {
+            let row = &mut t[j * n..(j + 1) * n];
+            let mu = kernels::sum(row) / nf;
+            for x in row.iter_mut() {
+                *x -= mu;
             }
         }
-        cov.scale(1.0 / self.rows.max(1) as f64);
-        cov
+        gram_upper(&t, d, n, 1.0 / nf)
+    }
+
+    /// Second-moment matrix `Xᵀ X / n` of a feature-major matrix (no
+    /// centering — the SVD fit's accumulator), lane-dotted per entry.
+    pub fn second_moment_t(&self) -> Mat {
+        let (d, n) = (self.rows, self.cols);
+        gram_upper(&self.data, d, n, 1.0 / n.max(1) as f64)
     }
 }
 
@@ -156,19 +160,35 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
+/// Symmetric Gram matrix of `d` contiguous length-`n` rows, scaled:
+/// `out[a][b] = dot(row a, row b) * s`, upper triangle mirrored.
+fn gram_upper(rows: &[f64], d: usize, n: usize, s: f64) -> Mat {
+    let mut out = Mat::zeros(d, d);
+    for a in 0..d {
+        let ra = &rows[a * n..(a + 1) * n];
+        for b in a..d {
+            let rb = &rows[b * n..(b + 1) * n];
+            let v = kernels::dot(ra, rb) * s;
+            out[(a, b)] = v;
+            out[(b, a)] = v;
+        }
+    }
+    out
+}
+
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    kernels::dot(a, b)
 }
 
 pub fn norm2(a: &[f64]) -> f64 {
-    dot(a, a).sqrt()
+    kernels::norm2(a)
 }
 
 /// Cholesky factorisation A = L L^T of a symmetric positive-definite
 /// matrix. Adds escalating jitter to the diagonal on failure (standard
-/// GP practice). Returns the lower-triangular factor.
+/// GP practice). Returns the lower-triangular factor. The inner
+/// triangular sums are lane-striped dots over contiguous row prefixes.
 pub fn cholesky(a: &Mat) -> Option<Mat> {
     assert_eq!(a.rows, a.cols);
     let n = a.rows;
@@ -179,14 +199,10 @@ pub fn cholesky(a: &Mat) -> Option<Mat> {
         let mut ok = true;
         'outer: for i in 0..n {
             for j in 0..=i {
-                let mut s = a[(i, j)];
+                let tri = kernels::dot(&l.row(i)[..j], &l.row(j)[..j]);
+                let mut s = a[(i, j)] - tri;
                 if i == j {
                     s += jitter;
-                }
-                for k in 0..j {
-                    s -= l[(i, k)] * l[(j, k)];
-                }
-                if i == j {
                     if s <= 0.0 {
                         ok = false;
                         break 'outer;
@@ -205,21 +221,24 @@ pub fn cholesky(a: &Mat) -> Option<Mat> {
     None
 }
 
-/// Solve L y = b (forward substitution), L lower-triangular.
+/// Solve L y = b (forward substitution), L lower-triangular. The
+/// row-prefix sum is a lane-striped dot.
 pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
     let n = l.rows;
     let mut y = vec![0.0; n];
     for i in 0..n {
-        let mut s = b[i];
-        for k in 0..i {
-            s -= l[(i, k)] * y[k];
-        }
+        let s = b[i] - kernels::dot(&l.row(i)[..i], &y[..i]);
         y[i] = s / l[(i, i)];
     }
     y
 }
 
 /// Solve L^T x = y (backward substitution).
+// DETLINT: allow(kernel-scalar): the sum strides down a *column* of L
+// (l[(k, i)] for k > i), which no contiguous-slice kernel can express
+// without first materialising a transposed copy per solve; n is the GP
+// training-set size (small), so the gather would cost more than it
+// saves. The loop is a plain sequential fold — deterministic as-is.
 pub fn solve_upper_t(l: &Mat, y: &[f64]) -> Vec<f64> {
     let n = l.rows;
     let mut x = vec![0.0; n];
@@ -241,7 +260,9 @@ pub fn cho_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
 
 /// Top-k eigenpairs of a symmetric matrix by power iteration with
 /// Hotelling deflation. Good enough for PCA/agglomeration FE operators
-/// (k small, accuracy needs modest).
+/// (k small, accuracy needs modest). Deflation runs as one
+/// [`kernels::axpy`] per row (`x - λ·vᵢ·vⱼ ≡ x + (-λ·vᵢ)·vⱼ` bitwise,
+/// since IEEE negation is exact).
 pub fn top_eigs(a: &Mat, k: usize, rng: &mut crate::util::rng::Rng)
     -> Vec<(f64, Vec<f64>)> {
     assert_eq!(a.rows, a.cols);
@@ -252,9 +273,7 @@ pub fn top_eigs(a: &Mat, k: usize, rng: &mut crate::util::rng::Rng)
     for _ in 0..k {
         let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let nv = norm2(&v).max(1e-300);
-        for x in &mut v {
-            *x /= nv;
-        }
+        kernels::scale(&mut v, 1.0 / nv);
         let mut lambda = 0.0;
         for _it in 0..200 {
             let mut w = deflated.matvec(&v);
@@ -262,9 +281,7 @@ pub fn top_eigs(a: &Mat, k: usize, rng: &mut crate::util::rng::Rng)
             if nw < 1e-14 {
                 break;
             }
-            for x in &mut w {
-                *x /= nw;
-            }
+            kernels::scale(&mut w, 1.0 / nw);
             let new_lambda = dot(&w, &deflated.matvec(&w));
             let delta = (new_lambda - lambda).abs();
             v = w;
@@ -273,11 +290,8 @@ pub fn top_eigs(a: &Mat, k: usize, rng: &mut crate::util::rng::Rng)
                 break;
             }
         }
-        // deflate: A <- A - lambda v v^T
         for i in 0..n {
-            for j in 0..n {
-                deflated[(i, j)] -= lambda * v[i] * v[j];
-            }
+            kernels::axpy(deflated.row_mut(i), -lambda * v[i], &v);
         }
         out.push((lambda, v));
     }
@@ -302,10 +316,44 @@ mod tests {
     }
 
     #[test]
+    fn matmul_propagates_nan_through_zero_rows() {
+        // the pre-kernel ikj loop skipped a == 0.0, silently yielding
+        // 0 where IEEE demands NaN (0 * inf) — pin the fix
+        let a = Mat::from_rows(&[vec![0.0, 1.0]]);
+        let b = Mat::from_rows(&[
+            vec![f64::INFINITY, f64::NAN],
+            vec![2.0, 3.0],
+        ]);
+        let c = a.matmul(&b);
+        assert!(c[(0, 0)].is_nan(), "0*inf must poison the sum");
+        assert!(c[(0, 1)].is_nan(), "0*NaN must poison the sum");
+        let b_ok = Mat::from_rows(&[vec![9.0, 2.0], vec![1.0, 3.0]]);
+        let c_ok = a.matmul(&b_ok);
+        assert_eq!(c_ok.data, vec![1.0, 3.0]);
+    }
+
+    #[test]
     fn transpose_roundtrip() {
         let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
         assert_eq!(a.t().t(), a);
         assert_eq!(a.t()[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn blocked_transpose_beyond_tile_edge() {
+        // 50×70 crosses the 32-tile boundary in both dimensions
+        let mut rng = Rng::new(7);
+        let mut a = Mat::zeros(50, 70);
+        for x in &mut a.data {
+            *x = rng.normal();
+        }
+        let t = a.t();
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                assert_eq!(t[(j, i)].to_bits(), a[(i, j)].to_bits());
+            }
+        }
+        assert_eq!(t.t(), a);
     }
 
     #[test]
@@ -386,6 +434,27 @@ mod tests {
         let c = m.covariance();
         assert_close(c[(0, 0)], 1.0, 0.08);
         assert_close(c[(0, 1)], 0.5, 0.08);
+    }
+
+    #[test]
+    fn covariance_is_symmetric_and_matches_col_means() {
+        let mut rng = Rng::new(3);
+        let mut m = Mat::zeros(257, 5);
+        for x in &mut m.data {
+            *x = rng.normal() * 2.0;
+        }
+        let c = m.covariance();
+        for a in 0..5 {
+            for b in 0..5 {
+                assert_eq!(c[(a, b)].to_bits(), c[(b, a)].to_bits());
+            }
+        }
+        let means = m.col_means();
+        for (j, &mu) in means.iter().enumerate() {
+            let naive: f64 =
+                (0..m.rows).map(|i| m[(i, j)]).sum::<f64>() / 257.0;
+            assert_close(mu, naive, 1e-10);
+        }
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! build is fully offline (see DESIGN.md "System inventory").
 
 pub mod json;
+pub mod kernels;
 pub mod linalg;
 pub mod prop;
 pub mod rng;

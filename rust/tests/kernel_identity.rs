@@ -1,0 +1,182 @@
+//! Lane-deterministic kernel layer: system-level bit-identity tests
+//! (ISSUE 9 acceptance).
+//!
+//! Contracts under test:
+//! * every lane kernel is bitwise-equal to its scalar reference twin
+//!   across the awkward-size grid (0/1/7/8/9/4095/4096/4097) — the
+//!   fixed 8-lane striping is the *definition* of the reduction
+//!   order, not an approximation of it;
+//! * a fixed-seed end-to-end search is bit-identical with the lane
+//!   kernels on and off (`set_force_scalar`), at every point of the
+//!   (workers, super_batch, pipeline_depth) knob grid — so the SIMD
+//!   layer is a pure wall-clock knob, like the FE store.
+
+use std::sync::Mutex;
+
+use volcanoml::coordinator::automl::{RunOutcome, VolcanoConfig,
+                                     VolcanoML};
+use volcanoml::coordinator::SpaceScale;
+use volcanoml::data::synthetic::{generate, GenKind, Profile};
+use volcanoml::data::Task;
+use volcanoml::ensemble::EnsembleMethod;
+use volcanoml::plan::PlanKind;
+use volcanoml::util::kernels::{self, set_force_scalar};
+use volcanoml::util::rng::Rng;
+
+/// `set_force_scalar` flips a process-global switch; tests that rely
+/// on a specific mode serialize on this lock (the contract says the
+/// flip is unobservable, but these are exactly the tests proving it).
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+const SIZES: [usize; 8] = [0, 1, 7, 8, 9, 4095, 4096, 4097];
+
+fn vf64(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn vf32(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn reductions_match_scalar_twins_on_size_grid() {
+    let _g = MODE_LOCK.lock().unwrap();
+    set_force_scalar(false);
+    let mut rng = Rng::new(42);
+    for &n in &SIZES {
+        let a = vf64(&mut rng, n);
+        let b = vf64(&mut rng, n);
+        assert_eq!(kernels::dot(&a, &b).to_bits(),
+                   kernels::scalar::dot(&a, &b).to_bits(), "dot n={n}");
+        assert_eq!(kernels::sum(&a).to_bits(),
+                   kernels::scalar::sum(&a).to_bits(), "sum n={n}");
+        assert_eq!(kernels::sqdist(&a, &b).to_bits(),
+                   kernels::scalar::sqdist(&a, &b).to_bits(),
+                   "sqdist n={n}");
+        let col = vf32(&mut rng, n.max(1));
+        let idx: Vec<usize> =
+            (0..n).map(|_| rng.below(col.len())).collect();
+        let (s, q) = kernels::moments_indexed_f32(&col, &idx);
+        let (s2, q2) = kernels::scalar::moments_indexed_f32(&col, &idx);
+        assert_eq!((s.to_bits(), q.to_bits()),
+                   (s2.to_bits(), q2.to_bits()), "moments n={n}");
+        let (lo, hi) = kernels::minmax_indexed_f32(&col, &idx);
+        let (lo2, hi2) =
+            kernels::scalar::minmax_indexed_f32(&col, &idx);
+        assert_eq!((lo.to_bits(), hi.to_bits()),
+                   (lo2.to_bits(), hi2.to_bits()), "minmax n={n}");
+    }
+}
+
+#[test]
+fn matmul_and_movement_match_scalar_twins_on_odd_shapes() {
+    let _g = MODE_LOCK.lock().unwrap();
+    set_force_scalar(false);
+    let mut rng = Rng::new(43);
+    for &(r, k, c) in
+        &[(1usize, 1usize, 1usize), (3, 7, 5), (8, 8, 8), (9, 13, 11),
+          (33, 65, 17)] {
+        let a = vf64(&mut rng, r * k);
+        let b = vf64(&mut rng, k * c);
+        let lanes = kernels::matmul(&a, &b, r, k, c);
+        let twin = kernels::scalar::matmul(&a, &b, r, k, c);
+        for (i, (x, y)) in lanes.iter().zip(&twin).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "matmul ({r},{k},{c}) elem {i}");
+        }
+        let t = kernels::transpose(&a, r, k);
+        let tt = kernels::scalar::transpose(&a, r, k);
+        assert_eq!(t, tt, "transpose ({r},{k})");
+    }
+}
+
+fn blob_ds(seed: u64) -> volcanoml::data::Dataset {
+    generate(&Profile {
+        name: format!("kernid-{seed}"),
+        task: Task::Classification { n_classes: 2 },
+        gen: GenKind::Blobs { sep: 1.7 },
+        n: 240,
+        d: 6,
+        noise: 0.05,
+        imbalance: 1.2,
+        redundant: 1,
+        wild_scales: true,
+        seed,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(ds: &volcanoml::data::Dataset, plan: PlanKind,
+       fe_cache_mb: usize, workers: usize, super_batch: usize,
+       depth: usize, evals: usize) -> RunOutcome {
+    let cfg = VolcanoConfig {
+        plan,
+        scale: SpaceScale::Medium,
+        max_evals: evals,
+        ensemble: EnsembleMethod::None,
+        workers,
+        eval_batch: 1,
+        super_batch,
+        pipeline_depth: depth,
+        fe_cache_mb,
+        seed: 9876,
+        ..Default::default()
+    };
+    VolcanoML::new(cfg).run(ds, None).unwrap()
+}
+
+fn assert_same_trajectory(a: &RunOutcome, b: &RunOutcome, ctx: &str) {
+    assert_eq!(a.n_evals, b.n_evals, "{ctx}: budget diverged");
+    assert_eq!(a.best_valid_utility.to_bits(),
+               b.best_valid_utility.to_bits(),
+               "{ctx}: incumbent diverged");
+    assert_eq!(a.best_config, b.best_config,
+               "{ctx}: best config diverged");
+    assert_eq!(a.valid_curve.len(), b.valid_curve.len(),
+               "{ctx}: incumbent sequence diverged");
+    for ((_, ua), (_, ub)) in
+        a.valid_curve.iter().zip(&b.valid_curve) {
+        assert_eq!(ua.to_bits(), ub.to_bits(),
+                   "{ctx}: incumbent sequence diverged");
+    }
+    assert_eq!(a.arm_trend, b.arm_trend,
+               "{ctx}: elimination order diverged");
+}
+
+#[test]
+fn search_is_bit_identical_with_kernels_on_and_off() {
+    // acceptance (ISSUE 9): fixed-seed searches bit-identical across
+    // kernel mode x (workers, super_batch, depth) on serial and
+    // sharded paths. Restore lane mode whatever happens so a panic
+    // here can't leak scalar mode into other binaries' expectations.
+    let _g = MODE_LOCK.lock().unwrap();
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            set_force_scalar(false);
+        }
+    }
+    let _restore = Restore;
+
+    let ds = blob_ds(7);
+    for plan in [PlanKind::CA, PlanKind::CC] {
+        set_force_scalar(false);
+        let lanes_serial = run(&ds, plan, 0, 1, 1, 1, 20);
+        let lanes_overlapped = run(&ds, plan, 64, 4, 0, 2, 20);
+        set_force_scalar(true);
+        let scalar_serial = run(&ds, plan, 0, 1, 1, 1, 20);
+        let scalar_overlapped = run(&ds, plan, 64, 4, 0, 2, 20);
+        set_force_scalar(false);
+
+        assert_same_trajectory(
+            &lanes_serial, &scalar_serial,
+            &format!("{} serial lanes vs scalar", plan.name()));
+        assert_same_trajectory(
+            &lanes_serial, &lanes_overlapped,
+            &format!("{} lanes (1,1,1) vs (4,0,2)", plan.name()));
+        assert_same_trajectory(
+            &lanes_serial, &scalar_overlapped,
+            &format!("{} lanes serial vs scalar (4,0,2)",
+                     plan.name()));
+    }
+}

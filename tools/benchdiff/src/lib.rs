@@ -1,0 +1,435 @@
+//! Perf-trajectory gate: diff the current `BENCH_*.json` summaries
+//! against the committed `BENCH_baseline.json`.
+//!
+//! The comparison is *machine-normalized*: per operation we take the
+//! ratio `current_median / baseline_median`, then divide every ratio
+//! by the median of all ratios. A uniformly slower (or faster) CI
+//! machine moves every ratio by the same factor and washes out of the
+//! normalized value; only operations that regressed *relative to the
+//! rest of the suite* stand out. Thresholds:
+//!
+//! * normalized ratio > [`WARN_REL`]  -> warning (non-blocking)
+//! * normalized ratio > [`FAIL_REL`]  -> failure (CI-blocking)
+//!
+//! `BENCH_table10.json` contributes one absolute gate: peak RSS of the
+//! large-data run against the baseline value ([`RSS_WARN`] /
+//! [`RSS_FAIL`]), since memory high-water marks do not scale with CPU
+//! speed.
+
+use volcanoml::util::json::Json;
+
+/// Non-blocking threshold on the machine-normalized median ratio.
+pub const WARN_REL: f64 = 1.10;
+/// Blocking threshold on the machine-normalized median ratio.
+pub const FAIL_REL: f64 = 2.0;
+/// Non-blocking threshold on the peak-RSS ratio (table10).
+pub const RSS_WARN: f64 = 1.5;
+/// Blocking threshold on the peak-RSS ratio (table10).
+pub const RSS_FAIL: f64 = 3.0;
+/// Fewer common operations than this and the ratio gate is skipped
+/// (the normalization median would be meaningless).
+pub const MIN_COMMON_OPS: usize = 3;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Fail,
+}
+
+impl Severity {
+    fn tag(self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "WARN",
+            Severity::Fail => "FAIL",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Line {
+    pub severity: Severity,
+    pub text: String,
+}
+
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    pub lines: Vec<Line>,
+}
+
+impl DiffReport {
+    fn push(&mut self, severity: Severity, text: String) {
+        self.lines.push(Line { severity, text });
+    }
+
+    pub fn failed(&self) -> bool {
+        self.lines.iter().any(|l| l.severity == Severity::Fail)
+    }
+
+    pub fn warned(&self) -> bool {
+        self.lines.iter().any(|l| l.severity == Severity::Warn)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("== benchdiff: perf trajectory vs \
+                                    BENCH_baseline.json ==\n");
+        for l in &self.lines {
+            out.push_str(&format!("[{}] {}\n", l.severity.tag(),
+                                  l.text));
+        }
+        out.push_str(&format!(
+            "verdict: {}\n",
+            if self.failed() {
+                "FAIL (blocking regression > 2.0x normalized)"
+            } else if self.warned() {
+                "WARN (non-blocking drift > 1.10x normalized)"
+            } else {
+                "clean"
+            }
+        ));
+        out
+    }
+}
+
+/// Median of a sample set; 0.0 on empty (callers guard).
+pub fn median(xs: &[f64]) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    match s.len() {
+        0 => 0.0,
+        n if n % 2 == 1 => s[n / 2],
+        n => 0.5 * (s[n / 2 - 1] + s[n / 2]),
+    }
+}
+
+/// Extract `(operation, median_s)` rows from a bench summary's
+/// `results` array. Falls back to `mean_s` for summaries written
+/// before the median field existed. Non-positive timings are dropped
+/// (a zero would poison the ratio).
+pub fn op_medians(summary: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let Some(results) = summary.get("results").and_then(Json::as_arr)
+    else {
+        return out;
+    };
+    for row in results {
+        let Some(op) = row.get("operation").and_then(Json::as_str)
+        else {
+            continue;
+        };
+        let t = row
+            .get("median_s")
+            .and_then(Json::as_f64)
+            .or_else(|| row.get("mean_s").and_then(Json::as_f64));
+        if let Some(t) = t {
+            if t > 0.0 && t.is_finite() {
+                out.push((op.to_string(), t));
+            }
+        }
+    }
+    out
+}
+
+fn lookup<'a>(rows: &'a [(String, f64)], op: &str) -> Option<f64> {
+    rows.iter().find(|(o, _)| o == op).map(|&(_, t)| t)
+}
+
+/// Diff the current summaries against the baseline. `baseline` holds a
+/// `micro_hotpaths` object (same shape as the live summary) and an
+/// optional `table10` object with `peak_rss_bytes`.
+pub fn diff(baseline: &Json, micro: Option<&Json>,
+            table10: Option<&Json>) -> DiffReport {
+    let mut rep = DiffReport::default();
+
+    // A baseline stamped `seeded_estimate` was committed before any
+    // CI machine measured it (the bootstrap state): it can flag
+    // drift, but failing hard against estimated numbers would be
+    // noise. CI uploads a measured `--emit-baseline` artifact each
+    // run; committing that in place of the seed arms the blocking
+    // gate.
+    let seeded = baseline
+        .get("seeded_estimate")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+
+    if let Some(micro) = micro {
+        let base = baseline
+            .get("micro_hotpaths")
+            .map(op_medians)
+            .unwrap_or_default();
+        let cur = op_medians(micro);
+        if base.is_empty() {
+            rep.push(Severity::Warn,
+                     "baseline has no micro_hotpaths results; \
+                      ratio gate skipped".into());
+        } else {
+            diff_micro(&mut rep, &base, &cur);
+        }
+    } else {
+        rep.push(Severity::Warn,
+                 "BENCH_micro_hotpaths.json not found; \
+                  ratio gate skipped".into());
+    }
+
+    diff_rss(&mut rep, baseline, table10);
+
+    if seeded {
+        for l in &mut rep.lines {
+            if l.severity == Severity::Fail {
+                l.severity = Severity::Warn;
+            }
+        }
+        rep.push(Severity::Info,
+                 "baseline is a seeded estimate \
+                  (seeded_estimate=true): failures downgraded to \
+                  warnings until a measured baseline is committed"
+                     .into());
+    }
+    rep
+}
+
+/// Build a measured baseline from the current summaries (the
+/// `--emit-baseline` output CI uploads so a maintainer can replace
+/// the seeded estimate with real numbers).
+pub fn make_baseline(micro: Option<&Json>, table10: Option<&Json>)
+    -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("bench", Json::Str("baseline".into())),
+        ("seeded_estimate", Json::Bool(false)),
+    ];
+    if let Some(m) = micro {
+        let rows = op_medians(m)
+            .into_iter()
+            .map(|(op, t)| Json::obj(vec![
+                ("operation", Json::Str(op)),
+                ("median_s", Json::Num(t)),
+            ]))
+            .collect();
+        pairs.push(("micro_hotpaths", Json::obj(vec![
+            ("results", Json::Arr(rows)),
+        ])));
+    }
+    if let Some(rss) = table10
+        .and_then(|t| t.get("peak_rss_bytes"))
+        .and_then(Json::as_f64)
+    {
+        pairs.push(("table10", Json::obj(vec![
+            ("peak_rss_bytes", Json::Num(rss)),
+        ])));
+    }
+    Json::obj(pairs)
+}
+
+fn diff_micro(rep: &mut DiffReport, base: &[(String, f64)],
+              cur: &[(String, f64)]) {
+    let mut ratios: Vec<(String, f64)> = Vec::new();
+    for (op, b) in base {
+        match lookup(cur, op) {
+            Some(c) => ratios.push((op.clone(), c / b)),
+            None => rep.push(Severity::Warn, format!(
+                "operation disappeared from current run: {op}")),
+        }
+    }
+    for (op, _) in cur {
+        if lookup(base, op).is_none() {
+            rep.push(Severity::Info, format!(
+                "new operation (not in baseline yet): {op}"));
+        }
+    }
+    if ratios.len() < MIN_COMMON_OPS {
+        rep.push(Severity::Warn, format!(
+            "only {} operation(s) common with baseline \
+             (need {MIN_COMMON_OPS}); ratio gate skipped",
+            ratios.len()));
+        return;
+    }
+    let raw: Vec<f64> = ratios.iter().map(|&(_, r)| r).collect();
+    let norm = median(&raw);
+    rep.push(Severity::Info, format!(
+        "machine-normalization factor (median raw ratio): {norm:.3}"));
+    for (op, r) in &ratios {
+        let rel = r / norm;
+        let sev = if rel > FAIL_REL {
+            Severity::Fail
+        } else if rel > WARN_REL {
+            Severity::Warn
+        } else {
+            Severity::Info
+        };
+        rep.push(sev, format!(
+            "{op}: raw {r:.3}x, normalized {rel:.3}x"));
+    }
+}
+
+fn diff_rss(rep: &mut DiffReport, baseline: &Json,
+            table10: Option<&Json>) {
+    let base_rss = baseline
+        .get("table10")
+        .and_then(|t| t.get("peak_rss_bytes"))
+        .and_then(Json::as_f64);
+    let cur_rss = table10
+        .and_then(|t| t.get("peak_rss_bytes"))
+        .and_then(Json::as_f64);
+    match (base_rss, cur_rss) {
+        (Some(b), Some(c)) if b > 0.0 => {
+            let r = c / b;
+            let sev = if r > RSS_FAIL {
+                Severity::Fail
+            } else if r > RSS_WARN {
+                Severity::Warn
+            } else {
+                Severity::Info
+            };
+            rep.push(sev, format!(
+                "table10 peak RSS: {:.0} MB vs baseline {:.0} MB \
+                 ({r:.2}x)",
+                c / (1024.0 * 1024.0), b / (1024.0 * 1024.0)));
+        }
+        (Some(_), None) => rep.push(Severity::Info,
+            "BENCH_table10.json absent or lacks peak_rss_bytes; \
+             RSS gate skipped".into()),
+        _ => rep.push(Severity::Info,
+            "baseline lacks table10 peak_rss_bytes; \
+             RSS gate skipped".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn summary(rows: &[(&str, f64)]) -> Json {
+        let body: Vec<String> = rows
+            .iter()
+            .map(|(op, t)| format!(
+                "{{\"operation\":\"{op}\",\"median_s\":{t}}}"))
+            .collect();
+        Json::parse(&format!("{{\"results\":[{}]}}",
+                             body.join(","))).unwrap()
+    }
+
+    fn baseline(rows: &[(&str, f64)], rss: Option<f64>) -> Json {
+        let micro = summary(rows).to_string();
+        let mut b = format!("{{\"bench\":\"baseline\",\
+                             \"micro_hotpaths\":{micro}");
+        if let Some(r) = rss {
+            b.push_str(&format!(",\"table10\":{{\
+                                 \"peak_rss_bytes\":{r}}}"));
+        }
+        b.push('}');
+        Json::parse(&b).unwrap()
+    }
+
+    const OPS: [(&str, f64); 4] = [
+        ("dot", 1e-5), ("matmul", 2e-4), ("gather", 5e-5),
+        ("transpose", 7e-5),
+    ];
+
+    #[test]
+    fn identical_run_is_clean() {
+        let rep = diff(&baseline(&OPS, None), Some(&summary(&OPS)),
+                       None);
+        assert!(!rep.failed() && !rep.warned(), "{}", rep.render());
+    }
+
+    #[test]
+    fn uniformly_slower_machine_is_clean() {
+        let cur: Vec<(&str, f64)> =
+            OPS.iter().map(|&(o, t)| (o, t * 3.0)).collect();
+        let rep = diff(&baseline(&OPS, None), Some(&summary(&cur)),
+                       None);
+        assert!(!rep.failed() && !rep.warned(), "{}", rep.render());
+    }
+
+    #[test]
+    fn single_op_drift_warns_but_does_not_fail() {
+        let mut cur = OPS.to_vec();
+        cur[1].1 *= 1.5; // matmul 50% slower, others unchanged
+        let rep = diff(&baseline(&OPS, None), Some(&summary(&cur)),
+                       None);
+        assert!(rep.warned(), "{}", rep.render());
+        assert!(!rep.failed(), "{}", rep.render());
+    }
+
+    #[test]
+    fn single_op_blowup_fails() {
+        let mut cur = OPS.to_vec();
+        cur[0].1 *= 3.0; // dot 3x slower vs a stable rest
+        let rep = diff(&baseline(&OPS, None), Some(&summary(&cur)),
+                       None);
+        assert!(rep.failed(), "{}", rep.render());
+    }
+
+    #[test]
+    fn missing_operation_warns() {
+        let cur = &OPS[..2];
+        let rep = diff(&baseline(&OPS, None), Some(&summary(cur)),
+                       None);
+        assert!(rep.warned(), "{}", rep.render());
+        assert!(!rep.failed());
+    }
+
+    #[test]
+    fn missing_micro_summary_warns_only() {
+        let rep = diff(&baseline(&OPS, None), None, None);
+        assert!(rep.warned() && !rep.failed(), "{}", rep.render());
+    }
+
+    #[test]
+    fn rss_gate_fires_on_blowup() {
+        let t10 = Json::parse(
+            "{\"peak_rss_bytes\":700000000}").unwrap();
+        let rep = diff(&baseline(&OPS, Some(2.0e8)),
+                       Some(&summary(&OPS)), Some(&t10));
+        assert!(rep.failed(), "{}", rep.render());
+    }
+
+    #[test]
+    fn rss_gate_warns_between_thresholds() {
+        let t10 = Json::parse(
+            "{\"peak_rss_bytes\":400000000}").unwrap();
+        let rep = diff(&baseline(&OPS, Some(2.0e8)),
+                       Some(&summary(&OPS)), Some(&t10));
+        assert!(rep.warned() && !rep.failed(), "{}", rep.render());
+    }
+
+    #[test]
+    fn seeded_baseline_downgrades_failures_to_warnings() {
+        let mut cur = OPS.to_vec();
+        cur[0].1 *= 3.0;
+        let mut base = baseline(&OPS, None);
+        if let Json::Obj(m) = &mut base {
+            m.insert("seeded_estimate".into(), Json::Bool(true));
+        }
+        let rep = diff(&base, Some(&summary(&cur)), None);
+        assert!(!rep.failed(), "{}", rep.render());
+        assert!(rep.warned(), "{}", rep.render());
+    }
+
+    #[test]
+    fn emitted_baseline_round_trips_through_diff() {
+        let micro = summary(&OPS);
+        let t10 = Json::parse(
+            "{\"peak_rss_bytes\":200000000}").unwrap();
+        let b = make_baseline(Some(&micro), Some(&t10));
+        assert_eq!(b.get("seeded_estimate").and_then(Json::as_bool),
+                   Some(false));
+        let rep = diff(&b, Some(&micro), Some(&t10));
+        assert!(!rep.failed() && !rep.warned(), "{}", rep.render());
+    }
+
+    #[test]
+    fn mean_fallback_for_old_summaries() {
+        let old = Json::parse(
+            "{\"results\":[{\"operation\":\"dot\",\
+             \"mean_s\":1e-5}]}").unwrap();
+        assert_eq!(op_medians(&old), vec![("dot".to_string(), 1e-5)]);
+    }
+
+    #[test]
+    fn median_is_order_statistic() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+}

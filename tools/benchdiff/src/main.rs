@@ -1,0 +1,126 @@
+//! CLI entry point: `cargo run -p benchdiff [-- FLAGS]`.
+//!
+//! Flags (all optional; defaults resolve against the workspace root):
+//!   --baseline PATH   committed baseline   (BENCH_baseline.json)
+//!   --micro PATH      current micro run    (BENCH_micro_hotpaths.json)
+//!   --table10 PATH    current large run    (BENCH_table10.json)
+//!   --report PATH     where to write the text report
+//!                     (bench_diff_report.txt)
+//!   --emit-baseline PATH   also write a measured baseline built from
+//!                     the current summaries (CI uploads this so a
+//!                     maintainer can replace a seeded estimate)
+//!
+//! Exit codes: 0 clean or warnings only (warnings are non-blocking),
+//! 1 blocking regression (> 2.0x normalized, or RSS > 3x), 2 usage /
+//! missing baseline / parse error. CI runs this in the
+//! bench-artifacts job right after the bench targets and uploads the
+//! report next to the `BENCH_*.json` artifacts.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use volcanoml::util::json::Json;
+
+fn workspace_root() -> PathBuf {
+    let local = PathBuf::from("BENCH_baseline.json");
+    if local.is_file() {
+        return PathBuf::from(".");
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+struct Cli {
+    baseline: PathBuf,
+    micro: PathBuf,
+    table10: PathBuf,
+    report: PathBuf,
+    emit_baseline: Option<PathBuf>,
+}
+
+fn parse_args() -> Result<Cli, String> {
+    let root = workspace_root();
+    let mut cli = Cli {
+        baseline: root.join("BENCH_baseline.json"),
+        micro: root.join("BENCH_micro_hotpaths.json"),
+        table10: root.join("BENCH_table10.json"),
+        report: root.join("bench_diff_report.txt"),
+        emit_baseline: None,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(flag) = args.next() {
+        let v = PathBuf::from(args.next()
+            .ok_or_else(|| format!("{flag} needs a value"))?);
+        match flag.as_str() {
+            "--baseline" => cli.baseline = v,
+            "--micro" => cli.micro = v,
+            "--table10" => cli.table10 = v,
+            "--report" => cli.report = v,
+            "--emit-baseline" => cli.emit_baseline = Some(v),
+            other => return Err(format!("unknown flag: {other}")),
+        }
+    }
+    Ok(cli)
+}
+
+/// Load an optional summary: absent file -> None (the diff degrades
+/// to a warning), unparseable file -> hard error.
+fn load_optional(path: &Path) -> Result<Option<Json>, String> {
+    if !path.is_file() {
+        return Ok(None);
+    }
+    Json::parse_file(path)
+        .map(Some)
+        .map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn main() -> ExitCode {
+    let cli = match parse_args() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("benchdiff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let baseline = match Json::parse_file(&cli.baseline) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("benchdiff: cannot read baseline {}: {e}",
+                      cli.baseline.display());
+            return ExitCode::from(2);
+        }
+    };
+    let (micro, table10) = match (load_optional(&cli.micro),
+                                  load_optional(&cli.table10)) {
+        (Ok(m), Ok(t)) => (m, t),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("benchdiff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let rep = benchdiff::diff(&baseline, micro.as_ref(),
+                              table10.as_ref());
+    let rendered = rep.render();
+    print!("{rendered}");
+    if let Err(e) = std::fs::write(&cli.report, &rendered) {
+        eprintln!("benchdiff: cannot write report {}: {e}",
+                  cli.report.display());
+    } else {
+        println!("[report -> {}]", cli.report.display());
+    }
+    if let Some(emit) = &cli.emit_baseline {
+        let b = benchdiff::make_baseline(micro.as_ref(),
+                                         table10.as_ref());
+        if let Err(e) = std::fs::write(emit, b.to_string()) {
+            eprintln!("benchdiff: cannot write baseline {}: {e}",
+                      emit.display());
+        } else {
+            println!("[measured baseline -> {}]", emit.display());
+        }
+    }
+    if rep.failed() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

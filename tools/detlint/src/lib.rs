@@ -20,6 +20,14 @@
 //!   argument in the surrounding comment paragraph.
 //! - **relaxed-no-sync** — any `Ordering::Relaxed` without a
 //!   `// SYNC:` note arguing why the weakest ordering suffices.
+//! - **kernel-scalar** — hand-rolled scalar float reductions in the
+//!   kernel-owned hot files (`util/linalg.rs`, `fe/ops.rs`): a plain
+//!   scalar accumulator (`s += x * y`, `acc += v as f64`) or an
+//!   iterator `.sum()` fold. Reduction order is the bit-determinism
+//!   contract, and `util/kernels` owns it — route the loop through a
+//!   kernel, or justify with `// DETLINT: allow(kernel-scalar):
+//!   <why this loop cannot use a kernel>`. Element-wise indexed
+//!   updates (`w[j] += …`) are not reductions and are exempt.
 //!
 //! Suppression markers are *paragraph-scoped*: a marker counts if it
 //! appears in the comments of the flagged line or of any contiguous
@@ -52,6 +60,12 @@ pub const HASH_SCOPED_DIRS: [&str; 5] =
 pub const WALL_CLOCK_WHITELIST: [&str; 3] =
     ["bench.rs", "main.rs", "coordinator/evaluator.rs"];
 
+/// Files (relative to the source root) where hand-rolled scalar float
+/// reductions are rejected: their reductions define trajectory bits
+/// and belong to `util/kernels`.
+pub const KERNEL_SCOPED_FILES: [&str; 2] =
+    ["util/linalg.rs", "fe/ops.rs"];
+
 /// Bounded lookback (in lines) of the paragraph marker scan.
 const PARAGRAPH_LOOKBACK: usize = 40;
 
@@ -61,6 +75,7 @@ pub enum Rule {
     WallClock,
     UnsafeNoSafety,
     RelaxedNoSync,
+    KernelScalar,
 }
 
 impl Rule {
@@ -70,6 +85,7 @@ impl Rule {
             Rule::WallClock => "wall-clock",
             Rule::UnsafeNoSafety => "unsafe-no-safety",
             Rule::RelaxedNoSync => "relaxed-no-sync",
+            Rule::KernelScalar => "kernel-scalar",
         }
     }
 }
@@ -401,6 +417,39 @@ fn paragraph_has_marker(lines: &[SplitLine], idx: usize,
     }
 }
 
+/// Does this code line carry an order-defining scalar float
+/// reduction? Two shapes:
+///
+/// * an iterator fold: `.sum()` / `.sum::<f64>()`;
+/// * a compound assignment onto a *plain* accumulator (`s`, `*sj`,
+///   `self.acc`) whose right side multiplies or widens (`x * y`,
+///   `v as f64`) — the signature of a running dot/moment. An indexed
+///   left side (`w[j] += …`) is an element-wise update whose order
+///   never reassociates a float sum, so it is exempt.
+fn is_scalar_reduction(code: &str) -> bool {
+    if code.contains(".sum()") || code.contains(".sum::<") {
+        return true;
+    }
+    let Some(pos) = code.find("+=").or_else(|| code.find("-="))
+    else {
+        return false;
+    };
+    let (lhs, rhs) = code.split_at(pos);
+    let rhs = &rhs[2..];
+    if !(rhs.contains(" * ")
+        || rhs.contains(" as f64")
+        || rhs.contains(" as f32"))
+    {
+        return false;
+    }
+    let lhs = lhs.trim();
+    let lhs = lhs.strip_prefix('*').unwrap_or(lhs).trim();
+    !lhs.is_empty()
+        && lhs.chars().all(|c| {
+            c.is_alphanumeric() || c == '_' || c == '.'
+        })
+}
+
 fn is_import_line(code: &str) -> bool {
     let t = code.trim_start();
     t.starts_with("use ")
@@ -420,6 +469,7 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
     let hash_scoped =
         HASH_SCOPED_DIRS.iter().any(|d| rel.starts_with(d));
     let clock_ok = WALL_CLOCK_WHITELIST.contains(&rel);
+    let kernel_scoped = KERNEL_SCOPED_FILES.contains(&rel);
     let mut out = Vec::new();
     let mut push = |line: usize, rule: Rule, msg: String| {
         out.push(Violation { file: rel.to_string(), line, rule, msg });
@@ -473,6 +523,19 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
             push(n, Rule::RelaxedNoSync,
                  "`Ordering::Relaxed` without a `// SYNC:` note \
                   arguing why the weakest ordering suffices"
+                     .to_string());
+        }
+        if kernel_scoped
+            && is_scalar_reduction(code)
+            && !paragraph_has_marker(
+                &lines, i, "DETLINT: allow(kernel-scalar)")
+        {
+            push(n, Rule::KernelScalar,
+                 "scalar float reduction in a kernel-owned hot file: \
+                  reduction order defines trajectory bits and \
+                  util/kernels owns it — route through a lane \
+                  kernel, or mark the paragraph `// DETLINT: \
+                  allow(kernel-scalar): <why no kernel fits>`"
                      .to_string());
         }
     }
@@ -627,6 +690,64 @@ mod tests {
             "cache/mod.rs",
             "self.bytes.load(Ordering::Acquire);\n")
             .is_empty());
+    }
+
+    #[test]
+    fn kernel_scalar_flags_accumulators_in_scoped_files() {
+        let dotloop = "fn f(a: &[f64], b: &[f64]) -> f64 {\n\
+                       let mut s = 0.0;\n\
+                       for i in 0..a.len() {\n\
+                       s += a[i] * b[i];\n\
+                       }\n\
+                       s\n\
+                       }\n";
+        assert_eq!(rules("util/linalg.rs", dotloop),
+                   vec![Rule::KernelScalar]);
+        assert_eq!(rules("fe/ops.rs", dotloop),
+                   vec![Rule::KernelScalar]);
+        // the same loop is fine outside the kernel-owned files
+        assert!(rules("opt/mod.rs", dotloop).is_empty());
+        assert!(rules("util/stats.rs", dotloop).is_empty());
+        // widening accumulation counts (deref'd accumulator too)
+        assert_eq!(
+            rules("fe/ops.rs", "*sj += c[i] as f64;\n"),
+            vec![Rule::KernelScalar]);
+        // iterator folds count
+        assert_eq!(
+            rules("util/linalg.rs",
+                  "let t: f64 = xs.iter().map(|x| x * x).sum();\n"),
+            vec![Rule::KernelScalar]);
+        assert_eq!(
+            rules("util/linalg.rs",
+                  "let t = xs.iter().sum::<f64>();\n"),
+            vec![Rule::KernelScalar]);
+    }
+
+    #[test]
+    fn kernel_scalar_exempts_elementwise_and_counters() {
+        // indexed LHS: element-wise update, not a reduction
+        assert!(rules("fe/ops.rs",
+                      "w[j] += lr * g;\n").is_empty());
+        assert!(rules("fe/ops.rs",
+                      "acc[i % 8] += x * y;\n").is_empty());
+        // no multiply / widen on the RHS: counters and steps
+        assert!(rules("util/linalg.rs", "i += 1;\n").is_empty());
+        assert!(rules("util/linalg.rs", "s += v;\n").is_empty());
+        // centering loop: subtraction without multiply
+        assert!(rules("util/linalg.rs", "*x -= mu;\n").is_empty());
+    }
+
+    #[test]
+    fn kernel_scalar_marker_suppresses_within_paragraph() {
+        let ok = "// DETLINT: allow(kernel-scalar): column-strided\n\
+                  // access no kernel covers; ≤ MAX_WIDTH terms\n\
+                  s += l[(k, i)] * l[(k, j)];\n";
+        assert!(rules("util/linalg.rs", ok).is_empty());
+        let stale = "// DETLINT: allow(kernel-scalar): old note\n\
+                     \n\
+                     s += a[i] * b[i];\n";
+        assert_eq!(rules("util/linalg.rs", stale),
+                   vec![Rule::KernelScalar]);
     }
 
     #[test]
