@@ -44,6 +44,9 @@ fn main() {
     use volcanoml::data::metrics::Metric;
     use volcanoml::data::synthetic::generate;
     let mut series = Vec::new();
+    // per-phase wall-clock profile of the last VolcanoML run, for the
+    // machine-readable summary (empty when VOLCANO_PROFILE=0)
+    let mut profile = volcanoml::obs::profile::RunProfile::default();
     for p in profiles.iter().take(4) {
         let ds = generate(p);
         for &sys in &systems {
@@ -65,6 +68,9 @@ fn main() {
                     .map(|(t, u)| (*t, 1.0 - u)).collect();
                 series.push((format!("{}/{}", ds.name, sys.name()),
                              curve));
+                if sys == SystemKind::VolcanoMLMinus {
+                    profile = out.profile.clone();
+                }
             }
         }
     }
@@ -86,6 +92,7 @@ fn main() {
             Some(b) => Json::Num(b as f64),
             None => Json::Null,
         }),
+        ("profile", profile.to_json()),
     ]);
     save_bench_summary("table10", &summary);
 }

@@ -47,7 +47,15 @@ fn main() -> anyhow::Result<()> {
     // FE artifact store for the part-2 runs (part 1 compares on/off
     // itself); trajectory-neutral, so any bound is safe
     let fe_cache_mb = args.usize_or("fe-cache-mb", 0)?;
+    // optional Chrome-trace capture of the whole driver run (CI
+    // uploads the file as an artifact); trajectory-neutral, so the
+    // bit-identity asserts below hold with it on or off
+    let trace_out = args.str_opt("trace-out");
     args.finish()?;
+    if trace_out.is_some() {
+        volcanoml::obs::enable(volcanoml::obs::TRACE);
+        volcanoml::obs::trace::clear();
+    }
     let evals = std::env::var("E2E_EVALS")
         .ok().and_then(|v| v.parse().ok()).unwrap_or(48);
 
@@ -281,6 +289,15 @@ fn main() -> anyhow::Result<()> {
         }
         println!("\nall layers composed: Rust blocks -> PJRT \
                   executables -> Pallas kernels.");
+    }
+
+    if let Some(path) = &trace_out {
+        let n = volcanoml::obs::trace::write_chrome_trace(
+            std::path::Path::new(path))?;
+        let dropped = volcanoml::obs::trace::dropped_events();
+        println!("\ntrace: wrote {n} events to {path} ({dropped} \
+                  dropped by ring overflow) — load in \
+                  chrome://tracing or Perfetto");
     }
     Ok(())
 }

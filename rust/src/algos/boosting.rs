@@ -369,22 +369,31 @@ impl AdaBoost {
     }
 
     pub fn predict(&self, ds: &Dataset, rows: &[usize]) -> Predictions {
-        let mut buf = Vec::with_capacity(ds.d);
+        // blocked gather: bounded row-major buffer, each source
+        // column streamed once per block (util::kernels)
+        let mut block = Vec::new();
         match self.task {
             Task::Classification { n_classes } => {
                 let mut scores = vec![0.0f32; rows.len() * n_classes];
-                for (r, &i) in rows.iter().enumerate() {
-                    ds.gather_row(i, &mut buf);
-                    for (tree, alpha) in &self.stumps {
-                        let dist = tree.predict_row(&buf);
-                        let pred = dist
-                            .iter()
-                            .enumerate()
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                            .map(|(c, _)| c)
-                            .unwrap_or(0);
-                        scores[r * n_classes + pred.min(n_classes - 1)] +=
-                            *alpha as f32;
+                for blo in (0..rows.len()).step_by(PREDICT_BLOCK_ROWS) {
+                    let bhi = (blo + PREDICT_BLOCK_ROWS).min(rows.len());
+                    ds.gather_rows_rowmajor(&rows[blo..bhi], &mut block);
+                    for r in blo..bhi {
+                        let buf = &block[(r - blo) * ds.d
+                                         ..(r - blo + 1) * ds.d];
+                        for (tree, alpha) in &self.stumps {
+                            let dist = tree.predict_row(buf);
+                            let pred = dist
+                                .iter()
+                                .enumerate()
+                                .max_by(|a, b| a.1.partial_cmp(b.1)
+                                    .unwrap())
+                                .map(|(c, _)| c)
+                                .unwrap_or(0);
+                            scores[r * n_classes
+                                   + pred.min(n_classes - 1)] +=
+                                *alpha as f32;
+                        }
                     }
                 }
                 Predictions::ClassScores { n_classes, scores }
@@ -393,18 +402,21 @@ impl AdaBoost {
                 let total: f64 =
                     self.stumps.iter().map(|(_, a)| *a).sum::<f64>()
                         .max(1e-12);
-                let vals = rows
-                    .iter()
-                    .map(|&i| {
-                        ds.gather_row(i, &mut buf);
+                let mut vals = Vec::with_capacity(rows.len());
+                for blo in (0..rows.len()).step_by(PREDICT_BLOCK_ROWS) {
+                    let bhi = (blo + PREDICT_BLOCK_ROWS).min(rows.len());
+                    ds.gather_rows_rowmajor(&rows[blo..bhi], &mut block);
+                    for r in blo..bhi {
+                        let buf = &block[(r - blo) * ds.d
+                                         ..(r - blo + 1) * ds.d];
                         let s: f64 = self
                             .stumps
                             .iter()
-                            .map(|(t, a)| a * t.predict_row(&buf)[0])
+                            .map(|(t, a)| a * t.predict_row(buf)[0])
                             .sum();
-                        (s / total) as f32
-                    })
-                    .collect();
+                        vals.push((s / total) as f32);
+                    }
+                }
                 Predictions::Values(vals)
             }
         }

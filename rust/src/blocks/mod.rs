@@ -767,13 +767,25 @@ impl ConditioningBlock {
             self.spec.clear();
         }
         self.rounds += 1;
+        let _round = crate::obs::span!("round", "elimination_round",
+                                       "round" => self.rounds,
+                                       "depth" => depth);
         if !self.pipelined_round(env, chunk, window)? {
             // round abandoned at a chunk boundary: elimination is
             // skipped, exactly like the synchronous gather path
+            crate::obs::event!("round", "abandoned",
+                               "round" => self.rounds);
             return Ok(());
         }
         if self.eliminate {
+            let before =
+                self.arms.iter().filter(|a| a.active).count();
             self.eliminate_dominated();
+            let after =
+                self.arms.iter().filter(|a| a.active).count();
+            crate::obs::event!("round", "eliminate",
+                               "active_before" => before,
+                               "active_after" => after);
         }
         self.reconcile_spec();
         Ok(())
@@ -837,6 +849,8 @@ impl ConditioningBlock {
                     // the synchronous gather semantics; the cursor is
                     // always inside round 0 here, so the helper's
                     // round cap reduces to `n`)
+                    let _p = crate::obs::span!("chunk", "propose",
+                                               "cursor" => cursor);
                     let (end, c) = propose_chunk(arms, &mut **rng,
                                                  &full, cursor, chunk,
                                                  knobs)?;
@@ -877,6 +891,8 @@ impl ConditioningBlock {
             // future rounds (tagged with their distance so the round
             // boundary — elimination — is honoured when they play).
             let ys = obj.evaluate_batch_overlapped(&reqs, &mut || {
+                let _s = crate::obs::span!("chunk", "speculate",
+                                           "cursor" => cursor);
                 while spec_err.is_none()
                     && ready.len() + spec.len() < window
                 {
@@ -900,6 +916,8 @@ impl ConditioningBlock {
             })?;
             // commit in proposal order; each arm observes the prefix
             // of its slice that the budget allowed (possibly empty)
+            let _c = crate::obs::span!("chunk", "commit",
+                                       "pulls" => reqs.len());
             let mut off = 0;
             for (ai, p) in cur {
                 let m = p.reqs.len();

@@ -428,6 +428,8 @@ impl FeStore {
                     // stats() snapshots, never publishes data
                     self.hits.fetch_add(1, Ordering::Relaxed);
                     self.bump_tenant(tenant, |t| t.hits += 1);
+                    crate::obs::event!("fe_store", "hit",
+                                       "tenant" => tenant);
                     return Resolved::Ready(art.clone());
                 }
                 Some(Entry::Pending(w)) => w.clone(),
@@ -437,6 +439,8 @@ impl FeStore {
                     // SYNC: Relaxed — monotone stats counter
                     self.misses.fetch_add(1, Ordering::Relaxed);
                     self.bump_tenant(tenant, |t| t.misses += 1);
+                    crate::obs::event!("fe_store", "miss",
+                                       "tenant" => tenant);
                     return Resolved::Compute(Ticket {
                         store: self,
                         fp,
@@ -446,6 +450,8 @@ impl FeStore {
             }
         };
         // coalesce: wait out the concurrent computation
+        let _span = crate::obs::span!("fe_store", "coalesce",
+                                      "tenant" => tenant);
         let mut st = lock(&waiter.state);
         loop {
             match &*st {
@@ -511,6 +517,7 @@ impl FeStore {
         }
         // SYNC: Relaxed — monotone stats counters
         self.published.fetch_add(1, Ordering::Relaxed);
+        crate::obs::event!("fe_store", "publish", "bytes" => cost);
         let novel = art.novel_cols() as u64;
         self.novel_cols.fetch_add(novel, Ordering::Relaxed);
         self.shared_cols.fetch_add(art.data.d as u64 - novel,
@@ -562,6 +569,8 @@ impl FeStore {
                     shard.remove(&key);
                     self.bytes.fetch_sub(cost, Ordering::Relaxed);
                     self.evictions.fetch_add(1, Ordering::Relaxed);
+                    crate::obs::event!("fe_store", "evict",
+                                       "bytes" => cost);
                     progressed = true;
                 }
             }

@@ -17,6 +17,7 @@ use crate::data::dataset::{Dataset, Predictions, Split};
 use crate::data::metrics::Metric;
 use crate::ensemble::{combine, fit_weights, EnsembleMethod};
 use crate::meta::{meta_features, MetaCorpus, TaskRecord};
+use crate::obs::profile::{Phase, RunProfile};
 use crate::plan::progressive::run_progressive;
 use crate::plan::{EngineKind, ExecutionPlan, PlanBuilder, PlanKind};
 use crate::runtime::executor::Executor;
@@ -159,6 +160,9 @@ pub struct RunOutcome {
     /// Evaluation-cache counters: config→utility memo hit/miss plus
     /// the FE artifact store's stats when `fe_cache_mb > 0`.
     pub eval_stats: EvalStats,
+    /// Per-phase wall-clock totals (the profiling face of
+    /// [`crate::obs`]; empty when `VOLCANO_PROFILE=0`).
+    pub profile: RunProfile,
     /// Meta-corpus record of this run (for corpus collection).
     pub record: TaskRecord,
 }
@@ -338,6 +342,8 @@ impl VolcanoML {
         }
 
         // ---- final reporting ---------------------------------------
+        let prof = evaluator.profile_agg();
+        let finalize_guard = prof.start(Phase::Finalize);
         let y_test = evaluator.y_test();
         let y_valid = evaluator.y_valid();
         let best = evaluator.best.clone();
@@ -422,6 +428,7 @@ impl VolcanoML {
         }
         // leaf histories from the plan tree (joint-block labels)
         collect_leaf_histories(root.as_ref(), &space, &mut record);
+        drop(finalize_guard);
 
         Ok(RunOutcome {
             dataset: ds.name.clone(),
@@ -437,6 +444,7 @@ impl VolcanoML {
             test_curve,
             arm_trend,
             eval_stats: evaluator.stats(),
+            profile: evaluator.run_profile(),
             record,
         })
     }

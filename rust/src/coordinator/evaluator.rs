@@ -25,6 +25,7 @@ use crate::cache::{FeStore, FeStoreStats, Fingerprint};
 use crate::data::dataset::{Dataset, Predictions, Split};
 use crate::data::metrics::Metric;
 use crate::fe::{FeExec, FePipeline};
+use crate::obs::profile::{Phase, ProfileAgg, RunProfile};
 use crate::runtime::executor::Executor;
 use crate::runtime::Runtime;
 use crate::space::Config;
@@ -104,6 +105,10 @@ pub struct PipelineEvaluator<'a> {
     /// from the serial commit stream, so attaching a sink never
     /// perturbs the trajectory.
     incumbent_sink: Option<IncumbentSink>,
+    /// Per-phase wall-clock aggregate (the profiling face of `obs`),
+    /// owned per evaluator so co-tenant searches never mix phases.
+    /// `Arc`: the pool-side eval closures add into it concurrently.
+    profile: Arc<ProfileAgg>,
 }
 
 impl<'a> PipelineEvaluator<'a> {
@@ -155,6 +160,7 @@ impl<'a> PipelineEvaluator<'a> {
             worst: f64::INFINITY,
             failures: 0,
             incumbent_sink: None,
+            profile: Arc::new(ProfileAgg::new()),
         }
     }
 
@@ -254,6 +260,18 @@ impl<'a> PipelineEvaluator<'a> {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// This evaluator's per-phase wall-clock aggregate (see
+    /// [`crate::obs::profile`]). Empty when profiling is disabled.
+    pub fn run_profile(&self) -> RunProfile {
+        self.profile.snapshot()
+    }
+
+    /// Shared handle onto the phase aggregate, for callers that time
+    /// phases outside the evaluator (e.g. the final-report path).
+    pub fn profile_agg(&self) -> Arc<ProfileAgg> {
+        self.profile.clone()
+    }
+
     /// True once the wall-clock deadline has passed. Checked when a
     /// batch is planned *and* again per item on the worker pool
     /// (through the executor's cancellation predicate), so a deadline
@@ -323,8 +341,10 @@ impl<'a> PipelineEvaluator<'a> {
             base,
             tenant: self.executor.tenant(),
         };
-        let applied =
-            self.pipeline.fit_apply(self.ds, cfg, fit_rows, &fx);
+        let applied = {
+            let _p = self.profile.start(Phase::Fe);
+            self.pipeline.fit_apply(self.ds, cfg, fit_rows, &fx)
+        };
         let algo_name = cfg.str_or("algorithm", &self.default_algo);
         let algo = self
             .algos
@@ -343,8 +363,12 @@ impl<'a> PipelineEvaluator<'a> {
         let mut ctx = EvalContext::new(self.runtime,
                                        rng.next_u64());
         ctx.fidelity = fidelity;
-        let model = algo.fit(&applied.data, &applied.train, &local,
-                             &mut ctx)?;
+        let model = {
+            let _p = self.profile.start(Phase::AlgoFit);
+            algo.fit(&applied.data, &applied.train, &local,
+                     &mut ctx)?
+        };
+        let _p = self.profile.start(Phase::Predict);
         Ok(model.predict(&applied.data, predict_rows, &mut ctx))
     }
 
@@ -421,6 +445,8 @@ impl<'a> PipelineEvaluator<'a> {
     /// the crash-penalty anchor and the incumbent identically.
     fn commit(&mut self, key: String, cfg: &Config, fidelity: f64,
               res: Result<f64>, elapsed: f64) -> f64 {
+        let prof = self.profile.clone();
+        let _p = prof.start(Phase::Commit);
         let (utility, genuine) = match res {
             Ok(u) if u.is_finite() => (u, true),
             _ => {
@@ -435,6 +461,7 @@ impl<'a> PipelineEvaluator<'a> {
         if genuine {
             self.worst = self.worst.min(utility);
         }
+        crate::obs::metrics::eval_done(elapsed, !genuine);
         self.cache.insert(key, utility);
         self.records.push(EvalRecord {
             config: cfg.clone(),
@@ -450,6 +477,11 @@ impl<'a> PipelineEvaluator<'a> {
         {
             self.best = Some((cfg.clone(), utility));
             let t = self.elapsed();
+            let tenant = self.executor.tenant();
+            crate::obs::metrics::incumbent(tenant, t);
+            crate::obs::event!("eval", "incumbent",
+                               "tenant" => tenant,
+                               "n_evals" => self.records.len());
             self.valid_curve.push((t, utility));
             self.snapshots.push((t, cfg.clone()));
             if let Some(sink) = &self.incumbent_sink {
@@ -629,6 +661,8 @@ impl<'a> Objective for PipelineEvaluator<'a> {
         } else {
             self.max_evals.saturating_sub(self.records.len())
         };
+        let prof = self.profile.clone();
+        let plan_guard = prof.start(Phase::Plan);
         let mut slots: Vec<Slot> = Vec::with_capacity(reqs.len());
         let mut fresh: Vec<(String, Config, f64)> = Vec::new();
         // DETLINT: allow(hash-iter): in-batch dedup lookups only —
@@ -658,14 +692,18 @@ impl<'a> Objective for PipelineEvaluator<'a> {
                 break; // budget exhausted: truncate the batch
             }
         }
+        drop(plan_guard);
 
         let ex = self.executor.clone();
         let mut outs: Vec<Option<(f64, Result<f64>)>> = {
             let shared: &PipelineEvaluator = self;
+            let tenant = ex.tenant();
             let pending = ex.submit_cancellable(
                 &fresh,
                 |t: &(String, Config, f64)| {
                     let t0 = Instant::now();
+                    let _s = crate::obs::span!("eval", "evaluate",
+                                               "tenant" => tenant);
                     let res = shared.eval_inner(&t.1, t.2);
                     (t0.elapsed().as_secs_f64(), res)
                 },
@@ -678,7 +716,10 @@ impl<'a> Objective for PipelineEvaluator<'a> {
             // thread while the pool works the batch (with a serial
             // executor the batch is deferred until the drain below,
             // preserving the same speculate-then-observe order)
-            overlap();
+            {
+                let _sp = prof.start(Phase::Speculate);
+                overlap();
+            }
             pending.drain_partial()
         };
 

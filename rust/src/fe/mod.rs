@@ -374,6 +374,17 @@ impl FePipeline {
     /// output depends on nothing outside the content address.
     fn run_stage(&self, plan: &StagePlan, data: &mut FeData<'_>,
                  rows: &mut FeRows<'_>, fx: &FeExec) -> bool {
+        // Static span names (the tracer interns `&'static str`), one
+        // per stage kind.
+        let span_name = match plan.stage.kind {
+            StageKind::Embedding => "fe.embedding",
+            StageKind::Scaler => "fe.scaler",
+            StageKind::Balancer => "fe.balancer",
+            StageKind::Transformer => "fe.transformer",
+            StageKind::Custom => "fe.custom",
+        };
+        let _span = crate::obs::span!("fe", span_name,
+                                      "tenant" => fx.tenant);
         let mut rng = Rng::new(plan.fp.seed64());
         let op = plan.op.as_str();
         match plan.stage.kind {

@@ -29,6 +29,7 @@ pub mod algos;
 pub mod ensemble;
 pub mod fe;
 pub mod meta;
+pub mod obs;
 pub mod space;
 pub mod opt;
 pub mod plan;

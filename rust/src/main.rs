@@ -9,7 +9,7 @@
 //!   collect-corpus  build the meta-learning corpus
 //!   help
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use volcanoml::baselines::{run_system, BaseSpec, SystemKind};
 use volcanoml::bench::Table;
@@ -34,12 +34,13 @@ SUBCOMMANDS
                   [--corpus PATH] [--seed N] [--workers N]
                   [--super-batch N] [--pipeline-depth N]
                   [--fe-cache-mb N] [--no-pjrt]
+                  [--trace-out PATH] [--metrics]
   plans           --dataset <name> [--evals N] [--workers N]
                   [--super-batch N] [--pipeline-depth N]
                   [--fe-cache-mb N]
                   — compare J/C/A/AC/CA plus the nested CC
   serve           [--workers N] [--fe-cache-mb N] [--max-active N]
-                  [--pending-cap N]
+                  [--pending-cap N] [--stats-interval SECS]
                   — long-running multi-tenant search server: one
                   shared worker pool + FE store serving every job.
                   Reads one JSON job spec per stdin line ({\"name\":
@@ -75,6 +76,15 @@ SUBCOMMANDS
   addressing makes this trajectory-neutral — results are
   bit-identical at any bound, so it is a pure wall-clock knob
   (VOLCANO_FE_CACHE_MB for benches).
+  --trace-out PATH records spans/events of the run (pool claims, FE
+  store traffic, chunk lifecycle, elimination rounds) and writes
+  Chrome trace_event JSON loadable in chrome://tracing / Perfetto.
+  --metrics dumps the metric registry (Prometheus text) after the
+  run. serve emits the same registry as periodic {\"event\":\"stats\"}
+  lines every --stats-interval seconds (default 5). Observability is
+  trajectory-neutral: results are bit-identical with it on or off
+  (VOLCANO_TRACE=1 / VOLCANO_METRICS=1 enable collection globally;
+  VOLCANO_PROFILE=0 disables the phase profile).
 ";
 
 fn main() {
@@ -140,8 +150,22 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         Some(p) => Some(MetaCorpus::load(&PathBuf::from(p))?),
         None => None,
     };
+    let trace_out = args.str_opt("trace-out");
+    let want_metrics = args.flag("metrics");
     let runtime = open_runtime(args);
     args.finish()?;
+
+    // Arm collection before the search. Trajectory-neutral: the run
+    // is bit-identical with these on or off (pinned by
+    // rust/tests/observability.rs).
+    if trace_out.is_some() {
+        volcanoml::obs::enable(volcanoml::obs::TRACE);
+        volcanoml::obs::trace::clear();
+    }
+    if want_metrics {
+        volcanoml::obs::enable(volcanoml::obs::METRICS);
+        volcanoml::obs::metrics::reset_all();
+    }
 
     println!("dataset {} (n={}, d={}, task={:?})",
              ds.name, ds.n, ds.d, ds.task);
@@ -188,6 +212,31 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                 println!("  {name:<20} {n:>5} execs  {secs:>8.2}s");
             }
         }
+    }
+    if !out.profile.is_empty() {
+        println!("\nphase profile (wall-clock):");
+        print!("{}", out.profile.render_table());
+    }
+    if want_metrics {
+        let mut extra = Vec::new();
+        if let Some(fe) = &st.fe {
+            extra.push(volcanoml::obs::metrics::Sample::new(
+                "volcanoml_fe_store_bytes", fe.bytes as f64));
+            extra.push(volcanoml::obs::metrics::Sample::new(
+                "volcanoml_fe_store_hit_rate", fe.hit_rate()));
+            extra.push(volcanoml::obs::metrics::Sample::new(
+                "volcanoml_fe_store_evictions_total",
+                fe.evictions as f64));
+        }
+        println!("\n# metrics (Prometheus text format)");
+        print!("{}", volcanoml::obs::metrics::render_prometheus(&extra));
+    }
+    if let Some(path) = &trace_out {
+        let n = volcanoml::obs::trace::write_chrome_trace(
+            Path::new(path))?;
+        let dropped = volcanoml::obs::trace::dropped_events();
+        println!("\ntrace: wrote {n} events to {path} \
+                  ({dropped} dropped by ring overflow)");
     }
     Ok(())
 }
@@ -254,8 +303,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         max_active: args.usize_or("max-active", 4)?.max(1),
         pending_cap: args.usize_or("pending-cap", 16)?,
     };
+    let stats_interval = args.f64_or("stats-interval", 5.0)?;
     args.finish()?;
-    let svc = SearchService::new(cfg);
+    // serve always collects metrics: the periodic `stats` events are
+    // part of the wire format, and collection is trajectory-neutral
+    volcanoml::obs::enable(volcanoml::obs::METRICS);
+    let svc = Arc::new(SearchService::new(cfg));
 
     // every job's forwarder thread shares stdout: one mutex keeps
     // event lines whole, and each line is flushed so clients see
@@ -265,6 +318,67 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let mut o = out.lock().unwrap_or_else(|p| p.into_inner());
         let _ = writeln!(o, "{}", v.to_string());
         let _ = o.flush();
+    };
+
+    // periodic `stats` events: a first sample immediately (so even
+    // the shortest-lived server emits at least one), then one per
+    // --stats-interval. Reads metrics + service load only; never
+    // feeds back into scheduling.
+    let stop_stats = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stats_thread = {
+        let svc = svc.clone();
+        let out = out.clone();
+        let stop = stop_stats.clone();
+        std::thread::spawn(move || {
+            use std::sync::atomic::Ordering;
+            loop {
+                let (active, pending) = svc.load();
+                let depth = svc.pool().queue_depth();
+                volcanoml::obs::metrics::set_pool_queue_depth(
+                    depth as u64);
+                let mut fields = vec![
+                    ("event", Json::Str("stats".into())),
+                    ("uptime_secs",
+                     Json::Num(volcanoml::obs::clock::now_secs())),
+                    ("active", Json::Num(active as f64)),
+                    ("pending", Json::Num(pending as f64)),
+                    ("pool_queue_depth", Json::Num(depth as f64)),
+                    ("evals_total",
+                     Json::Num(
+                         volcanoml::obs::metrics::evals_total()
+                             as f64)),
+                ];
+                if let Some(fe) = svc.fe_store() {
+                    let st = fe.stats();
+                    fields.push(("fe_store_bytes",
+                                 Json::Num(st.bytes as f64)));
+                    fields.push(("fe_store_hit_rate",
+                                 Json::Num(st.hit_rate())));
+                }
+                let v = Json::obj(fields);
+                {
+                    let mut o = out.lock()
+                        .unwrap_or_else(|p| p.into_inner());
+                    let _ = writeln!(o, "{}", v.to_string());
+                    let _ = o.flush();
+                }
+                // sleep in short slices so shutdown isn't delayed by
+                // a full interval
+                let deadline = std::time::Instant::now()
+                    + std::time::Duration::from_secs_f64(
+                        stats_interval.max(0.01));
+                while std::time::Instant::now() < deadline {
+                    if stop.load(Ordering::Acquire) {
+                        return;
+                    }
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(100));
+                }
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+            }
+        })
     };
 
     let mut forwarders: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -392,6 +506,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let _ = f.join();
     }
     svc.wait_idle();
+    // stop the stats thread *before* the shutdown line: `shutdown`
+    // must be the last event on the stream (clients tail it)
+    stop_stats.store(true, std::sync::atomic::Ordering::Release);
+    let _ = stats_thread.join();
     emit(&out, Json::obj(vec![
         ("event", Json::Str("shutdown".into())),
     ]));

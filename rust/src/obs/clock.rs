@@ -1,0 +1,52 @@
+//! The single wall-clock choke point of the observability layer.
+//!
+//! Every timestamp the tracer, the metrics registry or the profiler
+//! ever reads comes from [`now_ns`] — nothing else in `obs/` (or in
+//! the instrumented call sites outside it) touches `Instant` or
+//! `SystemTime` directly. That funnel is what keeps the layer
+//! auditable: trajectory-neutrality reviews only need to check that
+//! *this* module's output never feeds a decision, and the
+//! `obs-clock` detlint rule rejects any clock read inside `obs/`
+//! that bypasses it.
+//!
+//! Timestamps are nanoseconds since a process-wide epoch (the first
+//! read), so they are compact `u64`s that subtract cheaply and
+//! serialise directly into Chrome `trace_event` microsecond fields.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process-wide observability epoch, which is
+/// anchored at the first call. Monotonic (backed by [`Instant`]);
+/// wraps after ~584 years of process uptime.
+#[inline]
+pub fn now_ns() -> u64 {
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    Instant::now().duration_since(epoch).as_nanos() as u64
+}
+
+/// [`now_ns`] in seconds — for rate denominators and human-facing
+/// summaries.
+#[inline]
+pub fn now_secs() -> f64 {
+    now_ns() as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotone_and_anchored() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a, "monotonic: {b} >= {a}");
+        // The epoch is the first read ever, so readings stay far from
+        // the u64 wrap point for any realistic process lifetime.
+        assert!(a < u64::MAX / 2);
+        let s = now_secs();
+        assert!(s >= 0.0 && s.is_finite());
+    }
+}

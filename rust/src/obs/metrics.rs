@@ -1,0 +1,535 @@
+//! Static metric registry with a Prometheus-text renderer.
+//!
+//! Hot-path instruments call the free helpers ([`pool_claim`],
+//! [`eval_done`], [`idle_wait_ns`], [`incumbent`]) — each is one
+//! flag branch when collection is off ([`super::metrics_on`]) and
+//! one atomic (or one short `Mutex<BTreeMap>` hold for labelled
+//! series) when on. Slow-moving state (FE-store bytes/hit-rate,
+//! pool queue depth, service load) is *sampled* at render time from
+//! its owning subsystem's existing stats calls and passed in as
+//! [`Sample`]s, so the subsystems gain no new bookkeeping.
+//!
+//! [`render_prometheus`] emits the text exposition format
+//! (`# HELP`/`# TYPE` + samples, deterministic order). It backs
+//! `volcanoml run --metrics` and the periodic `stats` events of
+//! `volcanoml serve`.
+
+use crate::obs::clock;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+// SYNC: Relaxed (throughout this module) — metric cells are
+// monotonic counters / last-write-wins gauges read only by
+// reporting paths; by the obs neutrality contract nothing in the
+// search observes them, so per-cell atomicity suffices and no
+// ordering with other memory is required.
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        // SYNC: Relaxed — see the module note above.
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        // SYNC: Relaxed — see the module note above.
+        self.v.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        // SYNC: Relaxed — see the module note above.
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins gauge.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, n: u64) {
+        // SYNC: Relaxed — see the module note above.
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        // SYNC: Relaxed — see the module note above.
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Power-of-two-bucketed duration histogram: bucket `i` counts
+/// observations `< 2^(10+i)` ns (first bucket ≈ 1 µs, last is
+/// unbounded), so one `leading_zeros` classifies an observation.
+pub const HIST_BUCKETS: usize = 28;
+
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    #[inline]
+    pub fn observe_ns(&self, ns: u64) {
+        let bits = 64 - ns.leading_zeros() as usize;
+        let idx = bits.saturating_sub(10).min(HIST_BUCKETS - 1);
+        // SYNC: Relaxed — see the module note above.
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        // SYNC: Relaxed — see the module note above.
+        self.count.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        // SYNC: Relaxed — see the module note above.
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A labelled `u64` counter family keyed by tenant id.
+#[derive(Debug, Default)]
+pub struct PerTenant {
+    m: Mutex<BTreeMap<u64, u64>>,
+}
+
+impl PerTenant {
+    fn add(&self, tenant: u64, n: u64) {
+        let mut m = self.m.lock().unwrap_or_else(|p| p.into_inner());
+        *m.entry(tenant).or_insert(0) += n;
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<u64, u64> {
+        self.m.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    fn reset(&self) {
+        self.m.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+}
+
+/// A labelled `f64` gauge family keyed by tenant id.
+#[derive(Debug, Default)]
+pub struct PerTenantGauge {
+    m: Mutex<BTreeMap<u64, f64>>,
+}
+
+impl PerTenantGauge {
+    fn set(&self, tenant: u64, v: f64) {
+        self.m.lock().unwrap_or_else(|p| p.into_inner())
+            .insert(tenant, v);
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<u64, f64> {
+        self.m.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    fn reset(&self) {
+        self.m.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    /// Per-tenant worker-pool claim counts — the fair-share
+    /// evidence.
+    pool_claims: PerTenant,
+    /// Sampled scheduler queue depth (queued batches).
+    pool_queue_depth: Gauge,
+    /// Times a worker went to sleep on the work condvar, and the
+    /// total ns spent asleep — pool idle time.
+    pool_idle_waits: Counter,
+    pool_idle_ns: Counter,
+    /// Committed evaluations / failed evaluations.
+    evals: Counter,
+    eval_failures: Counter,
+    /// Per-evaluation wall-clock.
+    eval_duration: Histogram,
+    /// Incumbent improvements, and per-tenant seconds from search
+    /// start to the latest improvement (time-to-incumbent).
+    incumbents: Counter,
+    time_to_incumbent: PerTenantGauge,
+}
+
+fn reg() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::default)
+}
+
+// ---------------------------------------------------------------------
+// hot-path instruments (one branch when collection is off)
+// ---------------------------------------------------------------------
+
+/// A worker claimed one work item for `tenant`.
+#[inline]
+pub fn pool_claim(tenant: u64) {
+    if super::metrics_on() {
+        reg().pool_claims.add(tenant, 1);
+    }
+}
+
+/// A worker slept `ns` on the work condvar before the next claim.
+#[inline]
+pub fn idle_wait_ns(ns: u64) {
+    if super::metrics_on() {
+        reg().pool_idle_waits.add(1);
+        reg().pool_idle_ns.add(ns);
+    }
+}
+
+/// One evaluation committed (`elapsed_secs` of eval wall-clock;
+/// `failed` if it returned an error outcome).
+#[inline]
+pub fn eval_done(elapsed_secs: f64, failed: bool) {
+    if super::metrics_on() {
+        reg().evals.add(1);
+        if failed {
+            reg().eval_failures.add(1);
+        }
+        reg().eval_duration
+            .observe_ns((elapsed_secs.max(0.0) * 1e9) as u64);
+    }
+}
+
+/// The incumbent improved for `tenant`, `secs_since_start` into its
+/// search.
+#[inline]
+pub fn incumbent(tenant: u64, secs_since_start: f64) {
+    if super::metrics_on() {
+        reg().incumbents.add(1);
+        reg().time_to_incumbent.set(tenant, secs_since_start);
+    }
+}
+
+/// Record the sampled scheduler queue depth (called by the stats
+/// emitters, not the hot path).
+pub fn set_pool_queue_depth(n: u64) {
+    if super::metrics_on() {
+        reg().pool_queue_depth.set(n);
+    }
+}
+
+/// Zero every series — test hook and `run` session boundary.
+pub fn reset_all() {
+    let r = reg();
+    r.pool_claims.reset();
+    r.pool_queue_depth.set(0);
+    r.pool_idle_waits.reset();
+    r.pool_idle_ns.reset();
+    r.evals.reset();
+    r.eval_failures.reset();
+    r.eval_duration.reset();
+    r.incumbents.reset();
+    r.time_to_incumbent.reset();
+}
+
+/// Committed-evaluation counter value (for stats events).
+pub fn evals_total() -> u64 {
+    reg().evals.get()
+}
+
+/// Per-tenant claim snapshot (for stats events).
+pub fn pool_claims_snapshot() -> BTreeMap<u64, u64> {
+    reg().pool_claims.snapshot()
+}
+
+// ---------------------------------------------------------------------
+// rendering
+// ---------------------------------------------------------------------
+
+/// An externally sampled gauge for [`render_prometheus`] — how
+/// FE-store bytes/hit-rate, service load and other subsystem stats
+/// enter the exposition without the subsystems holding registry
+/// state.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Full metric name, e.g. `"volcanoml_fe_store_bytes"`.
+    pub name: String,
+    /// Label pairs, rendered in the given order.
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    pub fn new(name: &str, value: f64) -> Sample {
+        Sample { name: name.to_string(), labels: Vec::new(), value }
+    }
+
+    pub fn with_label(name: &str, key: &str, label: &str, value: f64)
+        -> Sample {
+        Sample {
+            name: name.to_string(),
+            labels: vec![(key.to_string(), label.to_string())],
+            value,
+        }
+    }
+}
+
+fn write_labels(out: &mut String, labels: &[(String, String)]) {
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"{}\"", v.replace('"', "\\\""));
+    }
+    out.push('}');
+}
+
+fn write_num(out: &mut String, v: f64) {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        let _ = writeln!(out, " {}", v as i64);
+    } else {
+        let _ = writeln!(out, " {v}");
+    }
+}
+
+fn series(out: &mut String, name: &str, kind: &str, help: &str,
+          rows: &[(Vec<(String, String)>, f64)]) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for (labels, v) in rows {
+        out.push_str(name);
+        write_labels(out, labels);
+        write_num(out, *v);
+    }
+}
+
+/// Render the registry (plus caller-sampled extras) in the
+/// Prometheus text exposition format. Deterministic ordering:
+/// registry series first in a fixed order, then `extra` grouped by
+/// name (first-appearance order preserved within a name).
+pub fn render_prometheus(extra: &[Sample]) -> String {
+    let r = reg();
+    let mut out = String::new();
+
+    let uptime = clock::now_secs();
+    series(&mut out, "volcanoml_uptime_seconds", "gauge",
+           "Seconds since the process observability epoch.",
+           &[(Vec::new(), uptime)]);
+
+    let claims: Vec<(Vec<(String, String)>, f64)> = r
+        .pool_claims
+        .snapshot()
+        .into_iter()
+        .map(|(t, n)| {
+            (vec![("tenant".to_string(), t.to_string())], n as f64)
+        })
+        .collect();
+    series(&mut out, "volcanoml_pool_claims_total", "counter",
+           "Work items claimed per fair-share tenant.", &claims);
+
+    series(&mut out, "volcanoml_pool_queue_depth", "gauge",
+           "Sampled queued batches on the shared worker pool.",
+           &[(Vec::new(), r.pool_queue_depth.get() as f64)]);
+    series(&mut out, "volcanoml_pool_idle_waits_total", "counter",
+           "Times a pool worker slept waiting for work.",
+           &[(Vec::new(), r.pool_idle_waits.get() as f64)]);
+    series(&mut out, "volcanoml_pool_idle_seconds_total", "counter",
+           "Total worker seconds spent idle-waiting.",
+           &[(Vec::new(), r.pool_idle_ns.get() as f64 / 1e9)]);
+
+    let evals = r.evals.get();
+    series(&mut out, "volcanoml_evals_total", "counter",
+           "Committed pipeline evaluations.",
+           &[(Vec::new(), evals as f64)]);
+    series(&mut out, "volcanoml_eval_failures_total", "counter",
+           "Committed evaluations that returned a failure outcome.",
+           &[(Vec::new(), r.eval_failures.get() as f64)]);
+    series(&mut out, "volcanoml_evals_per_second", "gauge",
+           "Committed evaluations over process uptime.",
+           &[(Vec::new(),
+              if uptime > 0.0 { evals as f64 / uptime }
+              else { 0.0 })]);
+
+    // Histogram: cumulative le buckets in seconds, then sum/count.
+    // SYNC: Relaxed (loads below) — see the module note above.
+    let name = "volcanoml_eval_duration_seconds";
+    let _ = writeln!(out,
+        "# HELP {name} Wall-clock of one pipeline evaluation.");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, b) in r.eval_duration.buckets.iter().enumerate() {
+        cum += b.load(Ordering::Relaxed);
+        if i + 1 < HIST_BUCKETS {
+            // Bucket i counts observations below 2^(10+i) ns.
+            let le = (1u64 << (10 + i)) as f64 / 1e9;
+            out.push_str(name);
+            let _ = write!(out, "_bucket{{le=\"{le}\"}}");
+            write_num(&mut out, cum as f64);
+        }
+    }
+    let _ = write!(out, "{name}_bucket{{le=\"+Inf\"}}");
+    write_num(&mut out, cum as f64);
+    let _ = write!(out, "{name}_sum");
+    write_num(&mut out,
+              r.eval_duration.sum_ns.load(Ordering::Relaxed) as f64
+              / 1e9);
+    let _ = write!(out, "{name}_count");
+    write_num(&mut out, r.eval_duration.count() as f64);
+
+    series(&mut out, "volcanoml_incumbent_improvements_total",
+           "counter", "Times any tenant's incumbent improved.",
+           &[(Vec::new(), r.incumbents.get() as f64)]);
+    let tti: Vec<(Vec<(String, String)>, f64)> = r
+        .time_to_incumbent
+        .snapshot()
+        .into_iter()
+        .map(|(t, s)| {
+            (vec![("tenant".to_string(), t.to_string())], s)
+        })
+        .collect();
+    series(&mut out, "volcanoml_time_to_incumbent_seconds", "gauge",
+           "Seconds from search start to the latest incumbent \
+            improvement, per tenant.",
+           &tti);
+
+    // Caller-sampled extras, grouped by name.
+    let mut by_name: Vec<(&str, Vec<&Sample>)> = Vec::new();
+    for s in extra {
+        match by_name.iter_mut().find(|(n, _)| *n == s.name) {
+            Some((_, v)) => v.push(s),
+            None => by_name.push((&s.name, vec![s])),
+        }
+    }
+    for (name, samples) in by_name {
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        for s in samples {
+            out.push_str(name);
+            write_labels(&mut out, &s.labels);
+            write_num(&mut out, s.value);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn disabled_collection_is_a_noop() {
+        let _g = obs::test_support::lock_flags();
+        obs::set_flags(0);
+        pool_claim(424_242);
+        eval_done(0.5, true);
+        incumbent(424_242, 1.0);
+        idle_wait_ns(1_000_000);
+        // Tenant-keyed series are deterministic (the id is unique to
+        // this test); global counters may be racing with other suite
+        // threads, so only the labelled ones are asserted.
+        assert!(!reg().pool_claims.snapshot()
+            .contains_key(&424_242));
+        assert!(!reg().time_to_incumbent.snapshot()
+            .contains_key(&424_242));
+        obs::set_flags(obs::PROFILE);
+    }
+
+    #[test]
+    fn prometheus_render_round_trips_a_seeded_recording() {
+        let _g = obs::test_support::lock_flags();
+        obs::set_flags(obs::METRICS);
+        reset_all();
+        // Seeded recording: a unique tenant id so concurrent suite
+        // threads (the flag word is global) cannot collide.
+        pool_claim(990_007);
+        pool_claim(990_007);
+        pool_claim(990_008);
+        eval_done(0.25, false);
+        eval_done(0.5, true);
+        incumbent(990_007, 1.5);
+        idle_wait_ns(2_000_000_000);
+        set_pool_queue_depth(3);
+        let text = render_prometheus(&[
+            Sample::new("volcanoml_fe_store_bytes", 1024.0),
+            Sample::with_label("volcanoml_fe_store_hits_total",
+                               "tenant", "990007", 7.0),
+        ]);
+        obs::set_flags(obs::PROFILE);
+
+        let find = |needle: &str| -> f64 {
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(needle))
+                .unwrap_or_else(|| panic!("missing series {needle}"));
+            line.rsplit(' ').next().unwrap().parse().unwrap()
+        };
+        assert_eq!(
+            find("volcanoml_pool_claims_total{tenant=\"990007\"}"),
+            2.0
+        );
+        assert_eq!(
+            find("volcanoml_pool_claims_total{tenant=\"990008\"}"),
+            1.0
+        );
+        // Counters shared with concurrent threads: lower bounds.
+        assert!(find("volcanoml_evals_total") >= 2.0);
+        assert!(find("volcanoml_eval_failures_total") >= 1.0);
+        assert!(find("volcanoml_eval_duration_seconds_count") >= 2.0);
+        assert!(find("volcanoml_eval_duration_seconds_sum") >= 0.74);
+        assert!(
+            find("volcanoml_pool_idle_seconds_total") >= 1.99
+        );
+        assert_eq!(
+            find("volcanoml_time_to_incumbent_seconds\
+                  {tenant=\"990007\"}"),
+            1.5
+        );
+        assert_eq!(find("volcanoml_fe_store_bytes"), 1024.0);
+        assert_eq!(
+            find("volcanoml_fe_store_hits_total{tenant=\"990007\"}"),
+            7.0
+        );
+        // Exposition shape: every series has a TYPE line.
+        for series in ["volcanoml_pool_claims_total",
+                       "volcanoml_eval_duration_seconds",
+                       "volcanoml_fe_store_bytes"] {
+            assert!(
+                text.lines().any(|l| {
+                    l.starts_with("# TYPE ")
+                        && l.contains(series)
+                }),
+                "no TYPE line for {series}"
+            );
+        }
+        // Histogram buckets are cumulative and end at +Inf == count.
+        let inf = find(
+            "volcanoml_eval_duration_seconds_bucket{le=\"+Inf\"}");
+        assert_eq!(inf,
+                   find("volcanoml_eval_duration_seconds_count"));
+    }
+}

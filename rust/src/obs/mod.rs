@@ -1,0 +1,197 @@
+//! Trajectory-neutral observability: tracing, metrics, profiling.
+//!
+//! Three faces over one contract:
+//!
+//! - [`trace`] — `obs::span!` / `obs::event!` write timestamped
+//!   records into per-thread lock-free ring buffers, exportable as
+//!   Chrome `trace_event` JSON (`volcanoml run --trace-out`, loads
+//!   in `chrome://tracing` / Perfetto).
+//! - [`metrics`] — a static registry of counters/gauges/histograms
+//!   with a Prometheus-text renderer, surfaced by `volcanoml run
+//!   --metrics` and as periodic `stats` events in `serve` mode.
+//! - [`profile`] — per-phase wall-clock aggregation
+//!   ([`profile::ProfileAgg`]) rolled into the
+//!   [`profile::RunProfile`] attached to every `RunOutcome`.
+//!
+//! **The neutrality contract.** Observability is a pure wall-clock
+//! knob, exactly like worker count, the FE store and the SIMD
+//! kernels: collection reads clocks and bumps atomics but never
+//! feeds a value back into any decision — no RNG draw, no branch on
+//! search state, no allocation whose address is observed. A
+//! fixed-seed search is bit-identical with every face on or off at
+//! every `(workers, super_batch, depth)` point; the suite in
+//! `rust/tests/observability.rs` pins this. Disabled collection
+//! costs ~one branch per site: every entry point loads one process
+//! atomic and returns before touching a clock or a buffer.
+//!
+//! All timestamps flow through the [`clock`] choke point
+//! (`tools/detlint`'s `obs-clock` rule rejects clock reads anywhere
+//! else under `obs/`), so instrumented call sites outside the
+//! wall-clock whitelist contain no `Instant::now` of their own.
+
+pub mod clock;
+pub mod metrics;
+pub mod profile;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Flag bit: span/event collection into the trace rings.
+pub const TRACE: u8 = 1 << 0;
+/// Flag bit: counter/gauge/histogram collection.
+pub const METRICS: u8 = 1 << 1;
+/// Flag bit: per-phase wall-clock aggregation into `RunProfile`s.
+pub const PROFILE: u8 = 1 << 2;
+
+/// Sentinel: the environment has not been probed yet.
+const UNSET: u8 = 1 << 7;
+
+// SYNC: Relaxed — the flag word is a pure collection on/off toggle:
+// by the neutrality contract no observable search output depends on
+// *when* another thread sees a flag flip (either side of the race
+// collects or skips one record, never changes a trajectory), so
+// monotonic per-cell atomicity is all that is needed. The lazy env
+// probe is idempotent: a first-call race stores the same value.
+static FLAGS: AtomicU8 = AtomicU8::new(UNSET);
+
+fn env_on(name: &str) -> bool {
+    std::env::var(name)
+        .is_ok_and(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+}
+
+fn env_off(name: &str) -> bool {
+    std::env::var(name)
+        .is_ok_and(|v| v == "0" || v.eq_ignore_ascii_case("false"))
+}
+
+#[inline]
+fn flags() -> u8 {
+    // SYNC: Relaxed — see the FLAGS note above.
+    let f = FLAGS.load(Ordering::Relaxed);
+    if f & UNSET == 0 {
+        return f;
+    }
+    // First probe: tracing and metrics are opt-in (VOLCANO_TRACE=1 /
+    // VOLCANO_METRICS=1); profiling is on unless VOLCANO_PROFILE=0 —
+    // its cost is two clock reads per *evaluation* phase, invisible
+    // next to a model fit, and it is what fills the phase table every
+    // `run` prints.
+    let mut g = 0;
+    if env_on("VOLCANO_TRACE") {
+        g |= TRACE;
+    }
+    if env_on("VOLCANO_METRICS") {
+        g |= METRICS;
+    }
+    if !env_off("VOLCANO_PROFILE") {
+        g |= PROFILE;
+    }
+    // SYNC: Relaxed — see the FLAGS note above.
+    FLAGS.store(g, Ordering::Relaxed);
+    g
+}
+
+/// Is span/event collection on? One atomic load — the whole cost of
+/// a disabled `span!`/`event!` site.
+#[inline]
+pub fn trace_on() -> bool {
+    flags() & TRACE != 0
+}
+
+/// Is metric collection on?
+#[inline]
+pub fn metrics_on() -> bool {
+    flags() & METRICS != 0
+}
+
+/// Is per-phase profiling on?
+#[inline]
+pub fn profile_on() -> bool {
+    flags() & PROFILE != 0
+}
+
+/// Turn the given flag bits on (in addition to whatever the
+/// environment enabled) — how `--trace-out` / `--metrics` / `serve`
+/// arm collection at startup.
+pub fn enable(bits: u8) {
+    let f = flags();
+    // SYNC: Relaxed — see the FLAGS note above.
+    FLAGS.store(f | (bits & (TRACE | METRICS | PROFILE)),
+                Ordering::Relaxed);
+}
+
+/// Replace the flag word outright — the test hook behind the
+/// on-vs-off bit-identity suites (`rust/tests/observability.rs`).
+pub fn set_flags(bits: u8) {
+    // SYNC: Relaxed — see the FLAGS note above.
+    FLAGS.store(bits & (TRACE | METRICS | PROFILE), Ordering::Relaxed);
+}
+
+/// Open a trace span: `let _g = obs::span!("pool", "run", "tenant" =>
+/// id);` records a Chrome "complete" event covering the guard's
+/// lifetime, with up to two `u64` args. With tracing off the
+/// expansion is one branch returning an inert guard.
+#[macro_export]
+macro_rules! obs_span {
+    ($cat:expr, $name:expr $(, $k:expr => $v:expr)* $(,)?) => {
+        $crate::obs::trace::span($cat, $name, &[$(
+            ($k, $crate::obs::trace::ArgValue::into_arg($v)),
+        )*])
+    };
+}
+
+/// Record an instant trace event: `obs::event!("fe_store", "hit",
+/// "tenant" => id);`. Same cost model as [`obs_span!`].
+#[macro_export]
+macro_rules! obs_event {
+    ($cat:expr, $name:expr $(, $k:expr => $v:expr)* $(,)?) => {
+        $crate::obs::trace::instant($cat, $name, &[$(
+            ($k, $crate::obs::trace::ArgValue::into_arg($v)),
+        )*])
+    };
+}
+
+// `#[macro_export]` hoists the macros to the crate root; re-export
+// them here so call sites read `obs::span!` / `obs::event!`.
+pub use crate::{obs_event as event, obs_span as span};
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use std::sync::{Mutex, MutexGuard};
+
+    /// The obs flag word is process-global and `cargo test` runs
+    /// tests concurrently, so every test that flips flags holds this
+    /// lock for its whole body (and restores the default afterwards).
+    static FLAG_LOCK: Mutex<()> = Mutex::new(());
+
+    pub fn lock_flags() -> MutexGuard<'static, ()> {
+        FLAG_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_bits_toggle_independently() {
+        let _g = test_support::lock_flags();
+        set_flags(0);
+        assert!(!trace_on() && !metrics_on() && !profile_on());
+        enable(TRACE);
+        assert!(trace_on() && !metrics_on());
+        enable(METRICS | PROFILE);
+        assert!(trace_on() && metrics_on() && profile_on());
+        set_flags(PROFILE);
+        assert!(!trace_on() && !metrics_on() && profile_on());
+        // Restore the suite-wide default (env-probed; tests must not
+        // leave a stale override behind).
+        set_flags(if std::env::var("VOLCANO_TRACE")
+            .is_ok_and(|v| v == "1")
+        {
+            TRACE | PROFILE
+        } else {
+            PROFILE
+        });
+    }
+}

@@ -1,0 +1,254 @@
+//! Per-phase wall-clock aggregation — the profiling face.
+//!
+//! An evaluator owns a [`ProfileAgg`]; every phase of every
+//! evaluation runs under a [`PhaseGuard`] that adds its elapsed
+//! nanoseconds into one of a fixed set of per-phase atomics. At the
+//! end of a search the aggregate is snapshotted into a [`RunProfile`]
+//! and attached to the `RunOutcome` — rendered as a phase-totals
+//! table by the CLI and serialised into bench JSON.
+//!
+//! Cost model: profiling (on by default, `VOLCANO_PROFILE=0` to
+//! disable) reads the [`super::clock`] twice per *phase* — a handful
+//! of reads per model evaluation, invisible next to a fit. Disabled,
+//! a guard is one branch and an inert struct. Like the other two
+//! faces, nothing here feeds back into the search: the neutrality
+//! contract in [`super`] applies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// The coarse phases of one evaluation / search, in display order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Round planning: proposing a chunk of configs to evaluate.
+    Plan,
+    /// Feature-engineering fit + apply (including FE-store waits).
+    Fe,
+    /// Model fitting on the engineered matrix.
+    AlgoFit,
+    /// Validation-split prediction + scoring.
+    Predict,
+    /// Committing results: incumbent updates, stats, caches.
+    Commit,
+    /// Speculative next-chunk work overlapped with the current drain.
+    Speculate,
+    /// End-of-run reporting: refit, ensembling, outcome assembly.
+    Finalize,
+}
+
+/// Stable display/JSON names, indexed by `Phase as usize`.
+pub const PHASE_NAMES: [&str; N_PHASES] = [
+    "plan",
+    "fe",
+    "algo_fit",
+    "predict",
+    "commit",
+    "speculate",
+    "finalize",
+];
+
+const N_PHASES: usize = 7;
+
+/// Lock-free per-phase accumulator: total nanoseconds and entry
+/// count per [`Phase`]. Shared by `Arc` between the evaluator and
+/// the pool workers running its closures.
+#[derive(Debug)]
+pub struct ProfileAgg {
+    ns: [AtomicU64; N_PHASES],
+    count: [AtomicU64; N_PHASES],
+}
+
+impl Default for ProfileAgg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProfileAgg {
+    pub fn new() -> Self {
+        ProfileAgg {
+            ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Open a phase: the returned guard adds the elapsed time on
+    /// drop. With profiling off this is one branch and no clock read.
+    #[must_use = "the guard's lifetime is the measured interval"]
+    pub fn start(&self, phase: Phase) -> PhaseGuard<'_> {
+        if !super::profile_on() {
+            return PhaseGuard { agg: None, phase, t0: 0 };
+        }
+        PhaseGuard {
+            agg: Some(self),
+            phase,
+            t0: super::clock::now_ns(),
+        }
+    }
+
+    /// Add an externally measured interval (for call sites that
+    /// already hold an elapsed duration, e.g. pool-side timings).
+    pub fn add_ns(&self, phase: Phase, ns: u64) {
+        if !super::profile_on() {
+            return;
+        }
+        let i = phase as usize;
+        // SYNC: Relaxed — monotone counters only ever read after the
+        // run's pool work has been joined; per-cell atomicity is all
+        // the snapshot needs, and no decision reads them mid-run.
+        self.ns[i].fetch_add(ns, Ordering::Relaxed);
+        self.count[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Roll the totals up into an owned, serialisable [`RunProfile`].
+    pub fn snapshot(&self) -> RunProfile {
+        let mut phases = Vec::new();
+        for i in 0..N_PHASES {
+            // SYNC: Relaxed — see `add_ns`.
+            let ns = self.ns[i].load(Ordering::Relaxed);
+            let count = self.count[i].load(Ordering::Relaxed);
+            if count == 0 {
+                continue;
+            }
+            phases.push(PhaseTotal {
+                name: PHASE_NAMES[i],
+                secs: ns as f64 / 1e9,
+                count,
+            });
+        }
+        RunProfile { phases }
+    }
+}
+
+/// RAII interval for one phase entry; see [`ProfileAgg::start`].
+#[must_use = "the guard's lifetime is the measured interval"]
+pub struct PhaseGuard<'a> {
+    agg: Option<&'a ProfileAgg>,
+    phase: Phase,
+    t0: u64,
+}
+
+impl Drop for PhaseGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(agg) = self.agg {
+            let dt = super::clock::now_ns().saturating_sub(self.t0);
+            let i = self.phase as usize;
+            // SYNC: Relaxed — see `ProfileAgg::add_ns`.
+            agg.ns[i].fetch_add(dt, Ordering::Relaxed);
+            agg.count[i].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Aggregate wall-clock per phase for one finished search run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunProfile {
+    /// Phases that were entered at least once, in display order.
+    pub phases: Vec<PhaseTotal>,
+}
+
+/// One row of the phase table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseTotal {
+    /// Phase name from [`PHASE_NAMES`].
+    pub name: &'static str,
+    /// Total wall-clock spent in the phase, seconds.
+    pub secs: f64,
+    /// Times the phase was entered.
+    pub count: u64,
+}
+
+impl RunProfile {
+    /// True when profiling was disabled (or nothing ran).
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+    }
+
+    /// Machine-readable form for bench JSON / the `serve` wire.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.phases
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("phase", Json::Str(p.name.to_string())),
+                        ("secs", Json::Num(p.secs)),
+                        ("count", Json::Num(p.count as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Fixed-width table for CLI output; empty string when empty.
+    pub fn render_table(&self) -> String {
+        if self.phases.is_empty() {
+            return String::new();
+        }
+        let total: f64 = self.phases.iter().map(|p| p.secs).sum();
+        let mut out = String::new();
+        out.push_str(
+            "phase        total_s      count    share\n",
+        );
+        for p in &self.phases {
+            let share = if total > 0.0 {
+                100.0 * p.secs / total
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:<10} {:>9.3} {:>10} {:>7.1}%\n",
+                p.name, p.secs, p.count, share
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn guards_and_add_ns_accumulate_per_phase() {
+        let _g = obs::test_support::lock_flags();
+        obs::set_flags(obs::PROFILE);
+        let agg = ProfileAgg::new();
+        {
+            let _p = agg.start(Phase::Fe);
+        }
+        agg.add_ns(Phase::Fe, 1_500_000);
+        agg.add_ns(Phase::Predict, 500_000);
+        let snap = agg.snapshot();
+        assert_eq!(snap.phases.len(), 2);
+        let fe = &snap.phases[0];
+        assert_eq!(fe.name, "fe");
+        assert_eq!(fe.count, 2);
+        assert!(fe.secs >= 1.5e-3, "fe secs {}", fe.secs);
+        let pr = &snap.phases[1];
+        assert_eq!((pr.name, pr.count), ("predict", 1));
+        // Table + JSON render every entered phase.
+        let table = snap.render_table();
+        assert!(table.contains("fe") && table.contains("predict"));
+        let json = snap.to_json().to_string();
+        assert!(json.contains("\"phase\":\"fe\""), "{json}");
+        obs::set_flags(obs::PROFILE);
+    }
+
+    #[test]
+    fn disabled_profiling_records_nothing() {
+        let _g = obs::test_support::lock_flags();
+        obs::set_flags(0);
+        let agg = ProfileAgg::new();
+        {
+            let _p = agg.start(Phase::AlgoFit);
+        }
+        agg.add_ns(Phase::AlgoFit, 10);
+        let snap = agg.snapshot();
+        assert!(snap.is_empty());
+        assert_eq!(snap.render_table(), "");
+        obs::set_flags(obs::PROFILE);
+    }
+}

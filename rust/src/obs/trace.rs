@@ -1,0 +1,652 @@
+//! Span/event tracing over per-thread lock-free ring buffers.
+//!
+//! Call sites use the [`obs::span!`](crate::obs::span) /
+//! [`obs::event!`](crate::obs::event) macros; with tracing off both
+//! cost one atomic flag load. With tracing on, a span guard reads
+//! the [`clock`](super::clock) at open and close and pushes one
+//! fixed-size [`TraceEvent`] into the calling thread's ring; an
+//! instant event pushes immediately. Rings are strict SPSC: the
+//! owning thread is the only producer, and every consumer (the
+//! exporter, a dying thread's own drain) is serialised by the
+//! registry mutex — so the hot path never takes a lock and never
+//! blocks.
+//!
+//! **Overflow drops, never blocks or reorders.** A full ring drops
+//! the *newest* event and bumps a counter ([`dropped_events`]); the
+//! events that remain are a FIFO prefix of what the thread pushed,
+//! in push order. That bounds memory per thread
+//! (`VOLCANO_TRACE_RING`, default 8192 events) without ever stalling
+//! a worker on the observer.
+//!
+//! [`take_events`] drains every ring (plus the spill of threads that
+//! exited) and [`chrome_trace_json`] renders the Chrome
+//! `trace_event` JSON that `volcanoml run --trace-out` writes —
+//! loadable in `chrome://tracing` and Perfetto.
+
+use crate::obs::clock;
+use crate::util::json::Json;
+use std::cell::UnsafeCell;
+use std::collections::BTreeMap;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One trace record: a complete span (`dur_ns` covers the guard's
+/// lifetime) or an instant event (`instant`, `dur_ns == 0`). Fixed
+/// size, `Copy`, interned `&'static str` names — nothing here
+/// allocates on the hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Start time, ns since the process obs epoch.
+    pub ts_ns: u64,
+    /// Span duration in ns; 0 for instants.
+    pub dur_ns: u64,
+    /// Trace-local thread id (1-based registration order).
+    pub tid: u64,
+    /// Event name, e.g. `"run"`, `"fit_apply"`.
+    pub name: &'static str,
+    /// Category, e.g. `"pool"`, `"fe_store"`, `"round"`.
+    pub cat: &'static str,
+    /// Up to two argument key/value pairs (`n_args` are valid).
+    pub keys: [&'static str; 2],
+    pub vals: [u64; 2],
+    pub n_args: u8,
+    /// Instant event (`ph: "i"`) instead of a complete span.
+    pub instant: bool,
+}
+
+const EMPTY_KEYS: [&str; 2] = ["", ""];
+
+/// Lossless-enough conversion of span/event argument values to the
+/// `u64` wire slot — implemented for the integer shapes call sites
+/// actually pass, so the macros need no `as` casts.
+pub trait ArgValue {
+    fn into_arg(self) -> u64;
+}
+
+macro_rules! impl_arg_value {
+    ($($t:ty),*) => {$(
+        impl ArgValue for $t {
+            #[inline]
+            fn into_arg(self) -> u64 {
+                self as u64
+            }
+        }
+    )*};
+}
+
+impl_arg_value!(u8, u16, u32, usize, i32, i64);
+
+impl ArgValue for u64 {
+    #[inline]
+    fn into_arg(self) -> u64 {
+        self
+    }
+}
+
+impl ArgValue for bool {
+    #[inline]
+    fn into_arg(self) -> u64 {
+        u64::from(self)
+    }
+}
+
+fn ring_cap() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("VOLCANO_TRACE_RING")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(8192)
+            .clamp(8, 1 << 20)
+            .next_power_of_two()
+    })
+}
+
+/// Events a dying thread may leave behind in the shared spill before
+/// further ones count as dropped — bounds registry memory when many
+/// short-lived job threads trace.
+const SPILL_CAP: usize = 1 << 16;
+
+// ---------------------------------------------------------------------
+// SPSC ring
+// ---------------------------------------------------------------------
+
+/// Single-producer single-consumer ring of [`TraceEvent`]s.
+///
+/// `head` counts pushes, `tail` counts drains (both monotonic; the
+/// slot index is `cursor & mask`). The producer is the owning thread
+/// (via the thread-local handle); consumers are serialised by the
+/// registry mutex.
+struct Ring {
+    slots: Box<[UnsafeCell<MaybeUninit<TraceEvent>>]>,
+    mask: usize,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    dropped: AtomicU64,
+    tid: u64,
+}
+
+// SAFETY: `Ring` hands out interior slot access only under the SPSC
+// protocol documented on `push`/`drain_into`: the single producer
+// writes a slot only while it is free (head - tail < capacity, so
+// the consumer cannot be reading it) and publishes with a Release
+// store of `head`; the single live consumer (serialised externally
+// by the registry mutex) reads a slot only after an Acquire load of
+// `head` covers it, and frees it with a Release store of `tail`
+// which the producer Acquire-loads before reuse. No slot is ever
+// accessed concurrently from two threads.
+unsafe impl Send for Ring {}
+// SAFETY: see the Send rationale above — shared references only
+// permit the protocol-guarded slot accesses.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(cap: usize, tid: u64) -> Ring {
+        let cap = cap.next_power_of_two();
+        Ring {
+            slots: (0..cap)
+                .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+                .collect(),
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            tid,
+        }
+    }
+
+    /// Producer side (owning thread only). Full ring: drop the
+    /// newest event — never block, never overwrite (which would
+    /// reorder the survivors).
+    fn push(&self, ev: TraceEvent) {
+        // SYNC: Relaxed on `head` — only this thread writes it; the
+        // Acquire on `tail` pairs with the consumer's Release in
+        // `drain_into`, guaranteeing the consumer is done with any
+        // slot we are about to reuse.
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) > self.mask {
+            // SYNC: Relaxed — monotonic lost-event count, read only
+            // by reporting paths.
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: the capacity check above proves this slot is free
+        // (the consumer's cursor has passed it and, per the Acquire
+        // on `tail`, its read completed); we are the only producer,
+        // so no other write targets it. Writing a `MaybeUninit` slot
+        // needs no drop of previous contents (`TraceEvent: Copy`).
+        unsafe { (*self.slots[head & self.mask].get()).write(ev) };
+        // Publish: pairs with the consumer's Acquire load of `head`.
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Consumer side — callers must hold the registry mutex (or be
+    /// the owning thread draining its own ring at death while
+    /// holding it), so there is exactly one live consumer.
+    fn drain_into(&self, out: &mut Vec<TraceEvent>) {
+        let head = self.head.load(Ordering::Acquire);
+        // SYNC: Relaxed on `tail` — only the (externally serialised)
+        // consumer writes it; the Acquire on `head` pairs with the
+        // producer's Release publish, making every slot below `head`
+        // fully written before we read it.
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        out.reserve(head.wrapping_sub(tail));
+        while tail != head {
+            // SAFETY: `tail < head` (wrapping), so the producer
+            // published this slot with a Release store of `head`
+            // that our Acquire load observed; the producer will not
+            // write it again until `tail` passes it.
+            let ev = unsafe {
+                (*self.slots[tail & self.mask].get()).assume_init_read()
+            };
+            out.push(ev);
+            tail = tail.wrapping_add(1);
+        }
+        // Free the slots: pairs with the producer's Acquire on
+        // `tail`.
+        self.tail.store(tail, Ordering::Release);
+    }
+}
+
+impl std::fmt::Debug for Ring {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ring")
+            .field("cap", &(self.mask + 1))
+            .field("tid", &self.tid)
+            .finish_non_exhaustive()
+    }
+}
+
+// ---------------------------------------------------------------------
+// registry of per-thread rings
+// ---------------------------------------------------------------------
+
+struct RegistryState {
+    rings: Vec<Arc<Ring>>,
+    /// Events drained out of dead threads' rings, kept until the
+    /// next [`take_events`]; bounded by [`SPILL_CAP`].
+    spill: Vec<TraceEvent>,
+    /// Drops from dead rings plus spill-cap overflow.
+    retired_dropped: u64,
+}
+
+struct Registry {
+    state: Mutex<RegistryState>,
+    next_tid: AtomicU64,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        state: Mutex::new(RegistryState {
+            rings: Vec::new(),
+            spill: Vec::new(),
+            retired_dropped: 0,
+        }),
+        next_tid: AtomicU64::new(1),
+    })
+}
+
+fn lock_registry() -> std::sync::MutexGuard<'static, RegistryState> {
+    registry().state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Thread-local owner of this thread's ring. On thread exit the
+/// remaining events move into the registry spill (up to
+/// [`SPILL_CAP`]) so short-lived job threads still show up in the
+/// export, and the ring itself is retired.
+struct RingHandle(Arc<Ring>);
+
+impl Drop for RingHandle {
+    fn drop(&mut self) {
+        let mut st = lock_registry();
+        // We hold the registry mutex, so we are the one consumer; we
+        // are also the producer, and we are done producing.
+        let mut evs = Vec::new();
+        self.0.drain_into(&mut evs);
+        let room = SPILL_CAP.saturating_sub(st.spill.len());
+        if evs.len() > room {
+            st.retired_dropped += (evs.len() - room) as u64;
+            evs.truncate(room);
+        }
+        st.spill.extend(evs);
+        // SYNC: Relaxed — monotonic counter handoff under the
+        // registry mutex.
+        st.retired_dropped += self.0.dropped.load(Ordering::Relaxed);
+        let ring = &self.0;
+        st.rings.retain(|r| !Arc::ptr_eq(r, ring));
+    }
+}
+
+thread_local! {
+    static LOCAL: RingHandle = {
+        let reg = registry();
+        // SYNC: Relaxed — unique-id allocation; no ordering needed.
+        let tid = reg.next_tid.fetch_add(1, Ordering::Relaxed);
+        let ring = Arc::new(Ring::new(ring_cap(), tid));
+        lock_registry().rings.push(ring.clone());
+        RingHandle(ring)
+    };
+}
+
+#[inline]
+fn push_local(mut ev: TraceEvent) {
+    // `try_with`: during TLS teardown the handle is gone — drop the
+    // event rather than panic.
+    let _ = LOCAL.try_with(|h| {
+        ev.tid = h.0.tid;
+        h.0.push(ev);
+    });
+}
+
+// ---------------------------------------------------------------------
+// span / instant API (behind the obs::span! / obs::event! macros)
+// ---------------------------------------------------------------------
+
+/// RAII guard for an open span; records one complete event covering
+/// its lifetime. Inert (one branch, no clock read) when tracing is
+/// off at open.
+#[derive(Debug)]
+#[must_use = "a span covers the guard's lifetime — bind it to a \
+              variable (`let _g = ...`), not `_`"]
+pub struct SpanGuard {
+    start_ns: u64,
+    name: &'static str,
+    cat: &'static str,
+    keys: [&'static str; 2],
+    vals: [u64; 2],
+    n_args: u8,
+    active: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = clock::now_ns();
+        push_local(TraceEvent {
+            ts_ns: self.start_ns,
+            dur_ns: end.saturating_sub(self.start_ns),
+            tid: 0,
+            name: self.name,
+            cat: self.cat,
+            keys: self.keys,
+            vals: self.vals,
+            n_args: self.n_args,
+            instant: false,
+        });
+    }
+}
+
+#[inline]
+fn pack(args: &[(&'static str, u64)]) -> ([&'static str; 2], [u64; 2], u8) {
+    let mut keys = EMPTY_KEYS;
+    let mut vals = [0u64; 2];
+    let n = args.len().min(2);
+    for (i, (k, v)) in args.iter().take(2).enumerate() {
+        keys[i] = k;
+        vals[i] = *v;
+    }
+    (keys, vals, n as u8)
+}
+
+/// Open a span (prefer the [`obs::span!`](crate::obs::span) macro).
+/// Only the first two args are kept.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str,
+            args: &[(&'static str, u64)]) -> SpanGuard {
+    if !super::trace_on() {
+        return SpanGuard {
+            start_ns: 0,
+            name,
+            cat,
+            keys: EMPTY_KEYS,
+            vals: [0; 2],
+            n_args: 0,
+            active: false,
+        };
+    }
+    let (keys, vals, n_args) = pack(args);
+    SpanGuard {
+        start_ns: clock::now_ns(),
+        name,
+        cat,
+        keys,
+        vals,
+        n_args,
+        active: true,
+    }
+}
+
+/// Record an instant event (prefer the
+/// [`obs::event!`](crate::obs::event) macro).
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str,
+               args: &[(&'static str, u64)]) {
+    if !super::trace_on() {
+        return;
+    }
+    let (keys, vals, n_args) = pack(args);
+    push_local(TraceEvent {
+        ts_ns: clock::now_ns(),
+        dur_ns: 0,
+        tid: 0,
+        name,
+        cat,
+        keys,
+        vals,
+        n_args,
+        instant: true,
+    });
+}
+
+// ---------------------------------------------------------------------
+// collection + export
+// ---------------------------------------------------------------------
+
+/// Drain every thread's ring (and the spill of exited threads) and
+/// return the events sorted by start time (stable, thread id
+/// tie-break) — per-thread FIFO order is preserved.
+pub fn take_events() -> Vec<TraceEvent> {
+    let mut out;
+    {
+        let mut st = lock_registry();
+        out = std::mem::take(&mut st.spill);
+        for r in &st.rings {
+            r.drain_into(&mut out);
+        }
+    }
+    // Spans sort before instants at an equal timestamp (a coarse
+    // clock can give a span and an event inside it the same ts).
+    out.sort_by_key(|e| (e.ts_ns, e.instant, e.tid));
+    out
+}
+
+/// Total events lost to ring overflow (or the dead-thread spill cap)
+/// since the last [`clear`].
+pub fn dropped_events() -> u64 {
+    let st = lock_registry();
+    let live: u64 = st
+        .rings
+        .iter()
+        // SYNC: Relaxed — monotonic lost-event counts for reporting.
+        .map(|r| r.dropped.load(Ordering::Relaxed))
+        .sum();
+    live + st.retired_dropped
+}
+
+/// Discard all buffered events and zero the drop counters — test and
+/// `run --trace-out` session-boundary hook.
+pub fn clear() {
+    let mut st = lock_registry();
+    st.spill.clear();
+    st.retired_dropped = 0;
+    let mut scratch = Vec::new();
+    for r in &st.rings {
+        scratch.clear();
+        r.drain_into(&mut scratch);
+        // SYNC: Relaxed — test-hook reset of a reporting counter.
+        r.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Render events as Chrome `trace_event` JSON (the "JSON Array
+/// Format" wrapped in an object), loadable in `chrome://tracing` and
+/// Perfetto: complete (`ph:"X"`) events with microsecond `ts`/`dur`,
+/// instants as `ph:"i"` with thread scope.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let rendered = events
+        .iter()
+        .map(|e| {
+            let mut pairs = vec![
+                ("ph", Json::Str(if e.instant { "i" } else { "X" }
+                    .to_string())),
+                ("name", Json::Str(e.name.to_string())),
+                ("cat", Json::Str(e.cat.to_string())),
+                ("ts", Json::Num(e.ts_ns as f64 / 1000.0)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.tid as f64)),
+            ];
+            if e.instant {
+                pairs.push(("s", Json::Str("t".to_string())));
+            } else {
+                pairs.push(("dur", Json::Num(e.dur_ns as f64 / 1000.0)));
+            }
+            if e.n_args > 0 {
+                let mut args = BTreeMap::new();
+                for (k, v) in e
+                    .keys
+                    .iter()
+                    .zip(e.vals)
+                    .take(e.n_args as usize)
+                {
+                    args.insert(k.to_string(), Json::Num(v as f64));
+                }
+                pairs.push(("args", Json::Obj(args)));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(rendered)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Drain all buffered events and write them as Chrome trace JSON;
+/// returns how many events were written.
+pub fn write_chrome_trace(path: &std::path::Path)
+    -> std::io::Result<usize> {
+    let evs = take_events();
+    std::fs::write(path, chrome_trace_json(&evs).to_string())?;
+    Ok(evs.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    fn ev(i: u64) -> TraceEvent {
+        TraceEvent {
+            ts_ns: i,
+            dur_ns: 0,
+            tid: 0,
+            name: "t",
+            cat: "test",
+            keys: ["i", ""],
+            vals: [i, 0],
+            n_args: 1,
+            instant: true,
+        }
+    }
+
+    #[test]
+    fn overflow_drops_newest_without_blocking_or_reordering() {
+        let r = Ring::new(8, 7);
+        for i in 0..13 {
+            r.push(ev(i)); // never blocks — plain calls on one thread
+        }
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 5);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        // The survivors are exactly the FIFO prefix, in push order.
+        assert_eq!(out.len(), 8);
+        for (i, e) in out.iter().enumerate() {
+            assert_eq!(e.vals[0], i as u64, "reordered at {i}");
+        }
+        // Freed capacity accepts new pushes, order still FIFO.
+        r.push(ev(100));
+        r.push(ev(101));
+        out.clear();
+        r.drain_into(&mut out);
+        assert_eq!(out.iter().map(|e| e.vals[0]).collect::<Vec<_>>(),
+                   vec![100, 101]);
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn ring_wraps_across_many_drain_cycles() {
+        let r = Ring::new(8, 1);
+        let mut out = Vec::new();
+        for round in 0..10u64 {
+            for i in 0..5 {
+                r.push(ev(round * 5 + i));
+            }
+            out.clear();
+            r.drain_into(&mut out);
+            assert_eq!(
+                out.iter().map(|e| e.vals[0]).collect::<Vec<_>>(),
+                (round * 5..round * 5 + 5).collect::<Vec<_>>()
+            );
+        }
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn disabled_sites_record_nothing() {
+        let _g = obs::test_support::lock_flags();
+        obs::set_flags(0);
+        clear();
+        {
+            let _s = obs::span!("noop_cat", "noop", "k" => 1u64);
+            obs::event!("noop_cat", "noop_event");
+        }
+        // Filter to this test's own category: other suite threads
+        // may race a late push from an earlier enabled window.
+        assert!(take_events().iter().all(|e| e.cat != "noop_cat"));
+        obs::set_flags(obs::PROFILE);
+    }
+
+    #[test]
+    fn spans_and_events_round_trip_through_chrome_json() {
+        let _g = obs::test_support::lock_flags();
+        obs::set_flags(obs::TRACE);
+        clear();
+        {
+            let _s = obs::span!("rt_test", "run", "tenant" => 3u64,
+                                "items" => 2u64);
+            obs::event!("rt_test", "hit", "tenant" => 3u64);
+        }
+        // The flag word is global, so concurrent suite threads may
+        // have traced too — keep only this test's category.
+        let evs: Vec<TraceEvent> = take_events()
+            .into_iter()
+            .filter(|e| e.cat == "rt_test")
+            .collect();
+        obs::set_flags(obs::PROFILE);
+        assert_eq!(evs.len(), 2);
+        // The instant fires inside the span, so it sorts after the
+        // span's start.
+        assert_eq!(evs[0].name, "run");
+        assert_eq!(evs[0].cat, "rt_test");
+        assert!(!evs[0].instant);
+        assert_eq!(evs[0].n_args, 2);
+        assert_eq!((evs[0].keys[0], evs[0].vals[0]), ("tenant", 3));
+        assert_eq!(evs[1].name, "hit");
+        assert!(evs[1].instant);
+
+        let json = chrome_trace_json(&evs).to_string();
+        let parsed = Json::parse(&json).expect("valid JSON");
+        let arr = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let span_ev = &arr[0];
+        assert_eq!(span_ev.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span_ev.get("name").unwrap().as_str(), Some("run"));
+        assert_eq!(span_ev.get("cat").unwrap().as_str(),
+                   Some("rt_test"));
+        assert!(span_ev.get("dur").unwrap().as_f64().is_some());
+        assert_eq!(
+            span_ev.get("args").unwrap().get("tenant").unwrap().as_f64(),
+            Some(3.0)
+        );
+        let inst = &arr[1];
+        assert_eq!(inst.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(inst.get("s").unwrap().as_str(), Some("t"));
+        // Timestamps are µs with ns resolution preserved and ordered.
+        let t0 = span_ev.get("ts").unwrap().as_f64().unwrap();
+        let t1 = inst.get("ts").unwrap().as_f64().unwrap();
+        assert!(t1 >= t0);
+    }
+
+    #[test]
+    fn take_events_preserves_per_thread_fifo_order() {
+        let _g = obs::test_support::lock_flags();
+        obs::set_flags(obs::TRACE);
+        clear();
+        for i in 0..20u64 {
+            obs::event!("fifo_test", "fifo_seq", "i" => i);
+        }
+        let evs = take_events();
+        obs::set_flags(obs::PROFILE);
+        let seq: Vec<u64> = evs
+            .iter()
+            .filter(|e| e.name == "fifo_seq")
+            .map(|e| e.vals[0])
+            .collect();
+        assert_eq!(seq, (0..20).collect::<Vec<_>>());
+    }
+}

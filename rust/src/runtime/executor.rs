@@ -211,7 +211,7 @@ struct PoolInner {
     next_tenant: AtomicU64,
 }
 
-type Picked = (Arc<dyn PoolTask>, Arc<Latch>);
+type Picked = (Arc<dyn PoolTask>, Arc<Latch>, TenantId);
 
 /// Virtual-time advance of one claim for a tenant of this weight.
 /// Never zero — a zero stride would freeze the tenant's pass at the
@@ -276,7 +276,7 @@ fn pick_task(st: &mut SchedState) -> Option<Picked> {
         st.vnow = vnow.max(t.pass);
         t.pass = t.pass.saturating_add(stride(t.weight));
         let front = t.queue.front().expect("picked tenant has work");
-        return Some((front.task.clone(), front.latch.clone()));
+        return Some((front.task.clone(), front.latch.clone(), id));
     }
 }
 
@@ -319,7 +319,7 @@ fn remove_tenant_inner(st: &mut SchedState, tenant: TenantId) -> bool {
 fn worker_loop(inner: &PoolInner) {
     POOL_WORKER.with(|c| c.set(true));
     loop {
-        let (task, latch) = {
+        let (task, latch, tenant) = {
             let mut st = lock(&inner.sched);
             loop {
                 if let Some(p) = pick_task(&mut st) {
@@ -330,13 +330,34 @@ fn worker_loop(inner: &PoolInner) {
                 if st.shutdown {
                     return;
                 }
+                // Idle-wait accounting is observation only: the clock
+                // reads happen around the wait either way the race on
+                // the metrics flag goes, and the recorded duration
+                // feeds no scheduling decision.
+                let t0 = if crate::obs::metrics_on() {
+                    crate::obs::clock::now_ns()
+                } else {
+                    0
+                };
                 st = inner
                     .work_cv
                     .wait(st)
                     .unwrap_or_else(|p| p.into_inner());
+                if t0 != 0 {
+                    crate::obs::metrics::idle_wait_ns(
+                        crate::obs::clock::now_ns()
+                            .saturating_sub(t0),
+                    );
+                }
             }
         };
-        let step = task.run_one();
+        crate::obs::metrics::pool_claim(tenant);
+        crate::obs::event!("pool", "claim", "tenant" => tenant);
+        let step = {
+            let _span =
+                crate::obs::span!("pool", "run", "tenant" => tenant);
+            task.run_one()
+        };
         // drop the batch state *before* posting: once a join has seen
         // `active` reach zero, no worker clone of the 'env state
         // survives, so not even Arc drop glue can run on a worker
@@ -429,6 +450,23 @@ impl WorkerPool {
     /// search must drain before its tenant can be reclaimed.
     pub fn remove_tenant(&self, tenant: TenantId) -> bool {
         remove_tenant_inner(&mut lock(&self.inner.sched), tenant)
+    }
+
+    /// Unretired batches currently queued across all tenants — the
+    /// sampling source for the `volcanoml_pool_queue_depth` gauge
+    /// (`serve` stats / `run --metrics`). Observation only: takes the
+    /// scheduler lock like any submit, never mutates.
+    pub fn queue_depth(&self) -> usize {
+        lock(&self.inner.sched)
+            .tenants
+            .values()
+            .map(|t| {
+                t.queue
+                    .iter()
+                    .filter(|b| !b.latch.is_retired())
+                    .count()
+            })
+            .sum()
     }
 
     /// Apply `f` to every item on the pool (as tenant 0), blocking
@@ -534,6 +572,8 @@ impl WorkerPool {
             drop(st);
             self.inner.work_cv.notify_all();
             queued = true;
+            crate::obs::event!("pool", "submit", "tenant" => tenant,
+                               "items" => items.len());
         }
         PoolBatch {
             state,
@@ -753,6 +793,8 @@ impl<'env, T, R> PoolBatch<'env, T, R> {
     /// monotone, so everything before the first unclaimed item was
     /// claimed (and, once the join completes, finished).
     pub fn drain_partial(mut self) -> Vec<Option<R>> {
+        let _span = crate::obs::span!("pool", "drain",
+                                      "tenant" => self.tenant);
         self.join();
         if let Some(p) = lock(&self.state.panic).take() {
             resume_unwind(p);
@@ -1222,7 +1264,10 @@ pub mod model {
         /// on the latch under this one scheduler-lock hold).
         pub fn pick(&self) -> Option<PickedModel> {
             pick_task(&mut lock(&self.st))
-                .map(|(task, latch)| PickedModel { task, latch })
+                .map(|(task, latch, _tenant)| PickedModel {
+                    task,
+                    latch,
+                })
         }
 
         /// The handle-side unlink — the tail of [`PoolBatch::join`]:

@@ -507,6 +507,8 @@ fn run_job(inner: &Arc<SvcInner>, job: PendingJob) {
     // weight-proportional speed and dies with the job
     let executor = Executor::shared(&inner.pool, spec.weight.max(1));
     let tenant = executor.tenant();
+    let _span = crate::obs::span!("service", "job",
+                                  "job" => id, "tenant" => tenant);
     let sink_tx = Mutex::new(tx.clone());
     let system = VolcanoML::new(cfg)
         .with_shared(SharedRuntime {

@@ -15,6 +15,30 @@
 //! large-data run against the baseline value ([`RSS_WARN`] /
 //! [`RSS_FAIL`]), since memory high-water marks do not scale with CPU
 //! speed.
+//!
+//! ## Baseline lifecycle
+//!
+//! The committed `BENCH_baseline.json` starts life as a *seeded
+//! estimate* (`seeded_estimate: true`): numbers from a cost model,
+//! not a machine. While seeded, failures downgrade to warnings —
+//! failing hard against estimates would be noise. Every CI bench run
+//! emits a measured `BENCH_baseline.next.json` (`--emit-baseline`)
+//! built from the fresh summaries; promoting it over the seed arms
+//! the blocking gate with measured numbers:
+//!
+//! ```text
+//! cargo run -p benchdiff -- --promote BENCH_baseline.next.json
+//! ```
+//!
+//! `--promote` refuses a still-seeded or empty source
+//! ([`validate_measured_baseline`]) so an estimate can never be
+//! promoted by accident, and the seed is never edited by hand —
+//! measured numbers only enter the committed baseline through this
+//! path. Until a maintainer commits the promoted file, CI self-arms
+//! within a run: it re-measures `micro_hotpaths` and runs a blocking
+//! diff against the same run's `BENCH_baseline.next.json`, so a
+//! regression introduced *by the current change* still blocks even
+//! while the committed baseline is an estimate.
 
 use volcanoml::util::json::Json;
 
@@ -221,6 +245,32 @@ pub fn make_baseline(micro: Option<&Json>, table10: Option<&Json>)
     Json::obj(pairs)
 }
 
+/// Gate on `--promote`: the source must be a *measured* baseline —
+/// explicitly stamped `seeded_estimate: false` and carrying at least
+/// [`MIN_COMMON_OPS`] micro-hotpath rows — so a seeded estimate or a
+/// truncated artifact can never overwrite the committed baseline.
+pub fn validate_measured_baseline(b: &Json) -> Result<(), String> {
+    match b.get("seeded_estimate").and_then(Json::as_bool) {
+        Some(false) => {}
+        Some(true) => return Err(
+            "source is a seeded estimate (seeded_estimate=true); \
+             only measured baselines may be promoted".into()),
+        None => return Err(
+            "source lacks the seeded_estimate stamp; expected a \
+             baseline emitted by --emit-baseline".into()),
+    }
+    let rows = b
+        .get("micro_hotpaths")
+        .map(|m| op_medians(m).len())
+        .unwrap_or(0);
+    if rows < MIN_COMMON_OPS {
+        return Err(format!(
+            "source has {rows} micro_hotpaths operation(s); a \
+             measured baseline needs at least {MIN_COMMON_OPS}"));
+    }
+    Ok(())
+}
+
 fn diff_micro(rep: &mut DiffReport, base: &[(String, f64)],
               cur: &[(String, f64)]) {
     let mut ratios: Vec<(String, f64)> = Vec::new();
@@ -417,6 +467,28 @@ mod tests {
                    Some(false));
         let rep = diff(&b, Some(&micro), Some(&t10));
         assert!(!rep.failed() && !rep.warned(), "{}", rep.render());
+    }
+
+    #[test]
+    fn promotion_accepts_only_measured_baselines() {
+        // the --emit-baseline product passes
+        let good = make_baseline(Some(&summary(&OPS)), None);
+        assert!(validate_measured_baseline(&good).is_ok());
+        // a seeded estimate is refused
+        let mut seeded = good.clone();
+        if let Json::Obj(m) = &mut seeded {
+            m.insert("seeded_estimate".into(), Json::Bool(true));
+        }
+        assert!(validate_measured_baseline(&seeded)
+            .unwrap_err().contains("seeded"));
+        // an unstamped file is refused (not an emit-baseline product)
+        let unstamped = baseline(&OPS, None);
+        assert!(validate_measured_baseline(&unstamped)
+            .unwrap_err().contains("stamp"));
+        // a truncated measurement is refused
+        let thin = make_baseline(Some(&summary(&OPS[..1])), None);
+        assert!(validate_measured_baseline(&thin)
+            .unwrap_err().contains("operation"));
     }
 
     #[test]

@@ -9,12 +9,20 @@
 //!   --emit-baseline PATH   also write a measured baseline built from
 //!                     the current summaries (CI uploads this so a
 //!                     maintainer can replace a seeded estimate)
+//!   --promote PATH    copy a *measured* baseline (the
+//!                     --emit-baseline product, e.g.
+//!                     BENCH_baseline.next.json) over the committed
+//!                     baseline at --baseline, then exit. Refuses
+//!                     seeded estimates and truncated files; this is
+//!                     the only sanctioned way measured numbers enter
+//!                     BENCH_baseline.json (see the lib docs,
+//!                     "Baseline lifecycle").
 //!
 //! Exit codes: 0 clean or warnings only (warnings are non-blocking),
 //! 1 blocking regression (> 2.0x normalized, or RSS > 3x), 2 usage /
-//! missing baseline / parse error. CI runs this in the
-//! bench-artifacts job right after the bench targets and uploads the
-//! report next to the `BENCH_*.json` artifacts.
+//! missing baseline / parse error / refused promotion. CI runs this
+//! in the bench-artifacts job right after the bench targets and
+//! uploads the report next to the `BENCH_*.json` artifacts.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -35,6 +43,7 @@ struct Cli {
     table10: PathBuf,
     report: PathBuf,
     emit_baseline: Option<PathBuf>,
+    promote: Option<PathBuf>,
 }
 
 fn parse_args() -> Result<Cli, String> {
@@ -45,6 +54,7 @@ fn parse_args() -> Result<Cli, String> {
         table10: root.join("BENCH_table10.json"),
         report: root.join("bench_diff_report.txt"),
         emit_baseline: None,
+        promote: None,
     };
     let mut args = std::env::args().skip(1);
     while let Some(flag) = args.next() {
@@ -56,6 +66,7 @@ fn parse_args() -> Result<Cli, String> {
             "--table10" => cli.table10 = v,
             "--report" => cli.report = v,
             "--emit-baseline" => cli.emit_baseline = Some(v),
+            "--promote" => cli.promote = Some(v),
             other => return Err(format!("unknown flag: {other}")),
         }
     }
@@ -81,6 +92,37 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
+    // Promotion mode: validate and install the measured baseline,
+    // then exit — no diff runs against the file being replaced.
+    if let Some(src) = &cli.promote {
+        let measured = match Json::parse_file(src) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("benchdiff: cannot read {}: {e}",
+                          src.display());
+                return ExitCode::from(2);
+            }
+        };
+        if let Err(e) = benchdiff::validate_measured_baseline(
+            &measured)
+        {
+            eprintln!("benchdiff: refusing to promote {}: {e}",
+                      src.display());
+            return ExitCode::from(2);
+        }
+        if let Err(e) = std::fs::write(&cli.baseline,
+                                       measured.to_string()) {
+            eprintln!("benchdiff: cannot write {}: {e}",
+                      cli.baseline.display());
+            return ExitCode::from(2);
+        }
+        println!("[promoted {} -> {}]", src.display(),
+                 cli.baseline.display());
+        println!("the blocking gate now runs against measured \
+                  numbers; commit the updated baseline");
+        return ExitCode::SUCCESS;
+    }
+
     let baseline = match Json::parse_file(&cli.baseline) {
         Ok(j) => j,
         Err(e) => {

@@ -28,6 +28,14 @@
 //!   kernel, or justify with `// DETLINT: allow(kernel-scalar):
 //!   <why this loop cannot use a kernel>`. Element-wise indexed
 //!   updates (`w[j] += …`) are not reductions and are exempt.
+//! - **obs-clock** — raw clock reads (`Instant::now` / `SystemTime`)
+//!   in the observability modules (`obs/`) outside the one sanctioned
+//!   choke point, `obs/clock.rs`. Every obs timestamp flows through
+//!   `obs::clock::now_ns()` so the neutrality audit has a single
+//!   site to inspect; a scattered clock read is either redundant or
+//!   a new epoch that breaks trace merging. Justify exceptions with
+//!   `// DETLINT: allow(obs-clock): <why this read cannot use
+//!   obs::clock>`.
 //!
 //! Suppression markers are *paragraph-scoped*: a marker counts if it
 //! appears in the comments of the flagged line or of any contiguous
@@ -56,9 +64,18 @@ pub const HASH_SCOPED_DIRS: [&str; 5] =
     ["blocks/", "coordinator/", "opt/", "space/", "fe/"];
 
 /// Files (relative to the source root) allowed to read the wall
-/// clock: the budget/deadline owner and the reporting binaries.
-pub const WALL_CLOCK_WHITELIST: [&str; 3] =
-    ["bench.rs", "main.rs", "coordinator/evaluator.rs"];
+/// clock: the budget/deadline owner, the reporting binaries, and the
+/// observability layer's single clock choke point.
+pub const WALL_CLOCK_WHITELIST: [&str; 4] =
+    ["bench.rs", "main.rs", "coordinator/evaluator.rs",
+     "obs/clock.rs"];
+
+/// Directory (relative to the source root) where raw clock reads are
+/// rejected in favour of the `obs::clock` choke point.
+pub const OBS_CLOCK_DIR: &str = "obs/";
+
+/// The one file inside [`OBS_CLOCK_DIR`] that may read the raw clock.
+pub const OBS_CLOCK_CHOKE_POINT: &str = "obs/clock.rs";
 
 /// Files (relative to the source root) where hand-rolled scalar float
 /// reductions are rejected: their reductions define trajectory bits
@@ -76,6 +93,7 @@ pub enum Rule {
     UnsafeNoSafety,
     RelaxedNoSync,
     KernelScalar,
+    ObsClock,
 }
 
 impl Rule {
@@ -86,6 +104,7 @@ impl Rule {
             Rule::UnsafeNoSafety => "unsafe-no-safety",
             Rule::RelaxedNoSync => "relaxed-no-sync",
             Rule::KernelScalar => "kernel-scalar",
+            Rule::ObsClock => "obs-clock",
         }
     }
 }
@@ -470,6 +489,8 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
         HASH_SCOPED_DIRS.iter().any(|d| rel.starts_with(d));
     let clock_ok = WALL_CLOCK_WHITELIST.contains(&rel);
     let kernel_scoped = KERNEL_SCOPED_FILES.contains(&rel);
+    let obs_scoped = rel.starts_with(OBS_CLOCK_DIR)
+        && rel != OBS_CLOCK_CHOKE_POINT;
     let mut out = Vec::new();
     let mut push = |line: usize, rule: Rule, msg: String| {
         out.push(Violation { file: rel.to_string(), line, rule, msg });
@@ -494,9 +515,24 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
                   allow(hash-iter): <why order never leaks>`"
                      .to_string());
         }
-        if !clock_ok
-            && (code.contains("Instant::now")
-                || contains_word(code, "SystemTime"))
+        let clock_read = code.contains("Instant::now")
+            || contains_word(code, "SystemTime");
+        if obs_scoped
+            && clock_read
+            && !paragraph_has_marker(
+                &lines, i, "DETLINT: allow(obs-clock)")
+        {
+            push(n, Rule::ObsClock,
+                 "raw clock read in obs/ outside obs/clock.rs: \
+                  every observability timestamp flows through \
+                  obs::clock::now_ns() so the neutrality audit has \
+                  one site to inspect — route through obs::clock, \
+                  or mark the paragraph `// DETLINT: \
+                  allow(obs-clock): <why obs::clock cannot serve \
+                  this read>`"
+                     .to_string());
+        } else if !clock_ok
+            && clock_read
             && !paragraph_has_marker(
                 &lines, i, "DETLINT: allow(wall-clock)")
         {
@@ -658,6 +694,40 @@ mod tests {
             "// DETLINT: allow(wall-clock): telemetry only\n\
              let t = std::time::Instant::now();\n";
         assert!(rules("runtime/mod.rs", marked).is_empty());
+    }
+
+    #[test]
+    fn obs_clock_routes_through_the_choke_point() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        // raw reads in obs/ fire obs-clock (not wall-clock): the
+        // layer has its own choke point
+        assert_eq!(rules("obs/trace.rs", src), vec![Rule::ObsClock]);
+        assert_eq!(rules("obs/profile.rs", src),
+                   vec![Rule::ObsClock]);
+        assert_eq!(
+            rules("obs/metrics.rs",
+                  "let t = SystemTime::now();\n"),
+            vec![Rule::ObsClock]);
+        // the choke point itself is the sanctioned reader
+        assert!(rules("obs/clock.rs", src).is_empty());
+        // the wall-clock marker does not cover obs-clock: the rules
+        // have distinct markers so a telemetry waiver cannot bless a
+        // second epoch
+        let wrong_marker =
+            "// DETLINT: allow(wall-clock): telemetry only\n\
+             let t = Instant::now();\n";
+        assert_eq!(rules("obs/trace.rs", wrong_marker),
+                   vec![Rule::ObsClock]);
+        let ok = "// DETLINT: allow(obs-clock): calibration read,\n\
+                  // compared against obs::clock in a test helper\n\
+                  let t = Instant::now();\n";
+        assert!(rules("obs/trace.rs", ok).is_empty());
+        // calls through the choke point are what the rule demands —
+        // they must not match
+        assert!(rules(
+            "obs/trace.rs",
+            "let ts = crate::obs::clock::now_ns();\n")
+            .is_empty());
     }
 
     #[test]
